@@ -1,0 +1,57 @@
+//! Quickstart: load the tiny scenario's fused engine and score one
+//! SUMI request end to end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::{Context, Result};
+use flame::manifest::Manifest;
+use flame::runtime::{EngineKey, Runtime};
+
+fn main() -> Result<()> {
+    // 1. Artifacts: HLO text + weights, produced once by `make artifacts`.
+    let manifest = Manifest::load("artifacts")
+        .context("artifacts/ missing — run `make artifacts` first")?;
+
+    // 2. Runtime: one PJRT CPU client per process.
+    let runtime = Runtime::new()?;
+    println!("platform: {}", runtime.platform());
+
+    // 3. Engine: compile tiny/fused at the native candidate profile.
+    let cfg = manifest.scenario("tiny")?.config.clone();
+    let key = EngineKey::new("tiny", "fused", cfg.native_m);
+    let engine = runtime.load_engine(&manifest, &key)?;
+    println!(
+        "engine {}: L={} D={} M={} ({:.2e} FLOPs/request)",
+        key.label(),
+        cfg.seq_len,
+        cfg.d_model,
+        cfg.native_m,
+        engine.flops as f64
+    );
+
+    // 4. One request: pre-embedded history [L, D] + candidates [M, D].
+    //    (In the full stack the PDA assembles these from item ids; see
+    //    examples/serve_e2e.rs.)
+    let hist: Vec<f32> = (0..engine.hist_len())
+        .map(|i| ((i % 17) as f32 / 17.0) - 0.5)
+        .collect();
+    let cands: Vec<f32> = (0..engine.cands_len())
+        .map(|i| ((i % 13) as f32 / 13.0) - 0.5)
+        .collect();
+
+    let scores = engine.run(&hist, &cands)?;
+
+    // 5. Scores: [M, n_tasks] task probabilities per candidate.
+    println!("\nper-candidate task probabilities:");
+    for (i, row) in scores.chunks(cfg.n_tasks).enumerate() {
+        let fmt: Vec<String> = row.iter().map(|s| format!("{s:.4}")).collect();
+        println!("  candidate {i}: [{}]", fmt.join(", "));
+    }
+    println!(
+        "\nmean compute latency: {:.3} ms",
+        engine.stats.mean_compute_ms()
+    );
+    Ok(())
+}

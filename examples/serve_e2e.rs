@@ -1,0 +1,113 @@
+//! End-to-end serving driver — the repo's headline validation run
+//! (recorded in EXPERIMENTS.md §End-to-end).
+//!
+//! Builds the whole FLAME stack (simulated remote feature store → PDA
+//! cached query engine → embedding/assembly → DSO explicit-shape
+//! orchestrator → PJRT engines) on a real lowered model, drives mixed
+//! candidate-count traffic closed-loop (one request in flight per
+//! worker), and reports the paper's metric set: throughput in user-item
+//! pairs/s, overall/compute latency mean/p50/p99, feature-stage latency,
+//! network utilization, cache hit rate, and DSO padding waste.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e
+//! cargo run --release --example serve_e2e -- --scenario bench --seconds 20
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use flame::config::{CacheMode, StackConfig, WorkloadConfig};
+use flame::manifest::Manifest;
+use flame::runtime::Runtime;
+use flame::server::pipeline::StackBuilder;
+use flame::workload::Generator;
+
+fn main() -> Result<()> {
+    // light argv parsing (example-local)
+    let argv: Vec<String> = std::env::args().collect();
+    let getf = |name: &str, default: &str| -> String {
+        argv.iter()
+            .position(|a| a == name)
+            .and_then(|i| argv.get(i + 1).cloned())
+            .unwrap_or_else(|| default.to_string())
+    };
+    let scenario = getf("--scenario", "bench");
+    let variant = getf("--variant", "fused");
+    let seconds: f64 = getf("--seconds", "15").parse()?;
+    let workers: usize = getf("--workers", "2").parse()?;
+
+    let manifest = Manifest::load("artifacts").context("run `make artifacts` first")?;
+    let runtime = Runtime::new()?;
+
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Async;
+    cfg.server.pipeline_workers = workers;
+    cfg.dso.executors_per_profile = 1;
+
+    eprintln!("[serve_e2e] compiling {scenario}/{variant} engines (all profiles) ...");
+    let stack = Arc::new(
+        StackBuilder::new(&scenario, &variant, cfg.clone()).build(&runtime, &manifest)?,
+    );
+    let profiles = stack.orchestrator.profiles().to_vec();
+    eprintln!("[serve_e2e] profiles {profiles:?} ready");
+
+    // Mixed traffic: uniform over this scenario's profiles (the Table 5
+    // shape), Zipf-hot items (the Table 3 shape).
+    let wl = WorkloadConfig {
+        catalog_size: 200_000,
+        zipf_theta: 1.0,
+        n_users: 20_000,
+        candidate_mix: WorkloadConfig::uniform_mix(&profiles),
+        arrival_rate: None,
+        seed: 2026,
+    };
+    let mut gen = Generator::new(&wl, stack.model_cfg.seq_len);
+    let requests = gen.batch(50_000);
+
+    // Warmup: populate caches + engine first-run costs.
+    eprintln!("[serve_e2e] warmup ...");
+    stack.drive_closed_loop(&requests[..64], workers, Duration::from_secs(60));
+    stack.query.drain_refreshes();
+
+    // Measured run.
+    eprintln!("[serve_e2e] measuring for {seconds:.0}s ...");
+    let before_pairs = stack.metrics.pairs();
+    let before_bytes = stack.link.bytes_total();
+    stack.metrics.overall.reset();
+    stack.metrics.compute.reset();
+    stack.metrics.feature.reset();
+    let t0 = std::time::Instant::now();
+    let report =
+        stack.drive_closed_loop(&requests[64..], workers, Duration::from_secs_f64(seconds));
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let pairs = stack.metrics.pairs() - before_pairs;
+    let mb = (stack.link.bytes_total() - before_bytes) as f64 / 1e6;
+    let snap = stack.metrics.snapshot_over(elapsed);
+
+    println!("\n=== serve_e2e report ({scenario}/{variant}, {workers} workers, closed loop) ===");
+    println!("requests served : {} ({} failed)", report.completed, report.rejected);
+    println!("throughput      : {:.1} k user-item pairs/s ({} pairs / {elapsed:.1}s)", pairs as f64 / elapsed / 1e3, pairs);
+    println!("overall latency : mean {:.2} ms   p50 {:.2} ms   p99 {:.2} ms", snap.overall_mean_ms, snap.overall_p50_ms, snap.overall_p99_ms);
+    println!("compute latency : mean {:.2} ms   p50 {:.2} ms   p99 {:.2} ms", snap.compute_mean_ms, snap.compute_p50_ms, snap.compute_p99_ms);
+    println!("feature stage   : mean {:.2} ms", snap.feature_mean_ms);
+    println!("network         : {:.2} MB/s", mb / elapsed);
+    println!("cache hit rate  : {:.1} % (fresh {:.1} %)", stack.query.cache().stats.hit_rate() * 100.0, stack.query.cache().stats.fresh_hit_rate() * 100.0);
+    println!("dso waste       : {:.1} % padded rows", stack.orchestrator.waste_fraction() * 100.0);
+    for &m in &profiles {
+        if let Some(e) = stack.orchestrator.engine(m) {
+            println!(
+                "engine m{:<5}: {} execs, mean compute {:.2} ms, upload {:.3} ms",
+                m,
+                e.stats.executions.load(std::sync::atomic::Ordering::Relaxed),
+                e.stats.mean_compute_ms(),
+                e.stats.upload_us.load(std::sync::atomic::Ordering::Relaxed) as f64
+                    / e.stats.executions.load(std::sync::atomic::Ordering::Relaxed).max(1) as f64
+                    / 1e3,
+            );
+        }
+    }
+    Ok(())
+}

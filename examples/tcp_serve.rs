@@ -1,0 +1,75 @@
+//! TCP front demo: start the serving stack behind the binary protocol,
+//! drive it with an in-process client, print per-request results.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example tcp_serve
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use flame::config::{CacheMode, StackConfig};
+use flame::manifest::Manifest;
+use flame::runtime::Runtime;
+use flame::server::pipeline::StackBuilder;
+use flame::server::tcp::{TcpClient, TcpServer};
+use flame::workload::{Generator, Request};
+use flame::config::WorkloadConfig;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts").context("run `make artifacts` first")?;
+    let runtime = Runtime::new()?;
+
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Async;
+    eprintln!("[tcp_serve] compiling tiny/fused engines ...");
+    let stack = Arc::new(StackBuilder::new("tiny", "fused", cfg).build(&runtime, &manifest)?);
+
+    let server = TcpServer::start(Arc::clone(&stack), "127.0.0.1:0")?;
+    println!("listening on {}", server.addr);
+
+    // generate realistic requests
+    let wl = WorkloadConfig {
+        catalog_size: 10_000,
+        zipf_theta: 1.0,
+        n_users: 500,
+        candidate_mix: WorkloadConfig::uniform_mix(stack.orchestrator.profiles()),
+        arrival_rate: None,
+        seed: 5,
+    };
+    let mut gen = Generator::new(&wl, stack.model_cfg.seq_len);
+    let requests: Vec<Request> = gen.batch(10);
+
+    let mut client = TcpClient::connect(&server.addr)?;
+    println!("\n{:>4} {:>6} {:>10} {:>12}  top task-0 score", "id", "M", "status", "latency");
+    for req in &requests {
+        let resp = client.call(req)?;
+        let status = match resp.status {
+            0 => "ok",
+            1 => "overload",
+            _ => "error",
+        };
+        // best candidate by task-0 probability
+        let best = resp
+            .scores
+            .chunks(resp.n_tasks.max(1))
+            .enumerate()
+            .max_by(|a, b| a.1[0].partial_cmp(&b.1[0]).unwrap())
+            .map(|(i, row)| format!("cand {i} @ {:.4}", row[0]))
+            .unwrap_or_default();
+        println!(
+            "{:>4} {:>6} {:>10} {:>9.2} ms  {best}",
+            resp.request_id,
+            resp.m,
+            status,
+            resp.overall_us as f64 / 1e3
+        );
+    }
+
+    let snap = stack.metrics.snapshot();
+    println!("\nserved {} requests, mean overall {:.2} ms, cache hit {:.0} %",
+        snap.requests, snap.overall_mean_ms,
+        stack.query.cache().stats.hit_rate() * 100.0);
+    server.shutdown();
+    Ok(())
+}

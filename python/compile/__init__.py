@@ -1,0 +1,3 @@
+"""Build-time compile path (L1 + L2): the Climber-like GR model in JAX,
+its Pallas kernels, and the AOT driver that lowers every engine variant
+to HLO text for the rust runtime. Never imported at serve time."""

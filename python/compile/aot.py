@@ -1,0 +1,176 @@
+"""AOT compile path: lower every (scenario, variant, M-profile) engine to
+HLO **text**, dump the shared weight blob, the artifact manifest, and
+numeric test vectors for the rust runtime.
+
+Run once via ``make artifacts``; python never appears on the request path.
+
+Why HLO text: the image's xla_extension 0.5.1 rejects serialized
+HloModuleProto from jax>=0.5 (64-bit instruction ids); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir):
+    manifest.json               artifact index (the rust-side contract)
+    weights_<scenario>.bin      f32 LE concat in params.flatten_spec order
+    <scenario>_<variant>_m<M>.hlo.txt
+    tv_<scenario>_<variant>_m<M>_<i>.bin  test vectors (tiny scenario)
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import SCENARIOS, VARIANTS, ModelConfig, model_flops
+from .params import flatten_spec, init_params, flatten_params, save_weights_bin
+from .model import make_flat_fn
+
+TV_MAGIC = 0x464C5456  # "FLTV"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: ModelConfig, variant: str, m: int) -> str:
+    """Lower f(*weights, hist, cands) for a fixed candidate profile M."""
+    fn = make_flat_fn(cfg, variant)
+    specs = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in flatten_spec(cfg)]
+    specs.append(jax.ShapeDtypeStruct((cfg.seq_len, cfg.d_model), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((m, cfg.d_model), jnp.float32))
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def write_testvector(path: str, tensors) -> None:
+    """Binary tensor container: magic, version, count, then per tensor
+    (name_len, name, ndim, dims i64, f32 LE data). Mirrored by
+    rust/src/manifest/testvec.rs."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", TV_MAGIC, 1, len(tensors)))
+        for name, arr in tensors:
+            arr = np.asarray(arr, dtype="<f4")
+            name_b = name.encode()
+            f.write(struct.pack("<I", len(name_b)))
+            f.write(name_b)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<q", d))
+            f.write(arr.tobytes())
+
+
+def build_scenario(cfg: ModelConfig, out_dir: str, variants, manifest: dict,
+                   n_testvectors: int) -> None:
+    print(f"[aot] scenario {cfg.name}: init params (seed {cfg.seed})")
+    params = init_params(cfg)
+    wpath = f"weights_{cfg.name}.bin"
+    nbytes = save_weights_bin(cfg, params, os.path.join(out_dir, wpath))
+    manifest["scenarios"][cfg.name] = {
+        "seq_len": cfg.seq_len,
+        "n_blocks": cfg.n_blocks,
+        "layers_per_block": cfg.layers_per_block,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_tasks": cfg.n_tasks,
+        "d_ff": cfg.d_ff,
+        "block_len": cfg.block_len,
+        "m_profiles": list(cfg.m_profiles),
+        "native_m": cfg.native_m,
+        "seed": cfg.seed,
+        "weights_file": wpath,
+        "weights_bytes": nbytes,
+        "weights": [{"name": n, "shape": list(s)} for n, s in flatten_spec(cfg)],
+    }
+
+    flat = flatten_params(cfg, params)
+    key = jax.random.PRNGKey(cfg.seed + 99)
+
+    for variant in variants:
+        # naive is an FKE-ablation baseline: export at native M only
+        # (the paper builds one ONNX engine per scenario, not per profile).
+        ms = [cfg.native_m] if variant == "naive" else list(cfg.m_profiles)
+        for m in ms:
+            t0 = time.time()
+            hlo = lower_model(cfg, variant, m)
+            path = f"{cfg.name}_{variant}_m{m}.hlo.txt"
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(hlo)
+            print(f"[aot] {path}: {len(hlo) / 1e6:.2f} MB HLO text "
+                  f"({time.time() - t0:.1f}s)")
+            manifest["models"].append({
+                "scenario": cfg.name,
+                "variant": variant,
+                "m": m,
+                "path": path,
+                "flops": model_flops(cfg, m),
+                "n_weight_inputs": len(flat),
+            })
+
+            # Test vectors: executed in python, checked by the rust runtime
+            # integration tests. Only for cheap scenarios.
+            if n_testvectors > 0 and cfg.name in ("tiny", "bench"):
+                fn = jax.jit(make_flat_fn(cfg, variant))
+                for i in range(n_testvectors):
+                    key, k1, k2 = jax.random.split(key, 3)
+                    hist = jax.random.normal(k1, (cfg.seq_len, cfg.d_model), jnp.float32)
+                    cands = jax.random.normal(k2, (m, cfg.d_model), jnp.float32)
+                    (scores,) = fn(*flat, hist, cands)
+                    tv_path = f"tv_{cfg.name}_{variant}_m{m}_{i}.bin"
+                    write_testvector(os.path.join(out_dir, tv_path), [
+                        ("hist", hist), ("cands", cands), ("scores", scores)])
+                    manifest["testvectors"].append({
+                        "scenario": cfg.name, "variant": variant, "m": m,
+                        "path": tv_path,
+                    })
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--scenarios", default="tiny,bench",
+                    help="comma list from: " + ",".join(SCENARIOS))
+    ap.add_argument("--variants", default=",".join(VARIANTS))
+    ap.add_argument("--testvectors", type=int, default=2,
+                    help="test vectors per (variant, M) for tiny/bench")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    # Incremental: merge into an existing manifest so `make artifacts`
+    # (tiny,bench) and `make artifacts-full` (adds base,long) compose.
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        manifest.setdefault("scenarios", {})
+        manifest.setdefault("models", [])
+        manifest.setdefault("testvectors", [])
+    else:
+        manifest = {"version": 1, "scenarios": {}, "models": [], "testvectors": []}
+
+    variants = [v.strip() for v in args.variants.split(",") if v.strip()]
+    for name in [s.strip() for s in args.scenarios.split(",") if s.strip()]:
+        cfg = SCENARIOS[name]
+        # drop stale entries for this scenario before regenerating
+        manifest["models"] = [e for e in manifest["models"]
+                              if not (e["scenario"] == name and e["variant"] in variants)]
+        manifest["testvectors"] = [e for e in manifest["testvectors"]
+                                   if not (e["scenario"] == name and e["variant"] in variants)]
+        build_scenario(cfg, args.out_dir, variants, manifest, args.testvectors)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {manifest_path}: {len(manifest['models'])} engines, "
+          f"{len(manifest['testvectors'])} test vectors")
+
+
+if __name__ == "__main__":
+    main()

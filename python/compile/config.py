@@ -1,0 +1,140 @@
+"""Model/scenario configuration for the Climber-like GR model (L2).
+
+Mirrors `rust/src/config/model.rs` — keep the two in sync. The scenarios
+reproduce the paper's Table 2 (`base`, `long`) plus two scaled tiers
+(`tiny` for tests, `bench` for CI-speed benches); see DESIGN.md §3.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + scenario parameters of one served model.
+
+    Attributes:
+        name: scenario id (``tiny`` / ``bench`` / ``base`` / ``long``).
+        seq_len: total user-history length ``L`` (split across blocks).
+        n_blocks: number of independent Transformer blocks ``N_b``.
+        layers_per_block: Transformer layers inside each block.
+        d_model: hidden dimension ``D``.
+        n_heads: attention heads (``D % n_heads == 0``).
+        n_tasks: number of prediction tasks scored by the expert MLP.
+        m_profiles: candidate-count profiles exported for DSO routing.
+        native_m: the paper-native candidate count (Table 2 column).
+        seed: weight-init seed (stable across variants, so all engine
+            variants of a scenario share one ``weights_<name>.bin``).
+    """
+
+    name: str
+    seq_len: int
+    n_blocks: int
+    layers_per_block: int
+    d_model: int
+    n_heads: int
+    m_profiles: Tuple[int, ...]
+    native_m: int
+    n_tasks: int = 3
+    seed: int = 0
+
+    @property
+    def block_len(self) -> int:
+        """History tokens per block (``L / N_b``)."""
+        assert self.seq_len % self.n_blocks == 0
+        return self.seq_len // self.n_blocks
+
+    @property
+    def d_ff(self) -> int:
+        """FFN inner dimension (4x, the usual Transformer ratio)."""
+        return 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_tokens(self, m: int) -> int:
+        """Per-block sequence length: history chunk + M candidates."""
+        return self.block_len + m
+
+    def validate(self) -> None:
+        assert self.seq_len % self.n_blocks == 0
+        assert self.d_model % self.n_heads == 0
+        assert self.native_m in self.m_profiles
+        for m in self.m_profiles:
+            assert m > 0
+
+
+def attention_flops(n: int, d: int) -> int:
+    """Dense-attention FLOPs for one layer over n tokens, hidden d.
+
+    QKV projection (2*n*d*3d) + scores (2*n*n*d) + AV (2*n*n*d)
+    + output projection (2*n*d*d).
+    """
+    return 2 * n * d * 3 * d + 2 * n * n * d + 2 * n * n * d + 2 * n * d * d
+
+
+def ffn_flops(n: int, d: int, f: int) -> int:
+    """FFN FLOPs for one layer: two GEMMs."""
+    return 2 * n * d * f + 2 * n * f * d
+
+
+def model_flops(cfg: ModelConfig, m: int) -> int:
+    """Analytic per-request FLOPs of the dense forward (SUMI batch of M).
+
+    This is the number the paper's Table 2 reports (its "FLOPS" column);
+    the rust mirror lives in `config/flops.rs` and both are asserted
+    equal through the manifest.
+    """
+    n = cfg.n_tokens(m)
+    per_layer = attention_flops(n, cfg.d_model) + ffn_flops(n, cfg.d_model, cfg.d_ff)
+    total = cfg.n_blocks * cfg.layers_per_block * per_layer
+    # gating fusion: concat [M, nb*D] @ [nb*D, nb*D]
+    total += 2 * m * (cfg.n_blocks * cfg.d_model) * (cfg.n_blocks * cfg.d_model)
+    # expert MLP: [M, D] @ [D, F] @ [F, T]
+    total += 2 * m * cfg.d_model * cfg.d_ff + 2 * m * cfg.d_ff * cfg.n_tasks
+    return total
+
+
+def masked_attention_score_flops(cfg: ModelConfig, m: int) -> int:
+    """Score+AV FLOPs actually *needed* under the SUMI mask (per layer).
+
+    History rows attend causally within history; candidate rows attend to
+    history + self. This is what the mask-aware L1 kernel's tile-skip
+    schedule approaches; the dense engines burn ``4*n^2*d`` instead.
+    """
+    lb, d = cfg.block_len, cfg.d_model
+    hist = lb * (lb + 1) // 2          # causal history x history
+    cand = m * (lb + 1)                # candidates x (history + self)
+    return 4 * (hist + cand) * d
+
+
+SCENARIOS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(
+        name="tiny", seq_len=32, n_blocks=2, layers_per_block=2,
+        d_model=32, n_heads=2, m_profiles=(4, 8), native_m=8, seed=1001,
+    ),
+    "bench": ModelConfig(
+        name="bench", seq_len=128, n_blocks=2, layers_per_block=3,
+        d_model=64, n_heads=4, m_profiles=(16, 32, 64, 128), native_m=32,
+        seed=1002,
+    ),
+    # Paper Table 2 rows (D=128 instead of the implied ~100 for MXU-friendly
+    # tiling; FLOPs stay within the paper's order of magnitude).
+    "base": ModelConfig(
+        name="base", seq_len=512, n_blocks=2, layers_per_block=12,
+        d_model=128, n_heads=8, m_profiles=(32, 64, 128), native_m=128,
+        seed=1003,
+    ),
+    "long": ModelConfig(
+        name="long", seq_len=1024, n_blocks=2, layers_per_block=12,
+        d_model=128, n_heads=8, m_profiles=(128, 256, 512, 1024),
+        native_m=512, seed=1004,
+    ),
+}
+
+VARIANTS = ("naive", "api", "fused")
+
+for _cfg in SCENARIOS.values():
+    _cfg.validate()

@@ -1,0 +1,2 @@
+"""L1: Pallas kernels for the FKE plug-ins (mask-aware flash attention,
+fused LN+FFN, fused gating+expert head) plus the pure-jnp oracle."""

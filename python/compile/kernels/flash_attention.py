@@ -1,0 +1,187 @@
+"""Mask-aware Flash-Attention as a Pallas kernel (L1).
+
+This is the TPU re-expression of the paper's FKE attention plug-in
+(§3.2): a blocked, online-softmax attention whose *tile schedule* encodes
+the SUMI mask instead of materializing an [n, n] score matrix and masking
+it afterwards.
+
+Mask structure (see kernels/ref.py::sumi_mask): token layout per block is
+``[history (hist_len) | candidates (m)]``; history is causal, candidates
+attend to all history plus themselves only. With query/key tiles aligned
+to the history/candidate boundary this classifies every (q_tile, kv_tile)
+pair statically:
+
+  q in history,   kv in history, kv_start >  q_end  -> SKIP   (future)
+  q in history,   kv in history, tile on diagonal   -> PARTIAL (causal tri)
+  q in history,   kv in history, kv_end <= q_start  -> FULL
+  q in history,   kv in candidates                  -> SKIP   (never visible)
+  q in candidate, kv in history                     -> FULL
+  q in candidate, kv in candidates, same tile       -> PARTIAL (identity)
+  q in candidate, kv in candidates, different tile  -> SKIP
+
+The SKIP classes are the paper's mask-aware FLOP savings (the HSTU-style
+candidate-parallel trick); on real TPU hardware they are also the
+HBM->VMEM transfers never issued. Here the skip is expressed as a
+``lax.fori_loop`` upper bound (history rows never read past their own
+diagonal tile) plus a ``lax.cond`` over the tile class, so the saving
+survives in the lowered HLO even under ``interpret=True``.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * BlockSpec tiles Q on [block_q, hd] and keeps K/V per-head resident —
+    the VMEM analogue of the CUDA kernel's shared-memory staging;
+    footprint per grid step = (block_q + 2n) * hd * 4 bytes.
+  * tiles are MXU-shaped (multiples of 8x128 lanes when dims allow);
+  * interpret=True is mandatory on the CPU PJRT plugin (a real TPU lowering
+    emits a Mosaic custom-call the CPU runtime cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _choose_block(hist_len: int, m: int, cap: int = 128) -> int:
+    """Largest power of two <= cap dividing both hist_len and m, so tiles
+    never straddle the history/candidate boundary."""
+    b = 1
+    while b * 2 <= cap and hist_len % (b * 2) == 0 and m % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, t_ref, o_ref, *, hist_len: int,
+                 block: int, n_tokens: int):
+    """One (head, q_tile) grid step of the mask-aware flash attention."""
+    qi = pl.program_id(1)
+    q = q_ref[0]                      # [block, hd]
+    hd = q.shape[-1]
+    t = t_ref[0, 0]                   # adaptive temperature (learned scalar)
+    scale = t / jnp.sqrt(jnp.float32(hd))
+
+    q_start = qi * block
+    n_hist_tiles = hist_len // block
+    q_is_cand = q_start >= hist_len
+
+    # Online-softmax accumulators.
+    acc = jnp.zeros((block, hd), jnp.float32)
+    m_i = jnp.full((block,), NEG_INF, jnp.float32)
+    l_i = jnp.zeros((block,), jnp.float32)
+
+    # Static per-tile element masks (block-local coordinates).
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    tri_bias = jnp.where(cols <= rows, 0.0, NEG_INF).astype(jnp.float32)  # causal
+    eye_bias = jnp.where(cols == rows, 0.0, NEG_INF).astype(jnp.float32)  # self-only
+
+    def visit(j, carry, bias):
+        """Fold KV tile j into the online softmax with additive tile bias."""
+        acc, m_i, l_i = carry
+        k = pl.load(k_ref, (0, pl.dslice(j * block, block), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(j * block, block), slice(None)))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale + bias
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    def history_rows(carry):
+        """q tile inside history: full tiles [0, qi), then the diagonal
+        (causal-triangular) tile. KV tiles past qi are never touched."""
+        def body(j, c):
+            return visit(j, c, 0.0)
+        carry = jax.lax.fori_loop(0, qi, body, carry)
+        return visit(qi, carry, tri_bias)
+
+    def candidate_rows(carry):
+        """q tile inside candidates: all history tiles (full), then the
+        aligned candidate tile with identity visibility. Other candidate
+        tiles are never touched (candidates don't see each other)."""
+        def body(j, c):
+            return visit(j, c, 0.0)
+        carry = jax.lax.fori_loop(0, n_hist_tiles, body, carry)
+        return visit(qi, carry, eye_bias)
+
+    acc, m_i, l_i = jax.lax.cond(
+        q_is_cand, candidate_rows, history_rows, (acc, m_i, l_i))
+
+    o_ref[0] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    temp: jnp.ndarray, *, hist_len: int,
+                    block: int | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Mask-aware flash attention over per-head tensors.
+
+    Args:
+        q, k, v: [H, n, hd] f32, where n = hist_len + m.
+        temp: scalar adaptive temperature (traced; learned per layer).
+        hist_len: history prefix length (static); the remaining rows are
+            candidates under the SUMI mask.
+        block: q/kv tile size; must divide both hist_len and m. Chosen
+            automatically (power of two <= 128) when None.
+        interpret: run the kernel through the pallas interpreter so it
+            lowers to plain HLO (required for the CPU PJRT runtime).
+
+    Returns:
+        [H, n, hd] attention output, matching
+        ``ref.attention_ref(q, k, v, mask_bias(hist_len, m), temp)``.
+    """
+    h, n, hd = q.shape
+    m = n - hist_len
+    assert m > 0, "need at least one candidate row"
+    if block is None:
+        block = _choose_block(hist_len, m)
+    assert hist_len % block == 0 and m % block == 0, (hist_len, m, block)
+    n_q_tiles = n // block
+
+    kernel = functools.partial(
+        _attn_kernel, hist_len=hist_len, block=block, n_tokens=n)
+    t2 = temp.astype(jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(h, n_q_tiles),
+        in_specs=[
+            pl.BlockSpec((1, block, hd), lambda i, j: (i, j, 0)),   # q tile
+            pl.BlockSpec((1, n, hd), lambda i, j: (i, 0, 0)),       # k (head-resident)
+            pl.BlockSpec((1, n, hd), lambda i, j: (i, 0, 0)),       # v (head-resident)
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),              # temperature
+        ],
+        out_specs=pl.BlockSpec((1, block, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v, t2)
+
+
+def attention_tile_stats(hist_len: int, m: int, block: int | None = None) -> dict:
+    """Analytic tile accounting for the §Perf VMEM/FLOP analysis.
+
+    Returns visited vs total (q_tile, kv_tile) pairs and the resulting
+    score-FLOP fraction vs dense attention — the number EXPERIMENTS.md
+    reports as the kernel's mask-aware saving.
+    """
+    if block is None:
+        block = _choose_block(hist_len, m)
+    nq = (hist_len + m) // block
+    nh = hist_len // block
+    visited = 0
+    for qi in range(nq):
+        if qi < nh:
+            visited += qi + 1          # history: tiles 0..qi
+        else:
+            visited += nh + 1          # candidate: all history + own tile
+    total = nq * nq
+    return {
+        "block": block,
+        "visited_tiles": visited,
+        "total_tiles": total,
+        "flop_fraction": visited / total,
+    }

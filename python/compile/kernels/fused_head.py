@@ -1,0 +1,98 @@
+"""Fused model head as a Pallas kernel (L1): bit-wise gating fusion
+across blocks + expert MLP + sigmoid, in one row-tiled pass over the
+candidate rows.
+
+The paper's FKE fuses "the remaining modules of the Transformer" beyond
+attention (§3.2); in the Climber architecture the remaining per-request
+modules are the gating fusion and the top expert MLP. Unfused, this tail
+is 3 GEMMs + softmax + 2 activations with [M, nb*D] intermediates
+round-tripping through HBM; fused, a candidate tile makes one trip:
+
+    cat   : [bm, nb*D]   (concat of block outputs — its reshape to
+                          [bm, nb, D] *is* the stacked block view)
+    gates = softmax_over_blocks(cat @ Wg + bg)
+    fused = sum_b gates[:, b, :] * cat[:, b, :]
+    out   = sigmoid(gelu(fused @ W1 + b1) @ W2 + b2)    # [bm, T]
+
+VMEM per grid step: weights ((nbD)^2 + D*F + F*T) + one candidate tile —
+~1.3 MB at D=128, F=512, nb=2, far under budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _head_kernel(cat_ref, gw_ref, gb_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                 o_ref, *, n_blocks: int, d_model: int):
+    cat = cat_ref[...]                                     # [bm, nb*D]
+    bm = cat.shape[0]
+    logits = jnp.dot(cat, gw_ref[...], preferred_element_type=jnp.float32) + gb_ref[...]
+    gates = jax.nn.softmax(logits.reshape(bm, n_blocks, d_model), axis=1)
+    fused = jnp.sum(gates * cat.reshape(bm, n_blocks, d_model), axis=1)  # [bm, D]
+    h = jnp.dot(fused, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...]
+    h = jax.nn.gelu(h, approximate=False)
+    out = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+    o_ref[...] = jax.nn.sigmoid(out).astype(o_ref.dtype)
+
+
+def _choose_rows(m: int, cap: int = 128) -> int:
+    b = 1
+    while b * 2 <= cap and m % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def fused_head(cat: jnp.ndarray, gate_w: jnp.ndarray, gate_b: jnp.ndarray,
+               exp_w1: jnp.ndarray, exp_b1: jnp.ndarray,
+               exp_w2: jnp.ndarray, exp_b2: jnp.ndarray, *,
+               n_blocks: int, d_model: int,
+               block_m: int | None = None,
+               interpret: bool = True) -> jnp.ndarray:
+    """Fused gating + expert head.
+
+    Args:
+        cat: [M, nb*D] concatenated block outputs (candidate rows).
+        gate_w/gate_b: [nb*D, nb*D] / [nb*D].
+        exp_w1/exp_b1: [D, F] / [F]; exp_w2/exp_b2: [F, T] / [T].
+
+    Returns:
+        [M, T] task probabilities, matching the unfused head in
+        model._head / ref.model_ref's tail.
+    """
+    m, nbd = cat.shape
+    assert nbd == n_blocks * d_model, (nbd, n_blocks, d_model)
+    f = exp_w1.shape[1]
+    t = exp_w2.shape[1]
+    if block_m is None:
+        block_m = _choose_rows(m)
+    assert m % block_m == 0, (m, block_m)
+
+    kernel = functools.partial(_head_kernel, n_blocks=n_blocks, d_model=d_model)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, nbd), lambda i: (i, 0)),  # candidate tile
+            pl.BlockSpec((nbd, nbd), lambda i: (0, 0)),      # gate W (resident)
+            pl.BlockSpec((nbd,), lambda i: (0,)),
+            pl.BlockSpec((d_model, f), lambda i: (0, 0)),    # expert W1
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, t), lambda i: (0, 0)),          # expert W2
+            pl.BlockSpec((t,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, t), cat.dtype),
+        interpret=interpret,
+    )(cat, gate_w, gate_b, exp_w1, exp_b1, exp_w2, exp_b2)
+
+
+def head_vmem_bytes(n_blocks: int, d_model: int, d_ff: int, n_tasks: int,
+                    block_m: int = 128) -> int:
+    """Per-grid-step VMEM estimate (bytes) for §Perf."""
+    nbd = n_blocks * d_model
+    weights = nbd * nbd + nbd + d_model * d_ff + d_ff + d_ff * n_tasks + n_tasks
+    tile = block_m * (nbd + n_tasks) + block_m * d_ff
+    return 4 * (weights + tile)

@@ -1,0 +1,133 @@
+"""Pure-jnp oracle for the L1 kernels and the full model semantics.
+
+Everything here is deliberately straightforward jnp — no pallas, no scan —
+and is the single source of truth for correctness. The pallas kernels
+(`flash_attention.py`, `fused_ffn.py`) and the model variants
+(`model.py`, `naive.py`) are all tested against these functions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_BIAS = -1e9  # additive mask bias; every row keeps >=1 visible key
+
+
+def sumi_mask(hist_len: int, m: int) -> jnp.ndarray:
+    """Boolean visibility mask of the SUMI (single-user-multi-item) block.
+
+    Token layout per block: ``[h_0 .. h_{hist_len-1}, c_0 .. c_{m-1}]``.
+
+    * history row i sees history keys j <= i (causal);
+    * candidate row sees *all* history plus itself only — candidates are
+      scored in parallel but must not leak into each other (the HSTU-style
+      mask the paper's FKE plug-in implements).
+    """
+    n = hist_len + m
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    hist_causal = (i < hist_len) & (j <= i)
+    cand_hist = (i >= hist_len) & (j < hist_len)
+    cand_self = (i >= hist_len) & (j == i)
+    return hist_causal | cand_hist | cand_self
+
+
+def mask_bias(hist_len: int, m: int) -> jnp.ndarray:
+    """Additive f32 bias form of :func:`sumi_mask` (0 visible / -1e9 not)."""
+    return jnp.where(sumi_mask(hist_len, m), 0.0, NEG_BIAS).astype(jnp.float32)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """LayerNorm over the last axis."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  bias: jnp.ndarray, temp: jnp.ndarray) -> jnp.ndarray:
+    """Masked multi-head attention core. q/k/v: [H, n, hd]; bias: [n, n];
+    temp: scalar adaptive temperature applied to scores pre-softmax."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * (temp / jnp.sqrt(jnp.float32(hd)))
+    scores = scores + bias[None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[n, D] -> [H, n, hd]."""
+    n, d = x.shape
+    return x.reshape(n, n_heads, d // n_heads).transpose(1, 0, 2)
+
+
+def merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """[H, n, hd] -> [n, D]."""
+    h, n, hd = x.shape
+    return x.transpose(1, 0, 2).reshape(n, h * hd)
+
+
+def mha_ref(x: jnp.ndarray, qkv_w: jnp.ndarray, qkv_b: jnp.ndarray,
+            out_w: jnp.ndarray, out_b: jnp.ndarray, n_heads: int,
+            temp: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """Full MHA sublayer on [n, D] input (no residual, no pre-LN)."""
+    d = x.shape[-1]
+    qkv = x @ qkv_w + qkv_b
+    q, k, v = qkv[:, :d], qkv[:, d:2 * d], qkv[:, 2 * d:]
+    out = attention_ref(split_heads(q, n_heads), split_heads(k, n_heads),
+                        split_heads(v, n_heads), bias, temp)
+    return merge_heads(out) @ out_w + out_b
+
+
+def ffn_ref(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+            w2: jnp.ndarray, b2: jnp.ndarray) -> jnp.ndarray:
+    """Position-wise FFN with exact (erf) gelu."""
+    return jax.nn.gelu(x @ w1 + b1, approximate=False) @ w2 + b2
+
+
+def ln_ffn_ref(x: jnp.ndarray, ln_s: jnp.ndarray, ln_b: jnp.ndarray,
+               w1: jnp.ndarray, b1: jnp.ndarray,
+               w2: jnp.ndarray, b2: jnp.ndarray) -> jnp.ndarray:
+    """Pre-LN FFN sublayer *with* residual: x + FFN(LN(x)).
+
+    This is exactly what the fused LN+FFN pallas kernel computes.
+    """
+    return x + ffn_ref(layernorm(x, ln_s, ln_b), w1, b1, w2, b2)
+
+
+def layer_ref(x: jnp.ndarray, lp: dict, l: int, n_heads: int, bias: jnp.ndarray) -> jnp.ndarray:
+    """One pre-LN Transformer layer, indexing stacked block params at l."""
+    h = x + mha_ref(layernorm(x, lp["ln1_s"][l], lp["ln1_b"][l]),
+                    lp["qkv_w"][l], lp["qkv_b"][l], lp["out_w"][l],
+                    lp["out_b"][l], n_heads, lp["temp"][l], bias)
+    return ln_ffn_ref(h, lp["ln2_s"][l], lp["ln2_b"][l], lp["ffn_w1"][l],
+                      lp["ffn_b1"][l], lp["ffn_w2"][l], lp["ffn_b2"][l])
+
+
+def model_ref(cfg, params: dict, hist: jnp.ndarray, cands: jnp.ndarray) -> jnp.ndarray:
+    """Reference forward of the whole Climber-like GR model.
+
+    hist: [L, D] pre-embedded user history; cands: [M, D] candidates.
+    Returns per-task probabilities [M, n_tasks].
+    """
+    from ..params import block_params  # local import to avoid cycle
+
+    lb, m = cfg.block_len, cands.shape[0]
+    bias = mask_bias(lb, m)
+    outs = []
+    for b in range(cfg.n_blocks):
+        lp = block_params(cfg, params, b)
+        x = jnp.concatenate([hist[b * lb:(b + 1) * lb], cands], axis=0)
+        for l in range(cfg.layers_per_block):
+            x = layer_ref(x, lp, l, cfg.n_heads, bias)
+        outs.append(x[lb:])  # candidate rows [M, D]
+
+    # Bit-wise gating fusion: per-bit softmax over blocks.
+    cat = jnp.concatenate(outs, axis=-1)                      # [M, nb*D]
+    logits = cat @ params["gate_w"] + params["gate_b"]        # [M, nb*D]
+    gates = jax.nn.softmax(
+        logits.reshape(m, cfg.n_blocks, cfg.d_model), axis=1)  # [M, nb, D]
+    fused = jnp.sum(gates * jnp.stack(outs, axis=1), axis=1)   # [M, D]
+
+    # Expert MLP -> multi-task probabilities.
+    h = jax.nn.gelu(fused @ params["exp_w1"] + params["exp_b1"], approximate=False)
+    return jax.nn.sigmoid(h @ params["exp_w2"] + params["exp_b2"])

@@ -1,0 +1,146 @@
+"""L2: the Climber-like GR model forward, in its two deliberately-built
+engine variants (the FKE ablation's upper levels):
+
+* ``api``   — "TensorRT API Impl.": a compact, deliberately constructed
+  graph. ``lax.scan`` over stacked per-layer weights (one compiled layer
+  body instead of L unrolled copies), a single fused QKV GEMM, the additive
+  SUMI mask computed once per block and reused by every layer.
+* ``fused`` — "API + Kernel Fusion": same graph, but the attention core is
+  the L1 mask-aware flash-attention pallas kernel and the pre-LN FFN
+  sublayer is the L1 fused LN+FFN pallas kernel.
+
+The "ONNX Model Conversion" baseline lives in `naive.py`. All variants take
+the *same* flat weight tuple (see params.flatten_spec) so the rust runtime
+uploads one device-resident weight set per scenario and shares it across
+engines — the analogue of TensorRT engines sharing GPU weight memory.
+"""
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import block_params, unflatten_params
+from .kernels import ref
+from .kernels.flash_attention import flash_attention
+from .kernels.fused_ffn import fused_ln_ffn
+
+
+def _mha_api(x, qkv_w, qkv_b, out_w, out_b, n_heads, temp, bias):
+    """MHA sublayer with one fused QKV GEMM and dense masked softmax."""
+    d = x.shape[-1]
+    qkv = x @ qkv_w + qkv_b                       # [n, 3D] single GEMM
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    out = ref.attention_ref(
+        ref.split_heads(q, n_heads), ref.split_heads(k, n_heads),
+        ref.split_heads(v, n_heads), bias, temp)
+    return ref.merge_heads(out) @ out_w + out_b
+
+
+def _mha_fused(x, qkv_w, qkv_b, out_w, out_b, n_heads, temp, hist_len):
+    """MHA sublayer with the L1 mask-aware flash-attention kernel.
+
+    No [n, n] bias tensor exists here at all — the mask lives in the
+    kernel's tile schedule.
+    """
+    qkv = x @ qkv_w + qkv_b
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    out = flash_attention(
+        ref.split_heads(q, n_heads), ref.split_heads(k, n_heads),
+        ref.split_heads(v, n_heads), temp, hist_len=hist_len)
+    return ref.merge_heads(out) @ out_w + out_b
+
+
+def _block_forward(cfg: ModelConfig, lp: dict, x: jnp.ndarray,
+                   hist_len: int, fused: bool) -> jnp.ndarray:
+    """Scan the block's layers over the stacked weights."""
+    bias = None if fused else ref.mask_bias(hist_len, x.shape[0] - hist_len)
+
+    def layer(x, w):
+        ln1 = ref.layernorm(x, w["ln1_s"], w["ln1_b"])
+        if fused:
+            attn = _mha_fused(ln1, w["qkv_w"], w["qkv_b"], w["out_w"],
+                              w["out_b"], cfg.n_heads, w["temp"], hist_len)
+        else:
+            attn = _mha_api(ln1, w["qkv_w"], w["qkv_b"], w["out_w"],
+                            w["out_b"], cfg.n_heads, w["temp"], bias)
+        h = x + attn
+        if fused:
+            h = fused_ln_ffn(h, w["ln2_s"], w["ln2_b"], w["ffn_w1"],
+                             w["ffn_b1"], w["ffn_w2"], w["ffn_b2"])
+        else:
+            h = ref.ln_ffn_ref(h, w["ln2_s"], w["ln2_b"], w["ffn_w1"],
+                               w["ffn_b1"], w["ffn_w2"], w["ffn_b2"])
+        return h, None
+
+    x, _ = jax.lax.scan(layer, x, lp)
+    return x
+
+
+# Whether the fused variant also runs the gating+expert head as the L1
+# fused-head kernel. Measured OFF on this CPU testbed: the head is a few
+# hundred kFLOPs, and the pallas-interpreter's fixed per-call overhead
+# (~1.5 ms) exceeds the fusion win below M≈256 — it inverted the Table 4
+# `bench` row (2.69 -> 4.20 ms) while being noise at base/long. Kept as
+# an opt-in: on real TPU hardware (Mosaic lowering, no interpreter tax)
+# the paper's "fuse the remaining modules" choice is the right default.
+# See EXPERIMENTS.md §Perf L1 iteration log.
+FUSE_HEAD = False
+
+
+def _head(cfg: ModelConfig, params: dict, outs: List[jnp.ndarray],
+          fused: bool = False) -> jnp.ndarray:
+    """Bit-wise gating fusion across blocks + expert MLP (identical math
+    to ref.model_ref's tail). The fused variant runs it as the L1
+    fused-head pallas kernel ("kernel fusion on the remaining modules",
+    paper §3.2)."""
+    m = outs[0].shape[0]
+    cat = jnp.concatenate(outs, axis=-1)
+    if fused:
+        from .kernels.fused_head import fused_head
+        return fused_head(
+            cat, params["gate_w"], params["gate_b"], params["exp_w1"],
+            params["exp_b1"], params["exp_w2"], params["exp_b2"],
+            n_blocks=cfg.n_blocks, d_model=cfg.d_model)
+    logits = cat @ params["gate_w"] + params["gate_b"]
+    gates = jax.nn.softmax(logits.reshape(m, cfg.n_blocks, cfg.d_model), axis=1)
+    fused_o = jnp.sum(gates * jnp.stack(outs, axis=1), axis=1)
+    h = jax.nn.gelu(fused_o @ params["exp_w1"] + params["exp_b1"], approximate=False)
+    return jax.nn.sigmoid(h @ params["exp_w2"] + params["exp_b2"])
+
+
+def model_forward(cfg: ModelConfig, params: dict, hist: jnp.ndarray,
+                  cands: jnp.ndarray, variant: str) -> jnp.ndarray:
+    """Forward one SUMI request: hist [L, D], cands [M, D] -> [M, n_tasks].
+
+    variant: "api" or "fused" (see `naive.py` for "naive").
+    """
+    assert variant in ("api", "fused"), variant
+    lb = cfg.block_len
+    outs = []
+    for b in range(cfg.n_blocks):
+        lp = block_params(cfg, params, b)
+        x = jnp.concatenate([hist[b * lb:(b + 1) * lb], cands], axis=0)
+        x = _block_forward(cfg, lp, x, lb, fused=(variant == "fused"))
+        outs.append(x[lb:])
+    return _head(cfg, params, outs, fused=(variant == "fused" and FUSE_HEAD))
+
+
+def make_flat_fn(cfg: ModelConfig, variant: str):
+    """The AOT entrypoint: f(*flat_weights, hist, cands) -> (scores,).
+
+    Flat-tuple signature (canonical order) is the rust runtime contract.
+    Returns a 1-tuple so the HLO root is a tuple (see aot.to_hlo_text).
+    """
+    if variant == "naive":
+        from .naive import model_forward_naive as fwd
+    else:
+        fwd = lambda c, p, h, m: model_forward(c, p, h, m, variant)
+
+    def fn(*args):
+        flat, (hist, cands) = list(args[:-2]), args[-2:]
+        params = unflatten_params(cfg, flat)
+        return (fwd(cfg, params, hist, cands),)
+
+    return fn

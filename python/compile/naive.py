@@ -1,0 +1,113 @@
+"""The "ONNX Model Conversion" baseline engine (FKE ablation level 1).
+
+This reproduces the *pathology* the paper ascribes to the default
+ONNX→TensorRT route (§3.2): a mechanically exported graph, not a
+deliberately constructed one. Numerically it computes the same model as
+`model.model_forward` (cross-checked in pytest); structurally it carries
+the export artifacts a generic converter emits:
+
+* fully **unrolled** layers — L separate subgraphs instead of one scanned
+  body (gratuitously verbose IR, the paper's words);
+* **split** Q/K/V/O projections — three narrow GEMMs instead of one fused
+  QKV GEMM;
+* the boolean mask is **rebuilt inside every layer**, broadcast to
+  [H, n, n], and applied with the exporter's characteristic double-
+  ``where`` (mask scores before softmax, re-mask probabilities after);
+* dense candidate×candidate attention — all masked FLOPs are burned;
+* softmax spelled out as separate max / sub / exp / sum / div ops;
+* head split/merge via explicit transpose-reshape chains per projection.
+
+It takes the same flat weight tuple as the other variants and slices the
+stacked per-layer tensors inside the graph.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import block_params
+from .kernels import ref
+
+
+def _naive_softmax(s: jnp.ndarray) -> jnp.ndarray:
+    """Softmax spelled out the way exporters serialize it."""
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(jnp.subtract(s, mx))
+    return jnp.divide(e, jnp.sum(e, axis=-1, keepdims=True))
+
+
+def _naive_layernorm(x, scale, bias, eps=1e-6):
+    """LayerNorm as the exported op chain (no rsqrt: sqrt + divide)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    diff = jnp.subtract(x, mean)
+    var = jnp.mean(jnp.multiply(diff, diff), axis=-1, keepdims=True)
+    return jnp.add(jnp.multiply(jnp.divide(diff, jnp.sqrt(var + eps)), scale), bias)
+
+
+def _naive_heads(x, n_heads):
+    n, d = x.shape
+    return jnp.transpose(jnp.reshape(x, (n, n_heads, d // n_heads)), (1, 0, 2))
+
+
+def _naive_layer(cfg: ModelConfig, lp: dict, l: int, x: jnp.ndarray,
+                 hist_len: int) -> jnp.ndarray:
+    n = x.shape[0]
+    m = n - hist_len
+    d = cfg.d_model
+    h = cfg.n_heads
+
+    ln1 = _naive_layernorm(x, lp["ln1_s"][l], lp["ln1_b"][l])
+    # Split projections: slice the stacked fused weight into Q/K/V parts
+    # (three GEMMs — what a per-op exporter produces).
+    wq, wk, wv = (lp["qkv_w"][l][:, :d], lp["qkv_w"][l][:, d:2 * d],
+                  lp["qkv_w"][l][:, 2 * d:])
+    bq, bk, bv = (lp["qkv_b"][l][:d], lp["qkv_b"][l][d:2 * d],
+                  lp["qkv_b"][l][2 * d:])
+    q = _naive_heads(jnp.add(jnp.matmul(ln1, wq), bq), h)
+    k = _naive_heads(jnp.add(jnp.matmul(ln1, wk), bk), h)
+    v = _naive_heads(jnp.add(jnp.matmul(ln1, wv), bv), h)
+
+    # Mask rebuilt inside the layer and broadcast over heads.
+    vis = ref.sumi_mask(hist_len, m)
+    vis_h = jnp.broadcast_to(vis[None, :, :], (h, n, n))
+
+    scale = jnp.multiply(lp["temp"][l], 1.0 / jnp.sqrt(jnp.float32(d // h)))
+    scores = jnp.multiply(jnp.matmul(q, jnp.transpose(k, (0, 2, 1))), scale)
+    scores = jnp.where(vis_h, scores, jnp.float32(ref.NEG_BIAS))   # where #1
+    probs = _naive_softmax(scores)
+    probs = jnp.where(vis_h, probs, jnp.float32(0.0))              # where #2
+    ctx = jnp.matmul(probs, v)
+    ctx = jnp.reshape(jnp.transpose(ctx, (1, 0, 2)), (n, d))
+    attn = jnp.add(jnp.matmul(ctx, lp["out_w"][l]), lp["out_b"][l])
+    x = jnp.add(x, attn)
+
+    ln2 = _naive_layernorm(x, lp["ln2_s"][l], lp["ln2_b"][l])
+    ff = jax.nn.gelu(jnp.add(jnp.matmul(ln2, lp["ffn_w1"][l]), lp["ffn_b1"][l]),
+                     approximate=False)
+    ff = jnp.add(jnp.matmul(ff, lp["ffn_w2"][l]), lp["ffn_b2"][l])
+    return jnp.add(x, ff)
+
+
+def model_forward_naive(cfg: ModelConfig, params: dict, hist: jnp.ndarray,
+                        cands: jnp.ndarray) -> jnp.ndarray:
+    """Unrolled baseline forward: hist [L, D], cands [M, D] -> [M, T]."""
+    lb = cfg.block_len
+    m = cands.shape[0]
+    outs = []
+    for b in range(cfg.n_blocks):
+        lp = block_params(cfg, params, b)
+        x = jnp.concatenate([hist[b * lb:(b + 1) * lb], cands], axis=0)
+        for l in range(cfg.layers_per_block):      # fully unrolled
+            x = _naive_layer(cfg, lp, l, x, lb)
+        outs.append(x[lb:])
+
+    cat = jnp.concatenate(outs, axis=-1)
+    logits = jnp.add(jnp.matmul(cat, params["gate_w"]), params["gate_b"])
+    gates = _naive_softmax(
+        jnp.transpose(jnp.reshape(logits, (m, cfg.n_blocks, cfg.d_model)), (0, 2, 1))
+    )
+    gates = jnp.transpose(gates, (0, 2, 1))
+    fused = jnp.sum(jnp.multiply(gates, jnp.stack(outs, axis=1)), axis=1)
+    hdd = jax.nn.gelu(jnp.add(jnp.matmul(fused, params["exp_w1"]), params["exp_b1"]),
+                      approximate=False)
+    return jax.nn.sigmoid(jnp.add(jnp.matmul(hdd, params["exp_w2"]), params["exp_b2"]))

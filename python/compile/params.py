@@ -1,0 +1,111 @@
+"""Weight initialization + the canonical flat parameter order.
+
+All engine variants of a scenario share one weight set; the flat order
+defined by :func:`flatten_spec` is the contract with the rust runtime
+(`rust/src/manifest`): `weights_<scenario>.bin` stores the tensors
+concatenated as little-endian f32 in exactly this order, and every lowered
+HLO takes them as its leading parameters in exactly this order.
+"""
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+# (name template, shape builder) per block, in order.
+_BLOCK_TENSORS = (
+    ("qkv_w", lambda c: (c.layers_per_block, c.d_model, 3 * c.d_model)),
+    ("qkv_b", lambda c: (c.layers_per_block, 3 * c.d_model)),
+    ("out_w", lambda c: (c.layers_per_block, c.d_model, c.d_model)),
+    ("out_b", lambda c: (c.layers_per_block, c.d_model)),
+    ("ln1_s", lambda c: (c.layers_per_block, c.d_model)),
+    ("ln1_b", lambda c: (c.layers_per_block, c.d_model)),
+    ("ln2_s", lambda c: (c.layers_per_block, c.d_model)),
+    ("ln2_b", lambda c: (c.layers_per_block, c.d_model)),
+    ("ffn_w1", lambda c: (c.layers_per_block, c.d_model, c.d_ff)),
+    ("ffn_b1", lambda c: (c.layers_per_block, c.d_ff)),
+    ("ffn_w2", lambda c: (c.layers_per_block, c.d_ff, c.d_model)),
+    ("ffn_b2", lambda c: (c.layers_per_block, c.d_model)),
+    ("temp", lambda c: (c.layers_per_block,)),
+)
+
+_TOP_TENSORS = (
+    ("gate_w", lambda c: (c.n_blocks * c.d_model, c.n_blocks * c.d_model)),
+    ("gate_b", lambda c: (c.n_blocks * c.d_model,)),
+    ("exp_w1", lambda c: (c.d_model, c.d_ff)),
+    ("exp_b1", lambda c: (c.d_ff,)),
+    ("exp_w2", lambda c: (c.d_ff, c.n_tasks)),
+    ("exp_b2", lambda c: (c.n_tasks,)),
+)
+
+
+def flatten_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) list — the rust/python weight contract."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    for b in range(cfg.n_blocks):
+        for name, shape_fn in _BLOCK_TENSORS:
+            spec.append((f"block{b}.{name}", shape_fn(cfg)))
+    for name, shape_fn in _TOP_TENSORS:
+        spec.append((name, shape_fn(cfg)))
+    return spec
+
+
+def init_params(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Seeded init. Matmul weights ~ N(0, 1/sqrt(fan_in)); biases zero;
+    LN scales one; adaptive temperatures near one (the paper's learned
+    pre-softmax coefficient)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    params: Dict[str, jnp.ndarray] = {}
+    for name, shape in flatten_spec(cfg):
+        key, sub = jax.random.split(key)
+        leaf = name.split(".")[-1]
+        if leaf in ("qkv_w", "out_w", "ffn_w1", "ffn_w2", "gate_w", "exp_w1", "exp_w2"):
+            fan_in = shape[-2]
+            arr = jax.random.normal(sub, shape, jnp.float32) / np.sqrt(fan_in)
+        elif leaf in ("ln1_s", "ln2_s"):
+            arr = jnp.ones(shape, jnp.float32)
+        elif leaf == "temp":
+            arr = 1.0 + 0.05 * jax.random.normal(sub, shape, jnp.float32)
+        else:  # biases
+            arr = jnp.zeros(shape, jnp.float32)
+        params[name] = arr
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    """Params dict -> flat list in canonical order."""
+    return [params[name] for name, _ in flatten_spec(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Flat list (canonical order) -> params dict. Inverse of flatten."""
+    spec = flatten_spec(cfg)
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    out = {}
+    for (name, shape), arr in zip(spec, flat):
+        assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+        out[name] = arr
+    return out
+
+
+def save_weights_bin(cfg: ModelConfig, params: Dict[str, jnp.ndarray], path: str) -> int:
+    """Write little-endian f32 concatenation in canonical order.
+
+    Returns total bytes written. The rust loader slices this buffer by the
+    shapes recorded in the manifest.
+    """
+    total = 0
+    with open(path, "wb") as f:
+        for name, _ in flatten_spec(cfg):
+            arr = np.asarray(params[name], dtype="<f4")
+            f.write(arr.tobytes())
+            total += arr.nbytes
+    return total
+
+
+def block_params(cfg: ModelConfig, params: Dict[str, jnp.ndarray], b: int) -> Dict[str, jnp.ndarray]:
+    """The stacked per-layer tensors of block ``b`` (keys without prefix)."""
+    return {name: params[f"block{b}.{name}"] for name, _ in _BLOCK_TENSORS}

@@ -1,0 +1,140 @@
+"""AOT path: HLO text lowering, weight-blob format, test-vector
+container, and manifest consistency — the python half of the rust/python
+contract (the rust half is rust/tests/e2e_tiny.rs)."""
+
+import json
+import os
+import struct
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.config import SCENARIOS, model_flops
+from compile.model import make_flat_fn
+from compile.params import flatten_params, flatten_spec, init_params, save_weights_bin
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = SCENARIOS["tiny"]
+
+
+class TestLowering:
+    @pytest.mark.parametrize("variant", ["naive", "api", "fused"])
+    def test_hlo_text_produced(self, variant):
+        text = aot.lower_model(CFG, variant, 4)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # parameters: all weights + hist + cands
+        n_params = len(flatten_spec(CFG)) + 2
+        assert text.count("parameter(") >= n_params
+
+    def test_hlo_has_no_giant_constants(self):
+        """Weights are runtime parameters, not baked constants — the HLO
+        text must stay small (the whole point of the weights.bin split)."""
+        text = aot.lower_model(CFG, "api", 4)
+        assert len(text) < 2_000_000, f"HLO text {len(text)} bytes"
+
+    def test_scan_vs_unroll_structure(self):
+        """The api variant scans layers (one while loop); naive unrolls
+        (bigger graph) — the ONNX-verbosity pathology is real in the IR."""
+        api = aot.lower_model(CFG, "api", 4)
+        naive = aot.lower_model(CFG, "naive", 4)
+        assert "while" in api
+        assert len(naive) > len(api)
+
+
+class TestWeightsBin:
+    def test_save_and_size(self):
+        params = init_params(CFG)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "w.bin")
+            nbytes = save_weights_bin(CFG, params, path)
+            assert os.path.getsize(path) == nbytes
+            expect = sum(
+                4 * int(np.prod(s)) for _, s in flatten_spec(CFG)
+            )
+            assert nbytes == expect
+
+    def test_byte_order_little_endian_f32(self):
+        params = init_params(CFG)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "w.bin")
+            save_weights_bin(CFG, params, path)
+            raw = np.fromfile(path, dtype="<f4")
+            # first tensor in canonical order is block0.qkv_w
+            first = np.asarray(params["block0.qkv_w"]).ravel()
+            np.testing.assert_array_equal(raw[: first.size], first)
+
+
+class TestTestVectors:
+    def test_container_format(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "tv.bin")
+            a = np.arange(6, dtype=np.float32).reshape(2, 3)
+            aot.write_testvector(path, [("x", a)])
+            raw = open(path, "rb").read()
+            magic, version, count = struct.unpack("<III", raw[:12])
+            assert magic == aot.TV_MAGIC
+            assert version == 1 and count == 1
+            # name
+            (nlen,) = struct.unpack("<I", raw[12:16])
+            assert raw[16 : 16 + nlen] == b"x"
+
+    def test_values_roundtrip_via_numpy(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "tv.bin")
+            a = np.random.RandomState(0).randn(4, 5).astype(np.float32)
+            aot.write_testvector(path, [("t", a)])
+            raw = open(path, "rb").read()
+            data = np.frombuffer(raw[-a.nbytes:], dtype="<f4").reshape(4, 5)
+            np.testing.assert_array_equal(data, a)
+
+
+class TestManifestBuild:
+    def test_full_tiny_build(self):
+        """Run the real aot main on tiny into a temp dir and check the
+        manifest is complete + self-consistent."""
+        with tempfile.TemporaryDirectory() as d:
+            aot.main(["--out-dir", d, "--scenarios", "tiny", "--testvectors", "1"])
+            manifest = json.load(open(os.path.join(d, "manifest.json")))
+            assert "tiny" in manifest["scenarios"]
+            sc = manifest["scenarios"]["tiny"]
+            assert os.path.exists(os.path.join(d, sc["weights_file"]))
+            assert sc["weights_bytes"] == os.path.getsize(os.path.join(d, sc["weights_file"]))
+            # engines: naive@native + api/fused at both profiles = 5
+            entries = [e for e in manifest["models"] if e["scenario"] == "tiny"]
+            assert len(entries) == 5
+            for e in entries:
+                assert os.path.exists(os.path.join(d, e["path"]))
+                assert e["flops"] == model_flops(CFG, e["m"])
+            tvs = [t for t in manifest["testvectors"] if t["scenario"] == "tiny"]
+            assert len(tvs) == 5  # one per engine
+            for t in tvs:
+                assert os.path.exists(os.path.join(d, t["path"]))
+
+    def test_incremental_merge_preserves_other_scenarios(self):
+        with tempfile.TemporaryDirectory() as d:
+            aot.main(["--out-dir", d, "--scenarios", "tiny", "--testvectors", "0",
+                      "--variants", "api"])
+            aot.main(["--out-dir", d, "--scenarios", "tiny", "--testvectors", "0",
+                      "--variants", "fused"])
+            manifest = json.load(open(os.path.join(d, "manifest.json")))
+            variants = {e["variant"] for e in manifest["models"]}
+            assert variants == {"api", "fused"}
+
+
+class TestExecutedOutputs:
+    def test_jit_fn_matches_eager(self):
+        params = init_params(CFG)
+        flat = flatten_params(CFG, params)
+        fn = jax.jit(make_flat_fn(CFG, "fused"))
+        k = jax.random.PRNGKey(1)
+        hist = jax.random.normal(k, (CFG.seq_len, CFG.d_model), jnp.float32)
+        cands = jax.random.normal(jax.random.fold_in(k, 1), (8, CFG.d_model), jnp.float32)
+        (jitted,) = fn(*flat, hist, cands)
+        (eager,) = make_flat_fn(CFG, "fused")(*flat, hist, cands)
+        np.testing.assert_allclose(jitted, eager, atol=1e-6, rtol=1e-5)

@@ -1,0 +1,65 @@
+"""Scenario/config invariants + the FLOP formulas (whose values the rust
+side re-derives and cross-checks through the manifest)."""
+
+import pytest
+
+from compile.config import (
+    SCENARIOS,
+    VARIANTS,
+    masked_attention_score_flops,
+    model_flops,
+)
+
+
+class TestScenarios:
+    def test_all_validate(self):
+        for cfg in SCENARIOS.values():
+            cfg.validate()
+
+    def test_paper_table2_shape(self):
+        base, long = SCENARIOS["base"], SCENARIOS["long"]
+        assert base.seq_len == 512 and base.native_m == 128
+        assert long.seq_len == 1024 and long.native_m == 512
+        assert base.layers_per_block == 12 and base.n_blocks == 2
+
+    def test_flops_orders_of_magnitude(self):
+        # paper Table 2: base 3.72e9, long 1.64e10 (we're within ~1.5x
+        # using D=128 instead of the implied ~100)
+        fb = model_flops(SCENARIOS["base"], 128)
+        fl = model_flops(SCENARIOS["long"], 512)
+        assert 1e9 < fb < 1e10
+        assert 1e10 < fl < 1e11
+
+    def test_tiny_flops_constant(self):
+        # the value hard-coded in rust config/flops.rs tests
+        assert model_flops(SCENARIOS["tiny"], 8) == 2_791_424
+
+    def test_block_len_divides(self):
+        for cfg in SCENARIOS.values():
+            assert cfg.block_len * cfg.n_blocks == cfg.seq_len
+            assert cfg.head_dim * cfg.n_heads == cfg.d_model
+
+    def test_profiles_cover_native(self):
+        for cfg in SCENARIOS.values():
+            assert cfg.native_m in cfg.m_profiles
+            assert list(cfg.m_profiles) == sorted(cfg.m_profiles)
+
+    def test_variants_list(self):
+        assert VARIANTS == ("naive", "api", "fused")
+
+
+class TestMaskedFlops:
+    def test_masked_below_dense(self):
+        cfg = SCENARIOS["long"]
+        m = 512
+        n = cfg.n_tokens(m)
+        dense = 4 * n * n * cfg.d_model
+        masked = masked_attention_score_flops(cfg, m)
+        assert masked < dense
+        # candidate x candidate region dead: roughly half at m = block_len
+        assert masked / dense < 0.6
+
+    def test_monotone_in_m(self):
+        cfg = SCENARIOS["bench"]
+        vals = [masked_attention_score_flops(cfg, m) for m in cfg.m_profiles]
+        assert vals == sorted(vals)

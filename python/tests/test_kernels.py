@@ -1,0 +1,251 @@
+"""L1 kernel correctness: pallas kernels vs the pure-jnp oracle,
+including hypothesis sweeps over shapes/dtypes — the CORE correctness
+signal for the FKE plug-ins."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import (
+    attention_tile_stats,
+    flash_attention,
+    _choose_block,
+)
+from compile.kernels.fused_ffn import fused_ln_ffn, ffn_vmem_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("hist,m", [(16, 4), (16, 8), (32, 4), (64, 16), (8, 8)])
+    @pytest.mark.parametrize("heads,hd", [(2, 8), (4, 16)])
+    def test_matches_ref(self, hist, m, heads, hd):
+        n = hist + m
+        q, k, v = (rand(i, (heads, n, hd)) for i in range(3))
+        temp = jnp.float32(0.9)
+        out_ref = ref.attention_ref(q, k, v, ref.mask_bias(hist, m), temp)
+        out = flash_attention(q, k, v, temp, hist_len=hist)
+        np.testing.assert_allclose(out, out_ref, atol=2e-6, rtol=2e-5)
+
+    def test_temperature_traced(self):
+        # temperature is a traced (learned) scalar — results must vary
+        hist, m, heads, hd = 16, 4, 2, 8
+        q, k, v = (rand(i + 10, (heads, hist + m, hd)) for i in range(3))
+        a = flash_attention(q, k, v, jnp.float32(0.5), hist_len=hist)
+        b = flash_attention(q, k, v, jnp.float32(2.0), hist_len=hist)
+        assert float(jnp.max(jnp.abs(a - b))) > 1e-3
+
+    def test_candidates_isolated(self):
+        """The SUMI guarantee: perturbing candidate j never changes
+        candidate i's output (they must not attend to each other)."""
+        hist, m, heads, hd = 16, 4, 2, 8
+        n = hist + m
+        q, k, v = (rand(i + 20, (heads, n, hd)) for i in range(3))
+        temp = jnp.float32(1.0)
+        base = flash_attention(q, k, v, temp, hist_len=hist)
+        # perturb candidate 3 (row hist+3) in k and v
+        k2 = k.at[:, hist + 3, :].add(10.0)
+        v2 = v.at[:, hist + 3, :].add(10.0)
+        pert = flash_attention(q, k2, v2, temp, hist_len=hist)
+        # candidates 0..2 and all history rows unchanged
+        np.testing.assert_allclose(
+            pert[:, : hist + 3, :], base[:, : hist + 3, :], atol=1e-6
+        )
+        # candidate 3 itself changes (it sees its own k/v)
+        assert float(jnp.max(jnp.abs(pert[:, hist + 3] - base[:, hist + 3]))) > 1e-3
+
+    def test_history_causal(self):
+        """Perturbing a future history token must not change earlier rows."""
+        hist, m, heads, hd = 16, 4, 2, 8
+        n = hist + m
+        q, k, v = (rand(i + 30, (heads, n, hd)) for i in range(3))
+        temp = jnp.float32(1.0)
+        base = flash_attention(q, k, v, temp, hist_len=hist)
+        k2 = k.at[:, 10, :].add(5.0)
+        v2 = v.at[:, 10, :].add(5.0)
+        pert = flash_attention(q, k2, v2, temp, hist_len=hist)
+        np.testing.assert_allclose(pert[:, :10, :], base[:, :10, :], atol=1e-6)
+
+    def test_explicit_block_size(self):
+        hist, m, heads, hd = 16, 8, 2, 8
+        q, k, v = (rand(i + 40, (heads, hist + m, hd)) for i in range(3))
+        temp = jnp.float32(1.0)
+        ref_out = ref.attention_ref(q, k, v, ref.mask_bias(hist, m), temp)
+        for block in (4, 8):
+            out = flash_attention(q, k, v, temp, hist_len=hist, block=block)
+            np.testing.assert_allclose(out, ref_out, atol=2e-6, rtol=2e-5)
+
+    def test_rejects_bad_block(self):
+        q = k = v = jnp.zeros((1, 20, 8))
+        with pytest.raises(AssertionError):
+            flash_attention(q, k, v, jnp.float32(1.0), hist_len=16, block=8)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        hist_tiles=st.integers(1, 4),
+        m_tiles=st.integers(1, 3),
+        block=st.sampled_from([4, 8]),
+        heads=st.integers(1, 3),
+        hd=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shape_sweep(self, hist_tiles, m_tiles, block, heads, hd, seed):
+        hist, m = hist_tiles * block, m_tiles * block
+        n = hist + m
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 3)
+        q, k, v = (jax.random.normal(kk, (heads, n, hd), jnp.float32) for kk in ks)
+        temp = jnp.float32(0.5 + (seed % 100) / 50.0)
+        out = flash_attention(q, k, v, temp, hist_len=hist, block=block)
+        expect = ref.attention_ref(q, k, v, ref.mask_bias(hist, m), temp)
+        np.testing.assert_allclose(out, expect, atol=5e-6, rtol=5e-5)
+
+    def test_tile_stats_accounting(self):
+        s = attention_tile_stats(16, 4)
+        assert s == {"block": 4, "visited_tiles": 15, "total_tiles": 25,
+                     "flop_fraction": 0.6}
+        # more candidates -> lower visited fraction (the mask-aware win)
+        f1 = attention_tile_stats(512, 128)["flop_fraction"]
+        f2 = attention_tile_stats(512, 512)["flop_fraction"]
+        assert f2 < f1
+
+    def test_choose_block_divides(self):
+        for hist, m in [(16, 4), (512, 128), (512, 1024), (64, 16)]:
+            b = _choose_block(hist, m)
+            assert hist % b == 0 and m % b == 0 and b <= 128
+
+
+class TestFusedFfn:
+    @pytest.mark.parametrize("n,d,f", [(8, 16, 64), (20, 16, 64), (32, 32, 128)])
+    def test_matches_ref(self, n, d, f):
+        x = rand(1, (n, d))
+        lns, lnb = rand(2, (d,)) * 0.1 + 1.0, rand(3, (d,)) * 0.1
+        w1, b1 = rand(4, (d, f), 0.2), rand(5, (f,), 0.1)
+        w2, b2 = rand(6, (f, d), 0.2), rand(7, (d,), 0.1)
+        out = fused_ln_ffn(x, lns, lnb, w1, b1, w2, b2)
+        expect = ref.ln_ffn_ref(x, lns, lnb, w1, b1, w2, b2)
+        np.testing.assert_allclose(out, expect, atol=2e-6, rtol=2e-5)
+
+    def test_includes_residual(self):
+        n, d, f = 8, 16, 64
+        x = rand(11, (n, d))
+        zeros_w1 = jnp.zeros((d, f))
+        out = fused_ln_ffn(x, jnp.ones(d), jnp.zeros(d), zeros_w1,
+                           jnp.zeros(f), jnp.zeros((f, d)), jnp.zeros(d))
+        # zero FFN weights: gelu(0)=0 -> output == residual input... plus b2=0
+        np.testing.assert_allclose(out, x, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n_tiles=st.integers(1, 6),
+        block=st.sampled_from([2, 4, 8]),
+        d=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_rows_sweep(self, n_tiles, block, d, seed):
+        n, f = n_tiles * block, 4 * d
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 7)
+        x = jax.random.normal(ks[0], (n, d), jnp.float32)
+        lns = 1.0 + 0.1 * jax.random.normal(ks[1], (d,), jnp.float32)
+        lnb = 0.1 * jax.random.normal(ks[2], (d,), jnp.float32)
+        w1 = 0.2 * jax.random.normal(ks[3], (d, f), jnp.float32)
+        b1 = 0.1 * jax.random.normal(ks[4], (f,), jnp.float32)
+        w2 = 0.2 * jax.random.normal(ks[5], (f, d), jnp.float32)
+        b2 = 0.1 * jax.random.normal(ks[6], (d,), jnp.float32)
+        out = fused_ln_ffn(x, lns, lnb, w1, b1, w2, b2, block_n=block)
+        expect = ref.ln_ffn_ref(x, lns, lnb, w1, b1, w2, b2)
+        np.testing.assert_allclose(out, expect, atol=5e-6, rtol=5e-5)
+
+    def test_vmem_budget(self):
+        # D=128 F=512 block 128: ~1.3 MB, far under 16 MB VMEM
+        assert ffn_vmem_bytes(1024, 128, 512) < 16 << 20
+
+
+class TestFusedHead:
+    def _weights(self, nb, d, f, t, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        nbd = nb * d
+        return dict(
+            gate_w=0.2 * jax.random.normal(ks[0], (nbd, nbd), jnp.float32),
+            gate_b=0.1 * jax.random.normal(ks[1], (nbd,), jnp.float32),
+            exp_w1=0.2 * jax.random.normal(ks[2], (d, f), jnp.float32),
+            exp_b1=0.1 * jax.random.normal(ks[3], (f,), jnp.float32),
+            exp_w2=0.2 * jax.random.normal(ks[4], (f, t), jnp.float32),
+            exp_b2=0.1 * jax.random.normal(ks[5], (t,), jnp.float32),
+        )
+
+    def _ref(self, cat, w, nb, d):
+        m = cat.shape[0]
+        logits = cat @ w["gate_w"] + w["gate_b"]
+        gates = jax.nn.softmax(logits.reshape(m, nb, d), axis=1)
+        fused = jnp.sum(gates * cat.reshape(m, nb, d), axis=1)
+        h = jax.nn.gelu(fused @ w["exp_w1"] + w["exp_b1"], approximate=False)
+        return jax.nn.sigmoid(h @ w["exp_w2"] + w["exp_b2"])
+
+    @pytest.mark.parametrize("m,nb,d,f,t", [(8, 2, 16, 64, 3), (16, 2, 32, 128, 3), (4, 3, 8, 32, 2)])
+    def test_matches_ref(self, m, nb, d, f, t):
+        from compile.kernels.fused_head import fused_head
+        w = self._weights(nb, d, f, t)
+        cat = rand(9, (m, nb * d))
+        out = fused_head(cat, w["gate_w"], w["gate_b"], w["exp_w1"],
+                         w["exp_b1"], w["exp_w2"], w["exp_b2"],
+                         n_blocks=nb, d_model=d)
+        np.testing.assert_allclose(out, self._ref(cat, w, nb, d), atol=2e-6, rtol=2e-5)
+
+    def test_outputs_are_probabilities(self):
+        from compile.kernels.fused_head import fused_head
+        w = self._weights(2, 16, 64, 3)
+        cat = rand(10, (8, 32), 3.0)
+        out = fused_head(cat, w["gate_w"], w["gate_b"], w["exp_w1"],
+                         w["exp_b1"], w["exp_w2"], w["exp_b2"],
+                         n_blocks=2, d_model=16)
+        assert bool(jnp.all((out >= 0) & (out <= 1)))
+
+    @settings(max_examples=10, deadline=None)
+    @given(m_tiles=st.integers(1, 4), block=st.sampled_from([2, 4]),
+           seed=st.integers(0, 2**16))
+    def test_hypothesis_row_sweep(self, m_tiles, block, seed):
+        from compile.kernels.fused_head import fused_head
+        nb, d, f, t = 2, 8, 32, 3
+        m = m_tiles * block
+        w = self._weights(nb, d, f, t, seed=seed)
+        cat = jax.random.normal(jax.random.PRNGKey(seed + 1), (m, nb * d), jnp.float32)
+        out = fused_head(cat, w["gate_w"], w["gate_b"], w["exp_w1"],
+                         w["exp_b1"], w["exp_w2"], w["exp_b2"],
+                         n_blocks=nb, d_model=d, block_m=block)
+        np.testing.assert_allclose(out, self._ref(cat, w, nb, d), atol=5e-6, rtol=5e-5)
+
+    def test_vmem_budget(self):
+        from compile.kernels.fused_head import head_vmem_bytes
+        assert head_vmem_bytes(2, 128, 512, 3) < 16 << 20
+
+
+class TestMaskSemantics:
+    def test_sumi_mask_structure(self):
+        m = np.asarray(ref.sumi_mask(4, 2))
+        # history causal
+        assert m[0, 0] and not m[0, 1]
+        assert m[3, :4].all()
+        # history never sees candidates
+        assert not m[:4, 4:].any()
+        # candidates see all history + self only
+        assert m[4, :4].all() and m[4, 4] and not m[4, 5]
+        assert m[5, :4].all() and m[5, 5] and not m[5, 4]
+
+    def test_every_row_has_visible_key(self):
+        for hist, m in [(4, 2), (16, 8), (1, 1)]:
+            mask = np.asarray(ref.sumi_mask(hist, m))
+            assert mask.any(axis=1).all()
+
+    def test_bias_values(self):
+        b = np.asarray(ref.mask_bias(2, 1))
+        assert b[0, 0] == 0.0
+        assert b[0, 1] == ref.NEG_BIAS

@@ -1,0 +1,177 @@
+"""L2 model correctness: the three engine variants vs the oracle,
+model-level semantics (SUMI isolation, gating, multi-task heads), and
+shape sweeps across scenarios/profiles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import SCENARIOS
+from compile.kernels.ref import model_ref
+from compile.model import make_flat_fn, model_forward
+from compile.naive import model_forward_naive
+from compile.params import (
+    flatten_params,
+    flatten_spec,
+    init_params,
+    unflatten_params,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = SCENARIOS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG)
+
+
+def inputs(m, seed=0):
+    k = jax.random.PRNGKey(seed)
+    hist = jax.random.normal(k, (CFG.seq_len, CFG.d_model), jnp.float32)
+    cands = jax.random.normal(jax.random.fold_in(k, 1), (m, CFG.d_model), jnp.float32)
+    return hist, cands
+
+
+class TestVariantEquivalence:
+    @pytest.mark.parametrize("m", [4, 8])
+    def test_api_matches_ref(self, params, m):
+        hist, cands = inputs(m)
+        np.testing.assert_allclose(
+            model_forward(CFG, params, hist, cands, "api"),
+            model_ref(CFG, params, hist, cands),
+            atol=5e-6, rtol=5e-5,
+        )
+
+    @pytest.mark.parametrize("m", [4, 8])
+    def test_fused_matches_ref(self, params, m):
+        hist, cands = inputs(m)
+        np.testing.assert_allclose(
+            model_forward(CFG, params, hist, cands, "fused"),
+            model_ref(CFG, params, hist, cands),
+            atol=5e-6, rtol=5e-5,
+        )
+
+    @pytest.mark.parametrize("m", [4, 8])
+    def test_naive_matches_ref(self, params, m):
+        hist, cands = inputs(m)
+        np.testing.assert_allclose(
+            model_forward_naive(CFG, params, hist, cands),
+            model_ref(CFG, params, hist, cands),
+            atol=5e-6, rtol=5e-5,
+        )
+
+    def test_bench_scenario_variants_agree(self):
+        cfg = SCENARIOS["bench"]
+        p = init_params(cfg)
+        k = jax.random.PRNGKey(5)
+        hist = jax.random.normal(k, (cfg.seq_len, cfg.d_model), jnp.float32)
+        cands = jax.random.normal(jax.random.fold_in(k, 1), (16, cfg.d_model), jnp.float32)
+        r = model_ref(cfg, p, hist, cands)
+        for out in (
+            model_forward(cfg, p, hist, cands, "api"),
+            model_forward(cfg, p, hist, cands, "fused"),
+            model_forward_naive(cfg, p, hist, cands),
+        ):
+            np.testing.assert_allclose(out, r, atol=1e-5, rtol=1e-4)
+
+
+class TestModelSemantics:
+    def test_output_shape_and_range(self, params):
+        hist, cands = inputs(8)
+        out = model_ref(CFG, params, hist, cands)
+        assert out.shape == (8, CFG.n_tasks)
+        assert bool(jnp.all((out >= 0) & (out <= 1)))
+
+    def test_candidate_isolation_end_to_end(self, params):
+        """Scores of candidate i are independent of candidate j != i —
+        the SUMI property must survive the whole model, not just the
+        attention kernel."""
+        hist, cands = inputs(8, seed=3)
+        base = model_ref(CFG, params, hist, cands)
+        cands2 = cands.at[5].add(3.0)
+        pert = model_ref(CFG, params, hist, cands2)
+        np.testing.assert_allclose(pert[:5], base[:5], atol=1e-6)
+        np.testing.assert_allclose(pert[6:], base[6:], atol=1e-6)
+        assert float(jnp.max(jnp.abs(pert[5] - base[5]))) > 1e-4
+
+    def test_candidate_permutation_equivariance(self, params):
+        """Permuting candidates permutes scores identically."""
+        hist, cands = inputs(8, seed=4)
+        perm = jnp.array([3, 1, 7, 0, 5, 2, 6, 4])
+        out = model_ref(CFG, params, hist, cands)
+        out_p = model_ref(CFG, params, hist, cands[perm])
+        np.testing.assert_allclose(out_p, out[perm], atol=1e-5)
+
+    def test_history_affects_scores(self, params):
+        # non-uniform perturbation (uniform per-row shifts are invisible
+        # to LayerNorm — see test_uniform_history_shift_is_invariant)
+        hist, cands = inputs(8, seed=6)
+        a = model_ref(CFG, params, hist, cands)
+        b = model_ref(CFG, params, hist * 1.5 + 0.3, cands)
+        assert float(jnp.max(jnp.abs(a - b))) > 1e-4
+
+    def test_uniform_history_shift_is_invariant(self, params):
+        """LayerNorm makes per-row additive constants invisible, and
+        history reaches candidates only through LN'd K/V — a uniform
+        shift must NOT change scores (regression guard: if candidate
+        rows leaked the raw shift, this would fail)."""
+        hist, cands = inputs(8, seed=6)
+        a = model_ref(CFG, params, hist, cands)
+        b = model_ref(CFG, params, hist + 0.5, cands)
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-5
+
+    def test_blocks_see_different_history_halves(self, params):
+        """Perturbing the first history half changes scores differently
+        than the second half (the block split is real)."""
+        hist, cands = inputs(8, seed=7)
+        lb = CFG.block_len
+        base = model_ref(CFG, params, hist, cands)
+        a = model_ref(CFG, params, hist.at[:lb].multiply(1.7), cands)
+        b = model_ref(CFG, params, hist.at[lb:].multiply(1.7), cands)
+        assert float(jnp.max(jnp.abs(a - base))) > 1e-5
+        assert float(jnp.max(jnp.abs(b - base))) > 1e-5
+        assert float(jnp.max(jnp.abs(a - b))) > 1e-5
+
+
+class TestParams:
+    def test_flatten_roundtrip(self, params):
+        flat = flatten_params(CFG, params)
+        back = unflatten_params(CFG, flat)
+        assert set(back) == set(params)
+        for k in params:
+            np.testing.assert_array_equal(back[k], params[k])
+
+    def test_spec_shapes_match_init(self, params):
+        for name, shape in flatten_spec(CFG):
+            assert tuple(params[name].shape) == tuple(shape), name
+
+    def test_deterministic_init(self):
+        a = init_params(CFG)
+        b = init_params(CFG)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+    def test_different_scenarios_different_weights(self):
+        a = init_params(SCENARIOS["tiny"])
+        # same shapes would be needed to compare; just check seeds differ
+        assert SCENARIOS["tiny"].seed != SCENARIOS["bench"].seed
+
+    def test_flat_fn_signature(self, params):
+        fn = make_flat_fn(CFG, "api")
+        flat = flatten_params(CFG, params)
+        hist, cands = inputs(4)
+        (out,) = fn(*flat, hist, cands)
+        np.testing.assert_allclose(
+            out, model_ref(CFG, params, hist, cands), atol=5e-6, rtol=5e-5
+        )
+
+    def test_flat_fn_naive_same_weights(self, params):
+        """All variants consume the identical flat tuple."""
+        flat = flatten_params(CFG, params)
+        hist, cands = inputs(4)
+        outs = [make_flat_fn(CFG, v)(*flat, hist, cands)[0] for v in ("naive", "api", "fused")]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], atol=5e-6, rtol=5e-5)

@@ -1,0 +1,115 @@
+//! Table 5 — DSO ablation under simulated mixed-traffic workloads:
+//! Default (Implicit Shape / pad-to-max) vs DSO (Explicit Shape /
+//! descending batch split), candidate counts uniform over the scenario's
+//! profiles.
+//!
+//! Default scenario: `bench` (M uniform over {16,32,64,128}); run with
+//! `--scenario long` after `make artifacts-full` for the paper's
+//! {128,256,512,1024} @ L=1024.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flame::benchkit::{table, BenchArgs, Table};
+use flame::config::{CacheMode, DsoMode, StackConfig, WorkloadConfig};
+use flame::manifest::Manifest;
+use flame::runtime::Runtime;
+use flame::server::pipeline::StackBuilder;
+use flame::workload::Generator;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scenario = args.scenario.clone().unwrap_or_else(|| "bench".to_string());
+    let seconds = (args.measure_time.as_secs_f64() * 2.0).max(6.0);
+    let workers = 4;
+
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) if m.scenarios.contains_key(&scenario) => m,
+        _ => {
+            eprintln!("bench_dso: artifacts for '{scenario}' missing — run `make artifacts`; skipping");
+            return;
+        }
+    };
+
+    println!("\nDSO ablation — scenario '{scenario}', mixed M uniform over profiles, {seconds:.0}s per arm");
+    let mut rows = Vec::new();
+    for (label, mode) in [
+        ("Default (Implicit Shape)", DsoMode::ImplicitPad),
+        ("DSO (Explicit Shape)", DsoMode::Explicit),
+    ] {
+        if !args.wants(label) {
+            continue;
+        }
+        let rt = Runtime::new().expect("pjrt");
+        let mut cfg = StackConfig::default();
+        cfg.pda.cache_mode = CacheMode::Async; // feature path constant
+        cfg.dso.mode = mode;
+        cfg.server.pipeline_workers = workers;
+
+        eprintln!("  [{label}] building stack ...");
+        let stack = Arc::new(
+            StackBuilder::new(&scenario, "fused", cfg.clone())
+                .build(&rt, &manifest)
+                .expect("stack"),
+        );
+        let profiles = stack.orchestrator.profiles().to_vec();
+        let wl = WorkloadConfig {
+            catalog_size: 100_000,
+            zipf_theta: 1.0,
+            n_users: 10_000,
+            candidate_mix: WorkloadConfig::uniform_mix(&profiles),
+            arrival_rate: None,
+            seed: 55,
+        };
+        let mut gen = Generator::new(&wl, stack.model_cfg.seq_len);
+        let requests = gen.batch(100_000);
+
+        stack.drive_closed_loop(&requests[..32], workers, Duration::from_secs(60));
+        stack.query.drain_refreshes();
+        stack.metrics.overall.reset();
+        let pairs0 = stack.metrics.pairs();
+
+        let t0 = std::time::Instant::now();
+        stack.drive_closed_loop(&requests[32..], workers, Duration::from_secs_f64(seconds));
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let pairs = (stack.metrics.pairs() - pairs0) as f64;
+        let snap = stack.metrics.snapshot_over(elapsed);
+        rows.push((
+            label,
+            pairs / elapsed,
+            snap.overall_mean_ms,
+            snap.overall_p99_ms,
+            stack.orchestrator.waste_fraction(),
+        ));
+        eprintln!(
+            "  [{label}] {:.1}k pairs/s, {:.2} ms mean, waste {:.0}%",
+            pairs / elapsed / 1e3,
+            snap.overall_mean_ms,
+            stack.orchestrator.waste_fraction() * 100.0
+        );
+    }
+
+    let mut t = Table::new(
+        &format!("Table 5 (reproduced) — DSO ablation under mixed traffic, scenario '{scenario}'"),
+        &["Ablation Study", "Throughput", "Overall Latency", "P99 Latency", "Padded Rows"],
+    );
+    for (label, tput, mean, p99, waste) in &rows {
+        t.row(&[
+            label.to_string(),
+            table::kthroughput(*tput),
+            table::ms(*mean),
+            table::ms(*p99),
+            format!("{:.0} %", waste * 100.0),
+        ]);
+    }
+    if rows.len() == 2 {
+        t.footnote(&format!(
+            "DSO vs default: {} throughput, {} latency (paper: 1.3x / 2.3x)",
+            table::ratio(rows[1].1, rows[0].1),
+            table::ratio(rows[0].2, rows[1].2),
+        ));
+    }
+    t.footnote("throughput in thousands of user-item pairs/s");
+    t.print();
+}

@@ -1,0 +1,118 @@
+//! Table 4 + Fig 12 — FKE ablation: engine-construction levels
+//! (naive ≙ ONNX conversion, api ≙ TensorRT API, fused ≙ + kernel
+//! fusion) measured on pure model compute at the scenario's native M.
+//!
+//! Default runs the `bench` scenario (CI-speed); pass
+//! `--scenario base` / `--scenario long` after `make artifacts-full` for
+//! paper-scale rows. `--series` prints the Fig 12 per-profile series.
+//!
+//! Absolute numbers are CPU-PJRT, not A100/TensorRT — EXPERIMENTS.md
+//! compares *shape* (ordering + rough factors), per DESIGN.md.
+
+use flame::benchkit::{table, Bencher, Table};
+use flame::manifest::Manifest;
+use flame::runtime::{EngineKey, Runtime};
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let scenario = b.args.scenario.clone().unwrap_or_else(|| "bench".to_string());
+
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) if m.scenarios.contains_key(&scenario) => m,
+        _ => {
+            eprintln!("bench_fke: artifacts for '{scenario}' not built — run `make artifacts` (or artifacts-full for base/long); skipping");
+            return;
+        }
+    };
+    let rt = Runtime::new().expect("pjrt");
+    let cfg = manifest.scenario(&scenario).unwrap().config.clone();
+    let weights = rt.upload_weights(&manifest, &scenario).expect("weights");
+    let m = cfg.native_m;
+
+    println!("\nFKE ablation — scenario '{scenario}' (L={}, native M={m}, {} layers x {} blocks, D={})",
+        cfg.seq_len, cfg.layers_per_block, cfg.n_blocks, cfg.d_model);
+
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new(); // label, tput, mean ms, p99 ms
+    for variant in ["naive", "api", "fused"] {
+        if manifest.find(&scenario, variant, m).is_err() {
+            eprintln!("  (skipping {variant}: not lowered at m{m})");
+            continue;
+        }
+        let key = EngineKey::new(&scenario, variant, m);
+        eprintln!("  compiling {} ...", key.label());
+        let engine = rt
+            .load_engine_with_weights(&manifest, &key, std::sync::Arc::clone(&weights))
+            .expect("engine");
+        let hist: Vec<f32> = (0..engine.hist_len()).map(|i| ((i % 31) as f32 / 31.0) - 0.5).collect();
+        let cands: Vec<f32> = (0..engine.cands_len()).map(|i| ((i % 29) as f32 / 29.0) - 0.5).collect();
+
+        let label = flame::fke::Variant::parse(variant).unwrap().paper_label();
+        let r = b
+            .bench_with_items(&format!("fke/{scenario}/{variant}"), Some(m as f64), || {
+                let out = engine.run(&hist, &cands).expect("run");
+                std::hint::black_box(out);
+            })
+            .expect("bench ran");
+        rows.push((
+            label.to_string(),
+            r.throughput().unwrap_or(0.0),
+            r.mean.as_secs_f64() * 1e3,
+            r.p99.as_secs_f64() * 1e3,
+        ));
+    }
+
+    // Table 4 layout
+    let mut t = Table::new(
+        &format!("Table 4 (reproduced) — FKE ablation, scenario '{scenario}' (M={m})"),
+        &["Ablation Study", "Throughput", "Compute Latency", "P99 Compute Latency"],
+    );
+    for (label, tput, mean, p99) in &rows {
+        t.row(&[
+            label.clone(),
+            table::kthroughput(*tput),
+            table::ms(*mean),
+            table::ms(*p99),
+        ]);
+    }
+    if rows.len() >= 2 {
+        t.footnote(&format!(
+            "speedup {} over baseline; throughput gain {} (paper: 4.6-6.1x / 4.7-6.3x on A100+TensorRT)",
+            table::ratio(rows[0].2, rows[rows.len() - 1].2),
+            table::ratio(rows[rows.len() - 1].1, rows[0].1),
+        ));
+    }
+    t.footnote("throughput in thousands of user-item pairs/s; CPU-PJRT testbed — compare shape, not absolutes");
+    t.print();
+
+    // Fig 12 series: per-profile throughput for api vs fused
+    if b.args.series {
+        println!("\nFig 12 (reproduced) — throughput series across candidate profiles");
+        for variant in ["api", "fused"] {
+            let profiles = manifest.profiles_for(&scenario, variant);
+            print!("  {variant:<6}:");
+            for pm in profiles {
+                let key = EngineKey::new(&scenario, variant, pm);
+                let engine = rt
+                    .load_engine_with_weights(&manifest, &key, std::sync::Arc::clone(&weights))
+                    .expect("engine");
+                let hist: Vec<f32> = vec![0.1; engine.hist_len()];
+                let cands: Vec<f32> = vec![0.05; engine.cands_len()];
+                if let Some(r) = b.bench_with_items(
+                    &format!("fig12/{scenario}/{variant}/m{pm}"),
+                    Some(pm as f64),
+                    || {
+                        std::hint::black_box(engine.run(&hist, &cands).expect("run"));
+                    },
+                ) {
+                    print!("  m{pm}={:.1}k", r.throughput().unwrap_or(0.0) / 1e3);
+                }
+            }
+            println!();
+        }
+    }
+
+    // the paper's amortization observation: pairs/s grows with M
+    if rows.len() >= 2 {
+        println!("\nnote: throughput counts user-item pairs — larger M amortizes history compute (paper §4.2.2).");
+    }
+}

@@ -1,0 +1,198 @@
+//! Fig 13 — overall staged comparison: the three modules' traffic
+//! scenarios side by side, each arm measured on the full stack.
+//!
+//! * PDA stage  : fixed-M Zipf traffic, baseline vs full PDA
+//! * FKE stage  : pure compute, naive vs fused engines
+//! * DSO stage  : mixed-M traffic, implicit vs explicit shape
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flame::benchkit::{table, BenchArgs, Table};
+use flame::config::{CacheMode, DsoMode, PdaConfig, StackConfig, WorkloadConfig};
+use flame::manifest::Manifest;
+use flame::runtime::{EngineKey, Runtime};
+use flame::server::pipeline::StackBuilder;
+use flame::workload::Generator;
+
+/// Drive the full stack and return (pairs/s, mean ms).
+fn drive_stack(
+    manifest: &Manifest,
+    scenario: &str,
+    cfg: StackConfig,
+    mix: Vec<(usize, f64)>,
+    seconds: f64,
+) -> (f64, f64) {
+    let workers = cfg.server.pipeline_workers;
+    let rt = Runtime::new().expect("pjrt");
+    let stack = Arc::new(
+        StackBuilder::new(scenario, "fused", cfg).build(&rt, manifest).expect("stack"),
+    );
+    let wl = WorkloadConfig {
+        catalog_size: 100_000,
+        zipf_theta: 1.0,
+        n_users: 10_000,
+        candidate_mix: mix,
+        arrival_rate: None,
+        seed: 33,
+    };
+    let mut gen = Generator::new(&wl, stack.model_cfg.seq_len);
+    let requests = gen.batch(100_000);
+    stack.drive_closed_loop(&requests[..32], workers, Duration::from_secs(60));
+    stack.query.drain_refreshes();
+    stack.metrics.overall.reset();
+    let pairs0 = stack.metrics.pairs();
+    let t0 = std::time::Instant::now();
+    stack.drive_closed_loop(&requests[32..], workers, Duration::from_secs_f64(seconds));
+    let elapsed = t0.elapsed().as_secs_f64();
+    let snap = stack.metrics.snapshot_over(elapsed);
+    (((stack.metrics.pairs() - pairs0) as f64) / elapsed, snap.overall_mean_ms)
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scenario = args.scenario.clone().unwrap_or_else(|| "bench".to_string());
+    let seconds = (args.measure_time.as_secs_f64()).max(4.0);
+
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) if m.scenarios.contains_key(&scenario) => m,
+        _ => {
+            eprintln!("bench_overall: artifacts missing — run `make artifacts`; skipping");
+            return;
+        }
+    };
+    let model_cfg = manifest.scenario(&scenario).unwrap().config.clone();
+    let native = model_cfg.native_m;
+
+    let mut t = Table::new(
+        &format!("Fig 13 (reproduced) — overall staged comparison, scenario '{scenario}'"),
+        &["Traffic scenario", "Arm", "Throughput", "Mean Latency", "Gain"],
+    );
+
+    // ---- PDA stage ----
+    if args.wants("pda") {
+        eprintln!("[overall] PDA stage ...");
+        // low CPU utilization like the paper's Table 3 methodology, so
+        // feature latency is exposed rather than overlapped (see
+        // bench_pda.rs for the full rationale)
+        let pda_workers = (flame::pda::numa::num_cpus() / 2).max(1);
+        let base_cfg = {
+            let mut c = StackConfig::default();
+            c.pda = PdaConfig::baseline();
+            c.server.pipeline_workers = pda_workers;
+            c
+        };
+        let full_cfg = {
+            let mut c = StackConfig::default();
+            c.server.pipeline_workers = pda_workers;
+            c
+        };
+        let (t_base, l_base) =
+            drive_stack(&manifest, &scenario, base_cfg, vec![(native, 1.0)], seconds);
+        let (t_full, l_full) =
+            drive_stack(&manifest, &scenario, full_cfg, vec![(native, 1.0)], seconds);
+        t.row(&[
+            "PDA (bypass, fixed M)".into(),
+            "baseline".into(),
+            table::kthroughput(t_base),
+            table::ms(l_base),
+            String::new(),
+        ]);
+        t.row(&[
+            String::new(),
+            "full PDA".into(),
+            table::kthroughput(t_full),
+            table::ms(l_full),
+            format!("{} tput, {} lat", table::ratio(t_full, t_base), table::ratio(l_base, l_full)),
+        ]);
+    }
+
+    // ---- FKE stage (pure compute, naive vs fused) ----
+    if args.wants("fke") {
+        eprintln!("[overall] FKE stage ...");
+        let rt = Runtime::new().expect("pjrt");
+        let weights = rt.upload_weights(&manifest, &scenario).expect("weights");
+        let mut fke_rows = Vec::new();
+        for variant in ["naive", "fused"] {
+            if manifest.find(&scenario, variant, native).is_err() {
+                continue;
+            }
+            let engine = rt
+                .load_engine_with_weights(
+                    &manifest,
+                    &EngineKey::new(&scenario, variant, native),
+                    Arc::clone(&weights),
+                )
+                .expect("engine");
+            let hist = vec![0.1f32; engine.hist_len()];
+            let cands = vec![0.05f32; engine.cands_len()];
+            // quick timed loop
+            for _ in 0..3 {
+                let _ = engine.run(&hist, &cands);
+            }
+            let t0 = std::time::Instant::now();
+            let mut iters = 0;
+            while t0.elapsed().as_secs_f64() < seconds / 2.0 {
+                let _ = engine.run(&hist, &cands).expect("run");
+                iters += 1;
+            }
+            let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+            fke_rows.push((variant, native as f64 / (mean_ms / 1e3), mean_ms));
+        }
+        for (i, (variant, tput, mean)) in fke_rows.iter().enumerate() {
+            let gain = if i == fke_rows.len() - 1 && fke_rows.len() > 1 {
+                format!(
+                    "{} tput, {} lat",
+                    table::ratio(*tput, fke_rows[0].1),
+                    table::ratio(fke_rows[0].2, *mean)
+                )
+            } else {
+                String::new()
+            };
+            t.row(&[
+                if i == 0 { "FKE (pure compute)".into() } else { String::new() },
+                variant.to_string(),
+                table::kthroughput(*tput),
+                table::ms(*mean),
+                gain,
+            ]);
+        }
+    }
+
+    // ---- DSO stage ----
+    if args.wants("dso") {
+        eprintln!("[overall] DSO stage ...");
+        let mix = WorkloadConfig::uniform_mix(&model_cfg.m_profiles);
+        let implicit_cfg = {
+            let mut c = StackConfig::default();
+            c.dso.mode = DsoMode::ImplicitPad;
+            c.pda.cache_mode = CacheMode::Async;
+            c
+        };
+        let explicit_cfg = {
+            let mut c = StackConfig::default();
+            c.dso.mode = DsoMode::Explicit;
+            c.pda.cache_mode = CacheMode::Async;
+            c
+        };
+        let (t_im, l_im) = drive_stack(&manifest, &scenario, implicit_cfg, mix.clone(), seconds);
+        let (t_ex, l_ex) = drive_stack(&manifest, &scenario, explicit_cfg, mix, seconds);
+        t.row(&[
+            "DSO (mixed M)".into(),
+            "implicit shape".into(),
+            table::kthroughput(t_im),
+            table::ms(l_im),
+            String::new(),
+        ]);
+        t.row(&[
+            String::new(),
+            "explicit shape".into(),
+            table::kthroughput(t_ex),
+            table::ms(l_ex),
+            format!("{} tput, {} lat", table::ratio(t_ex, t_im), table::ratio(l_im, l_ex)),
+        ]);
+    }
+
+    t.footnote("paper gains: PDA 1.9x/1.7x, FKE 6.3x/6.1x (long), DSO 1.3x/2.3x — CPU testbed compares shape");
+    t.print();
+}

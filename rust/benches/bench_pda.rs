@@ -1,0 +1,135 @@
+//! Table 3 — PDA ablation on the full serving stack under Zipf bypass-
+//! style traffic: (-Cache,-MemOpt) / (+Cache,-MemOpt) / Full PDA.
+//!
+//! "Mem Opt" = NUMA-affinity worker pinning + staging arenas (the
+//! pinned-transfer analogue). Metrics are the paper's columns:
+//! throughput (k user-item pairs/s), overall latency, P99, network MB/s.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flame::benchkit::{table, BenchArgs, Table};
+use flame::config::{PdaConfig, StackConfig, WorkloadConfig};
+use flame::manifest::Manifest;
+use flame::netsim::{Link, LinkConfig};
+use flame::runtime::Runtime;
+use flame::server::pipeline::StackBuilder;
+use flame::workload::Generator;
+
+struct Arm {
+    label: &'static str,
+    pda: PdaConfig,
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scenario = args.scenario.clone().unwrap_or_else(|| "bench".to_string());
+    let seconds = (args.measure_time.as_secs_f64() * 2.0).max(6.0);
+    // One worker per CPU core, minimum 1: the paper's Table 3 holds CPU
+    // load well below saturation (~16%), so feature latency is exposed
+    // rather than hidden behind compute overlap. Oversubscribing workers
+    // on a small host would mask exactly the effect being measured.
+    let workers = (flame::pda::numa::num_cpus() / 2).max(1);
+
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) if m.scenarios.contains_key(&scenario) => m,
+        _ => {
+            eprintln!("bench_pda: artifacts for '{scenario}' missing — run `make artifacts`; skipping");
+            return;
+        }
+    };
+
+    let arms = [
+        Arm { label: "-Cache, -Mem Opt", pda: PdaConfig::baseline() },
+        Arm { label: "+Cache, -Mem Opt", pda: PdaConfig::cache_only() },
+        Arm { label: "+Cache, +Mem Opt (Full PDA)", pda: PdaConfig::default() },
+    ];
+
+    println!("\nPDA ablation — scenario '{scenario}', {workers} pipeline workers, {seconds:.0}s per arm");
+    let mut rows = Vec::new();
+    for arm in &arms {
+        if !args.wants(arm.label) {
+            continue;
+        }
+        let rt = Runtime::new().expect("pjrt");
+        let mut cfg = StackConfig::default();
+        cfg.pda = arm.pda.clone();
+        cfg.server.pipeline_workers = workers;
+
+        let link = Arc::new(Link::new(LinkConfig::default()));
+        eprintln!("  [{}] building stack ...", arm.label);
+        let stack = Arc::new(
+            StackBuilder::new(&scenario, "fused", cfg.clone())
+                .with_link(Arc::clone(&link))
+                .build(&rt, &manifest)
+                .expect("stack"),
+        );
+
+        // fixed-M traffic (the PDA test isolates the feature path; the
+        // paper holds model load constant across arms)
+        let wl = WorkloadConfig {
+            catalog_size: 100_000,
+            zipf_theta: 1.0,
+            n_users: 10_000,
+            candidate_mix: vec![(stack.model_cfg.native_m.min(stack.orchestrator.max_profile()), 1.0)],
+            arrival_rate: None,
+            seed: 77,
+        };
+        let mut gen = Generator::new(&wl, stack.model_cfg.seq_len);
+        let requests = gen.batch(100_000);
+
+        // warmup (closed loop, one request in flight per worker)
+        stack.drive_closed_loop(&requests[..48], workers, Duration::from_secs(30));
+        stack.query.drain_refreshes();
+        stack.metrics.overall.reset();
+        let pairs0 = stack.metrics.pairs();
+        let bytes0 = link.bytes_total();
+
+        let t0 = std::time::Instant::now();
+        stack.drive_closed_loop(&requests[48..], workers, Duration::from_secs_f64(seconds));
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let pairs = (stack.metrics.pairs() - pairs0) as f64;
+        let mb_s = (link.bytes_total() - bytes0) as f64 / 1e6 / elapsed;
+        let snap = stack.metrics.snapshot_over(elapsed);
+        rows.push((
+            arm.label,
+            pairs / elapsed,
+            snap.overall_mean_ms,
+            snap.overall_p99_ms,
+            mb_s,
+            stack.query.cache().stats.hit_rate(),
+        ));
+        eprintln!(
+            "  [{}] {:.1}k pairs/s, {:.2} ms mean, hit {:.0}%",
+            arm.label,
+            pairs / elapsed / 1e3,
+            snap.overall_mean_ms,
+            stack.query.cache().stats.hit_rate() * 100.0
+        );
+    }
+
+    let mut t = Table::new(
+        &format!("Table 3 (reproduced) — PDA ablation, scenario '{scenario}'"),
+        &["Ablation Study", "Throughput", "Overall Latency", "P99 Overall Latency", "Network Utilization", "Cache Hit"],
+    );
+    for (label, tput, mean, p99, mb, hit) in &rows {
+        t.row(&[
+            label.to_string(),
+            table::kthroughput(*tput),
+            table::ms(*mean),
+            table::ms(*p99),
+            format!("{mb:.1} MB/s"),
+            format!("{:.0} %", hit * 100.0),
+        ]);
+    }
+    if rows.len() == 3 {
+        t.footnote(&format!(
+            "full PDA vs baseline: {} throughput, {} latency (paper: 1.9x / 1.7x)",
+            table::ratio(rows[2].1, rows[0].1),
+            table::ratio(rows[0].2, rows[2].2),
+        ));
+    }
+    t.footnote("throughput in thousands of user-item pairs/s; simulated remote feature link (DESIGN.md)");
+    t.print();
+}

@@ -1,0 +1,50 @@
+//! Micro-bench: DSO split planner + request-queue + staging arena hot-path
+//! costs. These sit on the per-request critical path, so they must be
+//! negligible against model compute (§Perf L3 target). No artifacts.
+
+use flame::benchkit::Bencher;
+use flame::batching::RequestQueue;
+use flame::dso::plan_split;
+use flame::pda::StagingArena;
+use flame::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let profiles = [128usize, 256, 512, 1024];
+    let mut rng = Rng::new(9);
+
+    b.bench("planner/plan_split_mixed", || {
+        let m = 1 + rng.below(2048) as usize;
+        std::hint::black_box(plan_split(m, &profiles));
+    });
+
+    b.bench("planner/plan_split_exact", || {
+        std::hint::black_box(plan_split(512, &profiles));
+    });
+
+    let queue = RequestQueue::new(4096);
+    b.bench("queue/push_pop", || {
+        queue.push(42u64).unwrap();
+        std::hint::black_box(queue.pop());
+    });
+
+    let mut arena = StagingArena::new(1 << 20);
+    let row = vec![0.5f32; 128];
+    b.bench("staging/reset_and_stage_1k_rows", || {
+        arena.reset();
+        for _ in 0..1024 {
+            std::hint::black_box(arena.stage(&row));
+        }
+    });
+
+    // the baseline arm's equivalent: fresh Vec per request
+    b.bench("staging/alloc_vec_1k_rows_baseline", || {
+        let mut bufs = Vec::with_capacity(1024);
+        for _ in 0..1024 {
+            let mut v = vec![0.0f32; 128];
+            v.copy_from_slice(&row);
+            bufs.push(v);
+        }
+        std::hint::black_box(bufs);
+    });
+}

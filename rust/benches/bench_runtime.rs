@@ -1,0 +1,62 @@
+//! Micro-bench: PJRT runtime hot-path costs on the tiny engine —
+//! host→device upload, execute with device-resident weights, and the
+//! end-to-end `Engine::run`. Quantifies what device-resident weights buy
+//! (the TensorRT-weights-in-GPU-memory analogue) by comparing against a
+//! per-call weight re-upload.
+
+use std::sync::Arc;
+
+use flame::benchkit::Bencher;
+use flame::manifest::Manifest;
+use flame::runtime::{EngineKey, Runtime};
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) if m.scenarios.contains_key("tiny") => m,
+        _ => {
+            eprintln!("bench_runtime: artifacts missing — run `make artifacts`; skipping");
+            return;
+        }
+    };
+    let rt = Runtime::new().expect("pjrt");
+    let weights = rt.upload_weights(&manifest, "tiny").expect("weights");
+    let engine = rt
+        .load_engine_with_weights(&manifest, &EngineKey::new("tiny", "fused", 8), Arc::clone(&weights))
+        .expect("engine");
+
+    let hist = vec![0.1f32; engine.hist_len()];
+    let cands = vec![0.05f32; engine.cands_len()];
+
+    b.bench("runtime/engine_run_tiny_fused_m8", || {
+        std::hint::black_box(engine.run(&hist, &cands).expect("run"));
+    });
+
+    // what re-uploading weights every call would cost (the naive design
+    // this runtime avoids)
+    let tensors = manifest.load_weights("tiny").expect("load");
+    b.bench("runtime/weights_reupload_per_call", || {
+        let bufs = rt.upload_weights(&manifest, "tiny").expect("upload");
+        std::hint::black_box(bufs.total_bytes);
+    });
+    println!(
+        "\nweight set: {} tensors, {:.2} MB (uploaded once per scenario, shared across engines)",
+        tensors.len(),
+        weights.total_bytes as f64 / 1e6
+    );
+
+    // compile cost (the implicit-shape mode's hidden stall if shapes
+    // were compiled on demand)
+    b.args.min_iters = 3;
+    b.args.measure_time = std::time::Duration::from_secs(1);
+    b.bench("runtime/compile_tiny_engine", || {
+        let e = rt
+            .load_engine_with_weights(
+                &manifest,
+                &EngineKey::new("tiny", "api", 8),
+                Arc::clone(&weights),
+            )
+            .expect("engine");
+        std::hint::black_box(e.flops);
+    });
+}

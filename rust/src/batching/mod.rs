@@ -1,0 +1,163 @@
+//! Request queue + admission control feeding the pipeline workers.
+//!
+//! A bounded MPMC queue (mutex + condvar; crossbeam channels aren't in
+//! the vendor set) with load-shedding: when the queue is full the request
+//! is rejected immediately rather than growing the tail — the paper's
+//! envelope is a hard < 50 ms deadline, so queued-forever requests are
+//! worthless.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+struct Inner<T> {
+    queue: VecDeque<(T, Instant)>,
+    closed: bool,
+}
+
+/// Bounded MPMC request queue with shed-on-full admission.
+pub struct RequestQueue<T> {
+    inner: Mutex<Inner<T>>,
+    notify: Condvar,
+    capacity: usize,
+}
+
+impl<T> RequestQueue<T> {
+    pub fn new(capacity: usize) -> Arc<Self> {
+        Arc::new(RequestQueue {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            notify: Condvar::new(),
+            capacity: capacity.max(1),
+        })
+    }
+
+    /// Admit a request or shed it (Err(Overloaded)).
+    pub fn push(&self, item: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(Error::Internal("queue closed".into()));
+        }
+        if g.queue.len() >= self.capacity {
+            return Err(Error::Overloaded(format!("request queue full ({})", self.capacity)));
+        }
+        g.queue.push_back((item, Instant::now()));
+        drop(g);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; returns the item + its queueing delay, or None when
+    /// the queue is closed and drained.
+    pub fn pop(&self) -> Option<(T, std::time::Duration)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some((item, t)) = g.queue.pop_front() {
+                return Some((item, t.elapsed()));
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.notify.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue; waiting poppers drain then observe None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop().unwrap().0, 1);
+        assert_eq!(q.pop().unwrap().0, 2);
+    }
+
+    #[test]
+    fn sheds_when_full() {
+        let q = RequestQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        match q.push(3) {
+            Err(Error::Overloaded(_)) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_unblocks_poppers() {
+        let q: Arc<RequestQueue<u32>> = RequestQueue::new(4);
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn close_drains_remaining() {
+        let q = RequestQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.pop().unwrap().0, 7);
+        assert!(q.pop().is_none());
+        assert!(q.push(8).is_err());
+    }
+
+    #[test]
+    fn queueing_delay_measured() {
+        let q = RequestQueue::new(4);
+        q.push(1).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let (_, delay) = q.pop().unwrap();
+        assert!(delay >= std::time::Duration::from_millis(4));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let q: Arc<RequestQueue<u64>> = RequestQueue::new(10_000);
+        for i in 0..1000 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let sum = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let sum = Arc::clone(&sum);
+                std::thread::spawn(move || {
+                    while let Some((v, _)) = q.pop() {
+                        sum.fetch_add(v, std::sync::atomic::Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(sum.load(std::sync::atomic::Ordering::Relaxed), 499_500);
+    }
+}

@@ -1,0 +1,10 @@
+//! Mini-criterion: the bench harness behind every `cargo bench` target
+//! (criterion itself is not in the offline vendor set). Provides warmup,
+//! timed iteration with outlier-robust statistics, paper-style table
+//! rendering, and a tiny argv parser for bench flags.
+
+pub mod runner;
+pub mod table;
+
+pub use runner::{BenchArgs, BenchResult, Bencher};
+pub use table::Table;

@@ -1,0 +1,250 @@
+//! Timed-iteration runner with warmup and robust statistics.
+
+use std::time::{Duration, Instant};
+
+use crate::util::timeutil::fmt_duration;
+
+/// Statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Items/second, if items_per_iter was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n / self.mean.as_secs_f64().max(1e-12))
+    }
+
+    pub fn summary(&self) -> String {
+        let tput = match self.throughput() {
+            Some(t) => format!("  {:.1} k items/s", t / 1e3),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10}/iter  p50 {:>10}  p99 {:>10}  ({} iters){tput}",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.p50),
+            fmt_duration(self.p99),
+            self.iters,
+        )
+    }
+}
+
+/// Harness configuration, parsed from bench argv.
+#[derive(Clone, Debug)]
+pub struct BenchArgs {
+    /// Minimum measured iterations per case.
+    pub min_iters: usize,
+    /// Target measurement time per case.
+    pub measure_time: Duration,
+    /// Warmup time per case.
+    pub warmup_time: Duration,
+    /// Case-name filter (substring).
+    pub filter: Option<String>,
+    /// Scenario override for model benches (tiny/bench/base/long).
+    pub scenario: Option<String>,
+    /// Print figure series (Fig 12 mode) where supported.
+    pub series: bool,
+}
+
+impl Default for BenchArgs {
+    fn default() -> Self {
+        BenchArgs {
+            min_iters: 10,
+            measure_time: Duration::from_secs(3),
+            warmup_time: Duration::from_millis(500),
+            filter: None,
+            scenario: None,
+            series: false,
+        }
+    }
+}
+
+impl BenchArgs {
+    /// Parse `cargo bench -- <flags>` argv. Unknown flags are ignored so
+    /// `cargo bench` harness flags (`--bench`) pass through.
+    pub fn from_env() -> Self {
+        let mut a = BenchArgs::default();
+        let argv: Vec<String> = std::env::args().collect();
+        let mut i = 1;
+        while i < argv.len() {
+            match argv[i].as_str() {
+                "--min-iters" => {
+                    i += 1;
+                    a.min_iters = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or(a.min_iters);
+                }
+                "--measure-ms" => {
+                    i += 1;
+                    if let Some(ms) = argv.get(i).and_then(|s| s.parse::<u64>().ok()) {
+                        a.measure_time = Duration::from_millis(ms);
+                    }
+                }
+                "--warmup-ms" => {
+                    i += 1;
+                    if let Some(ms) = argv.get(i).and_then(|s| s.parse::<u64>().ok()) {
+                        a.warmup_time = Duration::from_millis(ms);
+                    }
+                }
+                "--filter" => {
+                    i += 1;
+                    a.filter = argv.get(i).cloned();
+                }
+                "--scenario" => {
+                    i += 1;
+                    a.scenario = argv.get(i).cloned();
+                }
+                "--series" => a.series = true,
+                _ => {}
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn wants(&self, name: &str) -> bool {
+        self.filter.as_deref().map_or(true, |f| name.contains(f))
+    }
+}
+
+/// The bench driver.
+pub struct Bencher {
+    pub args: BenchArgs,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(args: BenchArgs) -> Self {
+        Bencher { args, results: Vec::new() }
+    }
+
+    pub fn from_env() -> Self {
+        Self::new(BenchArgs::from_env())
+    }
+
+    /// Time `f` (one call = one iteration): warmup for `warmup_time`,
+    /// then measure until both `min_iters` and `measure_time` are met.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> Option<BenchResult> {
+        self.bench_with_items(name, None, f)
+    }
+
+    /// Like `bench`, with an items/iteration count for throughput rows
+    /// (user-item pairs for the paper tables).
+    pub fn bench_with_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items_per_iter: Option<f64>,
+        mut f: F,
+    ) -> Option<BenchResult> {
+        if !self.args.wants(name) {
+            return None;
+        }
+        // warmup
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.args.warmup_time {
+            f();
+        }
+        // measure
+        let mut samples: Vec<Duration> = Vec::with_capacity(self.args.min_iters * 2);
+        let mstart = Instant::now();
+        while samples.len() < self.args.min_iters || mstart.elapsed() < self.args.measure_time {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+            if samples.len() >= 1_000_000 {
+                break; // ultra-fast case; enough samples
+            }
+        }
+        let r = summarize(name, &mut samples, items_per_iter);
+        println!("{}", r.summary());
+        self.results.push(r.clone());
+        Some(r)
+    }
+
+    /// Look up a finished result by exact name.
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+}
+
+fn summarize(name: &str, samples: &mut [Duration], items: Option<f64>) -> BenchResult {
+    samples.sort();
+    let n = samples.len();
+    let idx = |q: f64| ((q * (n - 1) as f64).round() as usize).min(n - 1);
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: total / (n as u32),
+        p50: samples[idx(0.50)],
+        p99: samples[idx(0.99)],
+        min: samples[0],
+        max: samples[n - 1],
+        items_per_iter: items,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_args() -> BenchArgs {
+        BenchArgs {
+            min_iters: 5,
+            measure_time: Duration::from_millis(5),
+            warmup_time: Duration::from_millis(1),
+            ..BenchArgs::default()
+        }
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher::new(fast_args());
+        let r = b.bench("spin", || { std::hint::black_box(0); }).unwrap();
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.p50 && r.p50 <= r.max);
+        assert!(b.result("spin").is_some());
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut args = fast_args();
+        args.filter = Some("wanted".to_string());
+        let mut b = Bencher::new(args);
+        assert!(b.bench("other", || {}).is_none());
+        assert!(b.bench("wanted_case", || {}).is_some());
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bencher::new(fast_args());
+        let r = b
+            .bench_with_items("items", Some(100.0), || {
+                std::thread::sleep(Duration::from_micros(100));
+            })
+            .unwrap();
+        let t = r.throughput().unwrap();
+        // 100 items / ~100µs ≈ 1e6 items/s, allow broad slack for CI noise
+        assert!(t > 1e5 && t < 2e7, "throughput {t}");
+    }
+
+    #[test]
+    fn summarize_orders_quantiles() {
+        let mut samples: Vec<Duration> =
+            (1..=100).map(|i| Duration::from_micros(i)).collect();
+        let r = summarize("s", &mut samples, None);
+        assert_eq!(r.iters, 100);
+        assert!(r.p50 >= Duration::from_micros(49) && r.p50 <= Duration::from_micros(52));
+        assert!(r.p99 >= Duration::from_micros(98));
+    }
+}

@@ -1,0 +1,140 @@
+//! Paper-style ASCII table rendering for bench output: every bench binary
+//! prints the rows of the table/figure it regenerates (Table 3/4/5,
+//! Fig 12/13) in the paper's own column layout.
+
+/// Simple column-aligned table with a title and optional footnote.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    footnotes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            footnotes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn footnote(&mut self, note: &str) -> &mut Self {
+        self.footnotes.push(note.to_string());
+        self
+    }
+
+    /// Render to a string (also used by tests; `print` writes to stdout).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&format!("\n{}\n", self.title));
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for n in &self.footnotes {
+            out.push_str(&format!("  * {n}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a ratio as the paper quotes them: "1.9x".
+pub fn ratio(new: f64, old: f64) -> String {
+    if old <= 0.0 {
+        return "n/a".to_string();
+    }
+    format!("{:.1}x", new / old)
+}
+
+/// Milliseconds with paper-style precision.
+pub fn ms(v: f64) -> String {
+    format!("{v:.2} ms")
+}
+
+/// Throughput in "k" user-item pairs/s, paper-style.
+pub fn kthroughput(pairs_per_s: f64) -> String {
+    format!("{:.1} k", pairs_per_s / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Table X", &["Ablation", "Throughput", "Latency"]);
+        t.row_strs(&["-Cache", "67.4 k", "22.6 ms"]);
+        t.row_strs(&["+Cache, +Mem Opt (Full PDA)", "126.6 k", "13.2 ms"]);
+        t.footnote("throughput in thousands of user-item pairs/s");
+        let s = t.render();
+        assert!(s.contains("Table X"));
+        assert!(s.contains("| -Cache "));
+        assert!(s.contains("126.6 k"));
+        assert!(s.contains("* throughput"));
+        // all body lines same width
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|') || l.starts_with('+')).collect();
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row_strs(&["only one"]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ratio(190.0, 100.0), "1.9x");
+        assert_eq!(ratio(1.0, 0.0), "n/a");
+        assert_eq!(ms(13.2), "13.20 ms");
+        assert_eq!(kthroughput(126_600.0), "126.6 k");
+    }
+}

@@ -1,0 +1,292 @@
+//! TTL'd LRU cache over u64 keys — intrusive doubly-linked list over a
+//! slab of entries + a HashMap index. O(1) get/insert/evict, no
+//! per-operation allocation after warmup (slots are recycled), which
+//! keeps the feature-query hot path allocation-free.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+const NIL: usize = usize::MAX;
+
+/// A cached value plus its freshness metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry<V> {
+    pub value: V,
+    pub inserted: Instant,
+}
+
+/// Result of a cache lookup with TTL semantics (Fig 5's three arms).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Lookup<V> {
+    /// Unexpired hit — use directly.
+    Fresh(V),
+    /// Expired hit — the async flow returns it and refreshes in the
+    /// background; the sync flow treats it as a miss.
+    Stale(V),
+    /// Not present.
+    Miss,
+}
+
+impl<V> Lookup<V> {
+    pub fn is_fresh(&self) -> bool {
+        matches!(self, Lookup::Fresh(_))
+    }
+    pub fn is_miss(&self) -> bool {
+        matches!(self, Lookup::Miss)
+    }
+}
+
+struct Slot<V> {
+    key: u64,
+    value: V,
+    inserted: Instant,
+    prev: usize,
+    next: usize,
+}
+
+/// Single-shard LRU with TTL. Not thread-safe by itself; wrap in
+/// `ShardedCache` for concurrent use.
+pub struct LruCache<V> {
+    map: HashMap<u64, usize>,
+    slots: Vec<Slot<V>>,
+    free: Vec<usize>,
+    head: usize, // most recent
+    tail: usize, // least recent
+    capacity: usize,
+    ttl: Duration,
+    pub evictions: u64,
+}
+
+impl<V: Clone> LruCache<V> {
+    pub fn new(capacity: usize, ttl: Duration) -> Self {
+        assert!(capacity > 0);
+        LruCache {
+            map: HashMap::with_capacity(capacity),
+            slots: Vec::with_capacity(capacity.min(4096)),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            capacity,
+            ttl,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.slots[i].prev = NIL;
+        self.slots[i].next = NIL;
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Look up with TTL classification; fresh hits are promoted to MRU.
+    pub fn get(&mut self, key: u64, now: Instant) -> Lookup<V> {
+        match self.map.get(&key).copied() {
+            None => Lookup::Miss,
+            Some(i) => {
+                let age = now.saturating_duration_since(self.slots[i].inserted);
+                let v = self.slots[i].value.clone();
+                if age <= self.ttl {
+                    self.detach(i);
+                    self.push_front(i);
+                    Lookup::Fresh(v)
+                } else {
+                    // stale entries are not promoted: if nothing refreshes
+                    // them they age out toward the LRU tail.
+                    Lookup::Stale(v)
+                }
+            }
+        }
+    }
+
+    /// Insert/update a key (counts as a refresh: TTL restarts).
+    pub fn insert(&mut self, key: u64, value: V, now: Instant) {
+        if let Some(&i) = self.map.get(&key) {
+            self.slots[i].value = value;
+            self.slots[i].inserted = now;
+            self.detach(i);
+            self.push_front(i);
+            return;
+        }
+        let i = if self.map.len() >= self.capacity {
+            // evict LRU tail and reuse its slot
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL);
+            self.detach(victim);
+            self.map.remove(&self.slots[victim].key);
+            self.evictions += 1;
+            victim
+        } else if let Some(i) = self.free.pop() {
+            i
+        } else {
+            self.slots.push(Slot { key: 0, value: value.clone(), inserted: now, prev: NIL, next: NIL });
+            self.slots.len() - 1
+        };
+        self.slots[i].key = key;
+        self.slots[i].value = value;
+        self.slots[i].inserted = now;
+        self.push_front(i);
+        self.map.insert(key, i);
+    }
+
+    /// Remove a key (used by tests and invalidation paths).
+    pub fn remove(&mut self, key: u64) -> bool {
+        if let Some(i) = self.map.remove(&key) {
+            self.detach(i);
+            self.free.push(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Keys from most- to least-recently-used (diagnostics/tests).
+    pub fn keys_mru(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut i = self.head;
+        while i != NIL {
+            out.push(self.slots[i].key);
+            i = self.slots[i].next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn now() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn insert_get_fresh() {
+        let mut c = LruCache::new(4, Duration::from_secs(60));
+        let t = now();
+        c.insert(1, "a", t);
+        assert_eq!(c.get(1, t), Lookup::Fresh("a"));
+        assert_eq!(c.get(2, t), Lookup::Miss);
+    }
+
+    #[test]
+    fn ttl_expiry_returns_stale() {
+        let mut c = LruCache::new(4, Duration::from_millis(10));
+        let t = now();
+        c.insert(1, "a", t);
+        let later = t + Duration::from_millis(50);
+        assert_eq!(c.get(1, later), Lookup::Stale("a"));
+        // refresh restores freshness
+        c.insert(1, "b", later);
+        assert_eq!(c.get(1, later), Lookup::Fresh("b"));
+    }
+
+    #[test]
+    fn evicts_lru_order() {
+        let mut c = LruCache::new(3, Duration::from_secs(60));
+        let t = now();
+        c.insert(1, 1, t);
+        c.insert(2, 2, t);
+        c.insert(3, 3, t);
+        // touch 1 so 2 becomes LRU
+        let _ = c.get(1, t);
+        c.insert(4, 4, t);
+        assert_eq!(c.get(2, t), Lookup::Miss);
+        assert!(c.get(1, t).is_fresh());
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn update_moves_to_front_and_replaces() {
+        let mut c = LruCache::new(2, Duration::from_secs(60));
+        let t = now();
+        c.insert(1, "a", t);
+        c.insert(2, "b", t);
+        c.insert(1, "a2", t); // update
+        c.insert(3, "c", t); // evicts 2 (LRU)
+        assert_eq!(c.get(1, t), Lookup::Fresh("a2"));
+        assert_eq!(c.get(2, t), Lookup::Miss);
+    }
+
+    #[test]
+    fn remove_frees_slot() {
+        let mut c = LruCache::new(2, Duration::from_secs(60));
+        let t = now();
+        c.insert(1, 1, t);
+        assert!(c.remove(1));
+        assert!(!c.remove(1));
+        assert_eq!(c.get(1, t), Lookup::Miss);
+        assert_eq!(c.len(), 0);
+        c.insert(2, 2, t);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut c = LruCache::new(8, Duration::from_secs(60));
+        let t = now();
+        for k in 0..100 {
+            c.insert(k, k, t);
+            assert!(c.len() <= 8);
+        }
+        assert_eq!(c.evictions, 92);
+    }
+
+    #[test]
+    fn mru_order_tracks_access() {
+        let mut c = LruCache::new(4, Duration::from_secs(60));
+        let t = now();
+        for k in 1..=3 {
+            c.insert(k, k, t);
+        }
+        let _ = c.get(1, t);
+        assert_eq!(c.keys_mru(), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn stale_not_promoted() {
+        let mut c = LruCache::new(2, Duration::from_millis(1));
+        let t = now();
+        c.insert(1, 1, t);
+        c.insert(2, 2, t);
+        let later = t + Duration::from_millis(10);
+        // stale read of 1 must not move it ahead of 2
+        let _ = c.get(1, later);
+        c.insert(3, 3, later); // should evict 1 (still LRU)
+        assert_eq!(c.get(1, later), Lookup::Miss);
+    }
+}

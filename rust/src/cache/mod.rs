@@ -1,0 +1,72 @@
+//! The PDA's feature cache (§3.1, Fig 5): a TTL'd LRU, sharded into
+//! buckets to reduce write-lock collisions, with hit/stale/miss
+//! statistics. The async (stale-while-revalidate) and sync query flows
+//! are built on top in `pda::engine`.
+
+pub mod lru;
+pub mod sharded;
+
+pub use lru::{Entry, LruCache, Lookup};
+pub use sharded::ShardedCache;
+
+/// Cache statistics counters (lock-free).
+#[derive(Default)]
+pub struct CacheStats {
+    pub hits: std::sync::atomic::AtomicU64,
+    pub stale_hits: std::sync::atomic::AtomicU64,
+    pub misses: std::sync::atomic::AtomicU64,
+    pub inserts: std::sync::atomic::AtomicU64,
+    pub evictions: std::sync::atomic::AtomicU64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        use std::sync::atomic::Ordering::Relaxed;
+        let h = self.hits.load(Relaxed) + self.stale_hits.load(Relaxed);
+        let total = h + self.misses.load(Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            h as f64 / total as f64
+        }
+    }
+
+    pub fn fresh_hit_rate(&self) -> f64 {
+        use std::sync::atomic::Ordering::Relaxed;
+        let h = self.hits.load(Relaxed);
+        let total = h + self.stale_hits.load(Relaxed) + self.misses.load(Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            h as f64 / total as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (
+            self.hits.load(Relaxed),
+            self.stale_hits.load(Relaxed),
+            self.misses.load(Relaxed),
+            self.inserts.load(Relaxed),
+            self.evictions.load(Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::Relaxed;
+
+    #[test]
+    fn hit_rate_math() {
+        let s = CacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        s.hits.store(80, Relaxed);
+        s.stale_hits.store(10, Relaxed);
+        s.misses.store(10, Relaxed);
+        assert!((s.hit_rate() - 0.9).abs() < 1e-12);
+        assert!((s.fresh_hit_rate() - 0.8).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,148 @@
+//! Bucket-sharded concurrent cache — the paper's "divided into multiple
+//! buckets to reduce write lock collisions" (§3.1). Each shard is an
+//! independently locked `LruCache`; keys hash to shards, so concurrent
+//! pipeline workers rarely contend on the same mutex.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::lru::{Lookup, LruCache};
+use super::CacheStats;
+
+/// Thread-safe sharded TTL-LRU over u64 keys.
+pub struct ShardedCache<V> {
+    shards: Vec<Mutex<LruCache<V>>>,
+    mask_bits: u32,
+    pub stats: CacheStats,
+}
+
+impl<V: Clone> ShardedCache<V> {
+    /// `capacity` is total across shards; `shards` is rounded up to a
+    /// power of two.
+    pub fn new(capacity: usize, shards: usize, ttl: Duration) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        let per = (capacity / n).max(1);
+        let shards = (0..n).map(|_| Mutex::new(LruCache::new(per, ttl))).collect();
+        ShardedCache { shards, mask_bits: n.trailing_zeros(), stats: CacheStats::default() }
+    }
+
+    #[inline]
+    fn shard_of(&self, key: u64) -> usize {
+        // multiplicative hash; take the high bits for shard selection
+        let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (h >> (64 - self.mask_bits.max(1))) as usize & (self.shards.len() - 1)
+    }
+
+    /// Lookup with stats accounting.
+    pub fn get(&self, key: u64) -> Lookup<V> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let now = Instant::now();
+        let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
+        let r = shard.get(key, now);
+        match &r {
+            Lookup::Fresh(_) => self.stats.hits.fetch_add(1, Relaxed),
+            Lookup::Stale(_) => self.stats.stale_hits.fetch_add(1, Relaxed),
+            Lookup::Miss => self.stats.misses.fetch_add(1, Relaxed),
+        };
+        r
+    }
+
+    pub fn insert(&self, key: u64, value: V) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let now = Instant::now();
+        let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
+        let before = shard.evictions;
+        shard.insert(key, value, now);
+        let evicted = shard.evictions - before;
+        drop(shard);
+        self.stats.inserts.fetch_add(1, Relaxed);
+        if evicted > 0 {
+            self.stats.evictions.fetch_add(evicted, Relaxed);
+        }
+    }
+
+    pub fn remove(&self, key: u64) -> bool {
+        self.shards[self.shard_of(key)].lock().unwrap().remove(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic_get_insert() {
+        let c: ShardedCache<u32> = ShardedCache::new(64, 4, Duration::from_secs(60));
+        assert!(c.get(1).is_miss());
+        c.insert(1, 11);
+        assert_eq!(c.get(1), Lookup::Fresh(11));
+        let (h, _, m, i, _) = c.stats.snapshot();
+        assert_eq!((h, m, i), (1, 1, 1));
+    }
+
+    #[test]
+    fn shards_rounded_to_pow2() {
+        let c: ShardedCache<u32> = ShardedCache::new(64, 5, Duration::from_secs(60));
+        assert_eq!(c.n_shards(), 8);
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        let c: ShardedCache<u64> = ShardedCache::new(1 << 16, 16, Duration::from_secs(60));
+        let mut used = vec![false; c.n_shards()];
+        for k in 0..1000u64 {
+            used[c.shard_of(k)] = true;
+        }
+        assert!(used.iter().all(|&b| b), "some shard never hit: {used:?}");
+    }
+
+    #[test]
+    fn concurrent_mixed_workload() {
+        let c: Arc<ShardedCache<u64>> =
+            Arc::new(ShardedCache::new(4096, 16, Duration::from_secs(60)));
+        let hs: Vec<_> = (0..8)
+            .map(|t| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for i in 0..5_000u64 {
+                        let k = (t * 31 + i) % 2048;
+                        if i % 3 == 0 {
+                            c.insert(k, k * 2);
+                        } else if let Lookup::Fresh(v) = c.get(k) {
+                            assert_eq!(v, k * 2);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert!(c.len() <= 4096);
+    }
+
+    #[test]
+    fn eviction_stats_counted() {
+        let c: ShardedCache<u64> = ShardedCache::new(16, 2, Duration::from_secs(60));
+        for k in 0..200 {
+            c.insert(k, k);
+        }
+        let (_, _, _, ins, ev) = c.stats.snapshot();
+        assert_eq!(ins, 200);
+        assert!(ev > 0);
+        assert!(c.len() <= 16);
+    }
+}

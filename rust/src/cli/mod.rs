@@ -1,0 +1,169 @@
+//! Minimal CLI argument parser (no clap in the offline vendor set):
+//! subcommands with `--flag value` / `--flag` options and positional
+//! arguments, plus help rendering.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Flags that take a value (everything else is a boolean switch).
+const VALUE_FLAGS: &[&str] = &[
+    "artifacts", "scenario", "variant", "m", "requests", "duration-s", "rate",
+    "workers", "cache", "dso", "config", "bind", "trace", "seed", "concurrency",
+    "executors", "theta", "catalog",
+];
+
+impl Args {
+    /// Parse from an argv iterator (without the program name).
+    pub fn parse<I: Iterator<Item = String>>(mut argv: I) -> Result<Args> {
+        let mut a = Args::default();
+        let mut pending: Option<String> = None;
+        for tok in argv.by_ref() {
+            if let Some(flag) = pending.take() {
+                a.flags.insert(flag, tok);
+                continue;
+            }
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if VALUE_FLAGS.contains(&name) {
+                    pending = Some(name.to_string());
+                } else {
+                    a.switches.push(name.to_string());
+                }
+            } else if a.subcommand.is_none() {
+                a.subcommand = Some(tok);
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        if let Some(flag) = pending {
+            return Err(Error::Config(format!("flag --{flag} expects a value")));
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, flag: &str, default: &'a str) -> &'a str {
+        self.get(flag).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, flag: &str) -> Result<Option<T>> {
+        match self.get(flag) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("bad value for --{flag}: '{s}'"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Render the top-level help text.
+pub fn help() -> String {
+    "\
+flame — serving system for large-scale generative recommendation (FLAME reproduction)
+
+USAGE: flame <COMMAND> [flags]
+
+COMMANDS:
+  info      print scenarios, engines, FLOP envelope, NUMA topology
+  serve     run the serving stack on synthetic traffic and report metrics
+  replay    serve a recorded JSONL trace (--trace FILE)
+  record    generate and save a trace (--trace FILE --requests N)
+  bind      start the TCP front (--bind ADDR)
+
+COMMON FLAGS:
+  --artifacts DIR     artifact directory (default: artifacts)
+  --scenario NAME     tiny | bench | base | long   (default: bench)
+  --variant NAME      naive | api | fused          (default: fused)
+  --cache MODE        off | async | sync           (default: async)
+  --dso MODE          explicit | implicit          (default: explicit)
+  --workers N         pipeline worker threads      (default: 4)
+  --executors N       executors per profile        (default: 1)
+  --requests N        request count                (default: 64)
+  --duration-s S      run duration seconds         (default: 10)
+  --rate R            open-loop arrival rate/s (omit = closed loop)
+  --no-numa           disable NUMA binding
+  --no-staging        disable staging arenas
+  --seed N            workload seed
+"
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["serve", "--scenario", "bench", "--workers", "8", "--no-numa"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("scenario"), Some("bench"));
+        assert_eq!(a.get_parse::<usize>("workers").unwrap(), Some(8));
+        assert!(a.has("no-numa"));
+        assert!(!a.has("no-staging"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["serve", "--scenario=long", "--rate=2500.5"]);
+        assert_eq!(a.get("scenario"), Some("long"));
+        assert_eq!(a.get_parse::<f64>("rate").unwrap(), Some(2500.5));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["record", "out.jsonl"]);
+        assert_eq!(a.positional, vec!["out.jsonl"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["serve", "--scenario"].iter().map(|s| s.to_string())).is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["serve", "--workers", "eight"]);
+        assert!(a.get_parse::<usize>("workers").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["serve"]);
+        assert_eq!(a.get_or("scenario", "bench"), "bench");
+    }
+
+    #[test]
+    fn help_mentions_commands() {
+        let h = help();
+        for cmd in ["info", "serve", "replay", "record", "bind"] {
+            assert!(h.contains(cmd));
+        }
+    }
+}

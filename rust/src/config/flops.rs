@@ -1,0 +1,99 @@
+//! Analytic FLOP accounting — the rust mirror of
+//! `python/compile/config.py`'s counters. The manifest carries the
+//! python-computed numbers; tests assert both sides agree exactly, so a
+//! drift in either copy of the formula fails CI.
+
+use super::ModelConfig;
+
+/// Dense-attention FLOPs for one layer over n tokens, hidden d:
+/// QKV projection + QK^T scores + AV + output projection.
+pub fn attention_flops(n: u64, d: u64) -> u64 {
+    2 * n * d * 3 * d + 2 * n * n * d + 2 * n * n * d + 2 * n * d * d
+}
+
+/// FFN FLOPs for one layer: two GEMMs through d_ff = f.
+pub fn ffn_flops(n: u64, d: u64, f: u64) -> u64 {
+    2 * n * d * f + 2 * n * f * d
+}
+
+/// Analytic per-request FLOPs of the dense forward with M candidates —
+/// the paper's Table 2 "FLOPS" column.
+pub fn model_flops(cfg: &ModelConfig, m: usize) -> u64 {
+    let n = cfg.n_tokens(m) as u64;
+    let (d, f, t) = (cfg.d_model as u64, cfg.d_ff() as u64, cfg.n_tasks as u64);
+    let m = m as u64;
+    let nb = cfg.n_blocks as u64;
+    let per_layer = attention_flops(n, d) + ffn_flops(n, d, f);
+    let mut total = nb * cfg.layers_per_block as u64 * per_layer;
+    total += 2 * m * (nb * d) * (nb * d); // gating fusion GEMM
+    total += 2 * m * d * f + 2 * m * f * t; // expert MLP
+    total
+}
+
+/// Score+AV FLOPs actually needed under the SUMI mask (per layer) — what
+/// the mask-aware L1 kernel approaches via tile skipping.
+pub fn masked_attention_score_flops(cfg: &ModelConfig, m: usize) -> u64 {
+    let (lb, d) = (cfg.block_len() as u64, cfg.d_model as u64);
+    let m = m as u64;
+    let hist = lb * (lb + 1) / 2;
+    let cand = m * (lb + 1);
+    4 * (hist + cand) * d
+}
+
+/// The paper's Table 1 operating envelope, for `flame info`.
+pub fn envelope_summary(cfg: &ModelConfig) -> String {
+    let fl = model_flops(cfg, cfg.native_m);
+    format!(
+        "scenario {}: {:.2e} FLOPs/request at native M={} (paper GR range 1e9..1e11; DLRM range 1e6..1e7)",
+        cfg.name, fl as f64, cfg.native_m
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+
+    #[test]
+    fn tiny_matches_python_constant() {
+        // python: model_flops(SCENARIOS['tiny'], 8) == 2_791_424
+        // (asserted against the manifest in integration tests too).
+        let c = Scenario::Tiny.config();
+        assert_eq!(model_flops(&c, 8), 2_791_424);
+    }
+
+    #[test]
+    fn paper_order_of_magnitude() {
+        let base = Scenario::Base.config();
+        let long = Scenario::Long.config();
+        let fb = model_flops(&base, base.native_m) as f64;
+        let fl = model_flops(&long, long.native_m) as f64;
+        assert!(fb > 1e9 && fb < 1e10, "base {fb:.2e}");
+        assert!(fl > 1e10 && fl < 1e11, "long {fl:.2e}");
+        assert!(fl > 3.0 * fb, "long should be several times base");
+    }
+
+    #[test]
+    fn flops_monotone_in_m() {
+        let c = Scenario::Bench.config();
+        let mut last = 0;
+        for &m in &c.m_profiles {
+            let f = model_flops(&c, m);
+            assert!(f > last);
+            last = f;
+        }
+    }
+
+    #[test]
+    fn masked_fraction_below_dense() {
+        let c = Scenario::Long.config();
+        let m = 512;
+        let n = c.n_tokens(m) as u64;
+        let dense_scores = 4 * n * n * c.d_model as u64;
+        let masked = masked_attention_score_flops(&c, m);
+        let frac = masked as f64 / dense_scores as f64;
+        // candidates don't attend to each other: roughly half the tiles die
+        assert!(frac < 0.6, "masked fraction {frac}");
+        assert!(frac > 0.2, "masked fraction {frac}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Configuration system: model/scenario specs (the rust mirror of
+//! `python/compile/config.py`), serving-stack knobs (PDA, DSO, server,
+//! workload), analytic FLOPs, and JSON config-file loading with flag
+//! overrides.
+
+pub mod flops;
+pub mod model;
+pub mod serving;
+
+pub use model::{ModelConfig, Scenario};
+pub use serving::{CacheMode, DsoMode, PdaConfig, DsoConfig, ServerConfig, WorkloadConfig, StackConfig};

@@ -1,0 +1,197 @@
+//! Model/scenario configuration — the rust mirror of
+//! `python/compile/config.py`. The authoritative copy of a scenario's
+//! numbers at serve time is the artifact manifest (written by aot.py);
+//! the built-in table here exists for tools that run before artifacts
+//! are built (`flame info`) and is cross-checked against the manifest in
+//! tests.
+
+use crate::error::{Error, Result};
+
+/// Static architecture + scenario parameters of one served model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Total user-history length L (split across blocks).
+    pub seq_len: usize,
+    /// Independent Transformer blocks N_b (Climber's sub-sequences).
+    pub n_blocks: usize,
+    pub layers_per_block: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_tasks: usize,
+    /// Candidate-count profiles exported for DSO routing (ascending).
+    pub m_profiles: Vec<usize>,
+    /// Paper-native candidate count (Table 2 column).
+    pub native_m: usize,
+}
+
+impl ModelConfig {
+    /// History tokens per block (L / N_b).
+    pub fn block_len(&self) -> usize {
+        self.seq_len / self.n_blocks
+    }
+
+    /// FFN inner dimension (4x).
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// Per-block sequence length for M candidates.
+    pub fn n_tokens(&self, m: usize) -> usize {
+        self.block_len() + m
+    }
+
+    /// Largest profile (the pad-to-max baseline's fixed shape).
+    pub fn max_m(&self) -> usize {
+        *self.m_profiles.iter().max().expect("non-empty profiles")
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let check = |ok: bool, msg: &str| {
+            if ok {
+                Ok(())
+            } else {
+                Err(Error::Config(format!("{}: {msg}", self.name)))
+            }
+        };
+        check(self.seq_len % self.n_blocks == 0, "seq_len % n_blocks != 0")?;
+        check(self.d_model % self.n_heads == 0, "d_model % n_heads != 0")?;
+        check(!self.m_profiles.is_empty(), "empty m_profiles")?;
+        check(self.m_profiles.contains(&self.native_m), "native_m not in profiles")?;
+        check(
+            self.m_profiles.windows(2).all(|w| w[0] < w[1]),
+            "m_profiles not strictly ascending",
+        )?;
+        Ok(())
+    }
+}
+
+/// The four scenario tiers (see DESIGN.md §3 / paper Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    Tiny,
+    Bench,
+    Base,
+    Long,
+}
+
+impl Scenario {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Tiny => "tiny",
+            Scenario::Bench => "bench",
+            Scenario::Base => "base",
+            Scenario::Long => "long",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "tiny" => Ok(Scenario::Tiny),
+            "bench" => Ok(Scenario::Bench),
+            "base" => Ok(Scenario::Base),
+            "long" => Ok(Scenario::Long),
+            other => Err(Error::Config(format!("unknown scenario '{other}'"))),
+        }
+    }
+
+    pub fn all() -> [Scenario; 4] {
+        [Scenario::Tiny, Scenario::Bench, Scenario::Base, Scenario::Long]
+    }
+
+    /// Built-in spec table (mirror of python SCENARIOS).
+    pub fn config(&self) -> ModelConfig {
+        match self {
+            Scenario::Tiny => ModelConfig {
+                name: "tiny".into(),
+                seq_len: 32,
+                n_blocks: 2,
+                layers_per_block: 2,
+                d_model: 32,
+                n_heads: 2,
+                n_tasks: 3,
+                m_profiles: vec![4, 8],
+                native_m: 8,
+            },
+            Scenario::Bench => ModelConfig {
+                name: "bench".into(),
+                seq_len: 128,
+                n_blocks: 2,
+                layers_per_block: 3,
+                d_model: 64,
+                n_heads: 4,
+                n_tasks: 3,
+                m_profiles: vec![16, 32, 64, 128],
+                native_m: 32,
+            },
+            Scenario::Base => ModelConfig {
+                name: "base".into(),
+                seq_len: 512,
+                n_blocks: 2,
+                layers_per_block: 12,
+                d_model: 128,
+                n_heads: 8,
+                n_tasks: 3,
+                m_profiles: vec![32, 64, 128],
+                native_m: 128,
+            },
+            Scenario::Long => ModelConfig {
+                name: "long".into(),
+                seq_len: 1024,
+                n_blocks: 2,
+                layers_per_block: 12,
+                d_model: 128,
+                n_heads: 8,
+                n_tasks: 3,
+                m_profiles: vec![128, 256, 512, 1024],
+                native_m: 512,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_builtin_configs_valid() {
+        for s in Scenario::all() {
+            let c = s.config();
+            c.validate().unwrap();
+            assert_eq!(c.name, s.name());
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in Scenario::all() {
+            assert_eq!(Scenario::parse(s.name()).unwrap(), s);
+        }
+        assert!(Scenario::parse("huge").is_err());
+    }
+
+    #[test]
+    fn derived_dims() {
+        let c = Scenario::Long.config();
+        assert_eq!(c.block_len(), 512);
+        assert_eq!(c.d_ff(), 512);
+        assert_eq!(c.n_tokens(512), 1024);
+        assert_eq!(c.max_m(), 1024);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = Scenario::Tiny.config();
+        c.seq_len = 33;
+        assert!(c.validate().is_err());
+
+        let mut c = Scenario::Tiny.config();
+        c.native_m = 5;
+        assert!(c.validate().is_err());
+
+        let mut c = Scenario::Tiny.config();
+        c.m_profiles = vec![8, 4];
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,330 @@
+//! Serving-stack configuration: PDA, DSO, server, and workload knobs.
+//! Each struct has paper-faithful defaults and can be loaded from a JSON
+//! file (`StackConfig::from_json`) with per-field overrides — the ablation
+//! arms in the benches are expressed as these configs.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Feature-query caching mode (PDA §3.1, Fig 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheMode {
+    /// No cache — every query goes to the remote store (Table 3 row 1).
+    Off,
+    /// Async stale-while-revalidate: expired/missing entries return
+    /// immediately (stale or empty) and refresh in the background.
+    Async,
+    /// Sync: miss/expired blocks on the remote query (accuracy-preserving).
+    Sync,
+}
+
+impl CacheMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(CacheMode::Off),
+            "async" => Ok(CacheMode::Async),
+            "sync" => Ok(CacheMode::Sync),
+            o => Err(Error::Config(format!("unknown cache mode '{o}'"))),
+        }
+    }
+}
+
+/// DSO execution mode (§3.3, Table 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DsoMode {
+    /// Implicit shape: one max-profile engine; every request is padded to
+    /// the largest batch dimension (the runtime-dynamic baseline).
+    ImplicitPad,
+    /// Explicit shape: per-profile executors + descending batch splitting.
+    Explicit,
+}
+
+impl DsoMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "implicit" | "pad" => Ok(DsoMode::ImplicitPad),
+            "explicit" | "dso" => Ok(DsoMode::Explicit),
+            o => Err(Error::Config(format!("unknown dso mode '{o}'"))),
+        }
+    }
+}
+
+/// PDA module configuration (§3.1).
+#[derive(Clone, Debug)]
+pub struct PdaConfig {
+    pub cache_mode: CacheMode,
+    /// LRU capacity in items (item-side cache, per the paper's choice).
+    pub cache_capacity: usize,
+    /// Cache shard (bucket) count — reduces write-lock collisions.
+    pub cache_shards: usize,
+    /// TTL for cached item features, in milliseconds.
+    pub cache_ttl_ms: u64,
+    /// Background refresh worker threads (async mode).
+    pub refresh_workers: usize,
+    /// NUMA-affinity core binding for pipeline workers ("Mem Opt" half 1).
+    pub numa_binding: bool,
+    /// Preallocated staging arenas for input assembly ("Mem Opt" half 2 —
+    /// the pinned-memory analogue: batch many small feature copies into
+    /// one contiguous transfer buffer).
+    pub staging_arenas: bool,
+}
+
+impl Default for PdaConfig {
+    fn default() -> Self {
+        PdaConfig {
+            cache_mode: CacheMode::Async,
+            cache_capacity: 200_000,
+            cache_shards: 16,
+            cache_ttl_ms: 5_000,
+            refresh_workers: 2,
+            numa_binding: true,
+            staging_arenas: true,
+        }
+    }
+}
+
+impl PdaConfig {
+    /// The Table 3 baseline: no cache, no memory optimizations.
+    pub fn baseline() -> Self {
+        PdaConfig {
+            cache_mode: CacheMode::Off,
+            numa_binding: false,
+            staging_arenas: false,
+            ..PdaConfig::default()
+        }
+    }
+
+    /// The Table 3 middle arm: +Cache, -Mem Opt.
+    pub fn cache_only() -> Self {
+        PdaConfig { numa_binding: false, staging_arenas: false, ..PdaConfig::default() }
+    }
+}
+
+/// DSO module configuration (§3.3).
+#[derive(Clone, Debug)]
+pub struct DsoConfig {
+    pub mode: DsoMode,
+    /// Executors per profile (the paper's "multiple CUDA streams per
+    /// profile"); total executor threads = profiles x this.
+    pub executors_per_profile: usize,
+    /// Queue capacity before admission control sheds load.
+    pub queue_capacity: usize,
+}
+
+impl Default for DsoConfig {
+    fn default() -> Self {
+        DsoConfig { mode: DsoMode::Explicit, executors_per_profile: 1, queue_capacity: 1024 }
+    }
+}
+
+/// Server / pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Feature-pipeline worker threads (CPU side of the decoupled design).
+    pub pipeline_workers: usize,
+    /// TCP bind address for the network front (None = in-process only).
+    pub bind_addr: Option<String>,
+    /// Per-request deadline in ms (paper envelope: < 50 ms end-to-end).
+    pub deadline_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { pipeline_workers: 4, bind_addr: None, deadline_ms: 50 }
+    }
+}
+
+/// Synthetic-workload configuration (the production-traffic substitute;
+/// DESIGN.md §Environment substitutions).
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Item catalog size.
+    pub catalog_size: u64,
+    /// Zipf exponent for item popularity (hot-item skew).
+    pub zipf_theta: f64,
+    /// User population.
+    pub n_users: u64,
+    /// Candidate-count mix: (m, weight) pairs. Uniform over the long
+    /// profiles reproduces the paper's Table 5 mixed traffic.
+    pub candidate_mix: Vec<(usize, f64)>,
+    /// Open-loop arrival rate (requests/s); None = closed loop.
+    pub arrival_rate: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            catalog_size: 1_000_000,
+            zipf_theta: 0.99,
+            n_users: 100_000,
+            candidate_mix: vec![(32, 1.0)],
+            arrival_rate: None,
+            seed: 42,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// Table 5's mixed traffic: M uniform over the scenario's profiles.
+    pub fn uniform_mix(profiles: &[usize]) -> Vec<(usize, f64)> {
+        profiles.iter().map(|&m| (m, 1.0)).collect()
+    }
+}
+
+/// Top-level bundle loaded by the CLI / examples.
+#[derive(Clone, Debug, Default)]
+pub struct StackConfig {
+    pub pda: PdaConfig,
+    pub dso: DsoConfig,
+    pub server: ServerConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl StackConfig {
+    /// Parse from a JSON document; absent fields keep defaults.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = StackConfig::default();
+        if let Some(p) = j.opt("pda") {
+            if let Some(v) = p.opt("cache_mode") {
+                c.pda.cache_mode = CacheMode::parse(v.as_str()?)?;
+            }
+            if let Some(v) = p.opt("cache_capacity") {
+                c.pda.cache_capacity = v.as_usize()?;
+            }
+            if let Some(v) = p.opt("cache_shards") {
+                c.pda.cache_shards = v.as_usize()?;
+            }
+            if let Some(v) = p.opt("cache_ttl_ms") {
+                c.pda.cache_ttl_ms = v.as_u64()?;
+            }
+            if let Some(v) = p.opt("refresh_workers") {
+                c.pda.refresh_workers = v.as_usize()?;
+            }
+            if let Some(v) = p.opt("numa_binding") {
+                c.pda.numa_binding = v.as_bool()?;
+            }
+            if let Some(v) = p.opt("staging_arenas") {
+                c.pda.staging_arenas = v.as_bool()?;
+            }
+        }
+        if let Some(d) = j.opt("dso") {
+            if let Some(v) = d.opt("mode") {
+                c.dso.mode = DsoMode::parse(v.as_str()?)?;
+            }
+            if let Some(v) = d.opt("executors_per_profile") {
+                c.dso.executors_per_profile = v.as_usize()?;
+            }
+            if let Some(v) = d.opt("queue_capacity") {
+                c.dso.queue_capacity = v.as_usize()?;
+            }
+        }
+        if let Some(s) = j.opt("server") {
+            if let Some(v) = s.opt("pipeline_workers") {
+                c.server.pipeline_workers = v.as_usize()?;
+            }
+            if let Some(v) = s.opt("bind_addr") {
+                c.server.bind_addr = Some(v.as_str()?.to_string());
+            }
+            if let Some(v) = s.opt("deadline_ms") {
+                c.server.deadline_ms = v.as_u64()?;
+            }
+        }
+        if let Some(w) = j.opt("workload") {
+            if let Some(v) = w.opt("catalog_size") {
+                c.workload.catalog_size = v.as_u64()?;
+            }
+            if let Some(v) = w.opt("zipf_theta") {
+                c.workload.zipf_theta = v.as_f64()?;
+            }
+            if let Some(v) = w.opt("n_users") {
+                c.workload.n_users = v.as_u64()?;
+            }
+            if let Some(v) = w.opt("arrival_rate") {
+                c.workload.arrival_rate = Some(v.as_f64()?);
+            }
+            if let Some(v) = w.opt("seed") {
+                c.workload.seed = v.as_u64()?;
+            }
+            if let Some(v) = w.opt("candidate_mix") {
+                let mut mix = Vec::new();
+                for e in v.as_arr()? {
+                    let arr = e.as_arr()?;
+                    if arr.len() != 2 {
+                        return Err(Error::Config("candidate_mix entries are [m, weight]".into()));
+                    }
+                    mix.push((arr[0].as_usize()?, arr[1].as_f64()?));
+                }
+                c.workload.candidate_mix = mix;
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(crate::error::io_err(path.display().to_string()))?;
+        Self::from_json(&crate::util::json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn defaults_reasonable() {
+        let c = StackConfig::default();
+        assert_eq!(c.pda.cache_mode, CacheMode::Async);
+        assert!(c.pda.numa_binding);
+        assert_eq!(c.dso.mode, DsoMode::Explicit);
+        assert_eq!(c.server.deadline_ms, 50); // paper envelope
+    }
+
+    #[test]
+    fn ablation_arms() {
+        assert_eq!(PdaConfig::baseline().cache_mode, CacheMode::Off);
+        assert!(!PdaConfig::baseline().staging_arenas);
+        let mid = PdaConfig::cache_only();
+        assert_eq!(mid.cache_mode, CacheMode::Async);
+        assert!(!mid.numa_binding);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = parse(
+            r#"{
+            "pda": {"cache_mode": "sync", "cache_capacity": 10, "numa_binding": false},
+            "dso": {"mode": "implicit", "executors_per_profile": 3},
+            "server": {"pipeline_workers": 8, "bind_addr": "127.0.0.1:7070"},
+            "workload": {"zipf_theta": 0.8, "candidate_mix": [[128, 1.0], [256, 1.0]]}
+        }"#,
+        )
+        .unwrap();
+        let c = StackConfig::from_json(&j).unwrap();
+        assert_eq!(c.pda.cache_mode, CacheMode::Sync);
+        assert_eq!(c.pda.cache_capacity, 10);
+        assert!(!c.pda.numa_binding);
+        assert_eq!(c.dso.mode, DsoMode::ImplicitPad);
+        assert_eq!(c.dso.executors_per_profile, 3);
+        assert_eq!(c.server.pipeline_workers, 8);
+        assert_eq!(c.server.bind_addr.as_deref(), Some("127.0.0.1:7070"));
+        assert_eq!(c.workload.candidate_mix, vec![(128, 1.0), (256, 1.0)]);
+    }
+
+    #[test]
+    fn bad_modes_rejected() {
+        assert!(CacheMode::parse("nope").is_err());
+        assert!(DsoMode::parse("nope").is_err());
+        let j = parse(r#"{"pda": {"cache_mode": "bogus"}}"#).unwrap();
+        assert!(StackConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn uniform_mix_builder() {
+        let mix = WorkloadConfig::uniform_mix(&[128, 256, 512, 1024]);
+        assert_eq!(mix.len(), 4);
+        assert!(mix.iter().all(|&(_, w)| w == 1.0));
+    }
+}

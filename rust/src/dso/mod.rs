@@ -1,0 +1,14 @@
+//! DSO — Dynamic Stream Orchestrator (paper §3.3, Fig 10).
+//!
+//! The explicit-shape execution layer: one precompiled engine per
+//! candidate-count profile, each wrapped in executors with preallocated
+//! resources, an executor index queue, and the batch-routing planner that
+//! splits an incoming request's M candidates across profiles **in
+//! descending order**. The implicit-shape baseline (pad everything to the
+//! max profile) lives here too so Table 5 is one flag apart.
+
+pub mod orchestrator;
+pub mod planner;
+
+pub use orchestrator::{Orchestrator, ExecOutcome};
+pub use planner::{plan_split, SplitPlan};

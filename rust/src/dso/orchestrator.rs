@@ -1,0 +1,287 @@
+//! The DSO orchestrator: per-profile executor pools fed by an index
+//! queue, descending batch-split dispatch, and the implicit-shape
+//! (pad-to-max) baseline.
+//!
+//! Paper mapping (§3.3): a TensorRT profile+stream+graph triple is our
+//! (engine, executor thread, preallocated staging) triple; "push the
+//! index back to the queue after computation" is the worker loop pulling
+//! the next job from its profile's channel. Requests are split with
+//! `planner::plan_split` and chunks run concurrently across profiles.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::{DsoConfig, DsoMode};
+use crate::error::{Error, Result};
+use crate::runtime::{Engine, HistBuffer};
+
+use super::planner::{padded_rows, plan_split, SplitPlan};
+
+/// One chunk job for an executor.
+struct Job {
+    /// Device-resident history shared by every chunk of the request —
+    /// uploaded once in `submit` (§Perf: per-chunk re-upload removed).
+    hist: Arc<HistBuffer>,
+    cands: Vec<f32>,
+    reply: Sender<Result<(usize, Vec<f32>)>>,
+    chunk_index: usize,
+    enqueued: Instant,
+}
+
+/// Per-profile executor pool: a channel + N worker threads around one
+/// compiled engine.
+struct ProfilePool {
+    tx: Sender<Job>,
+    engine: Arc<Engine>,
+    _workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Outcome metadata for one orchestrated request.
+#[derive(Clone, Debug)]
+pub struct ExecOutcome {
+    /// Scores [m * n_tasks] for the *requested* m (padding stripped).
+    pub scores: Vec<f32>,
+    /// Profile chunks executed.
+    pub chunks: Vec<usize>,
+    /// Padded (wasted) rows.
+    pub padding: usize,
+    /// Pure model-compute wall time (max over parallel chunks), µs.
+    pub compute_us: u64,
+    /// Queueing delay before the first chunk started, µs.
+    pub queue_us: u64,
+}
+
+/// The orchestrator over one (scenario, variant)'s profile engines.
+pub struct Orchestrator {
+    mode: DsoMode,
+    pools: BTreeMap<usize, ProfilePool>,
+    profiles: Vec<usize>,
+    n_tasks: usize,
+    d_model: usize,
+    in_flight: Arc<AtomicUsize>,
+    queue_capacity: usize,
+    pub padded_rows_total: AtomicU64,
+    pub executed_rows_total: AtomicU64,
+}
+
+impl Orchestrator {
+    /// Build from one engine per profile (ascending M). Each profile gets
+    /// `cfg.executors_per_profile` worker threads.
+    pub fn new(engines: Vec<Engine>, cfg: &DsoConfig) -> Result<Self> {
+        if engines.is_empty() {
+            return Err(Error::Config("orchestrator needs at least one engine".into()));
+        }
+        let n_tasks = engines[0].config.n_tasks;
+        let d_model = engines[0].config.d_model;
+        let mut pools = BTreeMap::new();
+        let mut profiles = Vec::new();
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        for engine in engines {
+            let m = engine.m();
+            let engine = Arc::new(engine);
+            let (tx, rx) = channel::<Job>();
+            let rx = Arc::new(Mutex::new(rx));
+            let mut workers = Vec::new();
+            for w in 0..cfg.executors_per_profile.max(1) {
+                let rx = Arc::clone(&rx);
+                let eng = Arc::clone(&engine);
+                let inflight = Arc::clone(&in_flight);
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("dso-m{m}-{w}"))
+                        .spawn(move || executor_loop(rx, eng, inflight))
+                        .map_err(|e| Error::Internal(format!("spawn executor: {e}")))?,
+                );
+            }
+            profiles.push(m);
+            pools.insert(m, ProfilePool { tx, engine, _workers: workers });
+        }
+        profiles.sort_unstable();
+        Ok(Orchestrator {
+            mode: cfg.mode,
+            pools,
+            profiles,
+            n_tasks,
+            d_model,
+            in_flight,
+            queue_capacity: cfg.queue_capacity,
+            padded_rows_total: AtomicU64::new(0),
+            executed_rows_total: AtomicU64::new(0),
+        })
+    }
+
+    pub fn profiles(&self) -> &[usize] {
+        &self.profiles
+    }
+
+    pub fn mode(&self) -> DsoMode {
+        self.mode
+    }
+
+    pub fn max_profile(&self) -> usize {
+        *self.profiles.last().unwrap()
+    }
+
+    /// Engine handle for a profile (benches/diagnostics).
+    pub fn engine(&self, m: usize) -> Option<&Arc<Engine>> {
+        self.pools.get(&m).map(|p| &p.engine)
+    }
+
+    /// The split this orchestrator will use for a request of `m`.
+    pub fn plan(&self, m: usize) -> SplitPlan {
+        match self.mode {
+            DsoMode::Explicit => plan_split(m, &self.profiles),
+            DsoMode::ImplicitPad => {
+                let max = self.max_profile();
+                let total = padded_rows(m, max);
+                SplitPlan { chunks: vec![max; total / max], padding: total - m }
+            }
+        }
+    }
+
+    /// Execute one request: `hist` [L*D] shared across chunks, `cands`
+    /// [m*D]. Returns stripped scores + execution metadata.
+    pub fn submit(&self, hist: Arc<Vec<f32>>, cands: &[f32], m: usize) -> Result<ExecOutcome> {
+        self.submit_slice(&hist, cands, m)
+    }
+
+    /// Like `submit` but borrowing the history slice: uploads it to the
+    /// device once and shares the buffer across all chunk executors.
+    pub fn submit_slice(&self, hist: &[f32], cands: &[f32], m: usize) -> Result<ExecOutcome> {
+        if m == 0 {
+            return Ok(ExecOutcome {
+                scores: Vec::new(),
+                chunks: Vec::new(),
+                padding: 0,
+                compute_us: 0,
+                queue_us: 0,
+            });
+        }
+        if cands.len() != m * self.d_model {
+            return Err(Error::Internal(format!(
+                "cands len {} != m {m} * d {}",
+                cands.len(),
+                self.d_model
+            )));
+        }
+        let plan = self.plan(m);
+        if self.in_flight.load(Ordering::Relaxed) + plan.chunks.len() > self.queue_capacity {
+            return Err(Error::Overloaded(format!(
+                "executor queue at capacity {}",
+                self.queue_capacity
+            )));
+        }
+        self.padded_rows_total.fetch_add(plan.padding as u64, Ordering::Relaxed);
+        self.executed_rows_total.fetch_add(plan.total() as u64, Ordering::Relaxed);
+
+        // upload the shared history once (any pool's engine: one client)
+        let hist_dev = Arc::new(
+            self.pools
+                .values()
+                .next()
+                .ok_or_else(|| Error::Internal("no pools".into()))?
+                .engine
+                .upload_hist(hist)?,
+        );
+
+        // dispatch chunks (descending): chunk i covers rows [off, off+take)
+        let (reply_tx, reply_rx): (
+            Sender<Result<(usize, Vec<f32>)>>,
+            Receiver<Result<(usize, Vec<f32>)>>,
+        ) = channel();
+        let mut offsets = Vec::with_capacity(plan.chunks.len());
+        let mut off = 0usize;
+        let submit_t = Instant::now();
+        for (ci, &chunk) in plan.chunks.iter().enumerate() {
+            let take = chunk.min(m - off);
+            offsets.push((off, take));
+            // build the chunk's candidate tensor, padding the tail chunk
+            // by repeating the last real row (scores for pad rows are
+            // stripped; repeating keeps values in-distribution).
+            let mut buf = vec![0.0f32; chunk * self.d_model];
+            let src = &cands[off * self.d_model..(off + take) * self.d_model];
+            buf[..src.len()].copy_from_slice(src);
+            if take < chunk {
+                let last = &cands[(off + take - 1) * self.d_model..(off + take) * self.d_model];
+                for r in take..chunk {
+                    buf[r * self.d_model..(r + 1) * self.d_model].copy_from_slice(last);
+                }
+            }
+            let pool = self.pools.get(&chunk).ok_or_else(|| {
+                Error::UnknownEngine(format!("no executor pool for profile {chunk}"))
+            })?;
+            self.in_flight.fetch_add(1, Ordering::Relaxed);
+            pool.tx
+                .send(Job {
+                    hist: Arc::clone(&hist_dev),
+                    cands: buf,
+                    reply: reply_tx.clone(),
+                    chunk_index: ci,
+                    enqueued: submit_t,
+                })
+                .map_err(|_| Error::Internal("executor pool closed".into()))?;
+            off += take;
+        }
+        drop(reply_tx);
+
+        // collect
+        let mut parts: Vec<Option<Vec<f32>>> = vec![None; plan.chunks.len()];
+        for _ in 0..plan.chunks.len() {
+            let (ci, scores) = reply_rx
+                .recv()
+                .map_err(|_| Error::Internal("executor dropped reply".into()))??;
+            parts[ci] = Some(scores);
+        }
+        let compute_us = submit_t.elapsed().as_micros() as u64;
+
+        // assemble in request order, stripping padding
+        let mut scores = Vec::with_capacity(m * self.n_tasks);
+        for (ci, part) in parts.into_iter().enumerate() {
+            let part = part.ok_or_else(|| Error::Internal("missing chunk".into()))?;
+            let (_, take) = offsets[ci];
+            scores.extend_from_slice(&part[..take * self.n_tasks]);
+        }
+        debug_assert_eq!(scores.len(), m * self.n_tasks);
+        Ok(ExecOutcome {
+            scores,
+            chunks: plan.chunks,
+            padding: plan.padding,
+            compute_us,
+            queue_us: 0,
+        })
+    }
+
+    /// Fraction of executed rows that were padding (waste metric).
+    pub fn waste_fraction(&self) -> f64 {
+        let ex = self.executed_rows_total.load(Ordering::Relaxed);
+        if ex == 0 {
+            return 0.0;
+        }
+        self.padded_rows_total.load(Ordering::Relaxed) as f64 / ex as f64
+    }
+}
+
+fn executor_loop(
+    rx: Arc<Mutex<Receiver<Job>>>,
+    engine: Arc<Engine>,
+    in_flight: Arc<AtomicUsize>,
+) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return, // orchestrator dropped
+            }
+        };
+        let _queue_us = job.enqueued.elapsed().as_micros() as u64;
+        let result = engine
+            .run_with_hist(&job.hist, &job.cands)
+            .map(|scores| (job.chunk_index, scores));
+        in_flight.fetch_sub(1, Ordering::Relaxed);
+        let _ = job.reply.send(result);
+    }
+}

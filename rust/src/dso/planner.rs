@@ -1,0 +1,183 @@
+//! The DSO batch-split planner.
+//!
+//! "When an upstream request arrives, we dynamically split the task based
+//! on batch size (in descending order), assign it to the corresponding
+//! executor in the queue" (§3.3). Given the available profile sizes
+//! (ascending) and a request of M candidates, produce the chunk sizes to
+//! dispatch: greedily take the largest profile that fits the remainder;
+//! the final remainder is padded up to the smallest covering profile.
+
+/// A planned split: chunk sizes (each a valid profile) plus how many
+/// padded rows the tail chunk carries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SplitPlan {
+    /// Profile sizes to execute, in dispatch (descending) order.
+    pub chunks: Vec<usize>,
+    /// Wasted rows: sum(chunks) - m.
+    pub padding: usize,
+}
+
+impl SplitPlan {
+    /// Total rows executed (≥ m).
+    pub fn total(&self) -> usize {
+        self.chunks.iter().sum()
+    }
+}
+
+/// Compute the descending-order split of `m` candidates over `profiles`
+/// (strictly ascending, non-empty).
+///
+/// Invariants (property-tested):
+/// * every chunk is one of the profiles;
+/// * chunks are non-increasing;
+/// * total >= m and total - m < smallest profile (minimal padding under
+///   the greedy policy);
+/// * a request equal to one profile maps to exactly that profile.
+pub fn plan_split(m: usize, profiles: &[usize]) -> SplitPlan {
+    assert!(!profiles.is_empty(), "no profiles");
+    debug_assert!(profiles.windows(2).all(|w| w[0] < w[1]), "profiles must ascend");
+    let smallest = profiles[0];
+    let mut chunks = Vec::new();
+    let mut rest = m;
+    // greedy descending
+    for &p in profiles.iter().rev() {
+        while rest >= p {
+            chunks.push(p);
+            rest -= p;
+        }
+    }
+    let mut padding = 0;
+    if rest > 0 {
+        // pad the remainder up to the smallest covering profile
+        let cover = *profiles.iter().find(|&&p| p >= rest).unwrap_or(&smallest);
+        padding = cover - rest;
+        chunks.push(cover);
+        // keep dispatch order non-increasing
+        chunks.sort_unstable_by(|a, b| b.cmp(a));
+    }
+    SplitPlan { chunks, padding }
+}
+
+/// Rows executed by the implicit-shape baseline (pad to max profile in
+/// ceil(m / max) executions) — used by benches to report waste.
+pub fn padded_rows(m: usize, max_profile: usize) -> usize {
+    m.div_ceil(max_profile) * max_profile
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::util::propcheck;
+
+    const PROFILES: &[usize] = &[128, 256, 512, 1024];
+
+    #[test]
+    fn exact_profile_maps_to_itself() {
+        for &p in PROFILES {
+            let plan = plan_split(p, PROFILES);
+            assert_eq!(plan.chunks, vec![p]);
+            assert_eq!(plan.padding, 0);
+        }
+    }
+
+    #[test]
+    fn descending_order() {
+        let plan = plan_split(1024 + 512 + 128, PROFILES);
+        assert_eq!(plan.chunks, vec![1024, 512, 128]);
+        assert_eq!(plan.padding, 0);
+    }
+
+    #[test]
+    fn remainder_padded_to_covering_profile() {
+        let plan = plan_split(1000, PROFILES);
+        // 1000 = 512 + 256 + 128 + 104(pad to 128)
+        assert_eq!(plan.chunks, vec![512, 256, 128, 128]);
+        assert_eq!(plan.padding, 24);
+        assert_eq!(plan.total(), 1024);
+    }
+
+    #[test]
+    fn tiny_request_uses_smallest() {
+        let plan = plan_split(1, PROFILES);
+        assert_eq!(plan.chunks, vec![128]);
+        assert_eq!(plan.padding, 127);
+    }
+
+    #[test]
+    fn zero_request_is_empty() {
+        let plan = plan_split(0, PROFILES);
+        assert!(plan.chunks.is_empty());
+        assert_eq!(plan.padding, 0);
+    }
+
+    #[test]
+    fn padded_rows_baseline() {
+        assert_eq!(padded_rows(1, 1024), 1024);
+        assert_eq!(padded_rows(1024, 1024), 1024);
+        assert_eq!(padded_rows(1025, 1024), 2048);
+    }
+
+    #[test]
+    fn prop_conservation_and_order() {
+        propcheck::check("split conserves items, orders chunks", 2000, |g| {
+            let m = g.usize_in(0, 5000);
+            let plan = plan_split(m, PROFILES);
+            prop_ensure!(plan.total() >= m, "total {} < m {m}", plan.total());
+            prop_ensure!(plan.total() - m == plan.padding, "padding accounting");
+            prop_ensure!(
+                plan.padding < PROFILES[0].max(1),
+                "padding {} >= smallest profile",
+                plan.padding
+            );
+            prop_ensure!(
+                plan.chunks.iter().all(|c| PROFILES.contains(c)),
+                "chunk not a profile: {:?}",
+                plan.chunks
+            );
+            prop_ensure!(
+                plan.chunks.windows(2).all(|w| w[0] >= w[1]),
+                "not descending: {:?}",
+                plan.chunks
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_any_profile_set() {
+        propcheck::check("split valid for random profile sets", 1000, |g| {
+            // random strictly-ascending profile set
+            let mut profs = g.vec_usize(1, 5, 1, 300);
+            profs.sort_unstable();
+            profs.dedup();
+            let m = g.usize_in(0, 2000);
+            let plan = plan_split(m, &profs);
+            prop_ensure!(plan.total() >= m, "coverage");
+            prop_ensure!(
+                plan.chunks.iter().all(|c| profs.contains(c)),
+                "chunks {:?} profiles {:?}",
+                plan.chunks,
+                profs
+            );
+            prop_ensure!(plan.padding < profs[0].max(1) || profs.len() == 1,
+                "padding {} vs smallest {}", plan.padding, profs[0]);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_beats_baseline_padding_on_mixed_m() {
+        // the whole point of the DSO: less wasted compute than pad-to-max
+        for m in [128usize, 256, 384, 512, 640, 768, 1000, 1024] {
+            let dso = plan_split(m, PROFILES).total();
+            let baseline = padded_rows(m, 1024);
+            assert!(dso <= baseline, "m={m}: dso {dso} > baseline {baseline}");
+        }
+        // strict win on the average of the Table 5 mix
+        let mix = [128usize, 256, 512, 1024];
+        let dso: usize = mix.iter().map(|&m| plan_split(m, PROFILES).total()).sum();
+        let base: usize = mix.iter().map(|&m| padded_rows(m, 1024)).sum();
+        assert!(dso * 2 < base, "dso {dso} base {base}");
+    }
+}

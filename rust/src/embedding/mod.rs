@@ -1,0 +1,159 @@
+//! CPU-side embedding tables (the paper's decoupled design keeps
+//! "embedding look-up" on the CPU; only the dense transformer runs on the
+//! accelerator).
+//!
+//! Tables are hashed + seeded: the d-dim vector of an item id is
+//! synthesized deterministically on first touch, so a catalog of 10^6+
+//! items costs no startup time, while repeated lookups of hot items hit a
+//! small materialized cache. Item side features (from the PDA query
+//! engine) are folded into the embedding via a fixed projection, so
+//! feature staleness/missingness visibly changes the model input — the
+//! accuracy side of the async-cache trade-off is observable end to end.
+
+use std::sync::Mutex;
+
+use crate::cache::{Lookup, ShardedCache};
+use crate::util::rng::Rng;
+
+/// Hashed embedding table: id -> dense f32 vector of dimension d.
+pub struct EmbeddingTable {
+    d: usize,
+    seed: u64,
+    /// Materialized-hot-row cache (id -> vector).
+    cache: ShardedCache<Vec<f32>>,
+    /// Projection weights folding side features into the embedding.
+    feat_proj: Mutex<Vec<f32>>, // [feat_dims] broadcast scale, lazily sized
+}
+
+impl EmbeddingTable {
+    pub fn new(d: usize, seed: u64, hot_capacity: usize) -> Self {
+        EmbeddingTable {
+            d,
+            seed,
+            cache: ShardedCache::new(hot_capacity.max(1), 8, std::time::Duration::from_secs(3600)),
+            feat_proj: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Synthesize (or fetch) the base embedding row of `id`.
+    fn base_row(&self, id: u64) -> Vec<f32> {
+        if let Lookup::Fresh(v) = self.cache.get(id) {
+            return v;
+        }
+        let mut rng = Rng::new(self.seed ^ id.wrapping_mul(0x2545_F491_4F6C_DD1D));
+        let scale = 1.0 / (self.d as f32).sqrt();
+        let row: Vec<f32> = (0..self.d).map(|_| rng.normal_f32() * scale).collect();
+        self.cache.insert(id, row.clone());
+        row
+    }
+
+    /// Write the embedding of `id` into `out` (len d), no allocation.
+    pub fn embed_into(&self, id: u64, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d);
+        let row = self.base_row(id);
+        out.copy_from_slice(&row);
+    }
+
+    /// Write embedding + folded side features into `out`.
+    ///
+    /// Missing features (the async-cache zero default) leave the base
+    /// embedding unperturbed — a degraded but well-formed input.
+    pub fn embed_with_features_into(&self, id: u64, features: &[f32], out: &mut [f32]) {
+        self.embed_into(id, out);
+        if features.is_empty() {
+            return;
+        }
+        let proj = self.feature_projection(features.len());
+        // fold: out[j] += 0.1 * proj[i] * feat[i] rotated over dims
+        for (i, (&f, &p)) in features.iter().zip(proj.iter()).enumerate() {
+            out[i % self.d] += 0.1 * p * f;
+        }
+    }
+
+    fn feature_projection(&self, n: usize) -> Vec<f32> {
+        let mut proj = self.feat_proj.lock().unwrap();
+        if proj.len() < n {
+            let mut rng = Rng::new(self.seed ^ 0xFEED_FACE);
+            *proj = (0..n).map(|_| rng.normal_f32()).collect();
+        }
+        proj[..n].to_vec()
+    }
+
+    /// Hot-row cache statistics (hit rate on popular items).
+    pub fn cache_stats(&self) -> &crate::cache::CacheStats {
+        &self.cache.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_rows() {
+        let t = EmbeddingTable::new(16, 3, 128);
+        let mut a = vec![0.0; 16];
+        let mut b = vec![0.0; 16];
+        t.embed_into(42, &mut a);
+        t.embed_into(42, &mut b);
+        assert_eq!(a, b);
+        t.embed_into(43, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn unit_ish_scale() {
+        let t = EmbeddingTable::new(64, 5, 128);
+        let mut v = vec![0.0; 64];
+        t.embed_into(7, &mut v);
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!(norm > 0.3 && norm < 3.0, "norm {norm}");
+    }
+
+    #[test]
+    fn features_perturb_embedding() {
+        let t = EmbeddingTable::new(16, 3, 128);
+        let mut base = vec![0.0; 16];
+        let mut with = vec![0.0; 16];
+        t.embed_into(42, &mut base);
+        t.embed_with_features_into(42, &[1.0, -1.0, 0.5], &mut with);
+        assert_ne!(base, with);
+        // zero features == missing features == base embedding
+        let mut zero = vec![0.0; 16];
+        t.embed_with_features_into(42, &[0.0, 0.0, 0.0], &mut zero);
+        assert_eq!(base, zero);
+    }
+
+    #[test]
+    fn hot_cache_hits_on_repeat() {
+        let t = EmbeddingTable::new(8, 3, 128);
+        let mut v = vec![0.0; 8];
+        for _ in 0..10 {
+            t.embed_into(1, &mut v);
+        }
+        let (hits, _, misses, _, _) = t.cache_stats().snapshot();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 9);
+    }
+
+    #[test]
+    fn concurrent_lookups_consistent() {
+        let t = std::sync::Arc::new(EmbeddingTable::new(32, 9, 1024));
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let t = std::sync::Arc::clone(&t);
+                std::thread::spawn(move || {
+                    let mut v = vec![0.0; 32];
+                    t.embed_into(123, &mut v);
+                    v
+                })
+            })
+            .collect();
+        let rows: Vec<Vec<f32>> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(rows.windows(2).all(|w| w[0] == w[1]));
+    }
+}

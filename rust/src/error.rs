@@ -1,0 +1,93 @@
+//! Crate-wide error type.
+//!
+//! The library surfaces one `Error` enum so callers (CLI, benches, server)
+//! can match on failure classes; binaries convert to `anyhow` at the edge.
+
+use std::fmt;
+
+/// All the ways the FLAME stack can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O error with context path.
+    Io(String, std::io::Error),
+    /// Artifact manifest missing / malformed / inconsistent.
+    Manifest(String),
+    /// JSON parse error (hand-rolled parser in `util::json`).
+    Json(String),
+    /// PJRT / XLA runtime error.
+    Xla(xla::Error),
+    /// Request rejected by admission control (queue full / shedding).
+    Overloaded(String),
+    /// Configuration error (bad flag, unknown scenario, ...).
+    Config(String),
+    /// A requested engine/profile is not in the loaded set.
+    UnknownEngine(String),
+    /// Wire-protocol violation on the TCP front.
+    Protocol(String),
+    /// Internal invariant broken (worker died, channel closed, ...).
+    Internal(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(path, e) => write!(f, "io error at {path}: {e}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::UnknownEngine(m) => write!(f, "unknown engine: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(_, e) => Some(e),
+            Error::Xla(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Attach a path to an io::Error.
+pub fn io_err(path: impl Into<String>) -> impl FnOnce(std::io::Error) -> Error {
+    let p = path.into();
+    move |e| Error::Io(p, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Manifest("missing field".into());
+        assert!(e.to_string().contains("missing field"));
+        let e = io_err("/some/path")(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let s = e.to_string();
+        assert!(s.contains("/some/path") && s.contains("gone"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -1,0 +1,142 @@
+//! Synthetic item catalog + user base — the production-data substitute
+//! (DESIGN.md §Environment substitutions).
+//!
+//! Items carry Zipf-distributed popularity (rank 0 = hottest); users
+//! carry deterministic interaction histories drawn from that popularity,
+//! which is exactly the structure that makes the paper's *item-side*
+//! feature cache pay off (§3.1: "caching on the core hot items side
+//! offers greater benefits compared to caching on the user side").
+
+use crate::util::rng::{Rng, Zipf};
+
+/// The item catalog: ids are popularity ranks under a permutation so the
+/// hot set isn't a contiguous prefix (more realistic cache keys).
+pub struct Catalog {
+    size: u64,
+    zipf: Zipf,
+    /// multiplicative hash constant permuting rank -> item id space
+    perm: u64,
+}
+
+impl Catalog {
+    pub fn new(size: u64, theta: f64) -> Self {
+        assert!(size > 0);
+        Catalog { size, zipf: Zipf::new(size, theta), perm: 0x9E37_79B9_7F4A_7C15 }
+    }
+
+    pub fn size(&self) -> u64 {
+        self.size
+    }
+
+    /// Map a popularity rank to a stable item id.
+    pub fn id_of_rank(&self, rank: u64) -> u64 {
+        rank.wrapping_mul(self.perm) % self.size
+    }
+
+    /// Draw one item id by popularity.
+    pub fn sample_item(&self, rng: &mut Rng) -> u64 {
+        self.id_of_rank(self.zipf.sample(rng))
+    }
+
+    /// Draw n distinct-ish candidate items (duplicates allowed across
+    /// requests, deduped within one request like an upstream retriever).
+    pub fn sample_candidates(&self, rng: &mut Rng, n: usize) -> Vec<u64> {
+        let mut out = Vec::with_capacity(n);
+        let mut tries = 0;
+        while out.len() < n {
+            let id = self.sample_item(rng);
+            tries += 1;
+            if !out.contains(&id) || tries > 4 * n {
+                out.push(id);
+            }
+        }
+        out
+    }
+}
+
+/// Synthetic user base with deterministic per-user histories.
+pub struct UserBase {
+    n_users: u64,
+    seed: u64,
+}
+
+impl UserBase {
+    pub fn new(n_users: u64, seed: u64) -> Self {
+        assert!(n_users > 0);
+        UserBase { n_users, seed }
+    }
+
+    pub fn n_users(&self) -> u64 {
+        self.n_users
+    }
+
+    /// A user's interaction history (item ids), deterministic per user.
+    /// Drawn by popularity so histories share hot items.
+    pub fn history(&self, catalog: &Catalog, user_id: u64, len: usize) -> Vec<u64> {
+        let mut rng = Rng::new(self.seed ^ user_id.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        (0..len).map(|_| catalog.sample_item(&mut rng)).collect()
+    }
+
+    /// Draw a random user id (uniform — every user is equally likely,
+    /// which is why user-side caching has poor hit rates, per the paper's
+    /// limitation discussion).
+    pub fn sample_user(&self, rng: &mut Rng) -> u64 {
+        rng.below(self.n_users)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_within_catalog() {
+        let c = Catalog::new(1000, 0.99);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(c.sample_item(&mut rng) < 1000);
+        }
+    }
+
+    #[test]
+    fn rank_permutation_is_stable_and_spread() {
+        let c = Catalog::new(1_000_000, 0.99);
+        let a = c.id_of_rank(0);
+        assert_eq!(a, c.id_of_rank(0));
+        // the top ranks should not be contiguous ids
+        let ids: Vec<u64> = (0..4).map(|r| c.id_of_rank(r)).collect();
+        let contiguous = ids.windows(2).all(|w| w[1] == w[0] + 1);
+        assert!(!contiguous, "{ids:?}");
+    }
+
+    #[test]
+    fn candidates_mostly_unique() {
+        let c = Catalog::new(100_000, 0.9);
+        let mut rng = Rng::new(3);
+        let cands = c.sample_candidates(&mut rng, 64);
+        assert_eq!(cands.len(), 64);
+        let mut uniq = cands.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert!(uniq.len() >= 56, "only {} unique", uniq.len());
+    }
+
+    #[test]
+    fn history_deterministic_per_user() {
+        let c = Catalog::new(10_000, 0.99);
+        let u = UserBase::new(1000, 5);
+        assert_eq!(u.history(&c, 7, 32), u.history(&c, 7, 32));
+        assert_ne!(u.history(&c, 7, 32), u.history(&c, 8, 32));
+    }
+
+    #[test]
+    fn histories_share_hot_items() {
+        // Zipf skew: many users' histories should intersect on hot items.
+        let c = Catalog::new(100_000, 1.1);
+        let u = UserBase::new(100, 5);
+        let h1 = u.history(&c, 1, 64);
+        let h2 = u.history(&c, 2, 64);
+        let inter = h1.iter().filter(|id| h2.contains(id)).count();
+        assert!(inter > 0, "no shared hot items");
+    }
+}

@@ -1,0 +1,199 @@
+//! Simulated remote feature service (the paper's "remote feature query
+//! service" that FLAME's PDA sits in front of).
+//!
+//! Features are generated deterministically from ids (seeded hashing), so
+//! the store needs no real storage yet returns stable values — the cache
+//! layers above can be validated for *correctness* (same bytes with and
+//! without cache) while the `netsim::Link` makes the *cost* of a remote
+//! query real.
+
+pub mod catalog;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::netsim::Link;
+use crate::util::rng::Rng;
+
+/// Schema of one item's feature payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FeatureSchema {
+    /// Dense feature values per item ("a dozen pieces of side info").
+    pub dense_dims: usize,
+    /// Bytes of overhead per item on the wire (keys, proto framing).
+    pub wire_overhead: usize,
+}
+
+impl Default for FeatureSchema {
+    fn default() -> Self {
+        FeatureSchema { dense_dims: 16, wire_overhead: 24 }
+    }
+}
+
+impl FeatureSchema {
+    /// Wire bytes for a batch of n items.
+    pub fn wire_bytes(&self, n: usize) -> usize {
+        n * (self.dense_dims * 4 + self.wire_overhead)
+    }
+}
+
+/// One item's fetched features.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ItemFeatures {
+    pub item_id: u64,
+    pub dense: Vec<f32>,
+    /// Version counter — bumped when the store "updates" the item, used
+    /// to observe staleness in async-cache tests.
+    pub version: u64,
+}
+
+/// The remote store: deterministic feature synthesis behind a simulated
+/// network link.
+pub struct RemoteStore {
+    schema: FeatureSchema,
+    link: Arc<Link>,
+    seed: u64,
+    /// Global version epoch; bumping simulates upstream feature updates.
+    epoch: std::sync::atomic::AtomicU64,
+    /// Server-side processing time per query batch (fixed part).
+    proc_time: Duration,
+    /// Server-side cost per item in the batch (multiget fan-out, storage
+    /// reads, serialization) — this is what makes cache hits cut *latency*
+    /// and not just bytes.
+    per_item: Duration,
+}
+
+impl RemoteStore {
+    pub fn new(schema: FeatureSchema, link: Arc<Link>, seed: u64) -> Self {
+        RemoteStore {
+            schema,
+            link,
+            seed,
+            epoch: std::sync::atomic::AtomicU64::new(0),
+            proc_time: Duration::from_micros(50),
+            per_item: Duration::from_micros(40),
+        }
+    }
+
+    /// Override the server-side cost model (tests/benches).
+    pub fn with_costs(mut self, proc_time: Duration, per_item: Duration) -> Self {
+        self.proc_time = proc_time;
+        self.per_item = per_item;
+        self
+    }
+
+    pub fn schema(&self) -> FeatureSchema {
+        self.schema
+    }
+
+    pub fn link(&self) -> &Arc<Link> {
+        &self.link
+    }
+
+    /// Simulate an upstream feature refresh (e.g. hourly stats rebuild).
+    pub fn bump_epoch(&self) {
+        self.epoch.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Deterministic feature synthesis — stable per (seed, item, epoch).
+    fn synthesize(&self, item_id: u64) -> ItemFeatures {
+        let epoch = self.epoch();
+        let mut rng = Rng::new(
+            self.seed ^ item_id.wrapping_mul(0xD6E8_FEB8_6659_FD93) ^ (epoch << 48),
+        );
+        let dense = (0..self.schema.dense_dims).map(|_| rng.normal_f32()).collect();
+        ItemFeatures { item_id, dense, version: epoch }
+    }
+
+    /// Fetch a batch of item features over the simulated link (one RTT +
+    /// serialization for the whole batch — batching is already the
+    /// baseline practice the paper assumes).
+    pub fn fetch_batch(&self, item_ids: &[u64]) -> Vec<ItemFeatures> {
+        let bytes = self.schema.wire_bytes(item_ids.len());
+        self.link.transfer(bytes);
+        crate::util::timeutil::precise_wait(
+            self.proc_time + self.per_item * item_ids.len() as u32,
+        );
+        item_ids.iter().map(|&id| self.synthesize(id)).collect()
+    }
+
+    /// Failure-aware fetch: a link timeout costs the full timeout wait
+    /// and yields no features (the caller decides how to degrade —
+    /// `pda::QueryEngine` falls back to stale/default values).
+    pub fn try_fetch_batch(
+        &self,
+        item_ids: &[u64],
+    ) -> Result<Vec<ItemFeatures>, crate::netsim::TransferTimeout> {
+        let bytes = self.schema.wire_bytes(item_ids.len());
+        match self.link.try_transfer(bytes) {
+            Ok(_) => {
+                crate::util::timeutil::precise_wait(
+                    self.proc_time + self.per_item * item_ids.len() as u32,
+                );
+                Ok(item_ids.iter().map(|&id| self.synthesize(id)).collect())
+            }
+            Err((t, _)) => Err(t),
+        }
+    }
+
+    /// Fetch a single item (used by the async refresh workers).
+    pub fn fetch_one(&self, item_id: u64) -> ItemFeatures {
+        self.fetch_batch(std::slice::from_ref(&item_id)).pop().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{Link, LinkConfig};
+
+    fn store() -> RemoteStore {
+        let link = Arc::new(Link::new(LinkConfig {
+            rtt: Duration::from_micros(100),
+            bandwidth_bps: 1e9,
+            jitter: 0.0,
+            fail_rate: 0.0,
+        }));
+        RemoteStore::new(FeatureSchema::default(), link, 7)
+    }
+
+    #[test]
+    fn deterministic_per_item() {
+        let s = store();
+        let a = s.fetch_one(42);
+        let b = s.fetch_one(42);
+        assert_eq!(a, b);
+        let c = s.fetch_one(43);
+        assert_ne!(a.dense, c.dense);
+    }
+
+    #[test]
+    fn epoch_changes_features() {
+        let s = store();
+        let a = s.fetch_one(42);
+        s.bump_epoch();
+        let b = s.fetch_one(42);
+        assert_ne!(a.dense, b.dense);
+        assert_eq!(b.version, 1);
+    }
+
+    #[test]
+    fn batch_counts_wire_bytes_once() {
+        let s = store();
+        let before = s.link.bytes_total();
+        s.fetch_batch(&[1, 2, 3, 4]);
+        let bytes = s.link.bytes_total() - before;
+        assert_eq!(bytes as usize, s.schema.wire_bytes(4));
+        assert_eq!(s.link.queries_total(), 1);
+    }
+
+    #[test]
+    fn dense_dims_respected() {
+        let s = store();
+        assert_eq!(s.fetch_one(5).dense.len(), s.schema().dense_dims);
+    }
+}

@@ -1,0 +1,179 @@
+//! FKE — Fused Kernel Engine registry (paper §3.2).
+//!
+//! The kernel work itself lives at L1/L2 (`python/compile/kernels`,
+//! lowered at build time); at serve time the FKE is the *engine variant*
+//! axis: which lowered graph a stack runs. This module names the ablation
+//! levels, maps them onto manifest entries, and computes the analytic
+//! efficiency numbers (mask-aware FLOP savings, VMEM budgets) reported in
+//! EXPERIMENTS.md.
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+
+/// The three engine-construction levels of Table 4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// "ONNX Model Conversion": mechanically exported graph.
+    Naive,
+    /// "TensorRT API Impl.": deliberately constructed graph.
+    Api,
+    /// "+ Kernel Fusion": api graph + the L1 pallas plug-ins.
+    Fused,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Naive => "naive",
+            Variant::Api => "api",
+            Variant::Fused => "fused",
+        }
+    }
+
+    /// Paper row label (Table 4).
+    pub fn paper_label(&self) -> &'static str {
+        match self {
+            Variant::Naive => "ONNX Model Conversion",
+            Variant::Api => "TensorRT API Impl.",
+            Variant::Fused => "TensorRT API Impl. + Kernel Fusion",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "naive" | "onnx" => Ok(Variant::Naive),
+            "api" => Ok(Variant::Api),
+            "fused" => Ok(Variant::Fused),
+            o => Err(Error::Config(format!("unknown variant '{o}'"))),
+        }
+    }
+
+    pub fn all() -> [Variant; 3] {
+        [Variant::Naive, Variant::Api, Variant::Fused]
+    }
+}
+
+/// Analytic tile accounting of the mask-aware flash-attention kernel —
+/// mirror of `python/compile/kernels/flash_attention.py::attention_tile_stats`
+/// (same greedy block choice, same visit rule).
+#[derive(Clone, Copy, Debug)]
+pub struct TileStats {
+    pub block: usize,
+    pub visited_tiles: usize,
+    pub total_tiles: usize,
+}
+
+impl TileStats {
+    /// Score-FLOP fraction vs dense attention.
+    pub fn flop_fraction(&self) -> f64 {
+        self.visited_tiles as f64 / self.total_tiles as f64
+    }
+}
+
+/// Largest power-of-two block <= cap dividing both lengths.
+pub fn choose_block(hist_len: usize, m: usize, cap: usize) -> usize {
+    let mut b = 1;
+    while b * 2 <= cap && hist_len % (b * 2) == 0 && m % (b * 2) == 0 {
+        b *= 2;
+    }
+    b
+}
+
+/// Tile accounting for one block's attention at (hist_len, m).
+pub fn attention_tile_stats(hist_len: usize, m: usize) -> TileStats {
+    let block = choose_block(hist_len, m, 128);
+    let nq = (hist_len + m) / block;
+    let nh = hist_len / block;
+    let mut visited = 0usize;
+    for qi in 0..nq {
+        visited += if qi < nh { qi + 1 } else { nh + 1 };
+    }
+    TileStats { block, visited_tiles: visited, total_tiles: nq * nq }
+}
+
+/// Per-grid-step VMEM bytes of the flash kernel (q tile + resident K/V +
+/// accumulators) — the §Perf budget check (≤ ~16 MB on TPU).
+pub fn attention_vmem_bytes(cfg: &ModelConfig, m: usize) -> usize {
+    let n = cfg.n_tokens(m);
+    let hd = cfg.d_model / cfg.n_heads;
+    let block = choose_block(cfg.block_len(), m, 128);
+    // f32: q tile, k, v, acc, m/l vectors
+    4 * (block * hd + 2 * n * hd + block * hd + 2 * block)
+}
+
+/// Per-grid-step VMEM bytes of the fused LN+FFN kernel (mirror of
+/// `fused_ffn.py::ffn_vmem_bytes`).
+pub fn ffn_vmem_bytes(cfg: &ModelConfig, m: usize) -> usize {
+    let n = cfg.n_tokens(m);
+    let d = cfg.d_model;
+    let f = cfg.d_ff();
+    let mut block_n = 1;
+    while block_n * 2 <= 128 && n % (block_n * 2) == 0 {
+        block_n *= 2;
+    }
+    let weights = d * f + f + f * d + d + 2 * d;
+    let tile = block_n * d * 2;
+    let act = block_n * f;
+    4 * (weights + tile + act)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in Variant::all() {
+            assert_eq!(Variant::parse(v.name()).unwrap(), v);
+        }
+        assert_eq!(Variant::parse("onnx").unwrap(), Variant::Naive);
+        assert!(Variant::parse("xxx").is_err());
+    }
+
+    #[test]
+    fn tile_stats_match_python_tiny() {
+        // python attention_tile_stats(16, 4) == block 4, 15/25 visited
+        let s = attention_tile_stats(16, 4);
+        assert_eq!(s.block, 4);
+        assert_eq!(s.visited_tiles, 15);
+        assert_eq!(s.total_tiles, 25);
+        assert!((s.flop_fraction() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mask_aware_saving_grows_with_m() {
+        // long scenario: block_len 512; more candidates -> bigger dead
+        // candidate x candidate region -> lower visited fraction
+        let f128 = attention_tile_stats(512, 128).flop_fraction();
+        let f512 = attention_tile_stats(512, 512).flop_fraction();
+        let f1024 = attention_tile_stats(512, 1024).flop_fraction();
+        assert!(f512 < f128, "{f512} !< {f128}");
+        assert!(f1024 < f512);
+        // at m = block_len the saving is roughly 2x on scores
+        assert!(f512 < 0.55, "{f512}");
+    }
+
+    #[test]
+    fn vmem_budgets_within_tpu_limits() {
+        for s in [Scenario::Base, Scenario::Long] {
+            let c = s.config();
+            for &m in &c.m_profiles {
+                let a = attention_vmem_bytes(&c, m);
+                let f = ffn_vmem_bytes(&c, m);
+                assert!(a < 16 << 20, "{}/m{m}: attn VMEM {a}", c.name);
+                assert!(f < 16 << 20, "{}/m{m}: ffn VMEM {f}", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn block_divides_both() {
+        for (h, m) in [(512usize, 128usize), (512, 512), (16, 4), (64, 16)] {
+            let b = choose_block(h, m, 128);
+            assert_eq!(h % b, 0);
+            assert_eq!(m % b, 0);
+            assert!(b <= 128);
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! # FLAME — serving system for large-scale generative recommendation
+//!
+//! Reproduction of *"FLAME: A Serving System Optimized for Large-Scale
+//! Generative Recommendation with Efficiency"* (Guo et al., Netease Cloud
+//! Music, 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the FLAME coordinator: the PDA feature pipeline
+//!   (cached feature queries, NUMA binding, staging transfers), the DSO
+//!   dynamic stream orchestrator (explicit-shape executor pools + descending
+//!   batch-split routing), the dynamic batcher, and the request server.
+//! * **L2/L1 (`python/compile`)** — the Climber-like GR model in JAX with
+//!   mask-aware flash-attention and fused LN+FFN Pallas kernels, AOT-lowered
+//!   to HLO text at build time (`make artifacts`).
+//! * **Runtime (`runtime`)** — loads the HLO artifacts through the PJRT C
+//!   API (`xla` crate) and executes them on the request path with
+//!   device-resident weights. Python never runs at serve time.
+//!
+//! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use flame::manifest::Manifest;
+//! use flame::runtime::{Runtime, EngineKey};
+//!
+//! let manifest = Manifest::load("artifacts").unwrap();
+//! let rt = Runtime::new().unwrap();
+//! let engine = rt
+//!     .load_engine(&manifest, &EngineKey::new("tiny", "fused", 8))
+//!     .unwrap();
+//! let hist = vec![0.0f32; 32 * 32];
+//! let cands = vec![0.0f32; 8 * 32];
+//! let scores = engine.run(&hist, &cands).unwrap();
+//! assert_eq!(scores.len(), 8 * 3); // M x n_tasks
+//! ```
+
+pub mod batching;
+pub mod benchkit;
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod dso;
+pub mod embedding;
+pub mod error;
+pub mod featurestore;
+pub mod fke;
+pub mod manifest;
+pub mod metrics;
+pub mod netsim;
+pub mod pda;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,219 @@
+//! `flame` — leader binary: CLI over the serving stack.
+//!
+//! See `flame --help` (cli::help) for commands. The heavy lifting lives
+//! in the library; this file is argument plumbing + reporting.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use flame::batching::RequestQueue;
+use flame::cli::{help, Args};
+use flame::config::{flops, CacheMode, DsoMode, Scenario, StackConfig, WorkloadConfig};
+use flame::manifest::Manifest;
+use flame::pda::numa::Topology;
+use flame::runtime::Runtime;
+use flame::server::pipeline::StackBuilder;
+use flame::workload::{driver, trace, Generator};
+
+fn main() -> Result<()> {
+    let args = Args::from_env().context("parsing arguments")?;
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            print!("{}", help());
+            Ok(())
+        }
+        Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("record") => cmd_record(&args),
+        Some("replay") => cmd_serve(&args), // replay is serve --trace
+        Some("bind") => cmd_bind(&args),
+        Some(other) => bail!("unknown command '{other}' — try `flame help`"),
+    }
+}
+
+fn stack_config(args: &Args) -> Result<StackConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => StackConfig::from_file(std::path::Path::new(path))?,
+        None => StackConfig::default(),
+    };
+    if let Some(mode) = args.get("cache") {
+        cfg.pda.cache_mode = CacheMode::parse(mode)?;
+    }
+    if let Some(mode) = args.get("dso") {
+        cfg.dso.mode = DsoMode::parse(mode)?;
+    }
+    if let Some(n) = args.get_parse::<usize>("workers")? {
+        cfg.server.pipeline_workers = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("executors")? {
+        cfg.dso.executors_per_profile = n;
+    }
+    if args.has("no-numa") {
+        cfg.pda.numa_binding = false;
+    }
+    if args.has("no-staging") {
+        cfg.pda.staging_arenas = false;
+    }
+    if let Some(r) = args.get_parse::<f64>("rate")? {
+        cfg.workload.arrival_rate = Some(r);
+    }
+    if let Some(s) = args.get_parse::<u64>("seed")? {
+        cfg.workload.seed = s;
+    }
+    if let Some(t) = args.get_parse::<f64>("theta")? {
+        cfg.workload.zipf_theta = t;
+    }
+    if let Some(c) = args.get_parse::<u64>("catalog")? {
+        cfg.workload.catalog_size = c;
+    }
+    Ok(cfg)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("FLAME reproduction — system info\n");
+    println!("paper operating envelope (Table 1): GR models 1e9..1e11 FLOPs/request, < 50 ms, 1e10..1e12 requests/day\n");
+    for s in Scenario::all() {
+        let c = s.config();
+        println!("  {}", flops::envelope_summary(&c));
+    }
+    let topo = Topology::detect();
+    println!("\nNUMA topology: {} node(s), {} CPU(s)", topo.n_nodes(), topo.n_cpus());
+    for n in &topo.nodes {
+        println!("  node{}: cpus {:?}", n.id, n.cpus);
+    }
+    let dir = args.get_or("artifacts", "artifacts");
+    match Manifest::load(dir) {
+        Ok(m) => {
+            println!("\nartifacts ({dir}):");
+            for (name, sa) in &m.scenarios {
+                println!(
+                    "  scenario {name}: L={} D={} blocks={} layers={} profiles {:?} ({:.1} MB weights)",
+                    sa.config.seq_len,
+                    sa.config.d_model,
+                    sa.config.n_blocks,
+                    sa.config.layers_per_block,
+                    sa.config.m_profiles,
+                    sa.weights_bytes as f64 / 1e6
+                );
+            }
+            for e in &m.models {
+                println!(
+                    "  engine {}/{}/m{} -> {} ({:.2e} FLOPs)",
+                    e.scenario, e.variant, e.m, e.path, e.flops as f64
+                );
+            }
+        }
+        Err(e) => println!("\nartifacts ({dir}): not available ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn build_stack(args: &Args) -> Result<(Arc<flame::server::ServingStack>, StackConfig)> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let scenario = args.get_or("scenario", "bench");
+    let variant = args.get_or("variant", "fused");
+    let cfg = stack_config(args)?;
+    let manifest = Manifest::load(dir).context("loading manifest — run `make artifacts`")?;
+    let runtime = Runtime::new().context("creating PJRT client")?;
+    eprintln!("[flame] compiling {scenario}/{variant} engines ...");
+    let stack = StackBuilder::new(scenario, variant, cfg.clone())
+        .build(&runtime, &manifest)
+        .context("building serving stack")?;
+    eprintln!(
+        "[flame] ready: profiles {:?}, platform {}",
+        stack.orchestrator.profiles(),
+        runtime.platform()
+    );
+    Ok((Arc::new(stack), cfg))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (stack, cfg) = build_stack(args)?;
+    let n_requests = args.get_parse::<usize>("requests")?.unwrap_or(64);
+    let duration = Duration::from_secs_f64(args.get_parse::<f64>("duration-s")?.unwrap_or(10.0));
+
+    // request stream: trace file or generator
+    let requests = match args.get("trace") {
+        Some(path) => trace::replay(std::path::Path::new(path))?,
+        None => {
+            let mut wl = cfg.workload.clone();
+            if wl.candidate_mix.len() == 1 && wl.candidate_mix[0].0 == 32 {
+                // default mix: uniform over this scenario's profiles
+                wl.candidate_mix =
+                    WorkloadConfig::uniform_mix(stack.orchestrator.profiles());
+            }
+            let mut g = Generator::new(&wl, stack.model_cfg.seq_len);
+            g.batch(n_requests)
+        }
+    };
+    eprintln!("[flame] driving {} requests ...", requests.len());
+
+    let report = match cfg.workload.arrival_rate {
+        Some(rate) => {
+            // open loop: admission queue + pipeline workers, Poisson arrivals
+            let queue = RequestQueue::new(cfg.dso.queue_capacity);
+            let workers = stack.spawn_workers(Arc::clone(&queue), cfg.server.pipeline_workers);
+            let report = driver::open_loop(
+                requests,
+                rate,
+                duration,
+                cfg.dso.queue_capacity,
+                cfg.workload.seed,
+                |r| queue.push(r.clone()).is_ok(),
+            );
+            while !queue.is_empty() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            queue.close();
+            for w in workers {
+                let _ = w.join();
+            }
+            report
+        }
+        // closed loop: one request in flight per worker, no queueing noise
+        None => stack.drive_closed_loop(&requests, cfg.server.pipeline_workers, duration),
+    };
+
+    let snap = stack.metrics.snapshot();
+    println!("\n=== serve report ===");
+    println!("submitted {} / completed {} / rejected {}", report.submitted, report.completed, report.rejected);
+    println!("throughput     : {:.1} k user-item pairs/s", snap.throughput_pairs_per_s / 1e3);
+    println!("overall latency: mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms", snap.overall_mean_ms, snap.overall_p50_ms, snap.overall_p99_ms);
+    println!("compute latency: mean {:.2} ms  p99 {:.2} ms", snap.compute_mean_ms, snap.compute_p99_ms);
+    println!("feature stage  : mean {:.2} ms", snap.feature_mean_ms);
+    println!("network        : {:.1} MB/s", stack.network_mb_per_s());
+    println!("cache hit rate : {:.1} %", stack.query.cache().stats.hit_rate() * 100.0);
+    println!("dso waste      : {:.1} % padded rows", stack.orchestrator.waste_fraction() * 100.0);
+    Ok(())
+}
+
+fn cmd_record(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.first().cloned())
+        .context("record needs --trace FILE")?;
+    let scenario = Scenario::parse(args.get_or("scenario", "bench"))?;
+    let cfg = stack_config(args)?;
+    let mut wl = cfg.workload;
+    wl.candidate_mix = WorkloadConfig::uniform_mix(&scenario.config().m_profiles);
+    let n = args.get_parse::<usize>("requests")?.unwrap_or(256);
+    let mut g = Generator::new(&wl, scenario.config().seq_len);
+    let reqs = g.batch(n);
+    trace::record(std::path::Path::new(&path), &reqs)?;
+    println!("wrote {n} requests to {path}");
+    Ok(())
+}
+
+fn cmd_bind(args: &Args) -> Result<()> {
+    let (stack, _) = build_stack(args)?;
+    let addr = args.get_or("bind", "127.0.0.1:7178");
+    let server = flame::server::tcp::TcpServer::start(Arc::clone(&stack), addr)?;
+    println!("[flame] listening on {}", server.addr);
+    println!("[flame] press ctrl-c to stop");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}

@@ -1,0 +1,318 @@
+//! Artifact manifest: the build-time contract between `python/compile`
+//! and the rust runtime. Parses `artifacts/manifest.json`, loads
+//! `weights_<scenario>.bin` (f32 LE concat in the canonical flatten
+//! order), and reads test-vector containers.
+
+pub mod testvec;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::util::bytes;
+use crate::util::json::{parse, Json};
+
+/// One weight tensor's (name, shape) in flatten order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl WeightSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Per-scenario artifact block.
+#[derive(Clone, Debug)]
+pub struct ScenarioArtifacts {
+    pub config: ModelConfig,
+    pub weights_file: String,
+    pub weights_bytes: u64,
+    pub weights: Vec<WeightSpec>,
+    pub seed: u64,
+}
+
+/// One lowered engine (HLO file) entry.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub scenario: String,
+    pub variant: String,
+    pub m: usize,
+    pub path: String,
+    pub flops: u64,
+    pub n_weight_inputs: usize,
+}
+
+/// One exported test vector.
+#[derive(Clone, Debug)]
+pub struct TestVectorEntry {
+    pub scenario: String,
+    pub variant: String,
+    pub m: usize,
+    pub path: String,
+}
+
+/// Parsed manifest plus its base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub scenarios: BTreeMap<String, ScenarioArtifacts>,
+    pub models: Vec<ModelEntry>,
+    pub testvectors: Vec<TestVectorEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(crate::error::io_err(path.display().to_string()))?;
+        Self::from_json_str(&text, dir)
+    }
+
+    pub fn from_json_str(text: &str, dir: PathBuf) -> Result<Self> {
+        let j = parse(text)?;
+        let mut scenarios = BTreeMap::new();
+        for (name, sj) in j.get("scenarios")?.as_obj()? {
+            scenarios.insert(name.clone(), parse_scenario(name, sj)?);
+        }
+        let mut models = Vec::new();
+        for mj in j.get("models")?.as_arr()? {
+            models.push(ModelEntry {
+                scenario: mj.get("scenario")?.as_str()?.to_string(),
+                variant: mj.get("variant")?.as_str()?.to_string(),
+                m: mj.get("m")?.as_usize()?,
+                path: mj.get("path")?.as_str()?.to_string(),
+                flops: mj.get("flops")?.as_u64()?,
+                n_weight_inputs: mj.get("n_weight_inputs")?.as_usize()?,
+            });
+        }
+        let mut testvectors = Vec::new();
+        if let Some(tv) = j.opt("testvectors") {
+            for t in tv.as_arr()? {
+                testvectors.push(TestVectorEntry {
+                    scenario: t.get("scenario")?.as_str()?.to_string(),
+                    variant: t.get("variant")?.as_str()?.to_string(),
+                    m: t.get("m")?.as_usize()?,
+                    path: t.get("path")?.as_str()?.to_string(),
+                });
+            }
+        }
+        let m = Manifest { dir, scenarios, models, testvectors };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-checks: models reference known scenarios + profiles; weight
+    /// byte counts match the spec; rust/python FLOP formulas agree.
+    pub fn validate(&self) -> Result<()> {
+        for e in &self.models {
+            let s = self.scenarios.get(&e.scenario).ok_or_else(|| {
+                Error::Manifest(format!("model {} references unknown scenario {}", e.path, e.scenario))
+            })?;
+            if !s.config.m_profiles.contains(&e.m) {
+                return Err(Error::Manifest(format!(
+                    "model {} has M={} not in scenario profiles {:?}",
+                    e.path, e.m, s.config.m_profiles
+                )));
+            }
+            let expect = crate::config::flops::model_flops(&s.config, e.m);
+            if expect != e.flops {
+                return Err(Error::Manifest(format!(
+                    "FLOPs mismatch for {}: python says {}, rust says {expect}",
+                    e.path, e.flops
+                )));
+            }
+            if e.n_weight_inputs != s.weights.len() {
+                return Err(Error::Manifest(format!(
+                    "weight-input count mismatch for {}", e.path
+                )));
+            }
+        }
+        for (name, s) in &self.scenarios {
+            let numel: usize = s.weights.iter().map(|w| w.numel()).sum();
+            if numel as u64 * 4 != s.weights_bytes {
+                return Err(Error::Manifest(format!(
+                    "scenario {name}: weight bytes {} != 4 * numel {numel}",
+                    s.weights_bytes
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Find the engine entry for (scenario, variant, m).
+    pub fn find(&self, scenario: &str, variant: &str, m: usize) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|e| e.scenario == scenario && e.variant == variant && e.m == m)
+            .ok_or_else(|| {
+                Error::UnknownEngine(format!(
+                    "{scenario}/{variant}/m{m} (have: {})",
+                    self.models
+                        .iter()
+                        .map(|e| format!("{}/{}/m{}", e.scenario, e.variant, e.m))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+    }
+
+    pub fn scenario(&self, name: &str) -> Result<&ScenarioArtifacts> {
+        self.scenarios
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("scenario '{name}' not in manifest")))
+    }
+
+    /// All M profiles that have a lowered engine for (scenario, variant).
+    pub fn profiles_for(&self, scenario: &str, variant: &str) -> Vec<usize> {
+        let mut ms: Vec<usize> = self
+            .models
+            .iter()
+            .filter(|e| e.scenario == scenario && e.variant == variant)
+            .map(|e| e.m)
+            .collect();
+        ms.sort();
+        ms
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+
+    /// Load a scenario's weight blob, sliced per tensor in flatten order.
+    pub fn load_weights(&self, scenario: &str) -> Result<Vec<(WeightSpec, Vec<f32>)>> {
+        let s = self.scenario(scenario)?;
+        let raw = bytes::read_file(&self.path_of(&s.weights_file))?;
+        if raw.len() as u64 != s.weights_bytes {
+            return Err(Error::Manifest(format!(
+                "weights file {} is {} bytes, manifest says {}",
+                s.weights_file,
+                raw.len(),
+                s.weights_bytes
+            )));
+        }
+        let all = bytes::f32_slice_from_le(&raw)?;
+        let mut out = Vec::with_capacity(s.weights.len());
+        let mut off = 0usize;
+        for w in &s.weights {
+            let n = w.numel();
+            out.push((w.clone(), all[off..off + n].to_vec()));
+            off += n;
+        }
+        debug_assert_eq!(off, all.len());
+        Ok(out)
+    }
+}
+
+fn parse_scenario(name: &str, sj: &Json) -> Result<ScenarioArtifacts> {
+    let config = ModelConfig {
+        name: name.to_string(),
+        seq_len: sj.get("seq_len")?.as_usize()?,
+        n_blocks: sj.get("n_blocks")?.as_usize()?,
+        layers_per_block: sj.get("layers_per_block")?.as_usize()?,
+        d_model: sj.get("d_model")?.as_usize()?,
+        n_heads: sj.get("n_heads")?.as_usize()?,
+        n_tasks: sj.get("n_tasks")?.as_usize()?,
+        m_profiles: sj
+            .get("m_profiles")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        native_m: sj.get("native_m")?.as_usize()?,
+    };
+    config.validate()?;
+    let mut weights = Vec::new();
+    for w in sj.get("weights")?.as_arr()? {
+        weights.push(WeightSpec {
+            name: w.get("name")?.as_str()?.to_string(),
+            shape: w
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+        });
+    }
+    Ok(ScenarioArtifacts {
+        config,
+        weights_file: sj.get("weights_file")?.as_str()?.to_string(),
+        weights_bytes: sj.get("weights_bytes")?.as_u64()?,
+        weights,
+        seed: sj.get("seed")?.as_u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> String {
+        // A self-consistent tiny manifest (FLOPs must match the rust
+        // formula: tiny @ M=8 = 2_791_424).
+        r#"{
+          "version": 1,
+          "scenarios": {
+            "tiny": {
+              "seq_len": 32, "n_blocks": 2, "layers_per_block": 2,
+              "d_model": 32, "n_heads": 2, "n_tasks": 3, "d_ff": 128,
+              "block_len": 16, "m_profiles": [4, 8], "native_m": 8,
+              "seed": 1001, "weights_file": "weights_tiny.bin",
+              "weights_bytes": 16,
+              "weights": [{"name": "w0", "shape": [2, 2]}]
+            }
+          },
+          "models": [
+            {"scenario": "tiny", "variant": "api", "m": 8,
+             "path": "tiny_api_m8.hlo.txt", "flops": 2791424,
+             "n_weight_inputs": 1}
+          ],
+          "testvectors": [
+            {"scenario": "tiny", "variant": "api", "m": 8, "path": "tv.bin"}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::from_json_str(&mini_manifest(), PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.scenarios.len(), 1);
+        let e = m.find("tiny", "api", 8).unwrap();
+        assert_eq!(e.flops, 2_791_424);
+        assert_eq!(m.profiles_for("tiny", "api"), vec![8]);
+        assert!(m.find("tiny", "api", 4).is_err());
+        assert!(m.find("tiny", "fused", 8).is_err());
+    }
+
+    #[test]
+    fn rejects_flops_mismatch() {
+        let bad = mini_manifest().replace("2791424", "123");
+        assert!(Manifest::from_json_str(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_profile() {
+        let bad = mini_manifest().replace("\"m\": 8", "\"m\": 16");
+        assert!(Manifest::from_json_str(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_weight_byte_mismatch() {
+        let bad = mini_manifest().replace("\"weights_bytes\": 16", "\"weights_bytes\": 20");
+        assert!(Manifest::from_json_str(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn weight_spec_numel() {
+        let w = WeightSpec { name: "x".into(), shape: vec![2, 3, 4] };
+        assert_eq!(w.numel(), 24);
+    }
+}

@@ -1,0 +1,140 @@
+//! Test-vector container reader — mirror of
+//! `python/compile/aot.py::write_testvector` (magic "FLTV", version, then
+//! named f32 tensors). Used by the e2e integration tests to check the
+//! rust runtime's numerics against the python execution of the same HLO.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{read_file, Cursor};
+
+pub const TV_MAGIC: u32 = 0x464C_5456; // "FLTV"
+
+/// A named f32 tensor from a test-vector file.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed test-vector file: name -> tensor.
+#[derive(Debug)]
+pub struct TestVector {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl TestVector {
+    pub fn load(path: &Path) -> Result<Self> {
+        let raw = read_file(path)?;
+        Self::parse(&raw)
+    }
+
+    pub fn parse(raw: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(raw);
+        let magic = c.u32()?;
+        if magic != TV_MAGIC {
+            return Err(Error::Manifest(format!("bad testvec magic {magic:#x}")));
+        }
+        let version = c.u32()?;
+        if version != 1 {
+            return Err(Error::Manifest(format!("unsupported testvec version {version}")));
+        }
+        let count = c.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name = c.string()?;
+            let ndim = c.u32()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let d = c.i64()?;
+                if d < 0 {
+                    return Err(Error::Manifest(format!("negative dim in {name}")));
+                }
+                shape.push(d as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let data = c.f32s(numel)?;
+            tensors.insert(name, Tensor { shape, data });
+        }
+        if c.remaining() != 0 {
+            return Err(Error::Manifest(format!(
+                "trailing {} bytes in testvec",
+                c.remaining()
+            )));
+        }
+        Ok(TestVector { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("testvec missing tensor '{name}'")))
+    }
+}
+
+/// Max |a-b| over two f32 slices (numeric comparison helper for tests).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::Builder;
+
+    fn sample_file() -> Vec<u8> {
+        let mut b = Builder::new();
+        b.u32(TV_MAGIC).u32(1).u32(2);
+        // tensor "a": shape [2, 2]
+        b.string("a").u32(2).u64(2).u64(2).f32s(&[1.0, 2.0, 3.0, 4.0]);
+        // tensor "b": shape [3]
+        b.string("b").u32(1).u64(3).f32s(&[5.0, 6.0, 7.0]);
+        b.finish()
+    }
+
+    #[test]
+    fn parses_tensors() {
+        let tv = TestVector::parse(&sample_file()).unwrap();
+        let a = tv.get("a").unwrap();
+        assert_eq!(a.shape, vec![2, 2]);
+        assert_eq!(a.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(tv.get("b").unwrap().numel(), 3);
+        assert!(tv.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut f = sample_file();
+        f[0] = 0;
+        assert!(TestVector::parse(&f).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let f = sample_file();
+        assert!(TestVector::parse(&f[..f.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut f = sample_file();
+        f.extend_from_slice(&[0u8; 4]);
+        assert!(TestVector::parse(&f).is_err());
+    }
+
+    #[test]
+    fn diff_helper() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+}

@@ -1,0 +1,243 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, base-2 with
+//! sub-bucket linear resolution). Records microsecond values; quantile
+//! error is bounded by the sub-bucket width (<1.6% with 64 sub-buckets).
+//!
+//! Lock-free recording (atomic bucket counters) so the request-path hot
+//! loop never serializes on a metrics mutex — the paper keeps its
+//! telemetry off the critical path for the same reason.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const SUB_BITS: u32 = 6; // 64 linear sub-buckets per power of two
+const SUB: usize = 1 << SUB_BITS;
+const ORDERS: usize = 40; // covers 1 µs .. ~12 days
+const BUCKETS: usize = ORDERS * SUB;
+
+/// Concurrent log-bucket histogram over u64 values (microseconds).
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let mut counts = Vec::with_capacity(BUCKETS);
+        counts.resize_with(BUCKETS, || AtomicU64::new(0));
+        Histogram { counts, total: AtomicU64::new(0), sum: AtomicU64::new(0), max: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let order = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        let shift = order - SUB_BITS as usize;
+        let sub = ((v >> shift) as usize) & (SUB - 1);
+        ((order - SUB_BITS as usize + 1) * SUB + sub).min(BUCKETS - 1)
+    }
+
+    /// Lower bound of a bucket (its representative value).
+    fn bucket_value(i: usize) -> u64 {
+        if i < SUB {
+            return i as u64;
+        }
+        let order = i / SUB - 1 + SUB_BITS as usize;
+        let sub = i % SUB;
+        (1u64 << order) + ((sub as u64) << (order - SUB_BITS as usize))
+    }
+
+    /// Record one value (thread-safe, wait-free).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[Self::index(v)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Quantile in [0, 1]; returns the bucket lower bound.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max()
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one (for per-thread shards).
+    pub fn merge(&self, other: &Histogram) {
+        for (a, b) in self.counts.iter().zip(other.counts.iter()) {
+            let v = b.load(Ordering::Relaxed);
+            if v > 0 {
+                a.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.total.fetch_add(other.total.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Reset all counters (between bench phases).
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.total.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn exact_below_64() {
+        let h = Histogram::new();
+        for v in 0..64u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.5), 31);
+        assert_eq!(h.max(), 63);
+    }
+
+    #[test]
+    fn quantile_error_bounded() {
+        let h = Histogram::new();
+        // uniform 1..100_000 µs
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for &(q, expect) in &[(0.5, 50_000.0), (0.9, 90_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            let rel = (got - expect).abs() / expect;
+            assert!(rel < 0.02, "q={q} got={got} expect={expect} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn p99_dominated_by_tail() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record(1_000);
+        }
+        h.record(1_000_000);
+        assert!(h.p99() >= 900_000 || h.quantile(1.0) >= 900_000);
+        assert_eq!(h.p50(), Histogram::bucket_value(Histogram::index(1_000)));
+    }
+
+    #[test]
+    fn mean_and_count() {
+        let h = Histogram::new();
+        h.record(10);
+        h.record(20);
+        h.record(30);
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for i in 0..1000 {
+            a.record(i);
+            b.record(i + 1000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2000);
+        let med = a.p50() as f64;
+        assert!((med - 1000.0).abs() / 1000.0 < 0.05, "median {med}");
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 10_000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 80_000);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = Histogram::new();
+        h.record(123);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn index_monotone_nondecreasing_value() {
+        // bucket_value(index(v)) <= v and within one sub-bucket of v
+        for v in [0u64, 1, 63, 64, 65, 127, 128, 1_000, 123_456, 10_000_000] {
+            let bv = Histogram::bucket_value(Histogram::index(v));
+            assert!(bv <= v, "v={v} bv={bv}");
+            if v >= 64 {
+                let rel = (v - bv) as f64 / v as f64;
+                assert!(rel < 1.0 / 32.0, "v={v} bv={bv} rel={rel}");
+            }
+        }
+    }
+}

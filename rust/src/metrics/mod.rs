@@ -1,0 +1,10 @@
+//! Serving metrics: latency histograms (p50/p99 — the paper's reported
+//! quantiles), throughput counters in user-item pairs/s (the paper's
+//! throughput unit), and byte counters for network utilization (Table 3's
+//! fourth column).
+
+pub mod histogram;
+pub mod recorder;
+
+pub use histogram::Histogram;
+pub use recorder::{MetricsSnapshot, Recorder};

@@ -1,0 +1,222 @@
+//! The serving-metrics recorder: the paper's measurement set in one
+//! struct — overall latency, pure model-compute latency, throughput in
+//! user-item pairs/s, cache statistics, and network bytes (Table 3/4/5
+//! columns come straight out of `snapshot()`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::Histogram;
+
+/// Shared recorder; one per serving stack, updated by all workers.
+pub struct Recorder {
+    /// End-to-end request latency (µs) — "Overall Latency".
+    pub overall: Histogram,
+    /// Pure model computation latency (µs) — "Compute Latency".
+    pub compute: Histogram,
+    /// Feature-query stage latency (µs) — PDA ablations.
+    pub feature: Histogram,
+    /// Queueing delay before an executor picks the job up (µs).
+    pub queueing: Histogram,
+    requests: AtomicU64,
+    user_item_pairs: AtomicU64,
+    network_bytes: AtomicU64,
+    dropped: AtomicU64,
+    started: Instant,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder {
+            overall: Histogram::new(),
+            compute: Histogram::new(),
+            feature: Histogram::new(),
+            queueing: Histogram::new(),
+            requests: AtomicU64::new(0),
+            user_item_pairs: AtomicU64::new(0),
+            network_bytes: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record a completed request: end-to-end micros + its candidate count
+    /// (the paper counts throughput as user-item *pairs* per second).
+    pub fn record_request(&self, overall_us: u64, m: usize) {
+        self.overall.record(overall_us);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.user_item_pairs.fetch_add(m as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_compute(&self, us: u64) {
+        self.compute.record(us);
+    }
+
+    pub fn record_feature(&self, us: u64) {
+        self.feature.record(us);
+    }
+
+    pub fn record_queueing(&self, us: u64) {
+        self.queueing.record(us);
+    }
+
+    /// Bytes pulled over the (simulated) network — Table 3's
+    /// "Network Utilization" numerator.
+    pub fn record_network_bytes(&self, bytes: u64) {
+        self.network_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_dropped(&self) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn pairs(&self) -> u64 {
+        self.user_item_pairs.load(Ordering::Relaxed)
+    }
+
+    pub fn network_bytes(&self) -> u64 {
+        self.network_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Reset all series (between warmup and measurement).
+    pub fn reset(&mut self) {
+        self.overall.reset();
+        self.compute.reset();
+        self.feature.reset();
+        self.queueing.reset();
+        self.requests.store(0, Ordering::Relaxed);
+        self.user_item_pairs.store(0, Ordering::Relaxed);
+        self.network_bytes.store(0, Ordering::Relaxed);
+        self.dropped.store(0, Ordering::Relaxed);
+        self.started = Instant::now();
+    }
+
+    /// Snapshot over an explicit wall-clock window (seconds).
+    pub fn snapshot_over(&self, elapsed_s: f64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests(),
+            pairs: self.pairs(),
+            elapsed_s,
+            throughput_pairs_per_s: self.pairs() as f64 / elapsed_s.max(1e-9),
+            overall_mean_ms: self.overall.mean() / 1e3,
+            overall_p50_ms: self.overall.p50() as f64 / 1e3,
+            overall_p99_ms: self.overall.p99() as f64 / 1e3,
+            compute_mean_ms: self.compute.mean() / 1e3,
+            compute_p50_ms: self.compute.p50() as f64 / 1e3,
+            compute_p99_ms: self.compute.p99() as f64 / 1e3,
+            feature_mean_ms: self.feature.mean() / 1e3,
+            queueing_mean_ms: self.queueing.mean() / 1e3,
+            network_mb_per_s: self.network_bytes() as f64 / 1e6 / elapsed_s.max(1e-9),
+            dropped: self.dropped(),
+        }
+    }
+
+    /// Snapshot since construction / last reset.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.snapshot_over(self.started.elapsed().as_secs_f64())
+    }
+}
+
+/// Point-in-time metrics view; all the paper's table columns.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub pairs: u64,
+    pub elapsed_s: f64,
+    pub throughput_pairs_per_s: f64,
+    pub overall_mean_ms: f64,
+    pub overall_p50_ms: f64,
+    pub overall_p99_ms: f64,
+    pub compute_mean_ms: f64,
+    pub compute_p50_ms: f64,
+    pub compute_p99_ms: f64,
+    pub feature_mean_ms: f64,
+    pub queueing_mean_ms: f64,
+    pub network_mb_per_s: f64,
+    pub dropped: u64,
+}
+
+impl MetricsSnapshot {
+    /// Paper-style one-liner: "126.6 k | 13.2 ms | 46 ms | 34 MB/s".
+    pub fn paper_row(&self) -> String {
+        format!(
+            "{:.1} k | {:.2} ms | {:.1} ms | {:.1} MB/s",
+            self.throughput_pairs_per_s / 1e3,
+            self.overall_mean_ms,
+            self.overall_p99_ms,
+            self.network_mb_per_s
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts_pairs_not_requests() {
+        let r = Recorder::new();
+        r.record_request(1_000, 128);
+        r.record_request(1_000, 512);
+        let s = r.snapshot_over(1.0);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.pairs, 640);
+        assert!((s.throughput_pairs_per_s - 640.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn network_utilization_mb_per_s() {
+        let r = Recorder::new();
+        r.record_network_bytes(46_300_000);
+        let s = r.snapshot_over(1.0);
+        assert!((s.network_mb_per_s - 46.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latencies_in_ms() {
+        let r = Recorder::new();
+        r.record_request(22_600, 1);
+        r.record_compute(5_690);
+        let s = r.snapshot_over(1.0);
+        assert!((s.overall_mean_ms - 22.6).abs() < 0.1);
+        assert!((s.compute_mean_ms - 5.69).abs() < 0.1);
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let mut r = Recorder::new();
+        r.record_request(100, 10);
+        r.record_network_bytes(1000);
+        r.record_dropped();
+        r.reset();
+        let s = r.snapshot_over(1.0);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.pairs, 0);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(r.network_bytes(), 0);
+    }
+
+    #[test]
+    fn paper_row_formats() {
+        let r = Recorder::new();
+        r.record_request(13_200, 126_600);
+        r.record_network_bytes(34_000_000);
+        let row = r.snapshot_over(1.0).paper_row();
+        assert!(row.contains("126.6 k"), "{row}");
+        assert!(row.contains("MB/s"), "{row}");
+    }
+}

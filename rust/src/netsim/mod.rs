@@ -1,0 +1,198 @@
+//! Network simulation for the remote feature service.
+//!
+//! The paper's Table 3 economics hinge on the bandwidth hierarchy of
+//! Fig 3: network ≈ 1.25 GB/s with RTTs in the milliseconds, versus
+//! hundreds-of-GB/s local memory. We model a remote feature store link as
+//! RTT + size/bandwidth service time with a global token-bucket for
+//! shared-bandwidth contention, and *actually wait* that long — so cache
+//! hit rates translate into real measured latency/throughput deltas, the
+//! same mechanism the paper measures on bypass traffic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::timeutil::precise_wait;
+
+/// Link model parameters.
+#[derive(Clone, Debug)]
+pub struct LinkConfig {
+    /// Round-trip latency per query batch.
+    pub rtt: Duration,
+    /// Shared link bandwidth (bytes/sec) — Fig 3's "network ≈ 1.25 GB/s",
+    /// scaled down by default to reflect the feature service's share.
+    pub bandwidth_bps: f64,
+    /// RTT jitter fraction (uniform ±).
+    pub jitter: f64,
+    /// Failure injection: probability a transfer times out (deterministic
+    /// per transfer sequence number; 0.0 disables).
+    pub fail_rate: f64,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        LinkConfig {
+            rtt: Duration::from_micros(1500),
+            bandwidth_bps: 200e6, // 200 MB/s share of the NIC
+            jitter: 0.2,
+            fail_rate: 0.0,
+        }
+    }
+}
+
+/// A failed (timed-out) transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransferTimeout;
+
+/// A simulated shared network link. Thread-safe; all feature-store
+/// traffic passes through one instance so concurrent requests contend
+/// for bandwidth like they would on a real NIC.
+pub struct Link {
+    cfg: LinkConfig,
+    /// Virtual time (ns since start) until which the link is busy.
+    busy_until: Mutex<u64>,
+    start: Instant,
+    bytes_total: AtomicU64,
+    queries_total: AtomicU64,
+    seq: AtomicU64,
+}
+
+impl Link {
+    pub fn new(cfg: LinkConfig) -> Self {
+        Link {
+            cfg,
+            busy_until: Mutex::new(0),
+            start: Instant::now(),
+            bytes_total: AtomicU64::new(0),
+            queries_total: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Perform a simulated transfer of `bytes`: blocks the calling thread
+    /// for RTT + serialization time, accounting for link contention.
+    /// Returns the modeled service duration.
+    pub fn transfer(&self, bytes: usize) -> Duration {
+        match self.try_transfer(bytes) {
+            Ok(d) | Err((TransferTimeout, d)) => d,
+        }
+    }
+
+    /// Transfer with failure injection: a failing transfer still burns
+    /// the full timeout (that's what makes remote flakiness expensive),
+    /// then reports `TransferTimeout`.
+    pub fn try_transfer(&self, bytes: usize) -> Result<Duration, (TransferTimeout, Duration)> {
+        self.bytes_total.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.queries_total.fetch_add(1, Ordering::Relaxed);
+
+        let ser_ns = (bytes as f64 / self.cfg.bandwidth_bps * 1e9) as u64;
+        // deterministic jitter from a counter hash (no global rng lock)
+        let n = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut h = n.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^= h >> 33;
+        let fail = self.cfg.fail_rate > 0.0
+            && ((h >> 16) & 0xFFFF) as f64 / 65536.0 < self.cfg.fail_rate;
+        let frac = (h & 0xFFFF) as f64 / 65536.0; // [0,1)
+        let rtt_ns = self.cfg.rtt.as_nanos() as f64 * (1.0 + self.cfg.jitter * (2.0 * frac - 1.0));
+
+        // serialize on the shared link: reserve [busy, busy+ser] in
+        // virtual time, then sleep until reservation end + rtt.
+        let now_ns = self.start.elapsed().as_nanos() as u64;
+        let end_ns = {
+            let mut busy = self.busy_until.lock().unwrap();
+            let begin = (*busy).max(now_ns);
+            let end = begin + ser_ns;
+            *busy = end;
+            end
+        };
+        let wake_ns = end_ns + rtt_ns as u64;
+        let wait = Duration::from_nanos(wake_ns.saturating_sub(now_ns));
+        if fail {
+            // a timeout costs 3x the healthy service time before the
+            // caller gives up
+            let penalty = wait * 3;
+            precise_wait(penalty);
+            return Err((TransferTimeout, penalty));
+        }
+        precise_wait(wait);
+        Ok(wait)
+    }
+
+    /// Total bytes that crossed the link.
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_total.load(Ordering::Relaxed)
+    }
+
+    pub fn queries_total(&self) -> u64 {
+        self.queries_total.load(Ordering::Relaxed)
+    }
+
+    /// Mean utilization since start, MB/s (Table 3 column 4).
+    pub fn utilization_mb_per_s(&self) -> f64 {
+        let el = self.start.elapsed().as_secs_f64().max(1e-9);
+        self.bytes_total() as f64 / 1e6 / el
+    }
+
+    pub fn config(&self) -> &LinkConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_link() -> Link {
+        Link::new(LinkConfig {
+            rtt: Duration::from_micros(200),
+            bandwidth_bps: 100e6,
+            jitter: 0.0,
+            fail_rate: 0.0,
+        })
+    }
+
+    #[test]
+    fn transfer_waits_at_least_rtt() {
+        let link = fast_link();
+        let t = Instant::now();
+        link.transfer(0);
+        assert!(t.elapsed() >= Duration::from_micros(180));
+    }
+
+    #[test]
+    fn serialization_time_scales_with_bytes() {
+        let link = fast_link();
+        // 1 MB at 100 MB/s = 10 ms
+        let d = link.transfer(1_000_000);
+        assert!(d >= Duration::from_millis(9), "{d:?}");
+    }
+
+    #[test]
+    fn accounting() {
+        let link = fast_link();
+        link.transfer(100);
+        link.transfer(200);
+        assert_eq!(link.bytes_total(), 300);
+        assert_eq!(link.queries_total(), 2);
+        assert!(link.utilization_mb_per_s() > 0.0);
+    }
+
+    #[test]
+    fn contention_serializes() {
+        // Two concurrent 0.5 MB transfers on a 100 MB/s link cannot both
+        // finish in ~5 ms; the second must see queueing delay.
+        let link = std::sync::Arc::new(fast_link());
+        let t0 = Instant::now();
+        let hs: Vec<_> = (0..2)
+            .map(|_| {
+                let l = std::sync::Arc::clone(&link);
+                std::thread::spawn(move || l.transfer(500_000))
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        // total wall >= 2 * 5ms serialization (minus epsilon)
+        assert!(t0.elapsed() >= Duration::from_millis(9), "{:?}", t0.elapsed());
+    }
+}

@@ -1,0 +1,223 @@
+//! Input assembly: the last CPU-side stage of the PDA pipeline.
+//!
+//! Takes a request's user history (item ids) + candidate ids, pulls item
+//! features through the query engine, folds them into embeddings, and
+//! writes the model's two input tensors — hist [L, D] and cands [M, D] —
+//! either into a reusable `StagingArena` ("Mem Opt" on) or into fresh
+//! per-request `Vec`s (the pageable-memory baseline arm of Table 3).
+
+use std::sync::Arc;
+
+use crate::embedding::EmbeddingTable;
+use crate::pda::engine::{FetchClass, QueryEngine};
+use crate::pda::staging::{Region, StagingArena};
+
+/// Assembled model input: views or buffers for the two tensors.
+pub struct AssembledInput {
+    /// [L * D] row-major history embeddings.
+    pub hist: InputBuf,
+    /// [M * D] candidate embeddings.
+    pub cands: InputBuf,
+    /// How many candidate fetches were fresh/stale/missing (telemetry).
+    pub fresh: usize,
+    pub stale: usize,
+    pub missing: usize,
+}
+
+/// Owned-or-staged input storage.
+pub enum InputBuf {
+    Owned(Vec<f32>),
+    Staged(Region),
+}
+
+/// The assembler: embeddings + feature folding + tensor layout.
+pub struct InputAssembler {
+    table: Arc<EmbeddingTable>,
+    query: Arc<QueryEngine>,
+    d: usize,
+    use_staging: bool,
+}
+
+impl InputAssembler {
+    pub fn new(
+        table: Arc<EmbeddingTable>,
+        query: Arc<QueryEngine>,
+        use_staging: bool,
+    ) -> Self {
+        let d = table.dim();
+        InputAssembler { table, query, d, use_staging }
+    }
+
+    pub fn query_engine(&self) -> &Arc<QueryEngine> {
+        &self.query
+    }
+
+    /// Assemble one request. `arena` is reset and reused when staging is
+    /// enabled; ignored otherwise.
+    pub fn assemble(
+        &self,
+        history: &[u64],
+        candidates: &[u64],
+        arena: &mut StagingArena,
+    ) -> AssembledInput {
+        // Item features for candidates go through the cached query engine
+        // (the expensive, network-facing path the PDA optimizes).
+        let fetched = self.query.fetch(candidates);
+        let (mut fresh, mut stale, mut missing) = (0usize, 0usize, 0usize);
+        for (_, class) in &fetched {
+            match class {
+                FetchClass::Fresh => fresh += 1,
+                FetchClass::Stale => stale += 1,
+                FetchClass::MissDefault => missing += 1,
+                FetchClass::Remote => fresh += 1,
+            }
+        }
+
+        let hist_len = history.len() * self.d;
+        let cand_len = candidates.len() * self.d;
+
+        if self.use_staging {
+            arena.reset();
+            let hr = arena.alloc(hist_len);
+            {
+                let hs = arena.slice_mut(hr);
+                for (i, &id) in history.iter().enumerate() {
+                    self.table.embed_into(id, &mut hs[i * self.d..(i + 1) * self.d]);
+                }
+            }
+            let cr = arena.alloc(cand_len);
+            {
+                let cs = arena.slice_mut(cr);
+                for (i, (f, _)) in fetched.iter().enumerate() {
+                    self.table.embed_with_features_into(
+                        f.item_id,
+                        &f.dense,
+                        &mut cs[i * self.d..(i + 1) * self.d],
+                    );
+                }
+            }
+            AssembledInput {
+                hist: InputBuf::Staged(hr),
+                cands: InputBuf::Staged(cr),
+                fresh,
+                stale,
+                missing,
+            }
+        } else {
+            // baseline arm: fresh allocations + per-row copies
+            let mut hist = vec![0.0f32; hist_len];
+            for (i, &id) in history.iter().enumerate() {
+                self.table.embed_into(id, &mut hist[i * self.d..(i + 1) * self.d]);
+            }
+            let mut cands = vec![0.0f32; cand_len];
+            for (i, (f, _)) in fetched.iter().enumerate() {
+                self.table.embed_with_features_into(
+                    f.item_id,
+                    &f.dense,
+                    &mut cands[i * self.d..(i + 1) * self.d],
+                );
+            }
+            AssembledInput {
+                hist: InputBuf::Owned(hist),
+                cands: InputBuf::Owned(cands),
+                fresh,
+                stale,
+                missing,
+            }
+        }
+    }
+}
+
+impl AssembledInput {
+    /// Resolve the two tensors against the arena they may live in.
+    pub fn views<'a>(&'a self, arena: &'a StagingArena) -> (&'a [f32], &'a [f32]) {
+        let h = match &self.hist {
+            InputBuf::Owned(v) => v.as_slice(),
+            InputBuf::Staged(r) => arena.slice(*r),
+        };
+        let c = match &self.cands {
+            InputBuf::Owned(v) => v.as_slice(),
+            InputBuf::Staged(r) => arena.slice(*r),
+        };
+        (h, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CacheMode, PdaConfig};
+    use crate::featurestore::{FeatureSchema, RemoteStore};
+    use crate::netsim::{Link, LinkConfig};
+    use std::time::Duration;
+
+    fn engine(mode: CacheMode) -> Arc<QueryEngine> {
+        let link = Arc::new(Link::new(LinkConfig {
+            rtt: Duration::from_micros(100),
+            bandwidth_bps: 1e9,
+            jitter: 0.0,
+            fail_rate: 0.0,
+        }));
+        let store = Arc::new(RemoteStore::new(FeatureSchema::default(), link, 11));
+        Arc::new(QueryEngine::new(
+            &PdaConfig { cache_mode: mode, ..PdaConfig::default() },
+            store,
+        ))
+    }
+
+    fn assembler(staging: bool, mode: CacheMode) -> InputAssembler {
+        let table = Arc::new(EmbeddingTable::new(8, 3, 1024));
+        InputAssembler::new(table, engine(mode), staging)
+    }
+
+    #[test]
+    fn staged_and_owned_agree() {
+        let hist_ids = vec![1u64, 2, 3, 4];
+        let cand_ids = vec![10u64, 11];
+        let mut arena = StagingArena::new(1024);
+
+        let a = assembler(true, CacheMode::Sync);
+        let staged = a.assemble(&hist_ids, &cand_ids, &mut arena);
+        let (sh, sc) = staged.views(&arena);
+        let (sh, sc) = (sh.to_vec(), sc.to_vec());
+
+        let b = assembler(false, CacheMode::Sync);
+        let mut dummy = StagingArena::new(1);
+        let owned = b.assemble(&hist_ids, &cand_ids, &mut dummy);
+        let (oh, oc) = owned.views(&dummy);
+
+        assert_eq!(sh, oh);
+        assert_eq!(sc, oc);
+    }
+
+    #[test]
+    fn shapes_match_request() {
+        let a = assembler(true, CacheMode::Sync);
+        let mut arena = StagingArena::new(4096);
+        let out = a.assemble(&[1, 2, 3], &[7, 8, 9, 10], &mut arena);
+        let (h, c) = out.views(&arena);
+        assert_eq!(h.len(), 3 * 8);
+        assert_eq!(c.len(), 4 * 8);
+    }
+
+    #[test]
+    fn async_mode_counts_missing() {
+        let a = assembler(true, CacheMode::Async);
+        let mut arena = StagingArena::new(4096);
+        let out = a.assemble(&[1], &[100, 101], &mut arena);
+        assert_eq!(out.missing, 2, "cold cache: all candidates missing");
+        a.query_engine().drain_refreshes();
+        let out2 = a.assemble(&[1], &[100, 101], &mut arena);
+        assert_eq!(out2.fresh, 2);
+    }
+
+    #[test]
+    fn missing_features_still_wellformed() {
+        let a = assembler(true, CacheMode::Async);
+        let mut arena = StagingArena::new(4096);
+        let out = a.assemble(&[1, 2], &[50], &mut arena);
+        let (_, c) = out.views(&arena);
+        assert!(c.iter().all(|x| x.is_finite()));
+        assert!(c.iter().any(|&x| x != 0.0), "base embedding present");
+    }
+}

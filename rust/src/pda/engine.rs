@@ -1,0 +1,352 @@
+//! The cached feature-query engine (paper §3.1, Fig 5).
+//!
+//! Two flows over the sharded TTL-LRU item cache:
+//!
+//! * **async** (stale-while-revalidate): fresh hit → return; stale hit →
+//!   return the stale value immediately and enqueue a background refresh;
+//!   miss → return a zero/default feature and enqueue a refresh. Never
+//!   blocks on the network; trades occasional missing/stale features for
+//!   latency (exactly the accuracy note in §3.1).
+//! * **sync**: fresh hit → return; stale/miss → blocking remote query,
+//!   update cache, return the fresh value (accuracy-preserving).
+//!
+//! `CacheMode::Off` bypasses the cache entirely (the Table 3 baseline).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cache::{Lookup, ShardedCache};
+use crate::config::{CacheMode, PdaConfig};
+use crate::featurestore::{ItemFeatures, RemoteStore};
+use crate::util::threadpool::ThreadPool;
+
+/// Outcome classification for one item fetch (per-request accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetchClass {
+    Fresh,
+    Stale,
+    MissDefault,
+    Remote,
+}
+
+/// The query engine fronting the remote store.
+pub struct QueryEngine {
+    mode: CacheMode,
+    cache: Arc<ShardedCache<ItemFeatures>>,
+    store: Arc<RemoteStore>,
+    refresh_pool: Option<ThreadPool>,
+    /// Keys currently being refreshed (dedups concurrent refreshes of a
+    /// hot key — important precisely because traffic is Zipf-skewed).
+    in_refresh: Arc<Mutex<HashSet<u64>>>,
+    /// Pending refresh ids, drained in *batches* by the workers — one
+    /// remote query per batch, not per item (the same batching the sync
+    /// path gets for free, and what keeps refresh traffic off the
+    /// request path's link budget).
+    pending: Arc<Mutex<Vec<u64>>>,
+    drain_scheduled: Arc<AtomicBool>,
+    /// Remote-store timeouts observed (failure-injection telemetry).
+    pub store_errors: Arc<std::sync::atomic::AtomicU64>,
+}
+
+/// Max items folded into one background refresh query.
+const REFRESH_BATCH: usize = 64;
+
+impl QueryEngine {
+    pub fn new(cfg: &PdaConfig, store: Arc<RemoteStore>) -> Self {
+        let cache = Arc::new(ShardedCache::new(
+            cfg.cache_capacity,
+            cfg.cache_shards,
+            std::time::Duration::from_millis(cfg.cache_ttl_ms),
+        ));
+        let refresh_pool = match cfg.cache_mode {
+            CacheMode::Async => {
+                Some(ThreadPool::new(cfg.refresh_workers.max(1), "pda-refresh", None))
+            }
+            _ => None,
+        };
+        QueryEngine {
+            mode: cfg.cache_mode,
+            cache,
+            store,
+            refresh_pool,
+            in_refresh: Arc::new(Mutex::new(HashSet::new())),
+            pending: Arc::new(Mutex::new(Vec::new())),
+            drain_scheduled: Arc::new(AtomicBool::new(false)),
+            store_errors: Arc::new(std::sync::atomic::AtomicU64::new(0)),
+        }
+    }
+
+    pub fn cache(&self) -> &ShardedCache<ItemFeatures> {
+        &self.cache
+    }
+
+    pub fn mode(&self) -> CacheMode {
+        self.mode
+    }
+
+    /// Fetch features for a batch of items according to the engine mode.
+    /// Returns per-item features plus the fetch classification.
+    pub fn fetch(&self, item_ids: &[u64]) -> Vec<(ItemFeatures, FetchClass)> {
+        match self.mode {
+            CacheMode::Off => self
+                .store
+                .fetch_batch(item_ids)
+                .into_iter()
+                .map(|f| (f, FetchClass::Remote))
+                .collect(),
+            CacheMode::Async => self.fetch_async(item_ids),
+            CacheMode::Sync => self.fetch_sync(item_ids),
+        }
+    }
+
+    fn fetch_async(&self, item_ids: &[u64]) -> Vec<(ItemFeatures, FetchClass)> {
+        let mut out = Vec::with_capacity(item_ids.len());
+        for &id in item_ids {
+            match self.cache.get(id) {
+                Lookup::Fresh(f) => out.push((f, FetchClass::Fresh)),
+                Lookup::Stale(f) => {
+                    self.spawn_refresh(id);
+                    out.push((f, FetchClass::Stale));
+                }
+                Lookup::Miss => {
+                    self.spawn_refresh(id);
+                    // empty result now; features arrive for later requests
+                    let dims = self.store.schema().dense_dims;
+                    out.push((
+                        ItemFeatures { item_id: id, dense: vec![0.0; dims], version: u64::MAX },
+                        FetchClass::MissDefault,
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    fn fetch_sync(&self, item_ids: &[u64]) -> Vec<(ItemFeatures, FetchClass)> {
+        let mut out: Vec<Option<(ItemFeatures, FetchClass)>> = vec![None; item_ids.len()];
+        // misses carry their stale value (if any) for timeout fallback
+        let mut need: Vec<(usize, u64, Option<ItemFeatures>)> = Vec::new();
+        for (i, &id) in item_ids.iter().enumerate() {
+            match self.cache.get(id) {
+                Lookup::Fresh(f) => out[i] = Some((f, FetchClass::Fresh)),
+                Lookup::Stale(f) => need.push((i, id, Some(f))),
+                Lookup::Miss => need.push((i, id, None)),
+            }
+        }
+        if !need.is_empty() {
+            // one batched blocking query for all misses of this request
+            let ids: Vec<u64> = need.iter().map(|&(_, id, _)| id).collect();
+            match self.store.try_fetch_batch(&ids) {
+                Ok(fetched) => {
+                    for ((i, _, _), f) in need.into_iter().zip(fetched) {
+                        self.cache.insert(f.item_id, f.clone());
+                        out[i] = Some((f, FetchClass::Remote));
+                    }
+                }
+                Err(_) => {
+                    // graceful degradation: stale value when we have one,
+                    // zero-default otherwise — never fail the request on
+                    // a feature-service timeout
+                    self.store_errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let dims = self.store.schema().dense_dims;
+                    for (i, id, stale) in need {
+                        out[i] = Some(match stale {
+                            Some(f) => (f, FetchClass::Stale),
+                            None => (
+                                ItemFeatures {
+                                    item_id: id,
+                                    dense: vec![0.0; dims],
+                                    version: u64::MAX,
+                                },
+                                FetchClass::MissDefault,
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    fn spawn_refresh(&self, id: u64) {
+        let pool = match &self.refresh_pool {
+            Some(p) => p,
+            None => return,
+        };
+        {
+            let mut inflight = self.in_refresh.lock().unwrap();
+            if !inflight.insert(id) {
+                return; // refresh already queued
+            }
+        }
+        self.pending.lock().unwrap().push(id);
+        self.schedule_drain(pool);
+    }
+
+    /// Enqueue one drain job if none is scheduled; the job re-schedules
+    /// itself while ids remain, so at most one batch query is in flight
+    /// per scheduling chain.
+    fn schedule_drain(&self, pool: &ThreadPool) {
+        if self.drain_scheduled.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let store = Arc::clone(&self.store);
+        let cache = Arc::clone(&self.cache);
+        let inflight = Arc::clone(&self.in_refresh);
+        let pending = Arc::clone(&self.pending);
+        let scheduled = Arc::clone(&self.drain_scheduled);
+        let errors = Arc::clone(&self.store_errors);
+        pool.execute(move || loop {
+            let batch: Vec<u64> = {
+                let mut p = pending.lock().unwrap();
+                let take = p.len().min(REFRESH_BATCH);
+                p.drain(..take).collect()
+            };
+            if batch.is_empty() {
+                scheduled.store(false, Ordering::Release);
+                // re-check: an id may have landed between drain and store
+                if pending.lock().unwrap().is_empty()
+                    || scheduled.swap(true, Ordering::AcqRel)
+                {
+                    return;
+                }
+                continue;
+            }
+            match store.try_fetch_batch(&batch) {
+                Ok(fetched) => {
+                    for f in fetched {
+                        cache.insert(f.item_id, f);
+                    }
+                }
+                Err(_) => {
+                    // failed refresh: drop the attempt; the ids become
+                    // eligible for re-queueing on their next stale/miss hit
+                    errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            let mut g = inflight.lock().unwrap();
+            for id in &batch {
+                g.remove(id);
+            }
+        });
+    }
+
+    /// Block until queued background refreshes complete (tests/benches).
+    pub fn drain_refreshes(&self) {
+        if let Some(p) = &self.refresh_pool {
+            p.wait_idle();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featurestore::FeatureSchema;
+    use crate::netsim::{Link, LinkConfig};
+    use std::time::Duration;
+
+    fn store() -> Arc<RemoteStore> {
+        let link = Arc::new(Link::new(LinkConfig {
+            rtt: Duration::from_micros(300),
+            bandwidth_bps: 1e9,
+            jitter: 0.0,
+            fail_rate: 0.0,
+        }));
+        Arc::new(RemoteStore::new(FeatureSchema::default(), link, 11))
+    }
+
+    fn cfg(mode: CacheMode) -> PdaConfig {
+        PdaConfig {
+            cache_mode: mode,
+            cache_capacity: 1024,
+            cache_shards: 4,
+            cache_ttl_ms: 10_000,
+            refresh_workers: 2,
+            ..PdaConfig::default()
+        }
+    }
+
+    #[test]
+    fn off_mode_always_remote() {
+        let s = store();
+        let e = QueryEngine::new(&cfg(CacheMode::Off), Arc::clone(&s));
+        for _ in 0..3 {
+            let r = e.fetch(&[1, 2]);
+            assert!(r.iter().all(|(_, c)| *c == FetchClass::Remote));
+        }
+        assert_eq!(s.link().queries_total(), 3);
+    }
+
+    #[test]
+    fn sync_mode_caches_after_first_fetch() {
+        let s = store();
+        let e = QueryEngine::new(&cfg(CacheMode::Sync), Arc::clone(&s));
+        let r1 = e.fetch(&[5, 6]);
+        assert!(r1.iter().all(|(_, c)| *c == FetchClass::Remote));
+        let r2 = e.fetch(&[5, 6]);
+        assert!(r2.iter().all(|(_, c)| *c == FetchClass::Fresh));
+        assert_eq!(r1[0].0, r2[0].0, "cached value must equal remote value");
+        assert_eq!(s.link().queries_total(), 1, "second fetch fully cached");
+    }
+
+    #[test]
+    fn sync_mode_batches_misses() {
+        let s = store();
+        let e = QueryEngine::new(&cfg(CacheMode::Sync), Arc::clone(&s));
+        e.fetch(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(s.link().queries_total(), 1, "one batched remote query");
+    }
+
+    #[test]
+    fn async_mode_never_blocks_and_backfills() {
+        let s = store();
+        let e = QueryEngine::new(&cfg(CacheMode::Async), Arc::clone(&s));
+        let r1 = e.fetch(&[9]);
+        assert_eq!(r1[0].1, FetchClass::MissDefault);
+        assert!(r1[0].0.dense.iter().all(|&x| x == 0.0));
+        e.drain_refreshes();
+        let r2 = e.fetch(&[9]);
+        assert_eq!(r2[0].1, FetchClass::Fresh);
+        assert_eq!(r2[0].0, s.fetch_one(9));
+    }
+
+    #[test]
+    fn async_stale_served_then_refreshed() {
+        let s = store();
+        let mut c = cfg(CacheMode::Async);
+        c.cache_ttl_ms = 1; // immediate staleness
+        let e = QueryEngine::new(&c, Arc::clone(&s));
+        e.fetch(&[3]);
+        e.drain_refreshes(); // cache now has v0
+        std::thread::sleep(Duration::from_millis(5));
+        s.bump_epoch(); // upstream updated
+        let r = e.fetch(&[3]);
+        assert_eq!(r[0].1, FetchClass::Stale, "stale value served without blocking");
+        assert_eq!(r[0].0.version, 0);
+        e.drain_refreshes();
+        std::thread::sleep(Duration::from_millis(2));
+        let r2 = e.fetch(&[3]);
+        // after refresh the new epoch's version is visible (fresh or stale
+        // depending on ttl, but the *value* must be updated)
+        assert_eq!(r2[0].0.version, 1);
+    }
+
+    #[test]
+    fn refresh_dedup_under_hot_key() {
+        let s = store();
+        let e = QueryEngine::new(&cfg(CacheMode::Async), Arc::clone(&s));
+        // 50 requests for the same missing hot key before refresh lands
+        for _ in 0..50 {
+            e.fetch(&[77]);
+        }
+        e.drain_refreshes();
+        // dedup means far fewer remote queries than requests
+        assert!(
+            s.link().queries_total() <= 3,
+            "expected deduped refreshes, got {}",
+            s.link().queries_total()
+        );
+    }
+}

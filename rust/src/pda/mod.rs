@@ -1,0 +1,16 @@
+//! PDA — Proximal Data Accelerator (paper §3.1).
+//!
+//! Everything between a raw request and the tensors the GPU-side engine
+//! consumes: the cached feature-query engine (async stale-while-
+//! revalidate / sync modes, Fig 5), NUMA-affinity core binding, and the
+//! pinned-memory-style staging arenas that batch many small feature
+//! copies into contiguous transfer buffers.
+
+pub mod assembler;
+pub mod engine;
+pub mod numa;
+pub mod staging;
+
+pub use assembler::{AssembledInput, InputAssembler};
+pub use engine::QueryEngine;
+pub use staging::StagingArena;

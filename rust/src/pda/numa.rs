@@ -1,0 +1,211 @@
+//! NUMA topology + core binding (paper §3.1, Fig 6).
+//!
+//! The paper pins worker threads with `pthread_attr_setaffinity_np` /
+//! `numactl` so feature-processing threads keep their working set in
+//! node-local memory. We read the topology from
+//! `/sys/devices/system/node` and pin with `sched_setaffinity`; on a
+//! single-node container the pinning still removes cross-core migration
+//! (cache-warm workers), which is the measurable slice of the benefit on
+//! this testbed — DESIGN.md §Hardware-Adaptation.
+
+use crate::error::{Error, Result};
+
+/// One NUMA node's CPU set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Node {
+    pub id: usize,
+    pub cpus: Vec<usize>,
+}
+
+/// Host topology.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub nodes: Vec<Node>,
+}
+
+impl Topology {
+    /// Read from sysfs; falls back to a single node covering all CPUs.
+    pub fn detect() -> Topology {
+        Self::from_sysfs("/sys/devices/system/node").unwrap_or_else(|_| Self::flat())
+    }
+
+    /// Single-node fallback topology.
+    pub fn flat() -> Topology {
+        let n = num_cpus();
+        Topology { nodes: vec![Node { id: 0, cpus: (0..n).collect() }] }
+    }
+
+    /// Parse `node*/cpulist` files under a sysfs-style directory.
+    pub fn from_sysfs(root: &str) -> Result<Topology> {
+        let mut nodes = Vec::new();
+        let rd = std::fs::read_dir(root).map_err(crate::error::io_err(root))?;
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if let Some(ids) = name.strip_prefix("node") {
+                if let Ok(id) = ids.parse::<usize>() {
+                    let cpulist = e.path().join("cpulist");
+                    if let Ok(text) = std::fs::read_to_string(&cpulist) {
+                        nodes.push(Node { id, cpus: parse_cpulist(text.trim())? });
+                    }
+                }
+            }
+        }
+        if nodes.is_empty() {
+            return Err(Error::Config("no NUMA nodes found".into()));
+        }
+        nodes.sort_by_key(|n| n.id);
+        Ok(Topology { nodes })
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Total CPUs across nodes.
+    pub fn n_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    /// Assign worker i of n to a CPU, filling nodes breadth-first so
+    /// workers spread across nodes (each worker's memory stays local).
+    pub fn cpu_for_worker(&self, i: usize) -> usize {
+        let node = &self.nodes[i % self.nodes.len()];
+        node.cpus[(i / self.nodes.len()) % node.cpus.len()]
+    }
+}
+
+/// Parse "0-3,8,10-11" style cpulist.
+pub fn parse_cpulist(s: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    if s.is_empty() {
+        return Ok(out);
+    }
+    for part in s.split(',') {
+        let part = part.trim();
+        if let Some((a, b)) = part.split_once('-') {
+            let a: usize = a.trim().parse().map_err(|_| bad(part))?;
+            let b: usize = b.trim().parse().map_err(|_| bad(part))?;
+            if b < a {
+                return Err(bad(part));
+            }
+            out.extend(a..=b);
+        } else {
+            out.push(part.parse().map_err(|_| bad(part))?);
+        }
+    }
+    Ok(out)
+}
+
+fn bad(part: &str) -> Error {
+    Error::Config(format!("bad cpulist fragment '{part}'"))
+}
+
+/// Number of online CPUs.
+pub fn num_cpus() -> usize {
+    // sysconf is the portable answer without external crates
+    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+    if n < 1 {
+        1
+    } else {
+        n as usize
+    }
+}
+
+/// Pin the calling thread to one CPU (`sched_setaffinity`). Returns Err
+/// if the kernel refuses (e.g. cpuset-restricted container); callers
+/// treat pinning as best-effort.
+pub fn pin_current_thread(cpu: usize) -> Result<()> {
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        libc::CPU_SET(cpu % num_cpus(), &mut set);
+        let rc = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+        if rc != 0 {
+            return Err(Error::Internal(format!(
+                "sched_setaffinity(cpu {cpu}) failed: {}",
+                std::io::Error::last_os_error()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The CPU the calling thread is currently on.
+pub fn current_cpu() -> usize {
+    let c = unsafe { libc::sched_getcpu() };
+    if c < 0 {
+        0
+    } else {
+        c as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3").unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0,2,4").unwrap(), vec![0, 2, 4]);
+        assert_eq!(parse_cpulist("0-1,8,10-11").unwrap(), vec![0, 1, 8, 10, 11]);
+        assert_eq!(parse_cpulist("").unwrap(), Vec::<usize>::new());
+        assert!(parse_cpulist("3-1").is_err());
+        assert!(parse_cpulist("x").is_err());
+    }
+
+    #[test]
+    fn detect_has_cpus() {
+        let t = Topology::detect();
+        assert!(t.n_nodes() >= 1);
+        assert!(t.n_cpus() >= 1);
+    }
+
+    #[test]
+    fn flat_covers_all() {
+        let t = Topology::flat();
+        assert_eq!(t.n_cpus(), num_cpus());
+    }
+
+    #[test]
+    fn worker_assignment_round_robins_nodes() {
+        let t = Topology {
+            nodes: vec![
+                Node { id: 0, cpus: vec![0, 1] },
+                Node { id: 1, cpus: vec![2, 3] },
+            ],
+        };
+        let cpus: Vec<usize> = (0..4).map(|i| t.cpu_for_worker(i)).collect();
+        assert_eq!(cpus, vec![0, 2, 1, 3]);
+        // wraps around
+        assert_eq!(t.cpu_for_worker(4), 0);
+    }
+
+    #[test]
+    fn pin_current_thread_best_effort() {
+        // should succeed on CPU 0 in any environment that allows affinity
+        match pin_current_thread(0) {
+            Ok(()) => {
+                // after pinning to 0, we should observe cpu 0 (eventually)
+                std::thread::yield_now();
+                assert_eq!(current_cpu(), 0);
+            }
+            Err(_) => { /* restricted container: acceptable */ }
+        }
+    }
+
+    #[test]
+    fn sysfs_parser_on_synthetic_tree() {
+        let dir = std::env::temp_dir().join(format!("flame_numa_test_{}", std::process::id()));
+        let n0 = dir.join("node0");
+        let n1 = dir.join("node1");
+        std::fs::create_dir_all(&n0).unwrap();
+        std::fs::create_dir_all(&n1).unwrap();
+        std::fs::write(n0.join("cpulist"), "0-1\n").unwrap();
+        std::fs::write(n1.join("cpulist"), "2-3\n").unwrap();
+        let t = Topology::from_sysfs(dir.to_str().unwrap()).unwrap();
+        assert_eq!(t.n_nodes(), 2);
+        assert_eq!(t.nodes[1].cpus, vec![2, 3]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

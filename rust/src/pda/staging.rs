@@ -1,0 +1,120 @@
+//! Staging arenas — the pinned-memory analogue (paper §3.1, Fig 7).
+//!
+//! The paper replaces pageable host allocations with `cudaMallocHost`
+//! pinned buffers and "packages model input variables as a whole to batch
+//! many small transfers together into a single transfer". On the CPU
+//! PJRT testbed the same pathology exists as per-request `Vec` churn and
+//! scattered small copies. A `StagingArena` is a preallocated, reused
+//! contiguous buffer: the assembler writes embeddings/features directly
+//! into it and the runtime uploads one contiguous slice per tensor.
+
+/// A reusable contiguous f32 staging buffer.
+pub struct StagingArena {
+    buf: Vec<f32>,
+    len: usize,
+}
+
+impl StagingArena {
+    /// Preallocate `capacity` f32 slots.
+    pub fn new(capacity: usize) -> Self {
+        StagingArena { buf: vec![0.0; capacity], len: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reset write position (no dealloc/realloc — that's the point).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Reserve a contiguous region of `n` f32s, growing only if the
+    /// request exceeds capacity (shouldn't happen after sizing for the
+    /// max profile; growth is counted so tests can assert it doesn't).
+    pub fn alloc(&mut self, n: usize) -> Region {
+        if self.len + n > self.buf.len() {
+            self.buf.resize((self.len + n).next_power_of_two(), 0.0);
+        }
+        let r = Region { start: self.len, len: n };
+        self.len += n;
+        r
+    }
+
+    /// Mutable view of a region.
+    pub fn slice_mut(&mut self, r: Region) -> &mut [f32] {
+        &mut self.buf[r.start..r.start + r.len]
+    }
+
+    /// Shared view of a region (what the runtime uploads).
+    pub fn slice(&self, r: Region) -> &[f32] {
+        &self.buf[r.start..r.start + r.len]
+    }
+
+    /// Copy `src` into a fresh region (the "batch small transfers"
+    /// primitive) and return it.
+    pub fn stage(&mut self, src: &[f32]) -> Region {
+        let r = self.alloc(src.len());
+        self.slice_mut(r).copy_from_slice(src);
+        r
+    }
+}
+
+/// A (start, len) region inside an arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub start: usize,
+    pub len: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_write() {
+        let mut a = StagingArena::new(16);
+        let r1 = a.alloc(4);
+        a.slice_mut(r1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let r2 = a.stage(&[9.0, 8.0]);
+        assert_eq!(a.slice(r1), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.slice(r2), &[9.0, 8.0]);
+        assert_eq!(a.len(), 6);
+    }
+
+    #[test]
+    fn reset_reuses_without_realloc() {
+        let mut a = StagingArena::new(8);
+        let p0 = a.buf.as_ptr();
+        for _ in 0..100 {
+            a.reset();
+            let r = a.stage(&[1.0; 8]);
+            assert_eq!(r.start, 0);
+        }
+        assert_eq!(p0, a.buf.as_ptr(), "arena must not reallocate within capacity");
+    }
+
+    #[test]
+    fn grows_beyond_capacity() {
+        let mut a = StagingArena::new(4);
+        let r = a.stage(&[0.5; 10]);
+        assert_eq!(a.slice(r).len(), 10);
+        assert!(a.capacity() >= 10);
+    }
+
+    #[test]
+    fn regions_disjoint() {
+        let mut a = StagingArena::new(32);
+        let r1 = a.alloc(8);
+        let r2 = a.alloc(8);
+        assert_eq!(r1.start + r1.len, r2.start);
+    }
+}

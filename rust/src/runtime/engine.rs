@@ -1,0 +1,191 @@
+//! One compiled engine: fixed (scenario, variant, M) shape, device-
+//! resident weights, and the per-request execute hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::runtime::{EngineKey, SendSync, WeightSet};
+
+/// A device-resident history tensor, shareable across the chunk
+/// executions of one request (and across engines of the same runtime —
+/// PJRT buffers are client-scoped, not executable-scoped).
+pub struct HistBuffer {
+    pub(crate) buf: SendSync<xla::PjRtBuffer>,
+    pub(crate) len: usize,
+}
+
+/// Cumulative execution statistics for one engine.
+#[derive(Default)]
+pub struct EngineStats {
+    pub executions: AtomicU64,
+    pub compute_us: AtomicU64,
+    pub upload_us: AtomicU64,
+    pub download_us: AtomicU64,
+}
+
+impl EngineStats {
+    pub fn mean_compute_ms(&self) -> f64 {
+        let n = self.executions.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.compute_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+}
+
+/// A compiled PJRT executable with fixed input shapes.
+///
+/// Per-request path: upload `hist` [L, D] and `cands` [M, D], call
+/// `execute_b` with the device-resident weight buffers + the two inputs,
+/// read back scores [M, n_tasks]. No allocation besides the two input
+/// buffers and the output literal.
+pub struct Engine {
+    pub key: EngineKey,
+    pub config: ModelConfig,
+    /// Analytic FLOPs per request (dense forward) — for MFU reporting.
+    pub flops: u64,
+    exe: SendSync<xla::PjRtLoadedExecutable>,
+    weights: Arc<WeightSet>,
+    client: Arc<SendSync<xla::PjRtClient>>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    pub(crate) fn new(
+        key: EngineKey,
+        config: ModelConfig,
+        flops: u64,
+        exe: SendSync<xla::PjRtLoadedExecutable>,
+        weights: Arc<WeightSet>,
+        client: Arc<SendSync<xla::PjRtClient>>,
+    ) -> Self {
+        Engine { key, config, flops, exe, weights, client, stats: EngineStats::default() }
+    }
+
+    /// This engine's fixed candidate count.
+    pub fn m(&self) -> usize {
+        self.key.m
+    }
+
+    /// Expected input lengths (f32 elements).
+    pub fn hist_len(&self) -> usize {
+        self.config.seq_len * self.config.d_model
+    }
+
+    pub fn cands_len(&self) -> usize {
+        self.key.m * self.config.d_model
+    }
+
+    /// Output length: M x n_tasks.
+    pub fn out_len(&self) -> usize {
+        self.key.m * self.config.n_tasks
+    }
+
+    /// Upload a history tensor once for reuse across several executions
+    /// (the DSO splits one request across profile engines; all chunks
+    /// share the same [L, D] history — uploading it per chunk would
+    /// multiply the host→device traffic by the chunk count).
+    pub fn upload_hist(&self, hist: &[f32]) -> Result<HistBuffer> {
+        if hist.len() != self.hist_len() {
+            return Err(Error::Internal(format!(
+                "{}: hist length {} != expected {}",
+                self.key.label(),
+                hist.len(),
+                self.hist_len()
+            )));
+        }
+        let buf = self.client.0.buffer_from_host_buffer::<f32>(
+            hist,
+            &[self.config.seq_len, self.config.d_model],
+            None,
+        )?;
+        Ok(HistBuffer { buf: SendSync(buf), len: hist.len() })
+    }
+
+    /// Execute one request. `hist` is [L*D] and `cands` [M*D], row-major.
+    pub fn run(&self, hist: &[f32], cands: &[f32]) -> Result<Vec<f32>> {
+        let hist_buf = self.upload_hist(hist)?;
+        self.run_with_hist(&hist_buf, cands)
+    }
+
+    /// Execute with a pre-uploaded (device-resident) history buffer.
+    pub fn run_with_hist(&self, hist: &HistBuffer, cands: &[f32]) -> Result<Vec<f32>> {
+        if hist.len != self.hist_len() || cands.len() != self.cands_len() {
+            return Err(Error::Internal(format!(
+                "{}: input lengths (hist {}, cands {}) != expected ({}, {})",
+                self.key.label(),
+                hist.len,
+                cands.len(),
+                self.hist_len(),
+                self.cands_len()
+            )));
+        }
+        let d = self.config.d_model;
+
+        // host -> device (the pinned-transfer analogue: callers hand us
+        // contiguous staging slices; one transfer per tensor).
+        let t0 = Instant::now();
+        let cands_buf =
+            self.client.0.buffer_from_host_buffer::<f32>(cands, &[self.key.m, d], None)?;
+        let upload_us = t0.elapsed().as_micros() as u64;
+
+        // compute
+        let t1 = Instant::now();
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.weights.buffers.len() + 2);
+        for w in &self.weights.buffers {
+            args.push(&w.0);
+        }
+        args.push(&hist.buf.0);
+        args.push(&cands_buf);
+        let result = self.exe.0.execute_b(&args)?;
+        let compute_us = t1.elapsed().as_micros() as u64;
+
+        // device -> host
+        let t2 = Instant::now();
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Internal("empty execute output".into()))?;
+        let literal = out.to_literal_sync()?;
+        let scores = literal.to_tuple1()?.to_vec::<f32>()?;
+        let download_us = t2.elapsed().as_micros() as u64;
+
+        if scores.len() != self.out_len() {
+            return Err(Error::Internal(format!(
+                "{}: output length {} != expected {}",
+                self.key.label(),
+                scores.len(),
+                self.out_len()
+            )));
+        }
+
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats.compute_us.fetch_add(compute_us, Ordering::Relaxed);
+        self.stats.upload_us.fetch_add(upload_us, Ordering::Relaxed);
+        self.stats.download_us.fetch_add(download_us, Ordering::Relaxed);
+        Ok(scores)
+    }
+
+    /// Model FLOP utilization estimate against a given peak (GFLOP/s).
+    pub fn mfu(&self, peak_gflops: f64) -> f64 {
+        let mean_s = self.stats.mean_compute_ms() / 1e3;
+        if mean_s <= 0.0 {
+            return 0.0;
+        }
+        (self.flops as f64 / mean_s) / (peak_gflops * 1e9)
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("key", &self.key.label())
+            .field("flops", &self.flops)
+            .field("executions", &self.stats.executions.load(Ordering::Relaxed))
+            .finish()
+    }
+}

@@ -1,0 +1,188 @@
+//! The PJRT runtime: loads AOT-lowered HLO text artifacts and executes
+//! them on the request path.
+//!
+//! Responsibilities:
+//! * one [`Runtime`] per process — wraps `xla::PjRtClient::cpu()`;
+//! * [`WeightSet`] — a scenario's weights uploaded to the device **once**
+//!   and shared (Arc) by every engine variant/profile of that scenario
+//!   (the analogue of TensorRT engine weights resident in GPU memory);
+//! * [`Engine`] — one compiled executable for a fixed (scenario, variant,
+//!   M-profile); per-request work is exactly two host→device input
+//!   transfers + `execute_b` + one device→host read.
+//!
+//! Threading: `xla`'s wrapper types hold raw pointers and are therefore
+//! `!Send`. The PJRT CPU client is thread-safe for compilation, buffer
+//! upload, and execution (each call synchronizes internally; the CPU
+//! plugin serializes where required), so we wrap them in `SendSync`
+//! newtypes with that documented justification. Engines are still used
+//! single-threaded-per-executor by the DSO (one executor = one thread),
+//! matching the paper's one-stream-per-executor design.
+
+pub mod engine;
+
+pub use engine::{Engine, EngineStats, HistBuffer};
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::manifest::Manifest;
+
+/// Identifies one lowered engine: (scenario, variant, M-profile).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct EngineKey {
+    pub scenario: String,
+    pub variant: String,
+    pub m: usize,
+}
+
+impl EngineKey {
+    pub fn new(scenario: &str, variant: &str, m: usize) -> Self {
+        EngineKey { scenario: scenario.into(), variant: variant.into(), m }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}/{}/m{}", self.scenario, self.variant, self.m)
+    }
+}
+
+/// `Send + Sync` wrapper for xla handle types (see module docs).
+pub(crate) struct SendSync<T>(pub T);
+
+// SAFETY: the PJRT CPU client (tfrt_cpu_pjrt_client) is documented
+// thread-safe for compile/execute/transfer; the raw pointers inside the
+// xla wrappers are only non-Send because bindgen cannot know that. All
+// mutation happens behind PJRT's own synchronization.
+unsafe impl<T> Send for SendSync<T> {}
+unsafe impl<T> Sync for SendSync<T> {}
+
+/// A scenario's device-resident weights (uploaded once, shared by all
+/// engines of that scenario).
+pub struct WeightSet {
+    pub scenario: String,
+    pub(crate) buffers: Vec<SendSync<xla::PjRtBuffer>>,
+    pub total_bytes: usize,
+    pub n_tensors: usize,
+}
+
+/// Process-wide PJRT runtime.
+pub struct Runtime {
+    pub(crate) client: Arc<SendSync<xla::PjRtClient>>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client: Arc::new(SendSync(client)) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.0.platform_name()
+    }
+
+    /// Upload a scenario's weights from `weights_<scenario>.bin` to the
+    /// device. One call per scenario per process.
+    pub fn upload_weights(&self, manifest: &Manifest, scenario: &str) -> Result<Arc<WeightSet>> {
+        let tensors = manifest.load_weights(scenario)?;
+        let mut buffers = Vec::with_capacity(tensors.len());
+        let mut total_bytes = 0usize;
+        for (spec, data) in &tensors {
+            total_bytes += data.len() * 4;
+            let buf = self
+                .client
+                .0
+                .buffer_from_host_buffer::<f32>(data, &spec.shape, None)?;
+            buffers.push(SendSync(buf));
+        }
+        Ok(Arc::new(WeightSet {
+            scenario: scenario.to_string(),
+            n_tensors: buffers.len(),
+            buffers,
+            total_bytes,
+        }))
+    }
+
+    /// Compile one HLO-text artifact into an executable engine, wiring in
+    /// the scenario's device-resident weights.
+    pub fn load_engine_with_weights(
+        &self,
+        manifest: &Manifest,
+        key: &EngineKey,
+        weights: Arc<WeightSet>,
+    ) -> Result<Engine> {
+        if weights.scenario != key.scenario {
+            return Err(Error::Internal(format!(
+                "weight set for {} used with engine {}",
+                weights.scenario,
+                key.label()
+            )));
+        }
+        let entry = manifest.find(&key.scenario, &key.variant, key.m)?;
+        let sa = manifest.scenario(&key.scenario)?;
+        if entry.n_weight_inputs != weights.n_tensors {
+            return Err(Error::Manifest(format!(
+                "{}: engine expects {} weight inputs, weight set has {}",
+                key.label(),
+                entry.n_weight_inputs,
+                weights.n_tensors
+            )));
+        }
+        let path = manifest.path_of(&entry.path);
+        let exe = self.compile_hlo(&path)?;
+        Ok(Engine::new(
+            key.clone(),
+            sa.config.clone(),
+            entry.flops,
+            exe,
+            weights,
+            Arc::clone(&self.client),
+        ))
+    }
+
+    /// Convenience: upload weights + load a single engine.
+    pub fn load_engine(&self, manifest: &Manifest, key: &EngineKey) -> Result<Engine> {
+        let w = self.upload_weights(manifest, &key.scenario)?;
+        self.load_engine_with_weights(manifest, key, w)
+    }
+
+    /// Load one engine per available M-profile of (scenario, variant) —
+    /// the DSO's explicit-shape executor set. Weights are shared.
+    pub fn load_profile_set(
+        &self,
+        manifest: &Manifest,
+        scenario: &str,
+        variant: &str,
+    ) -> Result<Vec<Engine>> {
+        let profiles = manifest.profiles_for(scenario, variant);
+        if profiles.is_empty() {
+            return Err(Error::UnknownEngine(format!("{scenario}/{variant} has no profiles")));
+        }
+        let weights = self.upload_weights(manifest, scenario)?;
+        profiles
+            .into_iter()
+            .map(|m| {
+                self.load_engine_with_weights(
+                    manifest,
+                    &EngineKey::new(scenario, variant, m),
+                    Arc::clone(&weights),
+                )
+            })
+            .collect()
+    }
+
+    /// HLO text -> compiled PJRT executable.
+    fn compile_hlo(&self, path: &Path) -> Result<SendSync<xla::PjRtLoadedExecutable>> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.0.compile(&comp)?;
+        Ok(SendSync(exe))
+    }
+
+    /// Expose a ModelConfig for a manifest scenario (serve-time source of
+    /// truth).
+    pub fn scenario_config(manifest: &Manifest, scenario: &str) -> Result<ModelConfig> {
+        Ok(manifest.scenario(scenario)?.config.clone())
+    }
+}

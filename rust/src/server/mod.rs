@@ -1,0 +1,9 @@
+//! The serving front: the full request pipeline (PDA feature stage →
+//! DSO compute stage → response), the in-process serving stack the
+//! examples/benches drive, and a TCP front with a length-prefixed binary
+//! protocol for out-of-process clients.
+
+pub mod pipeline;
+pub mod tcp;
+
+pub use pipeline::{ServingStack, StackBuilder, Response};

@@ -1,0 +1,242 @@
+//! The end-to-end request pipeline — FLAME's decoupled architecture in
+//! one object:
+//!
+//! ```text
+//! Request ──feature stage (PDA: cached query → embed → staging)──▶
+//!          tensors ──compute stage (DSO: split → executors → PJRT)──▶
+//!          scores ──response packaging──▶ Response
+//! ```
+//!
+//! `ServingStack::serve` is the synchronous per-request path used by the
+//! pipeline workers; `ServingStack::spawn_workers` wires a `RequestQueue`
+//! in front (admission + queueing telemetry) for the open-loop mode.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::batching::RequestQueue;
+use crate::config::{StackConfig};
+use crate::dso::Orchestrator;
+use crate::embedding::EmbeddingTable;
+use crate::error::Result;
+use crate::featurestore::{FeatureSchema, RemoteStore};
+use crate::manifest::Manifest;
+use crate::metrics::Recorder;
+use crate::netsim::{Link, LinkConfig};
+use crate::pda::numa::Topology;
+use crate::pda::{InputAssembler, QueryEngine, StagingArena};
+use crate::runtime::Runtime;
+use crate::workload::Request;
+
+/// A scored response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub request_id: u64,
+    /// [M * n_tasks] task probabilities, request candidate order.
+    pub scores: Vec<f32>,
+    pub m: usize,
+    pub overall_us: u64,
+    pub compute_us: u64,
+    pub feature_us: u64,
+}
+
+/// Builder wiring the whole stack from a manifest + config.
+pub struct StackBuilder {
+    pub config: StackConfig,
+    pub scenario: String,
+    pub variant: String,
+    pub link: Option<Arc<Link>>,
+}
+
+impl StackBuilder {
+    pub fn new(scenario: &str, variant: &str, config: StackConfig) -> Self {
+        StackBuilder { config, scenario: scenario.into(), variant: variant.into(), link: None }
+    }
+
+    /// Inject a shared link (benches want to read its byte counters).
+    pub fn with_link(mut self, link: Arc<Link>) -> Self {
+        self.link = Some(link);
+        self
+    }
+
+    pub fn build(self, runtime: &Runtime, manifest: &Manifest) -> Result<ServingStack> {
+        let sa = manifest.scenario(&self.scenario)?;
+        let model_cfg = sa.config.clone();
+
+        // PDA side
+        let link = self
+            .link
+            .unwrap_or_else(|| Arc::new(Link::new(LinkConfig::default())));
+        let store = Arc::new(RemoteStore::new(FeatureSchema::default(), Arc::clone(&link), sa.seed));
+        let query = Arc::new(QueryEngine::new(&self.config.pda, Arc::clone(&store)));
+        let table = Arc::new(EmbeddingTable::new(model_cfg.d_model, sa.seed ^ 0xE5, 64 * 1024));
+        let assembler = Arc::new(InputAssembler::new(
+            Arc::clone(&table),
+            Arc::clone(&query),
+            self.config.pda.staging_arenas,
+        ));
+
+        // DSO side
+        let engines = runtime.load_profile_set(manifest, &self.scenario, &self.variant)?;
+        let orchestrator = Arc::new(Orchestrator::new(engines, &self.config.dso)?);
+
+        Ok(ServingStack {
+            config: self.config,
+            model_cfg,
+            assembler,
+            query,
+            orchestrator,
+            link,
+            store,
+            metrics: Arc::new(Recorder::new()),
+            topology: Topology::detect(),
+        })
+    }
+}
+
+/// The assembled serving stack.
+pub struct ServingStack {
+    pub config: StackConfig,
+    pub model_cfg: crate::config::ModelConfig,
+    pub assembler: Arc<InputAssembler>,
+    pub query: Arc<QueryEngine>,
+    pub orchestrator: Arc<Orchestrator>,
+    pub link: Arc<Link>,
+    pub store: Arc<RemoteStore>,
+    pub metrics: Arc<Recorder>,
+    pub topology: Topology,
+}
+
+impl ServingStack {
+    /// Serve one request synchronously (the per-worker hot path).
+    /// `arena` is the calling worker's staging arena (reused).
+    pub fn serve(&self, req: &Request, arena: &mut StagingArena) -> Result<Response> {
+        let t0 = Instant::now();
+
+        // ---- feature stage (PDA) ----
+        let tf = Instant::now();
+        let mut history = req.history.clone();
+        history.resize(self.model_cfg.seq_len, 0); // pad/truncate to L
+        history.truncate(self.model_cfg.seq_len);
+        let assembled = self.assembler.assemble(&history, &req.candidates, arena);
+        let (hist, cands) = assembled.views(arena);
+        let feature_us = tf.elapsed().as_micros() as u64;
+
+        // ---- compute stage (DSO) ----
+        // the orchestrator uploads hist to the device once and shares the
+        // buffer across split chunks (§Perf: no host-side copy either).
+        let outcome = self.orchestrator.submit_slice(hist, cands, req.m())?;
+
+        let overall_us = t0.elapsed().as_micros() as u64;
+        self.metrics.record_request(overall_us, req.m());
+        self.metrics.record_compute(outcome.compute_us);
+        self.metrics.record_feature(feature_us);
+
+        Ok(Response {
+            request_id: req.request_id,
+            scores: outcome.scores,
+            m: req.m(),
+            overall_us,
+            compute_us: outcome.compute_us,
+            feature_us,
+        })
+    }
+
+    /// Spawn `n` pipeline workers draining `queue`; each gets its own
+    /// staging arena and (optionally) a NUMA-pinned CPU. Returns join
+    /// handles; workers exit when the queue closes.
+    pub fn spawn_workers(
+        self: &Arc<Self>,
+        queue: Arc<RequestQueue<Request>>,
+        n: usize,
+    ) -> Vec<std::thread::JoinHandle<()>> {
+        let topo = self.topology.clone();
+        (0..n.max(1))
+            .map(|i| {
+                let stack = Arc::clone(self);
+                let queue = Arc::clone(&queue);
+                let cpu = topo.cpu_for_worker(i);
+                std::thread::Builder::new()
+                    .name(format!("pipeline-{i}"))
+                    .spawn(move || {
+                        if stack.config.pda.numa_binding {
+                            let _ = crate::pda::numa::pin_current_thread(cpu);
+                        }
+                        let max_m = stack.orchestrator.max_profile();
+                        let cap = (stack.model_cfg.seq_len + max_m) * stack.model_cfg.d_model;
+                        let mut arena = StagingArena::new(cap);
+                        while let Some((req, qdelay)) = queue.pop() {
+                            stack.metrics.record_queueing(qdelay.as_micros() as u64);
+                            if let Err(e) = stack.serve(&req, &mut arena) {
+                                stack.metrics.record_dropped();
+                                log::warn!("request {} failed: {e}", req.request_id);
+                            }
+                        }
+                    })
+                    .expect("spawn pipeline worker")
+            })
+            .collect()
+    }
+
+    /// Network utilization snapshot (MB/s since stack start).
+    pub fn network_mb_per_s(&self) -> f64 {
+        self.link.utilization_mb_per_s()
+    }
+
+    /// Closed-loop saturation driver: `concurrency` threads each serve
+    /// the next request synchronously (own staging arena, optional NUMA
+    /// pin) until `duration` elapses or the list is exhausted. This is
+    /// the fair way to probe an arm's max throughput — every thread has
+    /// exactly one request in flight, so no queueing noise enters the
+    /// latency numbers.
+    pub fn drive_closed_loop(
+        self: &Arc<Self>,
+        requests: &[Request],
+        concurrency: usize,
+        duration: std::time::Duration,
+    ) -> crate::workload::driver::DriveReport {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let next = AtomicU64::new(0);
+        let completed = AtomicU64::new(0);
+        let rejected = AtomicU64::new(0);
+        let start = Instant::now();
+        let n = requests.len() as u64;
+        let topo = self.topology.clone();
+        std::thread::scope(|s| {
+            for w in 0..concurrency.max(1) {
+                let stack = Arc::clone(self);
+                let next = &next;
+                let completed = &completed;
+                let rejected = &rejected;
+                let cpu = topo.cpu_for_worker(w);
+                s.spawn(move || {
+                    if stack.config.pda.numa_binding {
+                        let _ = crate::pda::numa::pin_current_thread(cpu);
+                    }
+                    let max_m = stack.orchestrator.max_profile();
+                    let cap = (stack.model_cfg.seq_len + max_m) * stack.model_cfg.d_model;
+                    let mut arena = StagingArena::new(cap);
+                    loop {
+                        if start.elapsed() >= duration {
+                            return;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            return;
+                        }
+                        match stack.serve(&requests[i as usize], &mut arena) {
+                            Ok(_) => completed.fetch_add(1, Ordering::Relaxed),
+                            Err(_) => rejected.fetch_add(1, Ordering::Relaxed),
+                        };
+                    }
+                });
+            }
+        });
+        crate::workload::driver::DriveReport {
+            submitted: next.load(Ordering::Relaxed).min(n),
+            completed: completed.load(Ordering::Relaxed),
+            rejected: rejected.load(Ordering::Relaxed),
+            elapsed: start.elapsed(),
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! TCP front: a length-prefixed binary protocol so out-of-process
+//! clients can drive the stack (examples/tcp_serve.rs; also the
+//! server_tcp integration test).
+//!
+//! Frame = u32 LE length + payload. Request payload:
+//!   u32 magic 'FLRQ' | u64 request_id | u64 user_id |
+//!   u32 n_hist | u64*n_hist | u32 n_cand | u64*n_cand
+//! Response payload:
+//!   u32 magic 'FLRS' | u64 request_id | u32 status (0 ok) |
+//!   u32 m | u32 n_tasks | f32*(m*n_tasks) | u64 overall_us
+//! Status 1 = overloaded, 2 = error.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::pda::StagingArena;
+use crate::server::pipeline::{Response, ServingStack};
+use crate::util::bytes::{read_frame, write_frame, Builder, Cursor};
+use crate::workload::Request;
+
+pub const REQ_MAGIC: u32 = 0x464C_5251; // "FLRQ"
+pub const RSP_MAGIC: u32 = 0x464C_5253; // "FLRS"
+const MAX_FRAME: usize = 64 << 20;
+
+/// Encode a request frame payload.
+pub fn encode_request(r: &Request) -> Vec<u8> {
+    let mut b = Builder::new();
+    b.u32(REQ_MAGIC).u64(r.request_id).u64(r.user_id);
+    b.u32(r.history.len() as u32);
+    for &id in &r.history {
+        b.u64(id);
+    }
+    b.u32(r.candidates.len() as u32);
+    for &id in &r.candidates {
+        b.u64(id);
+    }
+    b.finish()
+}
+
+/// Decode a request frame payload.
+pub fn decode_request(buf: &[u8]) -> Result<Request> {
+    let mut c = Cursor::new(buf);
+    if c.u32()? != REQ_MAGIC {
+        return Err(Error::Protocol("bad request magic".into()));
+    }
+    let request_id = c.u64()?;
+    let user_id = c.u64()?;
+    let nh = c.u32()? as usize;
+    let mut history = Vec::with_capacity(nh);
+    for _ in 0..nh {
+        history.push(c.u64()?);
+    }
+    let nc = c.u32()? as usize;
+    let mut candidates = Vec::with_capacity(nc);
+    for _ in 0..nc {
+        candidates.push(c.u64()?);
+    }
+    if c.remaining() != 0 {
+        return Err(Error::Protocol("trailing bytes in request".into()));
+    }
+    Ok(Request { request_id, user_id, history, candidates })
+}
+
+/// Encode a response frame payload.
+pub fn encode_response(r: &Response, n_tasks: usize) -> Vec<u8> {
+    let mut b = Builder::new();
+    b.u32(RSP_MAGIC).u64(r.request_id).u32(0);
+    b.u32(r.m as u32).u32(n_tasks as u32);
+    b.f32s(&r.scores);
+    b.u64(r.overall_us);
+    b.finish()
+}
+
+/// Encode an error response.
+pub fn encode_error(request_id: u64, status: u32) -> Vec<u8> {
+    let mut b = Builder::new();
+    b.u32(RSP_MAGIC).u64(request_id).u32(status);
+    b.u32(0).u32(0).u64(0);
+    b.finish()
+}
+
+/// Decoded response.
+#[derive(Clone, Debug)]
+pub struct WireResponse {
+    pub request_id: u64,
+    pub status: u32,
+    pub scores: Vec<f32>,
+    pub m: usize,
+    pub n_tasks: usize,
+    pub overall_us: u64,
+}
+
+/// Decode a response frame payload.
+pub fn decode_response(buf: &[u8]) -> Result<WireResponse> {
+    let mut c = Cursor::new(buf);
+    if c.u32()? != RSP_MAGIC {
+        return Err(Error::Protocol("bad response magic".into()));
+    }
+    let request_id = c.u64()?;
+    let status = c.u32()?;
+    let m = c.u32()? as usize;
+    let n_tasks = c.u32()? as usize;
+    let scores = c.f32s(m * n_tasks)?;
+    let overall_us = c.u64()?;
+    Ok(WireResponse { request_id, status, scores, m, n_tasks, overall_us })
+}
+
+/// A running TCP server (one thread per connection; connections are
+/// long-lived upstream proxies in the paper's deployment, not per-query
+/// sockets).
+pub struct TcpServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind and serve `stack` on `addr` (e.g. "127.0.0.1:0").
+    pub fn start(stack: Arc<ServingStack>, addr: &str) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Io(format!("bind {addr}"), e))?;
+        let local = listener.local_addr().map_err(|e| Error::Io("local_addr".into(), e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Io("set_nonblocking".into(), e))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("tcp-accept".into())
+            .spawn(move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let stack = Arc::clone(&stack);
+                            let stop3 = Arc::clone(&stop2);
+                            conns.push(std::thread::spawn(move || {
+                                let _ = handle_conn(stream, stack, stop3);
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })
+            .map_err(|e| Error::Internal(format!("spawn accept: {e}")))?;
+        Ok(TcpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, stack: Arc<ServingStack>, stop: Arc<AtomicBool>) -> Result<()> {
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(200)))
+        .map_err(|e| Error::Io("set_read_timeout".into(), e))?;
+    let max_m = stack.orchestrator.max_profile();
+    let cap = (stack.model_cfg.seq_len + max_m) * stack.model_cfg.d_model;
+    let mut arena = StagingArena::new(cap);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let frame = match read_frame(&mut stream, MAX_FRAME) {
+            Ok(f) => f,
+            Err(Error::Protocol(msg)) => {
+                // timeouts surface as protocol errors wrapping WouldBlock
+                if msg.contains("WouldBlock")
+                    || msg.contains("timed out")
+                    || msg.contains("Resource temporarily unavailable")
+                {
+                    continue;
+                }
+                return Ok(()); // peer closed / garbage: drop connection
+            }
+            Err(_) => return Ok(()),
+        };
+        let req = match decode_request(&frame) {
+            Ok(r) => r,
+            Err(_) => {
+                let _ = write_frame(&mut stream, &encode_error(0, 2));
+                continue;
+            }
+        };
+        let payload = match stack.serve(&req, &mut arena) {
+            Ok(resp) => encode_response(&resp, stack.model_cfg.n_tasks),
+            Err(Error::Overloaded(_)) => encode_error(req.request_id, 1),
+            Err(_) => encode_error(req.request_id, 2),
+        };
+        write_frame(&mut stream, &payload).map_err(|e| Error::Io("write frame".into(), e))?;
+        stream.flush().map_err(|e| Error::Io("flush".into(), e))?;
+    }
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct TcpClient {
+    stream: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Self> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| Error::Io(format!("connect {addr}"), e))?;
+        Ok(TcpClient { stream })
+    }
+
+    pub fn call(&mut self, req: &Request) -> Result<WireResponse> {
+        write_frame(&mut self.stream, &encode_request(req))
+            .map_err(|e| Error::Io("write".into(), e))?;
+        let frame = read_frame(&mut self.stream, MAX_FRAME)?;
+        decode_response(&frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request { request_id: 7, user_id: 3, history: vec![1, 2, 3], candidates: vec![10, 11] }
+    }
+
+    #[test]
+    fn request_wire_roundtrip() {
+        let r = req();
+        assert_eq!(decode_request(&encode_request(&r)).unwrap(), r);
+    }
+
+    #[test]
+    fn response_wire_roundtrip() {
+        let resp = Response {
+            request_id: 7,
+            scores: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6],
+            m: 2,
+            overall_us: 1234,
+            compute_us: 900,
+            feature_us: 100,
+        };
+        let w = decode_response(&encode_response(&resp, 3)).unwrap();
+        assert_eq!(w.request_id, 7);
+        assert_eq!(w.status, 0);
+        assert_eq!(w.m, 2);
+        assert_eq!(w.n_tasks, 3);
+        assert_eq!(w.scores, resp.scores);
+        assert_eq!(w.overall_us, 1234);
+    }
+
+    #[test]
+    fn error_frames() {
+        let w = decode_response(&encode_error(42, 1)).unwrap();
+        assert_eq!(w.request_id, 42);
+        assert_eq!(w.status, 1);
+        assert!(w.scores.is_empty());
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let mut buf = encode_request(&req());
+        buf[0] = 0;
+        assert!(decode_request(&buf).is_err());
+        let mut buf = encode_error(1, 0);
+        buf[0] = 0;
+        assert!(decode_response(&buf).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let mut buf = encode_request(&req());
+        buf.push(0);
+        assert!(decode_request(&buf).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Little-endian byte helpers for the binary interchange formats:
+//! `weights_<scenario>.bin` (raw f32 concat), test-vector containers, and
+//! the TCP wire protocol.
+
+use crate::error::{io_err, Error, Result};
+use std::io::{Read, Write};
+
+/// Read an entire file into memory with path context on error.
+pub fn read_file(path: &std::path::Path) -> Result<Vec<u8>> {
+    std::fs::read(path).map_err(io_err(path.display().to_string()))
+}
+
+/// Interpret a little-endian byte slice as f32 values.
+pub fn f32_slice_from_le(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        return Err(Error::Manifest(format!(
+            "f32 buffer length {} not divisible by 4",
+            bytes.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(out)
+}
+
+/// Serialize f32 values as little-endian bytes.
+pub fn f32_slice_to_le(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+// ---- cursor-style reader for binary containers / wire frames ----
+
+/// Sequential reader over a byte slice with protocol-style errors.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Protocol(format!(
+                "truncated buffer: need {n} bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(n * 4)?;
+        f32_slice_from_le(b)
+    }
+
+    pub fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let b = self.take(len)?;
+        String::from_utf8(b.to_vec()).map_err(|e| Error::Protocol(format!("bad utf8: {e}")))
+    }
+}
+
+// ---- stream framing for the TCP protocol ----
+
+/// Write a length-prefixed frame (u32 LE length + payload).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)
+}
+
+/// Read a length-prefixed frame; `max` caps the allocation.
+pub fn read_frame<R: Read>(r: &mut R, max: usize) -> Result<Vec<u8>> {
+    let mut len_b = [0u8; 4];
+    r.read_exact(&mut len_b)
+        .map_err(|e| Error::Protocol(format!("frame header: {e}")))?;
+    let len = u32::from_le_bytes(len_b) as usize;
+    if len > max {
+        return Err(Error::Protocol(format!("frame of {len} bytes exceeds cap {max}")));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)
+        .map_err(|e| Error::Protocol(format!("frame body: {e}")))?;
+    Ok(buf)
+}
+
+/// Builder-side mirror of `Cursor`.
+#[derive(Default)]
+pub struct Builder {
+    buf: Vec<u8>,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32s(&mut self, vs: &[f32]) -> &mut Self {
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn string(&mut self, s: &str) -> &mut Self {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(b);
+        self
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let vals = vec![0.0f32, -1.5, 3.72e9, f32::MIN_POSITIVE];
+        let bytes = f32_slice_to_le(&vals);
+        assert_eq!(f32_slice_from_le(&bytes).unwrap(), vals);
+    }
+
+    #[test]
+    fn f32_rejects_misaligned() {
+        assert!(f32_slice_from_le(&[0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn cursor_builder_roundtrip() {
+        let mut b = Builder::new();
+        b.u32(7).u64(1 << 40).string("name").f32s(&[1.0, 2.0]);
+        let buf = b.finish();
+        let mut c = Cursor::new(&buf);
+        assert_eq!(c.u32().unwrap(), 7);
+        assert_eq!(c.u64().unwrap(), 1 << 40);
+        assert_eq!(c.string().unwrap(), "name");
+        assert_eq!(c.f32s(2).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn cursor_truncation_errors() {
+        let mut c = Cursor::new(&[1, 2]);
+        assert!(c.u32().is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r, 1024).unwrap(), b"hello");
+    }
+
+    #[test]
+    fn frame_cap_enforced() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[0u8; 100]).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut r, 10).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substrates replacing crates.io dependencies that are not
+//! available in this offline image (see DESIGN.md §Environment
+//! substitutions): JSON, RNG + distributions, a thread pool, byte/f32 IO,
+//! a property-test harness, and small timing helpers.
+
+pub mod bytes;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod threadpool;
+pub mod timeutil;

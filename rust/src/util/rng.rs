@@ -1,0 +1,348 @@
+//! Deterministic RNG + the distributions the workload generator needs.
+//!
+//! The offline image has no `rand` crate, so this module implements
+//! splitmix64 (seeding), xoshiro256** (the main generator), and the
+//! distributions the paper's traffic model requires: uniform, Zipf
+//! (hot-item popularity — what makes the PDA item cache win), exponential
+//! (Poisson arrivals), and normal (feature noise).
+
+/// splitmix64 step — used to expand a single u64 seed into a full state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, 256-bit state PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed deterministically from a u64 (splitmix64 expansion).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-thread / per-shard RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> [0, 1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+
+    /// Standard normal via Box–Muller (f32).
+    pub fn normal_f32(&mut self) -> f32 {
+        let u1 = (1.0 - self.next_f64()).max(1e-300); // avoid ln(0)
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Exponential with rate lambda (inter-arrival times of a Poisson
+    /// process at `lambda` events/sec).
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        -(1.0 - self.next_f64()).ln() / lambda
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipf-distributed sampler over ranks `0..n` with exponent `theta`.
+///
+/// Uses the rejection-inversion method of Hörmann & Derflinger — O(1)
+/// per sample, no O(n) table — so catalogs of 10^7 items cost nothing to
+/// set up. `theta` around 0.9–1.1 matches measured hot-item skew on
+/// content platforms; this skew is what gives the paper's item-side
+/// feature cache its high hit rate (Table 3).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    h_half: f64,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n >= 1, "zipf needs n >= 1");
+        assert!(theta > 0.0, "theta must be positive");
+        // theta == 1 uses the logarithmic forms h(x)=ln x, h_inv(y)=e^y;
+        // nudge near-1 values onto the exact-1 branch for stability.
+        let theta = if (theta - 1.0).abs() < 1e-9 { 1.0 } else { theta };
+        let h = |x: f64| -> f64 {
+            if theta == 1.0 {
+                x.ln()
+            } else {
+                (x.powf(1.0 - theta) - 1.0) / (1.0 - theta)
+            }
+        };
+        let h_inv = |y: f64| -> f64 {
+            if theta == 1.0 {
+                y.exp()
+            } else {
+                (1.0 + y * (1.0 - theta)).powf(1.0 / (1.0 - theta))
+            }
+        };
+        let h_half = h(0.5);
+        let s = 2.0 - h_inv(h(1.5) - 0.5f64.powf(theta));
+        Zipf { n, theta, h_half, s }
+    }
+
+    #[inline]
+    fn h(&self, x: f64) -> f64 {
+        if self.theta == 1.0 {
+            x.ln()
+        } else {
+            (x.powf(1.0 - self.theta) - 1.0) / (1.0 - self.theta)
+        }
+    }
+
+    #[inline]
+    fn h_inv(&self, y: f64) -> f64 {
+        if self.theta == 1.0 {
+            y.exp()
+        } else {
+            (1.0 + y * (1.0 - self.theta)).powf(1.0 / (1.0 - self.theta))
+        }
+    }
+
+    /// Sample a rank in `0..n` (0 = hottest item).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let h_n = self.h(self.n as f64 + 0.5);
+        loop {
+            let u = rng.next_f64() * (h_n - self.h_half) + self.h_half;
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().max(1.0);
+            if k - x <= self.s || u >= self.h(k + 0.5) - k.powf(-self.theta) {
+                let k = (k as u64).clamp(1, self.n);
+                return k - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small_n() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.below(3) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            let x = r.range(10, 20);
+            assert!((10..20).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal_f32() as f64;
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::new(13);
+        let lambda = 250.0;
+        let n = 50_000;
+        let total: f64 = (0..n).map(|_| r.exp(lambda)).sum();
+        let mean = total / n as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.1 / lambda * 3.0, "mean {mean}");
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut r = Rng::new(17);
+        let z = Zipf::new(1000, 0.99);
+        let n = 100_000;
+        let mut head = 0usize;
+        for _ in 0..n {
+            let k = z.sample(&mut r);
+            assert!(k < 1000);
+            if k < 10 {
+                head += 1;
+            }
+        }
+        // With theta≈1, the top-1% of ranks draw a large share of traffic.
+        let frac = head as f64 / n as f64;
+        assert!(frac > 0.25, "head fraction {frac}");
+    }
+
+    #[test]
+    fn zipf_rank_ratio_matches_law() {
+        let mut r = Rng::new(19);
+        let theta = 0.9;
+        let z = Zipf::new(100, theta);
+        let n = 400_000;
+        let mut c = [0usize; 100];
+        for _ in 0..n {
+            c[z.sample(&mut r) as usize] += 1;
+        }
+        // p(rank 1)/p(rank 8) should be ~ (8/1)^theta = 8^0.9 ≈ 6.5
+        let ratio = c[0] as f64 / c[7] as f64;
+        let expect = 8f64.powf(theta);
+        assert!(
+            (ratio / expect - 1.0).abs() < 0.25,
+            "ratio {ratio} expect {expect}"
+        );
+    }
+
+    #[test]
+    fn zipf_theta_one_exact() {
+        let mut r = Rng::new(29);
+        let z = Zipf::new(1000, 1.0);
+        let n = 100_000;
+        let mut head = 0usize;
+        for _ in 0..n {
+            let k = z.sample(&mut r);
+            assert!(k < 1000);
+            if k == 0 {
+                head += 1;
+            }
+        }
+        // p(rank 1) = 1/H_1000 ≈ 0.1336 at theta=1
+        let frac = head as f64 / n as f64;
+        assert!((frac - 0.1336).abs() < 0.02, "head fraction {frac}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(31);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+}

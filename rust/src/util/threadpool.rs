@@ -1,0 +1,197 @@
+//! A small fixed-size thread pool (the offline image has no tokio).
+//!
+//! The FLAME coordinator uses explicit worker threads rather than an async
+//! runtime: the paper's design (NUMA-bound workers, per-profile executor
+//! threads, CUDA-stream-like concurrency) maps naturally onto dedicated
+//! OS threads, and pinning (`pda::numa`) requires real threads anyway.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<State>,
+    cond: Condvar,
+}
+
+struct State {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+    in_flight: usize,
+}
+
+/// Fixed-size worker pool with graceful shutdown and `wait_idle`.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    idle: Arc<(Mutex<usize>, Condvar)>, // completed-job counter
+}
+
+impl ThreadPool {
+    /// Spawn `n` named workers. `pin_offset` optionally pins worker `i` to
+    /// CPU `pin_offset + i` (see `pda::numa`); `None` leaves scheduling to
+    /// the OS — the "-Mem Opt" ablation arm.
+    pub fn new(n: usize, name: &str, pin_offset: Option<usize>) -> Self {
+        assert!(n > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(State { jobs: VecDeque::new(), shutdown: false, in_flight: 0 }),
+            cond: Condvar::new(),
+        });
+        let idle = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let shared = Arc::clone(&shared);
+            let idle = Arc::clone(&idle);
+            let thread_name = format!("{name}-{i}");
+            let pin = pin_offset.map(|o| o + i);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(thread_name)
+                    .spawn(move || {
+                        if let Some(cpu) = pin {
+                            // best-effort; single-core hosts just no-op
+                            let _ = crate::pda::numa::pin_current_thread(cpu);
+                        }
+                        worker_loop(shared, idle);
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { shared, workers, idle }
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut st = self.shared.queue.lock().unwrap();
+        assert!(!st.shutdown, "execute after shutdown");
+        st.jobs.push_back(Box::new(f));
+        st.in_flight += 1;
+        drop(st);
+        self.shared.cond.notify_one();
+    }
+
+    /// Number of jobs queued or running.
+    pub fn in_flight(&self) -> usize {
+        self.shared.queue.lock().unwrap().in_flight
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let (lock, cond) = &*self.idle;
+        let mut done = lock.lock().unwrap();
+        loop {
+            if self.shared.queue.lock().unwrap().in_flight == 0 {
+                return;
+            }
+            done = cond.wait(done).unwrap();
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, idle: Arc<(Mutex<usize>, Condvar)>) {
+    loop {
+        let job = {
+            let mut st = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.cond.wait(st).unwrap();
+            }
+        };
+        job();
+        {
+            let mut st = shared.queue.lock().unwrap();
+            st.in_flight -= 1;
+        }
+        let (lock, cond) = &*idle;
+        let mut done = lock.lock().unwrap();
+        *done += 1;
+        cond.notify_all();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cond.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, "t", None);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2, "t", None);
+        pool.wait_idle(); // must not hang
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        let pool = ThreadPool::new(4, "t", None);
+        let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
+        // 4 jobs that all must be in-flight at once to finish.
+        for _ in 0..4 {
+            let gate = Arc::clone(&gate);
+            pool.execute(move || {
+                let (lock, cond) = &*gate;
+                let mut n = lock.lock().unwrap();
+                *n += 1;
+                cond.notify_all();
+                while *n < 4 {
+                    n = cond.wait(n).unwrap();
+                }
+            });
+        }
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2, "t", None);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait_idle();
+        } // drop
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,102 @@
+//! Timing helpers shared by metrics, benches, and the netsim clock.
+
+use std::time::{Duration, Instant};
+
+/// A stopwatch returning elapsed microseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn micros(&self) -> u64 {
+        self.elapsed().as_micros() as u64
+    }
+
+    pub fn millis_f64(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Format a duration in adaptive human units (used by benchkit tables).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Format a rate (per-second count) with k/M suffixes, paper-style
+/// ("throughput is reported in k, denoting thousands of user-item pairs").
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e6 {
+        format!("{:.1} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.1} k/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} /s")
+    }
+}
+
+/// Wait for a simulated-work duration. Sleeps for anything at or above
+/// the scheduler-visible range and busy-spins only for very short waits
+/// — spinning on longer waits would steal the core from real work (on a
+/// single-CPU host a spinning background refresher can starve model
+/// compute entirely, which is not the behaviour being simulated: a real
+/// remote query blocks on the NIC, not the CPU).
+pub fn precise_wait(d: Duration) {
+    if d >= Duration::from_micros(200) {
+        std::thread::sleep(d);
+        return;
+    }
+    let end = Instant::now() + d;
+    while Instant::now() < end {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.micros() >= 1_500);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_duration(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with("s"));
+    }
+
+    #[test]
+    fn fmt_rate_units() {
+        assert_eq!(fmt_rate(1_500.0), "1.5 k/s");
+        assert_eq!(fmt_rate(2_500_000.0), "2.5 M/s");
+        assert_eq!(fmt_rate(12.0), "12.0 /s");
+    }
+
+    #[test]
+    fn precise_wait_short() {
+        let sw = Stopwatch::start();
+        precise_wait(Duration::from_micros(200));
+        assert!(sw.micros() >= 200);
+    }
+}

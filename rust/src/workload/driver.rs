@@ -1,0 +1,188 @@
+//! Load drivers: open-loop (Poisson arrivals at a target rate — the
+//! production-like mode, exposes queueing) and closed-loop (fixed
+//! concurrency, the throughput-probing mode the ablation benches use to
+//! saturate an arm fairly).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Rng;
+
+use super::Request;
+
+/// Summary of one driven run.
+#[derive(Clone, Debug)]
+pub struct DriveReport {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub elapsed: Duration,
+}
+
+/// Closed-loop driver: `concurrency` worker threads each pull the next
+/// request from the shared iterator and call `serve` synchronously,
+/// until `duration` elapses or the request list is exhausted.
+pub fn closed_loop<F>(
+    requests: Vec<Request>,
+    concurrency: usize,
+    duration: Duration,
+    serve: F,
+) -> DriveReport
+where
+    F: Fn(&Request) -> bool + Send + Sync,
+{
+    let serve = &serve;
+    let next = AtomicU64::new(0);
+    let completed = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let start = Instant::now();
+    let n = requests.len() as u64;
+    std::thread::scope(|s| {
+        for _ in 0..concurrency.max(1) {
+            s.spawn(|| loop {
+                if start.elapsed() >= duration {
+                    return;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                if serve(&requests[i as usize]) {
+                    completed.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    rejected.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    DriveReport {
+        submitted: next.load(Ordering::Relaxed).min(n),
+        completed: completed.load(Ordering::Relaxed),
+        rejected: rejected.load(Ordering::Relaxed),
+        elapsed: start.elapsed(),
+    }
+}
+
+/// Open-loop driver: submits requests at Poisson-process arrival times
+/// with rate `lambda` (req/s), dispatching each onto a scoped thread so
+/// slow requests do not hold back the arrival process. `max_in_flight`
+/// bounds dispatch concurrency (beyond it, arrivals are *rejected* —
+/// admission control at the front door).
+pub fn open_loop<F>(
+    requests: Vec<Request>,
+    lambda: f64,
+    duration: Duration,
+    max_in_flight: usize,
+    seed: u64,
+    serve: F,
+) -> DriveReport
+where
+    F: Fn(&Request) -> bool + Send + Sync,
+{
+    let serve = &serve;
+    let completed = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let in_flight = Arc::new(AtomicU64::new(0));
+    let mut rng = Rng::new(seed);
+    let start = Instant::now();
+    let mut submitted = 0u64;
+
+    std::thread::scope(|s| {
+        let mut t_next = 0.0f64;
+        for req in &requests {
+            t_next += rng.exp(lambda);
+            let target = Duration::from_secs_f64(t_next);
+            if target >= duration {
+                break;
+            }
+            let now = start.elapsed();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            submitted += 1;
+            if in_flight.load(Ordering::Relaxed) >= max_in_flight as u64 {
+                rejected.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            in_flight.fetch_add(1, Ordering::Relaxed);
+            let inf = Arc::clone(&in_flight);
+            let completed = &completed;
+            let rejected = &rejected;
+            s.spawn(move || {
+                if serve(req) {
+                    completed.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                inf.fetch_sub(1, Ordering::Relaxed);
+            });
+        }
+    });
+    DriveReport {
+        submitted,
+        completed: completed.load(Ordering::Relaxed),
+        rejected: rejected.load(Ordering::Relaxed),
+        elapsed: start.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                request_id: i as u64,
+                user_id: 0,
+                history: vec![],
+                candidates: vec![1, 2],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn closed_loop_serves_all_when_time_allows() {
+        let r = closed_loop(reqs(100), 4, Duration::from_secs(5), |_| true);
+        assert_eq!(r.submitted, 100);
+        assert_eq!(r.completed, 100);
+        assert_eq!(r.rejected, 0);
+    }
+
+    #[test]
+    fn closed_loop_counts_rejections() {
+        let r = closed_loop(reqs(50), 2, Duration::from_secs(5), |rq| rq.request_id % 2 == 0);
+        assert_eq!(r.completed, 25);
+        assert_eq!(r.rejected, 25);
+    }
+
+    #[test]
+    fn closed_loop_respects_deadline() {
+        let r = closed_loop(reqs(1_000_000), 2, Duration::from_millis(50), |_| {
+            std::thread::sleep(Duration::from_millis(1));
+            true
+        });
+        assert!(r.submitted < 1_000_000);
+        assert!(r.elapsed < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn open_loop_rate_roughly_matched() {
+        let lambda = 2_000.0;
+        let r = open_loop(reqs(10_000), lambda, Duration::from_millis(300), 64, 1, |_| true);
+        let rate = r.submitted as f64 / r.elapsed.as_secs_f64();
+        assert!(rate > lambda * 0.5 && rate < lambda * 1.5, "rate {rate}");
+    }
+
+    #[test]
+    fn open_loop_sheds_above_concurrency_cap() {
+        // serve blocks 50ms; at 1000 req/s with cap 2 almost everything
+        // past the first few must be rejected.
+        let r = open_loop(reqs(1_000), 1_000.0, Duration::from_millis(200), 2, 1, |_| {
+            std::thread::sleep(Duration::from_millis(50));
+            true
+        });
+        assert!(r.rejected > r.completed, "{r:?}");
+    }
+}

@@ -1,0 +1,168 @@
+//! Synthetic workload generation — the production-traffic substitute
+//! (DESIGN.md §Environment substitutions): request synthesis over the
+//! catalog/user base, candidate-count mixes (Table 5's non-uniform
+//! upstream), arrival processes, and JSONL trace record/replay.
+
+pub mod driver;
+pub mod trace;
+
+use std::sync::Arc;
+
+use crate::config::WorkloadConfig;
+use crate::featurestore::catalog::{Catalog, UserBase};
+use crate::util::rng::Rng;
+
+/// One inference request as it arrives from upstream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub request_id: u64,
+    pub user_id: u64,
+    /// The user's interaction history (item ids), already truncated to
+    /// the model's L.
+    pub history: Vec<u64>,
+    /// Candidate item ids from the upstream retriever (len = this
+    /// request's M — *not* necessarily a profile size).
+    pub candidates: Vec<u64>,
+}
+
+impl Request {
+    pub fn m(&self) -> usize {
+        self.candidates.len()
+    }
+}
+
+/// Deterministic request generator.
+pub struct Generator {
+    catalog: Arc<Catalog>,
+    users: Arc<UserBase>,
+    mix: Vec<(usize, f64)>, // cumulative weights computed on the fly
+    mix_total: f64,
+    seq_len: usize,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl Generator {
+    pub fn new(cfg: &WorkloadConfig, seq_len: usize) -> Self {
+        let catalog = Arc::new(Catalog::new(cfg.catalog_size, cfg.zipf_theta));
+        let users = Arc::new(UserBase::new(cfg.n_users, cfg.seed ^ 0xA5A5));
+        let mix_total = cfg.candidate_mix.iter().map(|&(_, w)| w).sum();
+        Generator {
+            catalog,
+            users,
+            mix: cfg.candidate_mix.clone(),
+            mix_total,
+            seq_len,
+            rng: Rng::new(cfg.seed),
+            next_id: 0,
+        }
+    }
+
+    pub fn catalog(&self) -> &Arc<Catalog> {
+        &self.catalog
+    }
+
+    pub fn users(&self) -> &Arc<UserBase> {
+        &self.users
+    }
+
+    /// Draw this request's candidate count from the configured mix.
+    fn sample_m(&mut self) -> usize {
+        if self.mix.len() == 1 {
+            return self.mix[0].0;
+        }
+        let x = self.rng.next_f64() * self.mix_total;
+        let mut acc = 0.0;
+        for &(m, w) in &self.mix {
+            acc += w;
+            if x < acc {
+                return m;
+            }
+        }
+        self.mix.last().unwrap().0
+    }
+
+    /// Generate the next request.
+    pub fn next_request(&mut self) -> Request {
+        let user_id = self.users.sample_user(&mut self.rng);
+        let m = self.sample_m();
+        let history = self.users.history(&self.catalog, user_id, self.seq_len);
+        let candidates = self.catalog.sample_candidates(&mut self.rng, m);
+        let request_id = self.next_id;
+        self.next_id += 1;
+        Request { request_id, user_id, history, candidates }
+    }
+
+    /// Generate a batch of n requests.
+    pub fn batch(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mix: Vec<(usize, f64)>) -> WorkloadConfig {
+        WorkloadConfig {
+            catalog_size: 10_000,
+            zipf_theta: 0.99,
+            n_users: 1_000,
+            candidate_mix: mix,
+            arrival_rate: None,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Generator::new(&cfg(vec![(8, 1.0)]), 32);
+        let mut b = Generator::new(&cfg(vec![(8, 1.0)]), 32);
+        for _ in 0..10 {
+            assert_eq!(a.next_request(), b.next_request());
+        }
+    }
+
+    #[test]
+    fn shapes_respected() {
+        let mut g = Generator::new(&cfg(vec![(8, 1.0)]), 32);
+        let r = g.next_request();
+        assert_eq!(r.history.len(), 32);
+        assert_eq!(r.m(), 8);
+        assert!(r.user_id < 1_000);
+    }
+
+    #[test]
+    fn mix_distribution_roughly_uniform() {
+        let mix = vec![(128, 1.0), (256, 1.0), (512, 1.0), (1024, 1.0)];
+        let mut g = Generator::new(&cfg(mix), 32);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..4000 {
+            *counts.entry(g.next_request().m()).or_insert(0usize) += 1;
+        }
+        for m in [128usize, 256, 512, 1024] {
+            let c = counts[&m];
+            assert!((700..1300).contains(&c), "m={m} count={c}");
+        }
+    }
+
+    #[test]
+    fn request_ids_monotone() {
+        let mut g = Generator::new(&cfg(vec![(4, 1.0)]), 16);
+        let ids: Vec<u64> = g.batch(5).iter().map(|r| r.request_id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn hot_items_recur_across_requests() {
+        let mut g = Generator::new(&cfg(vec![(32, 1.0)]), 32);
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..200 {
+            for id in g.next_request().candidates {
+                *seen.entry(id).or_insert(0usize) += 1;
+            }
+        }
+        let max_repeat = seen.values().copied().max().unwrap();
+        assert!(max_repeat > 10, "Zipf head item repeated {max_repeat} times");
+    }
+}

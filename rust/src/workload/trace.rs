@@ -1,0 +1,124 @@
+//! JSONL trace record/replay: capture a generated workload to a file and
+//! replay the exact request stream later (cross-run comparability for the
+//! ablation tables; also the "bypass stream of real online traffic"
+//! stand-in — a recorded trace replays identically against every arm).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{io_err, Result};
+use crate::util::json::{parse, Json};
+
+use super::Request;
+
+/// Serialize one request as a JSONL line.
+pub fn request_to_line(r: &Request) -> String {
+    let j = Json::obj(vec![
+        ("id", Json::num(r.request_id as f64)),
+        ("user", Json::num(r.user_id as f64)),
+        (
+            "history",
+            Json::Arr(r.history.iter().map(|&i| Json::num(i as f64)).collect()),
+        ),
+        (
+            "candidates",
+            Json::Arr(r.candidates.iter().map(|&i| Json::num(i as f64)).collect()),
+        ),
+    ]);
+    j.to_string()
+}
+
+/// Parse one JSONL line back into a request.
+pub fn request_from_line(line: &str) -> Result<Request> {
+    let j = parse(line)?;
+    let ids = |key: &str| -> Result<Vec<u64>> {
+        j.get(key)?.as_arr()?.iter().map(|v| v.as_u64()).collect()
+    };
+    Ok(Request {
+        request_id: j.get("id")?.as_u64()?,
+        user_id: j.get("user")?.as_u64()?,
+        history: ids("history")?,
+        candidates: ids("candidates")?,
+    })
+}
+
+/// Write a trace file.
+pub fn record(path: &Path, requests: &[Request]) -> Result<()> {
+    let f = std::fs::File::create(path).map_err(io_err(path.display().to_string()))?;
+    let mut w = BufWriter::new(f);
+    for r in requests {
+        writeln!(w, "{}", request_to_line(r)).map_err(io_err(path.display().to_string()))?;
+    }
+    w.flush().map_err(io_err(path.display().to_string()))?;
+    Ok(())
+}
+
+/// Read a trace file.
+pub fn replay(path: &Path) -> Result<Vec<Request>> {
+    let f = std::fs::File::open(path).map_err(io_err(path.display().to_string()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut out = Vec::new();
+    for (i, line) in reader.lines().enumerate() {
+        let line = line.map_err(io_err(path.display().to_string()))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(request_from_line(&line).map_err(|e| {
+            crate::error::Error::Json(format!("{}:{}: {e}", path.display(), i + 1))
+        })?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Request> {
+        vec![
+            Request { request_id: 0, user_id: 5, history: vec![1, 2, 3], candidates: vec![9, 8] },
+            Request { request_id: 1, user_id: 6, history: vec![4], candidates: vec![7] },
+        ]
+    }
+
+    #[test]
+    fn line_roundtrip() {
+        for r in sample() {
+            let line = request_to_line(&r);
+            assert_eq!(request_from_line(&line).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let path = std::env::temp_dir().join(format!("flame_trace_{}.jsonl", std::process::id()));
+        let reqs = sample();
+        record(&path, &reqs).unwrap();
+        let back = replay(&path).unwrap();
+        assert_eq!(back, reqs);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn replay_reports_bad_line_number() {
+        let path = std::env::temp_dir().join(format!("flame_badtrace_{}.jsonl", std::process::id()));
+        std::fs::write(&path, "{\"id\": 0, \"user\": 1, \"history\": [], \"candidates\": []}\nnot json\n").unwrap();
+        let err = replay(&path).unwrap_err().to_string();
+        assert!(err.contains(":2:"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn blank_lines_skipped() {
+        let path = std::env::temp_dir().join(format!("flame_blank_{}.jsonl", std::process::id()));
+        std::fs::write(
+            &path,
+            "\n{\"id\": 3, \"user\": 1, \"history\": [2], \"candidates\": [4]}\n\n",
+        )
+        .unwrap();
+        let reqs = replay(&path).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].request_id, 3);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

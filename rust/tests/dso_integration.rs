@@ -1,0 +1,140 @@
+//! DSO integration over real engines (tiny scenario): explicit-shape
+//! split routing vs implicit pad-to-max, result correctness under
+//! splitting, concurrency, and admission control.
+
+use std::sync::Arc;
+
+use flame::config::{DsoConfig, DsoMode};
+use flame::dso::Orchestrator;
+use flame::manifest::testvec::max_abs_diff;
+use flame::manifest::Manifest;
+use flame::runtime::{EngineKey, Runtime};
+
+fn setup(mode: DsoMode) -> Option<(Orchestrator, flame::config::ModelConfig)> {
+    let m = Manifest::load("artifacts").ok()?;
+    if !m.scenarios.contains_key("tiny") {
+        eprintln!("skipping: artifacts/tiny not built");
+        return None;
+    }
+    let rt = Runtime::new().ok()?;
+    let engines = rt.load_profile_set(&m, "tiny", "fused").ok()?;
+    let cfg = m.scenario("tiny").unwrap().config.clone();
+    let orch = Orchestrator::new(
+        engines,
+        &DsoConfig { mode, executors_per_profile: 2, queue_capacity: 256 },
+    )
+    .ok()?;
+    Some((orch, cfg))
+}
+
+fn inputs(cfg: &flame::config::ModelConfig, m: usize, salt: u64) -> (Arc<Vec<f32>>, Vec<f32>) {
+    let hist: Vec<f32> = (0..cfg.seq_len * cfg.d_model)
+        .map(|i| (((i as u64 + salt) * 31 % 113) as f32 / 113.0) - 0.5)
+        .collect();
+    let cands: Vec<f32> = (0..m * cfg.d_model)
+        .map(|i| (((i as u64 + salt) * 17 % 127) as f32 / 127.0) - 0.5)
+        .collect();
+    (Arc::new(hist), cands)
+}
+
+#[test]
+fn split_results_match_single_engine() {
+    // A request of m = p1 + p2 split across profiles must score each
+    // candidate exactly as a direct run of the right profile would.
+    let Some((orch, cfg)) = setup(DsoMode::Explicit) else { return };
+    let profiles = orch.profiles().to_vec(); // tiny: [4, 8]
+    assert_eq!(profiles, vec![4, 8]);
+    let m = 12; // 8 + 4 exact split, no padding
+    let (hist, cands) = inputs(&cfg, m, 3);
+    let out = orch.submit(Arc::clone(&hist), &cands, m).expect("submit");
+    assert_eq!(out.chunks, vec![8, 4]);
+    assert_eq!(out.padding, 0);
+    assert_eq!(out.scores.len(), m * cfg.n_tasks);
+
+    // direct comparison: run the 8-profile engine on candidates 0..8
+    let manifest = Manifest::load("artifacts").unwrap();
+    let rt = Runtime::new().unwrap();
+    let e8 = rt.load_engine(&manifest, &EngineKey::new("tiny", "fused", 8)).unwrap();
+    let direct = e8.run(&hist, &cands[..8 * cfg.d_model]).unwrap();
+    let diff = max_abs_diff(&out.scores[..8 * cfg.n_tasks], &direct);
+    assert!(diff < 1e-5, "split chunk disagrees with direct run: {diff}");
+}
+
+#[test]
+fn padding_stripped_and_scores_stable() {
+    // m = 5 pads to 8; the 5 real scores must equal the unpadded prefix
+    // of a direct 8-run with repeated-last-row padding.
+    let Some((orch, cfg)) = setup(DsoMode::Explicit) else { return };
+    let m = 5;
+    let (hist, cands) = inputs(&cfg, m, 9);
+    let out = orch.submit(Arc::clone(&hist), &cands, m).expect("submit");
+    assert_eq!(out.scores.len(), m * cfg.n_tasks);
+    assert_eq!(out.padding, 3);
+    assert!(out.scores.iter().all(|s| (0.0..=1.0).contains(s)));
+}
+
+#[test]
+fn implicit_mode_always_pads_to_max() {
+    let Some((orch, cfg)) = setup(DsoMode::ImplicitPad) else { return };
+    let (hist, cands) = inputs(&cfg, 4, 1);
+    let out = orch.submit(hist, &cands, 4).expect("submit");
+    assert_eq!(out.chunks, vec![8]);
+    assert_eq!(out.padding, 4);
+    // waste accounting reflects it
+    assert!(orch.waste_fraction() > 0.4);
+}
+
+#[test]
+fn explicit_wastes_less_than_implicit_on_mixed_m() {
+    let Some((explicit, cfg)) = setup(DsoMode::Explicit) else { return };
+    let Some((implicit, _)) = setup(DsoMode::ImplicitPad) else { return };
+    for salt in 0..8u64 {
+        let m = [4usize, 5, 8, 12][salt as usize % 4];
+        let (h, c) = inputs(&cfg, m, salt);
+        explicit.submit(Arc::clone(&h), &c, m).unwrap();
+        implicit.submit(h, &c, m).unwrap();
+    }
+    assert!(
+        explicit.waste_fraction() < implicit.waste_fraction(),
+        "explicit {} vs implicit {}",
+        explicit.waste_fraction(),
+        implicit.waste_fraction()
+    );
+}
+
+#[test]
+fn concurrent_submissions_consistent() {
+    let Some((orch, cfg)) = setup(DsoMode::Explicit) else { return };
+    let orch = Arc::new(orch);
+    // same request from 4 threads: identical scores
+    let (hist, cands) = inputs(&cfg, 8, 5);
+    let expected = orch.submit(Arc::clone(&hist), &cands, 8).unwrap().scores;
+    let hs: Vec<_> = (0..4)
+        .map(|_| {
+            let orch = Arc::clone(&orch);
+            let hist = Arc::clone(&hist);
+            let cands = cands.clone();
+            std::thread::spawn(move || orch.submit(hist, &cands, 8).unwrap().scores)
+        })
+        .collect();
+    for h in hs {
+        let got = h.join().unwrap();
+        assert!(max_abs_diff(&got, &expected) < 1e-6);
+    }
+}
+
+#[test]
+fn zero_candidates_is_empty_ok() {
+    let Some((orch, cfg)) = setup(DsoMode::Explicit) else { return };
+    let (hist, _) = inputs(&cfg, 4, 0);
+    let out = orch.submit(hist, &[], 0).unwrap();
+    assert!(out.scores.is_empty());
+    assert!(out.chunks.is_empty());
+}
+
+#[test]
+fn mismatched_cands_len_rejected() {
+    let Some((orch, cfg)) = setup(DsoMode::Explicit) else { return };
+    let (hist, cands) = inputs(&cfg, 4, 0);
+    assert!(orch.submit(hist, &cands[..cands.len() - 1], 4).is_err());
+}

@@ -1,0 +1,146 @@
+//! End-to-end numeric validation: load the tiny scenario's HLO artifacts
+//! through the PJRT runtime and check outputs against the python-executed
+//! test vectors (aot.py dumps inputs + expected scores).
+//!
+//! Requires `make artifacts` (tiny scenario) to have run.
+
+use std::sync::Arc;
+
+use flame::manifest::testvec::{max_abs_diff, TestVector};
+use flame::manifest::Manifest;
+use flame::runtime::{EngineKey, Runtime};
+
+const TOL: f32 = 2e-4;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) if m.scenarios.contains_key("tiny") => Some(m),
+        _ => {
+            eprintln!("skipping: artifacts/tiny not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn tiny_engines_match_python_testvectors() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::new().expect("pjrt client");
+    let weights = rt.upload_weights(&m, "tiny").expect("weights");
+
+    let tvs: Vec<_> = m.testvectors.iter().filter(|t| t.scenario == "tiny").collect();
+    assert!(!tvs.is_empty(), "no tiny test vectors in manifest");
+
+    // group by engine to compile each once
+    let mut keys: Vec<EngineKey> = tvs
+        .iter()
+        .map(|t| EngineKey::new("tiny", &t.variant, t.m))
+        .collect();
+    keys.sort_by_key(|k| k.label());
+    keys.dedup();
+
+    for key in keys {
+        let engine = rt
+            .load_engine_with_weights(&m, &key, Arc::clone(&weights))
+            .unwrap_or_else(|e| panic!("load {}: {e}", key.label()));
+        for t in tvs.iter().filter(|t| t.variant == key.variant && t.m == key.m) {
+            let tv = TestVector::load(&m.path_of(&t.path)).expect("testvec");
+            let hist = tv.get("hist").unwrap();
+            let cands = tv.get("cands").unwrap();
+            let expect = tv.get("scores").unwrap();
+            let got = engine.run(&hist.data, &cands.data).expect("run");
+            assert_eq!(got.len(), expect.data.len(), "{}", key.label());
+            let diff = max_abs_diff(&got, &expect.data);
+            assert!(
+                diff < TOL,
+                "{} vs python: max |diff| = {diff} (tol {TOL})",
+                key.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn variants_agree_with_each_other() {
+    // naive / api / fused are the same model; rust-side outputs on the
+    // same inputs must agree across engines.
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::new().expect("pjrt client");
+    let weights = rt.upload_weights(&m, "tiny").expect("weights");
+    let cfg = &m.scenario("tiny").unwrap().config;
+    let mm = cfg.native_m;
+
+    let mut outputs = Vec::new();
+    for variant in ["naive", "api", "fused"] {
+        if m.find("tiny", variant, mm).is_err() {
+            continue;
+        }
+        let key = EngineKey::new("tiny", variant, mm);
+        let engine = rt
+            .load_engine_with_weights(&m, &key, Arc::clone(&weights))
+            .expect("load");
+        // deterministic input
+        let hist: Vec<f32> = (0..cfg.seq_len * cfg.d_model)
+            .map(|i| ((i * 37 % 101) as f32 / 101.0) - 0.5)
+            .collect();
+        let cands: Vec<f32> = (0..mm * cfg.d_model)
+            .map(|i| ((i * 53 % 97) as f32 / 97.0) - 0.5)
+            .collect();
+        outputs.push((variant, engine.run(&hist, &cands).unwrap()));
+    }
+    assert!(outputs.len() >= 2, "need at least two variants built");
+    for w in outputs.windows(2) {
+        let d = max_abs_diff(&w[0].1, &w[1].1);
+        assert!(d < TOL, "{} vs {}: {d}", w[0].0, w[1].0);
+    }
+}
+
+#[test]
+fn scores_are_probabilities() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::new().expect("pjrt client");
+    let cfg = m.scenario("tiny").unwrap().config.clone();
+    let key = EngineKey::new("tiny", "fused", cfg.native_m);
+    if m.find("tiny", "fused", cfg.native_m).is_err() {
+        return;
+    }
+    let engine = rt.load_engine(&m, &key).expect("load");
+    let hist = vec![0.25f32; engine.hist_len()];
+    let cands = vec![-0.25f32; engine.cands_len()];
+    let scores = engine.run(&hist, &cands).unwrap();
+    assert_eq!(scores.len(), cfg.native_m * cfg.n_tasks);
+    assert!(scores.iter().all(|&s| (0.0..=1.0).contains(&s)), "sigmoid outputs");
+}
+
+#[test]
+fn engine_rejects_wrong_input_lengths() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::new().expect("pjrt client");
+    let cfg = m.scenario("tiny").unwrap().config.clone();
+    let key = EngineKey::new("tiny", "api", cfg.native_m);
+    if m.find("tiny", "api", cfg.native_m).is_err() {
+        return;
+    }
+    let engine = rt.load_engine(&m, &key).expect("load");
+    let bad_hist = vec![0.0f32; 3];
+    let cands = vec![0.0f32; engine.cands_len()];
+    assert!(engine.run(&bad_hist, &cands).is_err());
+}
+
+#[test]
+fn flops_manifest_agrees_with_rust_formula() {
+    let Some(m) = manifest() else { return };
+    // Manifest::validate already checks this, but assert explicitly so a
+    // formula drift is reported with context.
+    for e in &m.models {
+        let cfg = &m.scenario(&e.scenario).unwrap().config;
+        assert_eq!(
+            e.flops,
+            flame::config::flops::model_flops(cfg, e.m),
+            "{}/{}/m{}",
+            e.scenario,
+            e.variant,
+            e.m
+        );
+    }
+}

@@ -1,0 +1,171 @@
+//! Failure injection: the serving stack must degrade gracefully when the
+//! remote feature service times out — stale/default features, never
+//! failed requests (the accuracy/latency trade-off of §3.1 extends to
+//! availability). Plus admission-control behaviour under overload.
+//! No artifacts required.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flame::batching::RequestQueue;
+use flame::config::{CacheMode, PdaConfig};
+use flame::error::Error;
+use flame::featurestore::{FeatureSchema, RemoteStore};
+use flame::netsim::{Link, LinkConfig};
+use flame::pda::engine::FetchClass;
+use flame::pda::QueryEngine;
+
+fn flaky_store(fail_rate: f64) -> (Arc<RemoteStore>, Arc<Link>) {
+    let link = Arc::new(Link::new(LinkConfig {
+        rtt: Duration::from_micros(200),
+        bandwidth_bps: 1e9,
+        jitter: 0.0,
+        fail_rate,
+    }));
+    let store = Arc::new(RemoteStore::new(FeatureSchema::default(), Arc::clone(&link), 7));
+    (store, link)
+}
+
+fn cfg(mode: CacheMode) -> PdaConfig {
+    PdaConfig {
+        cache_mode: mode,
+        cache_capacity: 4096,
+        cache_shards: 4,
+        cache_ttl_ms: 60_000,
+        refresh_workers: 1,
+        ..PdaConfig::default()
+    }
+}
+
+#[test]
+fn sync_mode_survives_total_outage() {
+    let (store, _) = flaky_store(1.0); // every remote call times out
+    let engine = QueryEngine::new(&cfg(CacheMode::Sync), store);
+    let out = engine.fetch(&[1, 2, 3]);
+    assert_eq!(out.len(), 3);
+    for (f, class) in &out {
+        assert_eq!(*class, FetchClass::MissDefault);
+        assert!(f.dense.iter().all(|&x| x == 0.0));
+    }
+    assert!(engine.store_errors.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn sync_mode_serves_stale_during_outage() {
+    // healthy first, then outage: previously-cached values must be served
+    // stale rather than zeroed.
+    let link_cfg_ok = LinkConfig {
+        rtt: Duration::from_micros(200),
+        bandwidth_bps: 1e9,
+        jitter: 0.0,
+        fail_rate: 0.0,
+    };
+    let link = Arc::new(Link::new(link_cfg_ok));
+    let store = Arc::new(RemoteStore::new(FeatureSchema::default(), link, 7));
+    let mut c = cfg(CacheMode::Sync);
+    c.cache_ttl_ms = 1; // everything goes stale immediately
+    let engine = QueryEngine::new(&c, Arc::clone(&store));
+    let healthy = engine.fetch(&[42]);
+    assert_eq!(healthy[0].1, FetchClass::Remote);
+    std::thread::sleep(Duration::from_millis(5));
+
+    // now a total-outage store sharing the same cache is what we model by
+    // a new engine over a failing store; instead, flip to failing via a
+    // second engine is not possible (cache is per-engine), so simulate
+    // outage by swapping store: use a failing store and pre-warming its
+    // cache through the public API.
+    let (flaky, _) = flaky_store(1.0);
+    let engine2 = QueryEngine::new(&c, flaky);
+    // warm via insert path: a successful fetch is impossible, so push the
+    // value through the cache directly (public cache handle)
+    engine2.cache().insert(42, healthy[0].0.clone());
+    std::thread::sleep(Duration::from_millis(5)); // let it expire
+    let out = engine2.fetch(&[42]);
+    assert_eq!(out[0].1, FetchClass::Stale, "stale fallback during outage");
+    assert_eq!(out[0].0, healthy[0].0);
+}
+
+#[test]
+fn async_mode_unaffected_by_outage_latency() {
+    // async never blocks on the store, so an outage cannot raise request
+    // latency — only freshness suffers.
+    let (store, _) = flaky_store(1.0);
+    let engine = QueryEngine::new(&cfg(CacheMode::Async), store);
+    let t0 = std::time::Instant::now();
+    for i in 0..50 {
+        engine.fetch(&[i]);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_millis(50),
+        "async fetch path blocked during outage: {:?}",
+        t0.elapsed()
+    );
+    engine.drain_refreshes();
+    // all refreshes failed; errors counted
+    assert!(engine.store_errors.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn async_recovers_after_outage_ends() {
+    // fail_rate 0.5: retries eventually land and the cache fills.
+    let (store, _) = flaky_store(0.5);
+    let engine = QueryEngine::new(&cfg(CacheMode::Async), Arc::clone(&store));
+    for round in 0..20 {
+        engine.fetch(&[99]);
+        engine.drain_refreshes();
+        if let flame::cache::Lookup::Fresh(f) = engine.cache().get(99) {
+            assert_eq!(f, store.fetch_one(99));
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1 + round));
+    }
+    panic!("refresh never succeeded at 50% failure rate");
+}
+
+#[test]
+fn partial_failure_rate_degrades_proportionally() {
+    let (store, link) = flaky_store(0.3);
+    let engine = QueryEngine::new(&cfg(CacheMode::Sync), store);
+    let mut defaults = 0usize;
+    for i in 0..200u64 {
+        let out = engine.fetch(&[10_000 + i]); // all cold keys
+        if out[0].1 == FetchClass::MissDefault {
+            defaults += 1;
+        }
+    }
+    let rate = defaults as f64 / 200.0;
+    assert!((0.1..0.6).contains(&rate), "observed failure rate {rate}");
+    assert!(link.queries_total() >= 200);
+}
+
+#[test]
+fn queue_overload_sheds_not_blocks() {
+    let q: Arc<RequestQueue<u64>> = RequestQueue::new(4);
+    for i in 0..4 {
+        q.push(i).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 {
+        match q.push(99) {
+            Err(Error::Overloaded(_)) => {}
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+    assert!(t0.elapsed() < Duration::from_millis(50), "shedding must not block");
+}
+
+#[test]
+fn timeout_costs_more_than_success() {
+    // a timed-out transfer must be *slower* than a successful one (the
+    // 3x penalty) — callers cannot profit from failure
+    let (ok_store, _) = flaky_store(0.0);
+    let (bad_store, _) = flaky_store(1.0);
+    let t0 = std::time::Instant::now();
+    let _ = ok_store.try_fetch_batch(&[1, 2, 3]);
+    let ok_time = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let r = bad_store.try_fetch_batch(&[1, 2, 3]);
+    let bad_time = t1.elapsed();
+    assert!(r.is_err());
+    assert!(bad_time > ok_time, "timeout {bad_time:?} vs ok {ok_time:?}");
+}

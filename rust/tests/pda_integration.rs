@@ -1,0 +1,171 @@
+//! PDA integration: cached feature pipeline against the simulated remote
+//! store under Zipf traffic — the mechanics behind Table 3, asserted
+//! qualitatively (cache cuts network bytes and feature latency; staging
+//! and owned assembly agree bit-for-bit). No artifacts required.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flame::cache::Lookup;
+use flame::config::{CacheMode, PdaConfig, WorkloadConfig};
+use flame::embedding::EmbeddingTable;
+use flame::featurestore::{FeatureSchema, RemoteStore};
+use flame::netsim::{Link, LinkConfig};
+use flame::pda::{InputAssembler, QueryEngine, StagingArena};
+use flame::workload::Generator;
+
+fn link() -> Arc<Link> {
+    Arc::new(Link::new(LinkConfig {
+        rtt: Duration::from_micros(400),
+        bandwidth_bps: 200e6,
+        jitter: 0.0,
+        fail_rate: 0.0,
+    }))
+}
+
+fn pda_cfg(mode: CacheMode) -> PdaConfig {
+    PdaConfig {
+        cache_mode: mode,
+        cache_capacity: 50_000,
+        cache_shards: 16,
+        cache_ttl_ms: 60_000,
+        refresh_workers: 2,
+        ..PdaConfig::default()
+    }
+}
+
+fn workload() -> Generator {
+    Generator::new(
+        &WorkloadConfig {
+            catalog_size: 20_000,
+            zipf_theta: 1.05,
+            n_users: 500,
+            candidate_mix: vec![(32, 1.0)],
+            arrival_rate: None,
+            seed: 99,
+        },
+        32,
+    )
+}
+
+#[test]
+fn cache_cuts_network_traffic_under_zipf() {
+    let run = |mode: CacheMode| -> (u64, Duration) {
+        let l = link();
+        let store = Arc::new(RemoteStore::new(FeatureSchema::default(), Arc::clone(&l), 5));
+        let q = QueryEngine::new(&pda_cfg(mode), store);
+        let mut gen = workload();
+        let t = Instant::now();
+        for _ in 0..150 {
+            let r = gen.next_request();
+            q.fetch(&r.candidates);
+        }
+        q.drain_refreshes();
+        (l.bytes_total(), t.elapsed())
+    };
+    let (bytes_off, time_off) = run(CacheMode::Off);
+    let (bytes_sync, time_sync) = run(CacheMode::Sync);
+    // Zipf-hot candidates: the sync cache must save a large share of bytes
+    assert!(
+        (bytes_sync as f64) < 0.7 * bytes_off as f64,
+        "sync {bytes_sync} vs off {bytes_off}"
+    );
+    // and the wall time must drop too (fewer blocking RTTs)
+    assert!(time_sync < time_off, "sync {time_sync:?} vs off {time_off:?}");
+}
+
+#[test]
+fn async_mode_faster_than_sync_after_warmup() {
+    let l = link();
+    let store = Arc::new(RemoteStore::new(FeatureSchema::default(), Arc::clone(&l), 5));
+    let q_async = QueryEngine::new(&pda_cfg(CacheMode::Async), Arc::clone(&store));
+    let mut gen = workload();
+
+    // warmup: let refreshes land
+    for _ in 0..100 {
+        let r = gen.next_request();
+        q_async.fetch(&r.candidates);
+    }
+    q_async.drain_refreshes();
+
+    // measured phase: async never blocks on the link
+    let t = Instant::now();
+    for _ in 0..100 {
+        let r = gen.next_request();
+        q_async.fetch(&r.candidates);
+    }
+    let async_time = t.elapsed();
+    // 100 requests with zero blocking RTTs must be far under 100 * rtt
+    assert!(
+        async_time < Duration::from_millis(30),
+        "async warm path took {async_time:?}"
+    );
+}
+
+#[test]
+fn sync_cache_values_equal_remote_values() {
+    // caching must never change the feature bytes (accuracy preservation)
+    let l = link();
+    let store = Arc::new(RemoteStore::new(FeatureSchema::default(), Arc::clone(&l), 5));
+    let q = QueryEngine::new(&pda_cfg(CacheMode::Sync), Arc::clone(&store));
+    let ids = [3u64, 14, 15, 92, 65];
+    let first = q.fetch(&ids);
+    let second = q.fetch(&ids);
+    for ((a, _), (b, _)) in first.iter().zip(second.iter()) {
+        assert_eq!(a, b);
+    }
+    // direct store values agree too
+    let direct = store.fetch_batch(&ids);
+    for ((cached, _), fresh) in second.iter().zip(direct.iter()) {
+        assert_eq!(cached, fresh);
+    }
+}
+
+#[test]
+fn assembler_staging_matches_owned_under_full_pipeline() {
+    let l = link();
+    let store = Arc::new(RemoteStore::new(FeatureSchema::default(), Arc::clone(&l), 5));
+    let q = Arc::new(QueryEngine::new(&pda_cfg(CacheMode::Sync), store));
+    let table = Arc::new(EmbeddingTable::new(16, 2, 4096));
+
+    let staged = InputAssembler::new(Arc::clone(&table), Arc::clone(&q), true);
+    let owned = InputAssembler::new(table, q, false);
+
+    let mut gen = workload();
+    let mut arena = StagingArena::new(1 << 16);
+    let mut dummy = StagingArena::new(1);
+    for _ in 0..10 {
+        let r = gen.next_request();
+        let a = staged.assemble(&r.history, &r.candidates, &mut arena);
+        let b = owned.assemble(&r.history, &r.candidates, &mut dummy);
+        let (ah, ac) = a.views(&arena);
+        let (bh, bc) = b.views(&dummy);
+        assert_eq!(ah, bh);
+        assert_eq!(ac, bc);
+    }
+}
+
+#[test]
+fn hot_items_stay_resident_under_pressure() {
+    // capacity-constrained cache: the Zipf head must survive eviction
+    let l = link();
+    let store = Arc::new(RemoteStore::new(FeatureSchema::default(), Arc::clone(&l), 5));
+    let mut cfg = pda_cfg(CacheMode::Sync);
+    cfg.cache_capacity = 512; // tiny vs 20k catalog
+    let q = QueryEngine::new(&cfg, store);
+    let mut gen = workload();
+    for _ in 0..300 {
+        let r = gen.next_request();
+        q.fetch(&r.candidates);
+    }
+    // the hottest item (rank 0 under the catalog permutation) should be
+    // cached; probe it directly through the cache.
+    let catalog = gen.catalog().clone();
+    let hot = catalog.id_of_rank(0);
+    match q.cache().get(hot) {
+        Lookup::Fresh(_) | Lookup::Stale(_) => {}
+        Lookup::Miss => panic!("hottest item evicted from a 512-entry cache"),
+    }
+    let rate = q.cache().stats.hit_rate();
+    assert!(rate > 0.3, "hit rate {rate} too low under Zipf 1.05");
+}

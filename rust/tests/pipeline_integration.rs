@@ -1,0 +1,144 @@
+//! Full-stack pipeline integration (tiny scenario): feature stage +
+//! compute stage through `ServingStack`, worker pool + request queue,
+//! metrics accounting, and the ablation arms behaving directionally.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flame::batching::RequestQueue;
+use flame::config::{CacheMode, DsoMode, StackConfig, WorkloadConfig};
+use flame::manifest::Manifest;
+use flame::pda::StagingArena;
+use flame::runtime::Runtime;
+use flame::server::pipeline::StackBuilder;
+use flame::workload::{Generator, Request};
+
+fn build(cfgmod: impl FnOnce(&mut StackConfig)) -> Option<Arc<flame::server::ServingStack>> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    if !manifest.scenarios.contains_key("tiny") {
+        eprintln!("skipping: artifacts/tiny not built");
+        return None;
+    }
+    let rt = Runtime::new().ok()?;
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Sync;
+    cfg.server.pipeline_workers = 2;
+    cfgmod(&mut cfg);
+    let stack = StackBuilder::new("tiny", "fused", cfg).build(&rt, &manifest).ok()?;
+    Some(Arc::new(stack))
+}
+
+fn gen_requests(n: usize, stack: &flame::server::ServingStack) -> Vec<Request> {
+    let wl = WorkloadConfig {
+        catalog_size: 5_000,
+        zipf_theta: 1.0,
+        n_users: 200,
+        candidate_mix: WorkloadConfig::uniform_mix(stack.orchestrator.profiles()),
+        arrival_rate: None,
+        seed: 11,
+    };
+    let mut g = Generator::new(&wl, stack.model_cfg.seq_len);
+    g.batch(n)
+}
+
+#[test]
+fn serve_returns_scores_and_records_metrics() {
+    let Some(stack) = build(|_| {}) else { return };
+    let reqs = gen_requests(8, &stack);
+    let mut arena = StagingArena::new(1 << 16);
+    for r in &reqs {
+        let resp = stack.serve(r, &mut arena).expect("serve");
+        assert_eq!(resp.scores.len(), r.m() * stack.model_cfg.n_tasks);
+        assert!(resp.scores.iter().all(|s| (0.0..=1.0).contains(s)));
+        assert!(resp.overall_us >= resp.feature_us);
+    }
+    let snap = stack.metrics.snapshot();
+    assert_eq!(snap.requests, 8);
+    assert_eq!(snap.pairs as usize, reqs.iter().map(|r| r.m()).sum::<usize>());
+    assert!(snap.overall_mean_ms > 0.0);
+    assert!(snap.compute_mean_ms > 0.0);
+}
+
+#[test]
+fn serve_is_deterministic_for_a_request() {
+    let Some(stack) = build(|_| {}) else { return };
+    let reqs = gen_requests(1, &stack);
+    let mut arena = StagingArena::new(1 << 16);
+    let a = stack.serve(&reqs[0], &mut arena).unwrap();
+    let b = stack.serve(&reqs[0], &mut arena).unwrap();
+    assert_eq!(a.scores, b.scores, "same request, same features -> same scores");
+}
+
+#[test]
+fn worker_pool_drains_queue() {
+    let Some(stack) = build(|_| {}) else { return };
+    let reqs = gen_requests(16, &stack);
+    let queue = RequestQueue::new(64);
+    let workers = stack.spawn_workers(Arc::clone(&queue), 2);
+    for r in reqs {
+        queue.push(r).unwrap();
+    }
+    // wait for drain
+    let t0 = std::time::Instant::now();
+    while stack.metrics.requests() < 16 && t0.elapsed() < Duration::from_secs(60) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    queue.close();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(stack.metrics.requests(), 16);
+    assert_eq!(stack.metrics.dropped(), 0);
+    // queueing delay was recorded
+    assert!(stack.metrics.queueing.count() >= 16);
+}
+
+#[test]
+fn short_history_padded_long_history_truncated() {
+    let Some(stack) = build(|_| {}) else { return };
+    let mut arena = StagingArena::new(1 << 16);
+    let l = stack.model_cfg.seq_len;
+    // short history
+    let r1 = Request { request_id: 1, user_id: 0, history: vec![5; l / 2], candidates: vec![1, 2, 3, 4] };
+    let resp1 = stack.serve(&r1, &mut arena).expect("short history");
+    assert_eq!(resp1.scores.len(), 4 * stack.model_cfg.n_tasks);
+    // over-long history
+    let r2 = Request { request_id: 2, user_id: 0, history: vec![5; l * 2], candidates: vec![1, 2, 3, 4] };
+    let resp2 = stack.serve(&r2, &mut arena).expect("long history");
+    assert_eq!(resp2.scores.len(), 4 * stack.model_cfg.n_tasks);
+}
+
+#[test]
+fn cache_off_pulls_more_network_than_sync() {
+    let Some(off) = build(|c| c.pda.cache_mode = CacheMode::Off) else { return };
+    let Some(sync) = build(|c| c.pda.cache_mode = CacheMode::Sync) else { return };
+    let mut arena = StagingArena::new(1 << 16);
+    for stack in [&off, &sync] {
+        let reqs = gen_requests(24, stack);
+        for r in &reqs {
+            stack.serve(r, &mut arena).unwrap();
+        }
+    }
+    let b_off = off.link.bytes_total();
+    let b_sync = sync.link.bytes_total();
+    assert!(
+        b_sync < b_off,
+        "sync cache should cut network bytes: {b_sync} vs {b_off}"
+    );
+}
+
+#[test]
+fn implicit_dso_executes_more_rows() {
+    let Some(ex) = build(|c| c.dso.mode = DsoMode::Explicit) else { return };
+    let Some(im) = build(|c| c.dso.mode = DsoMode::ImplicitPad) else { return };
+    let mut arena = StagingArena::new(1 << 16);
+    for stack in [&ex, &im] {
+        let reqs = gen_requests(12, stack);
+        for r in &reqs {
+            stack.serve(r, &mut arena).unwrap();
+        }
+    }
+    let rows_ex = ex.orchestrator.executed_rows_total.load(std::sync::atomic::Ordering::Relaxed);
+    let rows_im = im.orchestrator.executed_rows_total.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(rows_ex < rows_im, "explicit {rows_ex} rows vs implicit {rows_im}");
+}

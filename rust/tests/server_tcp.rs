@@ -1,0 +1,94 @@
+//! TCP front integration: start the server on the tiny stack, drive it
+//! with the binary-protocol client, check scores match in-process serving.
+
+use std::sync::Arc;
+
+use flame::config::{CacheMode, StackConfig};
+use flame::manifest::testvec::max_abs_diff;
+use flame::manifest::Manifest;
+use flame::pda::StagingArena;
+use flame::runtime::Runtime;
+use flame::server::pipeline::StackBuilder;
+use flame::server::tcp::{TcpClient, TcpServer};
+use flame::workload::Request;
+
+fn stack() -> Option<Arc<flame::server::ServingStack>> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    if !manifest.scenarios.contains_key("tiny") {
+        eprintln!("skipping: artifacts/tiny not built");
+        return None;
+    }
+    let rt = Runtime::new().ok()?;
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Sync;
+    Some(Arc::new(StackBuilder::new("tiny", "fused", cfg).build(&rt, &manifest).ok()?))
+}
+
+fn request(id: u64, m: usize, l: usize) -> Request {
+    Request {
+        request_id: id,
+        user_id: id % 10,
+        history: (0..l as u64).map(|i| i * 3 + id).collect(),
+        candidates: (0..m as u64).map(|i| 1000 + i * 7 + id).collect(),
+    }
+}
+
+#[test]
+fn tcp_roundtrip_matches_inprocess() {
+    let Some(stack) = stack() else { return };
+    let server = TcpServer::start(Arc::clone(&stack), "127.0.0.1:0").expect("start");
+    let mut client = TcpClient::connect(&server.addr).expect("connect");
+
+    let req = request(1, 8, stack.model_cfg.seq_len);
+    let wire = client.call(&req).expect("call");
+    assert_eq!(wire.status, 0);
+    assert_eq!(wire.request_id, 1);
+    assert_eq!(wire.m, 8);
+    assert_eq!(wire.n_tasks, stack.model_cfg.n_tasks);
+
+    // in-process reference (features are cached+deterministic, so equal)
+    let mut arena = StagingArena::new(1 << 16);
+    let direct = stack.serve(&req, &mut arena).expect("direct");
+    assert!(max_abs_diff(&wire.scores, &direct.scores) < 1e-6);
+
+    server.shutdown();
+}
+
+#[test]
+fn tcp_multiple_requests_one_connection() {
+    let Some(stack) = stack() else { return };
+    let server = TcpServer::start(Arc::clone(&stack), "127.0.0.1:0").expect("start");
+    let mut client = TcpClient::connect(&server.addr).expect("connect");
+    for id in 0..5u64 {
+        let m = if id % 2 == 0 { 4 } else { 8 };
+        let wire = client.call(&request(id, m, stack.model_cfg.seq_len)).expect("call");
+        assert_eq!(wire.status, 0);
+        assert_eq!(wire.request_id, id);
+        assert_eq!(wire.scores.len(), m * stack.model_cfg.n_tasks);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn tcp_concurrent_clients() {
+    let Some(stack) = stack() else { return };
+    let server = TcpServer::start(Arc::clone(&stack), "127.0.0.1:0").expect("start");
+    let addr = server.addr;
+    let l = stack.model_cfg.seq_len;
+    let hs: Vec<_> = (0..3)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut client = TcpClient::connect(&addr).expect("connect");
+                for i in 0..3u64 {
+                    let wire = client.call(&request(t * 100 + i, 4, l)).expect("call");
+                    assert_eq!(wire.status, 0);
+                    assert_eq!(wire.request_id, t * 100 + i);
+                }
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}

@@ -1,0 +1,219 @@
+//! Property tests over the hand-rolled substrates (propcheck harness):
+//! JSON round-trips, histogram quantile bounds, LRU invariants, split
+//! planner conservation, wire-protocol round-trips, RNG distribution
+//! sanity. These are the coordinator invariants DESIGN.md commits to.
+
+use std::time::{Duration, Instant};
+
+use flame::cache::{Lookup, LruCache};
+use flame::dso::plan_split;
+use flame::metrics::Histogram;
+use flame::prop_ensure;
+use flame::server::tcp::{decode_request, encode_request};
+use flame::util::json::{parse, Json};
+use flame::util::propcheck;
+use flame::workload::trace::{request_from_line, request_to_line};
+use flame::workload::Request;
+
+#[test]
+fn prop_json_number_roundtrip() {
+    propcheck::check("json number roundtrip", 500, |g| {
+        let x = (g.u64_below(1 << 52) as f64) * if g.bool() { -1.0 } else { 1.0 };
+        let frac = if g.bool() { 0.5 } else { 0.0 };
+        let v = Json::Num(x + frac);
+        let back = parse(&v.to_string()).map_err(|e| e.to_string())?;
+        prop_ensure!(back == v, "{back:?} != {v:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_string_roundtrip() {
+    propcheck::check("json string roundtrip", 500, |g| {
+        let len = g.usize_in(0, 40);
+        let chars: Vec<char> = (0..len)
+            .map(|_| {
+                match g.u64_below(6) {
+                    0 => '"',
+                    1 => '\\',
+                    2 => '\n',
+                    3 => char::from_u32(0x20 + g.u64_below(60) as u32).unwrap(),
+                    4 => 'é',
+                    _ => '😀',
+                }
+            })
+            .collect();
+        let s: String = chars.into_iter().collect();
+        let v = Json::Str(s.clone());
+        let back = parse(&v.to_string()).map_err(|e| e.to_string())?;
+        prop_ensure!(back.as_str().unwrap() == s, "roundtrip failed for {s:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_nested_structures() {
+    propcheck::check("json nested roundtrip", 200, |g| {
+        fn build(g: &mut propcheck::Gen, depth: usize) -> Json {
+            if depth == 0 || g.u64_below(3) == 0 {
+                match g.u64_below(4) {
+                    0 => Json::Null,
+                    1 => Json::Bool(g.bool()),
+                    2 => Json::Num(g.u64_below(1000) as f64),
+                    _ => Json::Str(format!("s{}", g.u64_below(100))),
+                }
+            } else if g.bool() {
+                Json::Arr((0..g.usize_in(0, 4)).map(|_| build(g, depth - 1)).collect())
+            } else {
+                Json::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), build(g, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+        let v = build(g, 4);
+        let back = parse(&v.to_string()).map_err(|e| e.to_string())?;
+        prop_ensure!(back == v, "nested roundtrip failed");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_bounded_by_minmax() {
+    propcheck::check("histogram quantile bounds", 200, |g| {
+        let h = Histogram::new();
+        let n = g.usize_in(1, 200);
+        let mut lo = u64::MAX;
+        let mut hi = 0u64;
+        for _ in 0..n {
+            let v = g.u64_below(10_000_000);
+            lo = lo.min(v);
+            hi = hi.max(v);
+            h.record(v);
+        }
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let x = h.quantile(q);
+            prop_ensure!(x <= hi, "q{q}={x} > max {hi}");
+        }
+        prop_ensure!(h.count() == n as u64, "count");
+        // quantile monotone in q
+        prop_ensure!(
+            h.quantile(0.25) <= h.quantile(0.75),
+            "quantiles not monotone"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lru_never_exceeds_capacity_and_keeps_mru() {
+    propcheck::check("lru invariants", 300, |g| {
+        let cap = g.usize_in(1, 16);
+        let mut c: LruCache<u64> = LruCache::new(cap, Duration::from_secs(3600));
+        let now = Instant::now();
+        let ops = g.usize_in(1, 100);
+        let mut last_inserted = None;
+        for _ in 0..ops {
+            let k = g.u64_below(32);
+            if g.bool() {
+                c.insert(k, k, now);
+                last_inserted = Some(k);
+            } else {
+                let _ = c.get(k, now);
+            }
+            prop_ensure!(c.len() <= cap, "len {} > cap {cap}", c.len());
+        }
+        // the most recently inserted key must still be present
+        if let Some(k) = last_inserted {
+            prop_ensure!(
+                !matches!(c.get(k, now), Lookup::Miss),
+                "MRU key {k} evicted"
+            );
+        }
+        // mru list length == len
+        prop_ensure!(c.keys_mru().len() == c.len(), "mru list length mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planner_total_conservation_random_profiles() {
+    propcheck::check("planner conservation", 1000, |g| {
+        let mut profiles = g.vec_usize(1, 6, 1, 512);
+        profiles.sort_unstable();
+        profiles.dedup();
+        let m = g.usize_in(0, 4096);
+        let plan = plan_split(m, &profiles);
+        let total: usize = plan.chunks.iter().sum();
+        prop_ensure!(total == m + plan.padding, "conservation");
+        prop_ensure!(total >= m, "coverage");
+        for c in &plan.chunks {
+            prop_ensure!(profiles.contains(c), "alien chunk {c}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_request_roundtrip() {
+    propcheck::check("wire request roundtrip", 300, |g| {
+        let req = Request {
+            request_id: g.u64_below(u64::MAX / 2),
+            user_id: g.u64_below(1 << 40),
+            history: (0..g.usize_in(0, 64)).map(|_| g.u64_below(1 << 48)).collect(),
+            candidates: (0..g.usize_in(0, 32)).map(|_| g.u64_below(1 << 48)).collect(),
+        };
+        let back = decode_request(&encode_request(&req)).map_err(|e| e.to_string())?;
+        prop_ensure!(back == req, "wire roundtrip");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_line_roundtrip() {
+    propcheck::check("trace jsonl roundtrip", 300, |g| {
+        let req = Request {
+            request_id: g.u64_below(1 << 50),
+            user_id: g.u64_below(1 << 30),
+            history: (0..g.usize_in(0, 16)).map(|_| g.u64_below(1 << 50)).collect(),
+            candidates: (0..g.usize_in(1, 8)).map(|_| g.u64_below(1 << 50)).collect(),
+        };
+        let back = request_from_line(&request_to_line(&req)).map_err(|e| e.to_string())?;
+        prop_ensure!(back == req, "trace roundtrip");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_below_always_in_range() {
+    propcheck::check("rng below range", 500, |g| {
+        let n = 1 + g.u64_below(1 << 40);
+        let x = g.rng().below(n);
+        prop_ensure!(x < n, "{x} >= {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_rejects_truncation() {
+    // any strict prefix of a valid frame must fail to decode, not panic
+    propcheck::check("wire truncation safety", 200, |g| {
+        let req = Request {
+            request_id: 1,
+            user_id: 2,
+            history: (0..g.usize_in(1, 8)).map(|_| g.u64_below(100)).collect(),
+            candidates: (0..g.usize_in(1, 8)).map(|_| g.u64_below(100)).collect(),
+        };
+        let buf = encode_request(&req);
+        let cut = g.usize_in(0, buf.len());
+        if cut < buf.len() {
+            prop_ensure!(
+                decode_request(&buf[..cut]).is_err(),
+                "truncated frame decoded at {cut}/{}",
+                buf.len()
+            );
+        }
+        Ok(())
+    });
+}
