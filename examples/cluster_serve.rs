@@ -1,0 +1,97 @@
+//! Cluster-tier demo: three replicas behind the router, cache-affinity
+//! placement, deadline admission, and failure ejection + re-admission —
+//! all on simulated replicas, so it runs on a bare checkout:
+//!
+//! ```bash
+//! cargo run --release --example cluster_serve
+//! ```
+//!
+//! (For real replicas over artifacts, use `flame cluster --real` or
+//! `flame bind --replicas 3`.)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use flame::cluster::{
+    ClusterConfig, ClusterRouter, ReplicaBackend, RoutePolicy, SimConfig, SimReplica,
+};
+use flame::config::WorkloadConfig;
+use flame::workload::{driver, Generator};
+
+fn main() -> Result<()> {
+    // three simulated replicas, each with its own user-feature cache
+    let sims: Vec<Arc<SimReplica>> =
+        (0..3).map(|_| Arc::new(SimReplica::new(SimConfig::default()))).collect();
+    let backends: Vec<Arc<dyn ReplicaBackend>> =
+        sims.iter().map(|s| Arc::clone(s) as Arc<dyn ReplicaBackend>).collect();
+    let router = Arc::new(ClusterRouter::new(
+        backends,
+        ClusterConfig { policy: RoutePolicy::CacheAffinity, ..ClusterConfig::default() },
+    )?);
+
+    // traffic: 400 returning users, non-uniform candidate counts
+    let wl = WorkloadConfig {
+        catalog_size: 50_000,
+        zipf_theta: 0.99,
+        n_users: 400,
+        candidate_mix: vec![(128, 0.6), (256, 0.25), (512, 0.15)],
+        arrival_rate: None,
+        seed: 9,
+    };
+    let requests = Generator::new(&wl, 32).batch(3_000);
+
+    println!("phase 1: cache-affinity routing, 3k requests from 400 users");
+    let report = driver::closed_loop(requests.clone(), 12, Duration::from_secs(30), |r| {
+        router.submit(r).is_ok()
+    });
+    let snap = router.snapshot();
+    println!(
+        "  completed {}/{}  aggregate cache hit rate {:.1} %",
+        report.completed,
+        report.submitted,
+        snap.aggregate_cache_hit_rate * 100.0
+    );
+    for r in &snap.replicas {
+        println!(
+            "  replica {}: {} requests, hit rate {:.1} %, p99 {:.2} ms",
+            r.id,
+            r.requests,
+            r.cache_hit_rate * 100.0,
+            r.p99_ms
+        );
+    }
+
+    // phase 2: replica 0 starts failing; the router ejects it after 3
+    // consecutive errors and fails the affected users over to the ring's
+    // next replicas — the others' caches stay warm (minimal disruption)
+    println!("\nphase 2: replica 0 fails; consecutive-error ejection + failover");
+    sims[0].fail_next(1_000);
+    let report = driver::closed_loop(requests.clone(), 12, Duration::from_secs(30), |r| {
+        router.submit(r).is_ok()
+    });
+    let snap = router.snapshot();
+    println!(
+        "  completed {}/{} (failover re-routes: {})",
+        report.completed, report.submitted, snap.rerouted
+    );
+    for r in &snap.replicas {
+        println!(
+            "  replica {}: healthy={} errors={} ejections={}",
+            r.id, r.healthy, r.errors, r.ejections
+        );
+    }
+
+    // phase 3: cooldown passes, replica 0 recovers and is re-admitted
+    sims[0].fail_next(0);
+    std::thread::sleep(Duration::from_millis(600)); // > eject_cooldown_ms
+    let before = router.replicas()[0].metrics.requests();
+    driver::closed_loop(requests, 12, Duration::from_secs(30), |r| router.submit(r).is_ok());
+    let after = router.replicas()[0].metrics.requests();
+    println!(
+        "\nphase 3: after cooldown, replica 0 served {} more requests (healthy={})",
+        after - before,
+        router.replicas()[0].healthy()
+    );
+    Ok(())
+}

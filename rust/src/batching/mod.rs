@@ -137,6 +137,38 @@ mod tests {
     }
 
     #[test]
+    fn zero_capacity_clamps_to_one() {
+        let q = RequestQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.push(1).unwrap();
+        match q.push(2) {
+            Err(Error::Overloaded(_)) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shed_preserves_fifo_of_admitted_items() {
+        let q = RequestQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(q.push(3).is_err()); // shed
+        assert_eq!(q.pop().unwrap().0, 1);
+        q.push(4).unwrap(); // capacity freed: admitted again
+        assert_eq!(q.pop().unwrap().0, 2);
+        assert_eq!(q.pop().unwrap().0, 4);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queueing_delay_near_zero_for_immediate_pop() {
+        let q = RequestQueue::new(4);
+        q.push(1).unwrap();
+        let (_, delay) = q.pop().unwrap();
+        assert!(delay < std::time::Duration::from_millis(50), "delay {delay:?}");
+    }
+
+    #[test]
     fn mpmc_all_items_delivered_once() {
         let q: Arc<RequestQueue<u64>> = RequestQueue::new(10_000);
         for i in 0..1000 {

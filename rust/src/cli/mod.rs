@@ -19,7 +19,8 @@ pub struct Args {
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "scenario", "variant", "m", "requests", "duration-s", "rate",
     "workers", "cache", "dso", "config", "bind", "trace", "seed", "concurrency",
-    "executors", "theta", "catalog",
+    "executors", "theta", "catalog", "replicas", "policy", "deadline-ms",
+    "slots", "users",
 ];
 
 impl Args {
@@ -91,7 +92,17 @@ COMMANDS:
   serve     run the serving stack on synthetic traffic and report metrics
   replay    serve a recorded JSONL trace (--trace FILE)
   record    generate and save a trace (--trace FILE --requests N)
-  bind      start the TCP front (--bind ADDR)
+  bind      start the TCP front (--bind ADDR; --replicas N fronts a cluster)
+  cluster   drive the multi-replica cluster router and report per-replica
+            metrics (simulated replicas by default; --real uses artifacts)
+
+CLUSTER FLAGS:
+  --replicas N        replica count                (default: 3)
+  --policy P          rr | p2c | affinity          (default: affinity)
+  --deadline-ms D     per-request deadline budget  (default: 50)
+  --slots N           service slots per replica    (default: 4)
+  --users N           synthetic user population    (default: 2000)
+  --real              replicas are real stacks (needs artifacts)
 
 COMMON FLAGS:
   --artifacts DIR     artifact directory (default: artifacts)
@@ -162,8 +173,16 @@ mod tests {
     #[test]
     fn help_mentions_commands() {
         let h = help();
-        for cmd in ["info", "serve", "replay", "record", "bind"] {
+        for cmd in ["info", "serve", "replay", "record", "bind", "cluster"] {
             assert!(h.contains(cmd));
         }
+    }
+
+    #[test]
+    fn cluster_flags_take_values() {
+        let a = parse(&["cluster", "--replicas", "4", "--policy", "affinity", "--deadline-ms", "20"]);
+        assert_eq!(a.get_parse::<usize>("replicas").unwrap(), Some(4));
+        assert_eq!(a.get("policy"), Some("affinity"));
+        assert_eq!(a.get_parse::<u64>("deadline-ms").unwrap(), Some(20));
     }
 }

@@ -1,0 +1,161 @@
+//! Deadline-aware admission control.
+//!
+//! Every request enters the router with a deadline budget (default: the
+//! paper's < 50 ms envelope from `ServerConfig::deadline_ms`). Before
+//! dispatch, the router estimates the request's sojourn time on the
+//! chosen replica from that replica's rolling latency histogram and its
+//! current congestion; a request that cannot make its SLA is re-routed
+//! to the cheapest healthy alternative or shed at the front door —
+//! paying nothing for work that would arrive dead (`shed_total`).
+//! Completions that still blew the budget are counted in
+//! `sla_miss_total` (the estimator's miss rate is its calibration
+//! signal).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::replica::Replica;
+
+/// Outcome of the pre-dispatch deadline check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Admit,
+    /// The replica's estimated sojourn exceeds the request's budget.
+    Overbudget { estimate_us: u64 },
+}
+
+/// Shared admission counters + the sojourn estimator.
+#[derive(Default)]
+pub struct Admission {
+    /// Requests refused at the front door (could not make the SLA
+    /// anywhere).
+    pub shed_total: AtomicU64,
+    /// Completed requests whose end-to-end latency still exceeded their
+    /// budget.
+    pub sla_miss_total: AtomicU64,
+    /// Requests moved off their policy-chosen replica (deadline or
+    /// failover re-routes).
+    pub rerouted_total: AtomicU64,
+}
+
+impl Admission {
+    pub fn new() -> Self {
+        Admission::default()
+    }
+
+    /// Expected sojourn time (µs) for a new request on `replica`: the
+    /// rolling p99 service time (tail-conservative), plus one mean
+    /// service time per full "wave" of in-flight work ahead of it beyond
+    /// the replica's parallel slots. A cold replica (empty histogram)
+    /// estimates 0 — optimistic admission until the histogram warms,
+    /// which is what lets a freshly re-admitted replica be probed at all.
+    pub fn estimate_us(replica: &Replica) -> u64 {
+        let mean = replica.mean_us();
+        let p99 = replica.p99_us();
+        let tail = if p99 > 0 { p99 } else { mean };
+        let waves = (replica.in_flight() / replica.slots()) as u64;
+        tail + mean.saturating_mul(waves)
+    }
+
+    /// Pre-dispatch deadline check for `replica` against `budget_us`.
+    pub fn check(&self, replica: &Replica, budget_us: u64) -> Verdict {
+        let estimate_us = Self::estimate_us(replica);
+        if estimate_us <= budget_us {
+            Verdict::Admit
+        } else {
+            Verdict::Overbudget { estimate_us }
+        }
+    }
+
+    pub fn note_shed(&self) {
+        self.shed_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_reroute(&self) {
+        self.rerouted_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a completion; counts an SLA miss if the budget was blown.
+    pub fn note_completion(&self, elapsed_us: u64, budget_us: u64) {
+        if elapsed_us > budget_us {
+            self.sla_miss_total.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed_total.load(Ordering::Relaxed)
+    }
+
+    pub fn sla_misses(&self) -> u64 {
+        self.sla_miss_total.load(Ordering::Relaxed)
+    }
+
+    pub fn rerouted(&self) -> u64 {
+        self.rerouted_total.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::replica::ReplicaBackend;
+    use crate::error::Result;
+    use crate::server::pipeline::Response;
+    use crate::workload::Request;
+    use std::sync::Arc;
+
+    struct NullBackend;
+
+    impl ReplicaBackend for NullBackend {
+        fn serve(&self, req: &Request) -> Result<Response> {
+            Ok(Response {
+                request_id: req.request_id,
+                scores: Vec::new(),
+                m: req.m(),
+                overall_us: 0,
+                compute_us: 0,
+                feature_us: 0,
+                queue_us: 0,
+            })
+        }
+    }
+
+    fn replica(slots: usize) -> Replica {
+        Replica::new(0, Arc::new(NullBackend), slots, 3, 1_000)
+    }
+
+    #[test]
+    fn cold_replica_admits_optimistically() {
+        let r = replica(4);
+        let a = Admission::new();
+        assert_eq!(a.check(&r, 1), Verdict::Admit);
+    }
+
+    #[test]
+    fn warm_replica_estimate_uses_tail() {
+        let r = replica(4);
+        // seed the rolling window: ~2 ms service times
+        for _ in 0..100 {
+            r.record_latency(2_000, 1);
+        }
+        let est = Admission::estimate_us(&r);
+        assert!(est >= 1_900, "estimate {est} should reflect the 2 ms tail");
+        let a = Admission::new();
+        assert_eq!(a.check(&r, 50_000), Verdict::Admit);
+        match a.check(&r, 1_000) {
+            Verdict::Overbudget { estimate_us } => assert!(estimate_us >= 1_900),
+            v => panic!("expected Overbudget, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn completion_counts_sla_misses() {
+        let a = Admission::new();
+        a.note_completion(10_000, 50_000);
+        a.note_completion(60_000, 50_000);
+        assert_eq!(a.sla_misses(), 1);
+        a.note_shed();
+        a.note_reroute();
+        assert_eq!(a.shed(), 1);
+        assert_eq!(a.rerouted(), 1);
+    }
+}

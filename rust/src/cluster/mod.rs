@@ -1,0 +1,349 @@
+//! Cluster tier: multi-replica routing in front of N serving stacks.
+//!
+//! The paper's deployment serves 1e10..1e12 requests/day — far past one
+//! `ServingStack` behind one listener. This module adds the missing
+//! layer: a [`ClusterRouter`] that fronts N independent replicas with
+//!
+//! * pluggable placement ([`RoutePolicy`]): round-robin, least-loaded
+//!   power-of-two-choices, and **cache-affinity** consistent hashing on
+//!   `user_id` so returning users land on the replica whose PDA feature
+//!   cache already holds their features;
+//! * **deadline-aware admission** ([`Admission`]): sojourn time is
+//!   estimated from each replica's rolling latency histogram + current
+//!   congestion; requests that cannot make their SLA are re-routed to
+//!   the cheapest healthy replica or shed at the front door;
+//! * **replica health**: consecutive-error ejection with timed
+//!   re-admission (half-open probing after a cooldown).
+//!
+//! Backends implement [`ReplicaBackend`]: [`StackReplica`] wraps a real
+//! `ServingStack`; `sim::SimReplica` is the artifact-free model used by
+//! `bench_cluster` and the integration tests.
+
+pub mod admission;
+pub mod policy;
+pub mod replica;
+pub mod sim;
+
+pub use admission::{Admission, Verdict};
+pub use policy::{HashRing, RoutePolicy};
+pub use replica::{Replica, ReplicaBackend, ReplicaSnapshot, StackReplica};
+pub use sim::{SimConfig, SimReplica};
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::metrics::Recorder;
+use crate::server::pipeline::Response;
+use crate::util::rng::splitmix64;
+use crate::workload::Request;
+
+/// Cluster-tier knobs.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub policy: RoutePolicy,
+    /// Default per-request deadline budget (paper envelope: < 50 ms).
+    pub deadline_ms: u64,
+    /// Virtual nodes per replica on the consistent-hash ring.
+    pub vnodes: usize,
+    /// Service-parallelism hint per replica (sojourn estimator).
+    pub slots_per_replica: usize,
+    /// Consecutive errors before a replica is ejected.
+    pub eject_after: u32,
+    /// Ejection cooldown before timed re-admission (ms).
+    pub eject_cooldown_ms: u64,
+    /// Allow deadline/failover re-routes to another replica.
+    pub reroute: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            policy: RoutePolicy::CacheAffinity,
+            deadline_ms: 50,
+            vnodes: 64,
+            slots_per_replica: 4,
+            eject_after: 3,
+            eject_cooldown_ms: 500,
+            reroute: true,
+        }
+    }
+}
+
+/// Cluster-wide point-in-time view.
+#[derive(Clone, Debug)]
+pub struct ClusterSnapshot {
+    pub policy: &'static str,
+    pub replicas: Vec<ReplicaSnapshot>,
+    pub shed: u64,
+    pub sla_misses: u64,
+    pub rerouted: u64,
+    pub aggregate_cache_hit_rate: f64,
+}
+
+/// The routing tier over N replicas.
+pub struct ClusterRouter {
+    replicas: Vec<Arc<Replica>>,
+    cfg: ClusterConfig,
+    ring: HashRing,
+    rr_next: AtomicUsize,
+    rng_state: AtomicU64,
+    pub admission: Admission,
+    /// Aggregate cluster-level latency/throughput (what a load balancer
+    /// in front of the fleet would observe).
+    pub metrics: Recorder,
+}
+
+impl ClusterRouter {
+    pub fn new(backends: Vec<Arc<dyn ReplicaBackend>>, cfg: ClusterConfig) -> Result<Self> {
+        if backends.is_empty() {
+            return Err(Error::Config("cluster needs at least one replica".into()));
+        }
+        let cooldown_us = cfg.eject_cooldown_ms.saturating_mul(1_000);
+        let replicas: Vec<Arc<Replica>> = backends
+            .into_iter()
+            .enumerate()
+            .map(|(id, b)| {
+                Arc::new(Replica::new(id, b, cfg.slots_per_replica, cfg.eject_after, cooldown_us))
+            })
+            .collect();
+        let ring = HashRing::new(replicas.len(), cfg.vnodes);
+        let rng_state = AtomicU64::new(0x5EED_0000 ^ replicas.len() as u64);
+        Ok(ClusterRouter {
+            replicas,
+            cfg,
+            ring,
+            rr_next: AtomicUsize::new(0),
+            rng_state,
+            admission: Admission::new(),
+            metrics: Recorder::new(),
+        })
+    }
+
+    pub fn replicas(&self) -> &[Arc<Replica>] {
+        &self.replicas
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.cfg.policy
+    }
+
+    /// Default deadline budget in µs.
+    pub fn deadline_us(&self) -> u64 {
+        self.cfg.deadline_ms.saturating_mul(1_000)
+    }
+
+    /// Lock-free uniform draw (atomic splitmix64: fetch-add the golden
+    /// gamma, finalize locally).
+    fn next_rand(&self) -> u64 {
+        let mut s = self.rng_state.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed);
+        splitmix64(&mut s)
+    }
+
+    /// Policy-chosen healthy replica for `req`, or None if the whole
+    /// fleet is ejected.
+    fn pick(&self, req: &Request) -> Option<usize> {
+        let n = self.replicas.len();
+        let healthy = |i: usize| self.replicas[i].healthy();
+        match self.cfg.policy {
+            RoutePolicy::RoundRobin => {
+                // one counter draw, then a contiguous scan: interleaved
+                // fetch_adds under concurrency must still cover every
+                // index, or a lone healthy replica could be missed
+                let start = self.rr_next.fetch_add(1, Ordering::Relaxed);
+                (0..n).map(|k| start.wrapping_add(k) % n).find(|&i| healthy(i))
+            }
+            RoutePolicy::LeastLoaded => {
+                let alive: Vec<usize> = (0..n).filter(|&i| healthy(i)).collect();
+                match alive.len() {
+                    0 => None,
+                    1 => Some(alive[0]),
+                    k => {
+                        // power of two choices: two independent draws,
+                        // keep the less-loaded one
+                        let r = self.next_rand();
+                        let a = alive[(r >> 32) as usize % k];
+                        let mut b = alive[(r as u32) as usize % k];
+                        if a == b {
+                            b = alive[((r as u32) as usize + 1) % k];
+                        }
+                        let (la, lb) =
+                            (self.replicas[a].in_flight(), self.replicas[b].in_flight());
+                        Some(if lb < la { b } else { a })
+                    }
+                }
+            }
+            RoutePolicy::CacheAffinity => self.ring.route_filtered(req.user_id, healthy),
+        }
+    }
+
+    /// Healthy replica (excluding `exclude`) with the lowest estimated
+    /// sojourn — the re-route target.
+    fn cheapest_alternative(&self, exclude: usize) -> Option<(usize, u64)> {
+        self.replicas
+            .iter()
+            .filter(|r| r.id != exclude && r.healthy())
+            .map(|r| (r.id, Admission::estimate_us(r)))
+            .min_by_key(|&(_, est)| est)
+    }
+
+    /// Route and serve one request under the default deadline.
+    pub fn submit(&self, req: &Request) -> Result<Response> {
+        self.submit_with_budget(req, self.deadline_us())
+    }
+
+    /// Route and serve one request with an explicit deadline budget (µs):
+    /// policy pick → deadline admission (re-route or shed) → dispatch
+    /// (one failover retry on replica error) → SLA accounting.
+    pub fn submit_with_budget(&self, req: &Request, budget_us: u64) -> Result<Response> {
+        let t0 = Instant::now();
+        let primary = self
+            .pick(req)
+            .ok_or_else(|| Error::Overloaded("no healthy replicas".into()))?;
+
+        let target = match self.admission.check(&self.replicas[primary], budget_us) {
+            Verdict::Admit => primary,
+            Verdict::Overbudget { estimate_us } => match self.cheapest_alternative(primary) {
+                Some((alt, est)) if self.cfg.reroute && est <= budget_us => {
+                    self.admission.note_reroute();
+                    alt
+                }
+                _ => {
+                    self.admission.note_shed();
+                    return Err(Error::Overloaded(format!(
+                        "deadline admission: estimated {estimate_us} µs > budget {budget_us} µs on replica {primary}"
+                    )));
+                }
+            },
+        };
+
+        let mut result = self.replicas[target].serve_tracked(req);
+        if result.is_err() && self.cfg.reroute {
+            // replica failure (not a shed): one failover retry
+            if let Some((alt, _)) = self.cheapest_alternative(target) {
+                self.admission.note_reroute();
+                result = self.replicas[alt].serve_tracked(req);
+            }
+        }
+
+        if result.is_ok() {
+            let elapsed_us = t0.elapsed().as_micros() as u64;
+            self.metrics.record_request(elapsed_us, req.m());
+            self.admission.note_completion(elapsed_us, budget_us);
+        }
+        result
+    }
+
+    /// Exact aggregate feature-cache hit rate across all replicas.
+    pub fn aggregate_cache_hit_rate(&self) -> f64 {
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for r in &self.replicas {
+            let (h, m) = r.cache_counts();
+            hits += h;
+            misses += m;
+        }
+        if hits + misses == 0 {
+            0.0
+        } else {
+            hits as f64 / (hits + misses) as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> ClusterSnapshot {
+        ClusterSnapshot {
+            policy: self.cfg.policy.name(),
+            replicas: self.replicas.iter().map(|r| r.snapshot()).collect(),
+            shed: self.admission.shed(),
+            sla_misses: self.admission.sla_misses(),
+            rerouted: self.admission.rerouted(),
+            aggregate_cache_hit_rate: self.aggregate_cache_hit_rate(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim_router(n: usize, policy: RoutePolicy) -> ClusterRouter {
+        let backends: Vec<Arc<dyn ReplicaBackend>> = (0..n)
+            .map(|_| {
+                Arc::new(SimReplica::new(SimConfig {
+                    base_us: 0,
+                    per_pair_ns: 0,
+                    miss_penalty_us: 0,
+                    ..SimConfig::default()
+                })) as Arc<dyn ReplicaBackend>
+            })
+            .collect();
+        ClusterRouter::new(backends, ClusterConfig { policy, ..ClusterConfig::default() })
+            .unwrap()
+    }
+
+    fn req(id: u64, user: u64) -> Request {
+        Request { request_id: id, user_id: user, history: vec![], candidates: vec![1, 2] }
+    }
+
+    #[test]
+    fn empty_cluster_rejected() {
+        assert!(ClusterRouter::new(Vec::new(), ClusterConfig::default()).is_err());
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let router = sim_router(3, RoutePolicy::RoundRobin);
+        for i in 0..300 {
+            router.submit(&req(i, i)).unwrap();
+        }
+        for r in router.replicas() {
+            assert_eq!(r.metrics.requests(), 100, "replica {}", r.id);
+        }
+    }
+
+    #[test]
+    fn affinity_pins_users_to_one_replica() {
+        let router = sim_router(4, RoutePolicy::CacheAffinity);
+        for round in 0..5 {
+            for user in 0..40u64 {
+                router.submit(&req(round * 40 + user, user)).unwrap();
+            }
+        }
+        // every user's 5 requests hit exactly one replica: 40 misses
+        // total, 160 hits, aggregate hit rate 0.8
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for r in router.replicas() {
+            let (h, m) = r.cache_counts();
+            hits += h;
+            misses += m;
+        }
+        assert_eq!(misses, 40);
+        assert_eq!(hits, 160);
+        assert!((router.aggregate_cache_hit_rate() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p2c_roughly_balances() {
+        let router = sim_router(4, RoutePolicy::LeastLoaded);
+        for i in 0..4_000 {
+            router.submit(&req(i, i)).unwrap();
+        }
+        for r in router.replicas() {
+            let n = r.metrics.requests();
+            assert!((500..2_000).contains(&n), "replica {} got {n}", r.id);
+        }
+    }
+
+    #[test]
+    fn snapshot_reports_totals() {
+        let router = sim_router(2, RoutePolicy::RoundRobin);
+        for i in 0..10 {
+            router.submit(&req(i, i)).unwrap();
+        }
+        let snap = router.snapshot();
+        assert_eq!(snap.policy, "round-robin");
+        assert_eq!(snap.replicas.len(), 2);
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.replicas.iter().map(|r| r.requests).sum::<u64>(), 10);
+    }
+}

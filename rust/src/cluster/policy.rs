@@ -1,0 +1,201 @@
+//! Routing policies for the cluster tier.
+//!
+//! Three placement strategies, one flag apart (the bench compares them
+//! under the paper's non-uniform candidate mix):
+//!
+//! * **round-robin** — the uniform baseline; spreads every user over
+//!   every replica, so per-replica feature caches stay cold.
+//! * **least-loaded** — power-of-two-choices over in-flight counts;
+//!   near-optimal load balance at O(1) per decision (Mitzenmacher).
+//! * **cache-affinity** — consistent hashing on `user_id` over a
+//!   virtual-node ring, so a returning user lands on the replica whose
+//!   PDA feature cache already holds their features. Replica ejection
+//!   moves only the keys that mapped to the ejected replica (minimal
+//!   disruption), which is the property that keeps the other replicas'
+//!   caches warm through a failure.
+
+use crate::error::{Error, Result};
+use crate::util::rng::splitmix64;
+
+/// Cluster request-placement policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// Power-of-two-choices on in-flight load.
+    LeastLoaded,
+    /// Consistent hashing on `user_id` (feature-cache affinity).
+    CacheAffinity,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "rr" | "round-robin" => Ok(RoutePolicy::RoundRobin),
+            "p2c" | "least-loaded" => Ok(RoutePolicy::LeastLoaded),
+            "affinity" | "cache-affinity" => Ok(RoutePolicy::CacheAffinity),
+            o => Err(Error::Config(format!(
+                "unknown routing policy '{o}' (rr | p2c | affinity)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::CacheAffinity => "cache-affinity",
+        }
+    }
+
+    pub fn all() -> [RoutePolicy; 3] {
+        [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::CacheAffinity]
+    }
+}
+
+/// Mix two values into one well-distributed hash point.
+fn hash2(a: u64, b: u64) -> u64 {
+    let mut s = a.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ b;
+    splitmix64(&mut s)
+}
+
+/// Consistent-hash ring with virtual nodes.
+///
+/// Each replica contributes `vnodes` points; a key routes to the owner
+/// of the first point clockwise from its hash. Determinism: the ring is
+/// a pure function of (replica count, vnodes), so every router instance
+/// with the same topology places a user identically.
+pub struct HashRing {
+    /// (point hash, replica id), sorted by hash.
+    points: Vec<(u64, usize)>,
+    n_replicas: usize,
+}
+
+impl HashRing {
+    pub fn new(n_replicas: usize, vnodes: usize) -> Self {
+        let n_replicas = n_replicas.max(1);
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(n_replicas * vnodes);
+        for r in 0..n_replicas {
+            for v in 0..vnodes {
+                points.push((hash2(r as u64 + 1, v as u64), r));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, n_replicas }
+    }
+
+    /// Index of the first ring point clockwise from the key's hash.
+    fn start_index(&self, key: u64) -> usize {
+        let h = {
+            let mut s = key ^ 0xC0FF_EE00_D15E_A5E5;
+            splitmix64(&mut s)
+        };
+        match self.points.binary_search_by(|&(p, _)| p.cmp(&h)) {
+            Ok(i) => i,
+            Err(i) if i == self.points.len() => 0,
+            Err(i) => i,
+        }
+    }
+
+    /// The key's primary replica.
+    pub fn route(&self, key: u64) -> usize {
+        self.points[self.start_index(key)].1
+    }
+
+    /// Walk clockwise from the key's position to the first replica that
+    /// passes `healthy`. Keys whose primary is healthy are unaffected by
+    /// other replicas' health (minimal disruption).
+    pub fn route_filtered<F: Fn(usize) -> bool>(&self, key: u64, healthy: F) -> Option<usize> {
+        let start = self.start_index(key);
+        let mut ruled_out = 0usize;
+        // allocated only once a replica fails the health check — the
+        // healthy-primary common case returns on the first point
+        let mut seen: Option<Vec<bool>> = None;
+        for off in 0..self.points.len() {
+            let (_, r) = self.points[(start + off) % self.points.len()];
+            if healthy(r) {
+                return Some(r);
+            }
+            let seen = seen.get_or_insert_with(|| vec![false; self.n_replicas]);
+            if !seen[r] {
+                seen[r] = true;
+                ruled_out += 1;
+                if ruled_out == self.n_replicas {
+                    return None;
+                }
+            }
+        }
+        None
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.n_replicas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in RoutePolicy::all() {
+            assert_eq!(RoutePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(RoutePolicy::parse("p2c").unwrap(), RoutePolicy::LeastLoaded);
+        assert_eq!(RoutePolicy::parse("affinity").unwrap(), RoutePolicy::CacheAffinity);
+        assert!(RoutePolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn ring_is_deterministic() {
+        let a = HashRing::new(5, 64);
+        let b = HashRing::new(5, 64);
+        for key in 0..2_000u64 {
+            assert_eq!(a.route(key), b.route(key));
+        }
+    }
+
+    #[test]
+    fn ring_covers_all_replicas_roughly_evenly() {
+        let ring = HashRing::new(4, 64);
+        let mut counts = [0usize; 4];
+        for key in 0..40_000u64 {
+            counts[ring.route(key)] += 1;
+        }
+        for (r, &c) in counts.iter().enumerate() {
+            // each replica owns ~25%; virtual nodes keep the spread tight
+            assert!((6_000..14_000).contains(&c), "replica {r} got {c}");
+        }
+    }
+
+    #[test]
+    fn filtered_route_moves_only_dead_replicas_keys() {
+        let ring = HashRing::new(4, 64);
+        let dead = 2usize;
+        for key in 0..10_000u64 {
+            let primary = ring.route(key);
+            let routed = ring.route_filtered(key, |r| r != dead).unwrap();
+            if primary != dead {
+                assert_eq!(routed, primary, "healthy-primary key {key} moved");
+            } else {
+                assert_ne!(routed, dead);
+            }
+        }
+    }
+
+    #[test]
+    fn filtered_route_none_when_all_dead() {
+        let ring = HashRing::new(3, 16);
+        assert_eq!(ring.route_filtered(7, |_| false), None);
+    }
+
+    #[test]
+    fn single_replica_ring() {
+        let ring = HashRing::new(1, 8);
+        for key in 0..100u64 {
+            assert_eq!(ring.route(key), 0);
+        }
+    }
+}

@@ -1,0 +1,431 @@
+//! One routable replica: a serving backend wrapped with the telemetry
+//! the router reads on every placement decision — in-flight load, queue
+//! depth, a rolling latency histogram (p99 service estimate), and the
+//! consecutive-error health state machine with timed re-admission.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::metrics::{Histogram, Recorder};
+use crate::pda::StagingArena;
+use crate::server::pipeline::{Response, ServingStack};
+use crate::workload::Request;
+
+/// Rolling-window epoch for the admission estimator (see
+/// [`RollingWindow`]): estimates reflect roughly the last 1–2 s.
+const ROLLING_EPOCH_US: u64 = 1_000_000;
+
+/// Anything the cluster router can place a request on: a real
+/// [`ServingStack`] ([`StackReplica`]) or the artifact-free simulated
+/// backend (`cluster::sim::SimReplica`) used by benches and tests.
+pub trait ReplicaBackend: Send + Sync {
+    /// Serve one request synchronously.
+    fn serve(&self, req: &Request) -> Result<Response>;
+
+    /// (hits, misses) of this backend's feature cache. The router sums
+    /// exact counts across replicas — an aggregate hit rate, not an
+    /// average of per-replica rates.
+    fn cache_counts(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    fn cache_hit_rate(&self) -> f64 {
+        let (h, m) = self.cache_counts();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+}
+
+/// A real serving stack as a cluster backend. `ServingStack::serve`
+/// needs a caller-owned staging arena; this wrapper keeps a small pool
+/// so concurrent router submissions each get one without re-allocating.
+pub struct StackReplica {
+    stack: Arc<ServingStack>,
+    arenas: Mutex<Vec<StagingArena>>,
+}
+
+impl StackReplica {
+    pub fn new(stack: Arc<ServingStack>) -> Self {
+        StackReplica { stack, arenas: Mutex::new(Vec::new()) }
+    }
+
+    pub fn stack(&self) -> &Arc<ServingStack> {
+        &self.stack
+    }
+}
+
+impl ReplicaBackend for StackReplica {
+    fn serve(&self, req: &Request) -> Result<Response> {
+        let mut arena = self
+            .arenas
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| StagingArena::new(self.stack.arena_capacity()));
+        let result = self.stack.serve(req, &mut arena);
+        self.arenas.lock().unwrap().push(arena);
+        result
+    }
+
+    fn cache_counts(&self) -> (u64, u64) {
+        let (hits, stale, misses, _, _) = self.stack.query.cache().stats.snapshot();
+        (hits + stale, misses)
+    }
+}
+
+/// Rolling-window latency view: two histogram epochs rotated on a wall
+/// clock. Estimates read the recent window only, so one saturation
+/// episode stops poisoning admission decisions once traffic (or idle
+/// time) moves two epochs past it — a cumulative histogram would keep a
+/// replica shedding forever after a single bad spell. Rotation may race
+/// with concurrent records and drop a few samples; the estimator
+/// tolerates that (exact accounting lives in `Replica::metrics`).
+struct RollingWindow {
+    cur: Histogram,
+    prev: Histogram,
+    epoch_start_us: AtomicU64,
+    epoch_us: u64,
+}
+
+impl RollingWindow {
+    fn new(epoch_us: u64) -> Self {
+        RollingWindow {
+            cur: Histogram::new(),
+            prev: Histogram::new(),
+            epoch_start_us: AtomicU64::new(0),
+            epoch_us,
+        }
+    }
+
+    fn maybe_rotate(&self, now_us: u64) {
+        let start = self.epoch_start_us.load(Ordering::Relaxed);
+        if now_us.saturating_sub(start) < self.epoch_us {
+            return;
+        }
+        if self
+            .epoch_start_us
+            .compare_exchange(start, now_us, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            self.prev.reset();
+            self.prev.merge(&self.cur);
+            self.cur.reset();
+        }
+    }
+
+    fn record(&self, now_us: u64, v: u64) {
+        self.maybe_rotate(now_us);
+        self.cur.record(v);
+    }
+
+    /// Conservative tail estimate over the two live epochs.
+    fn p99(&self, now_us: u64) -> u64 {
+        self.maybe_rotate(now_us);
+        self.cur.p99().max(self.prev.p99())
+    }
+
+    /// Count-weighted mean over the two live epochs.
+    fn mean(&self, now_us: u64) -> u64 {
+        self.maybe_rotate(now_us);
+        let (nc, np) = (self.cur.count(), self.prev.count());
+        if nc + np == 0 {
+            return 0;
+        }
+        ((self.cur.mean() * nc as f64 + self.prev.mean() * np as f64) / (nc + np) as f64) as u64
+    }
+}
+
+/// Point-in-time view of one replica (cluster reports).
+#[derive(Clone, Debug)]
+pub struct ReplicaSnapshot {
+    pub id: usize,
+    pub requests: u64,
+    pub in_flight: usize,
+    pub queue_depth: usize,
+    pub mean_ms: f64,
+    pub p99_ms: f64,
+    pub cache_hit_rate: f64,
+    pub errors: u64,
+    pub ejections: u64,
+    pub healthy: bool,
+}
+
+/// A backend wrapped with router-side accounting and health state.
+pub struct Replica {
+    pub id: usize,
+    backend: Arc<dyn ReplicaBackend>,
+    /// Cumulative router-side latency/throughput accounting.
+    pub metrics: Recorder,
+    /// Rolling latency window — what `p99_us`/`mean_us` (and therefore
+    /// the admission estimator) read.
+    window: RollingWindow,
+    in_flight: AtomicUsize,
+    /// Service-parallelism hint for the sojourn estimator: in-flight
+    /// work beyond this many requests is treated as queued.
+    slots: usize,
+    consecutive_errors: AtomicU32,
+    eject_after: u32,
+    cooldown_us: u64,
+    /// Ejection deadline in µs since `epoch`; a replica is healthy once
+    /// the clock passes it (timed re-admission, half-open probing).
+    ejected_until_us: AtomicU64,
+    epoch: Instant,
+    errors_total: AtomicU64,
+    ejections_total: AtomicU64,
+}
+
+impl Replica {
+    pub fn new(
+        id: usize,
+        backend: Arc<dyn ReplicaBackend>,
+        slots: usize,
+        eject_after: u32,
+        cooldown_us: u64,
+    ) -> Self {
+        Replica {
+            id,
+            backend,
+            metrics: Recorder::new(),
+            window: RollingWindow::new(ROLLING_EPOCH_US),
+            in_flight: AtomicUsize::new(0),
+            slots: slots.max(1),
+            consecutive_errors: AtomicU32::new(0),
+            eject_after: eject_after.max(1),
+            cooldown_us,
+            ejected_until_us: AtomicU64::new(0),
+            epoch: Instant::now(),
+            errors_total: AtomicU64::new(0),
+            ejections_total: AtomicU64::new(0),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn backend(&self) -> &Arc<dyn ReplicaBackend> {
+        &self.backend
+    }
+
+    /// Requests currently executing or queued on this replica.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// In-flight work beyond the replica's parallel service slots.
+    pub fn queue_depth(&self) -> usize {
+        self.in_flight().saturating_sub(self.slots)
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Rolling p99 service latency (µs) observed by the router.
+    pub fn p99_us(&self) -> u64 {
+        self.window.p99(self.now_us())
+    }
+
+    /// Rolling mean service latency (µs).
+    pub fn mean_us(&self) -> u64 {
+        self.window.mean(self.now_us())
+    }
+
+    pub fn errors_total(&self) -> u64 {
+        self.errors_total.load(Ordering::Relaxed)
+    }
+
+    pub fn ejections_total(&self) -> u64 {
+        self.ejections_total.load(Ordering::Relaxed)
+    }
+
+    /// Healthy = not inside an ejection cooldown window. When the window
+    /// passes the replica re-admits itself and the next request probes it
+    /// (success resets the error count; failure re-ejects immediately
+    /// because the count restarts at the threshold's doorstep of 0 and
+    /// climbs again).
+    pub fn healthy(&self) -> bool {
+        self.now_us() >= self.ejected_until_us.load(Ordering::Relaxed)
+    }
+
+    /// Force this replica out of rotation for its cooldown period.
+    pub fn eject(&self) {
+        self.ejected_until_us.store(self.now_us() + self.cooldown_us, Ordering::Relaxed);
+        self.ejections_total.fetch_add(1, Ordering::Relaxed);
+        self.consecutive_errors.store(0, Ordering::Relaxed);
+    }
+
+    /// Record an error against the health state machine (public so the
+    /// router's failover path and tests can drive it directly).
+    pub fn note_error(&self) {
+        self.errors_total.fetch_add(1, Ordering::Relaxed);
+        let n = self.consecutive_errors.fetch_add(1, Ordering::Relaxed) + 1;
+        if n >= self.eject_after {
+            self.eject();
+        }
+    }
+
+    /// Serve with load/latency/health accounting — the only path the
+    /// router uses to reach the backend.
+    pub fn serve_tracked(&self, req: &Request) -> Result<Response> {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let result = self.backend.serve(req);
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        match &result {
+            Ok(_) => {
+                self.consecutive_errors.store(0, Ordering::Relaxed);
+                self.record_latency(t0.elapsed().as_micros() as u64, req.m());
+            }
+            // backend admission pushback is load, not ill health: feeding
+            // it into the ejection state machine would let a traffic burst
+            // eject a busy-but-alive replica (and cascade fleet-wide as
+            // its load shifts). The router still counts/reroutes it.
+            Err(Error::Overloaded(_)) => {}
+            Err(_) => self.note_error(),
+        }
+        result
+    }
+
+    /// Feed an observed completion into both the cumulative accounting
+    /// and the rolling estimator window (`serve_tracked` calls this; an
+    /// external front observing its own latencies may too).
+    pub fn record_latency(&self, elapsed_us: u64, pairs: usize) {
+        self.metrics.record_request(elapsed_us, pairs);
+        self.window.record(self.now_us(), elapsed_us);
+    }
+
+    pub fn cache_counts(&self) -> (u64, u64) {
+        self.backend.cache_counts()
+    }
+
+    pub fn snapshot(&self) -> ReplicaSnapshot {
+        let s = self.metrics.snapshot();
+        ReplicaSnapshot {
+            id: self.id,
+            requests: s.requests,
+            in_flight: self.in_flight(),
+            queue_depth: self.queue_depth(),
+            mean_ms: s.overall_mean_ms,
+            p99_ms: s.overall_p99_ms,
+            cache_hit_rate: self.backend.cache_hit_rate(),
+            errors: self.errors_total(),
+            ejections: self.ejections_total(),
+            healthy: self.healthy(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    /// Minimal backend: fails while `fail` is set, else returns instantly.
+    struct FlakyBackend {
+        fail: std::sync::atomic::AtomicBool,
+    }
+
+    impl ReplicaBackend for FlakyBackend {
+        fn serve(&self, req: &Request) -> Result<Response> {
+            if self.fail.load(Ordering::Relaxed) {
+                return Err(Error::Internal("down".into()));
+            }
+            Ok(Response {
+                request_id: req.request_id,
+                scores: Vec::new(),
+                m: req.m(),
+                overall_us: 10,
+                compute_us: 5,
+                feature_us: 2,
+                queue_us: 0,
+            })
+        }
+    }
+
+    fn req() -> Request {
+        Request { request_id: 1, user_id: 9, history: vec![], candidates: vec![1, 2, 3] }
+    }
+
+    fn flaky(fail: bool) -> Arc<FlakyBackend> {
+        Arc::new(FlakyBackend { fail: std::sync::atomic::AtomicBool::new(fail) })
+    }
+
+    #[test]
+    fn consecutive_errors_eject_and_cooldown_readmits() {
+        let b = flaky(true);
+        // eject after 2 consecutive errors, 20 ms cooldown
+        let r = Replica::new(0, b.clone(), 1, 2, 20_000);
+        assert!(r.healthy());
+        assert!(r.serve_tracked(&req()).is_err());
+        assert!(r.healthy(), "one error must not eject yet");
+        assert!(r.serve_tracked(&req()).is_err());
+        assert!(!r.healthy(), "second consecutive error ejects");
+        assert_eq!(r.ejections_total(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        assert!(r.healthy(), "cooldown passed: timed re-admission");
+        // now the backend recovers; the probe succeeds and resets state
+        b.fail.store(false, Ordering::Relaxed);
+        assert!(r.serve_tracked(&req()).is_ok());
+        assert!(r.healthy());
+    }
+
+    #[test]
+    fn success_resets_consecutive_errors() {
+        let b = flaky(true);
+        let r = Replica::new(0, b.clone(), 1, 3, 50_000);
+        assert!(r.serve_tracked(&req()).is_err());
+        assert!(r.serve_tracked(&req()).is_err());
+        b.fail.store(false, Ordering::Relaxed);
+        assert!(r.serve_tracked(&req()).is_ok());
+        b.fail.store(true, Ordering::Relaxed);
+        assert!(r.serve_tracked(&req()).is_err());
+        assert!(r.healthy(), "error streak was broken by the success");
+        assert_eq!(r.errors_total(), 3);
+    }
+
+    #[test]
+    fn rolling_window_forgets_old_tail() {
+        // explicit now_us values — no wall-clock sleeping needed
+        let w = RollingWindow::new(10_000); // 10 ms epochs
+        w.record(0, 50_000);
+        assert!(w.p99(1_000) >= 45_000, "fresh sample visible");
+        // first rotation: the sample survives in the previous epoch
+        assert!(w.p99(20_000) >= 45_000);
+        // second rotation with no new samples: the estimate decays away
+        assert_eq!(w.p99(40_000), 0);
+        assert_eq!(w.mean(40_000), 0);
+    }
+
+    #[test]
+    fn record_latency_feeds_estimator() {
+        let r = Replica::new(0, flaky(false), 4, 3, 1_000);
+        assert_eq!(r.p99_us(), 0, "cold replica estimates 0");
+        for _ in 0..50 {
+            r.record_latency(3_000, 1);
+        }
+        assert!(r.p99_us() >= 2_800, "estimator sees the 3 ms tail");
+        assert!(r.mean_us() >= 2_800);
+    }
+
+    #[test]
+    fn latency_and_load_accounting() {
+        let r = Replica::new(3, flaky(false), 2, 3, 1_000);
+        assert_eq!(r.in_flight(), 0);
+        for _ in 0..10 {
+            r.serve_tracked(&req()).unwrap();
+        }
+        assert_eq!(r.in_flight(), 0);
+        assert_eq!(r.queue_depth(), 0);
+        assert_eq!(r.metrics.requests(), 10);
+        assert_eq!(r.metrics.pairs(), 30); // 3 candidates each
+        let snap = r.snapshot();
+        assert_eq!(snap.requests, 10);
+        assert!(snap.healthy);
+    }
+}

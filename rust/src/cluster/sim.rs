@@ -1,0 +1,238 @@
+//! Simulated replica backend — the artifact-free stand-in for a full
+//! `ServingStack` that lets the cluster tier be benched and tested on a
+//! bare checkout (no HLO artifacts, no PJRT).
+//!
+//! The model is deliberately simple but keeps the two properties the
+//! router's policies are sensitive to:
+//!
+//! * a **per-replica user-feature cache** (the PDA cache analogue keyed
+//!   on `user_id`): a miss costs a simulated remote feature fetch, so
+//!   cache-affinity routing shows up as both a hit-rate and a latency
+//!   win;
+//! * **limited service parallelism** (`slots`): requests beyond the slot
+//!   count queue on a condvar, so load creates real queueing latency and
+//!   the deadline admission controller has a real signal to act on.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cache::{Lookup, ShardedCache};
+use crate::error::{Error, Result};
+use crate::server::pipeline::Response;
+use crate::util::timeutil::precise_wait;
+use crate::workload::Request;
+
+use super::replica::ReplicaBackend;
+
+/// Cost model for one simulated replica.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Fixed per-request overhead (µs).
+    pub base_us: u64,
+    /// Scoring cost per user-item pair (ns) — ties service time to M,
+    /// so the non-uniform candidate mix shapes the latency distribution.
+    pub per_pair_ns: u64,
+    /// Remote feature fetch penalty on a user-cache miss (µs).
+    pub miss_penalty_us: u64,
+    /// User-feature cache capacity (entries).
+    pub cache_capacity: usize,
+    /// Parallel service slots; in-flight work beyond this queues.
+    pub slots: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            base_us: 80,
+            per_pair_ns: 400,
+            miss_penalty_us: 250,
+            cache_capacity: 8_192,
+            slots: 4,
+        }
+    }
+}
+
+/// Counting semaphore (mutex + condvar; no external deps).
+struct Slots {
+    free: Mutex<usize>,
+    available: Condvar,
+    waiting: AtomicUsize,
+}
+
+impl Slots {
+    fn new(n: usize) -> Self {
+        Slots {
+            free: Mutex::new(n.max(1)),
+            available: Condvar::new(),
+            waiting: AtomicUsize::new(0),
+        }
+    }
+
+    fn acquire(&self) {
+        self.waiting.fetch_add(1, Ordering::Relaxed);
+        let mut free = self.free.lock().unwrap();
+        while *free == 0 {
+            free = self.available.wait(free).unwrap();
+        }
+        *free -= 1;
+        self.waiting.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn release(&self) {
+        *self.free.lock().unwrap() += 1;
+        self.available.notify_one();
+    }
+}
+
+/// The simulated replica.
+pub struct SimReplica {
+    cfg: SimConfig,
+    /// Per-replica PDA-style feature cache keyed on `user_id` — what
+    /// cache-affinity routing is designed to keep warm.
+    cache: ShardedCache<u64>,
+    slots: Slots,
+    fail_next: AtomicU32,
+    served_total: AtomicU64,
+}
+
+impl SimReplica {
+    pub fn new(cfg: SimConfig) -> Self {
+        let cache = ShardedCache::new(cfg.cache_capacity, 8, Duration::from_secs(3_600));
+        let slots = Slots::new(cfg.slots);
+        SimReplica { cfg, cache, slots, fail_next: AtomicU32::new(0), served_total: AtomicU64::new(0) }
+    }
+
+    /// Make the next `n` serve calls fail (health/ejection tests).
+    pub fn fail_next(&self, n: u32) {
+        self.fail_next.store(n, Ordering::Relaxed);
+    }
+
+    pub fn served_total(&self) -> u64 {
+        self.served_total.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently blocked waiting for a service slot.
+    pub fn queue_depth(&self) -> usize {
+        self.slots.waiting.load(Ordering::Relaxed)
+    }
+}
+
+impl ReplicaBackend for SimReplica {
+    fn serve(&self, req: &Request) -> Result<Response> {
+        if self.fail_next.load(Ordering::Relaxed) > 0
+            && self
+                .fail_next
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+                .map(|prev| prev > 0)
+                .unwrap_or(false)
+        {
+            return Err(Error::Internal("sim: injected replica failure".into()));
+        }
+
+        let t0 = Instant::now();
+        self.slots.acquire();
+        let queue_us = t0.elapsed().as_micros() as u64;
+
+        let miss = matches!(self.cache.get(req.user_id), Lookup::Miss);
+        if miss {
+            self.cache.insert(req.user_id, req.user_id);
+        }
+        let compute_us = self.cfg.base_us + self.cfg.per_pair_ns * req.m() as u64 / 1_000;
+        let feature_us = if miss { self.cfg.miss_penalty_us } else { 0 };
+        precise_wait(Duration::from_micros(compute_us + feature_us));
+        self.slots.release();
+
+        self.served_total.fetch_add(1, Ordering::Relaxed);
+        Ok(Response {
+            request_id: req.request_id,
+            scores: Vec::new(),
+            m: req.m(),
+            overall_us: t0.elapsed().as_micros() as u64,
+            compute_us,
+            feature_us,
+            queue_us,
+        })
+    }
+
+    fn cache_counts(&self) -> (u64, u64) {
+        let (hits, stale, misses, _, _) = self.cache.stats.snapshot();
+        (hits + stale, misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64, user: u64, m: usize) -> Request {
+        Request {
+            request_id: id,
+            user_id: user,
+            history: vec![],
+            candidates: (0..m as u64).collect(),
+        }
+    }
+
+    fn fast_cfg() -> SimConfig {
+        SimConfig { base_us: 0, per_pair_ns: 0, miss_penalty_us: 0, ..SimConfig::default() }
+    }
+
+    #[test]
+    fn repeat_user_hits_cache() {
+        let r = SimReplica::new(fast_cfg());
+        r.serve(&req(0, 42, 4)).unwrap();
+        r.serve(&req(1, 42, 4)).unwrap();
+        r.serve(&req(2, 43, 4)).unwrap();
+        let (hits, misses) = r.cache_counts();
+        assert_eq!(hits, 1, "second visit of user 42");
+        assert_eq!(misses, 2, "first visits of users 42 and 43");
+        assert_eq!(r.served_total(), 3);
+    }
+
+    #[test]
+    fn service_time_scales_with_m_and_misses() {
+        let cfg = SimConfig {
+            base_us: 10,
+            per_pair_ns: 1_000, // 1 µs per pair
+            miss_penalty_us: 100,
+            ..SimConfig::default()
+        };
+        let r = SimReplica::new(cfg);
+        let cold = r.serve(&req(0, 7, 32)).unwrap();
+        assert_eq!(cold.compute_us, 10 + 32);
+        assert_eq!(cold.feature_us, 100);
+        let warm = r.serve(&req(1, 7, 32)).unwrap();
+        assert_eq!(warm.feature_us, 0, "warm user pays no fetch penalty");
+    }
+
+    #[test]
+    fn injected_failures_then_recovery() {
+        let r = SimReplica::new(fast_cfg());
+        r.fail_next(2);
+        assert!(r.serve(&req(0, 1, 1)).is_err());
+        assert!(r.serve(&req(1, 1, 1)).is_err());
+        assert!(r.serve(&req(2, 1, 1)).is_ok());
+    }
+
+    #[test]
+    fn slots_serialize_service() {
+        // 1 slot, 2 ms service: two concurrent requests cannot overlap,
+        // so the second observes ≥ ~2 ms of queueing.
+        let cfg = SimConfig { base_us: 2_000, per_pair_ns: 0, miss_penalty_us: 0, slots: 1, ..SimConfig::default() };
+        let r = Arc::new(SimReplica::new(cfg));
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for i in 0..2 {
+                let r = Arc::clone(&r);
+                s.spawn(move || r.serve(&req(i, i, 1)).unwrap());
+            }
+        });
+        assert!(
+            t0.elapsed() >= Duration::from_micros(3_500),
+            "two 2 ms requests through 1 slot took {:?}",
+            t0.elapsed()
+        );
+    }
+}

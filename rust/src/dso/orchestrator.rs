@@ -20,13 +20,14 @@ use crate::runtime::{Engine, HistBuffer};
 
 use super::planner::{padded_rows, plan_split, SplitPlan};
 
-/// One chunk job for an executor.
+/// One chunk job for an executor. The reply carries (chunk index,
+/// scores, executor-queue delay µs).
 struct Job {
     /// Device-resident history shared by every chunk of the request —
     /// uploaded once in `submit` (§Perf: per-chunk re-upload removed).
     hist: Arc<HistBuffer>,
     cands: Vec<f32>,
-    reply: Sender<Result<(usize, Vec<f32>)>>,
+    reply: Sender<Result<(usize, Vec<f32>, u64)>>,
     chunk_index: usize,
     enqueued: Instant,
 }
@@ -189,8 +190,8 @@ impl Orchestrator {
 
         // dispatch chunks (descending): chunk i covers rows [off, off+take)
         let (reply_tx, reply_rx): (
-            Sender<Result<(usize, Vec<f32>)>>,
-            Receiver<Result<(usize, Vec<f32>)>>,
+            Sender<Result<(usize, Vec<f32>, u64)>>,
+            Receiver<Result<(usize, Vec<f32>, u64)>>,
         ) = channel();
         let mut offsets = Vec::with_capacity(plan.chunks.len());
         let mut off = 0usize;
@@ -227,13 +228,17 @@ impl Orchestrator {
         }
         drop(reply_tx);
 
-        // collect
+        // collect; queue_us is the delay before the *first* chunk was
+        // picked up (min over chunks) — the request could not have
+        // started computing any earlier
         let mut parts: Vec<Option<Vec<f32>>> = vec![None; plan.chunks.len()];
+        let mut queue_us = u64::MAX;
         for _ in 0..plan.chunks.len() {
-            let (ci, scores) = reply_rx
+            let (ci, scores, chunk_queue_us) = reply_rx
                 .recv()
                 .map_err(|_| Error::Internal("executor dropped reply".into()))??;
             parts[ci] = Some(scores);
+            queue_us = queue_us.min(chunk_queue_us);
         }
         let compute_us = submit_t.elapsed().as_micros() as u64;
 
@@ -250,7 +255,7 @@ impl Orchestrator {
             chunks: plan.chunks,
             padding: plan.padding,
             compute_us,
-            queue_us: 0,
+            queue_us,
         })
     }
 
@@ -277,10 +282,10 @@ fn executor_loop(
                 Err(_) => return, // orchestrator dropped
             }
         };
-        let _queue_us = job.enqueued.elapsed().as_micros() as u64;
+        let queue_us = job.enqueued.elapsed().as_micros() as u64;
         let result = engine
             .run_with_hist(&job.hist, &job.cands)
-            .map(|scores| (job.chunk_index, scores));
+            .map(|scores| (job.chunk_index, scores, queue_us));
         in_flight.fetch_sub(1, Ordering::Relaxed);
         let _ = job.reply.send(result);
     }

@@ -18,6 +18,24 @@
 //! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
 //! reproduced tables/figures.
 //!
+//! ## Cluster tier
+//!
+//! A single `ServingStack` stops well short of the paper's 1e10..1e12
+//! requests/day envelope. The [`cluster`] module scales the system
+//! horizontally: a [`cluster::ClusterRouter`] fronts N replicas with
+//! pluggable placement (round-robin, least-loaded power-of-two-choices,
+//! and cache-affinity consistent hashing on `user_id` that keeps each
+//! replica's PDA feature cache warm for returning users),
+//! deadline-aware admission control (service-time estimates from each
+//! replica's rolling latency histogram; requests that cannot make their
+//! SLA are re-routed or shed, counted in `shed_total` /
+//! `sla_miss_total`), and consecutive-error replica ejection with timed
+//! re-admission. The TCP front can bind either a single stack
+//! (`server::tcp::TcpServer::start`) or a router
+//! (`TcpServer::start_cluster`); `benches/bench_cluster.rs` compares
+//! the policies under the paper's non-uniform candidate mix using the
+//! artifact-free `cluster::SimReplica` backend.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -39,6 +57,7 @@ pub mod batching;
 pub mod benchkit;
 pub mod cache;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod dso;
 pub mod embedding;

@@ -9,12 +9,17 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use flame::batching::RequestQueue;
+use flame::benchkit::Table;
 use flame::cli::{help, Args};
+use flame::cluster::{
+    ClusterConfig, ClusterRouter, ReplicaBackend, RoutePolicy, SimConfig, SimReplica,
+    StackReplica,
+};
 use flame::config::{flops, CacheMode, DsoMode, Scenario, StackConfig, WorkloadConfig};
 use flame::manifest::Manifest;
 use flame::pda::numa::Topology;
 use flame::runtime::Runtime;
-use flame::server::pipeline::StackBuilder;
+use flame::server::pipeline::{ServingStack, StackBuilder};
 use flame::workload::{driver, trace, Generator};
 
 fn main() -> Result<()> {
@@ -29,6 +34,7 @@ fn main() -> Result<()> {
         Some("record") => cmd_record(&args),
         Some("replay") => cmd_serve(&args), // replay is serve --trace
         Some("bind") => cmd_bind(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some(other) => bail!("unknown command '{other}' — try `flame help`"),
     }
 }
@@ -208,12 +214,153 @@ fn cmd_record(args: &Args) -> Result<()> {
 }
 
 fn cmd_bind(args: &Args) -> Result<()> {
-    let (stack, _) = build_stack(args)?;
+    let n = args.get_parse::<usize>("replicas")?.unwrap_or(1);
     let addr = args.get_or("bind", "127.0.0.1:7178");
-    let server = flame::server::tcp::TcpServer::start(Arc::clone(&stack), addr)?;
+    let server = if n > 1 {
+        let stacks = build_stacks(args, n)?;
+        let backends: Vec<Arc<dyn ReplicaBackend>> = stacks
+            .into_iter()
+            .map(|s| Arc::new(StackReplica::new(s)) as Arc<dyn ReplicaBackend>)
+            .collect();
+        let router = Arc::new(ClusterRouter::new(backends, cluster_config(args)?)?);
+        println!("[flame] cluster front: {n} replicas, policy {}", router.policy().name());
+        flame::server::tcp::TcpServer::start_cluster(router, addr)?
+    } else {
+        let (stack, _) = build_stack(args)?;
+        flame::server::tcp::TcpServer::start(Arc::clone(&stack), addr)?
+    };
     println!("[flame] listening on {}", server.addr);
     println!("[flame] press ctrl-c to stop");
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }
+}
+
+/// Cluster knobs from flags (defaults: affinity policy, 50 ms deadline).
+fn cluster_config(args: &Args) -> Result<ClusterConfig> {
+    let mut c = ClusterConfig::default();
+    if let Some(p) = args.get("policy") {
+        c.policy = RoutePolicy::parse(p)?;
+    }
+    if let Some(d) = args.get_parse::<u64>("deadline-ms")? {
+        c.deadline_ms = d;
+    }
+    if let Some(s) = args.get_parse::<usize>("slots")? {
+        c.slots_per_replica = s;
+    }
+    Ok(c)
+}
+
+/// Build `n` independent real serving stacks (shared runtime + manifest,
+/// independent PDA caches and executor pools — one "replica" each).
+fn build_stacks(args: &Args, n: usize) -> Result<Vec<Arc<ServingStack>>> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let scenario = args.get_or("scenario", "bench");
+    let variant = args.get_or("variant", "fused");
+    let cfg = stack_config(args)?;
+    let manifest = Manifest::load(dir).context("loading manifest — run `make artifacts`")?;
+    let runtime = Runtime::new().context("creating PJRT client")?;
+    let mut stacks = Vec::with_capacity(n);
+    for i in 0..n {
+        eprintln!("[flame] building replica {i}: {scenario}/{variant} engines ...");
+        let stack = StackBuilder::new(scenario, variant, cfg.clone())
+            .build(&runtime, &manifest)
+            .with_context(|| format!("building replica {i}"))?;
+        stacks.push(Arc::new(stack));
+    }
+    Ok(stacks)
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let n = args.get_parse::<usize>("replicas")?.unwrap_or(3).max(1);
+    let ccfg = cluster_config(args)?;
+    let n_requests = args.get_parse::<usize>("requests")?.unwrap_or(2_000);
+    let duration = Duration::from_secs_f64(args.get_parse::<f64>("duration-s")?.unwrap_or(10.0));
+    let concurrency = args.get_parse::<usize>("concurrency")?.unwrap_or(4 * n);
+
+    // paper-style non-uniform candidate mix (most requests small-M, a
+    // heavy tail of large-M); real stacks use their profile set instead
+    let mut mix: Vec<(usize, f64)> = vec![(128, 0.55), (256, 0.25), (512, 0.15), (1024, 0.05)];
+    let mut seq_len = 32usize;
+    let backends: Vec<Arc<dyn ReplicaBackend>> = if args.has("real") {
+        let stacks = build_stacks(args, n)?;
+        seq_len = stacks[0].model_cfg.seq_len;
+        mix = WorkloadConfig::uniform_mix(stacks[0].orchestrator.profiles());
+        stacks
+            .into_iter()
+            .map(|s| Arc::new(StackReplica::new(s)) as Arc<dyn ReplicaBackend>)
+            .collect()
+    } else {
+        let sim = SimConfig { slots: ccfg.slots_per_replica, ..SimConfig::default() };
+        (0..n)
+            .map(|_| Arc::new(SimReplica::new(sim.clone())) as Arc<dyn ReplicaBackend>)
+            .collect()
+    };
+
+    let mut wl = stack_config(args)?.workload;
+    wl.candidate_mix = mix;
+    wl.n_users = args.get_parse::<u64>("users")?.unwrap_or(2_000);
+    let mut g = Generator::new(&wl, seq_len);
+    let requests = g.batch(n_requests);
+
+    let router = Arc::new(ClusterRouter::new(backends, ccfg)?);
+    eprintln!(
+        "[flame] cluster: {n} replicas, policy {}, deadline {} ms — driving {} requests ...",
+        router.policy().name(),
+        router.deadline_us() / 1_000,
+        requests.len()
+    );
+
+    let t0 = std::time::Instant::now();
+    let report = match args.get_parse::<f64>("rate")? {
+        Some(rate) => {
+            driver::open_loop_cluster(&router, requests, rate, duration, 4_096, wl.seed)
+        }
+        None => driver::closed_loop(requests, concurrency, duration, |r| {
+            router.submit(r).is_ok()
+        }),
+    };
+    print_cluster_report(&router, &report, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn print_cluster_report(
+    router: &ClusterRouter,
+    report: &driver::DriveReport,
+    elapsed_s: f64,
+) {
+    let snap = router.snapshot();
+    let agg = router.metrics.snapshot_over(elapsed_s);
+    println!("\n=== cluster report ({}) ===", snap.policy);
+    println!(
+        "submitted {} / completed {} / rejected {}",
+        report.submitted, report.completed, report.rejected
+    );
+    println!("throughput     : {:.1} k user-item pairs/s", agg.throughput_pairs_per_s / 1e3);
+    println!(
+        "overall latency: mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms",
+        agg.overall_mean_ms, agg.overall_p50_ms, agg.overall_p99_ms
+    );
+    println!(
+        "admission      : shed {}  sla misses {}  rerouted {}",
+        snap.shed, snap.sla_misses, snap.rerouted
+    );
+    println!("aggregate cache hit rate: {:.1} %", snap.aggregate_cache_hit_rate * 100.0);
+    let mut t = Table::new(
+        "per-replica",
+        &["replica", "requests", "mean ms", "p99 ms", "hit rate %", "errors", "ejections", "healthy"],
+    );
+    for r in &snap.replicas {
+        t.row(&[
+            r.id.to_string(),
+            r.requests.to_string(),
+            format!("{:.2}", r.mean_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{:.1}", r.cache_hit_rate * 100.0),
+            r.errors.to_string(),
+            r.ejections.to_string(),
+            r.healthy.to_string(),
+        ]);
+    }
+    t.print();
 }

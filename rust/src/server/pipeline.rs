@@ -38,6 +38,8 @@ pub struct Response {
     pub overall_us: u64,
     pub compute_us: u64,
     pub feature_us: u64,
+    /// Executor-queue delay before the first DSO chunk started, µs.
+    pub queue_us: u64,
 }
 
 /// Builder wiring the whole stack from a manifest + config.
@@ -108,6 +110,13 @@ pub struct ServingStack {
 }
 
 impl ServingStack {
+    /// Staging-arena capacity (f32 elements) a serve path needs: the
+    /// padded history plus the largest candidate profile. Every caller
+    /// that allocates an arena for `serve` must size it with this.
+    pub fn arena_capacity(&self) -> usize {
+        (self.model_cfg.seq_len + self.orchestrator.max_profile()) * self.model_cfg.d_model
+    }
+
     /// Serve one request synchronously (the per-worker hot path).
     /// `arena` is the calling worker's staging arena (reused).
     pub fn serve(&self, req: &Request, arena: &mut StagingArena) -> Result<Response> {
@@ -117,7 +126,6 @@ impl ServingStack {
         let tf = Instant::now();
         let mut history = req.history.clone();
         history.resize(self.model_cfg.seq_len, 0); // pad/truncate to L
-        history.truncate(self.model_cfg.seq_len);
         let assembled = self.assembler.assemble(&history, &req.candidates, arena);
         let (hist, cands) = assembled.views(arena);
         let feature_us = tf.elapsed().as_micros() as u64;
@@ -131,6 +139,9 @@ impl ServingStack {
         self.metrics.record_request(overall_us, req.m());
         self.metrics.record_compute(outcome.compute_us);
         self.metrics.record_feature(feature_us);
+        // executor-queue delay (Recorder.queueing's definition: delay
+        // before an executor picked the job up)
+        self.metrics.record_queueing(outcome.queue_us);
 
         Ok(Response {
             request_id: req.request_id,
@@ -139,6 +150,7 @@ impl ServingStack {
             overall_us,
             compute_us: outcome.compute_us,
             feature_us,
+            queue_us: outcome.queue_us,
         })
     }
 
@@ -162,9 +174,7 @@ impl ServingStack {
                         if stack.config.pda.numa_binding {
                             let _ = crate::pda::numa::pin_current_thread(cpu);
                         }
-                        let max_m = stack.orchestrator.max_profile();
-                        let cap = (stack.model_cfg.seq_len + max_m) * stack.model_cfg.d_model;
-                        let mut arena = StagingArena::new(cap);
+                        let mut arena = StagingArena::new(stack.arena_capacity());
                         while let Some((req, qdelay)) = queue.pop() {
                             stack.metrics.record_queueing(qdelay.as_micros() as u64);
                             if let Err(e) = stack.serve(&req, &mut arena) {
@@ -213,9 +223,7 @@ impl ServingStack {
                     if stack.config.pda.numa_binding {
                         let _ = crate::pda::numa::pin_current_thread(cpu);
                     }
-                    let max_m = stack.orchestrator.max_profile();
-                    let cap = (stack.model_cfg.seq_len + max_m) * stack.model_cfg.d_model;
-                    let mut arena = StagingArena::new(cap);
+                    let mut arena = StagingArena::new(stack.arena_capacity());
                     loop {
                         if start.elapsed() >= duration {
                             return;

@@ -15,6 +15,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use crate::cluster::ClusterRouter;
 use crate::error::{Error, Result};
 use crate::pda::StagingArena;
 use crate::server::pipeline::{Response, ServingStack};
@@ -108,6 +109,14 @@ pub fn decode_response(buf: &[u8]) -> Result<WireResponse> {
     Ok(WireResponse { request_id, status, scores, m, n_tasks, overall_us })
 }
 
+/// What the TCP front serves: a single in-process stack or the cluster
+/// routing tier over N replicas.
+#[derive(Clone)]
+enum Frontend {
+    Stack(Arc<ServingStack>),
+    Cluster(Arc<ClusterRouter>),
+}
+
 /// A running TCP server (one thread per connection; connections are
 /// long-lived upstream proxies in the paper's deployment, not per-query
 /// sockets).
@@ -120,6 +129,17 @@ pub struct TcpServer {
 impl TcpServer {
     /// Bind and serve `stack` on `addr` (e.g. "127.0.0.1:0").
     pub fn start(stack: Arc<ServingStack>, addr: &str) -> Result<TcpServer> {
+        Self::start_frontend(Frontend::Stack(stack), addr)
+    }
+
+    /// Bind and serve a [`ClusterRouter`] on `addr` — the same wire
+    /// protocol, but requests are placed across the router's replicas
+    /// (admission shedding surfaces as status 1 frames).
+    pub fn start_cluster(router: Arc<ClusterRouter>, addr: &str) -> Result<TcpServer> {
+        Self::start_frontend(Frontend::Cluster(router), addr)
+    }
+
+    fn start_frontend(frontend: Frontend, addr: &str) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::Io(format!("bind {addr}"), e))?;
         let local = listener.local_addr().map_err(|e| Error::Io("local_addr".into(), e))?;
@@ -135,10 +155,27 @@ impl TcpServer {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let stack = Arc::clone(&stack);
+                            let frontend = frontend.clone();
                             let stop3 = Arc::clone(&stop2);
-                            conns.push(std::thread::spawn(move || {
-                                let _ = handle_conn(stream, stack, stop3);
+                            conns.push(std::thread::spawn(move || match frontend {
+                                Frontend::Stack(stack) => {
+                                    let n_tasks = stack.model_cfg.n_tasks;
+                                    let mut arena = StagingArena::new(stack.arena_capacity());
+                                    let _ = handle_conn(
+                                        stream,
+                                        |req| stack.serve(req, &mut arena),
+                                        Some(n_tasks),
+                                        stop3,
+                                    );
+                                }
+                                Frontend::Cluster(router) => {
+                                    let _ = handle_conn(
+                                        stream,
+                                        |req| router.submit(req),
+                                        None,
+                                        stop3,
+                                    );
+                                }
                             }));
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -172,13 +209,21 @@ impl Drop for TcpServer {
     }
 }
 
-fn handle_conn(mut stream: TcpStream, stack: Arc<ServingStack>, stop: Arc<AtomicBool>) -> Result<()> {
+/// Per-connection frame loop over any serve function. `n_tasks` fixes
+/// the response header for single-stack fronts; `None` derives it per
+/// response (cluster backends may differ in score width).
+fn handle_conn<F>(
+    mut stream: TcpStream,
+    mut serve: F,
+    n_tasks: Option<usize>,
+    stop: Arc<AtomicBool>,
+) -> Result<()>
+where
+    F: FnMut(&Request) -> Result<Response>,
+{
     stream
         .set_read_timeout(Some(std::time::Duration::from_millis(200)))
         .map_err(|e| Error::Io("set_read_timeout".into(), e))?;
-    let max_m = stack.orchestrator.max_profile();
-    let cap = (stack.model_cfg.seq_len + max_m) * stack.model_cfg.d_model;
-    let mut arena = StagingArena::new(cap);
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
@@ -204,8 +249,13 @@ fn handle_conn(mut stream: TcpStream, stack: Arc<ServingStack>, stop: Arc<Atomic
                 continue;
             }
         };
-        let payload = match stack.serve(&req, &mut arena) {
-            Ok(resp) => encode_response(&resp, stack.model_cfg.n_tasks),
+        let payload = match serve(&req) {
+            Ok(resp) => {
+                let nt = n_tasks.unwrap_or_else(|| {
+                    if resp.m == 0 { 0 } else { resp.scores.len() / resp.m }
+                });
+                encode_response(&resp, nt)
+            }
             Err(Error::Overloaded(_)) => encode_error(req.request_id, 1),
             Err(_) => encode_error(req.request_id, 2),
         };
@@ -257,6 +307,7 @@ mod tests {
             overall_us: 1234,
             compute_us: 900,
             feature_us: 100,
+            queue_us: 30,
         };
         let w = decode_response(&encode_response(&resp, 3)).unwrap();
         assert_eq!(w.request_id, 7);

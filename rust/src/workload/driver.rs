@@ -7,6 +7,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::cluster::ClusterRouter;
 use crate::util::rng::Rng;
 
 use super::Request;
@@ -127,6 +128,22 @@ where
     }
 }
 
+/// Open-loop driver over the cluster tier: Poisson arrivals at `lambda`
+/// req/s submitted through the router, which applies its own
+/// deadline-aware admission (shed requests count as rejections in the
+/// report; see `router.admission` for the shed/SLA-miss split). Each
+/// submitted request's budget is the router's default deadline.
+pub fn open_loop_cluster(
+    router: &ClusterRouter,
+    requests: Vec<Request>,
+    lambda: f64,
+    duration: Duration,
+    max_in_flight: usize,
+    seed: u64,
+) -> DriveReport {
+    open_loop(requests, lambda, duration, max_in_flight, seed, |r| router.submit(r).is_ok())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +190,32 @@ mod tests {
         let r = open_loop(reqs(10_000), lambda, Duration::from_millis(300), 64, 1, |_| true);
         let rate = r.submitted as f64 / r.elapsed.as_secs_f64();
         assert!(rate > lambda * 0.5 && rate < lambda * 1.5, "rate {rate}");
+    }
+
+    #[test]
+    fn open_loop_cluster_drives_router() {
+        use crate::cluster::{ClusterConfig, ClusterRouter, ReplicaBackend, SimConfig, SimReplica};
+        let backends: Vec<Arc<dyn ReplicaBackend>> = (0..2)
+            .map(|_| {
+                Arc::new(SimReplica::new(SimConfig {
+                    base_us: 0,
+                    per_pair_ns: 0,
+                    miss_penalty_us: 0,
+                    ..SimConfig::default()
+                })) as Arc<dyn ReplicaBackend>
+            })
+            .collect();
+        let router = ClusterRouter::new(backends, ClusterConfig::default()).unwrap();
+        let r = open_loop_cluster(
+            &router,
+            reqs(500),
+            5_000.0,
+            Duration::from_millis(200),
+            256,
+            3,
+        );
+        assert!(r.completed > 0, "{r:?}");
+        assert_eq!(r.completed, router.metrics.requests());
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Cluster-tier integration over simulated replicas: policy behavior,
+//! cache-affinity hit-rate lift, deadline admission under saturation,
+//! and replica failure ejection / failover / re-admission. No artifacts
+//! required.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flame::cluster::{
+    ClusterConfig, ClusterRouter, ReplicaBackend, RoutePolicy, SimConfig, SimReplica,
+};
+use flame::error::Error;
+use flame::workload::{driver, Request};
+
+fn fast_sim() -> SimConfig {
+    SimConfig { base_us: 0, per_pair_ns: 0, miss_penalty_us: 0, ..SimConfig::default() }
+}
+
+fn build(
+    n: usize,
+    policy: RoutePolicy,
+    sim: SimConfig,
+    cfg_mod: impl FnOnce(&mut ClusterConfig),
+) -> (Vec<Arc<SimReplica>>, Arc<ClusterRouter>) {
+    let sims: Vec<Arc<SimReplica>> = (0..n).map(|_| Arc::new(SimReplica::new(sim.clone()))).collect();
+    let backends: Vec<Arc<dyn ReplicaBackend>> =
+        sims.iter().map(|s| Arc::clone(s) as Arc<dyn ReplicaBackend>).collect();
+    let mut cfg = ClusterConfig { policy, slots_per_replica: sim.slots, ..ClusterConfig::default() };
+    cfg_mod(&mut cfg);
+    let router = Arc::new(ClusterRouter::new(backends, cfg).unwrap());
+    (sims, router)
+}
+
+fn req(id: u64, user: u64, m: usize) -> Request {
+    Request { request_id: id, user_id: user, history: vec![], candidates: (0..m as u64).collect() }
+}
+
+/// 61 users x 8 rounds through both policies: affinity pins each user to
+/// one replica (1 cold miss per user), round-robin rotates each user
+/// over all replicas (61 ≡ 1 mod 3, so a user's replica shifts every
+/// round and every cache must warm separately) — affinity's aggregate
+/// hit rate must come out strictly higher.
+#[test]
+fn affinity_beats_round_robin_on_cache_hit_rate() {
+    const USERS: u64 = 61;
+    const ROUNDS: u64 = 8;
+    let mut rates = Vec::new();
+    for policy in [RoutePolicy::CacheAffinity, RoutePolicy::RoundRobin] {
+        let (_, router) = build(3, policy, fast_sim(), |_| {});
+        for round in 0..ROUNDS {
+            for user in 0..USERS {
+                router.submit(&req(round * USERS + user, user, 4)).unwrap();
+            }
+        }
+        rates.push(router.aggregate_cache_hit_rate());
+    }
+    let (affinity, rr) = (rates[0], rates[1]);
+    assert!(
+        affinity > rr,
+        "affinity hit rate {affinity:.3} must strictly beat round-robin {rr:.3}"
+    );
+    // affinity: exactly one cold miss per user
+    let expect = ((USERS * ROUNDS - USERS) as f64) / ((USERS * ROUNDS) as f64);
+    assert!((affinity - expect).abs() < 1e-9, "affinity rate {affinity} != {expect}");
+}
+
+#[test]
+fn affinity_placement_is_deterministic_across_routers() {
+    let (a_sims, a) = build(4, RoutePolicy::CacheAffinity, fast_sim(), |_| {});
+    let (b_sims, b) = build(4, RoutePolicy::CacheAffinity, fast_sim(), |_| {});
+    for user in 0..200u64 {
+        a.submit(&req(user, user, 2)).unwrap();
+        b.submit(&req(user, user, 2)).unwrap();
+    }
+    for i in 0..4 {
+        assert_eq!(
+            a.replicas()[i].metrics.requests(),
+            b.replicas()[i].metrics.requests(),
+            "replica {i} request counts diverge"
+        );
+        assert_eq!(a_sims[i].served_total(), b_sims[i].served_total());
+    }
+}
+
+/// Saturate 2 replicas x 1 slot of 2 ms service with 16 concurrent
+/// submitters under a 5 ms budget: the estimator must start shedding
+/// once queues build, and shed requests surface as `Overloaded`.
+#[test]
+fn admission_sheds_under_saturation() {
+    let sim = SimConfig { base_us: 2_000, per_pair_ns: 0, miss_penalty_us: 0, slots: 1, ..SimConfig::default() };
+    let (_, router) = build(2, RoutePolicy::LeastLoaded, sim, |c| c.deadline_ms = 5);
+    let requests: Vec<Request> = (0..400).map(|i| req(i, i, 2)).collect();
+    let mut overloaded = 0u64;
+    let report = driver::closed_loop(requests, 16, Duration::from_secs(30), |r| {
+        match router.submit(r) {
+            Ok(_) => true,
+            Err(Error::Overloaded(_)) => false,
+            Err(e) => panic!("unexpected error class: {e}"),
+        }
+    });
+    overloaded += report.rejected;
+    assert!(router.admission.shed() > 0, "saturation must shed");
+    assert_eq!(router.admission.shed(), overloaded, "sheds all surface as Overloaded");
+    assert!(report.completed > 0, "the cluster still serves what fits the SLA");
+}
+
+#[test]
+fn failing_replica_is_ejected_and_traffic_fails_over() {
+    let (sims, router) = build(3, RoutePolicy::CacheAffinity, fast_sim(), |c| {
+        c.eject_after = 3;
+        c.eject_cooldown_ms = 100;
+    });
+    sims[0].fail_next(u32::MAX);
+    // every request must still succeed: failover re-routes around the
+    // dead replica, and after 3 errors it is ejected entirely
+    for i in 0..300u64 {
+        router.submit(&req(i, i, 2)).unwrap();
+    }
+    let snap = router.snapshot();
+    assert!(snap.replicas[0].ejections >= 1, "replica 0 never ejected");
+    assert!(snap.rerouted >= 3, "failed attempts must have failed over");
+    assert_eq!(
+        snap.replicas[1].requests + snap.replicas[2].requests,
+        300,
+        "all traffic landed on the healthy replicas"
+    );
+}
+
+#[test]
+fn ejected_replica_readmitted_after_cooldown() {
+    let (sims, router) = build(2, RoutePolicy::RoundRobin, fast_sim(), |c| {
+        c.eject_after = 2;
+        c.eject_cooldown_ms = 50;
+    });
+    // 3 failures: two eject replica 0 during the first phase, one is
+    // left for the post-cooldown probe (which must NOT re-eject, since
+    // eject_after = 2 needs consecutive errors)
+    sims[0].fail_next(3);
+    for i in 0..20u64 {
+        router.submit(&req(i, i, 2)).unwrap();
+    }
+    assert!(!router.replicas()[0].healthy(), "replica 0 should be ejected");
+    std::thread::sleep(Duration::from_millis(60));
+    assert!(router.replicas()[0].healthy(), "cooldown passed");
+    let before = router.replicas()[0].metrics.requests();
+    for i in 0..20u64 {
+        router.submit(&req(100 + i, i, 2)).unwrap();
+    }
+    assert!(
+        router.replicas()[0].metrics.requests() > before,
+        "re-admitted replica serves again"
+    );
+}
+
+#[test]
+fn whole_fleet_down_is_overloaded_not_panic() {
+    let (sims, router) = build(2, RoutePolicy::LeastLoaded, fast_sim(), |c| {
+        c.eject_after = 1;
+        c.eject_cooldown_ms = 10_000;
+    });
+    for s in &sims {
+        s.fail_next(u32::MAX);
+    }
+    // first submissions burn through failover until both are ejected
+    for i in 0..10u64 {
+        let _ = router.submit(&req(i, i, 2));
+    }
+    match router.submit(&req(99, 99, 2)) {
+        Err(Error::Overloaded(msg)) => assert!(msg.contains("no healthy"), "{msg}"),
+        other => panic!("expected Overloaded(no healthy replicas), got {other:?}"),
+    }
+}

@@ -16,7 +16,13 @@ fn setup(mode: DsoMode) -> Option<(Orchestrator, flame::config::ModelConfig)> {
         eprintln!("skipping: artifacts/tiny not built");
         return None;
     }
-    let rt = Runtime::new().ok()?;
+    let rt = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: PJRT runtime unavailable ({e})");
+            return None;
+        }
+    };
     let engines = rt.load_profile_set(&m, "tiny", "fused").ok()?;
     let cfg = m.scenario("tiny").unwrap().config.clone();
     let orch = Orchestrator::new(

@@ -22,10 +22,20 @@ fn manifest() -> Option<Manifest> {
     }
 }
 
+fn runtime() -> Option<Runtime> {
+    match Runtime::new() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: PJRT runtime unavailable ({e})");
+            None
+        }
+    }
+}
+
 #[test]
 fn tiny_engines_match_python_testvectors() {
     let Some(m) = manifest() else { return };
-    let rt = Runtime::new().expect("pjrt client");
+    let Some(rt) = runtime() else { return };
     let weights = rt.upload_weights(&m, "tiny").expect("weights");
 
     let tvs: Vec<_> = m.testvectors.iter().filter(|t| t.scenario == "tiny").collect();
@@ -65,7 +75,7 @@ fn variants_agree_with_each_other() {
     // naive / api / fused are the same model; rust-side outputs on the
     // same inputs must agree across engines.
     let Some(m) = manifest() else { return };
-    let rt = Runtime::new().expect("pjrt client");
+    let Some(rt) = runtime() else { return };
     let weights = rt.upload_weights(&m, "tiny").expect("weights");
     let cfg = &m.scenario("tiny").unwrap().config;
     let mm = cfg.native_m;
@@ -98,7 +108,7 @@ fn variants_agree_with_each_other() {
 #[test]
 fn scores_are_probabilities() {
     let Some(m) = manifest() else { return };
-    let rt = Runtime::new().expect("pjrt client");
+    let Some(rt) = runtime() else { return };
     let cfg = m.scenario("tiny").unwrap().config.clone();
     let key = EngineKey::new("tiny", "fused", cfg.native_m);
     if m.find("tiny", "fused", cfg.native_m).is_err() {
@@ -115,7 +125,7 @@ fn scores_are_probabilities() {
 #[test]
 fn engine_rejects_wrong_input_lengths() {
     let Some(m) = manifest() else { return };
-    let rt = Runtime::new().expect("pjrt client");
+    let Some(rt) = runtime() else { return };
     let cfg = m.scenario("tiny").unwrap().config.clone();
     let key = EngineKey::new("tiny", "api", cfg.native_m);
     if m.find("tiny", "api", cfg.native_m).is_err() {

@@ -19,7 +19,13 @@ fn build(cfgmod: impl FnOnce(&mut StackConfig)) -> Option<Arc<flame::server::Ser
         eprintln!("skipping: artifacts/tiny not built");
         return None;
     }
-    let rt = Runtime::new().ok()?;
+    let rt = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: PJRT runtime unavailable ({e})");
+            return None;
+        }
+    };
     let mut cfg = StackConfig::default();
     cfg.pda.cache_mode = CacheMode::Sync;
     cfg.server.pipeline_workers = 2;

@@ -18,7 +18,13 @@ fn stack() -> Option<Arc<flame::server::ServingStack>> {
         eprintln!("skipping: artifacts/tiny not built");
         return None;
     }
-    let rt = Runtime::new().ok()?;
+    let rt = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: PJRT runtime unavailable ({e})");
+            return None;
+        }
+    };
     let mut cfg = StackConfig::default();
     cfg.pda.cache_mode = CacheMode::Sync;
     Some(Arc::new(StackBuilder::new("tiny", "fused", cfg).build(&rt, &manifest).ok()?))

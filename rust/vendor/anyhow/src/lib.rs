@@ -1,0 +1,139 @@
+//! Offline vendor stub of `anyhow` — just the surface this repo uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait for `Result`
+//! and `Option`, and the `anyhow!` / `bail!` macros. Context frames are
+//! chained into the Display output like the real crate's `{:#}` form so
+//! binary error messages stay informative.
+
+use std::fmt;
+
+/// Boxed dynamic error with a context chain (innermost cause last).
+pub struct Error {
+    /// Context frames, outermost first; the root cause is the last entry.
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (mirrors `anyhow::Error::to_string`).
+    pub fn root_cause_chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<()>` prints the Debug form on error; make
+        // it the readable chained message, like anyhow's report.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Note: like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes the blanket From below legal.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result` alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human context to an error (`Result`) or absence (`Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_gone() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_into_display() {
+        let r: Result<()> = Err::<(), _>(io_gone()).context("loading manifest");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.contains("loading manifest") && msg.contains("gone"), "{msg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<u32> = None.context("flag missing");
+        assert_eq!(r.unwrap_err().to_string(), "flag missing");
+        let r: Result<u32> = Some(7).context("unused");
+        assert_eq!(r.unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_and_question_mark() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failing with code {}", 3);
+            }
+            let v: u32 = "12".parse()?; // ParseIntError -> Error via From
+            Ok(v)
+        }
+        assert_eq!(inner(false).unwrap(), 12);
+        assert!(inner(true).unwrap_err().to_string().contains("code 3"));
+    }
+}

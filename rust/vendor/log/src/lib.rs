@@ -1,0 +1,29 @@
+//! Offline vendor stub of `log`: the five level macros, writing
+//! level-prefixed lines to stderr for warn/error and discarding the
+//! lower levels (no logger registry; serving telemetry goes through
+//! `flame::metrics`, not the log crate).
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { eprintln!("[error] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { eprintln!("[warn] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { { let _ = format_args!($($arg)*); } };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { { let _ = format_args!($($arg)*); } };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { { let _ = format_args!($($arg)*); } };
+}
