@@ -14,7 +14,8 @@ use std::time::Duration;
 
 use anyhow::Result;
 use flame::cluster::{
-    ClusterConfig, ClusterRouter, ReplicaBackend, RoutePolicy, SimConfig, SimReplica,
+    ClusterConfig, ClusterRouter, ReplicaBackend, ResultCacheConfig, RoutePolicy, SimConfig,
+    SimReplica,
 };
 use flame::config::WorkloadConfig;
 use flame::workload::{driver, Generator};
@@ -86,12 +87,53 @@ fn main() -> Result<()> {
     sims[0].fail_next(0);
     std::thread::sleep(Duration::from_millis(600)); // > eject_cooldown_ms
     let before = router.replicas()[0].metrics.requests();
-    driver::closed_loop(requests, 12, Duration::from_secs(30), |r| router.submit(r).is_ok());
+    driver::closed_loop(requests.clone(), 12, Duration::from_secs(30), |r| {
+        router.submit(r).is_ok()
+    });
     let after = router.replicas()[0].metrics.requests();
     println!(
         "\nphase 3: after cooldown, replica 0 served {} more requests (healthy={})",
         after - before,
         router.replicas()[0].healthy()
+    );
+
+    // phase 4: duplicate bursts against the router's result-cache tier —
+    // a fresh router with the cache enabled, fed the same traffic with
+    // 30% of requests re-issued (the upstream-retriever-retry pattern).
+    // Duplicates are answered from the cache (or coalesced onto an
+    // in-flight computation) without touching a replica.
+    let sims2: Vec<Arc<SimReplica>> =
+        (0..3).map(|_| Arc::new(SimReplica::new(SimConfig::default()))).collect();
+    let backends2: Vec<Arc<dyn ReplicaBackend>> =
+        sims2.iter().map(|s| Arc::clone(s) as Arc<dyn ReplicaBackend>).collect();
+    let cached_router = Arc::new(ClusterRouter::new(
+        backends2,
+        ClusterConfig {
+            policy: RoutePolicy::CacheAffinity,
+            result_cache: ResultCacheConfig {
+                capacity: 32_768,
+                ttl_ms: 5_000,
+                ..ResultCacheConfig::default()
+            },
+            ..ClusterConfig::default()
+        },
+    )?);
+    let mut dup_requests = requests;
+    driver::inject_duplicates(&mut dup_requests, 0.3, 9);
+    let report = driver::closed_loop(dup_requests, 12, Duration::from_secs(30), |r| {
+        cached_router.submit(r).is_ok()
+    });
+    let snap = cached_router.snapshot();
+    let backend_serves: u64 = sims2.iter().map(|s| s.served_total()).sum();
+    println!(
+        "\nphase 4: 30% duplicate bursts through the result tier: \
+         completed {}/{}, backend serves {} (hits {}, coalesced {}, misses {})",
+        report.completed,
+        report.submitted,
+        backend_serves,
+        snap.result_hits,
+        snap.result_coalesced,
+        snap.result_misses
     );
     Ok(())
 }

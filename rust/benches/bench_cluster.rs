@@ -14,7 +14,8 @@ use std::time::{Duration, Instant};
 
 use flame::benchkit::Table;
 use flame::cluster::{
-    ClusterConfig, ClusterRouter, ReplicaBackend, RoutePolicy, SimConfig, SimReplica,
+    ClusterConfig, ClusterRouter, ReplicaBackend, ResultCacheConfig, RoutePolicy, SimConfig,
+    SimReplica,
 };
 use flame::config::WorkloadConfig;
 use flame::workload::{driver, Generator, Request};
@@ -141,6 +142,7 @@ fn main() {
             Duration::from_secs(1),
             256,
             5,
+            0.0,
         );
         let snap = router.snapshot();
         otable.row(&[
@@ -154,4 +156,100 @@ fn main() {
     }
     otable.footnote("shed requests cost nothing downstream — the SLA-protecting trade");
     otable.print();
+
+    // ---- result-cache ablation: off / cache / cache+single-flight ----
+    // Duplicate bursts (the upstream retriever re-issuing a candidate
+    // set) are where the router's result tier earns its keep: a cached
+    // duplicate skips the replica entirely, and single-flight coalesces
+    // concurrent duplicates onto one backend serve.
+    println!(
+        "\nresult-cache ablation: {REPLICAS} replicas, cache-affinity, \
+         duplicate rates 0% / 10% / 30%"
+    );
+    let mut ctable = Table::new(
+        "router result cache under duplicate traffic",
+        &["arm", "dup %", "throughput", "p99", "backend serves", "hits", "coalesced"],
+    );
+    // serves[(arm, dup%)] for the cross-arm comparisons below
+    let mut serves = std::collections::HashMap::new();
+    let mut speed = std::collections::HashMap::new();
+    for &dup_pct in &[0u32, 10, 30] {
+        for &(arm, cap, coalesce) in
+            &[("off", 0usize, false), ("cache", 65_536, false), ("cache+sf", 65_536, true)]
+        {
+            let sims: Vec<Arc<SimReplica>> = (0..REPLICAS)
+                .map(|_| Arc::new(SimReplica::new(SimConfig::default())))
+                .collect();
+            let backends: Vec<Arc<dyn ReplicaBackend>> =
+                sims.iter().map(|s| Arc::clone(s) as Arc<dyn ReplicaBackend>).collect();
+            let cfg = ClusterConfig {
+                policy: RoutePolicy::CacheAffinity,
+                result_cache: ResultCacheConfig {
+                    capacity: cap,
+                    ttl_ms: 10_000,
+                    coalesce,
+                    ..ResultCacheConfig::default()
+                },
+                ..ClusterConfig::default()
+            };
+            let router = ClusterRouter::new(backends, cfg).expect("router");
+            let mut dup_reqs = reqs.clone();
+            driver::inject_duplicates(&mut dup_reqs, dup_pct as f64 / 100.0, 99);
+            let t0 = Instant::now();
+            let report =
+                driver::closed_loop(dup_reqs, CONCURRENCY, Duration::from_secs(120), |r| {
+                    router.submit(r).is_ok()
+                });
+            let elapsed = t0.elapsed().as_secs_f64();
+            let agg = router.metrics.snapshot_over(elapsed);
+            let snap = router.snapshot();
+            let backend_serves: u64 = sims.iter().map(|s| s.served_total()).sum();
+            ctable.row(&[
+                arm.to_string(),
+                dup_pct.to_string(),
+                format!("{:.0} k pairs/s", agg.throughput_pairs_per_s / 1e3),
+                format!("{:.2} ms", agg.overall_p99_ms),
+                backend_serves.to_string(),
+                snap.result_hits.to_string(),
+                snap.result_coalesced.to_string(),
+            ]);
+            serves.insert((arm, dup_pct), backend_serves);
+            speed.insert((arm, dup_pct), (agg.throughput_pairs_per_s, agg.overall_p99_ms));
+            assert_eq!(report.completed + report.rejected, report.submitted);
+        }
+    }
+    ctable.footnote("backend serves = SimReplica::serve calls actually executed");
+    ctable.footnote("hits/coalesced = requests answered without touching a replica");
+    ctable.print();
+
+    for &dup_pct in &[10u32, 30] {
+        let off = serves[&("off", dup_pct)];
+        let cache = serves[&("cache", dup_pct)];
+        let sf = serves[&("cache+sf", dup_pct)];
+        let (thr_off, p99_off) = speed[&("off", dup_pct)];
+        let (thr_sf, p99_sf) = speed[&("cache+sf", dup_pct)];
+        println!(
+            "\ndup {dup_pct}%: backend serves off={off} cache={cache} cache+sf={sf} — {}",
+            if sf <= cache && cache < off {
+                "result tier sheds recomputation ✓"
+            } else {
+                "UNEXPECTED: result tier did not reduce backend serves"
+            }
+        );
+        println!(
+            "dup {dup_pct}%: throughput {:.0}k → {:.0}k pairs/s, p99 {:.2} → {:.2} ms (off → cache+sf)",
+            thr_off / 1e3,
+            thr_sf / 1e3,
+            p99_off,
+            p99_sf
+        );
+        assert!(
+            cache < off,
+            "dup {dup_pct}%: result cache must cut backend serves ({cache} vs {off})"
+        );
+        assert!(
+            sf <= cache,
+            "dup {dup_pct}%: coalescing must not add backend serves ({sf} vs {cache})"
+        );
+    }
 }

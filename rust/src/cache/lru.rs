@@ -38,7 +38,9 @@ impl<V> Lookup<V> {
 
 struct Slot<V> {
     key: u64,
-    value: V,
+    /// `None` only while the slot sits on the free list — a removed
+    /// entry must not keep its value alive until the slot is recycled.
+    value: Option<V>,
     inserted: Instant,
     prev: usize,
     next: usize,
@@ -118,7 +120,7 @@ impl<V: Clone> LruCache<V> {
             None => Lookup::Miss,
             Some(i) => {
                 let age = now.saturating_duration_since(self.slots[i].inserted);
-                let v = self.slots[i].value.clone();
+                let v = self.slots[i].value.clone().expect("indexed slot holds a value");
                 if age <= self.ttl {
                     self.detach(i);
                     self.push_front(i);
@@ -135,11 +137,25 @@ impl<V: Clone> LruCache<V> {
     /// Insert/update a key (counts as a refresh: TTL restarts).
     pub fn insert(&mut self, key: u64, value: V, now: Instant) {
         if let Some(&i) = self.map.get(&key) {
-            self.slots[i].value = value;
+            self.slots[i].value = Some(value);
             self.slots[i].inserted = now;
             self.detach(i);
             self.push_front(i);
             return;
+        }
+        // Reclaim fully-expired entries from the LRU tail. Stale reads are
+        // never promoted, so dead entries sink toward the tail — but
+        // without this sweep a never-refreshed entry would occupy its
+        // slot (and pin its value) forever.
+        while self.tail != NIL
+            && now.saturating_duration_since(self.slots[self.tail].inserted) > self.ttl
+        {
+            let t = self.tail;
+            self.detach(t);
+            self.map.remove(&self.slots[t].key);
+            self.slots[t].value = None;
+            self.free.push(t);
+            self.evictions += 1;
         }
         let i = if self.map.len() >= self.capacity {
             // evict LRU tail and reuse its slot
@@ -152,20 +168,22 @@ impl<V: Clone> LruCache<V> {
         } else if let Some(i) = self.free.pop() {
             i
         } else {
-            self.slots.push(Slot { key: 0, value: value.clone(), inserted: now, prev: NIL, next: NIL });
+            self.slots.push(Slot { key: 0, value: None, inserted: now, prev: NIL, next: NIL });
             self.slots.len() - 1
         };
         self.slots[i].key = key;
-        self.slots[i].value = value;
+        self.slots[i].value = Some(value);
         self.slots[i].inserted = now;
         self.push_front(i);
         self.map.insert(key, i);
     }
 
-    /// Remove a key (used by tests and invalidation paths).
+    /// Remove a key (used by tests and invalidation paths). The value is
+    /// dropped immediately — the free list must not park it alive.
     pub fn remove(&mut self, key: u64) -> bool {
         if let Some(i) = self.map.remove(&key) {
             self.detach(i);
+            self.slots[i].value = None;
             self.free.push(i);
             true
         } else {
@@ -275,6 +293,38 @@ mod tests {
         }
         let _ = c.get(1, t);
         assert_eq!(c.keys_mru(), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn insert_reclaims_expired_tails() {
+        let mut c = LruCache::new(8, Duration::from_millis(10));
+        let t = now();
+        for k in 0..4 {
+            c.insert(k, k, t);
+        }
+        assert_eq!(c.len(), 4);
+        // all four entries expire; the next insert must sweep them out
+        // instead of letting them occupy slots forever
+        let later = t + Duration::from_millis(50);
+        c.insert(100, 100, later);
+        assert_eq!(c.len(), 1, "expired entries still occupy slots");
+        assert_eq!(c.evictions, 4);
+        for k in 0..4 {
+            assert_eq!(c.get(k, later), Lookup::Miss);
+        }
+        assert!(c.get(100, later).is_fresh());
+    }
+
+    #[test]
+    fn remove_drops_value_immediately() {
+        let v = std::sync::Arc::new(7u8);
+        let mut c = LruCache::new(4, Duration::from_secs(60));
+        let t = now();
+        c.insert(1, std::sync::Arc::clone(&v), t);
+        assert_eq!(std::sync::Arc::strong_count(&v), 2);
+        assert!(c.remove(1));
+        // the free-listed slot must not park the old value alive
+        assert_eq!(std::sync::Arc::strong_count(&v), 1, "removed value leaked in free list");
     }
 
     #[test]

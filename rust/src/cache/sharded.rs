@@ -18,12 +18,28 @@ pub struct ShardedCache<V> {
 
 impl<V: Clone> ShardedCache<V> {
     /// `capacity` is total across shards; `shards` is rounded up to a
-    /// power of two.
+    /// power of two (and down so no shard ends up with zero slots). The
+    /// shard capacities sum to exactly `capacity.max(1)`: the division
+    /// remainder is spread one slot each over the leading shards rather
+    /// than silently dropped, and `capacity < shards` shrinks the shard
+    /// count instead of over-allocating a slot per shard.
     pub fn new(capacity: usize, shards: usize, ttl: Duration) -> Self {
-        let n = shards.max(1).next_power_of_two();
-        let per = (capacity / n).max(1);
-        let shards = (0..n).map(|_| Mutex::new(LruCache::new(per, ttl))).collect();
+        let capacity = capacity.max(1);
+        let mut n = shards.max(1).next_power_of_two();
+        while n > capacity {
+            n /= 2;
+        }
+        let (base, rem) = (capacity / n, capacity % n);
+        let shards = (0..n)
+            .map(|i| Mutex::new(LruCache::new(base + usize::from(i < rem), ttl)))
+            .collect();
         ShardedCache { shards, mask_bits: n.trailing_zeros(), stats: CacheStats::default() }
+    }
+
+    /// Total capacity across shards — exactly the `capacity` given to
+    /// [`ShardedCache::new`] (clamped to ≥ 1).
+    pub fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().capacity()).sum()
     }
 
     #[inline]
@@ -97,6 +113,24 @@ mod tests {
     fn shards_rounded_to_pow2() {
         let c: ShardedCache<u32> = ShardedCache::new(64, 5, Duration::from_secs(60));
         assert_eq!(c.n_shards(), 8);
+    }
+
+    #[test]
+    fn capacity_remainder_distributed_not_lost() {
+        // 100/16 = 6 r 4 — four shards get 7 slots, twelve get 6; the
+        // old integer division silently served only 96
+        let c: ShardedCache<u8> = ShardedCache::new(100, 16, Duration::from_secs(60));
+        assert_eq!(c.n_shards(), 16);
+        assert_eq!(c.capacity(), 100);
+    }
+
+    #[test]
+    fn tiny_capacity_never_over_allocates() {
+        // capacity < shards used to allocate 1 slot per shard (16 total);
+        // the shard count must shrink instead
+        let c: ShardedCache<u8> = ShardedCache::new(3, 16, Duration::from_secs(60));
+        assert_eq!(c.capacity(), 3);
+        assert!(c.n_shards() <= 3, "{} shards for capacity 3", c.n_shards());
     }
 
     #[test]

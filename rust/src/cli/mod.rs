@@ -20,7 +20,7 @@ const VALUE_FLAGS: &[&str] = &[
     "artifacts", "scenario", "variant", "m", "requests", "duration-s", "rate",
     "workers", "cache", "dso", "config", "bind", "trace", "seed", "concurrency",
     "executors", "theta", "catalog", "replicas", "policy", "deadline-ms",
-    "slots", "users",
+    "slots", "users", "result-cache-cap", "result-ttl-ms", "dup-rate",
 ];
 
 impl Args {
@@ -102,6 +102,11 @@ CLUSTER FLAGS:
   --deadline-ms D     per-request deadline budget  (default: 50)
   --slots N           service slots per replica    (default: 4)
   --users N           synthetic user population    (default: 2000)
+  --result-cache-cap N  router result-cache entries, 0 = off (default: 32768)
+  --result-ttl-ms T   result-cache freshness TTL   (default: 2000)
+  --no-coalesce       disable single-flight coalescing of identical requests
+  --dup-rate F        duplicate-burst rate injected into the synthetic
+                      workload, 0.0..1.0           (default: 0)
   --real              replicas are real stacks (needs artifacts)
 
 COMMON FLAGS:
@@ -184,5 +189,23 @@ mod tests {
         assert_eq!(a.get_parse::<usize>("replicas").unwrap(), Some(4));
         assert_eq!(a.get("policy"), Some("affinity"));
         assert_eq!(a.get_parse::<u64>("deadline-ms").unwrap(), Some(20));
+    }
+
+    #[test]
+    fn result_cache_flags_take_values() {
+        let a = parse(&[
+            "cluster",
+            "--result-cache-cap",
+            "4096",
+            "--result-ttl-ms",
+            "500",
+            "--dup-rate",
+            "0.25",
+            "--no-coalesce",
+        ]);
+        assert_eq!(a.get_parse::<usize>("result-cache-cap").unwrap(), Some(4096));
+        assert_eq!(a.get_parse::<u64>("result-ttl-ms").unwrap(), Some(500));
+        assert_eq!(a.get_parse::<f64>("dup-rate").unwrap(), Some(0.25));
+        assert!(a.has("no-coalesce"));
     }
 }

@@ -44,15 +44,19 @@ impl Admission {
 
     /// Expected sojourn time (µs) for a new request on `replica`: the
     /// rolling p99 service time (tail-conservative), plus one mean
-    /// service time per full "wave" of in-flight work ahead of it beyond
-    /// the replica's parallel slots. A cold replica (empty histogram)
-    /// estimates 0 — optimistic admission until the histogram warms,
-    /// which is what lets a freshly re-admitted replica be probed at all.
+    /// service time per "wave" of in-flight work ahead of it relative to
+    /// the replica's parallel slots. Partial waves round *up*: 3 of 4
+    /// slots busy is still a wave the arrival may wait behind — flooring
+    /// it estimated zero queueing right up to the saturation point. The
+    /// divisor is guarded so a zero-slot replica cannot panic. A cold
+    /// replica (empty histogram) estimates 0 — optimistic admission
+    /// until the histogram warms, which is what lets a freshly
+    /// re-admitted replica be probed at all.
     pub fn estimate_us(replica: &Replica) -> u64 {
         let mean = replica.mean_us();
         let p99 = replica.p99_us();
         let tail = if p99 > 0 { p99 } else { mean };
-        let waves = (replica.in_flight() / replica.slots()) as u64;
+        let waves = replica.in_flight().div_ceil(replica.slots().max(1)) as u64;
         tail + mean.saturating_mul(waves)
     }
 
@@ -145,6 +149,90 @@ mod tests {
             Verdict::Overbudget { estimate_us } => assert!(estimate_us >= 1_900),
             v => panic!("expected Overbudget, got {v:?}"),
         }
+    }
+
+    /// Backend that blocks every serve call until the gate opens —
+    /// pins `in_flight` at a known value while the test reads estimates.
+    struct GateBackend {
+        gate: std::sync::Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+    }
+
+    impl ReplicaBackend for GateBackend {
+        fn serve(&self, req: &Request) -> Result<Response> {
+            let (lock, cv) = &*self.gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            Ok(Response {
+                request_id: req.request_id,
+                scores: Vec::new(),
+                m: req.m(),
+                overall_us: 0,
+                compute_us: 0,
+                feature_us: 0,
+                queue_us: 0,
+            })
+        }
+    }
+
+    /// Regression: 3 of 4 slots busy used to floor to zero queueing
+    /// waves, estimating a saturating replica as idle.
+    #[test]
+    fn partial_wave_rounds_up() {
+        let gate = std::sync::Arc::new((std::sync::Mutex::new(false), std::sync::Condvar::new()));
+        let backend = Arc::new(GateBackend { gate: std::sync::Arc::clone(&gate) });
+        let r = Replica::new(0, backend, 4, 3, 1_000);
+        for _ in 0..100 {
+            r.record_latency(2_000, 1);
+        }
+        let (busy, est, floor) = std::thread::scope(|s| {
+            for i in 0..3u64 {
+                let r = &r;
+                s.spawn(move || {
+                    let req = Request {
+                        request_id: i,
+                        user_id: i,
+                        history: vec![],
+                        candidates: vec![1],
+                    };
+                    r.serve_tracked(&req).unwrap();
+                });
+            }
+            // wait for all three to be in flight
+            for _ in 0..2_000 {
+                if r.in_flight() == 3 {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            let busy = r.in_flight();
+            let est = Admission::estimate_us(&r);
+            let floor = r.p99_us() + r.mean_us();
+            // always release the gate before asserting, or a failure
+            // would hang the blocked serve threads instead of failing
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+            (busy, est, floor)
+        });
+        assert_eq!(busy, 3, "servers never blocked on the gate");
+        assert!(
+            est >= floor,
+            "3/4 busy is one partial wave: estimate {est} µs < tail+mean {floor} µs"
+        );
+    }
+
+    /// Invariant (two-layer guard): `Replica::new` clamps `slots` to
+    /// ≥ 1, and `estimate_us` guards its divisor independently — so a
+    /// slots-0 configuration can never reach a division by zero even if
+    /// one of the two layers is refactored away.
+    #[test]
+    fn zero_slots_guarded() {
+        let r = Replica::new(0, Arc::new(NullBackend), 0, 3, 1_000);
+        r.record_latency(1_000, 1);
+        let _ = Admission::estimate_us(&r); // must not divide by zero
+        assert!(r.slots() >= 1);
     }
 
     #[test]

@@ -13,7 +13,12 @@
 //!   congestion; requests that cannot make their SLA are re-routed to
 //!   the cheapest healthy replica or shed at the front door;
 //! * **replica health**: consecutive-error ejection with timed
-//!   re-admission (half-open probing after a cooldown).
+//!   re-admission (half-open probing after a cooldown);
+//! * **result cache tier** ([`result_cache::ResultCache`]): a
+//!   router-level cache of scored responses keyed on the canonicalized
+//!   (user, candidate set), with single-flight coalescing so concurrent
+//!   identical requests ride one backend computation — see
+//!   [`result_cache`] for the full design.
 //!
 //! Backends implement [`ReplicaBackend`]: [`StackReplica`] wraps a real
 //! `ServingStack`; `sim::SimReplica` is the artifact-free model used by
@@ -22,16 +27,18 @@
 pub mod admission;
 pub mod policy;
 pub mod replica;
+pub mod result_cache;
 pub mod sim;
 
 pub use admission::{Admission, Verdict};
 pub use policy::{HashRing, RoutePolicy};
 pub use replica::{Replica, ReplicaBackend, ReplicaSnapshot, StackReplica};
+pub use result_cache::{ResultCache, ResultCacheConfig};
 pub use sim::{SimConfig, SimReplica};
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::metrics::Recorder;
@@ -55,6 +62,9 @@ pub struct ClusterConfig {
     pub eject_cooldown_ms: u64,
     /// Allow deadline/failover re-routes to another replica.
     pub reroute: bool,
+    /// Router-level result cache + single-flight coalescing knobs
+    /// (disabled by default: `capacity == 0`).
+    pub result_cache: ResultCacheConfig,
 }
 
 impl Default for ClusterConfig {
@@ -67,6 +77,7 @@ impl Default for ClusterConfig {
             eject_after: 3,
             eject_cooldown_ms: 500,
             reroute: true,
+            result_cache: ResultCacheConfig::default(),
         }
     }
 }
@@ -80,6 +91,10 @@ pub struct ClusterSnapshot {
     pub sla_misses: u64,
     pub rerouted: u64,
     pub aggregate_cache_hit_rate: f64,
+    /// Result-tier counters (all 0 when the tier is disabled).
+    pub result_hits: u64,
+    pub result_misses: u64,
+    pub result_coalesced: u64,
 }
 
 /// The routing tier over N replicas.
@@ -89,6 +104,8 @@ pub struct ClusterRouter {
     ring: HashRing,
     rr_next: AtomicUsize,
     rng_state: AtomicU64,
+    /// Router-level result cache + single-flight table (None = disabled).
+    result_cache: Option<ResultCache>,
     pub admission: Admission,
     /// Aggregate cluster-level latency/throughput (what a load balancer
     /// in front of the fleet would observe).
@@ -110,12 +127,14 @@ impl ClusterRouter {
             .collect();
         let ring = HashRing::new(replicas.len(), cfg.vnodes);
         let rng_state = AtomicU64::new(0x5EED_0000 ^ replicas.len() as u64);
+        let result_cache = ResultCache::new(&cfg.result_cache);
         Ok(ClusterRouter {
             replicas,
             cfg,
             ring,
             rr_next: AtomicUsize::new(0),
             rng_state,
+            result_cache,
             admission: Admission::new(),
             metrics: Recorder::new(),
         })
@@ -123,6 +142,11 @@ impl ClusterRouter {
 
     pub fn replicas(&self) -> &[Arc<Replica>] {
         &self.replicas
+    }
+
+    /// The router's result-cache tier, if enabled.
+    pub fn result_cache(&self) -> Option<&ResultCache> {
+        self.result_cache.as_ref()
     }
 
     pub fn policy(&self) -> RoutePolicy {
@@ -194,25 +218,80 @@ impl ClusterRouter {
     }
 
     /// Route and serve one request with an explicit deadline budget (µs):
-    /// policy pick → deadline admission (re-route or shed) → dispatch
-    /// (one failover retry on replica error) → SLA accounting.
+    /// result-cache lookup (hit/coalesce = serve without touching a
+    /// replica) → policy pick → deadline admission (re-route or shed) →
+    /// dispatch (one failover retry on replica error) → SLA accounting.
     pub fn submit_with_budget(&self, req: &Request, budget_us: u64) -> Result<Response> {
         let t0 = Instant::now();
+        if let Some(rc) = &self.result_cache {
+            // every begin() classification below must mirror into
+            // `self.metrics` — the Recorder's result_* counters and
+            // the ResultCache's own are two sinks of the same events
+            match rc.begin(req, Duration::from_micros(budget_us)) {
+                result_cache::Begin::Hit(resp) => {
+                    self.metrics.record_result_hit();
+                    return Ok(self.finish_cached(req, resp, t0, budget_us));
+                }
+                result_cache::Begin::Coalesced(resp) => {
+                    self.metrics.record_result_coalesced();
+                    return Ok(self.finish_cached(req, resp, t0, budget_us));
+                }
+                result_cache::Begin::Leader(flight) => {
+                    self.metrics.record_result_miss();
+                    let result = self.dispatch(req, budget_us, t0);
+                    flight.complete(req, &result);
+                    return result;
+                }
+                result_cache::Begin::Fallback => {
+                    // the in-flight leader failed or overran our budget:
+                    // compute independently, no re-coalescing
+                    self.metrics.record_result_miss();
+                }
+            }
+        }
+        self.dispatch(req, budget_us, t0)
+    }
+
+    /// Complete a request served from the result tier: stamp the
+    /// requester's own elapsed time and account it exactly like a
+    /// backend completion (it *is* one, just a free one).
+    fn finish_cached(
+        &self,
+        req: &Request,
+        mut resp: Response,
+        t0: Instant,
+        budget_us: u64,
+    ) -> Response {
+        let elapsed_us = t0.elapsed().as_micros() as u64;
+        resp.overall_us = elapsed_us;
+        self.metrics.record_request(elapsed_us, req.m());
+        self.admission.note_completion(elapsed_us, budget_us);
+        resp
+    }
+
+    /// Policy pick → deadline admission → replica dispatch — the
+    /// pre-result-cache request path.
+    fn dispatch(&self, req: &Request, budget_us: u64, t0: Instant) -> Result<Response> {
+        // Admission sees the budget *remaining* at this instant: time
+        // already burned since t0 (e.g. waiting on a single-flight
+        // leader that failed) must not be granted a second time. SLA
+        // accounting below still judges against the full budget.
+        let remaining_us = budget_us.saturating_sub(t0.elapsed().as_micros() as u64);
         let primary = self
             .pick(req)
             .ok_or_else(|| Error::Overloaded("no healthy replicas".into()))?;
 
-        let target = match self.admission.check(&self.replicas[primary], budget_us) {
+        let target = match self.admission.check(&self.replicas[primary], remaining_us) {
             Verdict::Admit => primary,
             Verdict::Overbudget { estimate_us } => match self.cheapest_alternative(primary) {
-                Some((alt, est)) if self.cfg.reroute && est <= budget_us => {
+                Some((alt, est)) if self.cfg.reroute && est <= remaining_us => {
                     self.admission.note_reroute();
                     alt
                 }
                 _ => {
                     self.admission.note_shed();
                     return Err(Error::Overloaded(format!(
-                        "deadline admission: estimated {estimate_us} µs > budget {budget_us} µs on replica {primary}"
+                        "deadline admission: estimated {estimate_us} µs > remaining budget {remaining_us} µs on replica {primary}"
                     )));
                 }
             },
@@ -251,6 +330,8 @@ impl ClusterRouter {
     }
 
     pub fn snapshot(&self) -> ClusterSnapshot {
+        let (result_hits, result_misses, result_coalesced) =
+            self.result_cache.as_ref().map_or((0, 0, 0), |rc| rc.counts());
         ClusterSnapshot {
             policy: self.cfg.policy.name(),
             replicas: self.replicas.iter().map(|r| r.snapshot()).collect(),
@@ -258,6 +339,9 @@ impl ClusterRouter {
             sla_misses: self.admission.sla_misses(),
             rerouted: self.admission.rerouted(),
             aggregate_cache_hit_rate: self.aggregate_cache_hit_rate(),
+            result_hits,
+            result_misses,
+            result_coalesced,
         }
     }
 }
@@ -345,5 +429,46 @@ mod tests {
         assert_eq!(snap.replicas.len(), 2);
         assert_eq!(snap.shed, 0);
         assert_eq!(snap.replicas.iter().map(|r| r.requests).sum::<u64>(), 10);
+        // tier disabled by default: counters stay zero even for dupes
+        assert_eq!((snap.result_hits, snap.result_misses, snap.result_coalesced), (0, 0, 0));
+    }
+
+    #[test]
+    fn result_cache_short_circuits_duplicate_submissions() {
+        let backends: Vec<Arc<dyn ReplicaBackend>> = (0..2)
+            .map(|_| {
+                Arc::new(SimReplica::new(SimConfig {
+                    base_us: 0,
+                    per_pair_ns: 0,
+                    miss_penalty_us: 0,
+                    ..SimConfig::default()
+                })) as Arc<dyn ReplicaBackend>
+            })
+            .collect();
+        let cfg = ClusterConfig {
+            result_cache: ResultCacheConfig {
+                capacity: 256,
+                ttl_ms: 60_000,
+                ..ResultCacheConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        let router = ClusterRouter::new(backends, cfg).unwrap();
+        // 5 identical (user, candidates) submissions: 1 backend serve
+        for i in 0..5 {
+            router.submit(&req(i, 42)).unwrap();
+        }
+        let snap = router.snapshot();
+        assert_eq!(snap.result_hits, 4, "duplicates must hit the result tier");
+        assert_eq!(snap.result_misses, 1);
+        assert_eq!(
+            snap.replicas.iter().map(|r| r.requests).sum::<u64>(),
+            1,
+            "only the first submission may reach a replica"
+        );
+        // router-level throughput still counts all five completions
+        assert_eq!(router.metrics.requests(), 5);
+        let m = router.metrics.snapshot();
+        assert_eq!((m.result_hits, m.result_misses, m.result_coalesced), (4, 1, 0));
     }
 }

@@ -104,7 +104,8 @@ impl RollingWindow {
 
     fn maybe_rotate(&self, now_us: u64) {
         let start = self.epoch_start_us.load(Ordering::Relaxed);
-        if now_us.saturating_sub(start) < self.epoch_us {
+        let elapsed = now_us.saturating_sub(start);
+        if elapsed < self.epoch_us {
             return;
         }
         if self
@@ -112,9 +113,19 @@ impl RollingWindow {
             .compare_exchange(start, now_us, Ordering::Relaxed, Ordering::Relaxed)
             .is_ok()
         {
-            self.prev.reset();
-            self.prev.merge(&self.cur);
-            self.cur.reset();
+            if elapsed >= self.epoch_us.saturating_mul(2) {
+                // ≥2 epochs passed: everything in both windows predates
+                // the window we report. A single rotation here would
+                // carry an ancient tail (say, one saturation episode
+                // minutes ago) into `prev` and keep admission starving
+                // an idle replica — clear both epochs instead.
+                self.prev.reset();
+                self.cur.reset();
+            } else {
+                self.prev.reset();
+                self.prev.merge(&self.cur);
+                self.cur.reset();
+            }
         }
     }
 
@@ -395,10 +406,21 @@ mod tests {
         let w = RollingWindow::new(10_000); // 10 ms epochs
         w.record(0, 50_000);
         assert!(w.p99(1_000) >= 45_000, "fresh sample visible");
-        // first rotation: the sample survives in the previous epoch
-        assert!(w.p99(20_000) >= 45_000);
-        // second rotation with no new samples: the estimate decays away
-        assert_eq!(w.p99(40_000), 0);
+        // first rotation (one epoch elapsed): survives in the previous epoch
+        assert!(w.p99(15_000) >= 45_000);
+        // next rotation with no new samples: the estimate decays away
+        assert_eq!(w.p99(32_000), 0);
+        assert_eq!(w.mean(32_000), 0);
+    }
+
+    #[test]
+    fn idle_gap_clears_both_epochs() {
+        let w = RollingWindow::new(10_000); // 10 ms epochs
+        w.record(0, 50_000);
+        // 4 epochs of idle: the old single-rotation carried the ancient
+        // 50 ms tail into `prev` and kept reporting it — the gap must
+        // clear both epochs so the estimate decays to cold
+        assert_eq!(w.p99(40_000), 0, "stale saturation tail survived an idle gap");
         assert_eq!(w.mean(40_000), 0);
     }
 

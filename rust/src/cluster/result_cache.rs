@@ -1,0 +1,483 @@
+//! Router-level result cache with single-flight coalescing.
+//!
+//! The PDA tier (§3.1) never pays twice for the same feature bytes; at
+//! the cluster tier the analogous waste is re-*scoring* an identical
+//! (user, candidate-set) request that a replica just answered — the
+//! paper's non-uniform upstream frequently re-issues near-identical
+//! candidate sets within seconds. This module puts a request-level
+//! result tier in front of placement/admission:
+//!
+//! * **result cache** — key = hash of `(scenario salt, user_id, history,
+//!   canonicalized candidate ids)`; value = the scored outcome, stored
+//!   in the existing [`ShardedCache`] under a short TTL. Candidate ids
+//!   are canonicalized by sorting, so a permutation of the same set
+//!   hits; on a hit the cached `[m][n_tasks]` score rows are remapped
+//!   into the requester's candidate order.
+//! * **single-flight coalescing** — concurrent identical misses block on
+//!   one in-flight computation (a per-key waiter table) instead of
+//!   fanning out to N replicas. The first miss becomes the *leader* and
+//!   computes; duplicates wait (bounded by their deadline budget) and
+//!   share the leader's result. A failed or timed-out leader wakes the
+//!   waiters empty-handed and each falls back to its own computation —
+//!   errors are never amplified across coalesced requests.
+//!
+//! Stored results carry the user id, sorted candidates, and a history
+//! hash, which are re-verified on every hit: a 64-bit key collision
+//! degrades to a miss, never to wrong scores.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cache::{Lookup, ShardedCache};
+use crate::error::Result;
+use crate::server::pipeline::Response;
+use crate::util::rng::splitmix64;
+use crate::workload::Request;
+
+/// Result-cache shard count (keys are pre-mixed hashes, so a modest
+/// power of two spreads them well).
+const SHARDS: usize = 16;
+
+/// Result-tier knobs (part of `ClusterConfig`).
+#[derive(Clone, Debug)]
+pub struct ResultCacheConfig {
+    /// Total cached responses across shards; 0 disables the tier.
+    pub capacity: usize,
+    /// Freshness TTL for cached responses (ms). Short by design: a
+    /// result is only as fresh as the features it was scored from.
+    pub ttl_ms: u64,
+    /// Coalesce concurrent identical misses onto one backend call.
+    pub coalesce: bool,
+    /// Key salt for fronts that serve several scenarios/models — the
+    /// same (user, candidates) pair must not collide across scenarios.
+    pub scenario_salt: u64,
+}
+
+impl Default for ResultCacheConfig {
+    fn default() -> Self {
+        ResultCacheConfig { capacity: 0, ttl_ms: 2_000, coalesce: true, scenario_salt: 0 }
+    }
+}
+
+/// The cached scoring outcome for one (user, candidate multiset).
+struct CachedScores {
+    user_id: u64,
+    /// Candidate ids in the order `scores` rows are laid out.
+    candidates: Vec<u64>,
+    /// Sorted copy — the collision check against the canonical key.
+    sorted: Vec<u64>,
+    history_hash: u64,
+    /// `[m][n_tasks]` task probabilities, `candidates` order.
+    scores: Vec<f32>,
+}
+
+impl CachedScores {
+    fn matches(&self, user_id: u64, sorted: &[u64], history_hash: u64) -> bool {
+        self.user_id == user_id && self.history_hash == history_hash && self.sorted == sorted
+    }
+}
+
+/// One in-flight computation that coalesced duplicates wait on.
+struct Flight {
+    outcome: Mutex<Option<std::result::Result<Arc<CachedScores>, ()>>>,
+    done: Condvar,
+}
+
+impl Flight {
+    fn new() -> Self {
+        Flight { outcome: Mutex::new(None), done: Condvar::new() }
+    }
+
+    fn fill(&self, outcome: std::result::Result<Arc<CachedScores>, ()>) {
+        *self.outcome.lock().unwrap() = Some(outcome);
+        self.done.notify_all();
+    }
+
+    /// Wait up to `timeout` for the leader; `None` = timed out.
+    fn wait(&self, timeout: Duration) -> Option<std::result::Result<Arc<CachedScores>, ()>> {
+        // cap so an effectively-infinite deadline budget cannot overflow
+        // Instant arithmetic (and cannot hang a waiter for hours)
+        let deadline = Instant::now() + timeout.min(Duration::from_secs(60));
+        let mut slot = self.outcome.lock().unwrap();
+        loop {
+            if let Some(out) = slot.as_ref() {
+                return Some(out.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.done.wait_timeout(slot, deadline - now).unwrap();
+            slot = guard;
+        }
+    }
+}
+
+/// Outcome of [`ResultCache::begin`] — what the router does next.
+pub enum Begin<'a> {
+    /// Fresh cached response; serve it without touching a replica.
+    Hit(Response),
+    /// A coalesced duplicate: an identical in-flight computation
+    /// finished while we waited — serve its result.
+    Coalesced(Response),
+    /// This request leads the computation: dispatch to a replica, then
+    /// [`FlightGuard::complete`] with the outcome.
+    Leader(FlightGuard<'a>),
+    /// The in-flight leader failed or timed out: dispatch without
+    /// registering (no re-coalescing — avoids convoys behind a request
+    /// that keeps failing).
+    Fallback,
+}
+
+/// Held by the leader of an in-flight computation. Completing publishes
+/// the result to the cache and every waiter; dropping without
+/// completing (error/unwind paths) wakes the waiters empty-handed so
+/// none of them blocks past its deadline.
+pub struct FlightGuard<'a> {
+    cache: &'a ResultCache,
+    key: u64,
+    sorted: Vec<u64>,
+    history_hash: u64,
+    flight: Option<Arc<Flight>>,
+}
+
+impl FlightGuard<'_> {
+    /// Publish the leader's outcome: a success is inserted into the
+    /// cache and handed to every coalesced waiter; an error wakes the
+    /// waiters so they fall back to their own dispatch.
+    pub fn complete(mut self, req: &Request, outcome: &Result<Response>) {
+        match outcome {
+            Ok(resp) => {
+                let cached = Arc::new(CachedScores {
+                    user_id: req.user_id,
+                    candidates: req.candidates.clone(),
+                    sorted: std::mem::take(&mut self.sorted),
+                    history_hash: self.history_hash,
+                    scores: resp.scores.clone(),
+                });
+                self.cache.cache.insert(self.key, Arc::clone(&cached));
+                self.finish(Ok(cached));
+            }
+            Err(_) => self.finish(Err(())),
+        }
+    }
+
+    fn finish(&mut self, outcome: std::result::Result<Arc<CachedScores>, ()>) {
+        if let Some(flight) = self.flight.take() {
+            // deregister first so a new arrival starts a fresh flight
+            // instead of waiting on a completed one
+            self.cache.inflight.lock().unwrap().remove(&self.key);
+            flight.fill(outcome);
+        }
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        // leader unwound without completing: wake waiters empty-handed
+        self.finish(Err(()));
+    }
+}
+
+/// Cross-replica result cache + single-flight table (one per router).
+pub struct ResultCache {
+    cache: ShardedCache<Arc<CachedScores>>,
+    /// key → in-flight computation (present only while a leader runs).
+    inflight: Mutex<HashMap<u64, Arc<Flight>>>,
+    coalesce: bool,
+    salt: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+fn mix(h: u64, v: u64) -> u64 {
+    let mut s = h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+impl ResultCache {
+    /// Build from config; `None` when the tier is disabled
+    /// (`capacity == 0`).
+    pub fn new(cfg: &ResultCacheConfig) -> Option<ResultCache> {
+        if cfg.capacity == 0 {
+            return None;
+        }
+        let ttl = Duration::from_millis(cfg.ttl_ms.max(1));
+        Some(ResultCache {
+            cache: ShardedCache::new(cfg.capacity, SHARDS, ttl),
+            inflight: Mutex::new(HashMap::new()),
+            coalesce: cfg.coalesce,
+            salt: cfg.scenario_salt,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        })
+    }
+
+    /// (hits, misses, coalesced) counters. A coalesced request is one
+    /// that shared an in-flight leader's computation; it is counted
+    /// neither as a hit nor as a miss.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.coalesced.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Canonical cache key: scenario salt + user + history hash + sorted
+    /// candidate ids. Returns the sorted candidates and history hash for
+    /// the collision re-check on hits.
+    fn key_of(&self, req: &Request) -> (u64, Vec<u64>, u64) {
+        let mut sorted = req.candidates.clone();
+        sorted.sort_unstable();
+        let mut hh = mix(0x9E37_79B9_7F4A_7C15, req.history.len() as u64);
+        for &item in &req.history {
+            hh = mix(hh, item);
+        }
+        let mut key = mix(self.salt ^ 0xF1A8_E00D_CAFE_F00D, req.user_id);
+        key = mix(key, hh);
+        key = mix(key, sorted.len() as u64);
+        for &c in &sorted {
+            key = mix(key, c);
+        }
+        (key, sorted, hh)
+    }
+
+    /// Classify one request against the cache and the in-flight table.
+    /// `wait_budget` bounds how long a coalesced duplicate may block on
+    /// the leader (the request's deadline budget).
+    pub fn begin(&self, req: &Request, wait_budget: Duration) -> Begin<'_> {
+        let (key, sorted, history_hash) = self.key_of(req);
+        if let Lookup::Fresh(cached) = self.cache.get(key) {
+            if cached.matches(req.user_id, &sorted, history_hash) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Begin::Hit(self.response_from(req, &cached));
+            }
+        }
+        if !self.coalesce {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Begin::Leader(FlightGuard {
+                cache: self,
+                key,
+                sorted,
+                history_hash,
+                flight: None,
+            });
+        }
+        let flight = {
+            let mut map = self.inflight.lock().unwrap();
+            if let Some(f) = map.get(&key) {
+                Arc::clone(f)
+            } else {
+                // Double-check the cache while holding the table lock: a
+                // leader we would have waited on may have just finished —
+                // it publishes to the cache *before* deregistering, so a
+                // fresh entry here is authoritative and closes the
+                // check-then-act window that would otherwise let a
+                // descheduled thread become a second leader.
+                if let Lookup::Fresh(cached) = self.cache.get(key) {
+                    if cached.matches(req.user_id, &sorted, history_hash) {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return Begin::Hit(self.response_from(req, &cached));
+                    }
+                }
+                let flight = Arc::new(Flight::new());
+                map.insert(key, Arc::clone(&flight));
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return Begin::Leader(FlightGuard {
+                    cache: self,
+                    key,
+                    sorted,
+                    history_hash,
+                    flight: Some(flight),
+                });
+            }
+        };
+        match flight.wait(wait_budget) {
+            Some(Ok(cached)) if cached.matches(req.user_id, &sorted, history_hash) => {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                Begin::Coalesced(self.response_from(req, &cached))
+            }
+            // leader failed, timed out, or (vanishingly) a key collision
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Begin::Fallback
+            }
+        }
+    }
+
+    /// Materialize a response for `req` from a cached outcome, remapping
+    /// the `[m][n_tasks]` score rows when the requester's candidate
+    /// order differs from the cached one. `overall_us` is left 0 for the
+    /// router to stamp with its own elapsed time; compute/feature cost
+    /// is 0 — a hit does no backend work.
+    fn response_from(&self, req: &Request, cached: &CachedScores) -> Response {
+        let scores = if cached.candidates == req.candidates || cached.scores.is_empty() {
+            cached.scores.clone()
+        } else {
+            let n_tasks = cached.scores.len() / cached.candidates.len();
+            let index: HashMap<u64, usize> = cached
+                .candidates
+                .iter()
+                .enumerate()
+                .map(|(i, &id)| (id, i))
+                .collect();
+            let mut out = Vec::with_capacity(req.candidates.len() * n_tasks);
+            for id in &req.candidates {
+                let i = index[id];
+                out.extend_from_slice(&cached.scores[i * n_tasks..(i + 1) * n_tasks]);
+            }
+            out
+        };
+        Response {
+            request_id: req.request_id,
+            scores,
+            m: req.m(),
+            overall_us: 0,
+            compute_us: 0,
+            feature_us: 0,
+            queue_us: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, user: u64, candidates: Vec<u64>) -> Request {
+        Request { request_id: id, user_id: user, history: vec![user, user + 1], candidates }
+    }
+
+    fn resp(req: &Request, per_task: usize) -> Response {
+        // deterministic, candidate-dependent scores: row i = f(candidate)
+        let mut scores = Vec::with_capacity(req.m() * per_task);
+        for &c in &req.candidates {
+            for t in 0..per_task {
+                scores.push((c as f32) + (t as f32) / 10.0);
+            }
+        }
+        Response {
+            request_id: req.request_id,
+            scores,
+            m: req.m(),
+            overall_us: 100,
+            compute_us: 80,
+            feature_us: 10,
+            queue_us: 0,
+        }
+    }
+
+    fn cache(coalesce: bool) -> ResultCache {
+        ResultCache::new(&ResultCacheConfig {
+            capacity: 1024,
+            ttl_ms: 60_000,
+            coalesce,
+            scenario_salt: 0,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn disabled_at_zero_capacity() {
+        assert!(ResultCache::new(&ResultCacheConfig::default()).is_none());
+    }
+
+    #[test]
+    fn canonical_key_ignores_candidate_order() {
+        let rc = cache(false);
+        let (ka, sa, _) = rc.key_of(&req(0, 7, vec![3, 1, 2]));
+        let (kb, sb, _) = rc.key_of(&req(1, 7, vec![2, 3, 1]));
+        assert_eq!(ka, kb);
+        assert_eq!(sa, sb);
+        let (kc, _, _) = rc.key_of(&req(2, 8, vec![3, 1, 2]));
+        assert_ne!(ka, kc, "different user must not share a key");
+        let (kd, _, _) = rc.key_of(&req(3, 7, vec![3, 1, 4]));
+        assert_ne!(ka, kd, "different candidates must not share a key");
+    }
+
+    #[test]
+    fn hit_remaps_scores_to_requested_order() {
+        let rc = cache(false);
+        let first = req(0, 7, vec![10, 20, 30]);
+        let Begin::Leader(guard) = rc.begin(&first, Duration::from_secs(1)) else {
+            panic!("first sight must lead");
+        };
+        guard.complete(&first, &Ok(resp(&first, 2)));
+
+        // same multiset, permuted order: a hit whose rows are remapped
+        let second = req(1, 7, vec![30, 10, 20]);
+        match rc.begin(&second, Duration::from_secs(1)) {
+            Begin::Hit(r) => {
+                assert_eq!(r.request_id, 1);
+                assert_eq!(r.m, 3);
+                assert_eq!(r.scores, resp(&second, 2).scores, "rows not in requested order");
+            }
+            _ => panic!("permuted duplicate must hit"),
+        }
+        let (hits, misses, coalesced) = rc.counts();
+        assert_eq!((hits, misses, coalesced), (1, 1, 0));
+    }
+
+    #[test]
+    fn leader_error_leaves_no_entry() {
+        let rc = cache(true);
+        let r = req(0, 3, vec![1, 2]);
+        let Begin::Leader(guard) = rc.begin(&r, Duration::from_secs(1)) else {
+            panic!("must lead");
+        };
+        guard.complete(&r, &Err(crate::error::Error::Internal("boom".into())));
+        // the failure is not cached; the next arrival leads again
+        assert!(matches!(rc.begin(&r, Duration::from_secs(1)), Begin::Leader(_)));
+    }
+
+    #[test]
+    fn dropped_guard_wakes_waiters_empty_handed() {
+        let rc = Arc::new(cache(true));
+        let r = req(0, 3, vec![1, 2]);
+        let guard = match rc.begin(&r, Duration::from_secs(1)) {
+            Begin::Leader(g) => g,
+            _ => panic!("must lead"),
+        };
+        // probe: map holds 1 ref, the guard 1, this clone 1 — a waiter
+        // enqueuing behind the flight raises the count to 4
+        let probe = Arc::clone(guard.flight.as_ref().unwrap());
+        std::thread::scope(|s| {
+            let rc2 = Arc::clone(&rc);
+            let waiter = s.spawn(move || {
+                let w = req(1, 3, vec![1, 2]);
+                matches!(rc2.begin(&w, Duration::from_secs(30)), Begin::Fallback)
+            });
+            // wait until the waiter is actually parked behind the flight,
+            // then unwind the leader without completing
+            for _ in 0..5_000 {
+                if Arc::strong_count(&probe) >= 4 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            assert!(Arc::strong_count(&probe) >= 4, "waiter never enqueued");
+            drop(guard);
+            assert!(waiter.join().unwrap(), "waiter must fall back, not hang");
+        });
+    }
+
+    #[test]
+    fn waiter_times_out_against_stuck_leader() {
+        let rc = cache(true);
+        let r = req(0, 5, vec![9]);
+        let _guard = match rc.begin(&r, Duration::from_secs(1)) {
+            Begin::Leader(g) => g,
+            _ => panic!("must lead"),
+        };
+        // same key, tiny budget: the leader never completes in time
+        let t0 = Instant::now();
+        let w = req(1, 5, vec![9]);
+        assert!(matches!(rc.begin(&w, Duration::from_millis(20)), Begin::Fallback));
+        assert!(t0.elapsed() < Duration::from_secs(1), "timed wait overshot");
+    }
+}

@@ -36,6 +36,27 @@
 //! the policies under the paper's non-uniform candidate mix using the
 //! artifact-free `cluster::SimReplica` backend.
 //!
+//! ## Result cache tier
+//!
+//! The PDA never fetches the same feature bytes twice; the analogous
+//! cluster-tier waste is re-*scoring* an identical (user, candidate
+//! set) that a replica just answered — the paper's non-uniform upstream
+//! re-issues near-identical candidate sets within seconds. The router
+//! therefore fronts placement/admission with a request-level result
+//! cache ([`cluster::ResultCache`]): responses are cached under a short
+//! TTL, keyed on the canonicalized (sorted) candidate ids plus user and
+//! history, so a permuted duplicate still hits and has its score rows
+//! remapped to its own candidate order. Concurrent identical misses are
+//! **single-flight coalesced**: the first becomes the leader and
+//! computes, duplicates wait (bounded by their deadline budget) and
+//! share the result, and a failed leader wakes them to fall back to
+//! their own dispatch. Hits and coalesced requests never touch a
+//! replica; `result_hits` / `result_misses` / `result_coalesced` flow
+//! through the [`metrics::Recorder`], `ClusterSnapshot`, the `flame
+//! cluster` CLI report (`--result-cache-cap`, `--result-ttl-ms`,
+//! `--no-coalesce`, `--dup-rate`), and the `bench_cluster` ablation
+//! (off / cache / cache+single-flight under duplicate-burst traffic).
+//!
 //! ## Quick start
 //!
 //! ```no_run

@@ -236,9 +236,17 @@ fn cmd_bind(args: &Args) -> Result<()> {
     }
 }
 
-/// Cluster knobs from flags (defaults: affinity policy, 50 ms deadline).
+/// Cluster knobs from flags (defaults: affinity policy, 50 ms deadline,
+/// result cache on at 32k entries / 2 s TTL — `--result-cache-cap 0`
+/// turns the tier off, `--no-coalesce` disables single-flight).
 fn cluster_config(args: &Args) -> Result<ClusterConfig> {
-    let mut c = ClusterConfig::default();
+    let mut c = ClusterConfig {
+        result_cache: flame::cluster::ResultCacheConfig {
+            capacity: args.get_parse::<usize>("result-cache-cap")?.unwrap_or(32_768),
+            ..Default::default()
+        },
+        ..ClusterConfig::default()
+    };
     if let Some(p) = args.get("policy") {
         c.policy = RoutePolicy::parse(p)?;
     }
@@ -247,6 +255,12 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     }
     if let Some(s) = args.get_parse::<usize>("slots")? {
         c.slots_per_replica = s;
+    }
+    if let Some(t) = args.get_parse::<u64>("result-ttl-ms")? {
+        c.result_cache.ttl_ms = t;
+    }
+    if args.has("no-coalesce") {
+        c.result_cache.coalesce = false;
     }
     Ok(c)
 }
@@ -302,23 +316,27 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     wl.n_users = args.get_parse::<u64>("users")?.unwrap_or(2_000);
     let mut g = Generator::new(&wl, seq_len);
     let requests = g.batch(n_requests);
+    let dup_rate = args.get_parse::<f64>("dup-rate")?.unwrap_or(0.0);
 
     let router = Arc::new(ClusterRouter::new(backends, ccfg)?);
     eprintln!(
-        "[flame] cluster: {n} replicas, policy {}, deadline {} ms — driving {} requests ...",
+        "[flame] cluster: {n} replicas, policy {}, deadline {} ms, dup rate {:.0}% — driving {} requests ...",
         router.policy().name(),
         router.deadline_us() / 1_000,
+        dup_rate * 100.0,
         requests.len()
     );
 
     let t0 = std::time::Instant::now();
     let report = match args.get_parse::<f64>("rate")? {
-        Some(rate) => {
-            driver::open_loop_cluster(&router, requests, rate, duration, 4_096, wl.seed)
+        Some(rate) => driver::open_loop_cluster(
+            &router, requests, rate, duration, 4_096, wl.seed, dup_rate,
+        ),
+        None => {
+            let mut requests = requests;
+            driver::inject_duplicates(&mut requests, dup_rate, wl.seed);
+            driver::closed_loop(requests, concurrency, duration, |r| router.submit(r).is_ok())
         }
-        None => driver::closed_loop(requests, concurrency, duration, |r| {
-            router.submit(r).is_ok()
-        }),
     };
     print_cluster_report(&router, &report, t0.elapsed().as_secs_f64());
     Ok(())
@@ -345,6 +363,16 @@ fn print_cluster_report(
         "admission      : shed {}  sla misses {}  rerouted {}",
         snap.shed, snap.sla_misses, snap.rerouted
     );
+    let result_lookups = snap.result_hits + snap.result_misses + snap.result_coalesced;
+    if result_lookups > 0 {
+        println!(
+            "result cache   : hits {}  misses {}  coalesced {}  ({:.1} % served without a replica)",
+            snap.result_hits,
+            snap.result_misses,
+            snap.result_coalesced,
+            (snap.result_hits + snap.result_coalesced) as f64 / result_lookups as f64 * 100.0
+        );
+    }
     println!("aggregate cache hit rate: {:.1} %", snap.aggregate_cache_hit_rate * 100.0);
     let mut t = Table::new(
         "per-replica",

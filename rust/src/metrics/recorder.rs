@@ -22,6 +22,14 @@ pub struct Recorder {
     user_item_pairs: AtomicU64,
     network_bytes: AtomicU64,
     dropped: AtomicU64,
+    /// Result-cache tier: requests answered from the cluster router's
+    /// response cache without touching a replica.
+    result_hits: AtomicU64,
+    /// Result-cache tier: requests that had to compute.
+    result_misses: AtomicU64,
+    /// Result-cache tier: requests that rode another request's
+    /// in-flight computation (single-flight coalescing).
+    result_coalesced: AtomicU64,
     started: Instant,
 }
 
@@ -42,6 +50,9 @@ impl Recorder {
             user_item_pairs: AtomicU64::new(0),
             network_bytes: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            result_hits: AtomicU64::new(0),
+            result_misses: AtomicU64::new(0),
+            result_coalesced: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -76,6 +87,30 @@ impl Recorder {
         self.dropped.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_result_hit(&self) {
+        self.result_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_result_miss(&self) {
+        self.result_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_result_coalesced(&self) {
+        self.result_coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn result_hits(&self) -> u64 {
+        self.result_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn result_misses(&self) -> u64 {
+        self.result_misses.load(Ordering::Relaxed)
+    }
+
+    pub fn result_coalesced(&self) -> u64 {
+        self.result_coalesced.load(Ordering::Relaxed)
+    }
+
     pub fn requests(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
@@ -102,6 +137,9 @@ impl Recorder {
         self.user_item_pairs.store(0, Ordering::Relaxed);
         self.network_bytes.store(0, Ordering::Relaxed);
         self.dropped.store(0, Ordering::Relaxed);
+        self.result_hits.store(0, Ordering::Relaxed);
+        self.result_misses.store(0, Ordering::Relaxed);
+        self.result_coalesced.store(0, Ordering::Relaxed);
         self.started = Instant::now();
     }
 
@@ -122,6 +160,9 @@ impl Recorder {
             queueing_mean_ms: self.queueing.mean() / 1e3,
             network_mb_per_s: self.network_bytes() as f64 / 1e6 / elapsed_s.max(1e-9),
             dropped: self.dropped(),
+            result_hits: self.result_hits(),
+            result_misses: self.result_misses(),
+            result_coalesced: self.result_coalesced(),
         }
     }
 
@@ -148,6 +189,10 @@ pub struct MetricsSnapshot {
     pub queueing_mean_ms: f64,
     pub network_mb_per_s: f64,
     pub dropped: u64,
+    /// Cluster result-cache tier (0 outside a router context).
+    pub result_hits: u64,
+    pub result_misses: u64,
+    pub result_coalesced: u64,
 }
 
 impl MetricsSnapshot {
@@ -202,12 +247,27 @@ mod tests {
         r.record_request(100, 10);
         r.record_network_bytes(1000);
         r.record_dropped();
+        r.record_result_hit();
+        r.record_result_miss();
+        r.record_result_coalesced();
         r.reset();
         let s = r.snapshot_over(1.0);
         assert_eq!(s.requests, 0);
         assert_eq!(s.pairs, 0);
         assert_eq!(s.dropped, 0);
         assert_eq!(r.network_bytes(), 0);
+        assert_eq!((s.result_hits, s.result_misses, s.result_coalesced), (0, 0, 0));
+    }
+
+    #[test]
+    fn result_tier_counters_surface_in_snapshot() {
+        let r = Recorder::new();
+        r.record_result_hit();
+        r.record_result_hit();
+        r.record_result_miss();
+        r.record_result_coalesced();
+        let s = r.snapshot_over(1.0);
+        assert_eq!((s.result_hits, s.result_misses, s.result_coalesced), (2, 1, 1));
     }
 
     #[test]

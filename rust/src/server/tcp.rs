@@ -134,7 +134,10 @@ impl TcpServer {
 
     /// Bind and serve a [`ClusterRouter`] on `addr` — the same wire
     /// protocol, but requests are placed across the router's replicas
-    /// (admission shedding surfaces as status 1 frames).
+    /// (admission shedding surfaces as status 1 frames). The router's
+    /// result-cache tier, when enabled, is shared across every
+    /// connection: identical requests from different upstream proxies
+    /// hit one cache and coalesce onto one in-flight computation.
     pub fn start_cluster(router: Arc<ClusterRouter>, addr: &str) -> Result<TcpServer> {
         Self::start_frontend(Frontend::Cluster(router), addr)
     }

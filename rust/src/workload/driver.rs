@@ -128,19 +128,51 @@ where
     }
 }
 
+/// Duplicate-burst window: a re-issued request copies one of this many
+/// immediately preceding requests — "the upstream retriever re-sent a
+/// near-identical candidate set seconds later", which is the traffic
+/// shape the router's result cache and single-flight coalescing target.
+pub const DUP_WINDOW: usize = 64;
+
+/// Rewrite a request stream so that, with probability `dup_rate`, a
+/// request is an exact duplicate (fresh `request_id`, same user /
+/// history / candidates) of one of the previous [`DUP_WINDOW`]
+/// requests. `dup_rate <= 0` leaves the stream untouched; the rewrite
+/// is deterministic in `seed`.
+pub fn inject_duplicates(requests: &mut [Request], dup_rate: f64, seed: u64) {
+    if dup_rate <= 0.0 || requests.len() < 2 {
+        return;
+    }
+    let mut rng = Rng::new(seed ^ 0xD0_D0_CA_CA);
+    for i in 1..requests.len() {
+        if rng.next_f64() < dup_rate {
+            let lo = i.saturating_sub(DUP_WINDOW);
+            let j = lo + (rng.next_u64() as usize) % (i - lo);
+            let id = requests[i].request_id;
+            let mut dup = requests[j].clone();
+            dup.request_id = id;
+            requests[i] = dup;
+        }
+    }
+}
+
 /// Open-loop driver over the cluster tier: Poisson arrivals at `lambda`
 /// req/s submitted through the router, which applies its own
 /// deadline-aware admission (shed requests count as rejections in the
 /// report; see `router.admission` for the shed/SLA-miss split). Each
 /// submitted request's budget is the router's default deadline.
+/// `dup_rate` injects duplicate bursts into the stream (see
+/// [`inject_duplicates`]); pass 0.0 for the untouched workload.
 pub fn open_loop_cluster(
     router: &ClusterRouter,
-    requests: Vec<Request>,
+    mut requests: Vec<Request>,
     lambda: f64,
     duration: Duration,
     max_in_flight: usize,
     seed: u64,
+    dup_rate: f64,
 ) -> DriveReport {
+    inject_duplicates(&mut requests, dup_rate, seed);
     open_loop(requests, lambda, duration, max_in_flight, seed, |r| router.submit(r).is_ok())
 }
 
@@ -213,9 +245,103 @@ mod tests {
             Duration::from_millis(200),
             256,
             3,
+            0.0,
         );
         assert!(r.completed > 0, "{r:?}");
         assert_eq!(r.completed, router.metrics.requests());
+    }
+
+    #[test]
+    fn inject_duplicates_rewrites_roughly_at_rate() {
+        let mut reqs: Vec<Request> = (0..2_000)
+            .map(|i| Request {
+                request_id: i as u64,
+                user_id: i as u64,
+                history: vec![i as u64],
+                candidates: vec![i as u64, i as u64 + 1],
+            })
+            .collect();
+        let originals = reqs.clone();
+        inject_duplicates(&mut reqs, 0.3, 11);
+        let mut dup_count = 0usize;
+        for (i, r) in reqs.iter().enumerate() {
+            // ids are untouched either way
+            assert_eq!(r.request_id, originals[i].request_id);
+            if r.user_id != originals[i].user_id {
+                dup_count += 1;
+                // a rewritten request is an exact copy of an earlier
+                // original, fresh id aside (chains of duplicates may
+                // reach past one window, but never forward)
+                let j = r.user_id as usize;
+                assert!(j < i, "dup at {i} copied {j}");
+                assert_eq!(r.candidates, originals[j].candidates);
+                assert_eq!(r.history, originals[j].history);
+            }
+        }
+        // Binomial(1999, 0.3) ≈ 600 ± 21 — wide margins, no flake
+        assert!(
+            (450..750).contains(&dup_count),
+            "expected ~600 rewrites at 30%, saw {dup_count}"
+        );
+    }
+
+    #[test]
+    fn open_loop_cluster_dup_rate_feeds_result_cache() {
+        use crate::cluster::{
+            ClusterConfig, ClusterRouter, ReplicaBackend, ResultCacheConfig, SimConfig,
+            SimReplica,
+        };
+        let backends: Vec<Arc<dyn ReplicaBackend>> = (0..2)
+            .map(|_| {
+                Arc::new(SimReplica::new(SimConfig {
+                    base_us: 0,
+                    per_pair_ns: 0,
+                    miss_penalty_us: 0,
+                    ..SimConfig::default()
+                })) as Arc<dyn ReplicaBackend>
+            })
+            .collect();
+        let cfg = ClusterConfig {
+            result_cache: ResultCacheConfig {
+                capacity: 4_096,
+                ttl_ms: 60_000,
+                ..ResultCacheConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        let router = ClusterRouter::new(backends, cfg).unwrap();
+        // distinct users so only injected duplicates can repeat a key
+        let requests: Vec<Request> = (0..400)
+            .map(|i| Request {
+                request_id: i,
+                user_id: i,
+                history: vec![i],
+                candidates: vec![i, i + 1],
+            })
+            .collect();
+        let r = open_loop_cluster(
+            &router,
+            requests,
+            20_000.0,
+            Duration::from_secs(5),
+            1_024,
+            7,
+            0.5,
+        );
+        assert!(r.completed > 0, "{r:?}");
+        let snap = router.snapshot();
+        assert!(
+            snap.result_hits + snap.result_coalesced > 0,
+            "a 50% duplicate stream must produce result-tier hits, got {snap:?}"
+        );
+    }
+
+    #[test]
+    fn inject_duplicates_zero_rate_is_identity() {
+        let mut reqs = reqs(50);
+        let before = reqs.clone();
+        inject_duplicates(&mut reqs, 0.0, 1);
+        assert_eq!(reqs, before);
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Cluster result-cache tier integration: property-style score fidelity
+//! (a cache hit is bit-identical to recomputation, including candidate
+//! order remapping), single-flight coalescing (N concurrent duplicates
+//! → exactly 1 backend serve), TTL expiry, and the disabled-tier
+//! baseline. No artifacts required.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use flame::cluster::{
+    ClusterConfig, ClusterRouter, ReplicaBackend, ResultCacheConfig,
+};
+use flame::error::Result;
+use flame::server::pipeline::Response;
+use flame::util::rng::{splitmix64, Rng};
+use flame::workload::Request;
+
+const N_TASKS: usize = 3;
+
+/// Deterministic per-(user, candidate, task) score — what a fixed model
+/// would produce, so "score-identical to recomputation" is exact.
+fn score(user: u64, candidate: u64, task: usize) -> f32 {
+    let mut s = user ^ candidate.rotate_left(17) ^ ((task as u64) << 49);
+    (splitmix64(&mut s) % 10_000) as f32 / 10_000.0
+}
+
+/// Backend that scores deterministically and counts its serve calls.
+struct ScoringBackend {
+    serves: AtomicU64,
+    delay: Duration,
+}
+
+impl ScoringBackend {
+    fn new(delay: Duration) -> Self {
+        ScoringBackend { serves: AtomicU64::new(0), delay }
+    }
+
+    fn serves(&self) -> u64 {
+        self.serves.load(Ordering::Relaxed)
+    }
+}
+
+impl ReplicaBackend for ScoringBackend {
+    fn serve(&self, req: &Request) -> Result<Response> {
+        self.serves.fetch_add(1, Ordering::Relaxed);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let mut scores = Vec::with_capacity(req.m() * N_TASKS);
+        for &c in &req.candidates {
+            for t in 0..N_TASKS {
+                scores.push(score(req.user_id, c, t));
+            }
+        }
+        Ok(Response {
+            request_id: req.request_id,
+            scores,
+            m: req.m(),
+            overall_us: 1,
+            compute_us: 1,
+            feature_us: 0,
+            queue_us: 0,
+        })
+    }
+}
+
+fn router_with(
+    backends: Vec<Arc<ScoringBackend>>,
+    coalesce: bool,
+    ttl_ms: u64,
+) -> ClusterRouter {
+    let b: Vec<Arc<dyn ReplicaBackend>> =
+        backends.into_iter().map(|x| x as Arc<dyn ReplicaBackend>).collect();
+    ClusterRouter::new(
+        b,
+        ClusterConfig {
+            deadline_ms: 10_000,
+            result_cache: ResultCacheConfig {
+                capacity: 4_096,
+                ttl_ms,
+                coalesce,
+                ..ResultCacheConfig::default()
+            },
+            ..ClusterConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn shuffle(v: &mut [u64], rng: &mut Rng) {
+    for i in (1..v.len()).rev() {
+        let j = (rng.next_u64() as usize) % (i + 1);
+        v.swap(i, j);
+    }
+}
+
+/// Property: for random (user, candidate-set) requests, a result-cache
+/// hit — including one whose candidate order is a permutation of the
+/// cached layout — returns exactly the scores a fresh computation
+/// would, row-mapped to the requester's order.
+#[test]
+fn cache_hits_are_score_identical_to_recomputation() {
+    let backend = Arc::new(ScoringBackend::new(Duration::ZERO));
+    let reference = ScoringBackend::new(Duration::ZERO);
+    let router = router_with(vec![Arc::clone(&backend)], true, 60_000);
+    let mut rng = Rng::new(0xFEED);
+    for i in 0..300u64 {
+        let user = rng.next_u64() % 40;
+        let m = 2 + (rng.next_u64() % 6) as usize;
+        let mut candidates: Vec<u64> = (0..m).map(|_| 1 + rng.next_u64() % 500).collect();
+        let history = vec![user, user ^ 7];
+        let first = Request {
+            request_id: i * 2,
+            user_id: user,
+            history: history.clone(),
+            candidates: candidates.clone(),
+        };
+        router.submit(&first).unwrap();
+        // permute the candidate order: same multiset, different layout
+        shuffle(&mut candidates, &mut rng);
+        let dup = Request { request_id: i * 2 + 1, user_id: user, history, candidates };
+        let served = router.submit(&dup).unwrap();
+        let recomputed = reference.serve(&dup).unwrap();
+        assert_eq!(
+            served.scores, recomputed.scores,
+            "iteration {i}: cache hit diverged from recomputation"
+        );
+        assert_eq!(served.request_id, dup.request_id);
+        assert_eq!(served.m, dup.m());
+    }
+    let snap = router.snapshot();
+    assert!(
+        snap.result_hits >= 300,
+        "every permuted duplicate must hit the result tier, got {}",
+        snap.result_hits
+    );
+    assert_eq!(
+        backend.serves() + snap.result_hits + snap.result_coalesced,
+        600,
+        "every submission either computed once or rode the cache"
+    );
+}
+
+/// N concurrent identical submissions produce exactly 1 backend serve:
+/// the first becomes the single-flight leader, the rest coalesce onto
+/// its computation (or hit the cache if they arrive after it lands).
+#[test]
+fn concurrent_duplicates_coalesce_to_one_backend_serve() {
+    const THREADS: u64 = 8;
+    let backend = Arc::new(ScoringBackend::new(Duration::from_millis(100)));
+    let router = Arc::new(router_with(vec![Arc::clone(&backend)], true, 60_000));
+    let barrier = Arc::new(std::sync::Barrier::new(THREADS as usize));
+    let responses: Vec<Response> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|i| {
+                let router = Arc::clone(&router);
+                let barrier = Arc::clone(&barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    let req = Request {
+                        request_id: i,
+                        user_id: 5,
+                        history: vec![5, 6],
+                        candidates: vec![10, 20, 30],
+                    };
+                    router.submit(&req).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(
+        backend.serves(),
+        1,
+        "{THREADS} concurrent duplicates must fan in to exactly 1 backend serve"
+    );
+    let snap = router.snapshot();
+    assert_eq!(snap.result_misses, 1, "exactly one leader");
+    assert_eq!(snap.result_hits + snap.result_coalesced, THREADS - 1);
+    assert!(snap.result_coalesced >= 1, "at least one request must have coalesced");
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.request_id, i as u64, "each requester keeps its own id");
+        assert_eq!(r.scores, responses[0].scores, "coalesced scores must match the leader's");
+    }
+    assert_eq!(router.metrics.requests(), THREADS, "all completions count in router throughput");
+}
+
+/// An expired result recomputes instead of serving stale scores.
+#[test]
+fn expired_results_recompute() {
+    let backend = Arc::new(ScoringBackend::new(Duration::ZERO));
+    let router = router_with(vec![Arc::clone(&backend)], true, 20);
+    let req = |id| Request { request_id: id, user_id: 1, history: vec![1], candidates: vec![4, 2] };
+    router.submit(&req(0)).unwrap();
+    std::thread::sleep(Duration::from_millis(60));
+    router.submit(&req(1)).unwrap();
+    assert_eq!(backend.serves(), 2, "expired entry must recompute");
+    let snap = router.snapshot();
+    assert_eq!(snap.result_hits, 0);
+    assert_eq!(snap.result_misses, 2);
+}
+
+/// `capacity == 0` disables the tier entirely: every submission reaches
+/// a replica and the counters stay zero.
+#[test]
+fn disabled_tier_reaches_backend_every_time() {
+    let backend = Arc::new(ScoringBackend::new(Duration::ZERO));
+    let router = ClusterRouter::new(
+        vec![Arc::clone(&backend) as Arc<dyn ReplicaBackend>],
+        ClusterConfig::default(),
+    )
+    .unwrap();
+    assert!(router.result_cache().is_none());
+    for i in 0..5 {
+        let req = Request { request_id: i, user_id: 9, history: vec![9], candidates: vec![1, 2] };
+        router.submit(&req).unwrap();
+    }
+    assert_eq!(backend.serves(), 5);
+    let snap = router.snapshot();
+    assert_eq!((snap.result_hits, snap.result_misses, snap.result_coalesced), (0, 0, 0));
+}
