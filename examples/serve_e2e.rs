@@ -19,6 +19,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 use flame::config::{CacheMode, StackConfig, WorkloadConfig};
+use flame::dso::ComputeBackend;
 use flame::manifest::Manifest;
 use flame::runtime::Runtime;
 use flame::server::pipeline::StackBuilder;
@@ -97,7 +98,7 @@ fn main() -> Result<()> {
     println!("cache hit rate  : {:.1} % (fresh {:.1} %)", stack.query.cache().stats.hit_rate() * 100.0, stack.query.cache().stats.fresh_hit_rate() * 100.0);
     println!("dso waste       : {:.1} % padded rows", stack.orchestrator.waste_fraction() * 100.0);
     for &m in &profiles {
-        if let Some(e) = stack.orchestrator.engine(m) {
+        if let Some(e) = stack.orchestrator.backend(m).and_then(|b| b.as_engine()) {
             println!(
                 "engine m{:<5}: {} execs, mean compute {:.2} ms, upload {:.3} ms",
                 m,

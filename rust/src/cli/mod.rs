@@ -21,6 +21,7 @@ const VALUE_FLAGS: &[&str] = &[
     "workers", "cache", "dso", "config", "bind", "trace", "seed", "concurrency",
     "executors", "theta", "catalog", "replicas", "policy", "deadline-ms",
     "slots", "users", "result-cache-cap", "result-ttl-ms", "dup-rate",
+    "coalesce-wait-us", "m-dist",
 ];
 
 impl Args {
@@ -115,6 +116,12 @@ COMMON FLAGS:
   --variant NAME      naive | api | fused          (default: fused)
   --cache MODE        off | async | sync           (default: async)
   --dso MODE          explicit | implicit          (default: explicit)
+  --coalesce          pack concurrent requests' remainder rows into
+                      shared engine launches (DSO batch coalescer)
+  --coalesce-wait-us T  max µs a partial coalesce batch waits before
+                      flushing                     (default: 200)
+  --m-dist D          candidate-count distribution over the profile
+                      support: uniform | bimodal | zipf
   --workers N         pipeline worker threads      (default: 4)
   --executors N       executors per profile        (default: 1)
   --requests N        request count                (default: 64)
@@ -189,6 +196,21 @@ mod tests {
         assert_eq!(a.get_parse::<usize>("replicas").unwrap(), Some(4));
         assert_eq!(a.get("policy"), Some("affinity"));
         assert_eq!(a.get_parse::<u64>("deadline-ms").unwrap(), Some(20));
+    }
+
+    #[test]
+    fn coalesce_flags_parse() {
+        let a = parse(&["serve", "--coalesce", "--coalesce-wait-us", "500", "--m-dist", "zipf"]);
+        assert!(a.has("coalesce"));
+        assert_eq!(a.get_parse::<u64>("coalesce-wait-us").unwrap(), Some(500));
+        assert_eq!(a.get("m-dist"), Some("zipf"));
+    }
+
+    #[test]
+    fn help_mentions_coalescer() {
+        let h = help();
+        assert!(h.contains("--coalesce"));
+        assert!(h.contains("--m-dist"));
     }
 
     #[test]

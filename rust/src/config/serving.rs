@@ -109,11 +109,24 @@ pub struct DsoConfig {
     pub executors_per_profile: usize,
     /// Queue capacity before admission control sheds load.
     pub queue_capacity: usize,
+    /// Cross-request batch coalescing: a request's tail remainder fills
+    /// with real rows from other concurrent requests' remainders instead
+    /// of padding, sharing one engine launch.
+    pub coalesce: bool,
+    /// Upper bound (µs) a partially-filled coalesce batch waits for more
+    /// rows before it is flushed — the added-latency bound per request.
+    pub coalesce_wait_us: u64,
 }
 
 impl Default for DsoConfig {
     fn default() -> Self {
-        DsoConfig { mode: DsoMode::Explicit, executors_per_profile: 1, queue_capacity: 1024 }
+        DsoConfig {
+            mode: DsoMode::Explicit,
+            executors_per_profile: 1,
+            queue_capacity: 1024,
+            coalesce: false,
+            coalesce_wait_us: 200,
+        }
     }
 }
 
@@ -218,6 +231,12 @@ impl StackConfig {
             if let Some(v) = d.opt("queue_capacity") {
                 c.dso.queue_capacity = v.as_usize()?;
             }
+            if let Some(v) = d.opt("coalesce") {
+                c.dso.coalesce = v.as_bool()?;
+            }
+            if let Some(v) = d.opt("coalesce_wait_us") {
+                c.dso.coalesce_wait_us = v.as_u64()?;
+            }
         }
         if let Some(s) = j.opt("server") {
             if let Some(v) = s.opt("pipeline_workers") {
@@ -279,6 +298,8 @@ mod tests {
         assert_eq!(c.pda.cache_mode, CacheMode::Async);
         assert!(c.pda.numa_binding);
         assert_eq!(c.dso.mode, DsoMode::Explicit);
+        assert!(!c.dso.coalesce, "coalescing is opt-in");
+        assert!(c.dso.coalesce_wait_us < 50_000, "wait bound within the paper envelope");
         assert_eq!(c.server.deadline_ms, 50); // paper envelope
     }
 
@@ -296,7 +317,8 @@ mod tests {
         let j = parse(
             r#"{
             "pda": {"cache_mode": "sync", "cache_capacity": 10, "numa_binding": false},
-            "dso": {"mode": "implicit", "executors_per_profile": 3},
+            "dso": {"mode": "implicit", "executors_per_profile": 3,
+                    "coalesce": true, "coalesce_wait_us": 500},
             "server": {"pipeline_workers": 8, "bind_addr": "127.0.0.1:7070"},
             "workload": {"zipf_theta": 0.8, "candidate_mix": [[128, 1.0], [256, 1.0]]}
         }"#,
@@ -308,6 +330,8 @@ mod tests {
         assert!(!c.pda.numa_binding);
         assert_eq!(c.dso.mode, DsoMode::ImplicitPad);
         assert_eq!(c.dso.executors_per_profile, 3);
+        assert!(c.dso.coalesce);
+        assert_eq!(c.dso.coalesce_wait_us, 500);
         assert_eq!(c.server.pipeline_workers, 8);
         assert_eq!(c.server.bind_addr.as_deref(), Some("127.0.0.1:7070"));
         assert_eq!(c.workload.candidate_mix, vec![(128, 1.0), (256, 1.0)]);

@@ -1,0 +1,378 @@
+//! Compute backends for the DSO executor pools.
+//!
+//! The orchestrator's unit of execution is a *packed batch*: one
+//! profile-shaped `[M, D]` candidate tensor whose rows may come from
+//! several concurrent requests (the batch coalescer's doing). Each
+//! contiguous row segment binds its originating request's history, so
+//! the engine interface is row-segmented: [`ComputeBackend::run_segmented`]
+//! takes the candidate tensor plus an ordered list of (history, row
+//! count) bindings.
+//!
+//! Two backends implement it:
+//!
+//! * [`crate::runtime::Engine`] — the compiled PJRT executable. Its HLO
+//!   graph binds **one** history tensor per launch, so a mixed batch is
+//!   emulated by replaying the launch once per distinct history and
+//!   gathering each segment's rows. That preserves exact per-request
+//!   scores but not the launch savings; compiling a natively segmented
+//!   profile (per-row history indexing in the kernel) is the ROADMAP
+//!   follow-up. Single-segment batches — every launch today — take the
+//!   one-launch fast path unchanged.
+//! * [`SimEngine`] — an artifact-free deterministic CPU backend with
+//!   native per-segment history binding. Scores are a pure per-row
+//!   function of (history summary, candidate row), evaluated in a fixed
+//!   operation order, so any packing of the same rows produces
+//!   bit-identical results — exactly the property the coalescer's score
+//!   identity tests need. Tests and benches use it where artifacts /
+//!   PJRT are unavailable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::runtime::{Engine, HistBuffer};
+
+/// A backend-owned handle to an uploaded history tensor, shareable
+/// across the chunk executions of one request.
+pub enum HistHandle {
+    /// Device-resident `[L, D]` history (PJRT engine).
+    Device(HistBuffer),
+    /// Host-side per-dimension history summary (`SimEngine`): column
+    /// means over the `L` axis, length `D`.
+    Host(Vec<f32>),
+}
+
+/// One row segment of a packed batch: `rows` consecutive candidate rows
+/// scored against `hist`.
+pub struct SegmentBind<'a> {
+    pub hist: &'a HistHandle,
+    pub rows: usize,
+}
+
+/// What an executor thread drives: a fixed-(M, D) scoring engine with
+/// row-segmented history binding.
+pub trait ComputeBackend: Send + Sync {
+    /// Fixed candidate-row count (the profile size).
+    fn m(&self) -> usize;
+    fn n_tasks(&self) -> usize;
+    fn d_model(&self) -> usize;
+    /// Expected history length in f32 elements (`L * D`).
+    fn hist_len(&self) -> usize;
+    /// Upload / preprocess a history tensor once for reuse across
+    /// launches.
+    fn upload_hist(&self, hist: &[f32]) -> Result<HistHandle>;
+    /// Execute one launch over `cands` `[M * D]`; `segments` partitions
+    /// the M rows in order (their `rows` must sum to M), each bound to
+    /// its own history. Returns `[M * n_tasks]` scores.
+    fn run_segmented(&self, segments: &[SegmentBind<'_>], cands: &[f32]) -> Result<Vec<f32>>;
+    /// Human-readable identity for error messages.
+    fn label(&self) -> String;
+    /// Rows this backend actually computes to serve one packed batch of
+    /// `segments` segments. Natively segmented backends compute M rows
+    /// in one launch; the PJRT emulation replays the launch per
+    /// segment, so its real cost is `M * segments` — waste accounting
+    /// must reflect that, not the orchestration-level ideal.
+    fn executed_rows_for(&self, segments: usize) -> usize {
+        let _ = segments;
+        self.m()
+    }
+    /// Downcast for PJRT-engine-specific telemetry (`EngineStats`).
+    fn as_engine(&self) -> Option<&Engine> {
+        None
+    }
+}
+
+fn check_segments(
+    label: &str,
+    segments: &[SegmentBind<'_>],
+    cands_len: usize,
+    m: usize,
+    d: usize,
+) -> Result<()> {
+    if cands_len != m * d {
+        return Err(Error::Internal(format!(
+            "{label}: cands length {cands_len} != m {m} * d {d}"
+        )));
+    }
+    let rows: usize = segments.iter().map(|s| s.rows).sum();
+    if segments.is_empty() || rows != m {
+        return Err(Error::Internal(format!(
+            "{label}: segment rows {rows} (over {} segments) != m {m}",
+            segments.len()
+        )));
+    }
+    Ok(())
+}
+
+impl ComputeBackend for Engine {
+    fn m(&self) -> usize {
+        Engine::m(self)
+    }
+
+    fn n_tasks(&self) -> usize {
+        self.config.n_tasks
+    }
+
+    fn d_model(&self) -> usize {
+        self.config.d_model
+    }
+
+    fn hist_len(&self) -> usize {
+        Engine::hist_len(self)
+    }
+
+    fn upload_hist(&self, hist: &[f32]) -> Result<HistHandle> {
+        Ok(HistHandle::Device(Engine::upload_hist(self, hist)?))
+    }
+
+    fn run_segmented(&self, segments: &[SegmentBind<'_>], cands: &[f32]) -> Result<Vec<f32>> {
+        let (m, d, nt) = (Engine::m(self), self.config.d_model, self.config.n_tasks);
+        check_segments(&self.key.label(), segments, cands.len(), m, d)?;
+        let device = |h: &HistHandle| -> Result<&HistBuffer> {
+            match h {
+                HistHandle::Device(buf) => Ok(buf),
+                HistHandle::Host(_) => Err(Error::Internal(format!(
+                    "{}: host hist handle passed to the PJRT engine",
+                    self.key.label()
+                ))),
+            }
+        };
+        if segments.len() == 1 {
+            return self.run_with_hist(device(segments[0].hist)?, cands);
+        }
+        // Mixed-history emulation: the compiled graph binds one history
+        // per launch, so replay it per segment and gather that segment's
+        // rows. Scores are exact; the launch savings need a natively
+        // segmented artifact (ROADMAP).
+        let mut out = vec![0.0f32; m * nt];
+        let mut off = 0usize;
+        for seg in segments {
+            let scores = self.run_with_hist(device(seg.hist)?, cands)?;
+            out[off * nt..(off + seg.rows) * nt]
+                .copy_from_slice(&scores[off * nt..(off + seg.rows) * nt]);
+            off += seg.rows;
+        }
+        Ok(out)
+    }
+
+    fn label(&self) -> String {
+        self.key.label()
+    }
+
+    fn executed_rows_for(&self, segments: usize) -> usize {
+        Engine::m(self) * segments.max(1)
+    }
+
+    fn as_engine(&self) -> Option<&Engine> {
+        Some(self)
+    }
+}
+
+/// Artifact-free deterministic scoring backend (see module docs).
+pub struct SimEngine {
+    m: usize,
+    seq_len: usize,
+    d_model: usize,
+    n_tasks: usize,
+    /// Synthetic per-launch compute time (tests inject queue pressure
+    /// and latency structure with it).
+    compute_delay: Duration,
+    /// Launches executed (tests assert launch savings with it).
+    pub launches: AtomicU64,
+}
+
+impl SimEngine {
+    pub fn new(m: usize, seq_len: usize, d_model: usize, n_tasks: usize) -> Self {
+        SimEngine {
+            m,
+            seq_len,
+            d_model,
+            n_tasks,
+            compute_delay: Duration::ZERO,
+            launches: AtomicU64::new(0),
+        }
+    }
+
+    /// Builder: sleep this long per launch (simulated model compute).
+    pub fn with_delay(mut self, delay: Duration) -> Self {
+        self.compute_delay = delay;
+        self
+    }
+
+    pub fn launches(&self) -> u64 {
+        self.launches.load(Ordering::Relaxed)
+    }
+
+    /// Fixed pseudo-weight for (task, dim) — any deterministic non-flat
+    /// pattern works; the backend exists for packing-identity, not
+    /// model fidelity.
+    #[inline]
+    fn weight(task: usize, k: usize) -> f32 {
+        ((task * 31 + k * 17) % 13) as f32 / 13.0 - 0.5
+    }
+}
+
+impl ComputeBackend for SimEngine {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n_tasks(&self) -> usize {
+        self.n_tasks
+    }
+
+    fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    fn hist_len(&self) -> usize {
+        self.seq_len * self.d_model
+    }
+
+    fn upload_hist(&self, hist: &[f32]) -> Result<HistHandle> {
+        if hist.len() != self.hist_len() {
+            return Err(Error::Internal(format!(
+                "{}: hist length {} != expected {}",
+                self.label(),
+                hist.len(),
+                self.hist_len()
+            )));
+        }
+        // Column means over the L axis — the "device upload" analogue,
+        // done once and reused across launches. Fixed accumulation
+        // order keeps it bit-deterministic.
+        let d = self.d_model;
+        let mut summary = vec![0.0f32; d];
+        for row in hist.chunks_exact(d) {
+            for (s, &v) in summary.iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+        let inv_l = 1.0 / self.seq_len as f32;
+        for s in &mut summary {
+            *s *= inv_l;
+        }
+        Ok(HistHandle::Host(summary))
+    }
+
+    fn run_segmented(&self, segments: &[SegmentBind<'_>], cands: &[f32]) -> Result<Vec<f32>> {
+        let (m, d, nt) = (self.m, self.d_model, self.n_tasks);
+        check_segments(&self.label(), segments, cands.len(), m, d)?;
+        if !self.compute_delay.is_zero() {
+            std::thread::sleep(self.compute_delay);
+        }
+        let mut out = Vec::with_capacity(m * nt);
+        let mut row = 0usize;
+        for seg in segments {
+            let summary = match seg.hist {
+                HistHandle::Host(s) if s.len() == d => s,
+                HistHandle::Host(s) => {
+                    return Err(Error::Internal(format!(
+                        "{}: hist summary length {} != d {d}",
+                        self.label(),
+                        s.len()
+                    )))
+                }
+                HistHandle::Device(_) => {
+                    return Err(Error::Internal(format!(
+                        "{}: device hist handle passed to the sim engine",
+                        self.label()
+                    )))
+                }
+            };
+            for r in row..row + seg.rows {
+                let cand = &cands[r * d..(r + 1) * d];
+                for t in 0..nt {
+                    let mut z = 0.0f32;
+                    for k in 0..d {
+                        z += summary[k] * cand[k] * Self::weight(t, k);
+                    }
+                    out.push(1.0 / (1.0 + (-z).exp()));
+                }
+            }
+            row += seg.rows;
+        }
+        self.launches.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    fn label(&self) -> String {
+        format!("sim/m{}", self.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist(seq_len: usize, d: usize, salt: u64) -> Vec<f32> {
+        (0..seq_len * d)
+            .map(|i| (((i as u64 + salt) * 31 % 113) as f32 / 113.0) - 0.5)
+            .collect()
+    }
+
+    fn cands(m: usize, d: usize, salt: u64) -> Vec<f32> {
+        (0..m * d)
+            .map(|i| (((i as u64 + salt) * 17 % 127) as f32 / 127.0) - 0.5)
+            .collect()
+    }
+
+    #[test]
+    fn sim_engine_scores_shape_and_range() {
+        let e = SimEngine::new(8, 16, 4, 3);
+        let h = e.upload_hist(&hist(16, 4, 1)).unwrap();
+        let out = e
+            .run_segmented(&[SegmentBind { hist: &h, rows: 8 }], &cands(8, 4, 2))
+            .unwrap();
+        assert_eq!(out.len(), 8 * 3);
+        assert!(out.iter().all(|s| (0.0..=1.0).contains(s)));
+        assert_eq!(e.launches(), 1);
+    }
+
+    #[test]
+    fn sim_engine_packing_is_bit_identical() {
+        // The coalescer's core contract: a row scores the same bits no
+        // matter which batch it rides in or what occupies other rows.
+        let e = SimEngine::new(8, 16, 4, 3);
+        let ha = e.upload_hist(&hist(16, 4, 7)).unwrap();
+        let hb = e.upload_hist(&hist(16, 4, 9)).unwrap();
+        let ca = cands(3, 4, 11); // request A: 3 rows
+        let cb = cands(5, 4, 13); // request B: 5 rows
+
+        // packed: [A(3) | B(5)]
+        let mut packed = ca.clone();
+        packed.extend_from_slice(&cb);
+        let out = e
+            .run_segmented(
+                &[SegmentBind { hist: &ha, rows: 3 }, SegmentBind { hist: &hb, rows: 5 }],
+                &packed,
+            )
+            .unwrap();
+
+        // solo: each request padded with arbitrary rows
+        let mut solo_a = ca.clone();
+        solo_a.extend_from_slice(&cands(5, 4, 99));
+        let sa = e.run_segmented(&[SegmentBind { hist: &ha, rows: 8 }], &solo_a).unwrap();
+        let mut solo_b = cb.clone();
+        solo_b.extend_from_slice(&cands(3, 4, 98));
+        let sb = e.run_segmented(&[SegmentBind { hist: &hb, rows: 8 }], &solo_b).unwrap();
+
+        assert_eq!(&out[..3 * 3], &sa[..3 * 3], "A's rows must be bit-identical");
+        assert_eq!(&out[3 * 3..], &sb[..5 * 3], "B's rows must be bit-identical");
+    }
+
+    #[test]
+    fn sim_engine_rejects_bad_shapes() {
+        let e = SimEngine::new(8, 16, 4, 3);
+        assert!(e.upload_hist(&hist(8, 4, 1)).is_err(), "short hist rejected");
+        let h = e.upload_hist(&hist(16, 4, 1)).unwrap();
+        // segment rows don't cover m
+        assert!(e
+            .run_segmented(&[SegmentBind { hist: &h, rows: 5 }], &cands(8, 4, 2))
+            .is_err());
+        // cands wrong length
+        assert!(e
+            .run_segmented(&[SegmentBind { hist: &h, rows: 8 }], &cands(7, 4, 2))
+            .is_err());
+    }
+}

@@ -1,0 +1,406 @@
+//! Cross-request batch coalescer: per-profile pending-batch slots that
+//! pack candidate-row remainders from *different* concurrent requests
+//! into one engine launch.
+//!
+//! Today a 1-candidate request pads a full profile launch on its own
+//! (127/128 rows wasted at the paper's smallest profile) and every
+//! concurrent small request pays its own launch. The coalescer gives
+//! each profile one open [`PendingBatch`]; a request's tail remainder
+//! copies its real rows into the batch at the current fill offset and
+//! registers a reply segment. The batch is dispatched when it fills, or
+//! when its `coalesce_wait_us` deadline expires (a dedicated flusher
+//! thread watches the earliest deadline), so the added per-request
+//! latency is bounded and the < 50 ms envelope holds. The executor
+//! demuxes each launch's output rows back to the originating requests'
+//! reply channels — every request still receives scores in its own
+//! candidate order (see `orchestrator::executor_loop`).
+//!
+//! Locking: each profile has its own slot mutex, so concurrent
+//! remainder enqueues contend (and pay the row memcpy) only within a
+//! profile — a burst across profiles never serializes on one lock. A
+//! separate signal mutex + condvar parks the flusher; it is taken only
+//! when a fresh batch opens (new earliest deadline) or at shutdown,
+//! never while a slot lock is held, so the two lock orders cannot
+//! deadlock and the wakeup cannot be lost.
+//!
+//! Buffers for packed batches (and for the direct-dispatch path) come
+//! from a [`BufferPool`], killing the per-job `vec![0.0; chunk * d]`
+//! allocation the hot path used to pay.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::metrics::{Histogram, Recorder};
+
+use super::orchestrator::{Job, Segment};
+
+/// Pooled, size-keyed f32 buffers for chunk/batch candidate tensors.
+/// `get` hands out a possibly-dirty buffer of exactly the requested
+/// length — callers overwrite every row (real rows + padding), so no
+/// zeroing pass is paid on reuse.
+pub(crate) struct BufferPool {
+    shelves: Mutex<BTreeMap<usize, Vec<Vec<f32>>>>,
+    max_per_size: usize,
+}
+
+impl BufferPool {
+    pub(crate) fn new(max_per_size: usize) -> Self {
+        BufferPool { shelves: Mutex::new(BTreeMap::new()), max_per_size: max_per_size.max(1) }
+    }
+
+    pub(crate) fn get(&self, len: usize) -> Vec<f32> {
+        if let Some(buf) = self
+            .shelves
+            .lock()
+            .unwrap()
+            .get_mut(&len)
+            .and_then(|shelf| shelf.pop())
+        {
+            return buf;
+        }
+        vec![0.0; len]
+    }
+
+    pub(crate) fn put(&self, buf: Vec<f32>) {
+        if buf.is_empty() {
+            return;
+        }
+        let mut shelves = self.shelves.lock().unwrap();
+        let shelf = shelves.entry(buf.len()).or_default();
+        if shelf.len() < self.max_per_size {
+            shelf.push(buf);
+        }
+    }
+}
+
+/// Fill rows `[fill_rows, total_rows)` of `buf` (row width `d`) by
+/// repeating the last real row — in-distribution padding whose scores
+/// are never returned to anyone. Shared by the direct-dispatch path and
+/// the coalescer so the two can never diverge on what pad rows contain.
+pub(crate) fn pad_with_last_row(buf: &mut [f32], fill_rows: usize, total_rows: usize, d: usize) {
+    debug_assert!(fill_rows > 0 && fill_rows <= total_rows);
+    debug_assert!(buf.len() >= total_rows * d);
+    let (head, tail) = buf.split_at_mut(fill_rows * d);
+    let last = &head[(fill_rows - 1) * d..fill_rows * d];
+    for r in 0..total_rows - fill_rows {
+        tail[r * d..(r + 1) * d].copy_from_slice(last);
+    }
+}
+
+/// One open (not yet dispatched) packed batch for a profile.
+struct PendingBatch {
+    profile: usize,
+    /// `[profile * d]` candidate buffer; rows `[0, fill)` are real.
+    buf: Vec<f32>,
+    segments: Vec<Segment>,
+    fill: usize,
+    deadline: Instant,
+}
+
+/// Counters snapshot for reporting (CLI, benches, tests).
+#[derive(Clone, Debug, Default)]
+pub struct CoalesceStats {
+    /// Packed remainder batches dispatched.
+    pub batches: u64,
+    /// Batches that carried rows from ≥ 2 requests.
+    pub multi_request_batches: u64,
+    /// Real rows that rode a shared (multi-request) launch.
+    pub coalesced_rows: u64,
+    /// Mean fill fraction of dispatched batches, percent.
+    pub occupancy_mean_pct: f64,
+    /// Median fill fraction, percent.
+    pub occupancy_p50_pct: u64,
+}
+
+/// The coalescer proper: per-profile slots + deadline flusher state.
+pub(crate) struct Coalescer {
+    /// One open-batch slot per profile (key set fixed at construction).
+    slots: BTreeMap<usize, Mutex<Option<PendingBatch>>>,
+    /// Flusher parking lot — see module docs for the lock order.
+    signal: Mutex<()>,
+    cv: Condvar,
+    wait: Duration,
+    d: usize,
+    senders: BTreeMap<usize, Sender<Job>>,
+    pool: Arc<BufferPool>,
+    shutdown: AtomicBool,
+    batches: AtomicU64,
+    multi_batches: AtomicU64,
+    coalesced_rows: AtomicU64,
+    occupancy: Histogram,
+    /// The orchestrator's admission counter. Once a segment is accepted
+    /// into a batch, its reserved unit is owned by the job lifecycle:
+    /// released by the executor after the launch, or — if the batch can
+    /// never reach an executor — by [`Coalescer::dispatch`]'s failure
+    /// path, so capacity is never leaked.
+    in_flight: Arc<AtomicUsize>,
+    recorder: Option<Arc<Recorder>>,
+}
+
+impl Coalescer {
+    pub(crate) fn new(
+        wait_us: u64,
+        d: usize,
+        senders: BTreeMap<usize, Sender<Job>>,
+        pool: Arc<BufferPool>,
+        in_flight: Arc<AtomicUsize>,
+        recorder: Option<Arc<Recorder>>,
+    ) -> Self {
+        Coalescer {
+            slots: senders.keys().map(|&m| (m, Mutex::new(None))).collect(),
+            signal: Mutex::new(()),
+            cv: Condvar::new(),
+            wait: Duration::from_micros(wait_us),
+            d,
+            senders,
+            pool,
+            shutdown: AtomicBool::new(false),
+            batches: AtomicU64::new(0),
+            multi_batches: AtomicU64::new(0),
+            coalesced_rows: AtomicU64::new(0),
+            occupancy: Histogram::new(),
+            in_flight,
+            recorder,
+        }
+    }
+
+    /// Add `take` rows (`rows` = `take * d` f32s) of a request's tail
+    /// remainder to `profile`'s open batch, opening one if needed and
+    /// dispatching any batch this fills (or displaces for lack of room).
+    pub(crate) fn enqueue(
+        &self,
+        profile: usize,
+        hist: &Arc<super::backend::HistHandle>,
+        rows: &[f32],
+        take: usize,
+        chunk_index: usize,
+        reply: Sender<Result<super::orchestrator::ChunkDone>>,
+    ) -> Result<()> {
+        debug_assert!(take > 0 && take <= profile);
+        debug_assert_eq!(rows.len(), take * self.d);
+        let slot = self
+            .slots
+            .get(&profile)
+            .ok_or_else(|| Error::UnknownEngine(format!("no coalesce slot for profile {profile}")))?;
+        let mut ready: Vec<PendingBatch> = Vec::new();
+        let mut opened = false;
+        {
+            let mut open = slot.lock().unwrap();
+            // no room left for this remainder: close the open batch out
+            let displace = open.as_ref().is_some_and(|b| profile - b.fill < take);
+            if displace {
+                ready.push(open.take().unwrap());
+            }
+            let filled = {
+                let batch = open.get_or_insert_with(|| {
+                    opened = true;
+                    PendingBatch {
+                        profile,
+                        buf: self.pool.get(profile * self.d),
+                        segments: Vec::new(),
+                        fill: 0,
+                        deadline: Instant::now() + self.wait,
+                    }
+                });
+                batch.buf[batch.fill * self.d..(batch.fill + take) * self.d]
+                    .copy_from_slice(rows);
+                batch.segments.push(Segment {
+                    hist: Arc::clone(hist),
+                    rows: take,
+                    chunk_index,
+                    enqueued: Instant::now(),
+                    reply,
+                });
+                batch.fill += take;
+                batch.fill == profile
+            };
+            if filled {
+                ready.push(open.take().unwrap());
+            }
+        }
+        if opened {
+            // a fresh batch sets a new earliest deadline; notify under
+            // the signal mutex (never while a slot is held) so the
+            // flusher cannot miss it between its scan and its wait
+            let _parked = self.signal.lock().unwrap();
+            self.cv.notify_all();
+        }
+        for batch in ready {
+            self.dispatch(batch);
+        }
+        Ok(())
+    }
+
+    /// Pad, account, and hand a closed batch to its profile's executor
+    /// pool. (Executed/padded row totals are accounted by the executor,
+    /// which knows the backend's real launch cost.)
+    ///
+    /// Infallible from the caller's view: a batch that cannot reach an
+    /// executor (pool closed — the process is shutting down or broken)
+    /// releases its segments' admission units and drops the job, whose
+    /// broken reply channels surface as errors to the waiting submits.
+    fn dispatch(&self, mut batch: PendingBatch) {
+        debug_assert!(batch.fill > 0, "empty batches are never opened");
+        let profile = batch.profile;
+        if batch.fill < profile {
+            pad_with_last_row(&mut batch.buf, batch.fill, profile, self.d);
+        }
+        // derive the telemetry once; the recorder mirror receives the
+        // derived values so the two sinks can never disagree
+        let occ_pct = (batch.fill * 100 / profile.max(1)) as u64;
+        let shared_rows = if batch.segments.len() >= 2 { batch.fill as u64 } else { 0 };
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.occupancy.record(occ_pct);
+        if shared_rows > 0 {
+            self.multi_batches.fetch_add(1, Ordering::Relaxed);
+            self.coalesced_rows.fetch_add(shared_rows, Ordering::Relaxed);
+        }
+        if let Some(rec) = &self.recorder {
+            rec.record_coalesce_batch(occ_pct, shared_rows);
+        }
+        let undeliverable = match self.senders.get(&profile) {
+            Some(tx) => match tx.send(Job { cands: batch.buf, segments: batch.segments }) {
+                Ok(()) => return,
+                Err(send_err) => send_err.0.segments.len(),
+            },
+            // unreachable: slots and senders share one key set
+            None => batch.segments.len(),
+        };
+        self.in_flight.fetch_sub(undeliverable, Ordering::AcqRel);
+        log::warn!(
+            "coalesced batch for profile {profile} undeliverable (pool closed); \
+             released {undeliverable} admission units"
+        );
+    }
+
+    /// Deadline watcher: dispatches batches whose wait expired; parked
+    /// on the condvar otherwise. Runs on a dedicated thread until
+    /// [`Coalescer::begin_shutdown`].
+    pub(crate) fn run_flusher(&self) {
+        let mut parked = self.signal.lock().unwrap();
+        loop {
+            if self.shutdown.load(Ordering::Acquire) {
+                drop(parked);
+                for slot in self.slots.values() {
+                    let leftover = slot.lock().unwrap().take();
+                    if let Some(batch) = leftover {
+                        self.dispatch(batch);
+                    }
+                }
+                return;
+            }
+            // scan for the earliest open deadline, collecting expired
+            // batches (slot locks are taken briefly, one at a time,
+            // while holding `signal` — enqueue never holds a slot while
+            // taking `signal`, so the orders cannot deadlock)
+            let now = Instant::now();
+            let mut next: Option<Instant> = None;
+            let mut expired: Vec<PendingBatch> = Vec::new();
+            for slot in self.slots.values() {
+                let mut open = slot.lock().unwrap();
+                let deadline = open.as_ref().map(|b| b.deadline);
+                match deadline {
+                    Some(dl) if dl <= now => {
+                        expired.push(open.take().unwrap());
+                    }
+                    Some(dl) => {
+                        next = Some(next.map_or(dl, |n| n.min(dl)));
+                    }
+                    None => {}
+                }
+            }
+            if !expired.is_empty() {
+                drop(parked);
+                for batch in expired {
+                    self.dispatch(batch);
+                }
+                parked = self.signal.lock().unwrap();
+                continue;
+            }
+            parked = match next {
+                None => self.cv.wait(parked).unwrap(),
+                Some(deadline) => {
+                    self.cv
+                        .wait_timeout(parked, deadline.saturating_duration_since(now))
+                        .unwrap()
+                        .0
+                }
+            };
+        }
+    }
+
+    /// Stop the flusher (it drains open batches on the way out). Notifies
+    /// under the signal mutex so the wakeup cannot be lost between the
+    /// flusher's shutdown check and its condvar wait.
+    pub(crate) fn begin_shutdown(&self) {
+        let _parked = self.signal.lock().unwrap();
+        self.shutdown.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn stats(&self) -> CoalesceStats {
+        CoalesceStats {
+            batches: self.batches.load(Ordering::Relaxed),
+            multi_request_batches: self.multi_batches.load(Ordering::Relaxed),
+            coalesced_rows: self.coalesced_rows.load(Ordering::Relaxed),
+            occupancy_mean_pct: self.occupancy.mean(),
+            occupancy_p50_pct: self.occupancy.p50(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_pool_reuses_exact_sizes() {
+        let pool = BufferPool::new(4);
+        let a = pool.get(16);
+        assert_eq!(a.len(), 16);
+        let ptr = a.as_ptr();
+        pool.put(a);
+        let b = pool.get(16);
+        assert_eq!(b.as_ptr(), ptr, "same-size request must reuse the pooled buffer");
+        assert_eq!(pool.get(32).len(), 32, "other sizes allocate fresh");
+    }
+
+    #[test]
+    fn buffer_pool_bounds_shelf_depth() {
+        let pool = BufferPool::new(2);
+        for _ in 0..5 {
+            pool.put(vec![0.0; 8]);
+        }
+        let shelved = pool.shelves.lock().unwrap().get(&8).map(|s| s.len());
+        assert_eq!(shelved, Some(2), "shelf must stay bounded");
+    }
+
+    #[test]
+    fn buffer_pool_ignores_empty() {
+        let pool = BufferPool::new(2);
+        pool.put(Vec::new());
+        assert!(pool.shelves.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn pad_fills_tail_with_last_real_row() {
+        // 2 real rows of width 3, padded to 4 rows
+        let mut buf = vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        pad_with_last_row(&mut buf, 2, 4, 3);
+        assert_eq!(&buf[6..9], &[2.0, 2.0, 2.0]);
+        assert_eq!(&buf[9..12], &[2.0, 2.0, 2.0]);
+        // real rows untouched
+        assert_eq!(&buf[..6], &[1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn pad_noop_when_full() {
+        let mut buf = vec![3.0; 6];
+        pad_with_last_row(&mut buf, 2, 2, 3);
+        assert_eq!(buf, vec![3.0; 6]);
+    }
+}

@@ -6,9 +6,23 @@
 //! splits an incoming request's M candidates across profiles **in
 //! descending order**. The implicit-shape baseline (pad everything to the
 //! max profile) lives here too so Table 5 is one flag apart.
+//!
+//! On top of the split sits the **cross-request batch coalescer**
+//! (`coalescer`): with `DsoConfig::coalesce` on, tail remainders of
+//! concurrent requests pack into one shared profile launch (bounded by
+//! `coalesce_wait_us`) instead of each padding its own — the dominant
+//! waste under the paper's non-uniform upstream candidate counts.
+//! Engines implement the row-segmented [`ComputeBackend`] interface so a
+//! packed batch can bind a history per request segment; [`SimEngine`] is
+//! the artifact-free deterministic backend used to prove score identity
+//! under any packing.
 
+pub mod backend;
+mod coalescer;
 pub mod orchestrator;
 pub mod planner;
 
-pub use orchestrator::{Orchestrator, ExecOutcome};
+pub use backend::{ComputeBackend, HistHandle, SegmentBind, SimEngine};
+pub use coalescer::CoalesceStats;
+pub use orchestrator::{ExecOutcome, Orchestrator};
 pub use planner::{plan_split, SplitPlan};

@@ -1,12 +1,21 @@
 //! The DSO orchestrator: per-profile executor pools fed by an index
-//! queue, descending batch-split dispatch, and the implicit-shape
-//! (pad-to-max) baseline.
+//! queue, descending batch-split dispatch, cross-request batch
+//! coalescing, and the implicit-shape (pad-to-max) baseline.
 //!
 //! Paper mapping (§3.3): a TensorRT profile+stream+graph triple is our
 //! (engine, executor thread, preallocated staging) triple; "push the
 //! index back to the queue after computation" is the worker loop pulling
 //! the next job from its profile's channel. Requests are split with
 //! `planner::plan_split` and chunks run concurrently across profiles.
+//!
+//! The unit of execution is a packed [`Job`]: one profile-shaped batch
+//! whose rows may come from several requests (each a [`Segment`] binding
+//! its own history). Full chunks dispatch directly as single-segment
+//! jobs; tail remainders go through the [`Coalescer`] when enabled, so
+//! concurrent requests' remainders share a launch instead of each
+//! padding its own. Executors demux per-segment score rows back to each
+//! request's reply channel — scatter/gather that preserves every
+//! request's candidate order exactly.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -16,27 +25,48 @@ use std::time::Instant;
 
 use crate::config::{DsoConfig, DsoMode};
 use crate::error::{Error, Result};
-use crate::runtime::{Engine, HistBuffer};
+use crate::metrics::Recorder;
+use crate::runtime::Engine;
 
+use super::backend::{ComputeBackend, HistHandle, SegmentBind};
+use super::coalescer::{BufferPool, Coalescer, CoalesceStats};
 use super::planner::{padded_rows, plan_split, SplitPlan};
 
-/// One chunk job for an executor. The reply carries (chunk index,
-/// scores, executor-queue delay µs).
-struct Job {
-    /// Device-resident history shared by every chunk of the request —
-    /// uploaded once in `submit` (§Perf: per-chunk re-upload removed).
-    hist: Arc<HistBuffer>,
-    cands: Vec<f32>,
-    reply: Sender<Result<(usize, Vec<f32>, u64)>>,
-    chunk_index: usize,
-    enqueued: Instant,
+/// One row segment of a packed job: `rows` consecutive candidate rows
+/// belonging to one request chunk, bound to that request's history.
+pub(crate) struct Segment {
+    pub hist: Arc<HistHandle>,
+    /// Real rows (padding is never part of a segment).
+    pub rows: usize,
+    /// Index of this chunk in the originating request's split plan.
+    pub chunk_index: usize,
+    pub enqueued: Instant,
+    pub reply: Sender<Result<ChunkDone>>,
+}
+
+/// One packed batch for an executor: a profile-shaped candidate tensor
+/// plus the ordered segments its rows came from.
+pub(crate) struct Job {
+    pub cands: Vec<f32>,
+    pub segments: Vec<Segment>,
+}
+
+/// Executor reply for one request chunk (already demuxed: scores cover
+/// this chunk's real rows only).
+pub(crate) struct ChunkDone {
+    pub chunk_index: usize,
+    pub scores: Vec<f32>,
+    /// Delay between submit/enqueue and executor pickup, µs.
+    pub queue_us: u64,
+    /// Wall time of the engine launch that served this chunk, µs.
+    pub compute_us: u64,
 }
 
 /// Per-profile executor pool: a channel + N worker threads around one
 /// compiled engine.
 struct ProfilePool {
     tx: Sender<Job>,
-    engine: Arc<Engine>,
+    engine: Arc<dyn ComputeBackend>,
     _workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -47,9 +77,14 @@ pub struct ExecOutcome {
     pub scores: Vec<f32>,
     /// Profile chunks executed.
     pub chunks: Vec<usize>,
-    /// Padded (wasted) rows.
+    /// Planned padded rows. With coalescing enabled this is the
+    /// *pre-coalescing* figure — the realized padding (usually lower,
+    /// because other requests' rows filled the tail) is tracked in
+    /// `padded_rows_total`.
     pub padding: usize,
-    /// Pure model-compute wall time (max over parallel chunks), µs.
+    /// Pure model-compute wall time: the slowest chunk's engine launch,
+    /// measured around the launch itself — executor-queue delay and
+    /// coalesce wait are excluded (they are `queue_us`).
     pub compute_us: u64,
     /// Queueing delay before the first chunk started, µs.
     pub queue_us: u64,
@@ -64,43 +99,112 @@ pub struct Orchestrator {
     d_model: usize,
     in_flight: Arc<AtomicUsize>,
     queue_capacity: usize,
-    pub padded_rows_total: AtomicU64,
-    pub executed_rows_total: AtomicU64,
+    buffers: Arc<BufferPool>,
+    coalescer: Option<Arc<Coalescer>>,
+    flusher: Option<std::thread::JoinHandle<()>>,
+    pub padded_rows_total: Arc<AtomicU64>,
+    pub executed_rows_total: Arc<AtomicU64>,
 }
 
 impl Orchestrator {
     /// Build from one engine per profile (ascending M). Each profile gets
     /// `cfg.executors_per_profile` worker threads.
     pub fn new(engines: Vec<Engine>, cfg: &DsoConfig) -> Result<Self> {
-        if engines.is_empty() {
+        Self::from_backends(Self::erase(engines), cfg, None)
+    }
+
+    /// Like [`Orchestrator::new`], but coalescer/occupancy telemetry is
+    /// mirrored into `recorder` (the serving stack's metrics).
+    pub fn with_recorder(
+        engines: Vec<Engine>,
+        cfg: &DsoConfig,
+        recorder: Arc<Recorder>,
+    ) -> Result<Self> {
+        Self::from_backends(Self::erase(engines), cfg, Some(recorder))
+    }
+
+    fn erase(engines: Vec<Engine>) -> Vec<Arc<dyn ComputeBackend>> {
+        engines
+            .into_iter()
+            .map(|e| Arc::new(e) as Arc<dyn ComputeBackend>)
+            .collect()
+    }
+
+    /// Build from any backend set — real PJRT engines or artifact-free
+    /// [`super::SimEngine`]s (tests, benches, examples).
+    pub fn from_backends(
+        backends: Vec<Arc<dyn ComputeBackend>>,
+        cfg: &DsoConfig,
+        recorder: Option<Arc<Recorder>>,
+    ) -> Result<Self> {
+        if backends.is_empty() {
             return Err(Error::Config("orchestrator needs at least one engine".into()));
         }
-        let n_tasks = engines[0].config.n_tasks;
-        let d_model = engines[0].config.d_model;
+        let n_tasks = backends[0].n_tasks();
+        let d_model = backends[0].d_model();
+        for b in &backends {
+            if b.n_tasks() != n_tasks || b.d_model() != d_model {
+                return Err(Error::Config(format!(
+                    "backend {} disagrees on (n_tasks, d_model)",
+                    b.label()
+                )));
+            }
+        }
+        let buffers = Arc::new(BufferPool::new(2 * cfg.executors_per_profile.max(1) + 2));
+        let padded_rows_total = Arc::new(AtomicU64::new(0));
+        let executed_rows_total = Arc::new(AtomicU64::new(0));
         let mut pools = BTreeMap::new();
         let mut profiles = Vec::new();
         let in_flight = Arc::new(AtomicUsize::new(0));
-        for engine in engines {
+        for engine in backends {
             let m = engine.m();
-            let engine = Arc::new(engine);
             let (tx, rx) = channel::<Job>();
             let rx = Arc::new(Mutex::new(rx));
             let mut workers = Vec::new();
             for w in 0..cfg.executors_per_profile.max(1) {
-                let rx = Arc::clone(&rx);
-                let eng = Arc::clone(&engine);
-                let inflight = Arc::clone(&in_flight);
+                let ctx = ExecutorCtx {
+                    rx: Arc::clone(&rx),
+                    engine: Arc::clone(&engine),
+                    in_flight: Arc::clone(&in_flight),
+                    buffers: Arc::clone(&buffers),
+                    executed_rows: Arc::clone(&executed_rows_total),
+                    padded_rows: Arc::clone(&padded_rows_total),
+                };
                 workers.push(
                     std::thread::Builder::new()
                         .name(format!("dso-m{m}-{w}"))
-                        .spawn(move || executor_loop(rx, eng, inflight))
+                        .spawn(move || executor_loop(ctx))
                         .map_err(|e| Error::Internal(format!("spawn executor: {e}")))?,
                 );
             }
+            if pools.insert(m, ProfilePool { tx, engine, _workers: workers }).is_some() {
+                return Err(Error::Config(format!("duplicate profile m={m}")));
+            }
             profiles.push(m);
-            pools.insert(m, ProfilePool { tx, engine, _workers: workers });
         }
         profiles.sort_unstable();
+
+        let (coalescer, flusher) = if cfg.coalesce {
+            let senders: BTreeMap<usize, Sender<Job>> =
+                pools.iter().map(|(&m, p)| (m, p.tx.clone())).collect();
+            let co = Arc::new(Coalescer::new(
+                cfg.coalesce_wait_us,
+                d_model,
+                senders,
+                Arc::clone(&buffers),
+                Arc::clone(&in_flight),
+                recorder,
+            ));
+            let runner = Arc::clone(&co);
+            let handle = std::thread::Builder::new()
+                .name("dso-coalesce-flush".into())
+                .spawn(move || runner.run_flusher())
+                .map_err(|e| Error::Internal(format!("spawn coalesce flusher: {e}")))?;
+            (Some(co), Some(handle))
+        } else {
+            (None, None)
+        };
+
         Ok(Orchestrator {
             mode: cfg.mode,
             pools,
@@ -109,8 +213,11 @@ impl Orchestrator {
             d_model,
             in_flight,
             queue_capacity: cfg.queue_capacity,
-            padded_rows_total: AtomicU64::new(0),
-            executed_rows_total: AtomicU64::new(0),
+            buffers,
+            coalescer,
+            flusher,
+            padded_rows_total,
+            executed_rows_total,
         })
     }
 
@@ -126,9 +233,25 @@ impl Orchestrator {
         *self.profiles.last().unwrap()
     }
 
-    /// Engine handle for a profile (benches/diagnostics).
-    pub fn engine(&self, m: usize) -> Option<&Arc<Engine>> {
+    /// Backend handle for a profile (benches/diagnostics).
+    pub fn backend(&self, m: usize) -> Option<&Arc<dyn ComputeBackend>> {
         self.pools.get(&m).map(|p| &p.engine)
+    }
+
+    /// Reserved executor-queue units currently outstanding (admission
+    /// reservations that have not completed yet).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Whether cross-request coalescing is active.
+    pub fn coalesce_enabled(&self) -> bool {
+        self.coalescer.is_some()
+    }
+
+    /// Coalescer counters (zeroes when coalescing is off).
+    pub fn coalesce_stats(&self) -> CoalesceStats {
+        self.coalescer.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
     /// The split this orchestrator will use for a request of `m`.
@@ -169,85 +292,110 @@ impl Orchestrator {
             )));
         }
         let plan = self.plan(m);
-        if self.in_flight.load(Ordering::Relaxed) + plan.chunks.len() > self.queue_capacity {
-            return Err(Error::Overloaded(format!(
-                "executor queue at capacity {}",
-                self.queue_capacity
-            )));
+
+        // admission: a single atomic reservation of all chunk units. The
+        // CAS loop (not load-then-add) means concurrent submits can never
+        // drive the count past capacity, even transiently.
+        let want = plan.chunks.len();
+        let mut cur = self.in_flight.load(Ordering::Acquire);
+        loop {
+            if cur + want > self.queue_capacity {
+                return Err(Error::Overloaded(format!(
+                    "executor queue at capacity {}",
+                    self.queue_capacity
+                )));
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + want,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
         }
-        self.padded_rows_total.fetch_add(plan.padding as u64, Ordering::Relaxed);
-        self.executed_rows_total.fetch_add(plan.total() as u64, Ordering::Relaxed);
+        // From here on every early return must release the units that
+        // will never reach an executor. Units reach exactly one owner:
+        // executors release what they run, the coalescer's dispatch
+        // failure path releases what it accepted but cannot deliver,
+        // and this function releases what was never handed off at all.
+        let release = |n: usize| {
+            if n > 0 {
+                self.in_flight.fetch_sub(n, Ordering::AcqRel);
+            }
+        };
+
+        for &chunk in &plan.chunks {
+            if !self.pools.contains_key(&chunk) {
+                release(want);
+                return Err(Error::UnknownEngine(format!(
+                    "no executor pool for profile {chunk}"
+                )));
+            }
+        }
 
         // upload the shared history once (any pool's engine: one client)
-        let hist_dev = Arc::new(
-            self.pools
-                .values()
-                .next()
-                .ok_or_else(|| Error::Internal("no pools".into()))?
-                .engine
-                .upload_hist(hist)?,
-        );
+        let hist_dev = match self.pools.values().next().unwrap().engine.upload_hist(hist) {
+            Ok(h) => Arc::new(h),
+            Err(e) => {
+                release(want);
+                return Err(e);
+            }
+        };
 
         // dispatch chunks (descending): chunk i covers rows [off, off+take)
         let (reply_tx, reply_rx): (
-            Sender<Result<(usize, Vec<f32>, u64)>>,
-            Receiver<Result<(usize, Vec<f32>, u64)>>,
+            Sender<Result<ChunkDone>>,
+            Receiver<Result<ChunkDone>>,
         ) = channel();
-        let mut offsets = Vec::with_capacity(plan.chunks.len());
+        let d = self.d_model;
+        let mut takes = Vec::with_capacity(plan.chunks.len());
         let mut off = 0usize;
-        let submit_t = Instant::now();
+        let mut dispatched = 0usize;
         for (ci, &chunk) in plan.chunks.iter().enumerate() {
             let take = chunk.min(m - off);
-            offsets.push((off, take));
-            // build the chunk's candidate tensor, padding the tail chunk
-            // by repeating the last real row (scores for pad rows are
-            // stripped; repeating keeps values in-distribution).
-            let mut buf = vec![0.0f32; chunk * self.d_model];
-            let src = &cands[off * self.d_model..(off + take) * self.d_model];
-            buf[..src.len()].copy_from_slice(src);
-            if take < chunk {
-                let last = &cands[(off + take - 1) * self.d_model..(off + take) * self.d_model];
-                for r in take..chunk {
-                    buf[r * self.d_model..(r + 1) * self.d_model].copy_from_slice(last);
+            takes.push(take);
+            let rows = &cands[off * d..(off + take) * d];
+            let sent = match (&self.coalescer, take < chunk) {
+                // tail remainder + coalescing on: pack with other
+                // requests' remainders instead of padding alone
+                (Some(co), true) => {
+                    co.enqueue(chunk, &hist_dev, rows, take, ci, reply_tx.clone())
                 }
+                _ => self.dispatch_direct(chunk, rows, take, ci, &hist_dev, &reply_tx),
+            };
+            if let Err(e) = sent {
+                release(want - dispatched);
+                return Err(e);
             }
-            let pool = self.pools.get(&chunk).ok_or_else(|| {
-                Error::UnknownEngine(format!("no executor pool for profile {chunk}"))
-            })?;
-            self.in_flight.fetch_add(1, Ordering::Relaxed);
-            pool.tx
-                .send(Job {
-                    hist: Arc::clone(&hist_dev),
-                    cands: buf,
-                    reply: reply_tx.clone(),
-                    chunk_index: ci,
-                    enqueued: submit_t,
-                })
-                .map_err(|_| Error::Internal("executor pool closed".into()))?;
+            dispatched += 1;
             off += take;
         }
         drop(reply_tx);
 
         // collect; queue_us is the delay before the *first* chunk was
         // picked up (min over chunks) — the request could not have
-        // started computing any earlier
+        // started computing any earlier. compute_us is the slowest
+        // chunk's launch time (chunks run in parallel).
         let mut parts: Vec<Option<Vec<f32>>> = vec![None; plan.chunks.len()];
         let mut queue_us = u64::MAX;
+        let mut compute_us = 0u64;
         for _ in 0..plan.chunks.len() {
-            let (ci, scores, chunk_queue_us) = reply_rx
+            let done = reply_rx
                 .recv()
                 .map_err(|_| Error::Internal("executor dropped reply".into()))??;
-            parts[ci] = Some(scores);
-            queue_us = queue_us.min(chunk_queue_us);
+            queue_us = queue_us.min(done.queue_us);
+            compute_us = compute_us.max(done.compute_us);
+            parts[done.chunk_index] = Some(done.scores);
         }
-        let compute_us = submit_t.elapsed().as_micros() as u64;
 
-        // assemble in request order, stripping padding
+        // assemble in request order; parts carry real rows only
         let mut scores = Vec::with_capacity(m * self.n_tasks);
         for (ci, part) in parts.into_iter().enumerate() {
             let part = part.ok_or_else(|| Error::Internal("missing chunk".into()))?;
-            let (_, take) = offsets[ci];
-            scores.extend_from_slice(&part[..take * self.n_tasks]);
+            debug_assert_eq!(part.len(), takes[ci] * self.n_tasks);
+            scores.extend_from_slice(&part);
         }
         debug_assert_eq!(scores.len(), m * self.n_tasks);
         Ok(ExecOutcome {
@@ -259,7 +407,46 @@ impl Orchestrator {
         })
     }
 
+    /// Dispatch one chunk as its own single-segment job (full chunks
+    /// always; remainders too when coalescing is off — padded locally by
+    /// repeating the last real row).
+    fn dispatch_direct(
+        &self,
+        chunk: usize,
+        rows: &[f32],
+        take: usize,
+        chunk_index: usize,
+        hist: &Arc<HistHandle>,
+        reply: &Sender<Result<ChunkDone>>,
+    ) -> Result<()> {
+        let d = self.d_model;
+        let mut buf = self.buffers.get(chunk * d);
+        buf[..take * d].copy_from_slice(rows);
+        if take < chunk {
+            super::coalescer::pad_with_last_row(&mut buf, take, chunk, d);
+        }
+        self.pools
+            .get(&chunk)
+            .ok_or_else(|| Error::UnknownEngine(format!("no executor pool for profile {chunk}")))?
+            .tx
+            .send(Job {
+                cands: buf,
+                segments: vec![Segment {
+                    hist: Arc::clone(hist),
+                    rows: take,
+                    chunk_index,
+                    enqueued: Instant::now(),
+                    reply: reply.clone(),
+                }],
+            })
+            .map_err(|_| Error::Internal("executor pool closed".into()))
+    }
+
     /// Fraction of executed rows that were padding (waste metric).
+    /// Rows are accounted by the executors via
+    /// `ComputeBackend::executed_rows_for`, so a backend that emulates
+    /// mixed-history batches by replaying the launch (the PJRT engine)
+    /// reports its real cost, not the orchestration-level ideal.
     pub fn waste_fraction(&self) -> f64 {
         let ex = self.executed_rows_total.load(Ordering::Relaxed);
         if ex == 0 {
@@ -269,11 +456,34 @@ impl Orchestrator {
     }
 }
 
-fn executor_loop(
+impl Drop for Orchestrator {
+    fn drop(&mut self) {
+        // Stop the flusher before the pools (and their senders) go away;
+        // it drains any open batches on the way out.
+        if let Some(co) = &self.coalescer {
+            co.begin_shutdown();
+        }
+        if let Some(handle) = self.flusher.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Everything one executor thread needs (bundled so worker spawning
+/// stays readable).
+struct ExecutorCtx {
     rx: Arc<Mutex<Receiver<Job>>>,
-    engine: Arc<Engine>,
+    engine: Arc<dyn ComputeBackend>,
     in_flight: Arc<AtomicUsize>,
-) {
+    buffers: Arc<BufferPool>,
+    executed_rows: Arc<AtomicU64>,
+    padded_rows: Arc<AtomicU64>,
+}
+
+fn executor_loop(ctx: ExecutorCtx) {
+    let ExecutorCtx { rx, engine, in_flight, buffers, executed_rows, padded_rows } = ctx;
+    let n_tasks = engine.n_tasks();
+    let m = engine.m();
     loop {
         let job = {
             let guard = rx.lock().unwrap();
@@ -282,11 +492,57 @@ fn executor_loop(
                 Err(_) => return, // orchestrator dropped
             }
         };
-        let queue_us = job.enqueued.elapsed().as_micros() as u64;
-        let result = engine
-            .run_with_hist(&job.hist, &job.cands)
-            .map(|scores| (job.chunk_index, scores, queue_us));
-        in_flight.fetch_sub(1, Ordering::Relaxed);
-        let _ = job.reply.send(result);
+        let picked = Instant::now();
+        let real_rows: usize = job.segments.iter().map(|s| s.rows).sum();
+        let pad = m - real_rows;
+        // waste accounting lives here, where the backend's real launch
+        // cost is known (a segment-emulating backend replays per hist)
+        let launched = engine.executed_rows_for(job.segments.len());
+        executed_rows.fetch_add(launched as u64, Ordering::Relaxed);
+        padded_rows.fetch_add((launched - real_rows) as u64, Ordering::Relaxed);
+        let last = job.segments.len() - 1;
+        let binds: Vec<SegmentBind<'_>> = job
+            .segments
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SegmentBind {
+                hist: &s.hist,
+                // pad rows repeat the last segment's final row, so they
+                // bind that segment's history
+                rows: s.rows + if i == last { pad } else { 0 },
+            })
+            .collect();
+        // compute_us is measured around the launch alone — queue delay
+        // (including coalesce wait) is reported separately per segment
+        let t0 = Instant::now();
+        let result = engine.run_segmented(&binds, &job.cands);
+        let compute_us = t0.elapsed().as_micros() as u64;
+        match result {
+            Ok(scores) => {
+                let mut off = 0usize;
+                for seg in &job.segments {
+                    let part = scores[off * n_tasks..(off + seg.rows) * n_tasks].to_vec();
+                    off += seg.rows;
+                    let queue_us =
+                        picked.saturating_duration_since(seg.enqueued).as_micros() as u64;
+                    let _ = seg.reply.send(Ok(ChunkDone {
+                        chunk_index: seg.chunk_index,
+                        scores: part,
+                        queue_us,
+                        compute_us,
+                    }));
+                }
+            }
+            Err(e) => {
+                for seg in &job.segments {
+                    let _ = seg.reply.send(Err(Error::Internal(format!(
+                        "{}: packed launch failed: {e}",
+                        engine.label()
+                    ))));
+                }
+            }
+        }
+        in_flight.fetch_sub(job.segments.len(), Ordering::AcqRel);
+        buffers.put(job.cands);
     }
 }

@@ -57,6 +57,30 @@
 //! `--no-coalesce`, `--dup-rate`), and the `bench_cluster` ablation
 //! (off / cache / cache+single-flight under duplicate-burst traffic).
 //!
+//! ## DSO coalescing
+//!
+//! The DSO's explicit-shape splitting removes the pad-to-max waste, but
+//! each request still executes alone: under the paper's non-uniform
+//! upstream a 1-candidate request pads an entire smallest-profile launch
+//! (127/128 rows wasted at the paper's scale) and every concurrent small
+//! request pays its own engine launch. With `DsoConfig::coalesce` on,
+//! the orchestrator's unit of execution becomes a *packed multi-request
+//! batch*: per-profile pending slots collect the tail remainders of
+//! concurrent requests, filling one profile-shaped launch with real rows
+//! from several requests; the batch dispatches when full or when its
+//! `coalesce_wait_us` deadline expires, so added latency stays bounded
+//! inside the < 50 ms envelope. Engines expose a row-segmented interface
+//! ([`dso::ComputeBackend::run_segmented`]) binding one history per
+//! request segment, and executors demux each launch's score rows back to
+//! the originating requests' reply channels — scores are bit-identical
+//! to solo execution, in each request's own candidate order (property-
+//! tested over random m-mixes and interleavings with the deterministic
+//! [`dso::SimEngine`] backend). Chunk buffers are pooled, padding and
+//! occupancy are tracked (`coalesced_rows`, occupancy histogram through
+//! [`metrics::Recorder`]), and the ablation lives in `benches/bench_dso`
+//! (`--m-dist uniform|bimodal|zipf`; CLI: `flame serve --coalesce
+//! --coalesce-wait-us N --m-dist D`).
+//!
 //! ## Quick start
 //!
 //! ```no_run

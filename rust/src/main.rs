@@ -20,7 +20,7 @@ use flame::manifest::Manifest;
 use flame::pda::numa::Topology;
 use flame::runtime::Runtime;
 use flame::server::pipeline::{ServingStack, StackBuilder};
-use flame::workload::{driver, trace, Generator};
+use flame::workload::{driver, trace, Generator, MDist};
 
 fn main() -> Result<()> {
     let args = Args::from_env().context("parsing arguments")?;
@@ -55,6 +55,12 @@ fn stack_config(args: &Args) -> Result<StackConfig> {
     }
     if let Some(n) = args.get_parse::<usize>("executors")? {
         cfg.dso.executors_per_profile = n;
+    }
+    if args.has("coalesce") {
+        cfg.dso.coalesce = true;
+    }
+    if let Some(t) = args.get_parse::<u64>("coalesce-wait-us")? {
+        cfg.dso.coalesce_wait_us = t;
     }
     if args.has("no-numa") {
         cfg.pda.numa_binding = false;
@@ -145,7 +151,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(path) => trace::replay(std::path::Path::new(path))?,
         None => {
             let mut wl = cfg.workload.clone();
-            if wl.candidate_mix.len() == 1 && wl.candidate_mix[0].0 == 32 {
+            if let Some(dist) = args.get("m-dist") {
+                // skewed-upstream scenario: M drawn over the profile
+                // support (including off-profile values)
+                wl.candidate_mix = MDist::parse(dist)?.mix(stack.orchestrator.profiles());
+            } else if wl.candidate_mix.len() == 1 && wl.candidate_mix[0].0 == 32 {
                 // default mix: uniform over this scenario's profiles
                 wl.candidate_mix =
                     WorkloadConfig::uniform_mix(stack.orchestrator.profiles());
@@ -192,6 +202,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("network        : {:.1} MB/s", stack.network_mb_per_s());
     println!("cache hit rate : {:.1} %", stack.query.cache().stats.hit_rate() * 100.0);
     println!("dso waste      : {:.1} % padded rows", stack.orchestrator.waste_fraction() * 100.0);
+    if stack.orchestrator.coalesce_enabled() {
+        let cs = stack.orchestrator.coalesce_stats();
+        println!(
+            "dso coalesce   : {} packed batches ({} multi-request), {} coalesced rows, occupancy mean {:.0} % / p50 {} %",
+            cs.batches,
+            cs.multi_request_batches,
+            cs.coalesced_rows,
+            cs.occupancy_mean_pct,
+            cs.occupancy_p50_pct
+        );
+    }
     Ok(())
 }
 
@@ -204,7 +225,10 @@ fn cmd_record(args: &Args) -> Result<()> {
     let scenario = Scenario::parse(args.get_or("scenario", "bench"))?;
     let cfg = stack_config(args)?;
     let mut wl = cfg.workload;
-    wl.candidate_mix = WorkloadConfig::uniform_mix(&scenario.config().m_profiles);
+    wl.candidate_mix = match args.get("m-dist") {
+        Some(dist) => MDist::parse(dist)?.mix(&scenario.config().m_profiles),
+        None => WorkloadConfig::uniform_mix(&scenario.config().m_profiles),
+    };
     let n = args.get_parse::<usize>("requests")?.unwrap_or(256);
     let mut g = Generator::new(&wl, scenario.config().seq_len);
     let reqs = g.batch(n);

@@ -30,6 +30,13 @@ pub struct Recorder {
     /// Result-cache tier: requests that rode another request's
     /// in-flight computation (single-flight coalescing).
     result_coalesced: AtomicU64,
+    /// DSO batch coalescer: fill percentage of each packed remainder
+    /// batch at launch (occupancy histogram; 100 = no padding).
+    pub coalesce_occupancy: Histogram,
+    /// DSO batch coalescer: real rows that shared a multi-request launch.
+    coalesced_rows: AtomicU64,
+    /// DSO batch coalescer: packed remainder batches launched.
+    coalesce_batches: AtomicU64,
     started: Instant,
 }
 
@@ -53,6 +60,9 @@ impl Recorder {
             result_hits: AtomicU64::new(0),
             result_misses: AtomicU64::new(0),
             result_coalesced: AtomicU64::new(0),
+            coalesce_occupancy: Histogram::new(),
+            coalesced_rows: AtomicU64::new(0),
+            coalesce_batches: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -99,6 +109,25 @@ impl Recorder {
         self.result_coalesced.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One DSO packed batch launched. The coalescer derives both values
+    /// once and passes them through (`occupancy_pct` = real rows as a
+    /// percentage of the profile; `shared_rows` = real rows iff the
+    /// batch carried ≥ 2 requests, else 0), so this mirror can never
+    /// drift from `Orchestrator::coalesce_stats`.
+    pub fn record_coalesce_batch(&self, occupancy_pct: u64, shared_rows: u64) {
+        self.coalesce_batches.fetch_add(1, Ordering::Relaxed);
+        self.coalesce_occupancy.record(occupancy_pct);
+        self.coalesced_rows.fetch_add(shared_rows, Ordering::Relaxed);
+    }
+
+    pub fn coalesced_rows(&self) -> u64 {
+        self.coalesced_rows.load(Ordering::Relaxed)
+    }
+
+    pub fn coalesce_batches(&self) -> u64 {
+        self.coalesce_batches.load(Ordering::Relaxed)
+    }
+
     pub fn result_hits(&self) -> u64 {
         self.result_hits.load(Ordering::Relaxed)
     }
@@ -140,6 +169,9 @@ impl Recorder {
         self.result_hits.store(0, Ordering::Relaxed);
         self.result_misses.store(0, Ordering::Relaxed);
         self.result_coalesced.store(0, Ordering::Relaxed);
+        self.coalesce_occupancy.reset();
+        self.coalesced_rows.store(0, Ordering::Relaxed);
+        self.coalesce_batches.store(0, Ordering::Relaxed);
         self.started = Instant::now();
     }
 
@@ -163,6 +195,10 @@ impl Recorder {
             result_hits: self.result_hits(),
             result_misses: self.result_misses(),
             result_coalesced: self.result_coalesced(),
+            coalesced_rows: self.coalesced_rows(),
+            coalesce_batches: self.coalesce_batches(),
+            coalesce_occupancy_mean_pct: self.coalesce_occupancy.mean(),
+            coalesce_occupancy_p50_pct: self.coalesce_occupancy.p50(),
         }
     }
 
@@ -193,6 +229,11 @@ pub struct MetricsSnapshot {
     pub result_hits: u64,
     pub result_misses: u64,
     pub result_coalesced: u64,
+    /// DSO batch coalescer (0 unless `DsoConfig::coalesce` is on).
+    pub coalesced_rows: u64,
+    pub coalesce_batches: u64,
+    pub coalesce_occupancy_mean_pct: f64,
+    pub coalesce_occupancy_p50_pct: u64,
 }
 
 impl MetricsSnapshot {
@@ -250,6 +291,7 @@ mod tests {
         r.record_result_hit();
         r.record_result_miss();
         r.record_result_coalesced();
+        r.record_coalesce_batch(75, 6);
         r.reset();
         let s = r.snapshot_over(1.0);
         assert_eq!(s.requests, 0);
@@ -257,6 +299,22 @@ mod tests {
         assert_eq!(s.dropped, 0);
         assert_eq!(r.network_bytes(), 0);
         assert_eq!((s.result_hits, s.result_misses, s.result_coalesced), (0, 0, 0));
+        assert_eq!((s.coalesced_rows, s.coalesce_batches), (0, 0));
+        assert_eq!(s.coalesce_occupancy_mean_pct, 0.0);
+    }
+
+    #[test]
+    fn coalesce_counters_surface_in_snapshot() {
+        let r = Recorder::new();
+        // full batch whose 8 rows came from 2 requests: coalesced rows
+        r.record_coalesce_batch(100, 8);
+        // half-full single-request batch: occupancy only
+        r.record_coalesce_batch(50, 0);
+        let s = r.snapshot_over(1.0);
+        assert_eq!(s.coalesce_batches, 2);
+        assert_eq!(s.coalesced_rows, 8, "single-segment batches are not coalesced rows");
+        assert!((s.coalesce_occupancy_mean_pct - 75.0).abs() < 1.0, "{s:?}");
+        assert!(s.coalesce_occupancy_p50_pct >= 45 && s.coalesce_occupancy_p50_pct <= 100);
     }
 
     #[test]

@@ -78,9 +78,12 @@ impl StackBuilder {
             self.config.pda.staging_arenas,
         ));
 
-        // DSO side
+        // DSO side — the orchestrator mirrors coalescer occupancy into
+        // the stack's recorder, so it is created first and shared.
+        let metrics = Arc::new(Recorder::new());
         let engines = runtime.load_profile_set(manifest, &self.scenario, &self.variant)?;
-        let orchestrator = Arc::new(Orchestrator::new(engines, &self.config.dso)?);
+        let orchestrator =
+            Arc::new(Orchestrator::with_recorder(engines, &self.config.dso, Arc::clone(&metrics))?);
 
         Ok(ServingStack {
             config: self.config,
@@ -90,7 +93,7 @@ impl StackBuilder {
             orchestrator,
             link,
             store,
-            metrics: Arc::new(Recorder::new()),
+            metrics,
             topology: Topology::detect(),
         })
     }
@@ -120,13 +123,24 @@ impl ServingStack {
     /// Serve one request synchronously (the per-worker hot path).
     /// `arena` is the calling worker's staging arena (reused).
     pub fn serve(&self, req: &Request, arena: &mut StagingArena) -> Result<Response> {
+        thread_local! {
+            /// Worker-local scratch for the L-padded history ids — the
+            /// hot path must not clone + resize a fresh Vec per request.
+            static HIST_SCRATCH: std::cell::RefCell<Vec<u64>> =
+                std::cell::RefCell::new(Vec::new());
+        }
         let t0 = Instant::now();
 
         // ---- feature stage (PDA) ----
         let tf = Instant::now();
-        let mut history = req.history.clone();
-        history.resize(self.model_cfg.seq_len, 0); // pad/truncate to L
-        let assembled = self.assembler.assemble(&history, &req.candidates, arena);
+        let l = self.model_cfg.seq_len;
+        let assembled = HIST_SCRATCH.with(|scratch| {
+            let mut history = scratch.borrow_mut();
+            history.clear();
+            history.extend_from_slice(&req.history[..req.history.len().min(l)]);
+            history.resize(l, 0); // pad short histories to L
+            self.assembler.assemble(&history, &req.candidates, arena)
+        });
         let (hist, cands) = assembled.views(arena);
         let feature_us = tf.elapsed().as_micros() as u64;
 

@@ -9,8 +9,96 @@ pub mod trace;
 use std::sync::Arc;
 
 use crate::config::WorkloadConfig;
+use crate::error::{Error, Result};
 use crate::featurestore::catalog::{Catalog, UserBase};
 use crate::util::rng::Rng;
+
+/// Candidate-count (M) distribution families over a profile set — the
+/// paper's "non-uniform distribution of upstream candidates" is where
+/// the DSO (and its batch coalescer) wins most, so benches and the
+/// trace generator can reproduce it with one knob (`--m-dist`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MDist {
+    /// Equal weight over the whole [`MDist::support`] (profiles *and*
+    /// off-profile values). Note this is a fair same-support baseline
+    /// for the bimodal/zipf arms, not Table 5's profiles-only mix —
+    /// that one is `WorkloadConfig::uniform_mix`.
+    Uniform,
+    /// Mass at both ends: mostly tiny requests plus a heavy large tail,
+    /// the skew that leaves many near-empty remainder launches.
+    Bimodal,
+    /// Zipf-decaying weight over ascending M: most requests small.
+    Zipf,
+}
+
+impl MDist {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "uniform" => Ok(MDist::Uniform),
+            "bimodal" => Ok(MDist::Bimodal),
+            "zipf" => Ok(MDist::Zipf),
+            o => Err(Error::Config(format!("unknown m-dist '{o}' (uniform|bimodal|zipf)"))),
+        }
+    }
+
+    /// The M values a distribution draws from. Upstream retrievers do
+    /// not know the engine profile set, so alongside each profile size
+    /// the support includes off-profile values — a tiny M below the
+    /// smallest profile (the 1-candidate pathology) and midpoints
+    /// between consecutive profiles — which is what produces the
+    /// remainder chunks the batch coalescer packs.
+    pub fn support(profiles: &[usize]) -> Vec<usize> {
+        let mut ps = profiles.to_vec();
+        ps.sort_unstable();
+        ps.dedup();
+        let mut vals = Vec::new();
+        if let Some(&lo) = ps.first() {
+            if lo > 1 {
+                vals.push((lo / 4).max(1));
+            }
+        }
+        for w in ps.windows(2) {
+            vals.push(w[0]);
+            vals.push((w[0] + w[1]) / 2);
+        }
+        if let Some(&hi) = ps.last() {
+            vals.push(hi);
+        }
+        vals.sort_unstable();
+        vals.dedup();
+        vals
+    }
+
+    /// Weighted candidate mix over [`MDist::support`]`(profiles)` for
+    /// `WorkloadConfig::candidate_mix`.
+    pub fn mix(&self, profiles: &[usize]) -> Vec<(usize, f64)> {
+        let vals = Self::support(profiles);
+        let n = vals.len();
+        match self {
+            MDist::Uniform => vals.into_iter().map(|m| (m, 1.0)).collect(),
+            MDist::Bimodal => match n {
+                0 => Vec::new(),
+                1 => vec![(vals[0], 1.0)],
+                2 => vec![(vals[0], 0.5), (vals[1], 0.5)],
+                _ => {
+                    let mid = 0.10 / (n - 2) as f64;
+                    vals.into_iter()
+                        .enumerate()
+                        .map(|(i, m)| {
+                            let w = if i == 0 || i == n - 1 { 0.45 } else { mid };
+                            (m, w)
+                        })
+                        .collect()
+                }
+            },
+            MDist::Zipf => vals
+                .into_iter()
+                .enumerate()
+                .map(|(i, m)| (m, 1.0 / ((i + 1) as f64).powf(1.2)))
+                .collect(),
+        }
+    }
+}
 
 /// One inference request as it arrives from upstream.
 #[derive(Clone, Debug, PartialEq)]
@@ -151,6 +239,53 @@ mod tests {
         let mut g = Generator::new(&cfg(vec![(4, 1.0)]), 16);
         let ids: Vec<u64> = g.batch(5).iter().map(|r| r.request_id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn m_dist_support_includes_off_profile_values() {
+        let s = MDist::support(&[128, 256, 512, 1024]);
+        // tiny request below the smallest profile
+        assert!(s.contains(&32), "{s:?}");
+        // midpoints between profiles (remainder-producing)
+        assert!(s.contains(&192) && s.contains(&384) && s.contains(&768), "{s:?}");
+        // the profiles themselves
+        for p in [128, 256, 512, 1024] {
+            assert!(s.contains(&p), "{s:?}");
+        }
+        assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted, deduped: {s:?}");
+    }
+
+    #[test]
+    fn m_dist_parse_and_families() {
+        assert_eq!(MDist::parse("bimodal").unwrap(), MDist::Bimodal);
+        assert!(MDist::parse("nope").is_err());
+        let profiles = [16usize, 32, 64, 128];
+        let uni = MDist::Uniform.mix(&profiles);
+        assert!(uni.iter().all(|&(_, w)| w == 1.0));
+        let bi = MDist::Bimodal.mix(&profiles);
+        let (first, last) = (bi.first().unwrap(), bi.last().unwrap());
+        assert!(first.1 > 0.4 && last.1 > 0.4, "mass at both ends: {bi:?}");
+        assert!(bi[1..bi.len() - 1].iter().all(|&(_, w)| w < 0.1), "light middle: {bi:?}");
+        let zipf = MDist::Zipf.mix(&profiles);
+        assert!(
+            zipf.windows(2).all(|w| w[0].1 > w[1].1),
+            "zipf weight decays with M: {zipf:?}"
+        );
+    }
+
+    #[test]
+    fn m_dist_generator_draws_skewed_m() {
+        let mix = MDist::Zipf.mix(&[16, 32, 64, 128]);
+        let mut g = Generator::new(&cfg(mix), 32);
+        let mut small = 0usize;
+        let n = 2_000;
+        for _ in 0..n {
+            if g.next_request().m() <= 16 {
+                small += 1;
+            }
+        }
+        // the two smallest support values carry the bulk of a zipf draw
+        assert!(small > n / 3, "zipf skew toward small M, saw {small}/{n}");
     }
 
     #[test]
