@@ -38,6 +38,8 @@ fn main() -> Result<()> {
     let variant = getf("--variant", "fused");
     let seconds: f64 = getf("--seconds", "15").parse()?;
     let workers: usize = getf("--workers", "2").parse()?;
+    // decoupled two-stage mode: feature workers overlap compute submitters
+    let pipelined = argv.iter().any(|a| a == "--pipeline");
 
     let manifest = Manifest::load("artifacts").context("run `make artifacts` first")?;
     let runtime = Runtime::new()?;
@@ -45,6 +47,8 @@ fn main() -> Result<()> {
     let mut cfg = StackConfig::default();
     cfg.pda.cache_mode = CacheMode::Async;
     cfg.server.pipeline_workers = workers;
+    cfg.server.pipeline = pipelined;
+    cfg.server.feature_workers = workers;
     cfg.dso.executors_per_profile = 1;
 
     eprintln!("[serve_e2e] compiling {scenario}/{variant} engines (all profiles) ...");
@@ -73,15 +77,29 @@ fn main() -> Result<()> {
     stack.query.drain_refreshes();
 
     // Measured run.
-    eprintln!("[serve_e2e] measuring for {seconds:.0}s ...");
+    eprintln!(
+        "[serve_e2e] measuring for {seconds:.0}s{} ...",
+        if pipelined { " (decoupled pipeline)" } else { "" }
+    );
     let before_pairs = stack.metrics.pairs();
     let before_bytes = stack.link.bytes_total();
+    // first-touch arena growths happen during warmup; report the
+    // measured window's delta
+    let before_growths = stack.metrics.arena_growths();
     stack.metrics.overall.reset();
     stack.metrics.compute.reset();
     stack.metrics.feature.reset();
+    stack.metrics.handoff.reset();
     let t0 = std::time::Instant::now();
-    let report =
-        stack.drive_closed_loop(&requests[64..], workers, Duration::from_secs_f64(seconds));
+    let report = if pipelined {
+        let handle = stack.spawn_pipeline();
+        let dur = Duration::from_secs_f64(seconds);
+        let report = handle.drive_closed_loop(&requests[64..], 2 * workers, dur);
+        handle.shutdown();
+        report
+    } else {
+        stack.drive_closed_loop(&requests[64..], workers, Duration::from_secs_f64(seconds))
+    };
     let elapsed = t0.elapsed().as_secs_f64();
 
     let pairs = stack.metrics.pairs() - before_pairs;
@@ -94,6 +112,14 @@ fn main() -> Result<()> {
     println!("overall latency : mean {:.2} ms   p50 {:.2} ms   p99 {:.2} ms", snap.overall_mean_ms, snap.overall_p50_ms, snap.overall_p99_ms);
     println!("compute latency : mean {:.2} ms   p50 {:.2} ms   p99 {:.2} ms", snap.compute_mean_ms, snap.compute_p50_ms, snap.compute_p99_ms);
     println!("feature stage   : mean {:.2} ms", snap.feature_mean_ms);
+    if pipelined {
+        println!(
+            "stage handoff   : mean {:.2} ms   p99 {:.2} ms (arena growths {})",
+            snap.handoff_mean_ms,
+            snap.handoff_p99_ms,
+            snap.arena_growths - before_growths
+        );
+    }
     println!("network         : {:.2} MB/s", mb / elapsed);
     println!("cache hit rate  : {:.1} % (fresh {:.1} %)", stack.query.cache().stats.hit_rate() * 100.0, stack.query.cache().stats.fresh_hit_rate() * 100.0);
     println!("dso waste       : {:.1} % padded rows", stack.orchestrator.waste_fraction() * 100.0);

@@ -1,0 +1,330 @@
+//! Decoupled two-stage pipeline ablation: synchronous serve vs.
+//! pipelined (feature/compute overlap) vs. pipelined + feature-miss
+//! coalescing, under Zipf-hot candidate traffic with short feature TTLs
+//! (so hot ids keep missing and the coalescer has duplicates to pack).
+//!
+//! Artifact-free by design — compute runs on the deterministic
+//! [`SimEngine`] backend with a fixed per-launch delay, so the bench
+//! exercises the full serve path (PDA fetch → assembly → handoff → DSO
+//! split/launch → response) on any bare checkout; the real-engine
+//! pipeline is driven via `flame serve --pipeline`.
+//!
+//! Every run emits machine-readable `BENCH_pipeline.json` — arms ×
+//! {p50/p99 latency, request + pair throughput, link MB/s, remote store
+//! queries, handoff wait, busy-overlap ratio} plus the score-identity
+//! verdict — so the repo's bench trajectory has diffable data.
+//!
+//! `--smoke` shrinks the run to a CI-sized check (sub-second arms) that
+//! still asserts bit-identical scores across all three arms and writes
+//! the JSON, so the ablation cannot bit-rot.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flame::benchkit::{table, BenchArgs, Table};
+use flame::config::{CacheMode, ModelConfig, StackConfig, WorkloadConfig};
+use flame::dso::{ComputeBackend, SimEngine};
+use flame::netsim::{Link, LinkConfig};
+use flame::pda::StagingArena;
+use flame::server::pipeline::StackBuilder;
+use flame::server::ServingStack;
+use flame::util::json::Json;
+use flame::workload::{Generator, MDist, Request};
+
+const SEQ: usize = 32;
+const D: usize = 16;
+const TASKS: usize = 3;
+const PROFILES: [usize; 4] = [16, 32, 64, 128];
+const SEED: u64 = 2026;
+const OUT_PATH: &str = "BENCH_pipeline.json";
+
+/// Per-launch simulated engine time — roughly the tiny-profile PJRT
+/// launch cost on the CPU testbed, so stage overlap has real compute to
+/// hide.
+const COMPUTE_DELAY: Duration = Duration::from_micros(900);
+
+struct Arm {
+    label: &'static str,
+    pipeline: bool,
+    fetch_coalesce: bool,
+}
+
+const ARMS: [Arm; 3] = [
+    Arm { label: "sync", pipeline: false, fetch_coalesce: false },
+    Arm { label: "pipelined", pipeline: true, fetch_coalesce: false },
+    Arm { label: "pipelined+fetch-coalesce", pipeline: true, fetch_coalesce: true },
+];
+
+struct ArmResult {
+    label: String,
+    requests_per_s: f64,
+    pairs_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    link_mb_per_s: f64,
+    remote_queries: u64,
+    handoff_mean_ms: f64,
+    fetch_riders: u64,
+    /// (Σ feature busy + Σ compute busy) / wall — > 1.0 per worker-pair
+    /// means the stages genuinely overlapped.
+    busy_overlap: f64,
+    arena_growths: u64,
+}
+
+fn model_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "sim".into(),
+        seq_len: SEQ,
+        n_blocks: 1,
+        layers_per_block: 1,
+        d_model: D,
+        n_heads: 1,
+        n_tasks: TASKS,
+        m_profiles: PROFILES.to_vec(),
+        native_m: PROFILES[PROFILES.len() - 1],
+    }
+}
+
+fn build(arm: &Arm) -> (Arc<ServingStack>, Arc<Link>) {
+    let link = Arc::new(Link::new(LinkConfig {
+        rtt: Duration::from_micros(400),
+        bandwidth_bps: 200e6,
+        jitter: 0.0,
+        fail_rate: 0.0,
+    }));
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Sync;
+    cfg.pda.cache_ttl_ms = 50; // hot ids keep expiring: sustained misses
+    cfg.pda.numa_binding = false;
+    cfg.pda.fetch_coalesce = arm.fetch_coalesce;
+    cfg.pda.fetch_wait_us = 200;
+    cfg.server.pipeline = arm.pipeline;
+    // thread parity: 4 serve threads either way
+    cfg.server.pipeline_workers = if arm.pipeline { 2 } else { 4 };
+    cfg.server.feature_workers = 2;
+    cfg.server.handoff_capacity = 8;
+    let backends: Vec<Arc<dyn ComputeBackend>> = PROFILES
+        .iter()
+        .map(|&m| {
+            Arc::new(SimEngine::new(m, SEQ, D, TASKS).with_delay(COMPUTE_DELAY))
+                as Arc<dyn ComputeBackend>
+        })
+        .collect();
+    let stack = Arc::new(
+        StackBuilder::new("sim", "sim", cfg)
+            .with_link(Arc::clone(&link))
+            .build_from_backends(model_cfg(), SEED, backends)
+            .expect("sim stack"),
+    );
+    (stack, link)
+}
+
+fn workload(n: usize) -> Vec<Request> {
+    let wl = WorkloadConfig {
+        catalog_size: 50_000,
+        zipf_theta: 1.1, // hot-item skew: concurrent requests share ids
+        n_users: 5_000,
+        candidate_mix: MDist::Zipf.mix(&PROFILES),
+        arrival_rate: None,
+        seed: SEED,
+    };
+    Generator::new(&wl, SEQ).batch(n)
+}
+
+/// Bit-identity gate: the same requests through this arm and through a
+/// fresh synchronous stack must score identically (same store/embedding
+/// seeds; sync cache mode is deterministic).
+fn check_score_identity(arm: &Arm, probe: &[Request]) {
+    let (sync_stack, _) = build(&ARMS[0]);
+    let mut arena = StagingArena::new(sync_stack.arena_capacity());
+    let expected: Vec<Vec<f32>> = probe
+        .iter()
+        .map(|r| sync_stack.serve(r, &mut arena).expect("sync serve").scores)
+        .collect();
+    let (stack, _) = build(arm);
+    let got: Vec<Vec<f32>> = if arm.pipeline {
+        let handle = stack.spawn_pipeline();
+        let scores = probe
+            .iter()
+            .map(|r| handle.serve(r).expect("pipelined serve").scores)
+            .collect();
+        handle.shutdown();
+        scores
+    } else {
+        let mut arena = StagingArena::new(stack.arena_capacity());
+        probe.iter().map(|r| stack.serve(r, &mut arena).expect("serve").scores).collect()
+    };
+    for (i, (e, g)) in expected.iter().zip(&got).enumerate() {
+        assert_eq!(e, g, "arm '{}' diverged from sync scores on probe request {i}", arm.label);
+    }
+}
+
+fn run_arm(arm: &Arm, requests: &[Request], seconds: f64) -> ArmResult {
+    let (stack, link) = build(arm);
+    let drivers = 8;
+
+    // warmup: engine + cache first-touch costs out of the window
+    let warm = &requests[..64.min(requests.len())];
+    if arm.pipeline {
+        let handle = stack.spawn_pipeline();
+        handle.drive_closed_loop(warm, drivers, Duration::from_secs(30));
+        handle.shutdown();
+    } else {
+        stack.drive_closed_loop(warm, 4, Duration::from_secs(30));
+    }
+    // histograms reset after warmup; monotone counters are
+    // baseline-subtracted instead so the report covers the measured
+    // window only
+    stack.metrics.overall.reset();
+    stack.metrics.compute.reset();
+    stack.metrics.feature.reset();
+    stack.metrics.handoff.reset();
+    let pairs0 = stack.metrics.pairs();
+    let requests0 = stack.metrics.requests();
+    let bytes0 = link.bytes_total();
+    let queries0 = link.queries_total();
+    let riders0 = stack.query.fetch_coalesce_stats().riders;
+    let growths0 = stack.metrics.arena_growths();
+
+    let t0 = std::time::Instant::now();
+    if arm.pipeline {
+        let handle = stack.spawn_pipeline();
+        handle.drive_closed_loop(&requests[64..], drivers, Duration::from_secs_f64(seconds));
+        handle.shutdown();
+    } else {
+        stack.drive_closed_loop(&requests[64..], 4, Duration::from_secs_f64(seconds));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let served = (stack.metrics.requests() - requests0) as f64;
+    let pairs = (stack.metrics.pairs() - pairs0) as f64;
+    let snap = stack.metrics.snapshot_over(elapsed);
+    let busy_us = (snap.feature_mean_ms + snap.compute_mean_ms) * 1e3 * served;
+    let fs = stack.query.fetch_coalesce_stats();
+    ArmResult {
+        label: arm.label.to_string(),
+        requests_per_s: served / elapsed,
+        pairs_per_s: pairs / elapsed,
+        p50_ms: snap.overall_p50_ms,
+        p99_ms: snap.overall_p99_ms,
+        link_mb_per_s: (link.bytes_total() - bytes0) as f64 / 1e6 / elapsed,
+        remote_queries: link.queries_total() - queries0,
+        handoff_mean_ms: snap.handoff_mean_ms,
+        fetch_riders: fs.riders - riders0,
+        busy_overlap: busy_us / (elapsed * 1e6).max(1e-9),
+        arena_growths: snap.arena_growths - growths0,
+    }
+}
+
+fn emit_json(results: &[ArmResult], smoke: bool) {
+    let mut arms = BTreeMap::new();
+    for r in results {
+        let mut o = BTreeMap::new();
+        o.insert("requests_per_s".into(), Json::Num(r.requests_per_s));
+        o.insert("pairs_per_s".into(), Json::Num(r.pairs_per_s));
+        o.insert("p50_ms".into(), Json::Num(r.p50_ms));
+        o.insert("p99_ms".into(), Json::Num(r.p99_ms));
+        o.insert("link_mb_per_s".into(), Json::Num(r.link_mb_per_s));
+        o.insert("remote_queries".into(), Json::Num(r.remote_queries as f64));
+        o.insert("handoff_mean_ms".into(), Json::Num(r.handoff_mean_ms));
+        o.insert("fetch_riders".into(), Json::Num(r.fetch_riders as f64));
+        o.insert("busy_overlap".into(), Json::Num(r.busy_overlap));
+        o.insert("arena_growths".into(), Json::Num(r.arena_growths as f64));
+        arms.insert(r.label.clone(), Json::Obj(o));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("pipeline".into()));
+    top.insert("smoke".into(), Json::Bool(smoke));
+    top.insert("score_identity".into(), Json::Str("bit-identical".into()));
+    top.insert("arms".into(), Json::Obj(arms));
+    let doc = Json::Obj(top);
+    match std::fs::write(OUT_PATH, doc.to_string()) {
+        Ok(()) => eprintln!("  wrote {OUT_PATH}"),
+        Err(e) => eprintln!("  could not write {OUT_PATH}: {e}"),
+    }
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let seconds = if smoke { 0.4 } else { args.measure_time.as_secs_f64().max(3.0) };
+    let n_requests = if smoke { 2_000 } else { 100_000 };
+
+    println!(
+        "\nPipeline ablation — sim backend, {seconds:.1}s per arm, compute {}µs/launch{}",
+        COMPUTE_DELAY.as_micros(),
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let requests = workload(n_requests);
+    let probe = &requests[..24];
+    let mut results = Vec::new();
+    for arm in &ARMS {
+        if !args.wants(arm.label) {
+            continue;
+        }
+        eprintln!("  [{}] score-identity probe ...", arm.label);
+        check_score_identity(arm, probe);
+        eprintln!("  [{}] measuring ...", arm.label);
+        let r = run_arm(arm, &requests, seconds);
+        eprintln!(
+            "  [{}] {:.0} req/s, p50 {:.2} ms, {} remote queries, overlap {:.2}",
+            r.label, r.requests_per_s, r.p50_ms, r.remote_queries, r.busy_overlap
+        );
+        results.push(r);
+    }
+
+    let mut t = Table::new(
+        "Decoupled pipeline ablation (sim backend, Zipf traffic, 50ms feature TTL)",
+        &[
+            "Arm",
+            "Requests/s",
+            "Throughput",
+            "P50",
+            "P99",
+            "Handoff",
+            "Link MB/s",
+            "Remote Queries",
+            "Overlap",
+        ],
+    );
+    for r in &results {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.0}", r.requests_per_s),
+            table::kthroughput(r.pairs_per_s),
+            table::ms(r.p50_ms),
+            table::ms(r.p99_ms),
+            table::ms(r.handoff_mean_ms),
+            format!("{:.2}", r.link_mb_per_s),
+            r.remote_queries.to_string(),
+            format!("{:.2}", r.busy_overlap),
+        ]);
+    }
+    let find = |l: &str| results.iter().find(|r| r.label == l);
+    if let (Some(sync), Some(pipe)) = (find("sync"), find("pipelined")) {
+        t.footnote(&format!(
+            "pipelined vs sync: {} request throughput; busy-overlap {:.2} vs {:.2} \
+             (> per-thread share proves feature/compute overlap)",
+            table::ratio(pipe.requests_per_s, sync.requests_per_s),
+            pipe.busy_overlap,
+            sync.busy_overlap,
+        ));
+    }
+    if let (Some(pipe), Some(co)) = (find("pipelined"), find("pipelined+fetch-coalesce")) {
+        t.footnote(&format!(
+            "fetch coalescer: {} -> {} remote queries ({} rider ids shared in-flight fetches)",
+            pipe.remote_queries, co.remote_queries, co.fetch_riders,
+        ));
+        if !smoke && co.remote_queries >= pipe.remote_queries {
+            eprintln!(
+                "  WARNING: coalescer did not reduce remote queries ({} vs {})",
+                co.remote_queries, pipe.remote_queries
+            );
+        }
+    }
+    t.footnote("scores verified bit-identical to the synchronous path in every arm");
+    t.print();
+    emit_json(&results, smoke);
+}

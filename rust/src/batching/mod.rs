@@ -20,7 +20,11 @@ struct Inner<T> {
 /// Bounded MPMC request queue with shed-on-full admission.
 pub struct RequestQueue<T> {
     inner: Mutex<Inner<T>>,
+    /// Items available (poppers park here).
     notify: Condvar,
+    /// Space available (blocking pushers park here — kept separate from
+    /// `notify` so a wakeup can never be stolen by the wrong side).
+    space: Condvar,
     capacity: usize,
 }
 
@@ -29,6 +33,7 @@ impl<T> RequestQueue<T> {
         Arc::new(RequestQueue {
             inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
             notify: Condvar::new(),
+            space: Condvar::new(),
             capacity: capacity.max(1),
         })
     }
@@ -48,12 +53,36 @@ impl<T> RequestQueue<T> {
         Ok(())
     }
 
+    /// Blocking admit: waits for space instead of shedding — the
+    /// stage-to-stage handoff primitive. A full downstream queue stalls
+    /// the producer, which is exactly how handoff backpressure reaches
+    /// the front door (the stalled producer stops draining the bounded
+    /// intake queue, whose `push` then sheds). Returns the item back on
+    /// a closed queue so the caller can fail it explicitly.
+    pub fn push_blocking(&self, item: T) -> std::result::Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.queue.len() < self.capacity {
+                g.queue.push_back((item, Instant::now()));
+                drop(g);
+                self.notify.notify_one();
+                return Ok(());
+            }
+            g = self.space.wait(g).unwrap();
+        }
+    }
+
     /// Blocking pop; returns the item + its queueing delay, or None when
     /// the queue is closed and drained.
     pub fn pop(&self) -> Option<(T, std::time::Duration)> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some((item, t)) = g.queue.pop_front() {
+                drop(g);
+                self.space.notify_one();
                 return Some((item, t.elapsed()));
             }
             if g.closed {
@@ -63,10 +92,12 @@ impl<T> RequestQueue<T> {
         }
     }
 
-    /// Close the queue; waiting poppers drain then observe None.
+    /// Close the queue; waiting poppers drain then observe None and
+    /// blocked pushers get their item back.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.notify.notify_all();
+        self.space.notify_all();
     }
 
     pub fn len(&self) -> usize {
@@ -166,6 +197,32 @@ mod tests {
         q.push(1).unwrap();
         let (_, delay) = q.pop().unwrap();
         assert!(delay < std::time::Duration::from_millis(50), "delay {delay:?}");
+    }
+
+    #[test]
+    fn push_blocking_waits_for_space_then_admits() {
+        let q: Arc<RequestQueue<u32>> = RequestQueue::new(1);
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let pusher = std::thread::spawn(move || q2.push_blocking(2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // deterministic either way the scheduler lands: while the queue
+        // is full the blocked push must not have enqueued anything
+        assert_eq!(q.len(), 1, "push_blocking enqueued into a full queue");
+        assert_eq!(q.pop().unwrap().0, 1); // frees a slot, wakes the pusher
+        assert!(pusher.join().unwrap().is_ok());
+        assert_eq!(q.pop().unwrap().0, 2);
+    }
+
+    #[test]
+    fn push_blocking_returns_item_on_close() {
+        let q: Arc<RequestQueue<u32>> = RequestQueue::new(1);
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let pusher = std::thread::spawn(move || q2.push_blocking(7));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.close();
+        assert_eq!(pusher.join().unwrap(), Err(7), "closed queue hands the item back");
     }
 
     #[test]

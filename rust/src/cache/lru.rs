@@ -134,6 +134,35 @@ impl<V: Clone> LruCache<V> {
         }
     }
 
+    /// Fresh-hit zero-clone read: runs `f` on a borrow of the value and
+    /// promotes the entry to MRU, without cloning `V`. Returns
+    /// `(Some(r), true)` on a fresh hit, `(None, true)` when the key is
+    /// present but stale (not promoted, `f` not called — sync-flow
+    /// callers treat stale as a miss), and `(None, false)` on a miss.
+    /// The copy-into read path `ShardedCache::with_fresh` builds on this
+    /// so a hot-row lookup can write straight into a staging arena slice
+    /// with zero allocation.
+    pub fn with_fresh<R>(
+        &mut self,
+        key: u64,
+        now: Instant,
+        f: impl FnOnce(&V) -> R,
+    ) -> (Option<R>, bool) {
+        match self.map.get(&key).copied() {
+            None => (None, false),
+            Some(i) => {
+                let age = now.saturating_duration_since(self.slots[i].inserted);
+                if age > self.ttl {
+                    return (None, true);
+                }
+                self.detach(i);
+                self.push_front(i);
+                let v = self.slots[i].value.as_ref().expect("indexed slot holds a value");
+                (Some(f(v)), true)
+            }
+        }
+    }
+
     /// Insert/update a key (counts as a refresh: TTL restarts).
     pub fn insert(&mut self, key: u64, value: V, now: Instant) {
         if let Some(&i) = self.map.get(&key) {
@@ -325,6 +354,24 @@ mod tests {
         assert!(c.remove(1));
         // the free-listed slot must not park the old value alive
         assert_eq!(std::sync::Arc::strong_count(&v), 1, "removed value leaked in free list");
+    }
+
+    #[test]
+    fn with_fresh_hits_promote_without_clone() {
+        let mut c = LruCache::new(3, Duration::from_millis(10));
+        let t = now();
+        c.insert(1, 7u32, t);
+        c.insert(2, 8u32, t);
+        let (r, present) = c.with_fresh(1, t, |v| *v * 10);
+        assert_eq!((r, present), (Some(70), true));
+        assert_eq!(c.keys_mru(), vec![1, 2], "fresh with_fresh promotes to MRU");
+        // stale: present but f not run
+        let later = t + Duration::from_millis(50);
+        let (r, present) = c.with_fresh(1, later, |v| *v);
+        assert_eq!((r, present), (None, true));
+        // miss
+        let (r, present) = c.with_fresh(99, t, |v| *v);
+        assert_eq!((r, present), (None, false));
     }
 
     #[test]

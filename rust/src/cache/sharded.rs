@@ -63,6 +63,27 @@ impl<V: Clone> ShardedCache<V> {
         r
     }
 
+    /// Fresh-hit zero-clone read path: run `f` on a borrow of the cached
+    /// value under the shard lock (promoting it to MRU) and return its
+    /// result; `None` on stale/miss. Unlike [`ShardedCache::get`], the
+    /// value is never cloned — the hot-row embedding lookup uses this to
+    /// copy straight into an arena slice with zero allocation. Stats are
+    /// accounted exactly as `get` would (fresh → hit, stale → stale hit,
+    /// absent → miss).
+    pub fn with_fresh<R>(&self, key: u64, f: impl FnOnce(&V) -> R) -> Option<R> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let now = Instant::now();
+        let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
+        let (r, present) = shard.with_fresh(key, now, f);
+        drop(shard);
+        match (&r, present) {
+            (Some(_), _) => self.stats.hits.fetch_add(1, Relaxed),
+            (None, true) => self.stats.stale_hits.fetch_add(1, Relaxed),
+            (None, false) => self.stats.misses.fetch_add(1, Relaxed),
+        };
+        r
+    }
+
     pub fn insert(&self, key: u64, value: V) {
         use std::sync::atomic::Ordering::Relaxed;
         let now = Instant::now();
@@ -131,6 +152,35 @@ mod tests {
         let c: ShardedCache<u8> = ShardedCache::new(3, 16, Duration::from_secs(60));
         assert_eq!(c.capacity(), 3);
         assert!(c.n_shards() <= 3, "{} shards for capacity 3", c.n_shards());
+    }
+
+    /// Regression for the per-lookup allocation: `get` clones the value
+    /// on every hit; `with_fresh` must not clone at all — the embedding
+    /// hot path copies rows straight into the arena through it.
+    #[test]
+    fn with_fresh_never_clones_the_value() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        #[derive(Debug)]
+        struct CloneCounter(u32, Arc<AtomicUsize>);
+        impl Clone for CloneCounter {
+            fn clone(&self) -> Self {
+                self.1.fetch_add(1, Ordering::Relaxed);
+                CloneCounter(self.0, Arc::clone(&self.1))
+            }
+        }
+
+        let clones = Arc::new(AtomicUsize::new(0));
+        let c: ShardedCache<CloneCounter> = ShardedCache::new(16, 2, Duration::from_secs(60));
+        c.insert(1, CloneCounter(42, Arc::clone(&clones)));
+        let baseline = clones.load(Ordering::Relaxed);
+        for _ in 0..10 {
+            assert_eq!(c.with_fresh(1, |v| v.0), Some(42));
+        }
+        assert_eq!(clones.load(Ordering::Relaxed), baseline, "with_fresh cloned the value");
+        assert!(c.with_fresh(2, |v| v.0).is_none());
+        let (h, _, m, _, _) = c.stats.snapshot();
+        assert_eq!((h, m), (10, 1), "with_fresh must keep stats accounting");
     }
 
     #[test]

@@ -21,7 +21,8 @@ const VALUE_FLAGS: &[&str] = &[
     "workers", "cache", "dso", "config", "bind", "trace", "seed", "concurrency",
     "executors", "theta", "catalog", "replicas", "policy", "deadline-ms",
     "slots", "users", "result-cache-cap", "result-ttl-ms", "dup-rate",
-    "coalesce-wait-us", "m-dist",
+    "coalesce-wait-us", "m-dist", "feature-workers", "fetch-wait-us",
+    "handoff-capacity",
 ];
 
 impl Args {
@@ -122,7 +123,16 @@ COMMON FLAGS:
                       flushing                     (default: 200)
   --m-dist D          candidate-count distribution over the profile
                       support: uniform | bimodal | zipf
-  --workers N         pipeline worker threads      (default: 4)
+  --pipeline          decoupled two-stage serving: feature-stage workers
+                      overlap the compute-stage engine launches
+  --feature-workers N feature-stage workers in pipelined mode (default: 2)
+  --handoff-capacity N bounded stage-handoff queue depth   (default: 8)
+  --fetch-coalesce    single-flight concurrent feature-cache misses into
+                      shared remote multiget batches (sync cache mode)
+  --fetch-wait-us T   max µs a partial miss batch waits before flushing
+                                                   (default: 150)
+  --workers N         pipeline worker threads; in pipelined mode, the
+                      compute-stage submitter count (default: 4)
   --executors N       executors per profile        (default: 1)
   --requests N        request count                (default: 64)
   --duration-s S      run duration seconds         (default: 10)
@@ -211,6 +221,35 @@ mod tests {
         let h = help();
         assert!(h.contains("--coalesce"));
         assert!(h.contains("--m-dist"));
+    }
+
+    #[test]
+    fn pipeline_flags_parse() {
+        let a = parse(&[
+            "serve",
+            "--pipeline",
+            "--feature-workers",
+            "3",
+            "--handoff-capacity",
+            "16",
+            "--fetch-coalesce",
+            "--fetch-wait-us",
+            "250",
+        ]);
+        assert!(a.has("pipeline"));
+        assert_eq!(a.get_parse::<usize>("feature-workers").unwrap(), Some(3));
+        assert_eq!(a.get_parse::<usize>("handoff-capacity").unwrap(), Some(16));
+        assert!(a.has("fetch-coalesce"));
+        assert_eq!(a.get_parse::<u64>("fetch-wait-us").unwrap(), Some(250));
+    }
+
+    #[test]
+    fn help_mentions_pipeline() {
+        let h = help();
+        assert!(h.contains("--pipeline"));
+        assert!(h.contains("--feature-workers"));
+        assert!(h.contains("--fetch-coalesce"));
+        assert!(h.contains("--fetch-wait-us"));
     }
 
     #[test]

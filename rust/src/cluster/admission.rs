@@ -119,6 +119,7 @@ mod tests {
                 compute_us: 0,
                 feature_us: 0,
                 queue_us: 0,
+                handoff_us: 0,
             })
         }
     }
@@ -172,6 +173,7 @@ mod tests {
                 compute_us: 0,
                 feature_us: 0,
                 queue_us: 0,
+                handoff_us: 0,
             })
         }
     }

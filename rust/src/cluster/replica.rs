@@ -355,6 +355,7 @@ mod tests {
                 compute_us: 5,
                 feature_us: 2,
                 queue_us: 0,
+                handoff_us: 0,
             })
         }
     }

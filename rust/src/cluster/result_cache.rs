@@ -341,6 +341,7 @@ impl ResultCache {
             compute_us: 0,
             feature_us: 0,
             queue_us: 0,
+            handoff_us: 0,
         }
     }
 }
@@ -369,6 +370,7 @@ mod tests {
             compute_us: 80,
             feature_us: 10,
             queue_us: 0,
+            handoff_us: 0,
         }
     }
 

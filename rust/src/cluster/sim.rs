@@ -152,6 +152,7 @@ impl ReplicaBackend for SimReplica {
             compute_us,
             feature_us,
             queue_us,
+            handoff_us: 0,
         })
     }
 

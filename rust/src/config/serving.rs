@@ -67,6 +67,14 @@ pub struct PdaConfig {
     /// the pinned-memory analogue: batch many small feature copies into
     /// one contiguous transfer buffer).
     pub staging_arenas: bool,
+    /// Cross-request feature-miss coalescing (sync cache mode): misses
+    /// single-flight per item id and pack into shared remote multiget
+    /// batches, so K concurrent requests missing the same hot id pay one
+    /// round-trip instead of K.
+    pub fetch_coalesce: bool,
+    /// Upper bound (µs) a partially-filled miss batch waits for more ids
+    /// before it is flushed — the added feature-latency bound per request.
+    pub fetch_wait_us: u64,
 }
 
 impl Default for PdaConfig {
@@ -79,6 +87,8 @@ impl Default for PdaConfig {
             refresh_workers: 2,
             numa_binding: true,
             staging_arenas: true,
+            fetch_coalesce: false,
+            fetch_wait_us: 150,
         }
     }
 }
@@ -133,8 +143,20 @@ impl Default for DsoConfig {
 /// Server / pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Feature-pipeline worker threads (CPU side of the decoupled design).
+    /// Worker threads. Synchronous mode: each runs the whole request
+    /// (feature + compute). Decoupled mode (`pipeline`): this is the
+    /// compute-stage submitter count M.
     pub pipeline_workers: usize,
+    /// Decoupled two-stage serving: feature-stage workers hand staged
+    /// inputs over a bounded queue to compute-stage submitters, so one
+    /// request's PDA work overlaps another's engine launch (the paper's
+    /// CPU-GPU decoupling, §3.1).
+    pub pipeline: bool,
+    /// Feature-stage workers N (decoupled mode only).
+    pub feature_workers: usize,
+    /// Bounded handoff-queue depth between the stages; when it fills,
+    /// feature workers stall and backpressure reaches intake admission.
+    pub handoff_capacity: usize,
     /// TCP bind address for the network front (None = in-process only).
     pub bind_addr: Option<String>,
     /// Per-request deadline in ms (paper envelope: < 50 ms end-to-end).
@@ -143,7 +165,14 @@ pub struct ServerConfig {
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { pipeline_workers: 4, bind_addr: None, deadline_ms: 50 }
+        ServerConfig {
+            pipeline_workers: 4,
+            pipeline: false,
+            feature_workers: 2,
+            handoff_capacity: 8,
+            bind_addr: None,
+            deadline_ms: 50,
+        }
     }
 }
 
@@ -220,6 +249,12 @@ impl StackConfig {
             if let Some(v) = p.opt("staging_arenas") {
                 c.pda.staging_arenas = v.as_bool()?;
             }
+            if let Some(v) = p.opt("fetch_coalesce") {
+                c.pda.fetch_coalesce = v.as_bool()?;
+            }
+            if let Some(v) = p.opt("fetch_wait_us") {
+                c.pda.fetch_wait_us = v.as_u64()?;
+            }
         }
         if let Some(d) = j.opt("dso") {
             if let Some(v) = d.opt("mode") {
@@ -241,6 +276,15 @@ impl StackConfig {
         if let Some(s) = j.opt("server") {
             if let Some(v) = s.opt("pipeline_workers") {
                 c.server.pipeline_workers = v.as_usize()?;
+            }
+            if let Some(v) = s.opt("pipeline") {
+                c.server.pipeline = v.as_bool()?;
+            }
+            if let Some(v) = s.opt("feature_workers") {
+                c.server.feature_workers = v.as_usize()?;
+            }
+            if let Some(v) = s.opt("handoff_capacity") {
+                c.server.handoff_capacity = v.as_usize()?;
             }
             if let Some(v) = s.opt("bind_addr") {
                 c.server.bind_addr = Some(v.as_str()?.to_string());
@@ -297,9 +341,14 @@ mod tests {
         let c = StackConfig::default();
         assert_eq!(c.pda.cache_mode, CacheMode::Async);
         assert!(c.pda.numa_binding);
+        assert!(!c.pda.fetch_coalesce, "miss coalescing is opt-in");
+        assert!(c.pda.fetch_wait_us < 50_000, "fetch wait within the paper envelope");
         assert_eq!(c.dso.mode, DsoMode::Explicit);
         assert!(!c.dso.coalesce, "coalescing is opt-in");
         assert!(c.dso.coalesce_wait_us < 50_000, "wait bound within the paper envelope");
+        assert!(!c.server.pipeline, "decoupled pipeline is opt-in");
+        assert!(c.server.feature_workers >= 1);
+        assert!(c.server.handoff_capacity >= 1);
         assert_eq!(c.server.deadline_ms, 50); // paper envelope
     }
 
@@ -316,10 +365,12 @@ mod tests {
     fn json_overrides() {
         let j = parse(
             r#"{
-            "pda": {"cache_mode": "sync", "cache_capacity": 10, "numa_binding": false},
+            "pda": {"cache_mode": "sync", "cache_capacity": 10, "numa_binding": false,
+                    "fetch_coalesce": true, "fetch_wait_us": 250},
             "dso": {"mode": "implicit", "executors_per_profile": 3,
                     "coalesce": true, "coalesce_wait_us": 500},
-            "server": {"pipeline_workers": 8, "bind_addr": "127.0.0.1:7070"},
+            "server": {"pipeline_workers": 8, "bind_addr": "127.0.0.1:7070",
+                       "pipeline": true, "feature_workers": 3, "handoff_capacity": 16},
             "workload": {"zipf_theta": 0.8, "candidate_mix": [[128, 1.0], [256, 1.0]]}
         }"#,
         )
@@ -328,11 +379,16 @@ mod tests {
         assert_eq!(c.pda.cache_mode, CacheMode::Sync);
         assert_eq!(c.pda.cache_capacity, 10);
         assert!(!c.pda.numa_binding);
+        assert!(c.pda.fetch_coalesce);
+        assert_eq!(c.pda.fetch_wait_us, 250);
         assert_eq!(c.dso.mode, DsoMode::ImplicitPad);
         assert_eq!(c.dso.executors_per_profile, 3);
         assert!(c.dso.coalesce);
         assert_eq!(c.dso.coalesce_wait_us, 500);
         assert_eq!(c.server.pipeline_workers, 8);
+        assert!(c.server.pipeline);
+        assert_eq!(c.server.feature_workers, 3);
+        assert_eq!(c.server.handoff_capacity, 16);
         assert_eq!(c.server.bind_addr.as_deref(), Some("127.0.0.1:7070"));
         assert_eq!(c.workload.candidate_mix, vec![(128, 1.0), (256, 1.0)]);
     }

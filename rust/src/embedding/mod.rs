@@ -10,9 +10,9 @@
 //! feature staleness/missingness visibly changes the model input — the
 //! accuracy side of the async-cache trade-off is observable end to end.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use crate::cache::{Lookup, ShardedCache};
+use crate::cache::ShardedCache;
 use crate::util::rng::Rng;
 
 /// Hashed embedding table: id -> dense f32 vector of dimension d.
@@ -22,7 +22,8 @@ pub struct EmbeddingTable {
     /// Materialized-hot-row cache (id -> vector).
     cache: ShardedCache<Vec<f32>>,
     /// Projection weights folding side features into the embedding.
-    feat_proj: Mutex<Vec<f32>>, // [feat_dims] broadcast scale, lazily sized
+    /// Shared behind an `Arc` so a lookup borrows it without copying.
+    feat_proj: Mutex<Arc<Vec<f32>>>, // [feat_dims] broadcast scale, lazily sized
 }
 
 impl EmbeddingTable {
@@ -31,7 +32,7 @@ impl EmbeddingTable {
             d,
             seed,
             cache: ShardedCache::new(hot_capacity.max(1), 8, std::time::Duration::from_secs(3600)),
-            feat_proj: Mutex::new(Vec::new()),
+            feat_proj: Mutex::new(Arc::new(Vec::new())),
         }
     }
 
@@ -39,23 +40,26 @@ impl EmbeddingTable {
         self.d
     }
 
-    /// Synthesize (or fetch) the base embedding row of `id`.
-    fn base_row(&self, id: u64) -> Vec<f32> {
-        if let Lookup::Fresh(v) = self.cache.get(id) {
-            return v;
-        }
+    /// Synthesize the base embedding row of `id` directly into `out`.
+    fn synthesize_row_into(&self, id: u64, out: &mut [f32]) {
         let mut rng = Rng::new(self.seed ^ id.wrapping_mul(0x2545_F491_4F6C_DD1D));
         let scale = 1.0 / (self.d as f32).sqrt();
-        let row: Vec<f32> = (0..self.d).map(|_| rng.normal_f32() * scale).collect();
-        self.cache.insert(id, row.clone());
-        row
+        for o in out.iter_mut() {
+            *o = rng.normal_f32() * scale;
+        }
     }
 
-    /// Write the embedding of `id` into `out` (len d), no allocation.
+    /// Write the embedding of `id` into `out` (len d). A hot-row cache
+    /// hit copies straight from the cached row into `out` with zero
+    /// allocation (`ShardedCache::with_fresh`); only a cold id pays one
+    /// materialization + insert.
     pub fn embed_into(&self, id: u64, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.d);
-        let row = self.base_row(id);
-        out.copy_from_slice(&row);
+        if self.cache.with_fresh(id, |row| out.copy_from_slice(row)).is_some() {
+            return;
+        }
+        self.synthesize_row_into(id, out);
+        self.cache.insert(id, out.to_vec());
     }
 
     /// Write embedding + folded side features into `out`.
@@ -74,13 +78,13 @@ impl EmbeddingTable {
         }
     }
 
-    fn feature_projection(&self, n: usize) -> Vec<f32> {
+    fn feature_projection(&self, n: usize) -> Arc<Vec<f32>> {
         let mut proj = self.feat_proj.lock().unwrap();
         if proj.len() < n {
             let mut rng = Rng::new(self.seed ^ 0xFEED_FACE);
-            *proj = (0..n).map(|_| rng.normal_f32()).collect();
+            *proj = Arc::new((0..n).map(|_| rng.normal_f32()).collect());
         }
-        proj[..n].to_vec()
+        Arc::clone(&proj)
     }
 
     /// Hot-row cache statistics (hit rate on popular items).
@@ -138,6 +142,42 @@ mod tests {
         let (hits, _, misses, _, _) = t.cache_stats().snapshot();
         assert_eq!(misses, 1);
         assert_eq!(hits, 9);
+    }
+
+    /// Regression: the hit path must be a pure copy-into — it used to
+    /// build a fresh `Vec` per materialization and clone it into the
+    /// cache, and even hits returned an owned `Vec` that was then copied
+    /// again. Observable contract: repeats neither re-insert nor
+    /// re-synthesize, and the copied-out row still matches the original.
+    #[test]
+    fn hit_path_copies_into_out_without_reinsert() {
+        let t = EmbeddingTable::new(16, 3, 128);
+        let mut first = vec![0.0; 16];
+        t.embed_into(9, &mut first);
+        for _ in 0..20 {
+            let mut v = vec![1.0; 16]; // dirty buffer: must be fully overwritten
+            t.embed_into(9, &mut v);
+            assert_eq!(v, first);
+        }
+        let (hits, _, misses, inserts, _) = t.cache_stats().snapshot();
+        assert_eq!(misses, 1);
+        assert_eq!(inserts, 1, "hit path must not re-insert (and so not re-allocate)");
+        assert_eq!(hits, 20);
+    }
+
+    #[test]
+    fn feature_projection_stable_across_growth() {
+        // growing the lazily-sized projection must keep the prefix, so
+        // the same (id, features) folds identically before and after a
+        // wider request was seen
+        let t = EmbeddingTable::new(16, 3, 128);
+        let mut narrow = vec![0.0; 16];
+        t.embed_with_features_into(4, &[0.5, -0.5], &mut narrow);
+        let mut wide = vec![0.0; 16];
+        t.embed_with_features_into(4, &[0.1; 12], &mut wide);
+        let mut narrow_again = vec![0.0; 16];
+        t.embed_with_features_into(4, &[0.5, -0.5], &mut narrow_again);
+        assert_eq!(narrow, narrow_again);
     }
 
     #[test]

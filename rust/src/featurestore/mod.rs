@@ -38,10 +38,15 @@ impl FeatureSchema {
 }
 
 /// One item's fetched features.
+///
+/// `dense` is shared (`Arc<[f32]>`): cloning features out of the cache
+/// costs a refcount bump, not a row copy, and the miss-default zero row
+/// is one shared allocation per schema rather than a fresh `Vec` per
+/// missing item.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ItemFeatures {
     pub item_id: u64,
-    pub dense: Vec<f32>,
+    pub dense: Arc<[f32]>,
     /// Version counter — bumped when the store "updates" the item, used
     /// to observe staleness in async-cache tests.
     pub version: u64,
@@ -105,7 +110,8 @@ impl RemoteStore {
         let mut rng = Rng::new(
             self.seed ^ item_id.wrapping_mul(0xD6E8_FEB8_6659_FD93) ^ (epoch << 48),
         );
-        let dense = (0..self.schema.dense_dims).map(|_| rng.normal_f32()).collect();
+        let dense: Arc<[f32]> =
+            (0..self.schema.dense_dims).map(|_| rng.normal_f32()).collect::<Vec<f32>>().into();
         ItemFeatures { item_id, dense, version: epoch }
     }
 

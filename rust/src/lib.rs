@@ -81,6 +81,36 @@
 //! (`--m-dist uniform|bimodal|zipf`; CLI: `flame serve --coalesce
 //! --coalesce-wait-us N --m-dist D`).
 //!
+//! ## Decoupled pipeline
+//!
+//! FLAME's headline architectural claim is CPU-GPU decoupling: feature
+//! pre-processing runs concurrently with model computation so neither
+//! stage idles the other (§3.1). With `ServerConfig::pipeline` on,
+//! `ServingStack::spawn_pipeline` splits the serve path into two thread
+//! pools around a bounded handoff queue ([`server::stages`]): N
+//! feature-stage workers assemble requests into arenas drawn from a
+//! shared [`pda::ArenaPool`] and hand them to M compute-stage submitters
+//! that drive the DSO orchestrator — request B's feature fetch overlaps
+//! request A's engine launch, and an arena returns to the pool only
+//! after the orchestrator has consumed its views. Backpressure is a
+//! chain of bounded resources: slow compute fills the handoff queue,
+//! `push_blocking` stalls the feature workers, and the bounded intake
+//! then sheds at admission. The stage wait is visible per response
+//! (`Response::handoff_us`) and aggregated (`MetricsSnapshot::handoff_*`),
+//! and arenas never grow in steady state (`arena_growths`, asserted in
+//! tests). On the PDA side, `PdaConfig::fetch_coalesce` adds the
+//! feature-miss coalescer ([`pda::fetch_coalescer`]): concurrent
+//! requests' sync-mode cache misses single-flight per item id and pack
+//! into shared remote multiget batches (per-shard pending slots, a
+//! bounded `fetch_wait_us` deadline, and cross-shard merging at flush),
+//! so K in-flight requests missing the same hot Zipf id pay one `Link`
+//! round-trip instead of K. Scores are bit-identical to the synchronous
+//! path in both modes (property-tested over random interleavings in
+//! `tests/pipeline_stage.rs`); the sync/pipelined/pipelined+coalesce
+//! ablation lives in `benches/bench_pipeline.rs` and emits
+//! machine-readable `BENCH_pipeline.json` (CLI: `flame serve --pipeline
+//! --feature-workers N --fetch-coalesce --fetch-wait-us T`).
+//!
 //! ## Quick start
 //!
 //! ```no_run

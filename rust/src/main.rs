@@ -62,6 +62,21 @@ fn stack_config(args: &Args) -> Result<StackConfig> {
     if let Some(t) = args.get_parse::<u64>("coalesce-wait-us")? {
         cfg.dso.coalesce_wait_us = t;
     }
+    if args.has("pipeline") {
+        cfg.server.pipeline = true;
+    }
+    if let Some(n) = args.get_parse::<usize>("feature-workers")? {
+        cfg.server.feature_workers = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("handoff-capacity")? {
+        cfg.server.handoff_capacity = n;
+    }
+    if args.has("fetch-coalesce") {
+        cfg.pda.fetch_coalesce = true;
+    }
+    if let Some(t) = args.get_parse::<u64>("fetch-wait-us")? {
+        cfg.pda.fetch_wait_us = t;
+    }
     if args.has("no-numa") {
         cfg.pda.numa_binding = false;
     }
@@ -166,30 +181,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     eprintln!("[flame] driving {} requests ...", requests.len());
 
-    let report = match cfg.workload.arrival_rate {
-        Some(rate) => {
-            // open loop: admission queue + pipeline workers, Poisson arrivals
-            let queue = RequestQueue::new(cfg.dso.queue_capacity);
-            let workers = stack.spawn_workers(Arc::clone(&queue), cfg.server.pipeline_workers);
-            let report = driver::open_loop(
+    let report = if cfg.server.pipeline {
+        // decoupled two-stage mode: feature workers overlap compute
+        // submitters; the intake queue is the admission front door
+        let handle = stack.spawn_pipeline();
+        let report = match cfg.workload.arrival_rate {
+            Some(rate) => driver::open_loop_pipeline(
+                &handle,
                 requests,
                 rate,
                 duration,
-                cfg.dso.queue_capacity,
                 cfg.workload.seed,
-                |r| queue.push(r.clone()).is_ok(),
-            );
-            while !queue.is_empty() {
-                std::thread::sleep(Duration::from_millis(5));
+            ),
+            None => handle.drive_closed_loop(
+                &requests,
+                cfg.server.feature_workers + cfg.server.pipeline_workers,
+                duration,
+            ),
+        };
+        handle.shutdown(); // drains both stages
+        report
+    } else {
+        match cfg.workload.arrival_rate {
+            Some(rate) => {
+                // open loop: admission queue + pipeline workers, Poisson arrivals
+                let queue = RequestQueue::new(cfg.dso.queue_capacity);
+                let workers = stack.spawn_workers(Arc::clone(&queue), cfg.server.pipeline_workers);
+                let report = driver::open_loop(
+                    requests,
+                    rate,
+                    duration,
+                    cfg.dso.queue_capacity,
+                    cfg.workload.seed,
+                    |r| queue.push(r.clone()).is_ok(),
+                );
+                while !queue.is_empty() {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                queue.close();
+                for w in workers {
+                    let _ = w.join();
+                }
+                report
             }
-            queue.close();
-            for w in workers {
-                let _ = w.join();
-            }
-            report
+            // closed loop: one request in flight per worker, no queueing noise
+            None => stack.drive_closed_loop(&requests, cfg.server.pipeline_workers, duration),
         }
-        // closed loop: one request in flight per worker, no queueing noise
-        None => stack.drive_closed_loop(&requests, cfg.server.pipeline_workers, duration),
     };
 
     let snap = stack.metrics.snapshot();
@@ -199,6 +236,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("overall latency: mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms", snap.overall_mean_ms, snap.overall_p50_ms, snap.overall_p99_ms);
     println!("compute latency: mean {:.2} ms  p99 {:.2} ms", snap.compute_mean_ms, snap.compute_p99_ms);
     println!("feature stage  : mean {:.2} ms", snap.feature_mean_ms);
+    if cfg.server.pipeline {
+        println!(
+            "stage handoff  : mean {:.2} ms  p99 {:.2} ms ({} feature + {} compute workers, arena growths {})",
+            snap.handoff_mean_ms,
+            snap.handoff_p99_ms,
+            cfg.server.feature_workers,
+            cfg.server.pipeline_workers,
+            snap.arena_growths
+        );
+    }
+    if stack.query.fetch_coalesce_enabled() {
+        let fs = stack.query.fetch_coalesce_stats();
+        println!(
+            "fetch coalesce : {} shared multigets ({} ids), {} rider ids, {} merged flushes",
+            fs.batches, fs.batched_ids, fs.riders, fs.merged_flushes
+        );
+    }
     println!("network        : {:.1} MB/s", stack.network_mb_per_s());
     println!("cache hit rate : {:.1} %", stack.query.cache().stats.hit_rate() * 100.0);
     println!("dso waste      : {:.1} % padded rows", stack.orchestrator.waste_fraction() * 100.0);

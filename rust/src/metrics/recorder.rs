@@ -18,6 +18,17 @@ pub struct Recorder {
     pub feature: Histogram,
     /// Queueing delay before an executor picks the job up (µs).
     pub queueing: Histogram,
+    /// Decoupled pipeline: stage-wait between a staged input entering
+    /// the handoff queue and a compute submitter picking it up (µs).
+    pub handoff: Histogram,
+    /// Staging-arena growths observed (steady state must stay at 0 — a
+    /// growth is a hidden pageable reallocation on the hot path).
+    arena_growths: AtomicU64,
+    /// Feature-miss coalescer: ids that rode another request's in-flight
+    /// fetch instead of paying their own round-trip.
+    fetch_coalesced: AtomicU64,
+    /// Feature-miss coalescer: shared multiget batches executed.
+    fetch_batches: AtomicU64,
     requests: AtomicU64,
     user_item_pairs: AtomicU64,
     network_bytes: AtomicU64,
@@ -53,6 +64,10 @@ impl Recorder {
             compute: Histogram::new(),
             feature: Histogram::new(),
             queueing: Histogram::new(),
+            handoff: Histogram::new(),
+            arena_growths: AtomicU64::new(0),
+            fetch_coalesced: AtomicU64::new(0),
+            fetch_batches: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             user_item_pairs: AtomicU64::new(0),
             network_bytes: AtomicU64::new(0),
@@ -85,6 +100,38 @@ impl Recorder {
 
     pub fn record_queueing(&self, us: u64) {
         self.queueing.record(us);
+    }
+
+    /// Handoff stage-wait of one pipelined request, µs.
+    pub fn record_handoff(&self, us: u64) {
+        self.handoff.record(us);
+    }
+
+    /// `n` staging-arena growths observed while assembling one request.
+    pub fn record_arena_growth(&self, n: u64) {
+        self.arena_growths.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// One feature id rode another request's in-flight fetch.
+    pub fn record_fetch_coalesced(&self) {
+        self.fetch_coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One shared feature multiget executed by the miss coalescer.
+    pub fn record_fetch_batch(&self) {
+        self.fetch_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn arena_growths(&self) -> u64 {
+        self.arena_growths.load(Ordering::Relaxed)
+    }
+
+    pub fn fetch_coalesced(&self) -> u64 {
+        self.fetch_coalesced.load(Ordering::Relaxed)
+    }
+
+    pub fn fetch_batches(&self) -> u64 {
+        self.fetch_batches.load(Ordering::Relaxed)
     }
 
     /// Bytes pulled over the (simulated) network — Table 3's
@@ -162,6 +209,10 @@ impl Recorder {
         self.compute.reset();
         self.feature.reset();
         self.queueing.reset();
+        self.handoff.reset();
+        self.arena_growths.store(0, Ordering::Relaxed);
+        self.fetch_coalesced.store(0, Ordering::Relaxed);
+        self.fetch_batches.store(0, Ordering::Relaxed);
         self.requests.store(0, Ordering::Relaxed);
         self.user_item_pairs.store(0, Ordering::Relaxed);
         self.network_bytes.store(0, Ordering::Relaxed);
@@ -190,6 +241,11 @@ impl Recorder {
             compute_p99_ms: self.compute.p99() as f64 / 1e3,
             feature_mean_ms: self.feature.mean() / 1e3,
             queueing_mean_ms: self.queueing.mean() / 1e3,
+            handoff_mean_ms: self.handoff.mean() / 1e3,
+            handoff_p99_ms: self.handoff.p99() as f64 / 1e3,
+            arena_growths: self.arena_growths(),
+            fetch_coalesced: self.fetch_coalesced(),
+            fetch_batches: self.fetch_batches(),
             network_mb_per_s: self.network_bytes() as f64 / 1e6 / elapsed_s.max(1e-9),
             dropped: self.dropped(),
             result_hits: self.result_hits(),
@@ -223,6 +279,15 @@ pub struct MetricsSnapshot {
     pub compute_p99_ms: f64,
     pub feature_mean_ms: f64,
     pub queueing_mean_ms: f64,
+    /// Decoupled pipeline: stage-wait between feature handoff and
+    /// compute pickup (0 in synchronous mode).
+    pub handoff_mean_ms: f64,
+    pub handoff_p99_ms: f64,
+    /// Staging-arena growths (steady state must report 0).
+    pub arena_growths: u64,
+    /// Feature-miss coalescer (0 unless `PdaConfig::fetch_coalesce`).
+    pub fetch_coalesced: u64,
+    pub fetch_batches: u64,
     pub network_mb_per_s: f64,
     pub dropped: u64,
     /// Cluster result-cache tier (0 outside a router context).
@@ -292,6 +357,10 @@ mod tests {
         r.record_result_miss();
         r.record_result_coalesced();
         r.record_coalesce_batch(75, 6);
+        r.record_handoff(1_000);
+        r.record_arena_growth(2);
+        r.record_fetch_coalesced();
+        r.record_fetch_batch();
         r.reset();
         let s = r.snapshot_over(1.0);
         assert_eq!(s.requests, 0);
@@ -301,6 +370,24 @@ mod tests {
         assert_eq!((s.result_hits, s.result_misses, s.result_coalesced), (0, 0, 0));
         assert_eq!((s.coalesced_rows, s.coalesce_batches), (0, 0));
         assert_eq!(s.coalesce_occupancy_mean_pct, 0.0);
+        assert_eq!(s.handoff_mean_ms, 0.0);
+        assert_eq!((s.arena_growths, s.fetch_coalesced, s.fetch_batches), (0, 0, 0));
+    }
+
+    #[test]
+    fn pipeline_counters_surface_in_snapshot() {
+        let r = Recorder::new();
+        r.record_handoff(2_000);
+        r.record_handoff(4_000);
+        r.record_arena_growth(1);
+        r.record_fetch_coalesced();
+        r.record_fetch_coalesced();
+        r.record_fetch_batch();
+        let s = r.snapshot_over(1.0);
+        assert!((s.handoff_mean_ms - 3.0).abs() < 0.2, "{s:?}");
+        assert!(s.handoff_p99_ms >= 3.5, "{s:?}");
+        assert_eq!(s.arena_growths, 1);
+        assert_eq!((s.fetch_coalesced, s.fetch_batches), (2, 1));
     }
 
     #[test]

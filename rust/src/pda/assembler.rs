@@ -52,6 +52,31 @@ impl InputAssembler {
         &self.query
     }
 
+    /// Assemble one raw request: truncate/zero-pad `history` to exactly
+    /// `l` ids in a worker-local scratch (the hot path must not clone +
+    /// resize a fresh `Vec` per request), then [`InputAssembler::assemble`].
+    /// Shared by the synchronous serve path and the pipeline's
+    /// feature-stage workers so the two can never diverge on padding.
+    pub fn assemble_request(
+        &self,
+        history: &[u64],
+        l: usize,
+        candidates: &[u64],
+        arena: &mut StagingArena,
+    ) -> AssembledInput {
+        thread_local! {
+            static HIST_SCRATCH: std::cell::RefCell<Vec<u64>> =
+                std::cell::RefCell::new(Vec::new());
+        }
+        HIST_SCRATCH.with(|scratch| {
+            let mut padded = scratch.borrow_mut();
+            padded.clear();
+            padded.extend_from_slice(&history[..history.len().min(l)]);
+            padded.resize(l, 0); // pad short histories to L
+            self.assemble(&padded, candidates, arena)
+        })
+    }
+
     /// Assemble one request. `arena` is reset and reused when staging is
     /// enabled; ignored otherwise.
     pub fn assemble(

@@ -11,6 +11,11 @@
 //!   update cache, return the fresh value (accuracy-preserving).
 //!
 //! `CacheMode::Off` bypasses the cache entirely (the Table 3 baseline).
+//!
+//! With `PdaConfig::fetch_coalesce` on (sync mode), concurrent requests'
+//! cache misses go through the [`FetchCoalescer`]: per-id single-flight
+//! plus shared multiget batches bounded by `fetch_wait_us` — K in-flight
+//! requests missing the same hot id pay one `Link` round-trip, not K.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -19,6 +24,8 @@ use std::sync::{Arc, Mutex};
 use crate::cache::{Lookup, ShardedCache};
 use crate::config::{CacheMode, PdaConfig};
 use crate::featurestore::{ItemFeatures, RemoteStore};
+use crate::metrics::Recorder;
+use crate::pda::fetch_coalescer::{FetchCoalesceStats, FetchCoalescer};
 use crate::util::threadpool::ThreadPool;
 
 /// Outcome classification for one item fetch (per-request accounting).
@@ -47,6 +54,12 @@ pub struct QueryEngine {
     drain_scheduled: Arc<AtomicBool>,
     /// Remote-store timeouts observed (failure-injection telemetry).
     pub store_errors: Arc<std::sync::atomic::AtomicU64>,
+    /// Shared zero-row default for missing features — one allocation per
+    /// schema, cloned by refcount per missing item.
+    zero_row: Arc<[f32]>,
+    /// Cross-request miss coalescer (sync mode + `fetch_coalesce` only).
+    fetch_coalescer: Option<Arc<FetchCoalescer>>,
+    fetch_flusher: Option<std::thread::JoinHandle<()>>,
 }
 
 /// Max items folded into one background refresh query.
@@ -54,6 +67,16 @@ const REFRESH_BATCH: usize = 64;
 
 impl QueryEngine {
     pub fn new(cfg: &PdaConfig, store: Arc<RemoteStore>) -> Self {
+        Self::new_with_recorder(cfg, store, None)
+    }
+
+    /// Like [`QueryEngine::new`], with fetch-coalescer telemetry mirrored
+    /// into `recorder` (the serving stack's metrics).
+    pub fn new_with_recorder(
+        cfg: &PdaConfig,
+        store: Arc<RemoteStore>,
+        recorder: Option<Arc<Recorder>>,
+    ) -> Self {
         let cache = Arc::new(ShardedCache::new(
             cfg.cache_capacity,
             cfg.cache_shards,
@@ -65,6 +88,26 @@ impl QueryEngine {
             }
             _ => None,
         };
+        let store_errors = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let zero_row: Arc<[f32]> = vec![0.0f32; store.schema().dense_dims].into();
+        let (fetch_coalescer, fetch_flusher) =
+            if cfg.fetch_coalesce && cfg.cache_mode == CacheMode::Sync {
+                let co = Arc::new(FetchCoalescer::new(
+                    cfg.fetch_wait_us,
+                    Arc::clone(&store),
+                    Arc::clone(&cache),
+                    Arc::clone(&store_errors),
+                    recorder,
+                ));
+                let runner = Arc::clone(&co);
+                let handle = std::thread::Builder::new()
+                    .name("pda-fetch-flush".into())
+                    .spawn(move || runner.run_flusher())
+                    .expect("spawn fetch flusher");
+                (Some(co), Some(handle))
+            } else {
+                (None, None)
+            };
         QueryEngine {
             mode: cfg.cache_mode,
             cache,
@@ -73,7 +116,10 @@ impl QueryEngine {
             in_refresh: Arc::new(Mutex::new(HashSet::new())),
             pending: Arc::new(Mutex::new(Vec::new())),
             drain_scheduled: Arc::new(AtomicBool::new(false)),
-            store_errors: Arc::new(std::sync::atomic::AtomicU64::new(0)),
+            store_errors,
+            zero_row,
+            fetch_coalescer,
+            fetch_flusher,
         }
     }
 
@@ -112,11 +158,7 @@ impl QueryEngine {
                 Lookup::Miss => {
                     self.spawn_refresh(id);
                     // empty result now; features arrive for later requests
-                    let dims = self.store.schema().dense_dims;
-                    out.push((
-                        ItemFeatures { item_id: id, dense: vec![0.0; dims], version: u64::MAX },
-                        FetchClass::MissDefault,
-                    ));
+                    out.push((self.default_features(id), FetchClass::MissDefault));
                 }
             }
         }
@@ -135,38 +177,66 @@ impl QueryEngine {
             }
         }
         if !need.is_empty() {
-            // one batched blocking query for all misses of this request
-            let ids: Vec<u64> = need.iter().map(|&(_, id, _)| id).collect();
-            match self.store.try_fetch_batch(&ids) {
-                Ok(fetched) => {
-                    for ((i, _, _), f) in need.into_iter().zip(fetched) {
-                        self.cache.insert(f.item_id, f.clone());
-                        out[i] = Some((f, FetchClass::Remote));
-                    }
-                }
-                Err(_) => {
-                    // graceful degradation: stale value when we have one,
-                    // zero-default otherwise — never fail the request on
-                    // a feature-service timeout
-                    self.store_errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let dims = self.store.schema().dense_dims;
-                    for (i, id, stale) in need {
-                        out[i] = Some(match stale {
+            if let Some(co) = &self.fetch_coalescer {
+                // coalesced path: misses single-flight per id and pack
+                // into shared multiget batches with other in-flight
+                // requests (values are identical either way — the store
+                // is deterministic per (id, epoch))
+                let ids: Vec<u64> = need.iter().map(|&(_, id, _)| id).collect();
+                let fetched = co.fetch(&ids);
+                for ((i, id, stale), f) in need.into_iter().zip(fetched) {
+                    out[i] = Some(match f {
+                        Some(f) => (f, FetchClass::Remote),
+                        // store failed for this id's batch: degrade like
+                        // the uncoalesced path below
+                        None => match stale {
                             Some(f) => (f, FetchClass::Stale),
-                            None => (
-                                ItemFeatures {
-                                    item_id: id,
-                                    dense: vec![0.0; dims],
-                                    version: u64::MAX,
-                                },
-                                FetchClass::MissDefault,
-                            ),
-                        });
+                            None => (self.default_features(id), FetchClass::MissDefault),
+                        },
+                    });
+                }
+            } else {
+                // one batched blocking query for all misses of this request
+                let ids: Vec<u64> = need.iter().map(|&(_, id, _)| id).collect();
+                match self.store.try_fetch_batch(&ids) {
+                    Ok(fetched) => {
+                        for ((i, _, _), f) in need.into_iter().zip(fetched) {
+                            self.cache.insert(f.item_id, f.clone());
+                            out[i] = Some((f, FetchClass::Remote));
+                        }
+                    }
+                    Err(_) => {
+                        // graceful degradation: stale value when we have
+                        // one, zero-default otherwise — never fail the
+                        // request on a feature-service timeout
+                        self.store_errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        for (i, id, stale) in need {
+                            out[i] = Some(match stale {
+                                Some(f) => (f, FetchClass::Stale),
+                                None => (self.default_features(id), FetchClass::MissDefault),
+                            });
+                        }
                     }
                 }
             }
         }
         out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    /// The degraded well-formed input for a missing item: the shared
+    /// zero row (one allocation per schema, refcounted per miss).
+    fn default_features(&self, id: u64) -> ItemFeatures {
+        ItemFeatures { item_id: id, dense: Arc::clone(&self.zero_row), version: u64::MAX }
+    }
+
+    /// Whether the cross-request miss coalescer is active.
+    pub fn fetch_coalesce_enabled(&self) -> bool {
+        self.fetch_coalescer.is_some()
+    }
+
+    /// Miss-coalescer counters (zeroes when it is off).
+    pub fn fetch_coalesce_stats(&self) -> FetchCoalesceStats {
+        self.fetch_coalescer.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
     fn spawn_refresh(&self, id: u64) {
@@ -236,6 +306,19 @@ impl QueryEngine {
     pub fn drain_refreshes(&self) {
         if let Some(p) = &self.refresh_pool {
             p.wait_idle();
+        }
+    }
+}
+
+impl Drop for QueryEngine {
+    fn drop(&mut self) {
+        // Stop the fetch flusher; it resolves any parked waiters by
+        // draining open batches on the way out.
+        if let Some(co) = &self.fetch_coalescer {
+            co.begin_shutdown();
+        }
+        if let Some(handle) = self.fetch_flusher.take() {
+            let _ = handle.join();
         }
     }
 }
@@ -331,6 +414,68 @@ mod tests {
         // after refresh the new epoch's version is visible (fresh or stale
         // depending on ttl, but the *value* must be updated)
         assert_eq!(r2[0].0.version, 1);
+    }
+
+    fn coalesce_cfg(wait_us: u64) -> PdaConfig {
+        PdaConfig { fetch_coalesce: true, fetch_wait_us: wait_us, ..cfg(CacheMode::Sync) }
+    }
+
+    #[test]
+    fn sync_coalesced_values_match_uncoalesced() {
+        let (sa, sb) = (store(), store()); // same seed: identical features
+        let plain = QueryEngine::new(&cfg(CacheMode::Sync), Arc::clone(&sa));
+        let co = QueryEngine::new(&coalesce_cfg(200), Arc::clone(&sb));
+        let expected = plain.fetch(&[1, 2, 3, 4]);
+        let got = co.fetch(&[1, 2, 3, 4]);
+        assert_eq!(expected, got, "coalesced fetch must return identical features");
+        // and the cache is populated: the repeat is fully local
+        let again = co.fetch(&[1, 2, 3, 4]);
+        assert!(again.iter().all(|(_, c)| *c == FetchClass::Fresh));
+        assert_eq!(sb.link().queries_total(), 1, "one merged multiget for the first fetch");
+    }
+
+    #[test]
+    fn sync_coalesced_hot_misses_pay_one_round_trip() {
+        const N: usize = 6;
+        let s = store();
+        // window wide enough that even a badly descheduled thread joins
+        // the open batch instead of becoming a second leader
+        let e = Arc::new(QueryEngine::new(&coalesce_cfg(200_000), Arc::clone(&s)));
+        let barrier = Arc::new(std::sync::Barrier::new(N));
+        let got: Vec<Vec<(ItemFeatures, FetchClass)>> = std::thread::scope(|sc| {
+            let hs: Vec<_> = (0..N)
+                .map(|_| {
+                    let e = Arc::clone(&e);
+                    let barrier = Arc::clone(&barrier);
+                    sc.spawn(move || {
+                        barrier.wait();
+                        e.fetch(&[99, 100])
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in &got {
+            assert_eq!(r, &got[0]);
+        }
+        assert_eq!(
+            s.link().queries_total(),
+            1,
+            "N concurrent requests missing the same ids must share one multiget"
+        );
+        let stats = e.fetch_coalesce_stats();
+        assert_eq!(stats.batched_ids, 2);
+        assert_eq!(stats.riders as usize, 2 * (N - 1));
+    }
+
+    #[test]
+    fn miss_defaults_share_one_zero_row() {
+        let s = store();
+        let e = QueryEngine::new(&cfg(CacheMode::Async), Arc::clone(&s));
+        let a = e.fetch(&[1])[0].0.dense.clone();
+        let b = e.fetch(&[2])[0].0.dense.clone();
+        assert!(a.iter().all(|&x| x == 0.0));
+        assert!(Arc::ptr_eq(&a, &b), "miss defaults must share one allocation");
     }
 
     #[test]

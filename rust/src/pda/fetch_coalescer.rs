@@ -1,0 +1,487 @@
+//! Cross-request feature-miss coalescer: single-flights concurrent
+//! cache misses per item id and packs them into shared remote multiget
+//! batches (the PDA-side sibling of the DSO batch coalescer).
+//!
+//! Without it, `QueryEngine::fetch_sync` issues one blocking remote
+//! query per request — K concurrent requests missing the same hot Zipf
+//! id pay K `Link` round-trips for one value. With it, the first miss
+//! of an id becomes that id's **leader** (a [`Ticket`] is opened and
+//! the id joins a pending batch); every later miss of the same id while
+//! the fetch is in flight becomes a **rider** that just waits on the
+//! ticket. Pending ids accumulate in per-shard slots; a batch is
+//! executed when it fills ([`FETCH_BATCH`] ids) or when its
+//! `fetch_wait_us` deadline expires — so the added per-request latency
+//! is bounded, exactly like the DSO coalescer's `coalesce_wait_us`.
+//!
+//! The deadline flusher **merges expired batches across shards into one
+//! multiget** (they all target the same store): a lone request whose
+//! misses spread over several shards still pays a single round-trip,
+//! same as the uncoalesced path — every batch one `fetch` call opens
+//! shares a single deadline, so the flusher always collects them
+//! together, and a small grace window (`merge_grace`, bounded by half
+//! the wait) additionally merges batches opened by nearly-simultaneous
+//! calls.
+//!
+//! Locking mirrors `dso::coalescer`: per-shard slot mutexes are never
+//! held while taking the flusher's signal mutex, so the two orders
+//! cannot deadlock; the flusher takes slot locks briefly, one at a
+//! time, under `signal`. Ticket resolution happens after the remote
+//! fetch completes, cache-insert first, so a waiter that re-probes the
+//! cache immediately after waking hits.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cache::ShardedCache;
+use crate::featurestore::{ItemFeatures, RemoteStore};
+use crate::metrics::Recorder;
+
+/// Max ids folded into one coalesced multiget (fill-triggered flush).
+pub const FETCH_BATCH: usize = 64;
+
+/// Pending-slot shards. Few on purpose: each open batch is one remote
+/// query at flush, so fragmenting the pending set costs round-trips,
+/// while the slot mutexes are held only for a map probe + push.
+const FETCH_SHARDS: usize = 4;
+
+/// One id's in-flight fetch: the leader resolves it, riders wait on it.
+struct Ticket {
+    /// `None` until resolved; `Some(None)` = the store failed and the
+    /// waiter must fall back (stale value / zero default).
+    state: Mutex<Option<Option<ItemFeatures>>>,
+    cv: Condvar,
+}
+
+impl Ticket {
+    fn new() -> Self {
+        Ticket { state: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn resolve(&self, value: Option<ItemFeatures>) {
+        let mut st = self.state.lock().unwrap();
+        *st = Some(value);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Option<ItemFeatures> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = &*st {
+                return v.clone();
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// An open (not yet executed) pending batch of leader ids.
+struct OpenBatch {
+    ids: Vec<u64>,
+    deadline: Instant,
+}
+
+struct Shard {
+    /// id -> ticket for every fetch currently in flight through this
+    /// coalescer (whether its batch is still open or already executing).
+    inflight: HashMap<u64, Arc<Ticket>>,
+    open: Option<OpenBatch>,
+}
+
+/// Counters snapshot (CLI, benches, tests).
+#[derive(Clone, Debug, Default)]
+pub struct FetchCoalesceStats {
+    /// Ids that rode another request's in-flight fetch (the saved
+    /// round-trips live here).
+    pub riders: u64,
+    /// Coalesced multiget queries executed against the store.
+    pub batches: u64,
+    /// Leader ids fetched by those batches.
+    pub batched_ids: u64,
+    /// Deadline flushes that merged ≥ 2 shards' batches into one query.
+    pub merged_flushes: u64,
+}
+
+/// The coalescer proper. Owned by `QueryEngine` (sync cache mode only);
+/// a dedicated flusher thread drives the deadline path.
+pub(crate) struct FetchCoalescer {
+    shards: Vec<Mutex<Shard>>,
+    /// Flusher parking lot — see module docs for the lock order.
+    signal: Mutex<()>,
+    cv: Condvar,
+    wait: Duration,
+    merge_grace: Duration,
+    store: Arc<RemoteStore>,
+    cache: Arc<ShardedCache<ItemFeatures>>,
+    store_errors: Arc<AtomicU64>,
+    shutdown: AtomicBool,
+    riders: AtomicU64,
+    batches: AtomicU64,
+    batched_ids: AtomicU64,
+    merged_flushes: AtomicU64,
+    recorder: Option<Arc<Recorder>>,
+}
+
+impl FetchCoalescer {
+    pub(crate) fn new(
+        wait_us: u64,
+        store: Arc<RemoteStore>,
+        cache: Arc<ShardedCache<ItemFeatures>>,
+        store_errors: Arc<AtomicU64>,
+        recorder: Option<Arc<Recorder>>,
+    ) -> Self {
+        let wait = Duration::from_micros(wait_us.max(1));
+        FetchCoalescer {
+            shards: (0..FETCH_SHARDS)
+                .map(|_| Mutex::new(Shard { inflight: HashMap::new(), open: None }))
+                .collect(),
+            signal: Mutex::new(()),
+            cv: Condvar::new(),
+            wait,
+            // batches opened by one request differ by µs; flushing ≤ this
+            // much early merges them into one query and is harmless
+            merge_grace: (wait / 2).min(Duration::from_micros(50)),
+            store,
+            cache,
+            store_errors,
+            shutdown: AtomicBool::new(false),
+            riders: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_ids: AtomicU64::new(0),
+            merged_flushes: AtomicU64::new(0),
+            recorder,
+        }
+    }
+
+    #[inline]
+    fn shard_of(&self, id: u64) -> usize {
+        (id.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 61) as usize & (FETCH_SHARDS - 1)
+    }
+
+    /// Fetch `ids` through the coalescer, blocking until every id is
+    /// resolved. Returns per-id results aligned with the input; `None`
+    /// means the store failed for that id's batch (the caller degrades
+    /// to stale/default, same as the uncoalesced path).
+    pub(crate) fn fetch(&self, ids: &[u64]) -> Vec<Option<ItemFeatures>> {
+        let mut tickets: Vec<Arc<Ticket>> = Vec::with_capacity(ids.len());
+        let mut filled: Vec<Vec<u64>> = Vec::new();
+        let mut opened = false;
+        // one deadline for every batch this call opens: however the
+        // thread is scheduled mid-loop, the flusher sees identical
+        // deadlines and merges a lone request's cross-shard misses into
+        // one multiget deterministically
+        let deadline = Instant::now() + self.wait;
+        for &id in ids {
+            let mut shard = self.shards[self.shard_of(id)].lock().unwrap();
+            if let Some(t) = shard.inflight.get(&id) {
+                // rider: someone is already fetching this id
+                tickets.push(Arc::clone(t));
+                self.riders.fetch_add(1, Ordering::Relaxed);
+                if let Some(rec) = &self.recorder {
+                    rec.record_fetch_coalesced();
+                }
+                continue;
+            }
+            let ticket = Arc::new(Ticket::new());
+            shard.inflight.insert(id, Arc::clone(&ticket));
+            tickets.push(ticket);
+            let batch = shard.open.get_or_insert_with(|| {
+                opened = true;
+                OpenBatch { ids: Vec::with_capacity(FETCH_BATCH), deadline }
+            });
+            batch.ids.push(id);
+            if batch.ids.len() >= FETCH_BATCH {
+                filled.push(shard.open.take().unwrap().ids);
+            }
+        }
+        if opened {
+            // a fresh batch sets a new earliest deadline; notify under
+            // the signal mutex (never while a shard lock is held) so the
+            // flusher cannot miss it between its scan and its wait
+            let _parked = self.signal.lock().unwrap();
+            self.cv.notify_all();
+        }
+        for ids in filled {
+            self.execute(&ids, false);
+        }
+        tickets.iter().map(|t| t.wait()).collect()
+    }
+
+    /// Run one remote multiget for `ids` and resolve their tickets —
+    /// cache-insert first, so waiters (and fresh probes) hit immediately.
+    /// A store timeout resolves every ticket with `None`; nothing ever
+    /// leaves a waiter parked.
+    fn execute(&self, ids: &[u64], merged: bool) {
+        debug_assert!(!ids.is_empty());
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_ids.fetch_add(ids.len() as u64, Ordering::Relaxed);
+        if merged {
+            self.merged_flushes.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(rec) = &self.recorder {
+            rec.record_fetch_batch();
+        }
+        match self.store.try_fetch_batch(ids) {
+            Ok(fetched) => {
+                for f in fetched {
+                    self.cache.insert(f.item_id, f.clone());
+                    self.resolve(f.item_id, Some(f));
+                }
+            }
+            Err(_) => {
+                self.store_errors.fetch_add(1, Ordering::Relaxed);
+                for &id in ids {
+                    self.resolve(id, None);
+                }
+            }
+        }
+    }
+
+    fn resolve(&self, id: u64, value: Option<ItemFeatures>) {
+        let ticket = self.shards[self.shard_of(id)].lock().unwrap().inflight.remove(&id);
+        if let Some(t) = ticket {
+            t.resolve(value);
+        }
+    }
+
+    /// Deadline watcher: merges expired shard batches into one multiget;
+    /// parked on the condvar otherwise. Runs on a dedicated thread until
+    /// [`FetchCoalescer::begin_shutdown`].
+    pub(crate) fn run_flusher(&self) {
+        let mut parked = self.signal.lock().unwrap();
+        loop {
+            if self.shutdown.load(Ordering::Acquire) {
+                drop(parked);
+                // drain: resolve every open batch so no waiter is left
+                let leftover = self.collect_expired(Instant::now() + self.wait + self.wait);
+                if !leftover.is_empty() {
+                    self.execute(&leftover, false);
+                }
+                return;
+            }
+            let now = Instant::now();
+            let expired = self.collect_expired(now + self.merge_grace);
+            if !expired.is_empty() {
+                let merged = {
+                    // merged = ids from > 1 shard; cheap proxy: did more
+                    // than one shard contribute? Track via shard spread.
+                    expired.len() > 1
+                        && expired.iter().any(|&a| self.shard_of(a) != self.shard_of(expired[0]))
+                };
+                drop(parked);
+                self.execute(&expired, merged);
+                parked = self.signal.lock().unwrap();
+                continue;
+            }
+            let next = self.earliest_deadline();
+            parked = match next {
+                None => self.cv.wait(parked).unwrap(),
+                Some(deadline) => {
+                    self.cv
+                        .wait_timeout(parked, deadline.saturating_duration_since(now))
+                        .unwrap()
+                        .0
+                }
+            };
+        }
+    }
+
+    /// Take every open batch whose deadline is at or before `cutoff`,
+    /// merged into one id list. Shard locks are taken briefly, one at a
+    /// time (under `signal` when called from the flusher — same order
+    /// discipline as `dso::Coalescer`).
+    fn collect_expired(&self, cutoff: Instant) -> Vec<u64> {
+        let mut ids = Vec::new();
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            if s.open.as_ref().is_some_and(|b| b.deadline <= cutoff) {
+                ids.extend(s.open.take().unwrap().ids);
+            }
+        }
+        ids
+    }
+
+    fn earliest_deadline(&self) -> Option<Instant> {
+        let mut next: Option<Instant> = None;
+        for shard in &self.shards {
+            let s = shard.lock().unwrap();
+            if let Some(b) = &s.open {
+                next = Some(next.map_or(b.deadline, |n| n.min(b.deadline)));
+            }
+        }
+        next
+    }
+
+    /// Stop the flusher (it drains open batches on the way out).
+    pub(crate) fn begin_shutdown(&self) {
+        let _parked = self.signal.lock().unwrap();
+        self.shutdown.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn stats(&self) -> FetchCoalesceStats {
+        FetchCoalesceStats {
+            riders: self.riders.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_ids: self.batched_ids.load(Ordering::Relaxed),
+            merged_flushes: self.merged_flushes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featurestore::FeatureSchema;
+    use crate::netsim::{Link, LinkConfig};
+    use std::sync::Barrier;
+
+    fn parts() -> (Arc<RemoteStore>, Arc<ShardedCache<ItemFeatures>>) {
+        let link = Arc::new(Link::new(LinkConfig {
+            rtt: Duration::from_micros(300),
+            bandwidth_bps: 1e9,
+            jitter: 0.0,
+            fail_rate: 0.0,
+        }));
+        let store = Arc::new(RemoteStore::new(FeatureSchema::default(), link, 11));
+        let cache = Arc::new(ShardedCache::new(1024, 4, Duration::from_secs(60)));
+        (store, cache)
+    }
+
+    fn spawn(co: &Arc<FetchCoalescer>) -> std::thread::JoinHandle<()> {
+        let runner = Arc::clone(co);
+        std::thread::spawn(move || runner.run_flusher())
+    }
+
+    #[test]
+    fn concurrent_same_id_single_flights() {
+        const N: usize = 8;
+        let (store, cache) = parts();
+        let errors = Arc::new(AtomicU64::new(0));
+        // window wide enough that all N threads join before the flush,
+        // even when a thread is badly descheduled after the barrier
+        let co = Arc::new(FetchCoalescer::new(
+            200_000,
+            Arc::clone(&store),
+            cache,
+            errors,
+            None,
+        ));
+        let flusher = spawn(&co);
+        let barrier = Arc::new(Barrier::new(N));
+        let got: Vec<Option<ItemFeatures>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..N)
+                .map(|_| {
+                    let co = Arc::clone(&co);
+                    let barrier = Arc::clone(&barrier);
+                    s.spawn(move || {
+                        barrier.wait();
+                        co.fetch(&[42]).pop().unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let first = got[0].clone().expect("fetch succeeded");
+        assert!(got.iter().all(|g| g.as_ref() == Some(&first)));
+        assert_eq!(store.link().queries_total(), 1, "one round-trip for N concurrent misses");
+        let stats = co.stats();
+        assert_eq!(stats.batched_ids, 1);
+        assert_eq!(stats.riders as usize, N - 1);
+        co.begin_shutdown();
+        flusher.join().unwrap();
+    }
+
+    #[test]
+    fn lone_request_cross_shard_misses_merge_into_one_query() {
+        let (store, cache) = parts();
+        let co = Arc::new(FetchCoalescer::new(
+            200,
+            Arc::clone(&store),
+            cache,
+            Arc::new(AtomicU64::new(0)),
+            None,
+        ));
+        let flusher = spawn(&co);
+        // ids chosen to spread over shards; none fill a batch, so the
+        // deadline flusher must merge them into a single multiget
+        let ids: Vec<u64> = (0..12).collect();
+        let got = co.fetch(&ids);
+        assert!(got.iter().all(|g| g.is_some()));
+        assert_eq!(
+            store.link().queries_total(),
+            1,
+            "cross-shard partial batches must merge at the deadline"
+        );
+        co.begin_shutdown();
+        flusher.join().unwrap();
+    }
+
+    #[test]
+    fn filled_batch_executes_without_waiting_for_deadline() {
+        let (store, cache) = parts();
+        // wait long enough that a deadline flush inside this test would fail it
+        let co = Arc::new(FetchCoalescer::new(
+            2_000_000,
+            Arc::clone(&store),
+            cache,
+            Arc::new(AtomicU64::new(0)),
+            None,
+        ));
+        let flusher = spawn(&co);
+        // FETCH_BATCH ids all hashing to one shard: that batch fills
+        // exactly, so the flush is fill-triggered, not deadline-driven
+        let shard0 = co.shard_of(0);
+        let ids: Vec<u64> = (0..).filter(|&i| co.shard_of(i) == shard0).take(FETCH_BATCH).collect();
+        let t0 = Instant::now();
+        let got = co.fetch(&ids);
+        assert!(t0.elapsed() < Duration::from_secs(1), "fill-triggered flush did not fire");
+        assert!(got.iter().all(|g| g.is_some()));
+        assert_eq!(store.link().queries_total(), 1);
+        co.begin_shutdown();
+        flusher.join().unwrap();
+    }
+
+    #[test]
+    fn store_failure_resolves_waiters_with_none() {
+        let link = Arc::new(Link::new(LinkConfig {
+            rtt: Duration::from_micros(100),
+            bandwidth_bps: 1e9,
+            jitter: 0.0,
+            fail_rate: 1.0, // every transfer times out
+        }));
+        let store = Arc::new(RemoteStore::new(FeatureSchema::default(), link, 11));
+        let cache = Arc::new(ShardedCache::new(64, 2, Duration::from_secs(60)));
+        let errors = Arc::new(AtomicU64::new(0));
+        let co = Arc::new(FetchCoalescer::new(100, store, cache, Arc::clone(&errors), None));
+        let flusher = spawn(&co);
+        let got = co.fetch(&[1, 2, 3]);
+        assert!(got.iter().all(|g| g.is_none()), "failed batch must resolve with None");
+        assert!(errors.load(Ordering::Relaxed) >= 1);
+        co.begin_shutdown();
+        flusher.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_open_batches() {
+        let (store, cache) = parts();
+        let co = Arc::new(FetchCoalescer::new(
+            5_000_000, // far future deadline: only shutdown can flush
+            Arc::clone(&store),
+            cache,
+            Arc::new(AtomicU64::new(0)),
+            None,
+        ));
+        let flusher = spawn(&co);
+        let waiter = {
+            let co = Arc::clone(&co);
+            std::thread::spawn(move || co.fetch(&[7]))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        co.begin_shutdown();
+        flusher.join().unwrap();
+        let got = waiter.join().unwrap();
+        assert!(got[0].is_some(), "shutdown drain must resolve parked waiters");
+    }
+}

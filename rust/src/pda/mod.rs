@@ -2,15 +2,19 @@
 //!
 //! Everything between a raw request and the tensors the GPU-side engine
 //! consumes: the cached feature-query engine (async stale-while-
-//! revalidate / sync modes, Fig 5), NUMA-affinity core binding, and the
-//! pinned-memory-style staging arenas that batch many small feature
-//! copies into contiguous transfer buffers.
+//! revalidate / sync modes, Fig 5), the cross-request feature-miss
+//! coalescer (single-flight + shared multiget batches on the sync miss
+//! path), NUMA-affinity core binding, and the pinned-memory-style
+//! staging arenas that batch many small feature copies into contiguous
+//! transfer buffers (pooled for the decoupled pipeline).
 
 pub mod assembler;
 pub mod engine;
+pub mod fetch_coalescer;
 pub mod numa;
 pub mod staging;
 
 pub use assembler::{AssembledInput, InputAssembler};
 pub use engine::QueryEngine;
-pub use staging::StagingArena;
+pub use fetch_coalescer::FetchCoalesceStats;
+pub use staging::{ArenaPool, StagingArena};

@@ -12,12 +12,17 @@
 pub struct StagingArena {
     buf: Vec<f32>,
     len: usize,
+    /// Times `alloc` had to grow the buffer past its preallocated
+    /// capacity. Steady-state serving must keep this at zero (a growth
+    /// is a hidden pageable reallocation — exactly what arenas exist to
+    /// avoid); the pipeline mirrors the count into `metrics::Recorder`.
+    growths: u64,
 }
 
 impl StagingArena {
     /// Preallocate `capacity` f32 slots.
     pub fn new(capacity: usize) -> Self {
-        StagingArena { buf: vec![0.0; capacity], len: 0 }
+        StagingArena { buf: vec![0.0; capacity], len: 0, growths: 0 }
     }
 
     pub fn capacity(&self) -> usize {
@@ -32,6 +37,11 @@ impl StagingArena {
         self.len == 0
     }
 
+    /// Growths since construction (see the field doc).
+    pub fn growth_count(&self) -> u64 {
+        self.growths
+    }
+
     /// Reset write position (no dealloc/realloc — that's the point).
     pub fn reset(&mut self) {
         self.len = 0;
@@ -43,6 +53,7 @@ impl StagingArena {
     pub fn alloc(&mut self, n: usize) -> Region {
         if self.len + n > self.buf.len() {
             self.buf.resize((self.len + n).next_power_of_two(), 0.0);
+            self.growths += 1;
         }
         let r = Region { start: self.len, len: n };
         self.len += n;
@@ -75,6 +86,71 @@ pub struct Region {
     pub len: usize,
 }
 
+/// A bounded pool of staging arenas shared between the pipeline's
+/// feature-stage workers and compute-stage submitters.
+///
+/// In the decoupled pipeline an arena's lifetime spans two threads: a
+/// feature worker assembles into it, the staged request rides the
+/// handoff queue, and a compute submitter holds it until the DSO
+/// orchestrator has consumed its tensor views — only then does it
+/// return here. A fixed arena set bounds staging memory; `get` blocks
+/// when every arena is in flight, which is part of the pipeline's
+/// backpressure chain (feature workers stall → the intake queue fills →
+/// admission sheds).
+pub struct ArenaPool {
+    arenas: std::sync::Mutex<Vec<StagingArena>>,
+    available: std::sync::Condvar,
+    total: usize,
+}
+
+impl ArenaPool {
+    /// Pre-create `n` arenas of `capacity` f32 slots each.
+    pub fn new(n: usize, capacity: usize) -> Self {
+        let n = n.max(1);
+        ArenaPool {
+            arenas: std::sync::Mutex::new(
+                (0..n).map(|_| StagingArena::new(capacity)).collect(),
+            ),
+            available: std::sync::Condvar::new(),
+            total: n,
+        }
+    }
+
+    /// Take an arena, blocking until one returns if all are in flight.
+    pub fn get(&self) -> StagingArena {
+        let mut g = self.arenas.lock().unwrap();
+        loop {
+            if let Some(a) = g.pop() {
+                return a;
+            }
+            g = self.available.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking take (tests/diagnostics).
+    pub fn try_get(&self) -> Option<StagingArena> {
+        self.arenas.lock().unwrap().pop()
+    }
+
+    /// Return an arena after its views have been consumed. The arena is
+    /// reset here so the next `get` never observes a stale write offset.
+    pub fn put(&self, mut arena: StagingArena) {
+        arena.reset();
+        self.arenas.lock().unwrap().push(arena);
+        self.available.notify_one();
+    }
+
+    /// Arenas the pool was built with.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Arenas currently checked in (idle).
+    pub fn idle(&self) -> usize {
+        self.arenas.lock().unwrap().len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,9 +181,50 @@ mod tests {
     #[test]
     fn grows_beyond_capacity() {
         let mut a = StagingArena::new(4);
+        assert_eq!(a.growth_count(), 0);
         let r = a.stage(&[0.5; 10]);
         assert_eq!(a.slice(r).len(), 10);
         assert!(a.capacity() >= 10);
+        assert_eq!(a.growth_count(), 1, "growth must be counted");
+        // within the grown capacity: no further growth
+        a.reset();
+        a.stage(&[0.5; 10]);
+        assert_eq!(a.growth_count(), 1);
+    }
+
+    #[test]
+    fn pool_reuses_and_resets_arenas() {
+        let pool = ArenaPool::new(1, 16);
+        assert_eq!((pool.total(), pool.idle()), (1, 1));
+        let mut a = pool.get();
+        assert_eq!(pool.idle(), 0);
+        let r = a.alloc(8);
+        let p0 = a.slice(r).as_ptr();
+        assert_eq!(a.len(), 8);
+        pool.put(a);
+        let b = pool.get();
+        assert_eq!(b.len(), 0, "returned arena must come back reset");
+        assert_eq!(b.slice(Region { start: 0, len: 1 }).as_ptr(), p0, "same buffer reused");
+        assert!(pool.try_get().is_none(), "single-arena pool is exhausted");
+        pool.put(b);
+    }
+
+    #[test]
+    fn pool_get_blocks_until_put() {
+        let pool = std::sync::Arc::new(ArenaPool::new(1, 8));
+        let a = pool.get();
+        let waiter = {
+            let pool = std::sync::Arc::clone(&pool);
+            std::thread::spawn(move || {
+                let _a = pool.get();
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // can only trip if get() handed out an arena that was never
+        // returned — never because the waiter merely started late
+        assert!(!waiter.is_finished(), "get returned without an available arena");
+        pool.put(a);
+        waiter.join().unwrap();
     }
 
     #[test]

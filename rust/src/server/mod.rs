@@ -1,9 +1,12 @@
 //! The serving front: the full request pipeline (PDA feature stage →
-//! DSO compute stage → response), the in-process serving stack the
-//! examples/benches drive, and a TCP front with a length-prefixed binary
-//! protocol for out-of-process clients.
+//! DSO compute stage → response), the decoupled two-stage mode where the
+//! stages overlap across requests (`stages`), the in-process serving
+//! stack the examples/benches drive, and a TCP front with a
+//! length-prefixed binary protocol for out-of-process clients.
 
 pub mod pipeline;
+pub mod stages;
 pub mod tcp;
 
-pub use pipeline::{ServingStack, StackBuilder, Response};
+pub use pipeline::{Response, ServingStack, StackBuilder};
+pub use stages::PipelineHandle;

@@ -9,16 +9,18 @@
 //!
 //! `ServingStack::serve` is the synchronous per-request path used by the
 //! pipeline workers; `ServingStack::spawn_workers` wires a `RequestQueue`
-//! in front (admission + queueing telemetry) for the open-loop mode.
+//! in front (admission + queueing telemetry) for the open-loop mode, and
+//! `ServingStack::spawn_pipeline` starts the decoupled two-stage mode
+//! (see [`super::stages`]) where feature and compute work overlap.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::batching::RequestQueue;
-use crate::config::{StackConfig};
-use crate::dso::Orchestrator;
+use crate::config::{ModelConfig, StackConfig};
+use crate::dso::{ComputeBackend, Orchestrator};
 use crate::embedding::EmbeddingTable;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::featurestore::{FeatureSchema, RemoteStore};
 use crate::manifest::Manifest;
 use crate::metrics::Recorder;
@@ -40,6 +42,12 @@ pub struct Response {
     pub feature_us: u64,
     /// Executor-queue delay before the first DSO chunk started, µs.
     pub queue_us: u64,
+    /// Decoupled-pipeline stage wait: time the staged input sat in the
+    /// handoff queue between the feature stage finishing and a compute
+    /// submitter picking it up, µs. Always 0 on the synchronous path —
+    /// a nonzero value is the visible cost (and proof) of the two-stage
+    /// split; mean/p99 aggregates live in `MetricsSnapshot::handoff_*`.
+    pub handoff_us: u64,
 }
 
 /// Builder wiring the whole stack from a manifest + config.
@@ -64,26 +72,78 @@ impl StackBuilder {
     pub fn build(self, runtime: &Runtime, manifest: &Manifest) -> Result<ServingStack> {
         let sa = manifest.scenario(&self.scenario)?;
         let model_cfg = sa.config.clone();
+        let seed = sa.seed;
+        let engines = runtime.load_profile_set(manifest, &self.scenario, &self.variant)?;
+        let backends: Vec<Arc<dyn ComputeBackend>> = engines
+            .into_iter()
+            .map(|e| Arc::new(e) as Arc<dyn ComputeBackend>)
+            .collect();
+        self.wire(model_cfg, seed, backends)
+    }
+
+    /// Artifact-free assembly over explicit compute backends (e.g.
+    /// [`crate::dso::SimEngine`]) — identical wiring to [`StackBuilder::build`],
+    /// no PJRT runtime or manifest needed. Tests and benches use this to
+    /// exercise the full serve path (PDA → handoff → DSO) on a bare
+    /// checkout.
+    pub fn build_from_backends(
+        self,
+        model_cfg: ModelConfig,
+        seed: u64,
+        backends: Vec<Arc<dyn ComputeBackend>>,
+    ) -> Result<ServingStack> {
+        // every backend must agree with the model config (the
+        // orchestrator cross-checks d_model/n_tasks between backends but
+        // never hist_len) — a mismatch must be a build-time Config error,
+        // not a per-request failure at serve time
+        let hist_len = model_cfg.seq_len * model_cfg.d_model;
+        for b in &backends {
+            if b.d_model() != model_cfg.d_model || b.hist_len() != hist_len {
+                return Err(Error::Config(format!(
+                    "backend {} shape disagrees with model config (d={}, L={})",
+                    b.label(),
+                    model_cfg.d_model,
+                    model_cfg.seq_len
+                )));
+            }
+        }
+        self.wire(model_cfg, seed, backends)
+    }
+
+    fn wire(
+        self,
+        model_cfg: ModelConfig,
+        seed: u64,
+        backends: Vec<Arc<dyn ComputeBackend>>,
+    ) -> Result<ServingStack> {
+        // The recorder is shared by all three layers (PDA fetch
+        // coalescer, DSO batch coalescer, request accounting), so it is
+        // created first.
+        let metrics = Arc::new(Recorder::new());
 
         // PDA side
         let link = self
             .link
             .unwrap_or_else(|| Arc::new(Link::new(LinkConfig::default())));
-        let store = Arc::new(RemoteStore::new(FeatureSchema::default(), Arc::clone(&link), sa.seed));
-        let query = Arc::new(QueryEngine::new(&self.config.pda, Arc::clone(&store)));
-        let table = Arc::new(EmbeddingTable::new(model_cfg.d_model, sa.seed ^ 0xE5, 64 * 1024));
+        let store = Arc::new(RemoteStore::new(FeatureSchema::default(), Arc::clone(&link), seed));
+        let query = Arc::new(QueryEngine::new_with_recorder(
+            &self.config.pda,
+            Arc::clone(&store),
+            Some(Arc::clone(&metrics)),
+        ));
+        let table = Arc::new(EmbeddingTable::new(model_cfg.d_model, seed ^ 0xE5, 64 * 1024));
         let assembler = Arc::new(InputAssembler::new(
             Arc::clone(&table),
             Arc::clone(&query),
             self.config.pda.staging_arenas,
         ));
 
-        // DSO side — the orchestrator mirrors coalescer occupancy into
-        // the stack's recorder, so it is created first and shared.
-        let metrics = Arc::new(Recorder::new());
-        let engines = runtime.load_profile_set(manifest, &self.scenario, &self.variant)?;
-        let orchestrator =
-            Arc::new(Orchestrator::with_recorder(engines, &self.config.dso, Arc::clone(&metrics))?);
+        // DSO side
+        let orchestrator = Arc::new(Orchestrator::from_backends(
+            backends,
+            &self.config.dso,
+            Some(Arc::clone(&metrics)),
+        )?);
 
         Ok(ServingStack {
             config: self.config,
@@ -123,24 +183,18 @@ impl ServingStack {
     /// Serve one request synchronously (the per-worker hot path).
     /// `arena` is the calling worker's staging arena (reused).
     pub fn serve(&self, req: &Request, arena: &mut StagingArena) -> Result<Response> {
-        thread_local! {
-            /// Worker-local scratch for the L-padded history ids — the
-            /// hot path must not clone + resize a fresh Vec per request.
-            static HIST_SCRATCH: std::cell::RefCell<Vec<u64>> =
-                std::cell::RefCell::new(Vec::new());
-        }
         let t0 = Instant::now();
 
         // ---- feature stage (PDA) ----
         let tf = Instant::now();
-        let l = self.model_cfg.seq_len;
-        let assembled = HIST_SCRATCH.with(|scratch| {
-            let mut history = scratch.borrow_mut();
-            history.clear();
-            history.extend_from_slice(&req.history[..req.history.len().min(l)]);
-            history.resize(l, 0); // pad short histories to L
-            self.assembler.assemble(&history, &req.candidates, arena)
-        });
+        let growth0 = arena.growth_count();
+        let assembled =
+            self.assembler
+                .assemble_request(&req.history, self.model_cfg.seq_len, &req.candidates, arena);
+        let grew = arena.growth_count() - growth0;
+        if grew > 0 {
+            self.metrics.record_arena_growth(grew);
+        }
         let (hist, cands) = assembled.views(arena);
         let feature_us = tf.elapsed().as_micros() as u64;
 
@@ -165,6 +219,7 @@ impl ServingStack {
             compute_us: outcome.compute_us,
             feature_us,
             queue_us: outcome.queue_us,
+            handoff_us: 0,
         })
     }
 
@@ -200,6 +255,15 @@ impl ServingStack {
                     .expect("spawn pipeline worker")
             })
             .collect()
+    }
+
+    /// Start the decoupled two-stage pipeline (paper §3.1's CPU-GPU
+    /// decoupling): `config.server.feature_workers` feature-stage
+    /// workers and `config.server.pipeline_workers` compute-stage
+    /// submitters around a bounded handoff queue, arenas drawn from a
+    /// shared pool. See [`super::stages::PipelineHandle`].
+    pub fn spawn_pipeline(self: &Arc<Self>) -> super::stages::PipelineHandle {
+        super::stages::PipelineHandle::spawn(Arc::clone(self))
     }
 
     /// Network utilization snapshot (MB/s since stack start).

@@ -1,0 +1,292 @@
+//! The decoupled two-stage serve pipeline (paper §3.1: feature
+//! pre-processing runs concurrently with model computation, so neither
+//! stage idles the other).
+//!
+//! ```text
+//!            intake (bounded, sheds)        handoff (bounded, blocks)
+//! submit ──▶ RequestQueue<PipelineJob> ──▶ N feature workers ──▶
+//!            RequestQueue<StagedRequest> ──▶ M compute submitters ──▶ reply
+//! ```
+//!
+//! `ServingStack::serve` runs both stages back to back on one thread, so
+//! per-request latency is `feature_us + compute_us` and the worker's CPU
+//! idles during every engine launch. Here the stages are separate thread
+//! pools: while a compute submitter waits on request A's DSO launch, a
+//! feature worker assembles request B — the overlap FLAME's PDA numbers
+//! assume. Staging arenas come from a shared [`ArenaPool`]; an arena
+//! travels with its staged request through the handoff queue and returns
+//! to the pool only after the orchestrator has consumed its tensor views.
+//!
+//! **Backpressure** is a chain of bounded resources, each stalling the
+//! one upstream: compute submitters drain the handoff queue; when they
+//! fall behind, the handoff queue fills and `push_blocking` stalls the
+//! feature workers; stalled feature workers stop draining the intake
+//! queue, whose bounded `push` then sheds new requests (`Overloaded`) at
+//! admission — the same front-door contract as the synchronous mode.
+//!
+//! **Score identity**: the stages run the exact same assembler and
+//! orchestrator code as `serve`, so pipelined scores are bit-identical
+//! to synchronous scores for any request interleaving (property-tested
+//! over `SimEngine` in `tests/pipeline_stage.rs`).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::batching::RequestQueue;
+use crate::error::{Error, Result};
+use crate::pda::{ArenaPool, AssembledInput, StagingArena};
+use crate::workload::driver::DriveReport;
+use crate::workload::Request;
+
+use super::pipeline::{Response, ServingStack};
+
+/// A request admitted into the pipeline, with its reply channel.
+struct PipelineJob {
+    req: Request,
+    reply: Sender<Result<Response>>,
+}
+
+/// Feature-stage output: tensors staged in a pooled arena, en route to a
+/// compute submitter.
+struct StagedRequest {
+    request_id: u64,
+    m: usize,
+    /// The pooled arena holding this request's tensors; returns to the
+    /// pool only after the orchestrator consumed the views.
+    arena: StagingArena,
+    assembled: AssembledInput,
+    feature_us: u64,
+    /// Feature-stage start (overall latency anchor).
+    t0: Instant,
+    reply: Sender<Result<Response>>,
+}
+
+/// Handle to a running two-stage pipeline. Dropping it (or calling
+/// [`PipelineHandle::shutdown`]) closes the intake, drains both stages,
+/// and joins every worker.
+pub struct PipelineHandle {
+    stack: Arc<ServingStack>,
+    intake: Arc<RequestQueue<PipelineJob>>,
+    pool: Arc<ArenaPool>,
+    feature_workers: Vec<JoinHandle<()>>,
+    compute_workers: Vec<JoinHandle<()>>,
+    handoff: Arc<RequestQueue<StagedRequest>>,
+}
+
+impl PipelineHandle {
+    /// Spawn the stage workers per `stack.config.server`: N =
+    /// `feature_workers`, M = `pipeline_workers`, handoff depth
+    /// `handoff_capacity`, intake depth `dso.queue_capacity` (the same
+    /// bound the synchronous open-loop mode uses).
+    pub(crate) fn spawn(stack: Arc<ServingStack>) -> PipelineHandle {
+        let n = stack.config.server.feature_workers.max(1);
+        let m = stack.config.server.pipeline_workers.max(1);
+        let handoff_cap = stack.config.server.handoff_capacity.max(1);
+        let intake: Arc<RequestQueue<PipelineJob>> =
+            RequestQueue::new(stack.config.dso.queue_capacity);
+        let handoff: Arc<RequestQueue<StagedRequest>> = RequestQueue::new(handoff_cap);
+        // Enough arenas that steady state never blocks on the pool: one
+        // per feature worker (being filled), one per handoff slot
+        // (queued), one per compute submitter (being consumed).
+        let pool = Arc::new(ArenaPool::new(n + m + handoff_cap, stack.arena_capacity()));
+
+        let topo = stack.topology.clone();
+        let feature_workers = (0..n)
+            .map(|i| {
+                let stack = Arc::clone(&stack);
+                let intake = Arc::clone(&intake);
+                let handoff = Arc::clone(&handoff);
+                let pool = Arc::clone(&pool);
+                let cpu = topo.cpu_for_worker(i);
+                std::thread::Builder::new()
+                    .name(format!("pda-stage-{i}"))
+                    .spawn(move || {
+                        if stack.config.pda.numa_binding {
+                            let _ = crate::pda::numa::pin_current_thread(cpu);
+                        }
+                        feature_loop(&stack, &intake, &handoff, &pool);
+                    })
+                    .expect("spawn feature-stage worker")
+            })
+            .collect();
+        let compute_workers = (0..m)
+            .map(|i| {
+                let stack = Arc::clone(&stack);
+                let handoff = Arc::clone(&handoff);
+                let pool = Arc::clone(&pool);
+                std::thread::Builder::new()
+                    .name(format!("dso-submit-{i}"))
+                    .spawn(move || compute_loop(&stack, &handoff, &pool))
+                    .expect("spawn compute-stage submitter")
+            })
+            .collect();
+
+        PipelineHandle { stack, intake, pool, feature_workers, compute_workers, handoff }
+    }
+
+    /// Admit a request (shedding on a full intake queue — the
+    /// backpressure front door) and return the response receiver.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
+        let (reply, rx) = channel();
+        self.intake.push(PipelineJob { req, reply })?;
+        Ok(rx)
+    }
+
+    /// Admit a request whose response nobody will read (open-loop
+    /// drivers measure through the recorder instead).
+    pub fn enqueue(&self, req: Request) -> Result<()> {
+        self.submit(req).map(|_| ())
+    }
+
+    /// Admit and block for the response — the closed-loop equivalent of
+    /// `ServingStack::serve`, with the two stages overlapping across
+    /// concurrent callers.
+    pub fn serve(&self, req: &Request) -> Result<Response> {
+        let rx = self.submit(req.clone())?;
+        rx.recv()
+            .map_err(|_| Error::Internal("pipeline shut down mid-request".into()))?
+    }
+
+    /// Closed-loop saturation driver over the pipeline (mirror of
+    /// `ServingStack::drive_closed_loop`): `concurrency` submitters keep
+    /// one request in flight each, so both stages stay busy. Unlike the
+    /// synchronous driver there is no per-thread arena or NUMA pin to
+    /// set up — the stage workers own those — so the generic
+    /// [`crate::workload::driver::closed_loop`] does all the plumbing.
+    pub fn drive_closed_loop(
+        &self,
+        requests: &[Request],
+        concurrency: usize,
+        duration: std::time::Duration,
+    ) -> DriveReport {
+        crate::workload::driver::closed_loop(requests.to_vec(), concurrency, duration, |r| {
+            self.serve(r).is_ok()
+        })
+    }
+
+    /// The serving stack behind the pipeline (metrics, orchestrator).
+    pub fn stack(&self) -> &Arc<ServingStack> {
+        &self.stack
+    }
+
+    /// Arenas currently idle in the pool (diagnostics/tests).
+    pub fn idle_arenas(&self) -> usize {
+        self.pool.idle()
+    }
+
+    /// Requests waiting in the intake queue.
+    pub fn intake_len(&self) -> usize {
+        self.intake.len()
+    }
+
+    /// Drain both stages and join all workers. In-flight requests finish
+    /// (`RequestQueue::close` drains before poppers observe `None`); new
+    /// submits fail.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.intake.close();
+        for w in self.feature_workers.drain(..) {
+            let _ = w.join();
+        }
+        // only close the handoff after every feature worker exited, so
+        // nothing staged is lost
+        self.handoff.close();
+        for w in self.compute_workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for PipelineHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Stage 1: intake → PDA assembly into a pooled arena → handoff. Blocks
+/// on a full handoff queue (that *is* the backpressure) and on arena
+/// exhaustion; exits when the intake closes.
+fn feature_loop(
+    stack: &ServingStack,
+    intake: &RequestQueue<PipelineJob>,
+    handoff: &RequestQueue<StagedRequest>,
+    pool: &ArenaPool,
+) {
+    let l = stack.model_cfg.seq_len;
+    while let Some((job, qdelay)) = intake.pop() {
+        stack.metrics.record_queueing(qdelay.as_micros() as u64);
+        let t0 = Instant::now();
+        let mut arena = pool.get();
+        let growth0 = arena.growth_count();
+        let assembled =
+            stack.assembler.assemble_request(&job.req.history, l, &job.req.candidates, &mut arena);
+        let grew = arena.growth_count() - growth0;
+        if grew > 0 {
+            stack.metrics.record_arena_growth(grew);
+        }
+        let staged = StagedRequest {
+            request_id: job.req.request_id,
+            m: job.req.m(),
+            arena,
+            assembled,
+            feature_us: t0.elapsed().as_micros() as u64,
+            t0,
+            reply: job.reply,
+        };
+        if let Err(staged) = handoff.push_blocking(staged) {
+            // shutdown race: the handoff closed under us — fail the
+            // request explicitly and recycle its arena
+            stack.metrics.record_dropped();
+            let _ = staged
+                .reply
+                .send(Err(Error::Internal("pipeline handoff closed".into())));
+            pool.put(staged.arena);
+        }
+    }
+}
+
+/// Stage 2: handoff → DSO orchestrator → response packaging → arena back
+/// to the pool. The submitter thread blocks inside `submit_slice` while
+/// the executors run the launch — which is exactly when the feature
+/// workers are free to assemble the next requests.
+fn compute_loop(stack: &ServingStack, handoff: &RequestQueue<StagedRequest>, pool: &ArenaPool) {
+    while let Some((staged, stage_wait)) = handoff.pop() {
+        let StagedRequest { request_id, m, arena, assembled, feature_us, t0, reply } = staged;
+        let handoff_us = stage_wait.as_micros() as u64;
+        stack.metrics.record_handoff(handoff_us);
+        let (hist, cands) = assembled.views(&arena);
+        match stack.orchestrator.submit_slice(hist, cands, m) {
+            Ok(outcome) => {
+                let overall_us = t0.elapsed().as_micros() as u64;
+                stack.metrics.record_request(overall_us, m);
+                stack.metrics.record_compute(outcome.compute_us);
+                stack.metrics.record_feature(feature_us);
+                stack.metrics.record_queueing(outcome.queue_us);
+                let _ = reply.send(Ok(Response {
+                    request_id,
+                    scores: outcome.scores,
+                    m,
+                    overall_us,
+                    compute_us: outcome.compute_us,
+                    feature_us,
+                    queue_us: outcome.queue_us,
+                    handoff_us,
+                }));
+            }
+            Err(e) => {
+                stack.metrics.record_dropped();
+                log::warn!("pipelined request {request_id} failed: {e}");
+                let _ = reply.send(Err(e));
+            }
+        }
+        // the orchestrator has copied the views into its own chunk
+        // buffers (and collected the scores) by the time submit_slice
+        // returns — the arena is safe to recycle
+        pool.put(arena);
+    }
+}

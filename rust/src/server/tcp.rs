@@ -311,6 +311,7 @@ mod tests {
             compute_us: 900,
             feature_us: 100,
             queue_us: 30,
+            handoff_us: 0,
         };
         let w = decode_response(&encode_response(&resp, 3)).unwrap();
         assert_eq!(w.request_id, 7);

@@ -176,6 +176,43 @@ pub fn open_loop_cluster(
     open_loop(requests, lambda, duration, max_in_flight, seed, |r| router.submit(r).is_ok())
 }
 
+/// Open-loop driver over the decoupled two-stage pipeline: Poisson
+/// arrivals enqueued into the pipeline's intake (responses are consumed
+/// by the compute stage's recorder; rejections are intake sheds — the
+/// handoff backpressure surfacing at the front door). Unlike the
+/// synchronous open-loop mode there is no per-request dispatch thread:
+/// the pipeline's own stage workers provide all the concurrency, so the
+/// arrival process never stalls behind a slow request.
+pub fn open_loop_pipeline(
+    handle: &crate::server::PipelineHandle,
+    requests: Vec<Request>,
+    lambda: f64,
+    duration: Duration,
+    seed: u64,
+) -> DriveReport {
+    let mut rng = Rng::new(seed);
+    let start = Instant::now();
+    let (mut submitted, mut completed, mut rejected) = (0u64, 0u64, 0u64);
+    let mut t_next = 0.0f64;
+    for req in requests {
+        t_next += rng.exp(lambda);
+        let target = Duration::from_secs_f64(t_next);
+        if target >= duration {
+            break;
+        }
+        let now = start.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        submitted += 1;
+        match handle.enqueue(req) {
+            Ok(()) => completed += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    DriveReport { submitted, completed, rejected, elapsed: start.elapsed() }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

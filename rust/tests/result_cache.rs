@@ -61,6 +61,7 @@ impl ReplicaBackend for ScoringBackend {
             compute_us: 1,
             feature_us: 0,
             queue_us: 0,
+            handoff_us: 0,
         })
     }
 }
