@@ -1,21 +1,39 @@
-//! Quickstart: load the tiny scenario's fused engine and score one
-//! SUMI request end to end.
+//! Quickstart: score one SUMI request end to end.
+//!
+//! With artifacts (`make artifacts`) this compiles and runs the tiny
+//! scenario's fused PJRT engine; on a bare checkout it falls back to
+//! the native CPU Fused Kernel Engine (`fke::cpu`) — same model
+//! semantics, zero build-time dependencies.
 //!
 //! ```bash
+//! cargo run --release --example quickstart          # CPU FKE fallback
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use flame::manifest::Manifest;
 use flame::runtime::{EngineKey, Runtime};
 
 fn main() -> Result<()> {
     // 1. Artifacts: HLO text + weights, produced once by `make artifacts`.
-    let manifest = Manifest::load("artifacts")
-        .context("artifacts/ missing — run `make artifacts` first")?;
+    //    Missing artifacts are not an error anymore — the native CPU
+    //    engine serves the same request without them.
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("artifacts unavailable ({e}) — running the native CPU FKE instead\n");
+            return cpu_quickstart();
+        }
+    };
 
     // 2. Runtime: one PJRT CPU client per process.
-    let runtime = Runtime::new()?;
+    let runtime = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("PJRT unavailable ({e}) — running the native CPU FKE instead\n");
+            return cpu_quickstart();
+        }
+    };
     println!("platform: {}", runtime.platform());
 
     // 3. Engine: compile tiny/fused at the native candidate profile.
@@ -44,14 +62,59 @@ fn main() -> Result<()> {
     let scores = engine.run(&hist, &cands)?;
 
     // 5. Scores: [M, n_tasks] task probabilities per candidate.
-    println!("\nper-candidate task probabilities:");
-    for (i, row) in scores.chunks(cfg.n_tasks).enumerate() {
-        let fmt: Vec<String> = row.iter().map(|s| format!("{s:.4}")).collect();
-        println!("  candidate {i}: [{}]", fmt.join(", "));
-    }
+    print_scores(&scores, cfg.n_tasks);
     println!(
         "\nmean compute latency: {:.3} ms",
         engine.stats.mean_compute_ms()
     );
     Ok(())
+}
+
+/// The artifact-free path: the same tiny scenario on the native CPU
+/// Fused Kernel Engine — real FLOPs, mask-aware tile skipping, no
+/// Python, no PJRT.
+fn cpu_quickstart() -> Result<()> {
+    use flame::config::Scenario;
+    use flame::dso::ComputeBackend;
+    use flame::fke::cpu::{CpuEngine, CpuEngineConfig, CpuModel};
+
+    let cfg = Scenario::Tiny.config();
+    let model = CpuModel::new(&cfg, CpuModel::seed_for(&cfg.name))?;
+    let engine = CpuEngine::new(model, cfg.native_m, &CpuEngineConfig::default());
+    println!(
+        "engine {}: L={} D={} M={} (native CPU, fused variant)",
+        engine.label(),
+        cfg.seq_len,
+        cfg.d_model,
+        cfg.native_m
+    );
+
+    let hist: Vec<f32> = (0..engine.hist_len())
+        .map(|i| ((i % 17) as f32 / 17.0) - 0.5)
+        .collect();
+    let cands: Vec<f32> = (0..cfg.native_m * cfg.d_model)
+        .map(|i| ((i % 13) as f32 / 13.0) - 0.5)
+        .collect();
+    let scores = engine.run(&hist, &cands)?;
+    print_scores(&scores, cfg.n_tasks);
+
+    let ks = engine.kernel_stats();
+    println!(
+        "\nkernel stats: {:.2} MFLOP executed, attention tiles visited {} / skipped {} \
+         ({:.0} % skipped by the mask-aware schedule)",
+        ks.flops as f64 / 1e6,
+        ks.tiles_visited,
+        ks.tiles_skipped,
+        ks.tile_skip_fraction() * 100.0
+    );
+    println!("try the full ladder: cargo bench --bench bench_fke");
+    Ok(())
+}
+
+fn print_scores(scores: &[f32], n_tasks: usize) {
+    println!("\nper-candidate task probabilities:");
+    for (i, row) in scores.chunks(n_tasks).enumerate() {
+        let fmt: Vec<String> = row.iter().map(|s| format!("{s:.4}")).collect();
+        println!("  candidate {i}: [{}]", fmt.join(", "));
+    }
 }

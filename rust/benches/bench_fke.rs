@@ -1,118 +1,350 @@
-//! Table 4 + Fig 12 — FKE ablation: engine-construction levels
-//! (naive ≙ ONNX conversion, api ≙ TensorRT API, fused ≙ + kernel
-//! fusion) measured on pure model compute at the scenario's native M.
+//! Table 4 + Fig 12 — FKE ablation on the **native CPU engine**:
+//! engine-construction levels (naive ≙ ONNX conversion, api ≙ TensorRT
+//! API, fused ≙ + kernel fusion) measured as real FLOPs on a bare
+//! checkout — no artifacts, no PJRT — at the scenario's native M, in
+//! two launch modes (`--series` adds the Fig 12 per-profile throughput
+//! series, api vs fused):
 //!
-//! Default runs the `bench` scenario (CI-speed); pass
-//! `--scenario base` / `--scenario long` after `make artifacts-full` for
-//! paper-scale rows. `--series` prints the Fig 12 per-profile series.
+//! * **solo** — one request, one history, one profile-shaped launch;
+//! * **coalesced-mixed** — one packed batch whose rows come from three
+//!   requests with three distinct histories (what the DSO coalescer
+//!   produces), executed as ONE natively segmented launch.
 //!
-//! Absolute numbers are CPU-PJRT, not A100/TensorRT — EXPERIMENTS.md
-//! compares *shape* (ordering + rough factors), per DESIGN.md.
+//! Default runs `base` and `long` at a capped transformer depth (every
+//! layer is identical work, so the naive/api/fused ratios Table 4
+//! measures are depth-invariant; `--full-depth` runs the configured
+//! `layers_per_block`). `--smoke` shrinks to a CI-sized `base` run that
+//! still *gates* on the fused-vs-naive ordering, on native segmentation
+//! (executed rows == M for a 3-segment batch), and on packed-vs-solo
+//! bit-identity — and every run emits machine-readable `BENCH_fke.json`.
+//!
+//! Absolute numbers are CPU, not A100/TensorRT — EXPERIMENTS.md compares
+//! *shape* (ordering + rough factors), per DESIGN.md.
 
-use flame::benchkit::{table, Bencher, Table};
-use flame::manifest::Manifest;
-use flame::runtime::{EngineKey, Runtime};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
 
-fn main() {
-    let mut b = Bencher::from_env();
-    let scenario = b.args.scenario.clone().unwrap_or_else(|| "bench".to_string());
+use flame::benchkit::{table, BenchArgs, Bencher, Table};
+use flame::config::Scenario;
+use flame::dso::{ComputeBackend, SegmentBind};
+use flame::fke::cpu::{CpuEngine, CpuEngineConfig, CpuModel};
+use flame::fke::Variant;
+use flame::util::json::Json;
 
-    let manifest = match Manifest::load("artifacts") {
-        Ok(m) if m.scenarios.contains_key(&scenario) => m,
-        _ => {
-            eprintln!("bench_fke: artifacts for '{scenario}' not built — run `make artifacts` (or artifacts-full for base/long); skipping");
-            return;
-        }
-    };
-    let rt = Runtime::new().expect("pjrt");
-    let cfg = manifest.scenario(&scenario).unwrap().config.clone();
-    let weights = rt.upload_weights(&manifest, &scenario).expect("weights");
+const OUT_PATH: &str = "BENCH_fke.json";
+
+struct VariantResult {
+    variant: Variant,
+    solo_ms: f64,
+    mixed_ms: f64,
+    pairs_per_s: f64,
+    gflops_per_s: f64,
+    flops_per_launch: u64,
+    tiles_visited: u64,
+    tiles_skipped: u64,
+}
+
+fn hist_for(len: usize, salt: u64) -> Vec<f32> {
+    (0..len).map(|i| (((i as u64 + salt) * 31 % 113) as f32 / 113.0) - 0.5).collect()
+}
+
+fn cands_for(len: usize, salt: u64) -> Vec<f32> {
+    (0..len).map(|i| (((i as u64 + salt) * 17 % 127) as f32 / 127.0) - 0.5).collect()
+}
+
+/// The coalesced-mixed segmentation: three requests' rows in one batch.
+fn mixed_rows(m: usize) -> [usize; 3] {
+    let a = m / 2;
+    let b = m / 4;
+    [a, b, m - a - b]
+}
+
+fn run_scenario(
+    b: &mut Bencher,
+    scenario: Scenario,
+    depth: usize,
+    threads: usize,
+    smoke: bool,
+) -> BTreeMap<String, Json> {
+    let cfg = scenario.config();
     let m = cfg.native_m;
+    let d = cfg.d_model;
+    let model = CpuModel::with_depth(&cfg, CpuModel::seed_for(cfg.name.as_str()), depth)
+        .expect("cpu model");
+    println!(
+        "\nFKE ablation — scenario '{}' (L={}, native M={m}, {} of {} layers x {} blocks, D={d}, {} threads)",
+        cfg.name, cfg.seq_len, depth, cfg.layers_per_block, cfg.n_blocks, threads
+    );
 
-    println!("\nFKE ablation — scenario '{scenario}' (L={}, native M={m}, {} layers x {} blocks, D={})",
-        cfg.seq_len, cfg.layers_per_block, cfg.n_blocks, cfg.d_model);
-
-    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new(); // label, tput, mean ms, p99 ms
-    for variant in ["naive", "api", "fused"] {
-        if manifest.find(&scenario, variant, m).is_err() {
-            eprintln!("  (skipping {variant}: not lowered at m{m})");
-            continue;
-        }
-        let key = EngineKey::new(&scenario, variant, m);
-        eprintln!("  compiling {} ...", key.label());
-        let engine = rt
-            .load_engine_with_weights(&manifest, &key, std::sync::Arc::clone(&weights))
-            .expect("engine");
-        let hist: Vec<f32> = (0..engine.hist_len()).map(|i| ((i % 31) as f32 / 31.0) - 0.5).collect();
-        let cands: Vec<f32> = (0..engine.cands_len()).map(|i| ((i % 29) as f32 / 29.0) - 0.5).collect();
-
-        let label = flame::fke::Variant::parse(variant).unwrap().paper_label();
-        let r = b
-            .bench_with_items(&format!("fke/{scenario}/{variant}"), Some(m as f64), || {
-                let out = engine.run(&hist, &cands).expect("run");
-                std::hint::black_box(out);
-            })
-            .expect("bench ran");
-        rows.push((
-            label.to_string(),
-            r.throughput().unwrap_or(0.0),
-            r.mean.as_secs_f64() * 1e3,
-            r.p99.as_secs_f64() * 1e3,
-        ));
+    let rows = mixed_rows(m);
+    let hists: Vec<Vec<f32>> = (0..3).map(|i| hist_for(cfg.seq_len * d, 7 + i)).collect();
+    let segs: Vec<Vec<f32>> =
+        rows.iter().enumerate().map(|(i, &r)| cands_for(r * d, 100 + i as u64)).collect();
+    let mut packed = Vec::new();
+    for s in &segs {
+        packed.extend_from_slice(s);
     }
 
-    // Table 4 layout
+    let mut results: Vec<VariantResult> = Vec::new();
+    for variant in Variant::all() {
+        let engine =
+            CpuEngine::new(Arc::clone(&model), m, &CpuEngineConfig { variant, threads });
+        let solo_hist = engine.upload_hist(&hists[0]).expect("upload");
+        let seg_hists: Vec<_> =
+            hists.iter().map(|h| engine.upload_hist(h).expect("upload")).collect();
+        let solo_cands = cands_for(m * d, 5);
+
+        // --- correctness gates (every variant, every run) ---
+        // native segmentation: 3 segments execute M rows in one launch
+        assert_eq!(
+            engine.executed_rows_for(rows.len()),
+            m,
+            "{}: packed batch must execute M rows once, no per-history replay",
+            engine.label()
+        );
+        // packed scores bit-identical to each request's solo launch
+        let binds: Vec<SegmentBind<'_>> = seg_hists
+            .iter()
+            .zip(&rows)
+            .map(|(h, &r)| SegmentBind { hist: h, rows: r })
+            .collect();
+        let packed_scores = engine.run_segmented(&binds, &packed).expect("mixed launch");
+        let mut off = 0usize;
+        for (i, (&r, seg)) in rows.iter().zip(&segs).enumerate() {
+            let mut solo = seg.clone();
+            let last = &seg[(r - 1) * d..r * d];
+            for _ in 0..m - r {
+                solo.extend_from_slice(last);
+            }
+            let sref = engine
+                .run_segmented(&[SegmentBind { hist: &seg_hists[i], rows: m }], &solo)
+                .expect("solo launch");
+            assert_eq!(
+                &packed_scores[off * cfg.n_tasks..(off + r) * cfg.n_tasks],
+                &sref[..r * cfg.n_tasks],
+                "{}: segment {i} diverged from its solo launch",
+                engine.label()
+            );
+            off += r;
+        }
+
+        // per-launch analytic FLOPs (constant per variant + shape)
+        let ks0 = engine.kernel_stats();
+        engine
+            .run_segmented(&[SegmentBind { hist: &solo_hist, rows: m }], &solo_cands)
+            .expect("probe launch");
+        let ks1 = engine.kernel_stats();
+        let flops_per_launch = ks1.flops - ks0.flops;
+        let tiles_visited = ks1.tiles_visited - ks0.tiles_visited;
+        let tiles_skipped = ks1.tiles_skipped - ks0.tiles_skipped;
+
+        // --- timing ---
+        let solo = b
+            .bench_with_items(
+                &format!("fke/{}/{}/solo", cfg.name, variant.name()),
+                Some(m as f64),
+                || {
+                    let out = engine
+                        .run_segmented(&[SegmentBind { hist: &solo_hist, rows: m }], &solo_cands)
+                        .expect("run");
+                    std::hint::black_box(out);
+                },
+            )
+            .expect("bench ran");
+        let mixed = b
+            .bench_with_items(
+                &format!("fke/{}/{}/coalesced-mixed", cfg.name, variant.name()),
+                Some(m as f64),
+                || {
+                    let binds: Vec<SegmentBind<'_>> = seg_hists
+                        .iter()
+                        .zip(&rows)
+                        .map(|(h, &r)| SegmentBind { hist: h, rows: r })
+                        .collect();
+                    let out = engine.run_segmented(&binds, &packed).expect("run");
+                    std::hint::black_box(out);
+                },
+            )
+            .expect("bench ran");
+
+        let solo_s = solo.mean.as_secs_f64();
+        results.push(VariantResult {
+            variant,
+            solo_ms: solo_s * 1e3,
+            mixed_ms: mixed.mean.as_secs_f64() * 1e3,
+            pairs_per_s: solo.throughput().unwrap_or(0.0),
+            gflops_per_s: flops_per_launch as f64 / 1e9 / solo_s.max(1e-12),
+            flops_per_launch,
+            tiles_visited,
+            tiles_skipped,
+        });
+    }
+
+    // --- Table 4 layout ---
     let mut t = Table::new(
-        &format!("Table 4 (reproduced) — FKE ablation, scenario '{scenario}' (M={m})"),
-        &["Ablation Study", "Throughput", "Compute Latency", "P99 Compute Latency"],
+        &format!(
+            "Table 4 (reproduced, native CPU) — FKE ablation, scenario '{}' (M={m})",
+            cfg.name
+        ),
+        &["Ablation Study", "Throughput", "Compute Latency", "Mixed-Batch Latency", "GFLOP/s"],
     );
-    for (label, tput, mean, p99) in &rows {
+    for r in &results {
         t.row(&[
-            label.clone(),
-            table::kthroughput(*tput),
-            table::ms(*mean),
-            table::ms(*p99),
+            r.variant.paper_label().to_string(),
+            table::kthroughput(r.pairs_per_s),
+            table::ms(r.solo_ms),
+            table::ms(r.mixed_ms),
+            format!("{:.2}", r.gflops_per_s),
         ]);
     }
-    if rows.len() >= 2 {
-        t.footnote(&format!(
-            "speedup {} over baseline; throughput gain {} (paper: 4.6-6.1x / 4.7-6.3x on A100+TensorRT)",
-            table::ratio(rows[0].2, rows[rows.len() - 1].2),
-            table::ratio(rows[rows.len() - 1].1, rows[0].1),
-        ));
-    }
-    t.footnote("throughput in thousands of user-item pairs/s; CPU-PJRT testbed — compare shape, not absolutes");
+    let naive = &results[0];
+    let fused = &results[results.len() - 1];
+    let speedup = naive.solo_ms / fused.solo_ms.max(1e-12);
+    let gain = fused.pairs_per_s / naive.pairs_per_s.max(1e-12);
+    t.footnote(&format!(
+        "speedup {} over baseline; throughput gain {} (paper: 4.6-6.1x / 4.7-6.3x on A100+TensorRT)",
+        table::ratio(naive.solo_ms, fused.solo_ms),
+        table::ratio(fused.pairs_per_s, naive.pairs_per_s),
+    ));
+    t.footnote(&format!(
+        "fused mask schedule: {} tiles visited / {} skipped per launch ({:.0} % skipped); \
+         coalesced-mixed = 3 requests, 3 histories, ONE launch of {m} rows",
+        fused.tiles_visited,
+        fused.tiles_skipped,
+        fused.tiles_skipped as f64 / (fused.tiles_visited + fused.tiles_skipped).max(1) as f64
+            * 100.0,
+    ));
     t.print();
 
-    // Fig 12 series: per-profile throughput for api vs fused
+    // --- CI gate: the ablation ordering cannot bit-rot ---
+    if smoke {
+        assert!(
+            fused.solo_ms < naive.solo_ms,
+            "GATE: fused ({:.2} ms) must beat naive ({:.2} ms)",
+            fused.solo_ms,
+            naive.solo_ms
+        );
+    } else if speedup < 2.0 {
+        eprintln!("  WARNING: fused speedup {speedup:.2}x below the 2x acceptance bar");
+    }
+
+    // --- Fig 12 series: per-profile throughput, api vs fused (the
+    // paper's pairs/s-grows-with-M amortization plot) ---
     if b.args.series {
-        println!("\nFig 12 (reproduced) — throughput series across candidate profiles");
-        for variant in ["api", "fused"] {
-            let profiles = manifest.profiles_for(&scenario, variant);
-            print!("  {variant:<6}:");
-            for pm in profiles {
-                let key = EngineKey::new(&scenario, variant, pm);
-                let engine = rt
-                    .load_engine_with_weights(&manifest, &key, std::sync::Arc::clone(&weights))
-                    .expect("engine");
-                let hist: Vec<f32> = vec![0.1; engine.hist_len()];
-                let cands: Vec<f32> = vec![0.05; engine.cands_len()];
+        println!("\nFig 12 (reproduced, native CPU) — throughput across candidate profiles");
+        for variant in [Variant::Api, Variant::Fused] {
+            // bench_with_items prints per-case summaries, so the series
+            // line is buffered and emitted whole afterwards
+            let mut line = String::new();
+            for &pm in &cfg.m_profiles {
+                let engine =
+                    CpuEngine::new(Arc::clone(&model), pm, &CpuEngineConfig { variant, threads });
+                let h = engine.upload_hist(&hists[0]).expect("upload");
+                let cands = cands_for(pm * d, 11);
                 if let Some(r) = b.bench_with_items(
-                    &format!("fig12/{scenario}/{variant}/m{pm}"),
+                    &format!("fig12/{}/{}/m{pm}", cfg.name, variant.name()),
                     Some(pm as f64),
                     || {
-                        std::hint::black_box(engine.run(&hist, &cands).expect("run"));
+                        let out = engine
+                            .run_segmented(&[SegmentBind { hist: &h, rows: pm }], &cands)
+                            .expect("run");
+                        std::hint::black_box(out);
                     },
                 ) {
-                    print!("  m{pm}={:.1}k", r.throughput().unwrap_or(0.0) / 1e3);
+                    line.push_str(&format!("  m{pm}={:.1}k", r.throughput().unwrap_or(0.0) / 1e3));
                 }
             }
-            println!();
+            println!("  {:<6}{line}", format!("{}:", variant.name()));
         }
     }
 
-    // the paper's amortization observation: pairs/s grows with M
-    if rows.len() >= 2 {
-        println!("\nnote: throughput counts user-item pairs — larger M amortizes history compute (paper §4.2.2).");
+    // --- JSON ---
+    let mut variants = BTreeMap::new();
+    for r in &results {
+        let mut o = BTreeMap::new();
+        o.insert("solo_ms".into(), Json::Num(r.solo_ms));
+        o.insert("mixed_ms".into(), Json::Num(r.mixed_ms));
+        o.insert("pairs_per_s".into(), Json::Num(r.pairs_per_s));
+        o.insert("gflops_per_s".into(), Json::Num(r.gflops_per_s));
+        o.insert("flops_per_launch".into(), Json::Num(r.flops_per_launch as f64));
+        o.insert("tiles_visited".into(), Json::Num(r.tiles_visited as f64));
+        o.insert("tiles_skipped".into(), Json::Num(r.tiles_skipped as f64));
+        variants.insert(r.variant.name().to_string(), Json::Obj(o));
     }
+    let mut s = BTreeMap::new();
+    s.insert("m".into(), Json::Num(m as f64));
+    s.insert("depth".into(), Json::Num(depth as f64));
+    s.insert("variants".into(), Json::Obj(variants));
+    s.insert("speedup_fused_vs_naive".into(), Json::Num(speedup));
+    s.insert("throughput_gain".into(), Json::Num(gain));
+    s.insert("mixed_segments".into(), Json::Num(rows.len() as f64));
+    s.insert("executed_rows_mixed".into(), Json::Num(m as f64));
+    s.insert("replay_rows_emulated".into(), Json::Num((m * rows.len()) as f64));
+    s.insert("score_identity".into(), Json::Str("bit-identical".into()));
+    s
+}
+
+fn main() {
+    let mut args = BenchArgs::from_env();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let full_depth = std::env::args().any(|a| a == "--full-depth");
+    let threads = {
+        let argv: Vec<String> = std::env::args().collect();
+        argv.iter()
+            .position(|a| a == "--threads")
+            .and_then(|i| argv.get(i + 1))
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(0)
+    };
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+    } else {
+        threads
+    };
+    if smoke {
+        args.min_iters = 3;
+        args.measure_time = Duration::from_millis(1);
+        args.warmup_time = Duration::ZERO;
+    }
+    let scenarios: Vec<Scenario> = match &args.scenario {
+        Some(name) => vec![Scenario::parse(name).expect("scenario")],
+        None if smoke => vec![Scenario::Base],
+        None => vec![Scenario::Base, Scenario::Long],
+    };
+
+    let mut b = Bencher::new(args);
+    let mut scen_json = BTreeMap::new();
+    let mut depth_used = 0usize;
+    for scenario in scenarios {
+        let cfg = scenario.config();
+        let depth = if full_depth {
+            cfg.layers_per_block
+        } else if smoke {
+            1
+        } else {
+            cfg.layers_per_block.min(2)
+        };
+        depth_used = depth;
+        let s = run_scenario(&mut b, scenario, depth, threads, smoke);
+        scen_json.insert(cfg.name, Json::Obj(s));
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("fke".into()));
+    top.insert("backend".into(), Json::Str("cpu-native".into()));
+    top.insert("smoke".into(), Json::Bool(smoke));
+    top.insert("threads".into(), Json::Num(threads as f64));
+    top.insert("depth".into(), Json::Num(depth_used as f64));
+    top.insert("scenarios".into(), Json::Obj(scen_json));
+    match std::fs::write(OUT_PATH, Json::Obj(top).to_string()) {
+        Ok(()) => eprintln!("  wrote {OUT_PATH}"),
+        Err(e) => eprintln!("  could not write {OUT_PATH}: {e}"),
+    }
+
+    println!(
+        "\nnote: throughput counts user-item pairs — larger M amortizes history compute \
+         (paper §4.2.2); the mixed column is one natively segmented launch, so its rows \
+         column-for-column match three solo launches bit-for-bit."
+    );
 }

@@ -17,7 +17,13 @@ struct Inner<T> {
     closed: bool,
 }
 
-/// Bounded MPMC request queue with shed-on-full admission.
+/// Priority key extractor: pop takes the queued item with the smallest
+/// key (FIFO among ties). Boxed so the queue type stays unparameterized.
+type PriorityFn<T> = Box<dyn Fn(&T) -> u64 + Send + Sync>;
+
+/// Bounded MPMC request queue with shed-on-full admission. FIFO by
+/// default; [`RequestQueue::with_priority`] pops the minimum-key item
+/// instead (deadline-closest-first intake).
 pub struct RequestQueue<T> {
     inner: Mutex<Inner<T>>,
     /// Items available (poppers park here).
@@ -26,15 +32,35 @@ pub struct RequestQueue<T> {
     /// `notify` so a wakeup can never be stolen by the wrong side).
     space: Condvar,
     capacity: usize,
+    priority: Option<PriorityFn<T>>,
 }
 
 impl<T> RequestQueue<T> {
     pub fn new(capacity: usize) -> Arc<Self> {
+        Self::build(capacity, None)
+    }
+
+    /// A queue whose `pop` returns the item with the smallest `key`
+    /// value (ties resolve FIFO). The linear min-scan (plus `remove`)
+    /// runs under the queue lock — O(capacity) per pop, so a full
+    /// default intake (1024) costs ~1k key calls per pop. Acceptable
+    /// for the opt-in deadline-first intake; if it ever runs hot at
+    /// extreme depth, a `BinaryHeap` keyed on `(key, admission_seq)`
+    /// keeps the FIFO tie-break at O(log n) (ROADMAP follow-up).
+    pub fn with_priority<F>(capacity: usize, key: F) -> Arc<Self>
+    where
+        F: Fn(&T) -> u64 + Send + Sync + 'static,
+    {
+        Self::build(capacity, Some(Box::new(key)))
+    }
+
+    fn build(capacity: usize, priority: Option<PriorityFn<T>>) -> Arc<Self> {
         Arc::new(RequestQueue {
             inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
             notify: Condvar::new(),
             space: Condvar::new(),
             capacity: capacity.max(1),
+            priority,
         })
     }
 
@@ -76,11 +102,25 @@ impl<T> RequestQueue<T> {
     }
 
     /// Blocking pop; returns the item + its queueing delay, or None when
-    /// the queue is closed and drained.
+    /// the queue is closed and drained. FIFO, unless the queue was built
+    /// with a priority key — then the minimum-key item pops first.
     pub fn pop(&self) -> Option<(T, std::time::Duration)> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some((item, t)) = g.queue.pop_front() {
+            let next = match &self.priority {
+                None => g.queue.pop_front(),
+                Some(key) => {
+                    // first minimal key → FIFO among ties
+                    let best = g
+                        .queue
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, (item, _))| key(item))
+                        .map(|(i, _)| i);
+                    best.and_then(|i| g.queue.remove(i))
+                }
+            };
+            if let Some((item, t)) = next {
                 drop(g);
                 self.space.notify_one();
                 return Some((item, t.elapsed()));
@@ -223,6 +263,42 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         q.close();
         assert_eq!(pusher.join().unwrap(), Err(7), "closed queue hands the item back");
+    }
+
+    #[test]
+    fn priority_pop_takes_minimum_key() {
+        // items are (priority, label); lower key pops first regardless
+        // of push order
+        let q: Arc<RequestQueue<(u64, &str)>> = RequestQueue::with_priority(8, |it| it.0);
+        q.push((50, "slack")).unwrap();
+        q.push((5, "tight")).unwrap();
+        q.push((20, "mid")).unwrap();
+        assert_eq!(q.pop().unwrap().0 .1, "tight");
+        assert_eq!(q.pop().unwrap().0 .1, "mid");
+        assert_eq!(q.pop().unwrap().0 .1, "slack");
+    }
+
+    #[test]
+    fn priority_ties_stay_fifo() {
+        let q: Arc<RequestQueue<(u64, u32)>> = RequestQueue::with_priority(8, |it| it.0);
+        q.push((7, 1)).unwrap();
+        q.push((7, 2)).unwrap();
+        q.push((7, 3)).unwrap();
+        assert_eq!(q.pop().unwrap().0 .1, 1);
+        assert_eq!(q.pop().unwrap().0 .1, 2);
+        assert_eq!(q.pop().unwrap().0 .1, 3);
+    }
+
+    #[test]
+    fn priority_queue_still_sheds_and_drains_on_close() {
+        let q: Arc<RequestQueue<(u64, u32)>> = RequestQueue::with_priority(2, |it| it.0);
+        q.push((9, 1)).unwrap();
+        q.push((1, 2)).unwrap();
+        assert!(q.push((0, 3)).is_err(), "full queue must shed");
+        q.close();
+        assert_eq!(q.pop().unwrap().0 .1, 2, "min key first even after close");
+        assert_eq!(q.pop().unwrap().0 .1, 1);
+        assert!(q.pop().is_none());
     }
 
     #[test]

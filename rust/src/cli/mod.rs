@@ -22,7 +22,7 @@ const VALUE_FLAGS: &[&str] = &[
     "executors", "theta", "catalog", "replicas", "policy", "deadline-ms",
     "slots", "users", "result-cache-cap", "result-ttl-ms", "dup-rate",
     "coalesce-wait-us", "m-dist", "feature-workers", "fetch-wait-us",
-    "handoff-capacity",
+    "handoff-capacity", "backend", "threads",
 ];
 
 impl Args {
@@ -115,6 +115,11 @@ COMMON FLAGS:
   --artifacts DIR     artifact directory (default: artifacts)
   --scenario NAME     tiny | bench | base | long   (default: bench)
   --variant NAME      naive | api | fused          (default: fused)
+  --backend B         artifact-free compute backends: cpu (native CPU
+                      FKE, honors --variant) | sim (deterministic
+                      queueing sim); default: compiled PJRT artifacts
+  --threads N         cpu backend: worker threads per engine launch
+                      (default: auto)
   --cache MODE        off | async | sync           (default: async)
   --dso MODE          explicit | implicit          (default: explicit)
   --coalesce          pack concurrent requests' remainder rows into
@@ -127,6 +132,8 @@ COMMON FLAGS:
                       overlap the compute-stage engine launches
   --feature-workers N feature-stage workers in pipelined mode (default: 2)
   --handoff-capacity N bounded stage-handoff queue depth   (default: 8)
+  --deadline-first    pipelined intake pops the nearest-deadline request
+                      first instead of FIFO
   --fetch-coalesce    single-flight concurrent feature-cache misses into
                       shared remote multiget batches (sync cache mode)
   --fetch-wait-us T   max µs a partial miss batch waits before flushing
@@ -250,6 +257,23 @@ mod tests {
         assert!(h.contains("--feature-workers"));
         assert!(h.contains("--fetch-coalesce"));
         assert!(h.contains("--fetch-wait-us"));
+        assert!(h.contains("--deadline-first"));
+    }
+
+    #[test]
+    fn backend_flags_take_values() {
+        let a = parse(&["serve", "--backend", "cpu", "--variant", "api", "--threads", "4"]);
+        assert_eq!(a.get("backend"), Some("cpu"));
+        assert_eq!(a.get("variant"), Some("api"));
+        assert_eq!(a.get_parse::<usize>("threads").unwrap(), Some(4));
+        assert!(help().contains("--backend"));
+    }
+
+    #[test]
+    fn deadline_first_is_a_switch() {
+        let a = parse(&["serve", "--pipeline", "--deadline-first"]);
+        assert!(a.has("deadline-first"));
+        assert!(!a.has("deadline-ms"), "deadline-ms stays a value flag");
     }
 
     #[test]

@@ -40,6 +40,14 @@ use crate::workload::Request;
 /// power of two spreads them well).
 const SHARDS: usize = 16;
 
+/// Single-flight waiter-table shard count (power of two; keys are
+/// pre-mixed hashes, so the low bits select uniformly). One global
+/// mutex here used to be the last router-wide lock on the miss path —
+/// sharding it means two concurrent misses on different keys almost
+/// never contend, while the per-key leader/waiter semantics are
+/// untouched (a key maps to exactly one shard).
+const FLIGHT_SHARDS: usize = 16;
+
 /// Result-tier knobs (part of `ClusterConfig`).
 #[derive(Clone, Debug)]
 pub struct ResultCacheConfig {
@@ -168,7 +176,7 @@ impl FlightGuard<'_> {
         if let Some(flight) = self.flight.take() {
             // deregister first so a new arrival starts a fresh flight
             // instead of waiting on a completed one
-            self.cache.inflight.lock().unwrap().remove(&self.key);
+            self.cache.flight_shard(self.key).lock().unwrap().remove(&self.key);
             flight.fill(outcome);
         }
     }
@@ -184,8 +192,9 @@ impl Drop for FlightGuard<'_> {
 /// Cross-replica result cache + single-flight table (one per router).
 pub struct ResultCache {
     cache: ShardedCache<Arc<CachedScores>>,
-    /// key → in-flight computation (present only while a leader runs).
-    inflight: Mutex<HashMap<u64, Arc<Flight>>>,
+    /// key → in-flight computation (present only while a leader runs),
+    /// sharded by key hash so misses on different keys don't contend.
+    inflight: Vec<Mutex<HashMap<u64, Arc<Flight>>>>,
     coalesce: bool,
     salt: u64,
     hits: AtomicU64,
@@ -208,7 +217,7 @@ impl ResultCache {
         let ttl = Duration::from_millis(cfg.ttl_ms.max(1));
         Some(ResultCache {
             cache: ShardedCache::new(cfg.capacity, SHARDS, ttl),
-            inflight: Mutex::new(HashMap::new()),
+            inflight: (0..FLIGHT_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             coalesce: cfg.coalesce,
             salt: cfg.scenario_salt,
             hits: AtomicU64::new(0),
@@ -226,6 +235,12 @@ impl ResultCache {
             self.misses.load(Ordering::Relaxed),
             self.coalesced.load(Ordering::Relaxed),
         )
+    }
+
+    /// The single-flight shard owning `key` (keys are pre-mixed, so the
+    /// low bits index uniformly).
+    fn flight_shard(&self, key: u64) -> &Mutex<HashMap<u64, Arc<Flight>>> {
+        &self.inflight[(key as usize) & (FLIGHT_SHARDS - 1)]
     }
 
     /// Canonical cache key: scenario salt + user + history hash + sorted
@@ -269,16 +284,18 @@ impl ResultCache {
             });
         }
         let flight = {
-            let mut map = self.inflight.lock().unwrap();
+            let mut map = self.flight_shard(key).lock().unwrap();
             if let Some(f) = map.get(&key) {
                 Arc::clone(f)
             } else {
-                // Double-check the cache while holding the table lock: a
-                // leader we would have waited on may have just finished —
-                // it publishes to the cache *before* deregistering, so a
-                // fresh entry here is authoritative and closes the
-                // check-then-act window that would otherwise let a
-                // descheduled thread become a second leader.
+                // Double-check the cache while holding the key's shard
+                // lock: a leader we would have waited on may have just
+                // finished — it publishes to the cache *before*
+                // deregistering (from this same shard, since a key maps
+                // to exactly one shard), so a fresh entry here is
+                // authoritative and closes the check-then-act window
+                // that would otherwise let a descheduled thread become
+                // a second leader.
                 if let Lookup::Fresh(cached) = self.cache.get(key) {
                     if cached.matches(req.user_id, &sorted, history_hash) {
                         self.hits.fetch_add(1, Ordering::Relaxed);
@@ -466,6 +483,64 @@ mod tests {
             drop(guard);
             assert!(waiter.join().unwrap(), "waiter must fall back, not hang");
         });
+    }
+
+    #[test]
+    fn misses_on_different_shards_never_contend() {
+        // Regression for the sharded waiter table: holding one shard's
+        // mutex (as a long miss registration would) must not block a
+        // miss whose key hashes to a different shard. With the old
+        // single global mutex this test deadlocks until the timeout.
+        let rc = Arc::new(cache(true));
+        let a = req(0, 1, vec![11, 12]);
+        let (ka, _, _) = rc.key_of(&a);
+        let shard_of = |k: u64| (k as usize) & (FLIGHT_SHARDS - 1);
+        let b = (2..200)
+            .map(|u| req(1, u, vec![13, 14]))
+            .find(|r| shard_of(rc.key_of(r).0) != shard_of(ka))
+            .expect("some user must hash to a different shard");
+
+        let _hold = rc.flight_shard(ka).lock().unwrap();
+        let rc2 = Arc::clone(&rc);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let led = matches!(rc2.begin(&b, Duration::from_secs(1)), Begin::Leader(_));
+            let _ = tx.send(led);
+        });
+        let led = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("different-shard miss blocked behind a foreign shard lock");
+        assert!(led, "first sight of the other key must lead");
+    }
+
+    #[test]
+    fn same_key_still_single_flights_across_shard_split() {
+        // sharding must not weaken the per-key invariant: a second miss
+        // on the SAME key while a leader is in flight coalesces (waits),
+        // it does not become a second leader
+        let rc = Arc::new(cache(true));
+        let r = req(0, 9, vec![5, 6]);
+        let guard = match rc.begin(&r, Duration::from_secs(1)) {
+            Begin::Leader(g) => g,
+            _ => panic!("must lead"),
+        };
+        let rc2 = Arc::clone(&rc);
+        let dup = req(1, 9, vec![5, 6]);
+        let waiter = std::thread::spawn(move || {
+            // Coalesced if it parks behind the flight, Hit if it arrives
+            // after publication — either way it must NOT lead again
+            matches!(
+                rc2.begin(&dup, Duration::from_secs(10)),
+                Begin::Coalesced(_) | Begin::Hit(_)
+            )
+        });
+        // give the waiter time to park, then publish
+        std::thread::sleep(Duration::from_millis(30));
+        guard.complete(&r, &Ok(resp(&r, 2)));
+        assert!(waiter.join().unwrap(), "duplicate must share the leader's result");
+        let (hits, misses, coalesced) = rc.counts();
+        assert_eq!(misses, 1, "exactly one leader");
+        assert_eq!(hits + coalesced, 1, "the duplicate was served without leading");
     }
 
     #[test]

@@ -157,6 +157,10 @@ pub struct ServerConfig {
     /// Bounded handoff-queue depth between the stages; when it fills,
     /// feature workers stall and backpressure reaches intake admission.
     pub handoff_capacity: usize,
+    /// Deadline-closest-first intake (decoupled mode): feature workers
+    /// pop the queued request with the nearest deadline instead of FIFO,
+    /// so a tight-deadline request overtakes slack ones under load.
+    pub deadline_first: bool,
     /// TCP bind address for the network front (None = in-process only).
     pub bind_addr: Option<String>,
     /// Per-request deadline in ms (paper envelope: < 50 ms end-to-end).
@@ -170,6 +174,7 @@ impl Default for ServerConfig {
             pipeline: false,
             feature_workers: 2,
             handoff_capacity: 8,
+            deadline_first: false,
             bind_addr: None,
             deadline_ms: 50,
         }
@@ -286,6 +291,9 @@ impl StackConfig {
             if let Some(v) = s.opt("handoff_capacity") {
                 c.server.handoff_capacity = v.as_usize()?;
             }
+            if let Some(v) = s.opt("deadline_first") {
+                c.server.deadline_first = v.as_bool()?;
+            }
             if let Some(v) = s.opt("bind_addr") {
                 c.server.bind_addr = Some(v.as_str()?.to_string());
             }
@@ -347,6 +355,7 @@ mod tests {
         assert!(!c.dso.coalesce, "coalescing is opt-in");
         assert!(c.dso.coalesce_wait_us < 50_000, "wait bound within the paper envelope");
         assert!(!c.server.pipeline, "decoupled pipeline is opt-in");
+        assert!(!c.server.deadline_first, "deadline-first intake is opt-in");
         assert!(c.server.feature_workers >= 1);
         assert!(c.server.handoff_capacity >= 1);
         assert_eq!(c.server.deadline_ms, 50); // paper envelope
@@ -370,7 +379,8 @@ mod tests {
             "dso": {"mode": "implicit", "executors_per_profile": 3,
                     "coalesce": true, "coalesce_wait_us": 500},
             "server": {"pipeline_workers": 8, "bind_addr": "127.0.0.1:7070",
-                       "pipeline": true, "feature_workers": 3, "handoff_capacity": 16},
+                       "pipeline": true, "feature_workers": 3, "handoff_capacity": 16,
+                       "deadline_first": true},
             "workload": {"zipf_theta": 0.8, "candidate_mix": [[128, 1.0], [256, 1.0]]}
         }"#,
         )
@@ -389,6 +399,7 @@ mod tests {
         assert!(c.server.pipeline);
         assert_eq!(c.server.feature_workers, 3);
         assert_eq!(c.server.handoff_capacity, 16);
+        assert!(c.server.deadline_first);
         assert_eq!(c.server.bind_addr.as_deref(), Some("127.0.0.1:7070"));
         assert_eq!(c.workload.candidate_mix, vec![(128, 1.0), (256, 1.0)]);
     }

@@ -40,6 +40,45 @@ pub enum HistHandle {
     /// Host-side per-dimension history summary (`SimEngine`): column
     /// means over the `L` axis, length `D`.
     Host(Vec<f32>),
+    /// Raw `[L, D]` history copy (`fke::cpu::CpuEngine` — the native CPU
+    /// engine binds full histories per segment inside one launch).
+    Raw(Vec<f32>),
+}
+
+/// Cumulative kernel-execution counters of a compute backend. The PJRT
+/// engine and `SimEngine` report zeroes (their cost model lives
+/// elsewhere); the native CPU FKE fills every field.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    /// Launches executed (`run_segmented` calls).
+    pub launches: u64,
+    /// Analytic FLOPs executed (GEMM-dominated accounting; the fused
+    /// variant counts the attention work its mask schedule executes —
+    /// visited-tile keys for scores, visible pairs for the weighted sum).
+    pub flops: u64,
+    /// Attention tiles visited by the mask-aware schedule.
+    pub tiles_visited: u64,
+    /// Attention tiles skipped as fully masked (0 for naive/api — they
+    /// compute the dense score matrix).
+    pub tiles_skipped: u64,
+}
+
+impl KernelStats {
+    pub fn merge(&mut self, other: &KernelStats) {
+        self.launches += other.launches;
+        self.flops += other.flops;
+        self.tiles_visited += other.tiles_visited;
+        self.tiles_skipped += other.tiles_skipped;
+    }
+
+    /// Fraction of attention tiles the mask schedule skipped.
+    pub fn tile_skip_fraction(&self) -> f64 {
+        let total = self.tiles_visited + self.tiles_skipped;
+        if total == 0 {
+            return 0.0;
+        }
+        self.tiles_skipped as f64 / total as f64
+    }
 }
 
 /// One row segment of a packed batch: `rows` consecutive candidate rows
@@ -76,13 +115,19 @@ pub trait ComputeBackend: Send + Sync {
         let _ = segments;
         self.m()
     }
+    /// Cumulative kernel counters (FLOPs, mask-tile schedule). Backends
+    /// without a native cost model report zeroes.
+    fn kernel_stats(&self) -> KernelStats {
+        KernelStats::default()
+    }
+
     /// Downcast for PJRT-engine-specific telemetry (`EngineStats`).
     fn as_engine(&self) -> Option<&Engine> {
         None
     }
 }
 
-fn check_segments(
+pub(crate) fn check_segments(
     label: &str,
     segments: &[SegmentBind<'_>],
     cands_len: usize,
@@ -131,7 +176,7 @@ impl ComputeBackend for Engine {
         let device = |h: &HistHandle| -> Result<&HistBuffer> {
             match h {
                 HistHandle::Device(buf) => Ok(buf),
-                HistHandle::Host(_) => Err(Error::Internal(format!(
+                HistHandle::Host(_) | HistHandle::Raw(_) => Err(Error::Internal(format!(
                     "{}: host hist handle passed to the PJRT engine",
                     self.key.label()
                 ))),
@@ -273,9 +318,9 @@ impl ComputeBackend for SimEngine {
                         s.len()
                     )))
                 }
-                HistHandle::Device(_) => {
+                HistHandle::Device(_) | HistHandle::Raw(_) => {
                     return Err(Error::Internal(format!(
-                        "{}: device hist handle passed to the sim engine",
+                        "{}: foreign hist handle passed to the sim engine",
                         self.label()
                     )))
                 }

@@ -22,7 +22,7 @@ mod coalescer;
 pub mod orchestrator;
 pub mod planner;
 
-pub use backend::{ComputeBackend, HistHandle, SegmentBind, SimEngine};
+pub use backend::{ComputeBackend, HistHandle, KernelStats, SegmentBind, SimEngine};
 pub use coalescer::CoalesceStats;
 pub use orchestrator::{ExecOutcome, Orchestrator};
 pub use planner::{plan_split, SplitPlan};

@@ -238,6 +238,16 @@ impl Orchestrator {
         self.pools.get(&m).map(|p| &p.engine)
     }
 
+    /// Cumulative kernel counters summed across every profile backend
+    /// (all zeroes unless the backends are native CPU FKE engines).
+    pub fn kernel_stats(&self) -> super::backend::KernelStats {
+        let mut ks = super::backend::KernelStats::default();
+        for p in self.pools.values() {
+            ks.merge(&p.engine.kernel_stats());
+        }
+        ks
+    }
+
     /// Reserved executor-queue units currently outstanding (admission
     /// reservations that have not completed yet).
     pub fn in_flight(&self) -> usize {

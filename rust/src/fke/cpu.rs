@@ -1,0 +1,1384 @@
+//! Native CPU Fused Kernel Engine — the Table-4 ablation ladder as a
+//! real, multithreaded compute backend (paper §3.2).
+//!
+//! Until this module existed the repo's only executable engine hid
+//! behind the offline `xla` vendor stub; the FKE was an analytic
+//! registry. [`CpuEngine`] turns the ladder into running FLOPs on any
+//! bare checkout, one [`Variant`] per engine-construction level:
+//!
+//! * **naive** — "ONNX Model Conversion": straightforward per-op loops
+//!   and materialized intermediates. Separate Q/K/V GEMMs, a
+//!   materialized `[n, n]` additive mask-bias tensor, a materialized
+//!   per-head score matrix, fresh buffers per op, and textbook `ijk`
+//!   GEMM loops whose inner contraction strides the weight matrix by
+//!   its row width (cache-hostile, scalar).
+//! * **api** — "TensorRT API Impl.": a deliberately constructed graph.
+//!   One fused QKV GEMM, cache-blocked `ikj` GEMM loops (unit-stride
+//!   inner loops the compiler can vectorize without reassociating),
+//!   per-thread scratch rows, a transposed key panel per layer, and no
+//!   `[n, n]` score materialization — attention streams one query row
+//!   at a time. FFN/head stages reuse arena buffers instead of
+//!   allocating per op.
+//! * **fused** — api + kernel fusion: the mask-aware attention tile
+//!   schedule (same block choice and visit rule as
+//!   [`super::attention_tile_stats`]) skips fully-masked tiles instead
+//!   of computing-then-masking; the pre-LN FFN runs as fused per-row
+//!   tiles (no `[n, d_ff]` activation panel, mirroring the
+//!   `ffn_vmem_bytes` blocking); and the gating + expert head fuses
+//!   score and reduce into one pass per candidate row.
+//!
+//! **Score identity.** All three variants execute the same math in the
+//! same per-element accumulation order (ascending contraction index,
+//! bias added after the sum, shared LayerNorm/GELU/softmax helpers), so
+//! their scores agree bit-for-bit up to `±0.0` — skipped masked keys
+//! contribute exact zeros in the dense variants (`exp(-1e9 - max)`
+//! underflows to `+0.0`). The cross-variant identity suite asserts
+//! `fused == api` exactly and `api` within 1e-5 of `naive` (insurance
+//! against benign reassociation; see `tests/fke_cpu.rs`).
+//!
+//! **Native segmentation.** [`ComputeBackend::run_segmented`] binds one
+//! history *per row segment inside a single launch*: a coalescer-packed
+//! mixed batch of M rows from S requests executes M candidate rows once
+//! (plus one history prefill per segment — the same prefill S solo
+//! launches would pay), so `executed_rows_for(S) == M` and the
+//! orchestrator's waste accounting finally reflects real savings. The
+//! PJRT engine, by contrast, emulates mixed batches by replaying the
+//! launch per segment (`M * S` rows). Because every candidate row
+//! attends only to its own segment's history plus itself, packed scores
+//! are bit-identical to solo launches under any packing (property-tested
+//! in `tests/fke_cpu.rs`).
+//!
+//! The model is the rust mirror of `python/compile/model.py`'s
+//! Climber-like GR forward: per block, pre-LN transformer layers over
+//! `[hist_block; candidates]` with the SUMI mask (history causal;
+//! candidates see all history plus themselves only), then bit-wise
+//! gating fusion across blocks and the expert MLP → sigmoid task heads.
+//! Weights are seeded in-process (`CpuModel`) — no artifacts, no
+//! Python, no PJRT.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::ModelConfig;
+use crate::dso::backend::{check_segments, ComputeBackend, HistHandle, KernelStats, SegmentBind};
+use crate::error::{Error, Result};
+use crate::metrics::Recorder;
+use crate::util::rng::Rng;
+
+use super::{choose_block, Variant};
+
+/// Additive mask bias (mirror of `kernels/ref.py::NEG_BIAS`); large
+/// enough that `exp(s + NEG_BIAS - max)` underflows to exactly `+0.0`.
+const NEG_BIAS: f32 = -1e9;
+
+/// Gating fusion runs over at most this many blocks (stack-allocated
+/// per-row gate buffer; every scenario uses 2).
+const MAX_BLOCKS: usize = 8;
+
+// ---------------------------------------------------------------------------
+// shared elementwise math (one implementation for all variants, so the
+// ladder can never diverge on transcendental rounding)
+// ---------------------------------------------------------------------------
+
+/// erf via Abramowitz–Stegun 7.1.26 (|error| ≤ 1.5e-7) — the offline
+/// toolchain has no libm erf.
+#[inline]
+fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0f32 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly =
+        ((((1.061_405_429 * t - 1.453_152_027) * t + 1.421_413_741) * t - 0.284_496_736) * t
+            + 0.254_829_592)
+            * t;
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Exact (erf-form) GELU, matching `jax.nn.gelu(approximate=False)`.
+#[inline]
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + erf(x * std::f32::consts::FRAC_1_SQRT_2))
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// LayerNorm one row (eps 1e-6, mirror of `ref.layernorm`).
+#[inline]
+fn ln_row(x: &[f32], scale: &[f32], bias: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let mut mean = 0.0f32;
+    for &v in x {
+        mean += v;
+    }
+    mean /= d as f32;
+    let mut var = 0.0f32;
+    for &v in x {
+        let c = v - mean;
+        var += c * c;
+    }
+    var /= d as f32;
+    let inv = 1.0 / (var + 1e-6).sqrt();
+    for i in 0..d {
+        out[i] = (x[i] - mean) * inv * scale[i] + bias[i];
+    }
+}
+
+/// `out = a @ w + bias` for one row: `a` is `[k]`, `w` row-major
+/// `[k, n]`, `out`/`bias` `[n]`. `ikj` form — the inner loop is
+/// unit-stride over both `w`'s row and `out`, so it vectorizes without
+/// float reassociation, and the per-element accumulation order
+/// (ascending `k`, bias added after the sum) is identical to the naive
+/// `ijk` dot product — bit-for-bit.
+#[inline]
+fn matvec_row(a: &[f32], w: &[f32], bias: &[f32], out: &mut [f32]) {
+    let n = out.len();
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for (kk, &av) in a.iter().enumerate() {
+        let wrow = &w[kk * n..(kk + 1) * n];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += av * wv;
+        }
+    }
+    for (o, &bv) in out.iter_mut().zip(bias) {
+        *o += bv;
+    }
+}
+
+/// Textbook naive GEMM, the ONNX-export loop order: `out[i][j] =
+/// Σ_k a[i][k] * w[k*stride + off + j] + bias[off + j]`. The inner `k`
+/// contraction strides `w` by its full row width — cache-hostile and a
+/// scalar reduction chain the compiler cannot vectorize — but the
+/// per-element accumulation order (ascending `k`, bias last) is
+/// identical to [`matvec_row`], so the naive variant stays numerically
+/// aligned with the deliberate graphs.
+#[allow(clippy::too_many_arguments)]
+fn gemm_naive(
+    threads: usize,
+    a: &[f32],
+    k: usize,
+    w: &[f32],
+    stride: usize,
+    off: usize,
+    bias: &[f32],
+    out: &mut [f32],
+    ncols: usize,
+) {
+    par_rows(threads, out, ncols, |i, out_row| {
+        for (j, o) in out_row.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * w[kk * stride + off + j];
+            }
+            *o = acc + bias[off + j];
+        }
+    });
+}
+
+/// SUMI visibility (mirror of `ref.sumi_mask`): token `i` may attend
+/// `j` in a `[hist(lb); cands]` sequence.
+#[inline]
+fn visible(i: usize, j: usize, lb: usize) -> bool {
+    if i < lb {
+        j <= i
+    } else {
+        j < lb || j == i
+    }
+}
+
+/// Bit-wise gating fusion + normalization for one candidate row
+/// (mirror of `model_ref`'s head tail before the expert MLP). Shared by
+/// all variants.
+#[inline]
+fn gate_fuse_row(nb: usize, d: usize, logits: &[f32], block_rows: &[&[f32]], out: &mut [f32]) {
+    debug_assert!(nb <= MAX_BLOCKS);
+    let mut e = [0.0f32; MAX_BLOCKS];
+    for d2 in 0..d {
+        let mut mx = f32::NEG_INFINITY;
+        for b in 0..nb {
+            let l = logits[b * d + d2];
+            if l > mx {
+                mx = l;
+            }
+        }
+        let mut denom = 0.0f32;
+        for b in 0..nb {
+            let ev = (logits[b * d + d2] - mx).exp();
+            e[b] = ev;
+            denom += ev;
+        }
+        let mut acc = 0.0f32;
+        for b in 0..nb {
+            acc += (e[b] / denom) * block_rows[b][d2];
+        }
+        out[d2] = acc;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// row-parallel execution helper
+// ---------------------------------------------------------------------------
+
+/// Run `f(row_index, row)` over every `row_len`-wide row of `buf`,
+/// partitioned into contiguous chunks across up to `threads` scoped
+/// worker threads. `mk` builds one scratch value per worker. Rows are
+/// computed independently with identical per-row op order, so the
+/// thread count never changes a single output bit.
+fn par_rows_scratch<S, MK, F>(threads: usize, buf: &mut [f32], row_len: usize, mk: MK, f: F)
+where
+    MK: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &mut [f32]) + Sync,
+{
+    debug_assert!(row_len > 0 && buf.len() % row_len == 0);
+    let rows = buf.len() / row_len;
+    if rows == 0 {
+        return;
+    }
+    if threads <= 1 || rows == 1 {
+        let mut s = mk();
+        for (i, r) in buf.chunks_mut(row_len).enumerate() {
+            f(&mut s, i, r);
+        }
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads.min(rows));
+    std::thread::scope(|scope| {
+        for (ci, chunk) in buf.chunks_mut(chunk_rows * row_len).enumerate() {
+            let f = &f;
+            let mk = &mk;
+            scope.spawn(move || {
+                let mut s = mk();
+                for (ri, r) in chunk.chunks_mut(row_len).enumerate() {
+                    f(&mut s, ci * chunk_rows + ri, r);
+                }
+            });
+        }
+    });
+}
+
+fn par_rows<F>(threads: usize, buf: &mut [f32], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    par_rows_scratch(threads, buf, row_len, || (), |_, i, r| f(i, r));
+}
+
+// ---------------------------------------------------------------------------
+// weights
+// ---------------------------------------------------------------------------
+
+struct LayerWeights {
+    qkv_w: Vec<f32>, // [D, 3D]
+    qkv_b: Vec<f32>, // [3D]
+    out_w: Vec<f32>, // [D, D]
+    out_b: Vec<f32>, // [D]
+    ln1_s: Vec<f32>, // [D]
+    ln1_b: Vec<f32>, // [D]
+    ln2_s: Vec<f32>, // [D]
+    ln2_b: Vec<f32>, // [D]
+    ffn_w1: Vec<f32>, // [D, F]
+    ffn_b1: Vec<f32>, // [F]
+    ffn_w2: Vec<f32>, // [F, D]
+    ffn_b2: Vec<f32>, // [D]
+    temp: f32,
+}
+
+/// Seeded in-process weight set for one scenario, shared (`Arc`) across
+/// the scenario's per-profile [`CpuEngine`]s and across variants — the
+/// analogue of TensorRT engines sharing device weight memory. Matmul
+/// weights ~ N(0, 1/sqrt(fan_in)), biases zero, LN scales one, adaptive
+/// temperatures near one (same init family as `python/compile/params.py`,
+/// different RNG — bit parity with the JAX weights is a non-goal).
+pub struct CpuModel {
+    pub cfg: ModelConfig,
+    /// Transformer layers executed per block. Benches cap this below
+    /// `cfg.layers_per_block` to bound absolute launch cost: every layer
+    /// is identical work, so the naive/api/fused *ratios* — the thing
+    /// Table 4 measures — are depth-invariant.
+    pub depth: usize,
+    pub seed: u64,
+    blocks: Vec<Vec<LayerWeights>>,
+    gate_w: Vec<f32>, // [nb*D, nb*D]
+    gate_b: Vec<f32>, // [nb*D]
+    exp_w1: Vec<f32>, // [D, F]
+    exp_b1: Vec<f32>, // [F]
+    exp_w2: Vec<f32>, // [F, T]
+    exp_b2: Vec<f32>, // [T]
+}
+
+impl CpuModel {
+    /// Full-depth model (`cfg.layers_per_block` layers per block).
+    pub fn new(cfg: &ModelConfig, seed: u64) -> Result<Arc<CpuModel>> {
+        Self::with_depth(cfg, seed, cfg.layers_per_block)
+    }
+
+    /// Model with an explicit per-block layer count (see [`CpuModel::depth`]).
+    pub fn with_depth(cfg: &ModelConfig, seed: u64, depth: usize) -> Result<Arc<CpuModel>> {
+        cfg.validate()?;
+        if depth == 0 {
+            return Err(Error::Config("cpu model needs depth >= 1".into()));
+        }
+        if cfg.n_blocks > MAX_BLOCKS {
+            return Err(Error::Config(format!(
+                "cpu model supports at most {MAX_BLOCKS} blocks (got {})",
+                cfg.n_blocks
+            )));
+        }
+        let (d, f) = (cfg.d_model, cfg.d_ff());
+        let mut rng = Rng::new(seed);
+        fn draw(rng: &mut Rng, fan_in: usize, len: usize) -> Vec<f32> {
+            let inv = 1.0 / (fan_in as f32).sqrt();
+            (0..len).map(|_| rng.normal_f32() * inv).collect()
+        }
+        let mut blocks = Vec::with_capacity(cfg.n_blocks);
+        for _ in 0..cfg.n_blocks {
+            let mut layers = Vec::with_capacity(depth);
+            for _ in 0..depth {
+                layers.push(LayerWeights {
+                    qkv_w: draw(&mut rng, d, d * 3 * d),
+                    qkv_b: vec![0.0; 3 * d],
+                    out_w: draw(&mut rng, d, d * d),
+                    out_b: vec![0.0; d],
+                    ln1_s: vec![1.0; d],
+                    ln1_b: vec![0.0; d],
+                    ln2_s: vec![1.0; d],
+                    ln2_b: vec![0.0; d],
+                    ffn_w1: draw(&mut rng, d, d * f),
+                    ffn_b1: vec![0.0; f],
+                    ffn_w2: draw(&mut rng, f, f * d),
+                    ffn_b2: vec![0.0; d],
+                    temp: 1.0 + 0.05 * rng.normal_f32(),
+                });
+            }
+            blocks.push(layers);
+        }
+        let nbd = cfg.n_blocks * d;
+        Ok(Arc::new(CpuModel {
+            cfg: cfg.clone(),
+            depth,
+            seed,
+            gate_w: draw(&mut rng, nbd, nbd * nbd),
+            gate_b: vec![0.0; nbd],
+            exp_w1: draw(&mut rng, d, d * f),
+            exp_b1: vec![0.0; f],
+            exp_w2: draw(&mut rng, f, f * cfg.n_tasks),
+            exp_b2: vec![0.0; cfg.n_tasks],
+            blocks,
+        }))
+    }
+
+    /// Stable per-scenario weight seed (hash of the scenario name), so
+    /// `flame serve --backend cpu` scores are reproducible across runs
+    /// and replicas without artifacts.
+    pub fn seed_for(scenario: &str) -> u64 {
+        let mut s = 0x46_4B_45_u64; // "FKE"
+        for &b in scenario.as_bytes() {
+            s = crate::util::rng::splitmix64(&mut s) ^ (b as u64);
+        }
+        crate::util::rng::splitmix64(&mut s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// attention tile schedule (fused variant)
+// ---------------------------------------------------------------------------
+
+/// Visited k-tile ranges per q-tile for one `[hist(lb); cands]`
+/// sequence — the execution-side twin of
+/// [`super::attention_tile_stats`]'s visit rule, generalized to
+/// non-divisible shapes (packed segments have arbitrary row counts).
+struct TilePlan {
+    tile: usize,
+    /// Per q-tile: merged, ascending `[j0, j1)` key ranges to compute.
+    visit: Vec<Vec<(usize, usize)>>,
+    visited: u64,
+    skipped: u64,
+}
+
+impl TilePlan {
+    fn build(lb: usize, n: usize, tile: usize) -> TilePlan {
+        let nq = n.div_ceil(tile);
+        let mut visit = Vec::with_capacity(nq);
+        let (mut visited, mut skipped) = (0u64, 0u64);
+        for qt in 0..nq {
+            let q0 = qt * tile;
+            let q1 = (q0 + tile).min(n) - 1; // inclusive
+            let mut ranges: Vec<(usize, usize)> = Vec::new();
+            for kt in 0..nq {
+                let k0 = kt * tile;
+                let k1 = (k0 + tile).min(n) - 1; // inclusive
+                // history keys: candidates see all of them; history rows
+                // see them causally (some i in the tile with j0 <= i)
+                let hist_leg = k0 < lb && (q1 >= lb || k0 <= q1.min(lb - 1));
+                // candidate keys: visible only on the self diagonal
+                let diag_leg = q0.max(k0).max(lb) <= q1.min(k1);
+                if hist_leg || diag_leg {
+                    visited += 1;
+                    match ranges.last_mut() {
+                        Some(last) if last.1 == k0 => last.1 = k1 + 1,
+                        _ => ranges.push((k0, k1 + 1)),
+                    }
+                } else {
+                    skipped += 1;
+                }
+            }
+            visit.push(ranges);
+        }
+        TilePlan { tile, visit, visited, skipped }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the engine
+// ---------------------------------------------------------------------------
+
+/// Construction knobs for one [`CpuEngine`].
+#[derive(Clone, Debug)]
+pub struct CpuEngineConfig {
+    pub variant: Variant,
+    /// Worker threads per launch; 0 = auto (available parallelism,
+    /// capped at 8). Thread count never changes output bits.
+    pub threads: usize,
+}
+
+impl Default for CpuEngineConfig {
+    fn default() -> Self {
+        CpuEngineConfig { variant: Variant::Fused, threads: 0 }
+    }
+}
+
+/// Reusable per-launch scratch arenas (api/fused variants). Sized once
+/// for the engine's largest sequence; reallocation-free across layers.
+struct FastScratch {
+    /// `[n, 3D]` fused QKV panel.
+    qkv: Vec<f32>,
+    /// `[D, n]` transposed key panel.
+    kt: Vec<f32>,
+    /// `[n, F]` activation panel / head stages 1 and 3.
+    a: Vec<f32>,
+    /// `[n, D]` LN panel / head stages 2 and 4.
+    b: Vec<f32>,
+}
+
+/// A native CPU scoring engine with a fixed candidate profile `m`,
+/// implementing the row-segmented [`ComputeBackend`] contract.
+pub struct CpuEngine {
+    model: Arc<CpuModel>,
+    m: usize,
+    variant: Variant,
+    threads: usize,
+    launches: AtomicU64,
+    flops: AtomicU64,
+    tiles_visited: AtomicU64,
+    tiles_skipped: AtomicU64,
+    recorder: Option<Arc<Recorder>>,
+}
+
+impl CpuEngine {
+    pub fn new(model: Arc<CpuModel>, m: usize, cfg: &CpuEngineConfig) -> CpuEngine {
+        let threads = if cfg.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+        } else {
+            cfg.threads
+        };
+        CpuEngine {
+            model,
+            m,
+            variant: cfg.variant,
+            threads,
+            launches: AtomicU64::new(0),
+            flops: AtomicU64::new(0),
+            tiles_visited: AtomicU64::new(0),
+            tiles_skipped: AtomicU64::new(0),
+            recorder: None,
+        }
+    }
+
+    /// Mirror per-launch FLOP/tile counters into the serving stack's
+    /// recorder (in addition to the engine's own cumulative stats).
+    pub fn with_recorder(mut self, recorder: Arc<Recorder>) -> Self {
+        self.recorder = Some(recorder);
+        self
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    pub fn model(&self) -> &Arc<CpuModel> {
+        &self.model
+    }
+
+    /// One engine per profile in `model.cfg.m_profiles`, type-erased for
+    /// the orchestrator / `StackBuilder::build_from_backends`.
+    pub fn profile_set(
+        model: &Arc<CpuModel>,
+        ecfg: &CpuEngineConfig,
+        recorder: Option<Arc<Recorder>>,
+    ) -> Vec<Arc<dyn ComputeBackend>> {
+        model
+            .cfg
+            .m_profiles
+            .iter()
+            .map(|&m| {
+                let mut e = CpuEngine::new(Arc::clone(model), m, ecfg);
+                if let Some(rec) = &recorder {
+                    e = e.with_recorder(Arc::clone(rec));
+                }
+                Arc::new(e) as Arc<dyn ComputeBackend>
+            })
+            .collect()
+    }
+
+    /// Convenience: upload + single-segment launch (benches, examples).
+    pub fn run(&self, hist: &[f32], cands: &[f32]) -> Result<Vec<f32>> {
+        let h = self.upload_hist(hist)?;
+        self.run_segmented(&[SegmentBind { hist: &h, rows: self.m }], cands)
+    }
+
+    /// The fused variant's attention tile edge (q and k tile width).
+    pub fn tile(&self) -> usize {
+        choose_block(self.model.cfg.block_len(), self.m, 128)
+    }
+
+    // -- forward pass -------------------------------------------------------
+
+    /// Score `mr` candidate rows against one history. `out` is
+    /// `[mr * n_tasks]`.
+    fn forward_segment(
+        &self,
+        hist: &[f32],
+        cands: &[f32],
+        mr: usize,
+        out: &mut [f32],
+        sc: &mut Option<FastScratch>,
+        launch: &mut KernelStats,
+    ) {
+        let cfg = &self.model.cfg;
+        let (d, lb, nb) = (cfg.d_model, cfg.block_len(), cfg.n_blocks);
+        let n = lb + mr;
+        let fused = self.variant == Variant::Fused;
+        let plan = fused.then(|| TilePlan::build(lb, n, self.tile()));
+
+        let mut x = vec![0.0f32; n * d];
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(nb);
+        let bias = (self.variant == Variant::Naive).then(|| {
+            let mut bias = vec![0.0f32; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    if !visible(i, j, lb) {
+                        bias[i * n + j] = NEG_BIAS;
+                    }
+                }
+            }
+            bias
+        });
+
+        for b in 0..nb {
+            x[..lb * d].copy_from_slice(&hist[b * lb * d..(b + 1) * lb * d]);
+            x[lb * d..].copy_from_slice(cands);
+            for lw in &self.model.blocks[b] {
+                match self.variant {
+                    Variant::Naive => self.layer_naive(&mut x, n, lw, bias.as_deref().unwrap()),
+                    // plan is Some only for the fused variant, so one
+                    // call covers both deliberate graphs
+                    Variant::Api | Variant::Fused => {
+                        self.layer_fast(&mut x, n, lb, lw, sc.as_mut().unwrap(), plan.as_ref())
+                    }
+                }
+            }
+            outs.push(x[lb * d..].to_vec());
+        }
+
+        match self.variant {
+            Variant::Naive => self.head_naive(&outs, mr, out),
+            Variant::Api => self.head_api(&outs, mr, out, sc.as_mut().unwrap()),
+            Variant::Fused => self.head_fused(&outs, mr, out),
+        }
+
+        // analytic accounting (GEMM-dominated). The fused variant counts
+        // the attention work its schedule actually executes: the score
+        // pass costs every key inside a *visited tile* (tile-granular —
+        // a diagonal tile scores `tile` keys for 1 visible one), the
+        // weighted-V pass only the visible pairs.
+        let layers = (nb * self.model.depth) as u64;
+        let (du, fu, tu, nu) = (d as u64, cfg.d_ff() as u64, cfg.n_tasks as u64, n as u64);
+        let (score_pairs, av_pairs) = match &plan {
+            Some(p) => {
+                let mut scored = 0u64;
+                for (qt, ranges) in p.visit.iter().enumerate() {
+                    let q0 = qt * p.tile;
+                    let qrows = ((q0 + p.tile).min(n) - q0) as u64;
+                    let keys: u64 = ranges.iter().map(|&(j0, j1)| (j1 - j0) as u64).sum();
+                    scored += qrows * keys;
+                }
+                let visible = (lb * (lb + 1) / 2 + mr * (lb + 1)) as u64;
+                (scored, visible)
+            }
+            None => (nu * nu, nu * nu),
+        };
+        let qkv_flops = 2 * nu * du * 3 * du; // fused QKV (or Q+K+V) GEMM
+        let attn_flops = 2 * score_pairs * du + 2 * av_pairs * du;
+        let proj_flops = 2 * nu * du * du; // output projection
+        let ffn_flops = 4 * nu * du * fu; // FFN up + down
+        let nbdu = nb as u64 * du;
+        let head = mr as u64 * (2 * nbdu * nbdu + 2 * du * fu + 2 * fu * tu);
+        launch.flops += layers * (qkv_flops + attn_flops + proj_flops + ffn_flops) + head;
+        match &plan {
+            Some(p) => {
+                launch.tiles_visited += layers * p.visited;
+                launch.tiles_skipped += layers * p.skipped;
+            }
+            None => {
+                let nq = n.div_ceil(self.tile()) as u64;
+                launch.tiles_visited += layers * nq * nq;
+            }
+        }
+    }
+
+    /// One pre-LN transformer layer, deliberate-graph form (api/fused).
+    fn layer_fast(
+        &self,
+        x: &mut [f32],
+        n: usize,
+        lb: usize,
+        lw: &LayerWeights,
+        sc: &mut FastScratch,
+        plan: Option<&TilePlan>,
+    ) {
+        let cfg = &self.model.cfg;
+        let (d, f, nh) = (cfg.d_model, cfg.d_ff(), cfg.n_heads);
+        let hd = d / nh;
+        let d3 = 3 * d;
+        let threads = self.threads;
+
+        // phase A — fused LN1 + QKV GEMM, one pass per row
+        {
+            let qkv = &mut sc.qkv[..n * d3];
+            let xr: &[f32] = x;
+            par_rows_scratch(
+                threads,
+                qkv,
+                d3,
+                || vec![0.0f32; d],
+                |lnr, i, qkv_row| {
+                    ln_row(&xr[i * d..(i + 1) * d], &lw.ln1_s, &lw.ln1_b, lnr);
+                    matvec_row(lnr, &lw.qkv_w, &lw.qkv_b, qkv_row);
+                },
+            );
+        }
+
+        // phase B — transposed key panel [D, n] (unit-stride score loops)
+        {
+            let qkv: &[f32] = &sc.qkv[..n * d3];
+            let kt = &mut sc.kt[..d * n];
+            par_rows(threads, kt, n, |c, ktrow| {
+                for (j, kv) in ktrow.iter_mut().enumerate() {
+                    *kv = qkv[j * d3 + d + c];
+                }
+            });
+        }
+
+        // phase C — attention (streamed per query row, no [n, n] buffer)
+        // + output projection + residual
+        {
+            let qkv: &[f32] = &sc.qkv[..n * d3];
+            let kt: &[f32] = &sc.kt[..d * n];
+            let scale = lw.temp / (hd as f32).sqrt();
+            par_rows_scratch(
+                threads,
+                &mut x[..n * d],
+                d,
+                || (vec![0.0f32; n], vec![0.0f32; d], vec![0.0f32; d]),
+                |(srow, attn, proj), i, x_row| {
+                    attn.iter_mut().for_each(|v| *v = 0.0);
+                    for h in 0..nh {
+                        let ho = h * hd;
+                        let q = &qkv[i * d3 + ho..i * d3 + ho + hd];
+                        match plan {
+                            None => {
+                                // dense: all keys, additive bias on masked
+                                srow.iter_mut().for_each(|v| *v = 0.0);
+                                for (kk, &qk) in q.iter().enumerate() {
+                                    let ktrow = &kt[(ho + kk) * n..(ho + kk + 1) * n];
+                                    for (sj, &kv) in srow.iter_mut().zip(ktrow) {
+                                        *sj += qk * kv;
+                                    }
+                                }
+                                let mut mx = f32::NEG_INFINITY;
+                                for (j, sj) in srow.iter_mut().enumerate() {
+                                    let mut sv = *sj * scale;
+                                    if !visible(i, j, lb) {
+                                        sv += NEG_BIAS;
+                                    }
+                                    *sj = sv;
+                                    if sv > mx {
+                                        mx = sv;
+                                    }
+                                }
+                                let mut denom = 0.0f32;
+                                for sj in srow.iter_mut() {
+                                    let e = (*sj - mx).exp();
+                                    *sj = e;
+                                    denom += e;
+                                }
+                                for sj in srow.iter_mut() {
+                                    *sj /= denom;
+                                }
+                                let out_h = &mut attn[ho..ho + hd];
+                                for (j, &p) in srow.iter().enumerate() {
+                                    let vrow =
+                                        &qkv[j * d3 + 2 * d + ho..j * d3 + 2 * d + ho + hd];
+                                    for (o, &vv) in out_h.iter_mut().zip(vrow) {
+                                        *o += p * vv;
+                                    }
+                                }
+                            }
+                            Some(plan) => {
+                                // mask-aware: only visited tiles touched;
+                                // masked keys inside a visited tile are
+                                // dropped at softmax (their dense-path
+                                // contribution is an exact +0.0, so the
+                                // bits match the api variant)
+                                let ranges = &plan.visit[i / plan.tile];
+                                for &(j0, j1) in ranges {
+                                    srow[j0..j1].iter_mut().for_each(|v| *v = 0.0);
+                                }
+                                for (kk, &qk) in q.iter().enumerate() {
+                                    let ktrow = &kt[(ho + kk) * n..(ho + kk + 1) * n];
+                                    for &(j0, j1) in ranges {
+                                        for (sj, &kv) in
+                                            srow[j0..j1].iter_mut().zip(&ktrow[j0..j1])
+                                        {
+                                            *sj += qk * kv;
+                                        }
+                                    }
+                                }
+                                let mut mx = f32::NEG_INFINITY;
+                                for &(j0, j1) in ranges {
+                                    for j in j0..j1 {
+                                        if visible(i, j, lb) {
+                                            let sv = srow[j] * scale;
+                                            srow[j] = sv;
+                                            if sv > mx {
+                                                mx = sv;
+                                            }
+                                        }
+                                    }
+                                }
+                                let mut denom = 0.0f32;
+                                for &(j0, j1) in ranges {
+                                    for j in j0..j1 {
+                                        if visible(i, j, lb) {
+                                            let e = (srow[j] - mx).exp();
+                                            srow[j] = e;
+                                            denom += e;
+                                        }
+                                    }
+                                }
+                                let out_h = &mut attn[ho..ho + hd];
+                                for &(j0, j1) in ranges {
+                                    for j in j0..j1 {
+                                        if visible(i, j, lb) {
+                                            let p = srow[j] / denom;
+                                            let vrow = &qkv
+                                                [j * d3 + 2 * d + ho..j * d3 + 2 * d + ho + hd];
+                                            for (o, &vv) in out_h.iter_mut().zip(vrow) {
+                                                *o += p * vv;
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    matvec_row(attn, &lw.out_w, &lw.out_b, proj);
+                    for (xv, &pv) in x_row.iter_mut().zip(proj.iter()) {
+                        *xv += pv;
+                    }
+                },
+            );
+        }
+
+        // phase D — pre-LN FFN + residual
+        if plan.is_some() {
+            // fused: LN2 → up-proj → GELU → down-proj → residual in one
+            // pass per row tile; no [n, F] activation panel exists
+            par_rows_scratch(
+                threads,
+                &mut x[..n * d],
+                d,
+                || (vec![0.0f32; d], vec![0.0f32; f]),
+                |(lnr, act), _i, x_row| {
+                    ln_row(x_row, &lw.ln2_s, &lw.ln2_b, lnr);
+                    matvec_row(lnr, &lw.ffn_w1, &lw.ffn_b1, act);
+                    act.iter_mut().for_each(|v| *v = gelu(*v));
+                    matvec_row(act, &lw.ffn_w2, &lw.ffn_b2, lnr); // lnr = delta
+                    for (xv, &dv) in x_row.iter_mut().zip(lnr.iter()) {
+                        *xv += dv;
+                    }
+                },
+            );
+        } else {
+            // api: staged through the scratch arenas (LN panel + [n, F]
+            // activation panel), fast GEMM loops — deliberate graph,
+            // no per-op allocation, but the panels are real traffic
+            let FastScratch { a, b, .. } = sc;
+            {
+                let xr: &[f32] = x;
+                par_rows(threads, &mut b[..n * d], d, |i, lnr| {
+                    ln_row(&xr[i * d..(i + 1) * d], &lw.ln2_s, &lw.ln2_b, lnr);
+                });
+            }
+            {
+                let ln_all: &[f32] = &b[..n * d];
+                par_rows(threads, &mut a[..n * f], f, |i, act| {
+                    matvec_row(&ln_all[i * d..(i + 1) * d], &lw.ffn_w1, &lw.ffn_b1, act);
+                    act.iter_mut().for_each(|v| *v = gelu(*v));
+                });
+            }
+            {
+                let act_all: &[f32] = &a[..n * f];
+                par_rows_scratch(
+                    threads,
+                    &mut x[..n * d],
+                    d,
+                    || vec![0.0f32; d],
+                    |delta, i, x_row| {
+                        matvec_row(&act_all[i * f..(i + 1) * f], &lw.ffn_w2, &lw.ffn_b2, delta);
+                        for (xv, &dv) in x_row.iter_mut().zip(delta.iter()) {
+                            *xv += dv;
+                        }
+                    },
+                );
+            }
+        }
+    }
+
+    /// One pre-LN transformer layer, mechanically-exported form:
+    /// per-op loops, fresh buffers, separate Q/K/V GEMMs, materialized
+    /// mask bias and per-head score matrices, `ijk` GEMM loops whose
+    /// inner contraction strides the weight matrix row width.
+    fn layer_naive(&self, x: &mut [f32], n: usize, lw: &LayerWeights, bias: &[f32]) {
+        let cfg = &self.model.cfg;
+        let (d, f, nh) = (cfg.d_model, cfg.d_ff(), cfg.n_heads);
+        let hd = d / nh;
+        let threads = self.threads;
+
+        let mut ln1 = vec![0.0f32; n * d];
+        {
+            let xr: &[f32] = x;
+            par_rows(threads, &mut ln1, d, |i, out| {
+                ln_row(&xr[i * d..(i + 1) * d], &lw.ln1_s, &lw.ln1_b, out);
+            });
+        }
+        // separate Q, K, V projections (three passes over ln1)
+        let mut q = vec![0.0f32; n * d];
+        let mut k = vec![0.0f32; n * d];
+        let mut v = vec![0.0f32; n * d];
+        gemm_naive(threads, &ln1, d, &lw.qkv_w, 3 * d, 0, &lw.qkv_b, &mut q, d);
+        gemm_naive(threads, &ln1, d, &lw.qkv_w, 3 * d, d, &lw.qkv_b, &mut k, d);
+        gemm_naive(threads, &ln1, d, &lw.qkv_w, 3 * d, 2 * d, &lw.qkv_b, &mut v, d);
+
+        let scale = lw.temp / (hd as f32).sqrt();
+        let mut attn = vec![0.0f32; n * d];
+        for h in 0..nh {
+            let ho = h * hd;
+            // materialized per-head score matrix, masked additively
+            let mut scores = vec![0.0f32; n * n];
+            {
+                let (qr, kr): (&[f32], &[f32]) = (&q, &k);
+                par_rows(threads, &mut scores, n, |i, srow| {
+                    for (j, sj) in srow.iter_mut().enumerate() {
+                        let mut acc = 0.0f32;
+                        for kk in 0..hd {
+                            acc += qr[i * d + ho + kk] * kr[j * d + ho + kk];
+                        }
+                        *sj = acc * scale + bias[i * n + j];
+                    }
+                });
+            }
+            // full softmax rows (masked entries underflow to exact 0)
+            par_rows(threads, &mut scores, n, |_i, srow| {
+                let mut mx = f32::NEG_INFINITY;
+                for &sv in srow.iter() {
+                    if sv > mx {
+                        mx = sv;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for sj in srow.iter_mut() {
+                    let e = (*sj - mx).exp();
+                    *sj = e;
+                    denom += e;
+                }
+                for sj in srow.iter_mut() {
+                    *sj /= denom;
+                }
+            });
+            // probs @ V, materialized
+            {
+                let (pr, vr): (&[f32], &[f32]) = (&scores, &v);
+                par_rows(threads, &mut attn, d, move |i, arow| {
+                    for (d2, o) in arow[ho..ho + hd].iter_mut().enumerate() {
+                        let mut acc = 0.0f32;
+                        for j in 0..n {
+                            acc += pr[i * n + j] * vr[j * d + ho + d2];
+                        }
+                        *o = acc;
+                    }
+                });
+            }
+        }
+        let mut proj = vec![0.0f32; n * d];
+        gemm_naive(threads, &attn, d, &lw.out_w, d, 0, &lw.out_b, &mut proj, d);
+        for (xv, &pv) in x.iter_mut().zip(&proj) {
+            *xv += pv;
+        }
+
+        let mut ln2 = vec![0.0f32; n * d];
+        {
+            let xr: &[f32] = x;
+            par_rows(threads, &mut ln2, d, |i, out| {
+                ln_row(&xr[i * d..(i + 1) * d], &lw.ln2_s, &lw.ln2_b, out);
+            });
+        }
+        let mut h1 = vec![0.0f32; n * f];
+        gemm_naive(threads, &ln2, d, &lw.ffn_w1, f, 0, &lw.ffn_b1, &mut h1, f);
+        h1.iter_mut().for_each(|v| *v = gelu(*v));
+        let mut h2 = vec![0.0f32; n * d];
+        gemm_naive(threads, &h1, f, &lw.ffn_w2, d, 0, &lw.ffn_b2, &mut h2, d);
+        for (xv, &hv) in x.iter_mut().zip(&h2) {
+            *xv += hv;
+        }
+    }
+
+    /// Gating + expert head, fused: score + reduce in one pass per
+    /// candidate row — no cat/logits/activation panels.
+    fn head_fused(&self, outs: &[Vec<f32>], mr: usize, out: &mut [f32]) {
+        let m = &self.model;
+        let cfg = &m.cfg;
+        let (d, f, nb, t) = (cfg.d_model, cfg.d_ff(), cfg.n_blocks, cfg.n_tasks);
+        let nbd = nb * d;
+        par_rows_scratch(
+            self.threads,
+            &mut out[..mr * t],
+            t,
+            || (vec![0.0f32; nbd], vec![0.0f32; nbd], vec![0.0f32; d], vec![0.0f32; f]),
+            |(cat, logits, fo, act), r, out_row| {
+                let mut rows: [&[f32]; MAX_BLOCKS] = [&[]; MAX_BLOCKS];
+                for (b, o) in outs.iter().enumerate() {
+                    cat[b * d..(b + 1) * d].copy_from_slice(&o[r * d..(r + 1) * d]);
+                    rows[b] = &o[r * d..(r + 1) * d];
+                }
+                matvec_row(cat, &m.gate_w, &m.gate_b, logits);
+                gate_fuse_row(nb, d, logits, &rows[..nb], fo);
+                matvec_row(fo, &m.exp_w1, &m.exp_b1, act);
+                act.iter_mut().for_each(|v| *v = gelu(*v));
+                matvec_row(act, &m.exp_w2, &m.exp_b2, out_row);
+                out_row.iter_mut().for_each(|v| *v = sigmoid(*v));
+            },
+        );
+    }
+
+    /// Gating + expert head, api form: staged through the scratch
+    /// arenas (cat → logits → fused → activations → scores), fast GEMM
+    /// loops, no fresh allocation.
+    fn head_api(&self, outs: &[Vec<f32>], mr: usize, out: &mut [f32], sc: &mut FastScratch) {
+        let m = &self.model;
+        let cfg = &m.cfg;
+        let (d, f, nb, t) = (cfg.d_model, cfg.d_ff(), cfg.n_blocks, cfg.n_tasks);
+        let nbd = nb * d;
+        let threads = self.threads;
+        let FastScratch { a, b, .. } = sc;
+        // stage 1: cat rows into a
+        par_rows(threads, &mut a[..mr * nbd], nbd, |r, cat| {
+            for (bi, o) in outs.iter().enumerate() {
+                cat[bi * d..(bi + 1) * d].copy_from_slice(&o[r * d..(r + 1) * d]);
+            }
+        });
+        // stage 2: gate logits into b
+        {
+            let cat_all: &[f32] = &a[..mr * nbd];
+            par_rows(threads, &mut b[..mr * nbd], nbd, |r, logits| {
+                matvec_row(&cat_all[r * nbd..(r + 1) * nbd], &m.gate_w, &m.gate_b, logits);
+            });
+        }
+        // stage 3: gated fusion into a (cat is dead)
+        {
+            let logits_all: &[f32] = &b[..mr * nbd];
+            par_rows(threads, &mut a[..mr * d], d, |r, fo| {
+                let mut rows: [&[f32]; MAX_BLOCKS] = [&[]; MAX_BLOCKS];
+                for (bi, o) in outs.iter().enumerate() {
+                    rows[bi] = &o[r * d..(r + 1) * d];
+                }
+                gate_fuse_row(nb, d, &logits_all[r * nbd..(r + 1) * nbd], &rows[..nb], fo);
+            });
+        }
+        // stage 4: expert activations into b (logits are dead)
+        {
+            let fo_all: &[f32] = &a[..mr * d];
+            par_rows(threads, &mut b[..mr * f], f, |r, act| {
+                matvec_row(&fo_all[r * d..(r + 1) * d], &m.exp_w1, &m.exp_b1, act);
+                act.iter_mut().for_each(|v| *v = gelu(*v));
+            });
+        }
+        // stage 5: task scores
+        {
+            let act_all: &[f32] = &b[..mr * f];
+            par_rows(threads, &mut out[..mr * t], t, |r, out_row| {
+                matvec_row(&act_all[r * f..(r + 1) * f], &m.exp_w2, &m.exp_b2, out_row);
+                out_row.iter_mut().for_each(|v| *v = sigmoid(*v));
+            });
+        }
+    }
+
+    /// Gating + expert head, naive form: materialized stages with naive
+    /// GEMM loops and fresh buffers.
+    fn head_naive(&self, outs: &[Vec<f32>], mr: usize, out: &mut [f32]) {
+        let m = &self.model;
+        let cfg = &m.cfg;
+        let (d, f, nb, t) = (cfg.d_model, cfg.d_ff(), cfg.n_blocks, cfg.n_tasks);
+        let nbd = nb * d;
+        let threads = self.threads;
+        let mut cat = vec![0.0f32; mr * nbd];
+        for r in 0..mr {
+            for (bi, o) in outs.iter().enumerate() {
+                cat[r * nbd + bi * d..r * nbd + (bi + 1) * d]
+                    .copy_from_slice(&o[r * d..(r + 1) * d]);
+            }
+        }
+        let mut logits = vec![0.0f32; mr * nbd];
+        gemm_naive(threads, &cat, nbd, &m.gate_w, nbd, 0, &m.gate_b, &mut logits, nbd);
+        let mut fo = vec![0.0f32; mr * d];
+        {
+            let logits_all: &[f32] = &logits;
+            par_rows(threads, &mut fo, d, |r, fo_row| {
+                let mut rows: [&[f32]; MAX_BLOCKS] = [&[]; MAX_BLOCKS];
+                for (bi, o) in outs.iter().enumerate() {
+                    rows[bi] = &o[r * d..(r + 1) * d];
+                }
+                gate_fuse_row(nb, d, &logits_all[r * nbd..(r + 1) * nbd], &rows[..nb], fo_row);
+            });
+        }
+        let mut h1 = vec![0.0f32; mr * f];
+        gemm_naive(threads, &fo, d, &m.exp_w1, f, 0, &m.exp_b1, &mut h1, f);
+        h1.iter_mut().for_each(|v| *v = gelu(*v));
+        gemm_naive(threads, &h1, f, &m.exp_w2, t, 0, &m.exp_b2, &mut out[..mr * t], t);
+        out[..mr * t].iter_mut().for_each(|v| *v = sigmoid(*v));
+    }
+}
+
+impl ComputeBackend for CpuEngine {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n_tasks(&self) -> usize {
+        self.model.cfg.n_tasks
+    }
+
+    fn d_model(&self) -> usize {
+        self.model.cfg.d_model
+    }
+
+    fn hist_len(&self) -> usize {
+        self.model.cfg.seq_len * self.model.cfg.d_model
+    }
+
+    fn upload_hist(&self, hist: &[f32]) -> Result<HistHandle> {
+        if hist.len() != self.hist_len() {
+            return Err(Error::Internal(format!(
+                "{}: hist length {} != expected {}",
+                self.label(),
+                hist.len(),
+                self.hist_len()
+            )));
+        }
+        Ok(HistHandle::Raw(hist.to_vec()))
+    }
+
+    fn run_segmented(&self, segments: &[SegmentBind<'_>], cands: &[f32]) -> Result<Vec<f32>> {
+        let (m, d, nt) = (self.m, self.model.cfg.d_model, self.model.cfg.n_tasks);
+        check_segments(&self.label(), segments, cands.len(), m, d)?;
+        let mut sc = match self.variant {
+            Variant::Naive => None,
+            Variant::Api | Variant::Fused => {
+                let cfg = &self.model.cfg;
+                let n_max = cfg.block_len() + m;
+                let (f, nbd) = (cfg.d_ff(), cfg.n_blocks * cfg.d_model);
+                Some(FastScratch {
+                    qkv: vec![0.0; n_max * 3 * cfg.d_model],
+                    kt: vec![0.0; cfg.d_model * n_max],
+                    a: vec![0.0; (n_max * f).max(m * nbd)],
+                    b: vec![0.0; (n_max * cfg.d_model).max(m * nbd).max(m * f)],
+                })
+            }
+        };
+        let mut out = vec![0.0f32; m * nt];
+        let mut launch = KernelStats { launches: 1, ..KernelStats::default() };
+        let mut off = 0usize;
+        for seg in segments {
+            let hist = match seg.hist {
+                HistHandle::Raw(h) => h,
+                HistHandle::Host(_) | HistHandle::Device(_) => {
+                    return Err(Error::Internal(format!(
+                        "{}: foreign hist handle passed to the cpu engine",
+                        self.label()
+                    )))
+                }
+            };
+            if seg.rows == 0 {
+                continue;
+            }
+            self.forward_segment(
+                hist,
+                &cands[off * d..(off + seg.rows) * d],
+                seg.rows,
+                &mut out[off * nt..(off + seg.rows) * nt],
+                &mut sc,
+                &mut launch,
+            );
+            off += seg.rows;
+        }
+        self.launches.fetch_add(1, Ordering::Relaxed);
+        self.flops.fetch_add(launch.flops, Ordering::Relaxed);
+        self.tiles_visited.fetch_add(launch.tiles_visited, Ordering::Relaxed);
+        self.tiles_skipped.fetch_add(launch.tiles_skipped, Ordering::Relaxed);
+        if let Some(rec) = &self.recorder {
+            rec.record_fke_launch(launch.flops, launch.tiles_visited, launch.tiles_skipped);
+        }
+        Ok(out)
+    }
+
+    // Native per-row segmentation: a packed batch of S segments is one
+    // real launch over M rows — the trait default (`m()`) is exactly
+    // right, unlike the PJRT per-history replay (`m * S`).
+
+    fn label(&self) -> String {
+        format!("cpu/{}/m{}", self.variant.name(), self.m)
+    }
+
+    fn kernel_stats(&self) -> KernelStats {
+        KernelStats {
+            launches: self.launches.load(Ordering::Relaxed),
+            flops: self.flops.load(Ordering::Relaxed),
+            tiles_visited: self.tiles_visited.load(Ordering::Relaxed),
+            tiles_skipped: self.tiles_skipped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fke::attention_tile_stats;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "cputest".into(),
+            seq_len: 16,
+            n_blocks: 2,
+            layers_per_block: 2,
+            d_model: 16,
+            n_heads: 2,
+            n_tasks: 3,
+            m_profiles: vec![4, 8],
+            native_m: 8,
+        }
+    }
+
+    fn inputs(cfg: &ModelConfig, m: usize, salt: u64) -> (Vec<f32>, Vec<f32>) {
+        let hist: Vec<f32> = (0..cfg.seq_len * cfg.d_model)
+            .map(|i| (((i as u64 + salt) * 31 % 113) as f32 / 113.0) - 0.5)
+            .collect();
+        let cands: Vec<f32> = (0..m * cfg.d_model)
+            .map(|i| (((i as u64 + salt) * 17 % 127) as f32 / 127.0) - 0.5)
+            .collect();
+        (hist, cands)
+    }
+
+    fn engine(cfg: &ModelConfig, m: usize, variant: Variant, threads: usize) -> CpuEngine {
+        let model = CpuModel::new(cfg, 7).unwrap();
+        CpuEngine::new(model, m, &CpuEngineConfig { variant, threads })
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        assert_eq!(erf(0.0), 0.0);
+        assert!((erf(1.0) - 0.842_700_8).abs() < 1e-5, "{}", erf(1.0));
+        assert!((erf(-1.0) + 0.842_700_8).abs() < 1e-5);
+        assert!((erf(3.0) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn visibility_matches_sumi_mask() {
+        let lb = 4;
+        // history causal
+        assert!(visible(2, 1, lb) && visible(2, 2, lb) && !visible(2, 3, lb));
+        // candidates see all history + self only
+        assert!(visible(5, 0, lb) && visible(5, 3, lb) && visible(5, 5, lb));
+        assert!(!visible(5, 4, lb) && !visible(5, 6, lb));
+        // history never sees candidates
+        assert!(!visible(3, 4, lb));
+    }
+
+    #[test]
+    fn weights_deterministic_per_seed() {
+        let cfg = tiny_cfg();
+        let a = CpuModel::new(&cfg, 11).unwrap();
+        let b = CpuModel::new(&cfg, 11).unwrap();
+        let c = CpuModel::new(&cfg, 12).unwrap();
+        assert_eq!(a.blocks[0][0].qkv_w, b.blocks[0][0].qkv_w);
+        assert_eq!(a.gate_w, b.gate_w);
+        assert_ne!(a.blocks[0][0].qkv_w, c.blocks[0][0].qkv_w);
+        assert!(a.blocks[0][0].temp > 0.5 && a.blocks[0][0].temp < 1.5);
+    }
+
+    #[test]
+    fn scores_shape_and_range() {
+        let cfg = tiny_cfg();
+        for variant in Variant::all() {
+            let e = engine(&cfg, 8, variant, 1);
+            let (hist, cands) = inputs(&cfg, 8, 5);
+            let out = e.run(&hist, &cands).unwrap();
+            assert_eq!(out.len(), 8 * 3);
+            assert!(
+                out.iter().all(|s| s.is_finite() && (0.0..=1.0).contains(s)),
+                "{variant:?}: {out:?}"
+            );
+            assert_eq!(e.kernel_stats().launches, 1);
+            assert!(e.kernel_stats().flops > 0);
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_bits() {
+        let cfg = tiny_cfg();
+        let (hist, cands) = inputs(&cfg, 8, 21);
+        for variant in Variant::all() {
+            let solo = engine(&cfg, 8, variant, 1).run(&hist, &cands).unwrap();
+            let multi = engine(&cfg, 8, variant, 4).run(&hist, &cands).unwrap();
+            assert_eq!(solo, multi, "{variant:?} diverged under threading");
+        }
+    }
+
+    #[test]
+    fn fused_tile_counters_match_analytic_registry() {
+        // divisible solo shape: the execution-side tile schedule must
+        // agree exactly with the analytic fke registry
+        let cfg = tiny_cfg(); // block_len 8
+        let m = 4;
+        let e = engine(&cfg, m, Variant::Fused, 1);
+        let (hist, cands) = inputs(&cfg, m, 3);
+        e.run(&hist, &cands).unwrap();
+        let expect = attention_tile_stats(cfg.block_len(), m);
+        assert_eq!(e.tile(), expect.block);
+        let layers = (cfg.n_blocks * cfg.layers_per_block) as u64;
+        let ks = e.kernel_stats();
+        assert_eq!(ks.tiles_visited, layers * expect.visited_tiles as u64);
+        assert_eq!(
+            ks.tiles_visited + ks.tiles_skipped,
+            layers * expect.total_tiles as u64
+        );
+        assert!(ks.tile_skip_fraction() > 0.0);
+    }
+
+    #[test]
+    fn fused_counts_fewer_flops_than_api() {
+        let cfg = tiny_cfg();
+        let (hist, cands) = inputs(&cfg, 8, 9);
+        let api = engine(&cfg, 8, Variant::Api, 1);
+        let fused = engine(&cfg, 8, Variant::Fused, 1);
+        api.run(&hist, &cands).unwrap();
+        fused.run(&hist, &cands).unwrap();
+        assert!(
+            fused.kernel_stats().flops < api.kernel_stats().flops,
+            "mask-aware schedule must cut analytic FLOPs: {} vs {}",
+            fused.kernel_stats().flops,
+            api.kernel_stats().flops
+        );
+    }
+
+    #[test]
+    fn tile_plan_covers_exactly_the_visible_pairs() {
+        // the union of visited tiles must contain every visible (i, j)
+        // and every visited tile must contain at least one visible pair
+        for (lb, n, tile) in [(8usize, 12usize, 4usize), (8, 11, 4), (6, 10, 4), (16, 24, 8)] {
+            let plan = TilePlan::build(lb, n, tile);
+            let nq = n.div_ceil(tile);
+            assert_eq!(plan.visited + plan.skipped, (nq * nq) as u64);
+            for i in 0..n {
+                let ranges = &plan.visit[i / tile];
+                for j in 0..n {
+                    let in_plan = ranges.iter().any(|&(j0, j1)| j >= j0 && j < j1);
+                    if visible(i, j, lb) {
+                        assert!(in_plan, "visible ({i},{j}) missing from plan lb={lb} n={n}");
+                    }
+                }
+            }
+            for (qt, ranges) in plan.visit.iter().enumerate() {
+                for &(j0, j1) in ranges {
+                    let any = (qt * tile..((qt + 1) * tile).min(n))
+                        .any(|i| (j0..j1).any(|j| visible(i, j, lb)));
+                    assert!(any, "empty visited range qt={qt} [{j0},{j1}) lb={lb} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_launch_is_bit_identical_to_solo_launches() {
+        let cfg = tiny_cfg();
+        for variant in Variant::all() {
+            let e = engine(&cfg, 8, variant, 2);
+            let (hist_a, _) = inputs(&cfg, 8, 100);
+            let (hist_b, _) = inputs(&cfg, 8, 200);
+            let ha = e.upload_hist(&hist_a).unwrap();
+            let hb = e.upload_hist(&hist_b).unwrap();
+            let (_, ca) = inputs(&cfg, 3, 101); // request A: 3 rows
+            let (_, cb) = inputs(&cfg, 5, 201); // request B: 5 rows
+
+            let mut packed = ca.clone();
+            packed.extend_from_slice(&cb);
+            let out = e
+                .run_segmented(
+                    &[SegmentBind { hist: &ha, rows: 3 }, SegmentBind { hist: &hb, rows: 5 }],
+                    &packed,
+                )
+                .unwrap();
+
+            let mut solo_a = ca.clone();
+            solo_a.extend_from_slice(&inputs(&cfg, 5, 999).1);
+            let sa = e.run_segmented(&[SegmentBind { hist: &ha, rows: 8 }], &solo_a).unwrap();
+            let mut solo_b = cb.clone();
+            solo_b.extend_from_slice(&inputs(&cfg, 3, 998).1);
+            let sb = e.run_segmented(&[SegmentBind { hist: &hb, rows: 8 }], &solo_b).unwrap();
+
+            assert_eq!(&out[..3 * 3], &sa[..3 * 3], "{variant:?}: A rows diverged");
+            assert_eq!(&out[3 * 3..], &sb[..5 * 3], "{variant:?}: B rows diverged");
+            // native segmentation: 2 segments still execute m rows once
+            assert_eq!(e.executed_rows_for(2), 8);
+        }
+    }
+
+    #[test]
+    fn rejects_foreign_handles_and_bad_shapes() {
+        let cfg = tiny_cfg();
+        let e = engine(&cfg, 8, Variant::Fused, 1);
+        assert!(e.upload_hist(&[0.0; 7]).is_err());
+        let (hist, cands) = inputs(&cfg, 8, 1);
+        let h = e.upload_hist(&hist).unwrap();
+        assert!(e.run_segmented(&[SegmentBind { hist: &h, rows: 5 }], &cands).is_err());
+        let host = HistHandle::Host(vec![0.0; cfg.d_model]);
+        assert!(e.run_segmented(&[SegmentBind { hist: &host, rows: 8 }], &cands).is_err());
+    }
+
+    #[test]
+    fn seed_for_is_stable_and_scenario_dependent() {
+        assert_eq!(CpuModel::seed_for("base"), CpuModel::seed_for("base"));
+        assert_ne!(CpuModel::seed_for("base"), CpuModel::seed_for("long"));
+    }
+}

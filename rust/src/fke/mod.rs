@@ -1,11 +1,17 @@
-//! FKE — Fused Kernel Engine registry (paper §3.2).
+//! FKE — Fused Kernel Engine registry (paper §3.2) and the native CPU
+//! engine implementing it.
 //!
-//! The kernel work itself lives at L1/L2 (`python/compile/kernels`,
-//! lowered at build time); at serve time the FKE is the *engine variant*
-//! axis: which lowered graph a stack runs. This module names the ablation
-//! levels, maps them onto manifest entries, and computes the analytic
-//! efficiency numbers (mask-aware FLOP savings, VMEM budgets) reported in
-//! EXPERIMENTS.md.
+//! The lowered-kernel path lives at L1/L2 (`python/compile/kernels`,
+//! AOT-lowered at build time); at serve time the FKE is the *engine
+//! variant* axis: which engine construction a stack runs. This module
+//! names the ablation levels, maps them onto manifest entries, computes
+//! the analytic efficiency numbers (mask-aware FLOP savings, VMEM
+//! budgets) reported in EXPERIMENTS.md — and, in [`cpu`], implements
+//! the ladder as a real multithreaded CPU compute backend
+//! ([`cpu::CpuEngine`]) so every tier of the stack executes genuine
+//! FLOPs on a bare checkout, no artifacts or PJRT required.
+
+pub mod cpu;
 
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};

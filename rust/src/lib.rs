@@ -111,6 +111,36 @@
 //! machine-readable `BENCH_pipeline.json` (CLI: `flame serve --pipeline
 //! --feature-workers N --fetch-coalesce --fetch-wait-us T`).
 //!
+//! ## Native CPU FKE
+//!
+//! The Fused Kernel Engine is the paper's single largest win (4.6–6.1x
+//! compute speedup, Table 4), and it is now a *real* compute backend,
+//! not just an analytic registry: [`fke::cpu::CpuEngine`] executes the
+//! Climber-like GR forward (per-block pre-LN transformer over
+//! `[hist; candidates]` with the SUMI mask, gating fusion, expert head)
+//! natively and multithreaded on the CPU, with the three Table-4
+//! engine-construction levels selectable at runtime — `naive`
+//! (per-op loops, materialized intermediates, cache-hostile GEMM order),
+//! `api` (fused QKV, blocked vectorizable GEMM loops, scratch arenas,
+//! no score-matrix materialization), and `fused` (mask-aware attention
+//! tile skipping on the [`fke::attention_tile_stats`] schedule, fused
+//! per-row LN+FFN tiles, one-pass score+reduce head). All variants run
+//! the same math in the same per-element order, so `fused` is bit-exact
+//! with `api` and within 1e-5 of `naive`. Crucially the engine is
+//! **natively segmented**: `run_segmented` binds one history per row
+//! segment inside a single launch, so a coalescer-packed mixed batch of
+//! M rows executes M rows once (`executed_rows_for == M`) with scores
+//! bit-identical to solo launches — closing the per-history replay gap
+//! the PJRT emulation pays. Wired end to end: `flame serve|bind|cluster
+//! --backend cpu --variant naive|api|fused --threads N` builds
+//! artifact-free stacks (`--backend sim` for the queueing sim), engine
+//! FLOP/tile counters flow through [`metrics::Recorder`]
+//! (`fke_flops`, `fke_tiles_*`) into the serve report, and
+//! `benches/bench_fke.rs` reproduces Table 4 as a
+//! naive/api/fused × {base,long} × {solo, coalesced-mixed} ablation
+//! emitting `BENCH_fke.json` (CI gates the fused-vs-naive ordering via
+//! `--smoke`).
+//!
 //! ## Quick start
 //!
 //! ```no_run

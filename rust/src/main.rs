@@ -16,7 +16,11 @@ use flame::cluster::{
     StackReplica,
 };
 use flame::config::{flops, CacheMode, DsoMode, Scenario, StackConfig, WorkloadConfig};
+use flame::dso::{ComputeBackend, SimEngine};
+use flame::fke::cpu::{CpuEngine, CpuEngineConfig, CpuModel};
+use flame::fke::Variant;
 use flame::manifest::Manifest;
+use flame::metrics::Recorder;
 use flame::pda::numa::Topology;
 use flame::runtime::Runtime;
 use flame::server::pipeline::{ServingStack, StackBuilder};
@@ -70,6 +74,12 @@ fn stack_config(args: &Args) -> Result<StackConfig> {
     }
     if let Some(n) = args.get_parse::<usize>("handoff-capacity")? {
         cfg.server.handoff_capacity = n;
+    }
+    if args.has("deadline-first") {
+        cfg.server.deadline_first = true;
+    }
+    if let Some(d) = args.get_parse::<u64>("deadline-ms")? {
+        cfg.server.deadline_ms = d;
     }
     if args.has("fetch-coalesce") {
         cfg.pda.fetch_coalesce = true;
@@ -137,11 +147,69 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Assemble one stack over artifact-free native backends (`--backend
+/// cpu|sim`). The cpu path builds (or shares, for replicas) a seeded
+/// [`CpuModel`] and wires each engine's FLOP/tile counters into the
+/// stack's recorder.
+fn build_native_stack(
+    args: &Args,
+    cfg: &StackConfig,
+    scenario: &str,
+    variant: &str,
+    backend: &str,
+    cpu_model: Option<&Arc<CpuModel>>,
+) -> Result<Arc<ServingStack>> {
+    let model_cfg = Scenario::parse(scenario)?.config();
+    let recorder = Arc::new(Recorder::new());
+    let backends: Vec<Arc<dyn ComputeBackend>> = match backend {
+        "sim" => model_cfg
+            .m_profiles
+            .iter()
+            .map(|&m| {
+                Arc::new(
+                    SimEngine::new(m, model_cfg.seq_len, model_cfg.d_model, model_cfg.n_tasks)
+                        .with_delay(Duration::from_micros(300)),
+                ) as Arc<dyn ComputeBackend>
+            })
+            .collect(),
+        "cpu" => {
+            let ecfg = CpuEngineConfig {
+                variant: Variant::parse(variant)?,
+                threads: args.get_parse::<usize>("threads")?.unwrap_or(0),
+            };
+            let owned;
+            let model = match cpu_model {
+                Some(m) => m,
+                None => {
+                    owned = CpuModel::new(&model_cfg, CpuModel::seed_for(scenario))?;
+                    &owned
+                }
+            };
+            CpuEngine::profile_set(model, &ecfg, Some(Arc::clone(&recorder)))
+        }
+        other => bail!("unknown backend '{other}' — expected cpu | sim"),
+    };
+    let stack = StackBuilder::new(scenario, variant, cfg.clone())
+        .with_metrics(recorder)
+        .build_from_backends(model_cfg, cfg.workload.seed, backends)
+        .context("building native-backend stack")?;
+    Ok(Arc::new(stack))
+}
+
 fn build_stack(args: &Args) -> Result<(Arc<flame::server::ServingStack>, StackConfig)> {
     let dir = args.get_or("artifacts", "artifacts");
     let scenario = args.get_or("scenario", "bench");
     let variant = args.get_or("variant", "fused");
     let cfg = stack_config(args)?;
+    if let Some(backend) = args.get("backend") {
+        eprintln!("[flame] building native {backend} stack: {scenario}/{variant} ...");
+        let stack = build_native_stack(args, &cfg, scenario, variant, backend, None)?;
+        eprintln!(
+            "[flame] ready: profiles {:?}, backend {backend} (no artifacts)",
+            stack.orchestrator.profiles()
+        );
+        return Ok((stack, cfg));
+    }
     let manifest = Manifest::load(dir).context("loading manifest — run `make artifacts`")?;
     let runtime = Runtime::new().context("creating PJRT client")?;
     eprintln!("[flame] compiling {scenario}/{variant} engines ...");
@@ -256,6 +324,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("network        : {:.1} MB/s", stack.network_mb_per_s());
     println!("cache hit rate : {:.1} %", stack.query.cache().stats.hit_rate() * 100.0);
     println!("dso waste      : {:.1} % padded rows", stack.orchestrator.waste_fraction() * 100.0);
+    let ks = stack.orchestrator.kernel_stats();
+    if ks.launches > 0 {
+        println!(
+            "fke kernels    : {} launches, {:.2} GFLOP executed ({:.2} GFLOP/s), tiles visited {} / skipped {} ({:.0} % skipped)",
+            ks.launches,
+            ks.flops as f64 / 1e9,
+            ks.flops as f64 / 1e9 / snap.elapsed_s.max(1e-9),
+            ks.tiles_visited,
+            ks.tiles_skipped,
+            ks.tile_skip_fraction() * 100.0
+        );
+    }
     if stack.orchestrator.coalesce_enabled() {
         let cs = stack.orchestrator.coalesce_stats();
         println!(
@@ -345,11 +425,30 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
 
 /// Build `n` independent real serving stacks (shared runtime + manifest,
 /// independent PDA caches and executor pools — one "replica" each).
+/// With `--backend cpu|sim` the replicas are artifact-free: cpu replicas
+/// share one weight set (`CpuModel`) but keep independent engines,
+/// recorders, and PDA caches.
 fn build_stacks(args: &Args, n: usize) -> Result<Vec<Arc<ServingStack>>> {
     let dir = args.get_or("artifacts", "artifacts");
     let scenario = args.get_or("scenario", "bench");
     let variant = args.get_or("variant", "fused");
     let cfg = stack_config(args)?;
+    if let Some(backend) = args.get("backend") {
+        let cpu_model = if backend == "cpu" {
+            let model_cfg = Scenario::parse(scenario)?.config();
+            Some(CpuModel::new(&model_cfg, CpuModel::seed_for(scenario))?)
+        } else {
+            None
+        };
+        return (0..n)
+            .map(|i| {
+                eprintln!(
+                    "[flame] building replica {i}: native {backend} {scenario}/{variant} ..."
+                );
+                build_native_stack(args, &cfg, scenario, variant, backend, cpu_model.as_ref())
+            })
+            .collect();
+    }
     let manifest = Manifest::load(dir).context("loading manifest — run `make artifacts`")?;
     let runtime = Runtime::new().context("creating PJRT client")?;
     let mut stacks = Vec::with_capacity(n);
@@ -374,7 +473,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     // heavy tail of large-M); real stacks use their profile set instead
     let mut mix: Vec<(usize, f64)> = vec![(128, 0.55), (256, 0.25), (512, 0.15), (1024, 0.05)];
     let mut seq_len = 32usize;
-    let backends: Vec<Arc<dyn ReplicaBackend>> = if args.has("real") {
+    // `--real` (artifacts) and `--backend cpu|sim` (artifact-free) both
+    // drive real ServingStack replicas instead of the queueing sim
+    let real_stacks = args.has("real") || args.get("backend").is_some();
+    let backends: Vec<Arc<dyn ReplicaBackend>> = if real_stacks {
         let stacks = build_stacks(args, n)?;
         seq_len = stacks[0].model_cfg.seq_len;
         mix = WorkloadConfig::uniform_mix(stacks[0].orchestrator.profiles());

@@ -48,6 +48,12 @@ pub struct Recorder {
     coalesced_rows: AtomicU64,
     /// DSO batch coalescer: packed remainder batches launched.
     coalesce_batches: AtomicU64,
+    /// Native CPU FKE: analytic FLOPs executed by kernel launches.
+    fke_flops: AtomicU64,
+    /// Native CPU FKE: attention tiles the mask schedule visited.
+    fke_tiles_visited: AtomicU64,
+    /// Native CPU FKE: attention tiles skipped as fully masked.
+    fke_tiles_skipped: AtomicU64,
     started: Instant,
 }
 
@@ -78,6 +84,9 @@ impl Recorder {
             coalesce_occupancy: Histogram::new(),
             coalesced_rows: AtomicU64::new(0),
             coalesce_batches: AtomicU64::new(0),
+            fke_flops: AtomicU64::new(0),
+            fke_tiles_visited: AtomicU64::new(0),
+            fke_tiles_skipped: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -167,6 +176,28 @@ impl Recorder {
         self.coalesced_rows.fetch_add(shared_rows, Ordering::Relaxed);
     }
 
+    /// One native CPU FKE launch: analytic FLOPs executed plus the
+    /// mask-aware attention-tile schedule's visit/skip counts (the
+    /// engine derives all three once and passes them through, so this
+    /// mirror can never drift from `CpuEngine::kernel_stats`).
+    pub fn record_fke_launch(&self, flops: u64, tiles_visited: u64, tiles_skipped: u64) {
+        self.fke_flops.fetch_add(flops, Ordering::Relaxed);
+        self.fke_tiles_visited.fetch_add(tiles_visited, Ordering::Relaxed);
+        self.fke_tiles_skipped.fetch_add(tiles_skipped, Ordering::Relaxed);
+    }
+
+    pub fn fke_flops(&self) -> u64 {
+        self.fke_flops.load(Ordering::Relaxed)
+    }
+
+    pub fn fke_tiles_visited(&self) -> u64 {
+        self.fke_tiles_visited.load(Ordering::Relaxed)
+    }
+
+    pub fn fke_tiles_skipped(&self) -> u64 {
+        self.fke_tiles_skipped.load(Ordering::Relaxed)
+    }
+
     pub fn coalesced_rows(&self) -> u64 {
         self.coalesced_rows.load(Ordering::Relaxed)
     }
@@ -223,6 +254,9 @@ impl Recorder {
         self.coalesce_occupancy.reset();
         self.coalesced_rows.store(0, Ordering::Relaxed);
         self.coalesce_batches.store(0, Ordering::Relaxed);
+        self.fke_flops.store(0, Ordering::Relaxed);
+        self.fke_tiles_visited.store(0, Ordering::Relaxed);
+        self.fke_tiles_skipped.store(0, Ordering::Relaxed);
         self.started = Instant::now();
     }
 
@@ -255,6 +289,9 @@ impl Recorder {
             coalesce_batches: self.coalesce_batches(),
             coalesce_occupancy_mean_pct: self.coalesce_occupancy.mean(),
             coalesce_occupancy_p50_pct: self.coalesce_occupancy.p50(),
+            fke_flops: self.fke_flops(),
+            fke_tiles_visited: self.fke_tiles_visited(),
+            fke_tiles_skipped: self.fke_tiles_skipped(),
         }
     }
 
@@ -299,6 +336,10 @@ pub struct MetricsSnapshot {
     pub coalesce_batches: u64,
     pub coalesce_occupancy_mean_pct: f64,
     pub coalesce_occupancy_p50_pct: u64,
+    /// Native CPU FKE kernel counters (0 on sim/PJRT backends).
+    pub fke_flops: u64,
+    pub fke_tiles_visited: u64,
+    pub fke_tiles_skipped: u64,
 }
 
 impl MetricsSnapshot {
@@ -361,6 +402,7 @@ mod tests {
         r.record_arena_growth(2);
         r.record_fetch_coalesced();
         r.record_fetch_batch();
+        r.record_fke_launch(1_000_000, 10, 5);
         r.reset();
         let s = r.snapshot_over(1.0);
         assert_eq!(s.requests, 0);
@@ -372,6 +414,17 @@ mod tests {
         assert_eq!(s.coalesce_occupancy_mean_pct, 0.0);
         assert_eq!(s.handoff_mean_ms, 0.0);
         assert_eq!((s.arena_growths, s.fetch_coalesced, s.fetch_batches), (0, 0, 0));
+        assert_eq!((s.fke_flops, s.fke_tiles_visited, s.fke_tiles_skipped), (0, 0, 0));
+    }
+
+    #[test]
+    fn fke_counters_surface_in_snapshot() {
+        let r = Recorder::new();
+        r.record_fke_launch(2_000_000, 12, 4);
+        r.record_fke_launch(1_000_000, 6, 2);
+        let s = r.snapshot_over(1.0);
+        assert_eq!(s.fke_flops, 3_000_000);
+        assert_eq!((s.fke_tiles_visited, s.fke_tiles_skipped), (18, 6));
     }
 
     #[test]

@@ -56,16 +56,31 @@ pub struct StackBuilder {
     pub scenario: String,
     pub variant: String,
     pub link: Option<Arc<Link>>,
+    pub metrics: Option<Arc<Recorder>>,
 }
 
 impl StackBuilder {
     pub fn new(scenario: &str, variant: &str, config: StackConfig) -> Self {
-        StackBuilder { config, scenario: scenario.into(), variant: variant.into(), link: None }
+        StackBuilder {
+            config,
+            scenario: scenario.into(),
+            variant: variant.into(),
+            link: None,
+            metrics: None,
+        }
     }
 
     /// Inject a shared link (benches want to read its byte counters).
     pub fn with_link(mut self, link: Arc<Link>) -> Self {
         self.link = Some(link);
+        self
+    }
+
+    /// Inject a pre-built recorder. Backends that mirror counters into a
+    /// recorder at construction time (e.g. `fke::cpu::CpuEngine`) need
+    /// the same instance the stack will report from.
+    pub fn with_metrics(mut self, metrics: Arc<Recorder>) -> Self {
+        self.metrics = Some(metrics);
         self
     }
 
@@ -118,8 +133,9 @@ impl StackBuilder {
     ) -> Result<ServingStack> {
         // The recorder is shared by all three layers (PDA fetch
         // coalescer, DSO batch coalescer, request accounting), so it is
-        // created first.
-        let metrics = Arc::new(Recorder::new());
+        // created first — or taken from the builder when the caller
+        // already wired backends to one.
+        let metrics = self.metrics.unwrap_or_else(|| Arc::new(Recorder::new()));
 
         // PDA side
         let link = self

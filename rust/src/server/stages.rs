@@ -32,7 +32,7 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::batching::RequestQueue;
 use crate::error::{Error, Result};
@@ -45,6 +45,10 @@ use super::pipeline::{Response, ServingStack};
 /// A request admitted into the pipeline, with its reply channel.
 struct PipelineJob {
     req: Request,
+    /// Absolute deadline, stamped at admission. With
+    /// `ServerConfig::deadline_first` the intake pops the
+    /// nearest-deadline job first instead of FIFO.
+    deadline: Instant,
     reply: Sender<Result<Response>>,
 }
 
@@ -84,8 +88,17 @@ impl PipelineHandle {
         let n = stack.config.server.feature_workers.max(1);
         let m = stack.config.server.pipeline_workers.max(1);
         let handoff_cap = stack.config.server.handoff_capacity.max(1);
-        let intake: Arc<RequestQueue<PipelineJob>> =
-            RequestQueue::new(stack.config.dso.queue_capacity);
+        let intake: Arc<RequestQueue<PipelineJob>> = if stack.config.server.deadline_first {
+            // deadline-closest-first: feature workers pop the queued job
+            // whose absolute deadline is nearest (µs since this epoch;
+            // pre-epoch deadlines saturate to 0 and stay first)
+            let epoch = Instant::now();
+            RequestQueue::with_priority(stack.config.dso.queue_capacity, move |job| {
+                job.deadline.saturating_duration_since(epoch).as_micros() as u64
+            })
+        } else {
+            RequestQueue::new(stack.config.dso.queue_capacity)
+        };
         let handoff: Arc<RequestQueue<StagedRequest>> = RequestQueue::new(handoff_cap);
         // Enough arenas that steady state never blocks on the pool: one
         // per feature worker (being filled), one per handoff slot
@@ -127,10 +140,25 @@ impl PipelineHandle {
     }
 
     /// Admit a request (shedding on a full intake queue — the
-    /// backpressure front door) and return the response receiver.
+    /// backpressure front door) and return the response receiver. The
+    /// deadline is the configured per-request budget
+    /// (`ServerConfig::deadline_ms`).
     pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
+        let budget = Duration::from_millis(self.stack.config.server.deadline_ms);
+        self.submit_with_deadline(req, budget)
+    }
+
+    /// Admit a request with an explicit deadline budget. Only matters
+    /// under `ServerConfig::deadline_first`, where the intake pops the
+    /// nearest-deadline request first — a tight budget overtakes slack
+    /// ones queued ahead of it.
+    pub fn submit_with_deadline(
+        &self,
+        req: Request,
+        budget: Duration,
+    ) -> Result<Receiver<Result<Response>>> {
         let (reply, rx) = channel();
-        self.intake.push(PipelineJob { req, reply })?;
+        self.intake.push(PipelineJob { req, deadline: Instant::now() + budget, reply })?;
         Ok(rx)
     }
 

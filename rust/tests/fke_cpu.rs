@@ -1,0 +1,318 @@
+//! Native CPU FKE integration (artifact-free): cross-variant score
+//! identity, native-segmented vs solo-launch bit-exactness under random
+//! coalescer packings, orchestrator-level waste accounting (native M
+//! executed rows vs the PJRT-style per-history replay), and full-stack
+//! wiring through `StackBuilder::build_from_backends` + the recorder.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+
+use flame::config::{CacheMode, DsoConfig, DsoMode, ModelConfig, StackConfig};
+use flame::dso::{ComputeBackend, HistHandle, KernelStats, Orchestrator, SegmentBind, SimEngine};
+use flame::fke::cpu::{CpuEngine, CpuEngineConfig, CpuModel};
+use flame::fke::Variant;
+use flame::manifest::testvec::max_abs_diff;
+use flame::metrics::Recorder;
+use flame::pda::StagingArena;
+use flame::server::pipeline::StackBuilder;
+use flame::util::propcheck;
+use flame::workload::Request;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "cputest".into(),
+        seq_len: 16,
+        n_blocks: 2,
+        layers_per_block: 2,
+        d_model: 16,
+        n_heads: 2,
+        n_tasks: 3,
+        m_profiles: vec![4, 8],
+        native_m: 8,
+    }
+}
+
+fn inputs(c: &ModelConfig, m: usize, salt: u64) -> (Vec<f32>, Vec<f32>) {
+    let hist: Vec<f32> = (0..c.seq_len * c.d_model)
+        .map(|i| (((i as u64 + salt) * 31 % 113) as f32 / 113.0) - 0.5)
+        .collect();
+    let cands: Vec<f32> = (0..m * c.d_model)
+        .map(|i| (((i as u64 + salt) * 17 % 127) as f32 / 127.0) - 0.5)
+        .collect();
+    (hist, cands)
+}
+
+fn engines(c: &ModelConfig, m: usize, threads: usize) -> [CpuEngine; 3] {
+    let model = CpuModel::new(c, 42).unwrap();
+    Variant::all().map(|variant| {
+        CpuEngine::new(Arc::clone(&model), m, &CpuEngineConfig { variant, threads })
+    })
+}
+
+/// Satellite acceptance: fused and api are bit-exact (the mask schedule
+/// only removes exact-zero contributions); naive is held to 1e-5 — its
+/// per-element accumulation order is engineered to match too, but the
+/// tolerance documents the allowed reassociation budget for a
+/// mechanically-exported graph.
+#[test]
+fn cross_variant_scores_agree() {
+    let c = cfg();
+    let [naive, api, fused] = engines(&c, 8, 2);
+    for salt in [1u64, 29, 77] {
+        let (hist, cands) = inputs(&c, 8, salt);
+        let sn = naive.run(&hist, &cands).unwrap();
+        let sa = api.run(&hist, &cands).unwrap();
+        let sf = fused.run(&hist, &cands).unwrap();
+        assert_eq!(sa, sf, "salt {salt}: fused must be bit-exact with api");
+        let diff = max_abs_diff(&sn, &sa);
+        assert!(diff < 1e-5, "salt {salt}: naive vs api diff {diff}");
+        assert!(sn.iter().all(|s| s.is_finite() && (0.0..=1.0).contains(s)));
+    }
+}
+
+/// Satellite acceptance: for any coalescer packing (random segment
+/// sizes, random histories), a packed mixed batch scores every row
+/// bit-identically to that row's own solo launch — in every variant.
+#[test]
+fn prop_native_segmented_matches_solo_launches() {
+    let c = cfg();
+    let engines = engines(&c, 8, 2);
+    propcheck::check("cpu segmented == solo", 12, |g| {
+        let n_seg = g.usize_in(1, 4);
+        // random partition of the 8-row profile into n_seg segments
+        let mut rows = Vec::with_capacity(n_seg);
+        let mut remaining = 8usize;
+        for s in 0..n_seg - 1 {
+            let left = n_seg - 1 - s; // rows the remaining segments need
+            let take = g.usize_in(1, remaining - left + 1);
+            rows.push(take);
+            remaining -= take;
+        }
+        rows.push(remaining);
+
+        let salts: Vec<u64> = (0..n_seg).map(|_| g.u64_below(1 << 20)).collect();
+        for e in &engines {
+            let hists: Vec<_> = salts
+                .iter()
+                .map(|&s| e.upload_hist(&inputs(&c, 8, s).0).unwrap())
+                .collect();
+            let segs: Vec<Vec<f32>> = salts
+                .iter()
+                .zip(&rows)
+                .map(|(&s, &r)| inputs(&c, r, s ^ 0xC0FFEE).1)
+                .collect();
+            let mut packed = Vec::new();
+            for seg in &segs {
+                packed.extend_from_slice(seg);
+            }
+            let binds: Vec<SegmentBind<'_>> = hists
+                .iter()
+                .zip(&rows)
+                .map(|(h, &r)| SegmentBind { hist: h, rows: r })
+                .collect();
+            let out = e.run_segmented(&binds, &packed).unwrap();
+            if e.executed_rows_for(n_seg) != 8 {
+                return Err(format!(
+                    "native backend must execute m rows once, got {}",
+                    e.executed_rows_for(n_seg)
+                ));
+            }
+
+            // each segment alone, padded to the profile with its own
+            // last row repeated (what the orchestrator's pad does)
+            let mut off = 0usize;
+            for (i, (seg, &r)) in segs.iter().zip(&rows).enumerate() {
+                let mut solo = seg.clone();
+                let last = &seg[(r - 1) * c.d_model..r * c.d_model];
+                for _ in 0..8 - r {
+                    solo.extend_from_slice(last);
+                }
+                let sref = e
+                    .run_segmented(&[SegmentBind { hist: &hists[i], rows: 8 }], &solo)
+                    .unwrap();
+                let got = &out[off * c.n_tasks..(off + r) * c.n_tasks];
+                if got != &sref[..r * c.n_tasks] {
+                    return Err(format!(
+                        "{}: segment {i} (rows {r}) diverged from its solo launch",
+                        e.label()
+                    ));
+                }
+                off += r;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A PJRT-style backend standing in for the per-history replay
+/// emulation: scores are exact (delegated to `SimEngine`), but a packed
+/// batch of S segments costs `m * S` executed rows.
+struct ReplayEngine(SimEngine);
+
+impl ComputeBackend for ReplayEngine {
+    fn m(&self) -> usize {
+        self.0.m()
+    }
+    fn n_tasks(&self) -> usize {
+        self.0.n_tasks()
+    }
+    fn d_model(&self) -> usize {
+        self.0.d_model()
+    }
+    fn hist_len(&self) -> usize {
+        self.0.hist_len()
+    }
+    fn upload_hist(&self, hist: &[f32]) -> flame::Result<HistHandle> {
+        self.0.upload_hist(hist)
+    }
+    fn run_segmented(
+        &self,
+        segments: &[SegmentBind<'_>],
+        cands: &[f32],
+    ) -> flame::Result<Vec<f32>> {
+        self.0.run_segmented(segments, cands)
+    }
+    fn label(&self) -> String {
+        format!("replay/{}", self.0.label())
+    }
+    fn executed_rows_for(&self, segments: usize) -> usize {
+        self.0.m() * segments.max(1)
+    }
+}
+
+/// Satellite acceptance: the recorder/orchestrator waste metrics count
+/// M executed rows for a natively segmented backend (CpuEngine) but the
+/// full M × segments replay cost for an emulating backend — on the same
+/// coalesced workload.
+#[test]
+fn coalesce_waste_accounting_native_vs_replay() {
+    const N: usize = 8; // concurrent 1-row requests onto an 8-profile
+    let c = cfg();
+    let dso = DsoConfig {
+        mode: DsoMode::Explicit,
+        executors_per_profile: 2,
+        queue_capacity: 1024,
+        coalesce: true,
+        coalesce_wait_us: 300_000,
+    };
+    let model = CpuModel::new(&c, 42).unwrap();
+    let profile_cfg = ModelConfig { m_profiles: vec![8], native_m: 8, ..c.clone() };
+    let cpu_engine = Arc::new(CpuEngine::new(
+        Arc::clone(&model),
+        8,
+        &CpuEngineConfig { variant: Variant::Fused, threads: 1 },
+    ));
+    let drive = |backend: Arc<dyn ComputeBackend>| -> (Arc<Orchestrator>, Vec<Vec<f32>>) {
+        let orch =
+            Arc::new(Orchestrator::from_backends(vec![backend], &dso, None).unwrap());
+        let barrier = Arc::new(Barrier::new(N));
+        let scores: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..N)
+                .map(|i| {
+                    let orch = Arc::clone(&orch);
+                    let barrier = Arc::clone(&barrier);
+                    let c = &profile_cfg;
+                    s.spawn(move || {
+                        let (hist, cands) = inputs(c, 1, i as u64);
+                        barrier.wait();
+                        orch.submit_slice(&hist, &cands, 1).unwrap().scores
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        (orch, scores)
+    };
+
+    // native CPU backend: executed rows == launches * m, period
+    let (cpu_orch, cpu_scores) = drive(Arc::clone(&cpu_engine) as Arc<dyn ComputeBackend>);
+    let cpu_stats = cpu_orch.coalesce_stats();
+    assert!(cpu_stats.multi_request_batches >= 1, "no packing happened: {cpu_stats:?}");
+    let launches = cpu_engine.kernel_stats().launches;
+    let cpu_executed = cpu_orch.executed_rows_total.load(Ordering::Relaxed);
+    assert_eq!(
+        cpu_executed,
+        launches * 8,
+        "natively segmented backend must execute m rows per launch, not m * segments"
+    );
+    assert!(cpu_executed < (N * 8) as u64, "packing must beat solo launches");
+
+    // replay-emulating backend on the same workload: every packed
+    // launch is charged m * segments — total is always N requests * m
+    let (replay_orch, replay_scores) =
+        drive(Arc::new(ReplayEngine(SimEngine::new(8, c.seq_len, c.d_model, c.n_tasks))));
+    let replay_executed = replay_orch.executed_rows_total.load(Ordering::Relaxed);
+    assert_eq!(
+        replay_executed,
+        (N * 8) as u64,
+        "replay emulation must be charged per-history, segments notwithstanding"
+    );
+    assert!(cpu_executed < replay_executed);
+
+    // and the cpu waste metric now reflects real savings: padded rows
+    // are launches * 8 - N real rows, a strict subset of executed rows
+    assert!(cpu_orch.waste_fraction() < 1.0);
+    assert!((replay_scores.len(), cpu_scores.len()) == (N, N));
+
+    // score correctness for the cpu path: every request's row equals a
+    // solo submit through a fresh non-coalescing orchestrator
+    let baseline = Orchestrator::from_backends(
+        vec![Arc::new(CpuEngine::new(
+            Arc::clone(&model),
+            8,
+            &CpuEngineConfig { variant: Variant::Fused, threads: 1 },
+        )) as Arc<dyn ComputeBackend>],
+        &DsoConfig::default(),
+        None,
+    )
+    .unwrap();
+    for (i, scores) in cpu_scores.iter().enumerate() {
+        let (hist, cands) = inputs(&profile_cfg, 1, i as u64);
+        let expected = baseline.submit_slice(&hist, &cands, 1).unwrap().scores;
+        assert_eq!(scores, &expected, "request {i} diverged under coalescing");
+    }
+}
+
+/// Full-stack wiring: a serving stack over CPU engines scores requests
+/// end to end on a bare checkout, and the engines' FLOP/tile counters
+/// reach the stack's shared recorder and the orchestrator aggregate.
+#[test]
+fn cpu_stack_serves_and_reports_kernel_stats() {
+    let c = cfg();
+    let mut stack_cfg = StackConfig::default();
+    stack_cfg.pda.cache_mode = CacheMode::Sync;
+    stack_cfg.pda.numa_binding = false;
+    let recorder = Arc::new(Recorder::new());
+    let model = CpuModel::new(&c, 42).unwrap();
+    let backends = CpuEngine::profile_set(
+        &model,
+        &CpuEngineConfig { variant: Variant::Fused, threads: 2 },
+        Some(Arc::clone(&recorder)),
+    );
+    let stack = StackBuilder::new("cputest", "fused", stack_cfg)
+        .with_metrics(Arc::clone(&recorder))
+        .build_from_backends(c.clone(), 7, backends)
+        .expect("cpu stack");
+
+    let req = Request {
+        request_id: 1,
+        user_id: 3,
+        history: (0..10).collect(),
+        candidates: (100..105).collect(), // m = 5 → split 4 + remainder
+    };
+    let mut arena = StagingArena::new(stack.arena_capacity());
+    let resp = stack.serve(&req, &mut arena).expect("serve");
+    assert_eq!(resp.scores.len(), 5 * c.n_tasks);
+    assert!(resp.scores.iter().all(|s| s.is_finite() && (0.0..=1.0).contains(s)));
+
+    let ks: KernelStats = stack.orchestrator.kernel_stats();
+    assert!(ks.launches >= 2, "split request must launch both profiles: {ks:?}");
+    assert!(ks.flops > 0 && ks.tiles_visited > 0);
+    assert!(ks.tile_skip_fraction() > 0.0, "fused variant must skip tiles: {ks:?}");
+    let snap = stack.metrics.snapshot();
+    assert_eq!(snap.fke_flops, ks.flops, "recorder mirror must match engine counters");
+    assert_eq!(snap.fke_tiles_visited, ks.tiles_visited);
+    assert_eq!(snap.fke_tiles_skipped, ks.tiles_skipped);
+    // launch wall time was measured and recorded
+    assert!(snap.compute_mean_ms >= 0.0);
+}

@@ -355,3 +355,57 @@ fn fetch_coalescer_cuts_remote_queries_for_hot_candidates() {
         "expected ~1 query/wave, saw {with}"
     );
 }
+
+/// Satellite: deadline-closest-first intake. With
+/// `ServerConfig::deadline_first` on, a tight-deadline request submitted
+/// *after* a slack one overtakes it in the intake queue while the single
+/// feature worker is busy — FIFO would serve the slack request first.
+#[test]
+fn deadline_first_intake_lets_tight_deadline_overtake() {
+    // slow feature link: the blocker pins the only feature worker for a
+    // full remote round-trip, guaranteeing both probe requests are
+    // queued together when the worker next pops
+    let link = Arc::new(Link::new(LinkConfig {
+        rtt: Duration::from_millis(30),
+        bandwidth_bps: 1e9,
+        jitter: 0.0,
+        fail_rate: 0.0,
+    }));
+    let stack = sim_stack(
+        |c| {
+            c.server.pipeline = true;
+            c.server.feature_workers = 1;
+            c.server.pipeline_workers = 1;
+            c.server.handoff_capacity = 1;
+            c.server.deadline_first = true;
+        },
+        Duration::from_millis(1),
+        link,
+    );
+    let handle = stack.spawn_pipeline();
+
+    let blocker = handle.submit(request(0, 4, 1)).expect("admit blocker");
+    std::thread::sleep(Duration::from_millis(5));
+    // enqueued in this order; deadline order is the reverse
+    let slack = handle
+        .submit_with_deadline(request(1, 4, 2), Duration::from_secs(10))
+        .expect("admit slack");
+    let tight = handle
+        .submit_with_deadline(request(2, 4, 3), Duration::from_millis(5))
+        .expect("admit tight");
+
+    let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+    std::thread::scope(|s| {
+        for (label, rx) in [("slack", slack), ("tight", tight)] {
+            let order = Arc::clone(&order);
+            s.spawn(move || {
+                rx.recv().expect("pipeline alive").expect("served");
+                order.lock().unwrap().push(label);
+            });
+        }
+    });
+    blocker.recv().expect("pipeline alive").expect("served");
+    handle.shutdown();
+    let order = order.lock().unwrap().clone();
+    assert_eq!(order, vec!["tight", "slack"], "nearest deadline must pop first");
+}
