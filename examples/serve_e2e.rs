@@ -18,6 +18,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
+use flame::benchkit::Table;
 use flame::config::{CacheMode, StackConfig, WorkloadConfig};
 use flame::dso::ComputeBackend;
 use flame::manifest::Manifest;
@@ -89,6 +90,7 @@ fn main() -> Result<()> {
     stack.metrics.overall.reset();
     stack.metrics.compute.reset();
     stack.metrics.feature.reset();
+    stack.metrics.queueing.reset();
     stack.metrics.handoff.reset();
     let t0 = std::time::Instant::now();
     let report = if pipelined {
@@ -120,6 +122,25 @@ fn main() -> Result<()> {
             snap.arena_growths - before_growths
         );
     }
+    // Where a request's time goes, stage by stage (queue and handoff
+    // are 0 outside the decoupled pipeline). The rows don't sum to the
+    // e2e percentiles — a p99 request is rarely p99 in every stage.
+    let mut stages = Table::new("per-stage latency", &["stage", "mean ms", "p50 ms", "p99 ms"]);
+    for (name, mean, p50, p99) in [
+        ("queue", snap.queueing_mean_ms, snap.queueing_p50_ms, snap.queueing_p99_ms),
+        ("feature", snap.feature_mean_ms, snap.feature_p50_ms, snap.feature_p99_ms),
+        ("handoff", snap.handoff_mean_ms, snap.handoff_p50_ms, snap.handoff_p99_ms),
+        ("compute", snap.compute_mean_ms, snap.compute_p50_ms, snap.compute_p99_ms),
+        ("e2e", snap.overall_mean_ms, snap.overall_p50_ms, snap.overall_p99_ms),
+    ] {
+        stages.row(&[
+            name.to_string(),
+            format!("{mean:.3}"),
+            format!("{p50:.3}"),
+            format!("{p99:.3}"),
+        ]);
+    }
+    stages.print();
     println!("network         : {:.2} MB/s", mb / elapsed);
     println!("cache hit rate  : {:.1} % (fresh {:.1} %)", stack.query.cache().stats.hit_rate() * 100.0, stack.query.cache().stats.fresh_hit_rate() * 100.0);
     println!("dso waste       : {:.1} % padded rows", stack.orchestrator.waste_fraction() * 100.0);

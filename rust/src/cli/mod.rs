@@ -22,7 +22,8 @@ const VALUE_FLAGS: &[&str] = &[
     "executors", "theta", "catalog", "replicas", "policy", "deadline-ms",
     "slots", "users", "result-cache-cap", "result-ttl-ms", "dup-rate",
     "coalesce-wait-us", "m-dist", "feature-workers", "fetch-wait-us",
-    "handoff-capacity", "backend", "threads",
+    "handoff-capacity", "backend", "threads", "trace-out", "trace-sample-n",
+    "metrics-addr", "metrics-hold-s",
 ];
 
 impl Args {
@@ -97,6 +98,8 @@ COMMANDS:
   bind      start the TCP front (--bind ADDR; --replicas N fronts a cluster)
   cluster   drive the multi-replica cluster router and report per-replica
             metrics (simulated replicas by default; --real uses artifacts)
+  trace-check  validate a --trace-out JSON file (schema + flow pairing)
+            and print event counts: flame trace-check trace.json
 
 CLUSTER FLAGS:
   --replicas N        replica count                (default: 3)
@@ -147,6 +150,17 @@ COMMON FLAGS:
   --no-numa           disable NUMA binding
   --no-staging        disable staging arenas
   --seed N            workload seed
+
+OBSERVABILITY FLAGS (serve, cluster):
+  --trace-out FILE    write a Chrome trace-event / Perfetto JSON timeline
+                      of sampled requests on exit (open in ui.perfetto.dev)
+  --trace-sample-n N  head-sample 1-in-N requests for full span timelines
+                      (default: 1 when --trace-out is set, else 0 = off;
+                      SLA-miss exemplars are kept regardless)
+  --metrics-addr ADDR serve live Prometheus-style text metrics over HTTP
+                      at ADDR (e.g. 127.0.0.1:9095) for the run's duration
+  --metrics-hold-s S  keep the metrics endpoint up S seconds after the
+                      run ends (lets a scraper catch a short run)
 "
     .to_string()
 }
@@ -274,6 +288,26 @@ mod tests {
         let a = parse(&["serve", "--pipeline", "--deadline-first"]);
         assert!(a.has("deadline-first"));
         assert!(!a.has("deadline-ms"), "deadline-ms stays a value flag");
+    }
+
+    #[test]
+    fn observability_flags_take_values() {
+        let a = parse(&[
+            "serve",
+            "--trace-out",
+            "trace.json",
+            "--trace-sample-n",
+            "8",
+            "--metrics-addr",
+            "127.0.0.1:9095",
+        ]);
+        assert_eq!(a.get("trace-out"), Some("trace.json"));
+        assert_eq!(a.get_parse::<u64>("trace-sample-n").unwrap(), Some(8));
+        assert_eq!(a.get("metrics-addr"), Some("127.0.0.1:9095"));
+        let h = help();
+        assert!(h.contains("--trace-out"));
+        assert!(h.contains("--metrics-addr"));
+        assert!(h.contains("trace-check"));
     }
 
     #[test]

@@ -42,6 +42,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::metrics::Recorder;
+use crate::obs::{self, SharedSpan, StageKind, TraceContext};
 use crate::server::pipeline::Response;
 use crate::util::rng::splitmix64;
 use crate::workload::Request;
@@ -223,23 +224,62 @@ impl ClusterRouter {
     /// dispatch (one failover retry on replica error) → SLA accounting.
     pub fn submit_with_budget(&self, req: &Request, budget_us: u64) -> Result<Response> {
         let t0 = Instant::now();
+        // one OnceLock::get returning None when tracing is off
+        let mut trace = self.metrics.trace_begin(req.request_id, budget_us);
         if let Some(rc) = &self.result_cache {
+            let cache_begin = trace.as_ref().map_or(0, |c| c.now_us());
             // every begin() classification below must mirror into
             // `self.metrics` — the Recorder's result_* counters and
             // the ResultCache's own are two sinks of the same events
             match rc.begin(req, Duration::from_micros(budget_us)) {
                 result_cache::Begin::Hit(resp) => {
                     self.metrics.record_result_hit();
-                    return Ok(self.finish_cached(req, resp, t0, budget_us));
+                    if let Some(ctx) = trace.as_mut() {
+                        let end = ctx.now_us();
+                        ctx.span(StageKind::Cache, cache_begin, end);
+                    }
+                    return Ok(self.finish_cached(req, resp, t0, budget_us, trace));
                 }
-                result_cache::Begin::Coalesced(resp) => {
+                result_cache::Begin::Coalesced(resp, leader_span) => {
                     self.metrics.record_result_coalesced();
-                    return Ok(self.finish_cached(req, resp, t0, budget_us));
+                    // the whole wait rode the leader's computation: the
+                    // cache span links to the leader's flight span
+                    if let Some(ctx) = trace.as_mut() {
+                        let end = ctx.now_us();
+                        ctx.span_linked(StageKind::Cache, cache_begin, end, &[leader_span]);
+                    }
+                    return Ok(self.finish_cached(req, resp, t0, budget_us, trace));
                 }
-                result_cache::Begin::Leader(flight) => {
+                result_cache::Begin::Leader(mut flight) => {
                     self.metrics.record_result_miss();
+                    // allocate the shared flight-span id up front so
+                    // waiters observe it with the published outcome
+                    let tracer = self.metrics.tracer().map(Arc::clone);
+                    let span_id = tracer.as_ref().map_or(0, |t| t.new_span_id());
+                    flight.set_span_id(span_id);
+                    let flight_begin = tracer.as_ref().map_or(0, |t| t.now_us());
                     let result = self.dispatch(req, budget_us, t0);
+                    if let Some(t) = &tracer {
+                        t.emit_shared(SharedSpan {
+                            span_id,
+                            kind: StageKind::Cache,
+                            label: format!("single-flight leader req {}", req.request_id),
+                            begin_us: flight_begin,
+                            end_us: t.now_us(),
+                            pid: self.metrics.tracer_pid(),
+                            tid: obs::tid(),
+                            member_traces: trace
+                                .as_ref()
+                                .map(|c| vec![c.trace_id()])
+                                .unwrap_or_default(),
+                        });
+                    }
+                    if let Some(ctx) = trace.as_mut() {
+                        let end = ctx.now_us();
+                        ctx.span_linked(StageKind::Compute, flight_begin, end, &[span_id]);
+                    }
                     flight.complete(req, &result);
+                    self.finish_trace(trace);
                     return result;
                 }
                 result_cache::Begin::Fallback => {
@@ -249,7 +289,22 @@ impl ClusterRouter {
                 }
             }
         }
-        self.dispatch(req, budget_us, t0)
+        let compute_begin = trace.as_ref().map_or(0, |c| c.now_us());
+        let result = self.dispatch(req, budget_us, t0);
+        if let Some(ctx) = trace.as_mut() {
+            let end = ctx.now_us();
+            ctx.span(StageKind::Compute, compute_begin, end);
+        }
+        self.finish_trace(trace);
+        result
+    }
+
+    /// Finish a router-level trace, judging the SLA against its budget.
+    fn finish_trace(&self, trace: Option<TraceContext>) {
+        if let Some(ctx) = trace {
+            let sla = ctx.budget_us() > 0 && ctx.elapsed_us() > ctx.budget_us();
+            self.metrics.trace_finish(ctx, sla);
+        }
     }
 
     /// Complete a request served from the result tier: stamp the
@@ -261,11 +316,13 @@ impl ClusterRouter {
         mut resp: Response,
         t0: Instant,
         budget_us: u64,
+        trace: Option<TraceContext>,
     ) -> Response {
         let elapsed_us = t0.elapsed().as_micros() as u64;
         resp.overall_us = elapsed_us;
         self.metrics.record_request(elapsed_us, req.m());
         self.admission.note_completion(elapsed_us, budget_us);
+        self.finish_trace(trace);
         resp
     }
 

@@ -87,9 +87,12 @@ impl CachedScores {
     }
 }
 
-/// One in-flight computation that coalesced duplicates wait on.
+/// One in-flight computation that coalesced duplicates wait on. A
+/// successful outcome carries the leader's shared trace-span id (0 =
+/// tracing off) so each waiter can link its own trace to the leader's
+/// computation.
 struct Flight {
-    outcome: Mutex<Option<std::result::Result<Arc<CachedScores>, ()>>>,
+    outcome: Mutex<Option<std::result::Result<(Arc<CachedScores>, u64), ()>>>,
     done: Condvar,
 }
 
@@ -98,13 +101,16 @@ impl Flight {
         Flight { outcome: Mutex::new(None), done: Condvar::new() }
     }
 
-    fn fill(&self, outcome: std::result::Result<Arc<CachedScores>, ()>) {
+    fn fill(&self, outcome: std::result::Result<(Arc<CachedScores>, u64), ()>) {
         *self.outcome.lock().unwrap() = Some(outcome);
         self.done.notify_all();
     }
 
     /// Wait up to `timeout` for the leader; `None` = timed out.
-    fn wait(&self, timeout: Duration) -> Option<std::result::Result<Arc<CachedScores>, ()>> {
+    fn wait(
+        &self,
+        timeout: Duration,
+    ) -> Option<std::result::Result<(Arc<CachedScores>, u64), ()>> {
         // cap so an effectively-infinite deadline budget cannot overflow
         // Instant arithmetic (and cannot hang a waiter for hours)
         let deadline = Instant::now() + timeout.min(Duration::from_secs(60));
@@ -128,8 +134,10 @@ pub enum Begin<'a> {
     /// Fresh cached response; serve it without touching a replica.
     Hit(Response),
     /// A coalesced duplicate: an identical in-flight computation
-    /// finished while we waited — serve its result.
-    Coalesced(Response),
+    /// finished while we waited — serve its result. The second field is
+    /// the leader's shared trace-span id (0 = tracing off), the causal
+    /// edge a waiter's trace links to.
+    Coalesced(Response, u64),
     /// This request leads the computation: dispatch to a replica, then
     /// [`FlightGuard::complete`] with the outcome.
     Leader(FlightGuard<'a>),
@@ -149,9 +157,18 @@ pub struct FlightGuard<'a> {
     sorted: Vec<u64>,
     history_hash: u64,
     flight: Option<Arc<Flight>>,
+    /// Shared trace-span id of the leader's computation, published to
+    /// waiters with the outcome (0 = tracing off).
+    span_id: u64,
 }
 
 impl FlightGuard<'_> {
+    /// Name the shared trace span covering this leader's computation,
+    /// so coalesced waiters can link their traces to it.
+    pub fn set_span_id(&mut self, span_id: u64) {
+        self.span_id = span_id;
+    }
+
     /// Publish the leader's outcome: a success is inserted into the
     /// cache and handed to every coalesced waiter; an error wakes the
     /// waiters so they fall back to their own dispatch.
@@ -166,13 +183,14 @@ impl FlightGuard<'_> {
                     scores: resp.scores.clone(),
                 });
                 self.cache.cache.insert(self.key, Arc::clone(&cached));
-                self.finish(Ok(cached));
+                let span_id = self.span_id;
+                self.finish(Ok((cached, span_id)));
             }
             Err(_) => self.finish(Err(())),
         }
     }
 
-    fn finish(&mut self, outcome: std::result::Result<Arc<CachedScores>, ()>) {
+    fn finish(&mut self, outcome: std::result::Result<(Arc<CachedScores>, u64), ()>) {
         if let Some(flight) = self.flight.take() {
             // deregister first so a new arrival starts a fresh flight
             // instead of waiting on a completed one
@@ -281,6 +299,7 @@ impl ResultCache {
                 sorted,
                 history_hash,
                 flight: None,
+                span_id: 0,
             });
         }
         let flight = {
@@ -311,13 +330,16 @@ impl ResultCache {
                     sorted,
                     history_hash,
                     flight: Some(flight),
+                    span_id: 0,
                 });
             }
         };
         match flight.wait(wait_budget) {
-            Some(Ok(cached)) if cached.matches(req.user_id, &sorted, history_hash) => {
+            Some(Ok((cached, leader_span)))
+                if cached.matches(req.user_id, &sorted, history_hash) =>
+            {
                 self.coalesced.fetch_add(1, Ordering::Relaxed);
-                Begin::Coalesced(self.response_from(req, &cached))
+                Begin::Coalesced(self.response_from(req, &cached), leader_span)
             }
             // leader failed, timed out, or (vanishingly) a key collision
             _ => {
@@ -531,7 +553,7 @@ mod tests {
             // after publication — either way it must NOT lead again
             matches!(
                 rc2.begin(&dup, Duration::from_secs(10)),
-                Begin::Coalesced(_) | Begin::Hit(_)
+                Begin::Coalesced(..) | Begin::Hit(_)
             )
         });
         // give the waiter time to park, then publish

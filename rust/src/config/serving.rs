@@ -165,6 +165,11 @@ pub struct ServerConfig {
     pub bind_addr: Option<String>,
     /// Per-request deadline in ms (paper envelope: < 50 ms end-to-end).
     pub deadline_ms: u64,
+    /// Head-sampling rate for request-scoped tracing: record full span
+    /// timelines for 1-in-N admitted requests (0 = tracing disabled, the
+    /// default — the hot path then allocates nothing for observability).
+    /// SLA-miss exemplars are retained regardless of the sampling draw.
+    pub trace_sample_n: u64,
 }
 
 impl Default for ServerConfig {
@@ -177,6 +182,7 @@ impl Default for ServerConfig {
             deadline_first: false,
             bind_addr: None,
             deadline_ms: 50,
+            trace_sample_n: 0,
         }
     }
 }
@@ -300,6 +306,9 @@ impl StackConfig {
             if let Some(v) = s.opt("deadline_ms") {
                 c.server.deadline_ms = v.as_u64()?;
             }
+            if let Some(v) = s.opt("trace_sample_n") {
+                c.server.trace_sample_n = v.as_u64()?;
+            }
         }
         if let Some(w) = j.opt("workload") {
             if let Some(v) = w.opt("catalog_size") {
@@ -359,6 +368,7 @@ mod tests {
         assert!(c.server.feature_workers >= 1);
         assert!(c.server.handoff_capacity >= 1);
         assert_eq!(c.server.deadline_ms, 50); // paper envelope
+        assert_eq!(c.server.trace_sample_n, 0, "tracing is opt-in");
     }
 
     #[test]
@@ -380,7 +390,7 @@ mod tests {
                     "coalesce": true, "coalesce_wait_us": 500},
             "server": {"pipeline_workers": 8, "bind_addr": "127.0.0.1:7070",
                        "pipeline": true, "feature_workers": 3, "handoff_capacity": 16,
-                       "deadline_first": true},
+                       "deadline_first": true, "trace_sample_n": 4},
             "workload": {"zipf_theta": 0.8, "candidate_mix": [[128, 1.0], [256, 1.0]]}
         }"#,
         )
@@ -401,6 +411,7 @@ mod tests {
         assert_eq!(c.server.handoff_capacity, 16);
         assert!(c.server.deadline_first);
         assert_eq!(c.server.bind_addr.as_deref(), Some("127.0.0.1:7070"));
+        assert_eq!(c.server.trace_sample_n, 4);
         assert_eq!(c.workload.candidate_mix, vec![(128, 1.0), (256, 1.0)]);
     }
 

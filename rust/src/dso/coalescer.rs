@@ -171,6 +171,7 @@ impl Coalescer {
     /// Add `take` rows (`rows` = `take * d` f32s) of a request's tail
     /// remainder to `profile`'s open batch, opening one if needed and
     /// dispatching any batch this fills (or displaces for lack of room).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn enqueue(
         &self,
         profile: usize,
@@ -178,6 +179,7 @@ impl Coalescer {
         rows: &[f32],
         take: usize,
         chunk_index: usize,
+        trace_id: u64,
         reply: Sender<Result<super::orchestrator::ChunkDone>>,
     ) -> Result<()> {
         debug_assert!(take > 0 && take <= profile);
@@ -213,6 +215,7 @@ impl Coalescer {
                     rows: take,
                     chunk_index,
                     enqueued: Instant::now(),
+                    trace_id,
                     reply,
                 });
                 batch.fill += take;

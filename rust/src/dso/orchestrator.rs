@@ -26,6 +26,7 @@ use std::time::Instant;
 use crate::config::{DsoConfig, DsoMode};
 use crate::error::{Error, Result};
 use crate::metrics::Recorder;
+use crate::obs::{self, SharedSpan, StageKind};
 use crate::runtime::Engine;
 
 use super::backend::{ComputeBackend, HistHandle, SegmentBind};
@@ -41,6 +42,9 @@ pub(crate) struct Segment {
     /// Index of this chunk in the originating request's split plan.
     pub chunk_index: usize,
     pub enqueued: Instant,
+    /// Originating request's trace id (0 = untraced). Carried so a
+    /// packed launch can name every rider on its shared launch span.
+    pub trace_id: u64,
     pub reply: Sender<Result<ChunkDone>>,
 }
 
@@ -60,6 +64,8 @@ pub(crate) struct ChunkDone {
     pub queue_us: u64,
     /// Wall time of the engine launch that served this chunk, µs.
     pub compute_us: u64,
+    /// Shared launch-span id this chunk rode (0 = untraced launch).
+    pub launch_id: u64,
 }
 
 /// Per-profile executor pool: a channel + N worker threads around one
@@ -88,6 +94,10 @@ pub struct ExecOutcome {
     pub compute_us: u64,
     /// Queueing delay before the first chunk started, µs.
     pub queue_us: u64,
+    /// Shared launch-span ids the request's chunks rode (deduped,
+    /// empty unless the request was traced) — the caller links its
+    /// compute span to these so cross-request causality is visible.
+    pub launch_ids: Vec<u64>,
 }
 
 /// The orchestrator over one (scenario, variant)'s profile engines.
@@ -169,6 +179,7 @@ impl Orchestrator {
                     buffers: Arc::clone(&buffers),
                     executed_rows: Arc::clone(&executed_rows_total),
                     padded_rows: Arc::clone(&padded_rows_total),
+                    recorder: recorder.clone(),
                 };
                 workers.push(
                     std::thread::Builder::new()
@@ -285,6 +296,19 @@ impl Orchestrator {
     /// Like `submit` but borrowing the history slice: uploads it to the
     /// device once and shares the buffer across all chunk executors.
     pub fn submit_slice(&self, hist: &[f32], cands: &[f32], m: usize) -> Result<ExecOutcome> {
+        self.submit_traced(hist, cands, m, 0)
+    }
+
+    /// Like [`Orchestrator::submit_slice`], stamping every dispatched
+    /// segment with the request's trace id so shared launches can name
+    /// it as a rider (`trace_id` 0 = untraced; the default path).
+    pub fn submit_traced(
+        &self,
+        hist: &[f32],
+        cands: &[f32],
+        m: usize,
+        trace_id: u64,
+    ) -> Result<ExecOutcome> {
         if m == 0 {
             return Ok(ExecOutcome {
                 scores: Vec::new(),
@@ -292,6 +316,7 @@ impl Orchestrator {
                 padding: 0,
                 compute_us: 0,
                 queue_us: 0,
+                launch_ids: Vec::new(),
             });
         }
         if cands.len() != m * self.d_model {
@@ -371,9 +396,9 @@ impl Orchestrator {
                 // tail remainder + coalescing on: pack with other
                 // requests' remainders instead of padding alone
                 (Some(co), true) => {
-                    co.enqueue(chunk, &hist_dev, rows, take, ci, reply_tx.clone())
+                    co.enqueue(chunk, &hist_dev, rows, take, ci, trace_id, reply_tx.clone())
                 }
-                _ => self.dispatch_direct(chunk, rows, take, ci, &hist_dev, &reply_tx),
+                _ => self.dispatch_direct(chunk, rows, take, ci, trace_id, &hist_dev, &reply_tx),
             };
             if let Err(e) = sent {
                 release(want - dispatched);
@@ -391,12 +416,16 @@ impl Orchestrator {
         let mut parts: Vec<Option<Vec<f32>>> = vec![None; plan.chunks.len()];
         let mut queue_us = u64::MAX;
         let mut compute_us = 0u64;
+        let mut launch_ids: Vec<u64> = Vec::new();
         for _ in 0..plan.chunks.len() {
             let done = reply_rx
                 .recv()
                 .map_err(|_| Error::Internal("executor dropped reply".into()))??;
             queue_us = queue_us.min(done.queue_us);
             compute_us = compute_us.max(done.compute_us);
+            if done.launch_id != 0 && !launch_ids.contains(&done.launch_id) {
+                launch_ids.push(done.launch_id);
+            }
             parts[done.chunk_index] = Some(done.scores);
         }
 
@@ -414,18 +443,21 @@ impl Orchestrator {
             padding: plan.padding,
             compute_us,
             queue_us,
+            launch_ids,
         })
     }
 
     /// Dispatch one chunk as its own single-segment job (full chunks
     /// always; remainders too when coalescing is off — padded locally by
     /// repeating the last real row).
+    #[allow(clippy::too_many_arguments)]
     fn dispatch_direct(
         &self,
         chunk: usize,
         rows: &[f32],
         take: usize,
         chunk_index: usize,
+        trace_id: u64,
         hist: &Arc<HistHandle>,
         reply: &Sender<Result<ChunkDone>>,
     ) -> Result<()> {
@@ -446,6 +478,7 @@ impl Orchestrator {
                     rows: take,
                     chunk_index,
                     enqueued: Instant::now(),
+                    trace_id,
                     reply: reply.clone(),
                 }],
             })
@@ -488,10 +521,13 @@ struct ExecutorCtx {
     buffers: Arc<BufferPool>,
     executed_rows: Arc<AtomicU64>,
     padded_rows: Arc<AtomicU64>,
+    /// For launch spans: the stack's recorder carries the tracer when
+    /// tracing is on (None / no tracer ⇒ zero per-launch overhead).
+    recorder: Option<Arc<Recorder>>,
 }
 
 fn executor_loop(ctx: ExecutorCtx) {
-    let ExecutorCtx { rx, engine, in_flight, buffers, executed_rows, padded_rows } = ctx;
+    let ExecutorCtx { rx, engine, in_flight, buffers, executed_rows, padded_rows, recorder } = ctx;
     let n_tasks = engine.n_tasks();
     let m = engine.m();
     loop {
@@ -522,11 +558,46 @@ fn executor_loop(ctx: ExecutorCtx) {
                 rows: s.rows + if i == last { pad } else { 0 },
             })
             .collect();
+        // shared launch span: one per packed launch when any rider is
+        // traced. Lists every rider's trace id — including riders head
+        // sampling dropped — so cross-request causality survives
+        // sampling; riders link back through `launch_id`.
+        let tracing = recorder
+            .as_ref()
+            .filter(|_| job.segments.iter().any(|s| s.trace_id != 0))
+            .and_then(|r| r.tracer().map(|t| (Arc::clone(t), r.tracer_pid())));
+        let launch_begin = tracing.as_ref().map_or(0, |(t, _)| t.now_us());
         // compute_us is measured around the launch alone — queue delay
         // (including coalesce wait) is reported separately per segment
         let t0 = Instant::now();
         let result = engine.run_segmented(&binds, &job.cands);
         let compute_us = t0.elapsed().as_micros() as u64;
+        let launch_id = match &tracing {
+            Some((t, pid)) => {
+                let id = t.new_span_id();
+                t.emit_shared(SharedSpan {
+                    span_id: id,
+                    kind: StageKind::Launch,
+                    label: format!(
+                        "launch m={m} [{}] ×{}",
+                        engine.label(),
+                        job.segments.len()
+                    ),
+                    begin_us: launch_begin,
+                    end_us: t.now_us(),
+                    pid: *pid,
+                    tid: obs::tid(),
+                    member_traces: job
+                        .segments
+                        .iter()
+                        .map(|s| s.trace_id)
+                        .filter(|&id| id != 0)
+                        .collect(),
+                });
+                id
+            }
+            None => 0,
+        };
         match result {
             Ok(scores) => {
                 let mut off = 0usize;
@@ -540,6 +611,7 @@ fn executor_loop(ctx: ExecutorCtx) {
                         scores: part,
                         queue_us,
                         compute_us,
+                        launch_id,
                     }));
                 }
             }

@@ -141,6 +141,36 @@
 //! emitting `BENCH_fke.json` (CI gates the fused-vs-naive ordering via
 //! `--smoke`).
 //!
+//! ## Observability
+//!
+//! The aggregate [`metrics::Recorder`] cannot answer "why was *this*
+//! request slow" once PRs 3–5 made the serve path asynchronous and
+//! cross-request-entangled — a request's compute may run inside another
+//! request's coalesced launch, and its feature fetch or whole response
+//! may ride a single-flight leader. The [`obs`] module adds
+//! request-scoped tracing kept off the hot path: when a
+//! [`obs::Tracer`] is attached (`flame serve|cluster --trace-out
+//! trace.json`, sampling via `--trace-sample-n` /
+//! `ServerConfig::trace_sample_n`), every admitted request is stamped
+//! with a [`obs::TraceContext`] at admission and per-stage spans
+//! (queue / feature / handoff / compute / cache) are recorded through
+//! the pipeline workers. Shared work emits *shared spans* with causal
+//! links: a coalesced DSO/FKE launch records one launch span naming
+//! every rider's trace id, and each rider's compute span links back to
+//! the launch span id — even riders head sampling dropped stay on the
+//! launch's member list. Completed traces land in bounded sharded
+//! rings (newest win) with tail retention of SLA-miss and top-k-slowest
+//! exemplars, each carrying an attribution verdict (the stage that
+//! consumed the largest budget share) mirrored into
+//! `MetricsSnapshot::sla_miss_*`. Export is twofold: Chrome
+//! trace-event / Perfetto JSON ([`obs::export`], validated by `flame
+//! trace-check`) with flow arrows for the cross-request links, and a
+//! Prometheus-style text exposition of the live snapshot
+//! ([`obs::prom`]) served by `--metrics-addr` and the TCP stats op.
+//! With tracing off (`trace_sample_n = 0`) the request path sees one
+//! `OnceLock::get` returning `None` — zero allocations, asserted by a
+//! regression test.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -172,6 +202,7 @@ pub mod fke;
 pub mod manifest;
 pub mod metrics;
 pub mod netsim;
+pub mod obs;
 pub mod pda;
 pub mod runtime;
 pub mod server;

@@ -21,6 +21,8 @@ use flame::fke::cpu::{CpuEngine, CpuEngineConfig, CpuModel};
 use flame::fke::Variant;
 use flame::manifest::Manifest;
 use flame::metrics::Recorder;
+use flame::obs::prom::MetricsServer;
+use flame::obs::Tracer;
 use flame::pda::numa::Topology;
 use flame::runtime::Runtime;
 use flame::server::pipeline::{ServingStack, StackBuilder};
@@ -39,6 +41,7 @@ fn main() -> Result<()> {
         Some("replay") => cmd_serve(&args), // replay is serve --trace
         Some("bind") => cmd_bind(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("trace-check") => cmd_trace_check(&args),
         Some(other) => bail!("unknown command '{other}' — try `flame help`"),
     }
 }
@@ -80,6 +83,9 @@ fn stack_config(args: &Args) -> Result<StackConfig> {
     }
     if let Some(d) = args.get_parse::<u64>("deadline-ms")? {
         cfg.server.deadline_ms = d;
+    }
+    if let Some(n) = args.get_parse::<u64>("trace-sample-n")? {
+        cfg.server.trace_sample_n = n;
     }
     if args.has("fetch-coalesce") {
         cfg.pda.fetch_coalesce = true;
@@ -224,8 +230,76 @@ fn build_stack(args: &Args) -> Result<(Arc<flame::server::ServingStack>, StackCo
     Ok((Arc::new(stack), cfg))
 }
 
+/// Tracer from the observability flags: `--trace-out` implies sampling
+/// every request unless `trace_sample_n` (flag or config) narrows it.
+fn trace_tracer(args: &Args, cfg_sample_n: u64) -> Option<Arc<Tracer>> {
+    let n = if cfg_sample_n == 0 && args.get("trace-out").is_some() { 1 } else { cfg_sample_n };
+    (n > 0).then(|| Arc::new(Tracer::new(n)))
+}
+
+/// Shut down the metrics endpoint, print a trace summary, and write the
+/// Chrome trace-event JSON for `--trace-out`.
+fn finish_observability(
+    args: &Args,
+    tracer: Option<Arc<Tracer>>,
+    metrics_srv: Option<MetricsServer>,
+) -> Result<()> {
+    if let Some(srv) = metrics_srv {
+        if let Some(hold) = args.get_parse::<f64>("metrics-hold-s")? {
+            eprintln!("[flame] holding metrics endpoint on {} for {hold:.0}s ...", srv.addr);
+            std::thread::sleep(Duration::from_secs_f64(hold.max(0.0)));
+        }
+        srv.shutdown();
+    }
+    let Some(tracer) = tracer else { return Ok(()) };
+    let dump = tracer.dump();
+    println!(
+        "traces         : {} sampled, {} sla-miss exemplars, {} slowest retained, {} shared spans, {} flow links",
+        dump.traces.len(),
+        dump.sla.len(),
+        dump.slowest.len(),
+        dump.shared.len(),
+        dump.flows.len()
+    );
+    if let Some(path) = args.get("trace-out") {
+        let json = flame::obs::export::chrome_trace_json(&dump);
+        std::fs::write(path, &json).with_context(|| format!("writing trace to {path}"))?;
+        println!("trace written  : {path} (open in ui.perfetto.dev or chrome://tracing)");
+    }
+    Ok(())
+}
+
+fn cmd_trace_check(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace-out")
+        .or_else(|| args.positional.first().map(|s| s.as_str()))
+        .context("trace-check needs a file: flame trace-check trace.json")?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let check = flame::obs::export::validate_chrome_trace(&text)?;
+    println!(
+        "{path}: ok — {} events ({} spans, {} flow starts / {} flow ends, {} metadata)",
+        check.events, check.spans, check.flow_starts, check.flow_ends, check.metadata
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let (stack, cfg) = build_stack(args)?;
+    let tracer = trace_tracer(args, cfg.server.trace_sample_n);
+    if let Some(t) = &tracer {
+        stack.metrics.set_tracer(Arc::clone(t), 0);
+    }
+    let metrics_srv = match args.get("metrics-addr") {
+        Some(addr) => {
+            let s = Arc::clone(&stack);
+            let srv = MetricsServer::start(addr, move || {
+                flame::obs::prom::render(&s.metrics.snapshot())
+            })?;
+            eprintln!("[flame] metrics endpoint: http://{}/", srv.addr);
+            Some(srv)
+        }
+        None => None,
+    };
     let n_requests = args.get_parse::<usize>("requests")?.unwrap_or(64);
     let duration = Duration::from_secs_f64(args.get_parse::<f64>("duration-s")?.unwrap_or(10.0));
 
@@ -347,6 +421,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cs.occupancy_p50_pct
         );
     }
+    if tracer.is_some() {
+        let (q, f, h, c, o) = stack.metrics.sla_miss_attribution();
+        if q + f + h + c + o > 0 {
+            println!("sla attribution: queue {q} feature {f} handoff {h} compute {c} other {o}");
+        }
+    }
+    finish_observability(args, tracer, metrics_srv)?;
     Ok(())
 }
 
@@ -465,6 +546,8 @@ fn build_stacks(args: &Args, n: usize) -> Result<Vec<Arc<ServingStack>>> {
 fn cmd_cluster(args: &Args) -> Result<()> {
     let n = args.get_parse::<usize>("replicas")?.unwrap_or(3).max(1);
     let ccfg = cluster_config(args)?;
+    let scfg = stack_config(args)?;
+    let tracer = trace_tracer(args, scfg.server.trace_sample_n);
     let n_requests = args.get_parse::<usize>("requests")?.unwrap_or(2_000);
     let duration = Duration::from_secs_f64(args.get_parse::<f64>("duration-s")?.unwrap_or(10.0));
     let concurrency = args.get_parse::<usize>("concurrency")?.unwrap_or(4 * n);
@@ -480,6 +563,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         let stacks = build_stacks(args, n)?;
         seq_len = stacks[0].model_cfg.seq_len;
         mix = WorkloadConfig::uniform_mix(stacks[0].orchestrator.profiles());
+        if let Some(t) = &tracer {
+            // pid 0 is the router; replicas render as processes 1..=n
+            for (i, s) in stacks.iter().enumerate() {
+                s.metrics.set_tracer(Arc::clone(t), (i + 1) as u32);
+            }
+        }
         stacks
             .into_iter()
             .map(|s| Arc::new(StackReplica::new(s)) as Arc<dyn ReplicaBackend>)
@@ -491,7 +580,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             .collect()
     };
 
-    let mut wl = stack_config(args)?.workload;
+    let mut wl = scfg.workload;
     wl.candidate_mix = mix;
     wl.n_users = args.get_parse::<u64>("users")?.unwrap_or(2_000);
     let mut g = Generator::new(&wl, seq_len);
@@ -499,6 +588,20 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let dup_rate = args.get_parse::<f64>("dup-rate")?.unwrap_or(0.0);
 
     let router = Arc::new(ClusterRouter::new(backends, ccfg)?);
+    if let Some(t) = &tracer {
+        router.metrics.set_tracer(Arc::clone(t), 0);
+    }
+    let metrics_srv = match args.get("metrics-addr") {
+        Some(addr) => {
+            let r = Arc::clone(&router);
+            let srv = MetricsServer::start(addr, move || {
+                flame::obs::prom::render(&r.metrics.snapshot())
+            })?;
+            eprintln!("[flame] metrics endpoint: http://{}/", srv.addr);
+            Some(srv)
+        }
+        None => None,
+    };
     eprintln!(
         "[flame] cluster: {n} replicas, policy {}, deadline {} ms, dup rate {:.0}% — driving {} requests ...",
         router.policy().name(),
@@ -519,6 +622,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         }
     };
     print_cluster_report(&router, &report, t0.elapsed().as_secs_f64());
+    if tracer.is_some() {
+        let (q, f, h, c, o) = router.metrics.sla_miss_attribution();
+        if q + f + h + c + o > 0 {
+            println!("sla attribution: queue {q} feature {f} handoff {h} compute {c} other {o}");
+        }
+    }
+    finish_observability(args, tracer, metrics_srv)?;
     Ok(())
 }
 

@@ -55,6 +55,19 @@ impl Histogram {
         (1u64 << order) + ((sub as u64) << (order - SUB_BITS as usize))
     }
 
+    /// Upper edge of a bucket (inclusive): the largest value that maps
+    /// into it. Exact buckets (< 64) have width 1, so lower == upper;
+    /// the final catch-all bucket is unbounded above.
+    fn bucket_upper(i: usize) -> u64 {
+        if i < SUB {
+            return i as u64;
+        }
+        if i + 1 >= BUCKETS {
+            return u64::MAX;
+        }
+        Self::bucket_value(i + 1) - 1
+    }
+
     /// Record one value (thread-safe, wait-free).
     #[inline]
     pub fn record(&self, v: u64) {
@@ -80,7 +93,11 @@ impl Histogram {
         self.max.load(Ordering::Relaxed)
     }
 
-    /// Quantile in [0, 1]; returns the bucket lower bound.
+    /// Quantile in [0, 1]; returns the bucket *upper* edge, capped at
+    /// the observed max. The upper edge can overstate by at most one
+    /// sub-bucket (<1.6%) but never understates — the conservative
+    /// direction for SLA accounting (a reported p99 under the deadline
+    /// guarantees the true p99 was too).
     pub fn quantile(&self, q: f64) -> u64 {
         let n = self.count();
         if n == 0 {
@@ -91,10 +108,28 @@ impl Histogram {
         for (i, c) in self.counts.iter().enumerate() {
             seen += c.load(Ordering::Relaxed);
             if seen >= target {
-                return Self::bucket_value(i);
+                // Cap at max so q=1.0 is exact; the inner `.max()` guards
+                // against a concurrent record whose bucket increment is
+                // visible before its max update.
+                return Self::bucket_upper(i).min(self.max().max(Self::bucket_value(i)));
             }
         }
         self.max()
+    }
+
+    /// One consistent load of every bucket counter; all derived
+    /// statistics (count / mean / quantiles) on the returned
+    /// [`HistSnapshot`] come from that single pass, so a reader racing
+    /// with `record()` can never mix state from different instants.
+    pub fn snapshot_counts(&self) -> HistSnapshot {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let count = counts.iter().sum();
+        HistSnapshot {
+            counts,
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
     }
 
     pub fn p50(&self) -> u64 {
@@ -129,6 +164,78 @@ impl Histogram {
     }
 }
 
+/// Point-in-time view of one histogram taken by
+/// [`Histogram::snapshot_counts`]. Unlike reading `mean()`/`p99()` off
+/// the live histogram (each call re-reads the atomics and can observe
+/// different instants), every statistic here derives from one bucket
+/// load.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of the counted values, clamped into the bucket-derived
+    /// bounds of the snapshot. The raw `sum` counter is loaded in a
+    /// separate instant from the bucket counts; under concurrent
+    /// recording it may include (or miss) values the bucket pass did
+    /// not, so the quotient is clamped into [Σcᵢ·lowerᵢ/n, Σcᵢ·upperᵢ/n]
+    /// — the range the true mean of the counted values must lie in.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let n = self.count as f64;
+        let (mut lo, mut hi) = (0.0f64, 0.0f64);
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            lo += c as f64 * Histogram::bucket_value(i) as f64;
+            hi += c as f64
+                * Histogram::bucket_upper(i).min(self.max.max(Histogram::bucket_value(i))) as f64;
+        }
+        (self.sum as f64 / n).clamp(lo / n, hi / n)
+    }
+
+    /// Quantile over the snapshotted counts (bucket upper edge, capped
+    /// at the snapshotted max — same convention as
+    /// [`Histogram::quantile`]).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Histogram::bucket_upper(i).min(self.max.max(Histogram::bucket_value(i)));
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,10 +265,29 @@ mod tests {
         for v in 1..=100_000u64 {
             h.record(v);
         }
-        for &(q, expect) in &[(0.5, 50_000.0), (0.9, 90_000.0), (0.99, 99_000.0)] {
+        let cases = [(0.5, 50_000.0), (0.9, 90_000.0), (0.99, 99_000.0), (1.0, 100_000.0)];
+        for &(q, expect) in &cases {
             let got = h.quantile(q) as f64;
             let rel = (got - expect).abs() / expect;
             assert!(rel < 0.02, "q={q} got={got} expect={expect} rel={rel}");
+            // the upper-edge convention never understates the true quantile
+            assert!(got >= expect, "q={q} got={got} understates true quantile {expect}");
+        }
+    }
+
+    #[test]
+    fn quantile_never_understates_constant_series() {
+        // a single repeated value: any quantile must report >= the value
+        // (the old lower-bound convention reported the bucket floor, up
+        // to one sub-bucket below it)
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(5_000);
+        }
+        for q in [0.5, 0.9, 0.99, 1.0] {
+            let got = h.quantile(q);
+            assert!(got >= 5_000, "q={q} got={got}");
+            assert!(got <= 5_055, "q={q} got={got} beyond bucket upper edge");
         }
     }
 
@@ -173,7 +299,8 @@ mod tests {
         }
         h.record(1_000_000);
         assert!(h.p99() >= 900_000 || h.quantile(1.0) >= 900_000);
-        assert_eq!(h.p50(), Histogram::bucket_value(Histogram::index(1_000)));
+        // p50 lands in 1_000's bucket: [1000, 1008) at this order
+        assert!(h.p50() >= 1_000 && h.p50() < 1_008, "p50={}", h.p50());
     }
 
     #[test]
@@ -226,6 +353,60 @@ mod tests {
         h.reset();
         assert_eq!(h.count(), 0);
         assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn snapshot_stats_match_series() {
+        let h = Histogram::new();
+        h.record(10);
+        h.record(20);
+        h.record(30);
+        let s = h.snapshot_counts();
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.max(), 30);
+        assert!((s.mean() - 20.0).abs() < 1e-9);
+        assert_eq!(s.p50(), 20); // exact buckets below 64
+        assert_eq!(s.quantile(1.0), 30);
+    }
+
+    #[test]
+    fn snapshot_mean_stays_in_bucket_bounds_under_concurrent_records() {
+        // Writers hammer two fixed values whose buckets are
+        // [1024, 1040) and [2048, 2080); any honest mean of any mix of
+        // them lies in [1024, 2079]. A snapshot whose count and sum
+        // were read at different instants could report a mean outside
+        // that range — the clamp in HistSnapshot::mean forbids it.
+        let h = std::sync::Arc::new(Histogram::new());
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writers: Vec<_> = (0..4)
+            .map(|t| {
+                let h = std::sync::Arc::clone(&h);
+                let stop = std::sync::Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut i = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        h.record(if (i + t) % 2 == 0 { 1_024 } else { 2_048 });
+                        i += 1;
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..2_000 {
+            let s = h.snapshot_counts();
+            if s.count() == 0 {
+                continue;
+            }
+            let m = s.mean();
+            assert!(
+                (1_024.0..=2_079.0).contains(&m),
+                "snapshot mean {m} escaped recorded value bounds (count={})",
+                s.count()
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
     }
 
     #[test]

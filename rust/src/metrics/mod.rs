@@ -6,5 +6,5 @@
 pub mod histogram;
 pub mod recorder;
 
-pub use histogram::Histogram;
+pub use histogram::{HistSnapshot, Histogram};
 pub use recorder::{MetricsSnapshot, Recorder};

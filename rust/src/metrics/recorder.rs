@@ -4,7 +4,10 @@
 //! columns come straight out of `snapshot()`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
+
+use crate::obs::{StageKind, TraceContext, Tracer};
 
 use super::Histogram;
 
@@ -54,6 +57,17 @@ pub struct Recorder {
     fke_tiles_visited: AtomicU64,
     /// Native CPU FKE: attention tiles skipped as fully masked.
     fke_tiles_skipped: AtomicU64,
+    /// SLA-miss attribution: misses whose deadline budget was dominated
+    /// by each stage (mirrored from the tracer's exemplar verdicts).
+    sla_miss_queue: AtomicU64,
+    sla_miss_feature: AtomicU64,
+    sla_miss_handoff: AtomicU64,
+    sla_miss_compute: AtomicU64,
+    sla_miss_other: AtomicU64,
+    /// Optional request-scoped tracer (set once at startup; absent on
+    /// the default path so tracing costs nothing when off). The u32 is
+    /// the pid this recorder's traces carry (replica id; 0 standalone).
+    tracer: OnceLock<(Arc<Tracer>, u32)>,
     started: Instant,
 }
 
@@ -87,8 +101,80 @@ impl Recorder {
             fke_flops: AtomicU64::new(0),
             fke_tiles_visited: AtomicU64::new(0),
             fke_tiles_skipped: AtomicU64::new(0),
+            sla_miss_queue: AtomicU64::new(0),
+            sla_miss_feature: AtomicU64::new(0),
+            sla_miss_handoff: AtomicU64::new(0),
+            sla_miss_compute: AtomicU64::new(0),
+            sla_miss_other: AtomicU64::new(0),
+            tracer: OnceLock::new(),
             started: Instant::now(),
         }
+    }
+
+    // ---- request-scoped tracing (off unless a tracer is attached) ----
+
+    /// Attach a tracer (first call wins). `pid` labels every trace this
+    /// recorder finishes — the replica id in a cluster, 0 standalone.
+    pub fn set_tracer(&self, tracer: Arc<Tracer>, pid: u32) {
+        let _ = self.tracer.set((tracer, pid));
+    }
+
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.get().map(|(t, _)| t)
+    }
+
+    /// Chrome-trace pid this recorder's traces carry (0 when no tracer
+    /// is attached or for a standalone stack).
+    pub fn tracer_pid(&self) -> u32 {
+        self.tracer.get().map(|(_, p)| *p).unwrap_or(0)
+    }
+
+    /// Begin a trace for one admitted request. Returns `None` when
+    /// tracing is off (no tracer, or `trace_sample_n = 0`) — the hot
+    /// path then carries no context and allocates nothing.
+    #[inline]
+    pub fn trace_begin(&self, request_id: u64, budget_us: u64) -> Option<TraceContext> {
+        let (t, _) = self.tracer.get()?;
+        t.begin(request_id, budget_us)
+    }
+
+    /// Finish a trace. On an SLA miss the tracer's attribution verdict
+    /// (the stage that consumed the largest share of the deadline
+    /// budget) is mirrored into the per-stage miss counters.
+    pub fn trace_finish(&self, ctx: TraceContext, sla_missed: bool) {
+        if let Some((t, pid)) = self.tracer.get() {
+            let verdict = t.finish(ctx, *pid, sla_missed);
+            if sla_missed {
+                self.record_sla_attribution(verdict.unwrap_or(StageKind::Other));
+            }
+        }
+    }
+
+    /// One SLA miss attributed to `stage` (the dominant share of the
+    /// deadline budget). Fetch folds into the feature stage and Launch
+    /// into compute: that is where their wait is spent from the
+    /// request's point of view.
+    pub fn record_sla_attribution(&self, stage: StageKind) {
+        let c = match stage {
+            StageKind::Queue => &self.sla_miss_queue,
+            StageKind::Feature | StageKind::Fetch => &self.sla_miss_feature,
+            StageKind::Handoff => &self.sla_miss_handoff,
+            StageKind::Compute | StageKind::Launch => &self.sla_miss_compute,
+            StageKind::Cache | StageKind::Other => &self.sla_miss_other,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// SLA-miss attribution counters as
+    /// (queue, feature, handoff, compute, other).
+    pub fn sla_miss_attribution(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.sla_miss_queue.load(Ordering::Relaxed),
+            self.sla_miss_feature.load(Ordering::Relaxed),
+            self.sla_miss_handoff.load(Ordering::Relaxed),
+            self.sla_miss_compute.load(Ordering::Relaxed),
+            self.sla_miss_other.load(Ordering::Relaxed),
+        )
     }
 
     /// Record a completed request: end-to-end micros + its candidate count
@@ -257,26 +343,46 @@ impl Recorder {
         self.fke_flops.store(0, Ordering::Relaxed);
         self.fke_tiles_visited.store(0, Ordering::Relaxed);
         self.fke_tiles_skipped.store(0, Ordering::Relaxed);
+        self.sla_miss_queue.store(0, Ordering::Relaxed);
+        self.sla_miss_feature.store(0, Ordering::Relaxed);
+        self.sla_miss_handoff.store(0, Ordering::Relaxed);
+        self.sla_miss_compute.store(0, Ordering::Relaxed);
+        self.sla_miss_other.store(0, Ordering::Relaxed);
         self.started = Instant::now();
     }
 
-    /// Snapshot over an explicit wall-clock window (seconds).
+    /// Snapshot over an explicit wall-clock window (seconds). Each
+    /// histogram is read through one [`Histogram::snapshot_counts`]
+    /// pass, so the mean/p50/p99 triple of a series is internally
+    /// consistent even while workers keep recording.
     pub fn snapshot_over(&self, elapsed_s: f64) -> MetricsSnapshot {
+        let overall = self.overall.snapshot_counts();
+        let compute = self.compute.snapshot_counts();
+        let feature = self.feature.snapshot_counts();
+        let queueing = self.queueing.snapshot_counts();
+        let handoff = self.handoff.snapshot_counts();
+        let occupancy = self.coalesce_occupancy.snapshot_counts();
+        let (sla_q, sla_f, sla_h, sla_c, sla_o) = self.sla_miss_attribution();
         MetricsSnapshot {
             requests: self.requests(),
             pairs: self.pairs(),
             elapsed_s,
             throughput_pairs_per_s: self.pairs() as f64 / elapsed_s.max(1e-9),
-            overall_mean_ms: self.overall.mean() / 1e3,
-            overall_p50_ms: self.overall.p50() as f64 / 1e3,
-            overall_p99_ms: self.overall.p99() as f64 / 1e3,
-            compute_mean_ms: self.compute.mean() / 1e3,
-            compute_p50_ms: self.compute.p50() as f64 / 1e3,
-            compute_p99_ms: self.compute.p99() as f64 / 1e3,
-            feature_mean_ms: self.feature.mean() / 1e3,
-            queueing_mean_ms: self.queueing.mean() / 1e3,
-            handoff_mean_ms: self.handoff.mean() / 1e3,
-            handoff_p99_ms: self.handoff.p99() as f64 / 1e3,
+            overall_mean_ms: overall.mean() / 1e3,
+            overall_p50_ms: overall.p50() as f64 / 1e3,
+            overall_p99_ms: overall.p99() as f64 / 1e3,
+            compute_mean_ms: compute.mean() / 1e3,
+            compute_p50_ms: compute.p50() as f64 / 1e3,
+            compute_p99_ms: compute.p99() as f64 / 1e3,
+            feature_mean_ms: feature.mean() / 1e3,
+            feature_p50_ms: feature.p50() as f64 / 1e3,
+            feature_p99_ms: feature.p99() as f64 / 1e3,
+            queueing_mean_ms: queueing.mean() / 1e3,
+            queueing_p50_ms: queueing.p50() as f64 / 1e3,
+            queueing_p99_ms: queueing.p99() as f64 / 1e3,
+            handoff_mean_ms: handoff.mean() / 1e3,
+            handoff_p50_ms: handoff.p50() as f64 / 1e3,
+            handoff_p99_ms: handoff.p99() as f64 / 1e3,
             arena_growths: self.arena_growths(),
             fetch_coalesced: self.fetch_coalesced(),
             fetch_batches: self.fetch_batches(),
@@ -287,11 +393,16 @@ impl Recorder {
             result_coalesced: self.result_coalesced(),
             coalesced_rows: self.coalesced_rows(),
             coalesce_batches: self.coalesce_batches(),
-            coalesce_occupancy_mean_pct: self.coalesce_occupancy.mean(),
-            coalesce_occupancy_p50_pct: self.coalesce_occupancy.p50(),
+            coalesce_occupancy_mean_pct: occupancy.mean(),
+            coalesce_occupancy_p50_pct: occupancy.p50(),
             fke_flops: self.fke_flops(),
             fke_tiles_visited: self.fke_tiles_visited(),
             fke_tiles_skipped: self.fke_tiles_skipped(),
+            sla_miss_queue: sla_q,
+            sla_miss_feature: sla_f,
+            sla_miss_handoff: sla_h,
+            sla_miss_compute: sla_c,
+            sla_miss_other: sla_o,
         }
     }
 
@@ -315,10 +426,15 @@ pub struct MetricsSnapshot {
     pub compute_p50_ms: f64,
     pub compute_p99_ms: f64,
     pub feature_mean_ms: f64,
+    pub feature_p50_ms: f64,
+    pub feature_p99_ms: f64,
     pub queueing_mean_ms: f64,
+    pub queueing_p50_ms: f64,
+    pub queueing_p99_ms: f64,
     /// Decoupled pipeline: stage-wait between feature handoff and
     /// compute pickup (0 in synchronous mode).
     pub handoff_mean_ms: f64,
+    pub handoff_p50_ms: f64,
     pub handoff_p99_ms: f64,
     /// Staging-arena growths (steady state must report 0).
     pub arena_growths: u64,
@@ -340,6 +456,13 @@ pub struct MetricsSnapshot {
     pub fke_flops: u64,
     pub fke_tiles_visited: u64,
     pub fke_tiles_skipped: u64,
+    /// SLA-miss attribution: misses whose deadline budget was dominated
+    /// by each stage (0 unless tracing is on and deadlines were missed).
+    pub sla_miss_queue: u64,
+    pub sla_miss_feature: u64,
+    pub sla_miss_handoff: u64,
+    pub sla_miss_compute: u64,
+    pub sla_miss_other: u64,
 }
 
 impl MetricsSnapshot {
@@ -403,6 +526,8 @@ mod tests {
         r.record_fetch_coalesced();
         r.record_fetch_batch();
         r.record_fke_launch(1_000_000, 10, 5);
+        r.record_sla_attribution(StageKind::Compute);
+        r.record_sla_attribution(StageKind::Queue);
         r.reset();
         let s = r.snapshot_over(1.0);
         assert_eq!(s.requests, 0);
@@ -415,6 +540,37 @@ mod tests {
         assert_eq!(s.handoff_mean_ms, 0.0);
         assert_eq!((s.arena_growths, s.fetch_coalesced, s.fetch_batches), (0, 0, 0));
         assert_eq!((s.fke_flops, s.fke_tiles_visited, s.fke_tiles_skipped), (0, 0, 0));
+        assert_eq!(r.sla_miss_attribution(), (0, 0, 0, 0, 0));
+    }
+
+    #[test]
+    fn sla_attribution_counters_surface_in_snapshot() {
+        let r = Recorder::new();
+        r.record_sla_attribution(StageKind::Compute);
+        r.record_sla_attribution(StageKind::Launch); // folds into compute
+        r.record_sla_attribution(StageKind::Feature);
+        r.record_sla_attribution(StageKind::Fetch); // folds into feature
+        r.record_sla_attribution(StageKind::Queue);
+        r.record_sla_attribution(StageKind::Handoff);
+        r.record_sla_attribution(StageKind::Other);
+        let s = r.snapshot_over(1.0);
+        assert_eq!(s.sla_miss_compute, 2);
+        assert_eq!(s.sla_miss_feature, 2);
+        assert_eq!(s.sla_miss_queue, 1);
+        assert_eq!(s.sla_miss_handoff, 1);
+        assert_eq!(s.sla_miss_other, 1);
+    }
+
+    #[test]
+    fn per_stage_quantiles_surface_in_snapshot() {
+        let r = Recorder::new();
+        r.record_feature(2_000);
+        r.record_queueing(1_000);
+        r.record_handoff(3_000);
+        let s = r.snapshot_over(1.0);
+        assert!(s.feature_p50_ms >= 2.0 && s.feature_p99_ms >= 2.0, "{s:?}");
+        assert!(s.queueing_p50_ms >= 1.0, "{s:?}");
+        assert!(s.handoff_p50_ms >= 3.0, "{s:?}");
     }
 
     #[test]

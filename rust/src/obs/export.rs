@@ -1,0 +1,347 @@
+//! Chrome trace-event export (Perfetto-compatible) + a minimal schema
+//! checker for CI.
+//!
+//! Layout: pid = replica id, tid = worker thread, "X" complete events
+//! for stage and shared spans, "s"/"f" flow pairs for the causal links
+//! (rider → coalesced launch, waiter → single-flight leader), "M"
+//! metadata events naming processes and threads. Load the file at
+//! <https://ui.perfetto.dev> and follow the flow arrows.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+use super::{SharedSpan, StageKind, Trace, TraceDump};
+
+fn x_event(name: &str, cat: &str, pid: u32, tid: u64, ts: u64, dur: u64, args: Json) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("cat", Json::str(cat)),
+        ("ph", Json::str("X")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", Json::num(ts as f64)),
+        ("dur", Json::num(dur.max(1) as f64)),
+        ("args", args),
+    ])
+}
+
+fn flow_pair(
+    events: &mut Vec<Json>,
+    arrow_id: u64,
+    src: (&u32, u64, u64), // (pid, tid, ts)
+    dst: (u32, u64, u64),
+) {
+    events.push(Json::obj(vec![
+        ("name", Json::str("coalesce")),
+        ("cat", Json::str("flow")),
+        ("ph", Json::str("s")),
+        ("id", Json::num(arrow_id as f64)),
+        ("pid", Json::num(*src.0 as f64)),
+        ("tid", Json::num(src.1 as f64)),
+        ("ts", Json::num(src.2 as f64)),
+    ]));
+    events.push(Json::obj(vec![
+        ("name", Json::str("coalesce")),
+        ("cat", Json::str("flow")),
+        ("ph", Json::str("f")),
+        ("bp", Json::str("e")),
+        ("id", Json::num(arrow_id as f64)),
+        ("pid", Json::num(dst.0 as f64)),
+        ("tid", Json::num(dst.1 as f64)),
+        ("ts", Json::num(dst.2 as f64)),
+    ]));
+}
+
+/// Render a [`TraceDump`] as Chrome trace-event JSON.
+pub fn chrome_trace_json(dump: &TraceDump) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    let mut arrow = 0u64;
+
+    // dedupe traces retained in more than one store (ring + sla + slow)
+    let mut traces: BTreeMap<u64, &Trace> = BTreeMap::new();
+    for t in dump.traces.iter().chain(&dump.sla).chain(&dump.slowest) {
+        traces.entry(t.trace_id).or_insert(t);
+    }
+    let shared: BTreeMap<u64, &SharedSpan> =
+        dump.shared.iter().map(|s| (s.span_id, s)).collect();
+
+    let mut seen_threads: BTreeSet<(u32, u64)> = BTreeSet::new();
+
+    // shared (multi-request) spans
+    for s in dump.shared.iter() {
+        seen_threads.insert((s.pid, s.tid));
+        let members: Vec<Json> =
+            s.member_traces.iter().map(|&m| Json::num(m as f64)).collect();
+        events.push(x_event(
+            &s.label,
+            s.kind.label(),
+            s.pid,
+            s.tid,
+            s.begin_us,
+            s.end_us.saturating_sub(s.begin_us),
+            Json::obj(vec![
+                ("span_id", Json::num(s.span_id as f64)),
+                ("riders", Json::num(s.member_traces.len() as f64)),
+                ("member_traces", Json::Arr(members)),
+            ]),
+        ));
+    }
+
+    // per-request traces
+    for t in traces.values() {
+        seen_threads.insert((t.pid, t.tid));
+        let verdict = t.verdict.map(|v| v.label()).unwrap_or("-");
+        events.push(x_event(
+            &format!("request {}", t.request_id),
+            "request",
+            t.pid,
+            t.tid,
+            t.begin_us,
+            t.total_us,
+            Json::obj(vec![
+                ("trace_id", Json::num(t.trace_id as f64)),
+                ("budget_us", Json::num(t.budget_us as f64)),
+                ("sla_missed", Json::Bool(t.sla_missed)),
+                ("verdict", Json::str(verdict)),
+            ]),
+        ));
+        for sp in &t.spans {
+            seen_threads.insert((t.pid, sp.tid));
+            events.push(x_event(
+                sp.kind.label(),
+                "stage",
+                t.pid,
+                sp.tid,
+                sp.begin_us,
+                sp.dur_us(),
+                Json::obj(vec![
+                    ("trace_id", Json::num(t.trace_id as f64)),
+                    ("request_id", Json::num(t.request_id as f64)),
+                ]),
+            ));
+            for &link in &sp.links {
+                if let Some(src) = shared.get(&link) {
+                    arrow += 1;
+                    flow_pair(
+                        &mut events,
+                        arrow,
+                        (&src.pid, src.tid, src.begin_us),
+                        (t.pid, sp.tid, sp.begin_us),
+                    );
+                }
+            }
+        }
+    }
+
+    // out-of-band flows: bind to the rider's feature span if it has
+    // one (that is where a shared fetch was waited on), else its first
+    for &(trace_id, span_id) in &dump.flows {
+        let (Some(t), Some(src)) = (traces.get(&trace_id), shared.get(&span_id)) else {
+            continue;
+        };
+        let bind = t
+            .spans
+            .iter()
+            .find(|s| s.kind == StageKind::Feature)
+            .or_else(|| t.spans.first());
+        if let Some(sp) = bind {
+            arrow += 1;
+            flow_pair(
+                &mut events,
+                arrow,
+                (&src.pid, src.tid, src.begin_us),
+                (t.pid, sp.tid, sp.begin_us),
+            );
+        }
+    }
+
+    // metadata: process / thread names
+    let names: BTreeMap<u64, String> = super::thread_names().into_iter().collect();
+    let pids: BTreeSet<u32> = seen_threads.iter().map(|&(p, _)| p).collect();
+    for pid in pids {
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(format!("flame replica {pid}")))])),
+        ]));
+    }
+    for (pid, tid) in seen_threads {
+        let name = names.get(&tid).cloned().unwrap_or_else(|| format!("thread-{tid}"));
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+    .to_string()
+}
+
+/// What [`validate_chrome_trace`] counted — CI asserts on these.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCheck {
+    pub events: usize,
+    pub spans: usize,
+    pub flow_starts: usize,
+    pub flow_ends: usize,
+    pub metadata: usize,
+}
+
+/// Minimal schema check over an emitted trace file: a `traceEvents`
+/// array whose "X" events carry pid/tid/ts/dur/name, whose flow events
+/// carry an id, and whose every flow finish has a matching start.
+pub fn validate_chrome_trace(text: &str) -> Result<TraceCheck> {
+    let doc = json::parse(text)?;
+    let events = doc.get("traceEvents")?.as_arr()?;
+    let mut check = TraceCheck::default();
+    let mut starts: BTreeSet<u64> = BTreeSet::new();
+    let mut ends: BTreeSet<u64> = BTreeSet::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|p| p.as_str().map(str::to_string))
+            .map_err(|_| Error::Json(format!("event {i}: missing ph")))?;
+        check.events += 1;
+        match ph.as_str() {
+            "X" => {
+                for k in ["pid", "tid", "ts", "dur"] {
+                    e.get(k)?
+                        .as_f64()
+                        .map_err(|_| Error::Json(format!("event {i}: bad {k}")))?;
+                }
+                e.get("name")?.as_str()?;
+                check.spans += 1;
+            }
+            "s" | "f" => {
+                let id = e.get("id")?.as_u64()?;
+                for k in ["pid", "tid", "ts"] {
+                    e.get(k)?.as_f64()?;
+                }
+                if ph == "s" {
+                    starts.insert(id);
+                    check.flow_starts += 1;
+                } else {
+                    ends.insert(id);
+                    check.flow_ends += 1;
+                }
+            }
+            "M" => {
+                e.get("name")?.as_str()?;
+                check.metadata += 1;
+            }
+            other => {
+                return Err(Error::Json(format!("event {i}: unexpected ph {other:?}")));
+            }
+        }
+    }
+    if check.spans == 0 {
+        return Err(Error::Json("trace has no span events".into()));
+    }
+    for id in &ends {
+        if !starts.contains(id) {
+            return Err(Error::Json(format!("flow finish {id} has no start")));
+        }
+    }
+    Ok(check)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Tracer;
+    use super::*;
+
+    fn sample_dump() -> TraceDump {
+        let t = Tracer::with_caps(1, 16, 16, 4, 16);
+        let launch = t.new_span_id();
+        t.emit_shared(SharedSpan {
+            span_id: launch,
+            kind: StageKind::Launch,
+            label: "launch m=256".into(),
+            begin_us: 50,
+            end_us: 150,
+            pid: 0,
+            tid: super::super::tid(),
+            member_traces: vec![1, 2],
+        });
+        for req in [7u64, 8] {
+            let mut ctx = t.begin(req, 10_000).unwrap();
+            ctx.span(StageKind::Feature, 0, 40);
+            ctx.span_linked(StageKind::Compute, 40, 160, &[launch]);
+            t.finish(ctx, 0, req == 8);
+        }
+        t.dump()
+    }
+
+    #[test]
+    fn export_roundtrips_through_checker() {
+        let text = chrome_trace_json(&sample_dump());
+        let check = validate_chrome_trace(&text).unwrap();
+        assert!(check.spans >= 5, "{check:?}"); // 1 launch + 2x(request + 2 stages)
+        assert_eq!(check.flow_starts, check.flow_ends);
+        assert!(check.flow_starts >= 2, "one arrow per rider: {check:?}");
+        assert!(check.metadata >= 2, "{check:?}");
+    }
+
+    #[test]
+    fn export_contains_launch_members_and_verdicts() {
+        let text = chrome_trace_json(&sample_dump());
+        assert!(text.contains("member_traces"), "{text}");
+        assert!(text.contains("launch m=256"), "{text}");
+        assert!(text.contains("sla_missed"), "{text}");
+    }
+
+    #[test]
+    fn out_of_band_flow_binds_to_feature_span() {
+        let mut dump = sample_dump();
+        let rider = dump.traces[0].trace_id;
+        let span = dump.shared[0].span_id;
+        let before = validate_chrome_trace(&chrome_trace_json(&dump)).unwrap();
+        dump.flows.push((rider, span));
+        let after = validate_chrome_trace(&chrome_trace_json(&dump)).unwrap();
+        assert_eq!(after.flow_starts, before.flow_starts + 1);
+    }
+
+    #[test]
+    fn checker_rejects_malformed() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{}").is_err());
+        assert!(validate_chrome_trace(r#"{"traceEvents":[]}"#).is_err());
+        // X missing dur
+        assert!(validate_chrome_trace(
+            r#"{"traceEvents":[{"ph":"X","pid":0,"tid":1,"ts":0,"name":"x"}]}"#
+        )
+        .is_err());
+        // flow finish without start
+        assert!(validate_chrome_trace(
+            r#"{"traceEvents":[
+                {"ph":"X","pid":0,"tid":1,"ts":0,"dur":1,"name":"x"},
+                {"ph":"f","bp":"e","id":9,"pid":0,"tid":1,"ts":0}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn checker_accepts_minimal_valid() {
+        let ok = validate_chrome_trace(
+            r#"{"traceEvents":[
+                {"ph":"X","pid":0,"tid":1,"ts":0,"dur":5,"name":"compute"},
+                {"ph":"s","id":3,"pid":0,"tid":1,"ts":0},
+                {"ph":"f","bp":"e","id":3,"pid":0,"tid":2,"ts":1},
+                {"ph":"M","name":"process_name","pid":0,"args":{"name":"p"}}]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            ok,
+            TraceCheck { events: 4, spans: 1, flow_starts: 1, flow_ends: 1, metadata: 1 }
+        );
+    }
+}

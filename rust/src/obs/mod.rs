@@ -1,0 +1,617 @@
+//! Request-scoped tracing — observability kept off the hot path.
+//!
+//! The aggregate [`crate::metrics::Recorder`] answers "how is the fleet
+//! doing"; this module answers "why was *this* request slow", which
+//! PRs 3–5 made genuinely hard: a request's compute may run inside
+//! another request's coalesced FKE launch, and its feature fetch or
+//! even its whole response may ride a single-flight leader it never
+//! met. The tracer therefore records *causal links*: a shared launch
+//! emits one span whose member list names every rider's trace id, and
+//! each rider's own span links back to the launch span id, so the
+//! Chrome-trace export can draw flow arrows across requests.
+//!
+//! Cost model (mirrors the lock-free `Histogram` philosophy):
+//! - tracing off (`trace_sample_n = 0` or no tracer attached): the
+//!   request path sees one `OnceLock::get` returning `None` — no
+//!   allocation, no lock, no atomic write;
+//! - tracing on, request not head-sampled: the request carries a
+//!   [`TraceContext`] with an *empty* span vec (`Vec::new` does not
+//!   allocate); only its trace id is live so shared spans can still
+//!   list it as a rider;
+//! - head-sampled: spans are pushed into the context (thread-local,
+//!   unsynchronized) and the completed trace lands in a bounded,
+//!   sharded ring at finish — the only synchronized step.
+//!
+//! Tail retention keeps what head sampling would lose: every SLA-miss
+//! exemplar (bounded, newest-first) and the top-k slowest traces
+//! survive ring wraparound, each carrying an attribution verdict — the
+//! stage that consumed the largest share of the deadline budget —
+//! which is also mirrored into the `Recorder`'s per-stage SLA-miss
+//! counters.
+
+pub mod export;
+pub mod prom;
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Pipeline stage a span belongs to. `Launch`/`Fetch`/`Cache` are the
+/// shared (multi-request) span kinds; the rest are per-request stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageKind {
+    /// Intake-queue wait before a feature worker picks the request up.
+    Queue,
+    /// Feature assembly (PDA fetch + staging).
+    Feature,
+    /// Decoupled-pipeline handoff wait between feature and compute.
+    Handoff,
+    /// Model compute (DSO submit through score return).
+    Compute,
+    /// A shared engine launch carrying one or more requests' rows.
+    Launch,
+    /// A shared feature multiget executed by the fetch coalescer.
+    Fetch,
+    /// Result-cache interaction (hit / single-flight wait).
+    Cache,
+    Other,
+}
+
+impl StageKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            StageKind::Queue => "queue",
+            StageKind::Feature => "feature",
+            StageKind::Handoff => "handoff",
+            StageKind::Compute => "compute",
+            StageKind::Launch => "launch",
+            StageKind::Fetch => "fetch",
+            StageKind::Cache => "cache",
+            StageKind::Other => "other",
+        }
+    }
+}
+
+/// One timed stage inside a request's trace.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub kind: StageKind,
+    pub begin_us: u64,
+    pub end_us: u64,
+    /// Worker thread that ran the stage (stable small id, see [`tid`]).
+    pub tid: u64,
+    /// Span ids of shared spans (launch / fetch / flight) this stage
+    /// waited on — the cross-request causality edges.
+    pub links: Vec<u64>,
+}
+
+impl Span {
+    pub fn dur_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.begin_us)
+    }
+}
+
+/// A completed request trace.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub trace_id: u64,
+    pub request_id: u64,
+    /// Replica id (0 for a standalone stack); Chrome-trace pid.
+    pub pid: u32,
+    /// Thread the trace finished on.
+    pub tid: u64,
+    pub begin_us: u64,
+    pub total_us: u64,
+    pub budget_us: u64,
+    pub sla_missed: bool,
+    /// Stage that consumed the largest share of the budget (None when
+    /// the trace carried no spans — e.g. a sampled-out SLA miss).
+    pub verdict: Option<StageKind>,
+    pub spans: Vec<Span>,
+}
+
+/// A span emitted once on behalf of many requests: a coalesced engine
+/// launch, a shared feature multiget, or a single-flight result-cache
+/// computation. `member_traces` lists every rider — including riders
+/// that head sampling dropped, so causality survives sampling.
+#[derive(Clone, Debug)]
+pub struct SharedSpan {
+    pub span_id: u64,
+    pub kind: StageKind,
+    pub label: String,
+    pub begin_us: u64,
+    pub end_us: u64,
+    pub pid: u32,
+    pub tid: u64,
+    pub member_traces: Vec<u64>,
+}
+
+/// Per-request tracing state, created at admission and finished at
+/// response. Unsampled contexts carry only the (Copy) ids — their span
+/// vec is empty and never grows, so they are allocation-free.
+#[derive(Debug)]
+pub struct TraceContext {
+    trace_id: u64,
+    request_id: u64,
+    budget_us: u64,
+    epoch: Instant,
+    t0_us: u64,
+    sampled: bool,
+    spans: Vec<Span>,
+}
+
+impl TraceContext {
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
+    pub fn request_id(&self) -> u64 {
+        self.request_id
+    }
+
+    pub fn sampled(&self) -> bool {
+        self.sampled
+    }
+
+    pub fn budget_us(&self) -> u64 {
+        self.budget_us
+    }
+
+    /// Microseconds since the owning tracer's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Microseconds since this trace began (admission) — what the SLA
+    /// check compares against `budget_us`.
+    pub fn elapsed_us(&self) -> u64 {
+        self.now_us().saturating_sub(self.t0_us)
+    }
+
+    /// Record a stage span (no-op unless head-sampled).
+    pub fn span(&mut self, kind: StageKind, begin_us: u64, end_us: u64) {
+        self.span_linked(kind, begin_us, end_us, &[]);
+    }
+
+    /// Record a stage span that waited on shared spans `links` (id 0 =
+    /// untraced, filtered out).
+    pub fn span_linked(&mut self, kind: StageKind, begin_us: u64, end_us: u64, links: &[u64]) {
+        if !self.sampled {
+            return;
+        }
+        let links: Vec<u64> = links.iter().copied().filter(|&l| l != 0).collect();
+        self.spans.push(Span { kind, begin_us, end_us, tid: tid(), links });
+    }
+
+    /// Record a stage span ending now with a known duration.
+    pub fn span_ending_now(&mut self, kind: StageKind, dur_us: u64) {
+        if !self.sampled {
+            return;
+        }
+        let end = self.now_us();
+        self.span(kind, end.saturating_sub(dur_us), end);
+    }
+
+    /// Attach a shared-span link to the most recent span (no-op when
+    /// unsampled, id 0, or no span recorded yet).
+    pub fn link_last(&mut self, span_id: u64) {
+        if !self.sampled || span_id == 0 {
+            return;
+        }
+        if let Some(s) = self.spans.last_mut() {
+            s.links.push(span_id);
+        }
+    }
+}
+
+/// Everything the tracer retained, for export and tests.
+#[derive(Clone, Debug, Default)]
+pub struct TraceDump {
+    /// Head-sampled traces still in the ring (newest survive overflow).
+    pub traces: Vec<Trace>,
+    /// SLA-miss exemplars (tail retention, survives ring wraparound).
+    pub sla: Vec<Trace>,
+    /// Top-k slowest traces (tail retention).
+    pub slowest: Vec<Trace>,
+    /// Shared launch / fetch / flight spans.
+    pub shared: Vec<SharedSpan>,
+    /// Extra (rider trace id → shared span id) edges reported out of
+    /// band where no rider span existed yet to carry the link.
+    pub flows: Vec<(u64, u64)>,
+}
+
+const RING_SHARDS: usize = 8;
+
+/// The tracing sink: head-sampling admission, bounded sharded rings for
+/// completed traces, tail retention for SLA misses and slowest
+/// exemplars, and a bounded store of shared (cross-request) spans.
+pub struct Tracer {
+    epoch: Instant,
+    sample_n: u64,
+    admit: AtomicU64,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    ring: Vec<Mutex<VecDeque<Trace>>>,
+    ring_cap: usize,
+    sla: Mutex<VecDeque<Trace>>,
+    sla_cap: usize,
+    slowest: Mutex<Vec<Trace>>,
+    slow_k: usize,
+    shared: Mutex<VecDeque<SharedSpan>>,
+    shared_cap: usize,
+    flows: Mutex<VecDeque<(u64, u64)>>,
+}
+
+impl Tracer {
+    /// `sample_n`: head sampling keeps 1 in `sample_n` traces (1 =
+    /// every request, 0 = tracing disabled — `begin` returns `None`).
+    pub fn new(sample_n: u64) -> Tracer {
+        Self::with_caps(sample_n, 512, 256, 32, 4096)
+    }
+
+    /// Fully parameterized constructor (tests shrink the caps).
+    pub fn with_caps(
+        sample_n: u64,
+        ring_cap_per_shard: usize,
+        sla_cap: usize,
+        slow_k: usize,
+        shared_cap: usize,
+    ) -> Tracer {
+        let mut ring = Vec::with_capacity(RING_SHARDS);
+        for _ in 0..RING_SHARDS {
+            ring.push(Mutex::new(VecDeque::new()));
+        }
+        Tracer {
+            epoch: Instant::now(),
+            sample_n,
+            admit: AtomicU64::new(0),
+            next_trace: AtomicU64::new(0),
+            next_span: AtomicU64::new(0),
+            ring,
+            ring_cap: ring_cap_per_shard.max(1),
+            sla: Mutex::new(VecDeque::new()),
+            sla_cap: sla_cap.max(1),
+            slowest: Mutex::new(Vec::new()),
+            slow_k: slow_k.max(1),
+            shared: Mutex::new(VecDeque::new()),
+            shared_cap: shared_cap.max(1),
+            flows: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn sample_n(&self) -> u64 {
+        self.sample_n
+    }
+
+    /// Microseconds since the tracer's epoch (all span timestamps share
+    /// this clock so the export lines up across threads).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Admit one request. Every admitted request gets a live trace id
+    /// (cheap: one atomic) so shared spans can name it as a rider; only
+    /// 1-in-`sample_n` get span recording.
+    pub fn begin(&self, request_id: u64, budget_us: u64) -> Option<TraceContext> {
+        if self.sample_n == 0 {
+            return None;
+        }
+        let trace_id = self.next_trace.fetch_add(1, Ordering::Relaxed) + 1;
+        let sampled = self.admit.fetch_add(1, Ordering::Relaxed) % self.sample_n == 0;
+        Some(TraceContext {
+            trace_id,
+            request_id,
+            budget_us,
+            epoch: self.epoch,
+            t0_us: self.now_us(),
+            sampled,
+            spans: if sampled { Vec::with_capacity(8) } else { Vec::new() },
+        })
+    }
+
+    /// Allocate an id for a shared span (nonzero; 0 means "untraced").
+    pub fn new_span_id(&self) -> u64 {
+        self.next_span.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Record a shared (multi-request) span.
+    pub fn emit_shared(&self, span: SharedSpan) {
+        let mut s = self.shared.lock().unwrap();
+        if s.len() >= self.shared_cap {
+            s.pop_front();
+        }
+        s.push_back(span);
+    }
+
+    /// Report a causality edge out of band (rider trace → shared span)
+    /// for paths where the rider has no span yet to carry the link —
+    /// e.g. a feature id that rode another request's in-flight fetch.
+    pub fn flow(&self, trace_id: u64, span_id: u64) {
+        if trace_id == 0 || span_id == 0 {
+            return;
+        }
+        let mut f = self.flows.lock().unwrap();
+        if f.len() >= self.shared_cap {
+            f.pop_front();
+        }
+        f.push_back((trace_id, span_id));
+    }
+
+    /// Finish a trace: compute the attribution verdict (stage with the
+    /// largest span duration) and retain the trace — ring for sampled
+    /// traces, the SLA store for misses (even unsampled ones, so the
+    /// miss itself is never lost), and the top-k slowest set.
+    pub fn finish(&self, ctx: TraceContext, pid: u32, sla_missed: bool) -> Option<StageKind> {
+        let total_us = self.now_us().saturating_sub(ctx.t0_us);
+        let verdict = ctx
+            .spans
+            .iter()
+            .max_by_key(|s| s.dur_us())
+            .map(|s| s.kind);
+        let sampled = ctx.sampled;
+        if !sampled && !sla_missed {
+            return verdict;
+        }
+        let trace = Trace {
+            trace_id: ctx.trace_id,
+            request_id: ctx.request_id,
+            pid,
+            tid: tid(),
+            begin_us: ctx.t0_us,
+            total_us,
+            budget_us: ctx.budget_us,
+            sla_missed,
+            verdict,
+            spans: ctx.spans,
+        };
+        if sla_missed {
+            let mut sla = self.sla.lock().unwrap();
+            if sla.len() >= self.sla_cap {
+                sla.pop_front();
+            }
+            sla.push_back(trace.clone());
+        }
+        if sampled {
+            {
+                let mut slow = self.slowest.lock().unwrap();
+                slow.push(trace.clone());
+                slow.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+                slow.truncate(self.slow_k);
+            }
+            let shard = (trace.tid as usize) % RING_SHARDS;
+            let mut ring = self.ring[shard].lock().unwrap();
+            if ring.len() >= self.ring_cap {
+                ring.pop_front();
+            }
+            ring.push_back(trace);
+        }
+        verdict
+    }
+
+    /// Copy out everything retained.
+    pub fn dump(&self) -> TraceDump {
+        let mut traces = Vec::new();
+        for shard in &self.ring {
+            traces.extend(shard.lock().unwrap().iter().cloned());
+        }
+        TraceDump {
+            traces,
+            sla: self.sla.lock().unwrap().iter().cloned().collect(),
+            slowest: self.slowest.lock().unwrap().clone(),
+            shared: self.shared.lock().unwrap().iter().cloned().collect(),
+            flows: self.flows.lock().unwrap().iter().cloned().collect(),
+        }
+    }
+}
+
+// ---- thread identity (stable small tids for the Chrome export) ----
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static THREAD_NAMES: Mutex<Vec<(u64, String)>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+    static CURRENT_TRACE: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Stable small id for the calling thread; registers the thread's name
+/// on first use. Only called on traced paths (allocates the name once
+/// per thread).
+pub fn tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        let name = std::thread::current().name().unwrap_or("worker").to_string();
+        if let Ok(mut names) = THREAD_NAMES.lock() {
+            names.push((v, name));
+        }
+        v
+    })
+}
+
+/// (tid, thread name) pairs registered so far.
+pub fn thread_names() -> Vec<(u64, String)> {
+    THREAD_NAMES.lock().map(|n| n.clone()).unwrap_or_default()
+}
+
+/// Mark the trace the calling thread is currently assembling for (0 =
+/// none). Deep shared paths (the fetch coalescer) read this instead of
+/// threading a context parameter through every signature.
+pub fn set_current_trace(trace_id: u64) {
+    CURRENT_TRACE.with(|c| c.set(trace_id));
+}
+
+/// Trace id the calling thread is currently working for (0 = none).
+pub fn current_trace() -> u64 {
+    CURRENT_TRACE.with(|c| c.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_admits_nothing() {
+        let t = Tracer::new(0);
+        assert!(t.begin(1, 1_000).is_none());
+    }
+
+    #[test]
+    fn head_sampling_keeps_one_in_n() {
+        let t = Tracer::new(4);
+        let sampled = (0..16)
+            .filter(|&i| t.begin(i, 0).unwrap().sampled())
+            .count();
+        assert_eq!(sampled, 4);
+        // every admitted request still got a distinct live trace id
+        let a = t.begin(100, 0).unwrap();
+        let b = t.begin(101, 0).unwrap();
+        assert_ne!(a.trace_id(), b.trace_id());
+        assert_ne!(a.trace_id(), 0);
+    }
+
+    #[test]
+    fn unsampled_context_records_no_spans() {
+        let t = Tracer::new(2);
+        let _first = t.begin(0, 0).unwrap(); // sampled
+        let mut ctx = t.begin(1, 0).unwrap(); // not sampled
+        assert!(!ctx.sampled());
+        ctx.span(StageKind::Compute, 0, 10);
+        ctx.span_linked(StageKind::Feature, 0, 5, &[7]);
+        assert!(ctx.spans.is_empty(), "unsampled ctx must stay empty");
+    }
+
+    #[test]
+    fn finish_computes_dominant_stage_verdict() {
+        let t = Tracer::new(1);
+        let mut ctx = t.begin(9, 10_000).unwrap();
+        ctx.span(StageKind::Feature, 0, 100);
+        ctx.span(StageKind::Compute, 100, 9_000);
+        ctx.span(StageKind::Queue, 0, 10);
+        let verdict = t.finish(ctx, 0, true);
+        assert_eq!(verdict, Some(StageKind::Compute));
+        let d = t.dump();
+        assert_eq!(d.sla.len(), 1);
+        assert_eq!(d.sla[0].verdict, Some(StageKind::Compute));
+        assert!(d.sla[0].sla_missed);
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest_and_all_sla_exemplars() {
+        // tiny ring: 2 per shard; everything lands on this test thread's
+        // shard, so >2 finishes force wraparound
+        let t = Tracer::with_caps(1, 2, 64, 4, 64);
+        for i in 0..20u64 {
+            let mut ctx = t.begin(i, 1).unwrap();
+            ctx.span(StageKind::Compute, 0, 10 + i);
+            // every 5th request misses its SLA
+            t.finish(ctx, 0, i % 5 == 0);
+        }
+        let d = t.dump();
+        assert_eq!(d.traces.len(), 2, "ring bounded per shard");
+        let newest: Vec<u64> = d.traces.iter().map(|tr| tr.request_id).collect();
+        assert!(newest.contains(&18) && newest.contains(&19), "newest survive: {newest:?}");
+        let missed: Vec<u64> = d.sla.iter().map(|tr| tr.request_id).collect();
+        assert_eq!(missed, vec![0, 5, 10, 15], "all SLA exemplars retained across wraparound");
+    }
+
+    #[test]
+    fn slowest_exemplars_are_top_k() {
+        let t = Tracer::with_caps(1, 4, 4, 2, 64);
+        for i in 0..8u64 {
+            let mut ctx = t.begin(i, 0).unwrap();
+            ctx.span(StageKind::Compute, 0, i * 100);
+            std::thread::sleep(std::time::Duration::from_micros(200 * i));
+            t.finish(ctx, 0, false);
+        }
+        let d = t.dump();
+        assert_eq!(d.slowest.len(), 2);
+        assert!(d.slowest[0].total_us >= d.slowest[1].total_us);
+    }
+
+    #[test]
+    fn sampled_out_rider_still_listed_on_shared_span() {
+        let t = Tracer::with_caps(2, 8, 8, 4, 64);
+        let riders: Vec<TraceContext> =
+            (0..4).map(|i| t.begin(i, 0).unwrap()).collect();
+        // 1-in-2 sampling: half the riders carry no spans
+        assert!(riders.iter().any(|r| !r.sampled()));
+        let launch_id = t.new_span_id();
+        let members: Vec<u64> = riders.iter().map(|r| r.trace_id()).collect();
+        t.emit_shared(SharedSpan {
+            span_id: launch_id,
+            kind: StageKind::Launch,
+            label: "launch m=8".into(),
+            begin_us: 0,
+            end_us: 100,
+            pid: 0,
+            tid: tid(),
+            member_traces: members.clone(),
+        });
+        for mut r in riders {
+            r.span_linked(StageKind::Compute, 0, 100, &[launch_id]);
+            t.finish(r, 0, false);
+        }
+        let d = t.dump();
+        assert_eq!(d.shared.len(), 1);
+        // every rider — sampled or not — appears on the launch span
+        assert_eq!(d.shared[0].member_traces, members);
+        // and each *sampled* trace carries the flow link back
+        for tr in &d.traces {
+            let linked = tr.spans.iter().any(|s| s.links.contains(&launch_id));
+            assert!(linked, "sampled rider missing launch link: {tr:?}");
+        }
+        assert!(!d.traces.is_empty());
+    }
+
+    #[test]
+    fn unsampled_sla_miss_is_still_retained() {
+        let t = Tracer::with_caps(1_000_000, 4, 4, 4, 4);
+        let _sampled = t.begin(0, 1).unwrap();
+        let ctx = t.begin(1, 1).unwrap();
+        assert!(!ctx.sampled());
+        t.finish(ctx, 0, true);
+        let d = t.dump();
+        assert_eq!(d.sla.len(), 1);
+        assert_eq!(d.sla[0].verdict, None, "no spans -> no verdict");
+    }
+
+    #[test]
+    fn out_of_band_flows_are_bounded_and_dumped() {
+        let t = Tracer::with_caps(1, 4, 4, 4, 3);
+        t.flow(0, 5); // ignored: no trace
+        t.flow(5, 0); // ignored: no span
+        for i in 1..=5u64 {
+            t.flow(i, 100 + i);
+        }
+        let d = t.dump();
+        assert_eq!(d.flows.len(), 3, "bounded");
+        assert_eq!(d.flows, vec![(3, 103), (4, 104), (5, 105)]);
+    }
+
+    #[test]
+    fn current_trace_is_thread_local() {
+        set_current_trace(42);
+        assert_eq!(current_trace(), 42);
+        let other = std::thread::spawn(|| current_trace()).join().unwrap();
+        assert_eq!(other, 0);
+        set_current_trace(0);
+        assert_eq!(current_trace(), 0);
+    }
+
+    #[test]
+    fn tids_are_stable_and_distinct() {
+        let a = tid();
+        assert_eq!(a, tid());
+        let b = std::thread::spawn(|| tid()).join().unwrap();
+        assert_ne!(a, b);
+        let names = thread_names();
+        assert!(names.iter().any(|(id, _)| *id == a));
+    }
+}

@@ -1,0 +1,327 @@
+//! Prometheus-style text exposition of the live [`MetricsSnapshot`],
+//! plus a minimal HTTP/1.1 endpoint (`flame serve --metrics-addr`) so a
+//! running server can be scraped without stopping it. No HTTP library
+//! in the offline image — the server speaks just enough of the
+//! protocol for `curl` and a Prometheus scraper: read the request head,
+//! answer `200 text/plain; version=0.0.4`, close.
+
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::metrics::MetricsSnapshot;
+
+fn metric(out: &mut String, name: &str, help: &str, ty: &str, value: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {ty}");
+    if value.fract() == 0.0 && value.abs() < 9e15 {
+        let _ = writeln!(out, "{name} {}", value as i64);
+    } else {
+        let _ = writeln!(out, "{name} {value}");
+    }
+}
+
+/// Render one snapshot in Prometheus text exposition format 0.0.4.
+pub fn render(s: &MetricsSnapshot) -> String {
+    let mut o = String::with_capacity(4096);
+    metric(&mut o, "flame_requests_total", "Completed requests.", "counter", s.requests as f64);
+    metric(
+        &mut o,
+        "flame_pairs_total",
+        "Scored user-item pairs (the paper's throughput unit).",
+        "counter",
+        s.pairs as f64,
+    );
+    metric(
+        &mut o,
+        "flame_throughput_pairs_per_s",
+        "User-item pairs per second over the snapshot window.",
+        "gauge",
+        s.throughput_pairs_per_s,
+    );
+    metric(&mut o, "flame_overall_mean_ms", "End-to-end latency mean.", "gauge", s.overall_mean_ms);
+    metric(&mut o, "flame_overall_p50_ms", "End-to-end latency p50.", "gauge", s.overall_p50_ms);
+    metric(&mut o, "flame_overall_p99_ms", "End-to-end latency p99.", "gauge", s.overall_p99_ms);
+    metric(
+        &mut o,
+        "flame_compute_mean_ms",
+        "Model compute latency mean.",
+        "gauge",
+        s.compute_mean_ms,
+    );
+    metric(&mut o, "flame_compute_p50_ms", "Model compute latency p50.", "gauge", s.compute_p50_ms);
+    metric(&mut o, "flame_compute_p99_ms", "Model compute latency p99.", "gauge", s.compute_p99_ms);
+    metric(
+        &mut o,
+        "flame_feature_mean_ms",
+        "Feature stage latency mean.",
+        "gauge",
+        s.feature_mean_ms,
+    );
+    metric(&mut o, "flame_feature_p99_ms", "Feature stage latency p99.", "gauge", s.feature_p99_ms);
+    metric(
+        &mut o,
+        "flame_queueing_mean_ms",
+        "Intake queueing delay mean.",
+        "gauge",
+        s.queueing_mean_ms,
+    );
+    metric(
+        &mut o,
+        "flame_queueing_p99_ms",
+        "Intake queueing delay p99.",
+        "gauge",
+        s.queueing_p99_ms,
+    );
+    metric(
+        &mut o,
+        "flame_handoff_mean_ms",
+        "Pipeline handoff wait mean.",
+        "gauge",
+        s.handoff_mean_ms,
+    );
+    metric(&mut o, "flame_handoff_p99_ms", "Pipeline handoff wait p99.", "gauge", s.handoff_p99_ms);
+    metric(&mut o, "flame_dropped_total", "Requests shed or failed.", "counter", s.dropped as f64);
+    metric(
+        &mut o,
+        "flame_network_mb_per_s",
+        "Feature-store network utilization.",
+        "gauge",
+        s.network_mb_per_s,
+    );
+    metric(
+        &mut o,
+        "flame_arena_growths_total",
+        "Staging-arena growths.",
+        "counter",
+        s.arena_growths as f64,
+    );
+    metric(
+        &mut o,
+        "flame_result_cache_hits_total",
+        "Result-cache hits.",
+        "counter",
+        s.result_hits as f64,
+    );
+    metric(
+        &mut o,
+        "flame_result_cache_misses_total",
+        "Result-cache misses.",
+        "counter",
+        s.result_misses as f64,
+    );
+    metric(
+        &mut o,
+        "flame_result_cache_coalesced_total",
+        "Requests that rode another request's in-flight computation.",
+        "counter",
+        s.result_coalesced as f64,
+    );
+    metric(
+        &mut o,
+        "flame_fetch_coalesced_total",
+        "Feature ids that rode another request's in-flight fetch.",
+        "counter",
+        s.fetch_coalesced as f64,
+    );
+    metric(
+        &mut o,
+        "flame_fetch_batches_total",
+        "Shared feature multigets.",
+        "counter",
+        s.fetch_batches as f64,
+    );
+    metric(
+        &mut o,
+        "flame_coalesce_batches_total",
+        "DSO packed batches launched.",
+        "counter",
+        s.coalesce_batches as f64,
+    );
+    metric(
+        &mut o,
+        "flame_coalesced_rows_total",
+        "Rows that shared a multi-request launch.",
+        "counter",
+        s.coalesced_rows as f64,
+    );
+    metric(
+        &mut o,
+        "flame_coalesce_occupancy_mean_pct",
+        "Mean fill of packed batches at launch.",
+        "gauge",
+        s.coalesce_occupancy_mean_pct,
+    );
+    metric(
+        &mut o,
+        "flame_fke_flops_total",
+        "Analytic FLOPs executed by FKE launches.",
+        "counter",
+        s.fke_flops as f64,
+    );
+    metric(
+        &mut o,
+        "flame_fke_tiles_skipped_total",
+        "Attention tiles skipped as fully masked.",
+        "counter",
+        s.fke_tiles_skipped as f64,
+    );
+    let _ = writeln!(o, "# HELP flame_sla_miss_total SLA misses attributed to the dominant stage.");
+    let _ = writeln!(o, "# TYPE flame_sla_miss_total counter");
+    for (stage, v) in [
+        ("queue", s.sla_miss_queue),
+        ("feature", s.sla_miss_feature),
+        ("handoff", s.sla_miss_handoff),
+        ("compute", s.sla_miss_compute),
+        ("other", s.sla_miss_other),
+    ] {
+        let _ = writeln!(o, "flame_sla_miss_total{{stage=\"{stage}\"}} {v}");
+    }
+    o
+}
+
+/// A live scrape endpoint: GET anything → the current exposition.
+pub struct MetricsServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `render_body()` to
+    /// every connection.
+    pub fn start<F>(addr: &str, render_body: F) -> Result<MetricsServer>
+    where
+        F: Fn() -> String + Send + 'static,
+    {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| Error::Io(format!("bind {addr}"), e))?;
+        let local = listener.local_addr().map_err(|e| Error::Io("local_addr".into(), e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Io("set_nonblocking".into(), e))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("metrics-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // scrapes are rare; serve inline
+                            let _ = serve_one(stream, &render_body);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Internal(format!("spawn metrics-http: {e}")))?;
+        Ok(MetricsServer { addr: local, stop, thread: Some(thread) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_one<F: Fn() -> String>(
+    mut stream: std::net::TcpStream,
+    render_body: &F,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(250)))?;
+    // drain the request head (best effort — we answer any request)
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 16 * 1024 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let body = render_body();
+    let resp = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Recorder;
+    use crate::obs::StageKind;
+
+    #[test]
+    fn exposition_contains_required_series() {
+        let r = Recorder::new();
+        r.record_request(22_000, 128);
+        r.record_compute(5_000);
+        r.record_sla_attribution(StageKind::Compute);
+        let text = render(&r.snapshot_over(1.0));
+        for name in [
+            "flame_requests_total 1",
+            "flame_pairs_total 128",
+            "flame_overall_p99_ms",
+            "flame_compute_p50_ms",
+            "flame_throughput_pairs_per_s",
+            "flame_result_cache_hits_total",
+            "flame_coalesce_batches_total",
+            "flame_sla_miss_total{stage=\"compute\"} 1",
+            "flame_sla_miss_total{stage=\"queue\"} 0",
+        ] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        // every series carries HELP + TYPE
+        assert_eq!(
+            text.matches("# HELP").count(),
+            text.matches("# TYPE").count()
+        );
+    }
+
+    #[test]
+    fn http_endpoint_serves_exposition() {
+        let server = MetricsServer::start("127.0.0.1:0", || {
+            let r = Recorder::new();
+            r.record_request(1_000, 8);
+            render(&r.snapshot_over(1.0))
+        })
+        .unwrap();
+        let mut stream = std::net::TcpStream::connect(server.addr).unwrap();
+        stream
+            .write_all(b"GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n")
+            .unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK"), "{out}");
+        assert!(out.contains("text/plain; version=0.0.4"), "{out}");
+        assert!(out.contains("flame_requests_total 1"), "{out}");
+        server.shutdown();
+    }
+}

@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use crate::cache::ShardedCache;
 use crate::featurestore::{ItemFeatures, RemoteStore};
 use crate::metrics::Recorder;
+use crate::obs::{self, SharedSpan, StageKind};
 
 /// Max ids folded into one coalesced multiget (fill-triggered flush).
 pub const FETCH_BATCH: usize = 64;
@@ -48,9 +49,12 @@ const FETCH_SHARDS: usize = 4;
 
 /// One id's in-flight fetch: the leader resolves it, riders wait on it.
 struct Ticket {
-    /// `None` until resolved; `Some(None)` = the store failed and the
-    /// waiter must fall back (stale value / zero default).
-    state: Mutex<Option<Option<ItemFeatures>>>,
+    /// `None` until resolved. The payload is (value, fetch span id):
+    /// value `None` = the store failed and the waiter must fall back
+    /// (stale value / zero default); the span id names the shared
+    /// multiget span that resolved this ticket (0 = tracing off), so
+    /// waiters can report the cross-request causality edge.
+    state: Mutex<Option<(Option<ItemFeatures>, u64)>>,
     cv: Condvar,
 }
 
@@ -59,13 +63,13 @@ impl Ticket {
         Ticket { state: Mutex::new(None), cv: Condvar::new() }
     }
 
-    fn resolve(&self, value: Option<ItemFeatures>) {
+    fn resolve(&self, value: Option<ItemFeatures>, span_id: u64) {
         let mut st = self.state.lock().unwrap();
-        *st = Some(value);
+        *st = Some((value, span_id));
         self.cv.notify_all();
     }
 
-    fn wait(&self) -> Option<ItemFeatures> {
+    fn wait(&self) -> (Option<ItemFeatures>, u64) {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(v) = &*st {
@@ -205,7 +209,25 @@ impl FetchCoalescer {
         for ids in filled {
             self.execute(&ids, false);
         }
-        tickets.iter().map(|t| t.wait()).collect()
+        let results: Vec<(Option<ItemFeatures>, u64)> =
+            tickets.iter().map(|t| t.wait()).collect();
+        // causality: this request waited on these shared fetch spans.
+        // The trace id comes from the thread (set by the feature worker)
+        // — riders of another request's fetch report the edge out of
+        // band, since their own span for this stage does not exist yet.
+        if let Some(tracer) = self.recorder.as_ref().and_then(|r| r.tracer()) {
+            let trace = obs::current_trace();
+            if trace != 0 {
+                let mut seen: Vec<u64> = Vec::new();
+                for &(_, span_id) in &results {
+                    if span_id != 0 && !seen.contains(&span_id) {
+                        tracer.flow(trace, span_id);
+                        seen.push(span_id);
+                    }
+                }
+            }
+        }
+        results.into_iter().map(|(v, _)| v).collect()
     }
 
     /// Run one remote multiget for `ids` and resolve their tickets —
@@ -222,26 +244,55 @@ impl FetchCoalescer {
         if let Some(rec) = &self.recorder {
             rec.record_fetch_batch();
         }
-        match self.store.try_fetch_batch(ids) {
+        let tracing = self
+            .recorder
+            .as_ref()
+            .and_then(|r| r.tracer().map(|t| (Arc::clone(t), r.tracer_pid())));
+        let begin_us = tracing.as_ref().map_or(0, |(t, _)| t.now_us());
+        let result = self.store.try_fetch_batch(ids);
+        // one shared span per multiget (failed fetches too — a timed-out
+        // store round-trip is exactly what a slow trace should show)
+        let span_id = match &tracing {
+            Some((t, pid)) => {
+                let id = t.new_span_id();
+                t.emit_shared(SharedSpan {
+                    span_id: id,
+                    kind: StageKind::Fetch,
+                    label: format!(
+                        "multiget ×{}{}",
+                        ids.len(),
+                        if merged { " (merged)" } else { "" }
+                    ),
+                    begin_us,
+                    end_us: t.now_us(),
+                    pid: *pid,
+                    tid: obs::tid(),
+                    member_traces: Vec::new(),
+                });
+                id
+            }
+            None => 0,
+        };
+        match result {
             Ok(fetched) => {
                 for f in fetched {
                     self.cache.insert(f.item_id, f.clone());
-                    self.resolve(f.item_id, Some(f));
+                    self.resolve(f.item_id, Some(f), span_id);
                 }
             }
             Err(_) => {
                 self.store_errors.fetch_add(1, Ordering::Relaxed);
                 for &id in ids {
-                    self.resolve(id, None);
+                    self.resolve(id, None, span_id);
                 }
             }
         }
     }
 
-    fn resolve(&self, id: u64, value: Option<ItemFeatures>) {
+    fn resolve(&self, id: u64, value: Option<ItemFeatures>, span_id: u64) {
         let ticket = self.shards[self.shard_of(id)].lock().unwrap().inflight.remove(&id);
         if let Some(t) = ticket {
-            t.resolve(value);
+            t.resolve(value, span_id);
         }
     }
 

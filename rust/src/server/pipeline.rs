@@ -25,6 +25,7 @@ use crate::featurestore::{FeatureSchema, RemoteStore};
 use crate::manifest::Manifest;
 use crate::metrics::Recorder;
 use crate::netsim::{Link, LinkConfig};
+use crate::obs::{self, StageKind};
 use crate::pda::numa::Topology;
 use crate::pda::{InputAssembler, QueryEngine, StagingArena};
 use crate::runtime::Runtime;
@@ -200,6 +201,13 @@ impl ServingStack {
     /// `arena` is the calling worker's staging arena (reused).
     pub fn serve(&self, req: &Request, arena: &mut StagingArena) -> Result<Response> {
         let t0 = Instant::now();
+        // tracing costs one OnceLock::get returning None when off
+        let mut trace = self
+            .metrics
+            .trace_begin(req.request_id, self.config.server.deadline_ms * 1_000);
+        if let Some(ctx) = trace.as_ref() {
+            obs::set_current_trace(ctx.trace_id());
+        }
 
         // ---- feature stage (PDA) ----
         let tf = Instant::now();
@@ -213,11 +221,26 @@ impl ServingStack {
         }
         let (hist, cands) = assembled.views(arena);
         let feature_us = tf.elapsed().as_micros() as u64;
+        if let Some(ctx) = trace.as_mut() {
+            ctx.span_ending_now(StageKind::Feature, feature_us);
+            obs::set_current_trace(0);
+        }
 
         // ---- compute stage (DSO) ----
         // the orchestrator uploads hist to the device once and shares the
         // buffer across split chunks (§Perf: no host-side copy either).
-        let outcome = self.orchestrator.submit_slice(hist, cands, req.m())?;
+        let trace_id = trace.as_ref().map_or(0, |c| c.trace_id());
+        let compute_begin = trace.as_ref().map_or(0, |c| c.now_us());
+        let outcome = match self.orchestrator.submit_traced(hist, cands, req.m(), trace_id) {
+            Ok(o) => o,
+            Err(e) => {
+                if let Some(ctx) = trace.take() {
+                    let sla = ctx.budget_us() > 0 && ctx.elapsed_us() > ctx.budget_us();
+                    self.metrics.trace_finish(ctx, sla);
+                }
+                return Err(e);
+            }
+        };
 
         let overall_us = t0.elapsed().as_micros() as u64;
         self.metrics.record_request(overall_us, req.m());
@@ -226,6 +249,12 @@ impl ServingStack {
         // executor-queue delay (Recorder.queueing's definition: delay
         // before an executor picked the job up)
         self.metrics.record_queueing(outcome.queue_us);
+        if let Some(mut ctx) = trace.take() {
+            let end = ctx.now_us();
+            ctx.span_linked(StageKind::Compute, compute_begin, end, &outcome.launch_ids);
+            let sla = ctx.budget_us() > 0 && ctx.elapsed_us() > ctx.budget_us();
+            self.metrics.trace_finish(ctx, sla);
+        }
 
         Ok(Response {
             request_id: req.request_id,

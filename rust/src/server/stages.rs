@@ -36,6 +36,7 @@ use std::time::{Duration, Instant};
 
 use crate::batching::RequestQueue;
 use crate::error::{Error, Result};
+use crate::obs::{self, StageKind, TraceContext};
 use crate::pda::{ArenaPool, AssembledInput, StagingArena};
 use crate::workload::driver::DriveReport;
 use crate::workload::Request;
@@ -49,6 +50,9 @@ struct PipelineJob {
     /// `ServerConfig::deadline_first` the intake pops the
     /// nearest-deadline job first instead of FIFO.
     deadline: Instant,
+    /// Request-scoped trace, stamped at admission (None = tracing off;
+    /// the hot path then carries nothing).
+    trace: Option<TraceContext>,
     reply: Sender<Result<Response>>,
 }
 
@@ -64,6 +68,8 @@ struct StagedRequest {
     feature_us: u64,
     /// Feature-stage start (overall latency anchor).
     t0: Instant,
+    /// Trace carried over from the feature stage.
+    trace: Option<TraceContext>,
     reply: Sender<Result<Response>>,
 }
 
@@ -158,7 +164,12 @@ impl PipelineHandle {
         budget: Duration,
     ) -> Result<Receiver<Result<Response>>> {
         let (reply, rx) = channel();
-        self.intake.push(PipelineJob { req, deadline: Instant::now() + budget, reply })?;
+        let trace = self
+            .stack
+            .metrics
+            .trace_begin(req.request_id, budget.as_micros() as u64);
+        self.intake
+            .push(PipelineJob { req, deadline: Instant::now() + budget, trace, reply })?;
         Ok(rx)
     }
 
@@ -246,8 +257,15 @@ fn feature_loop(
     pool: &ArenaPool,
 ) {
     let l = stack.model_cfg.seq_len;
-    while let Some((job, qdelay)) = intake.pop() {
-        stack.metrics.record_queueing(qdelay.as_micros() as u64);
+    while let Some((mut job, qdelay)) = intake.pop() {
+        let qdelay_us = qdelay.as_micros() as u64;
+        stack.metrics.record_queueing(qdelay_us);
+        if let Some(ctx) = job.trace.as_mut() {
+            ctx.span_ending_now(StageKind::Queue, qdelay_us);
+            // deep shared paths (fetch coalescer) pick the trace id up
+            // from the thread instead of a threaded parameter
+            obs::set_current_trace(ctx.trace_id());
+        }
         let t0 = Instant::now();
         let mut arena = pool.get();
         let growth0 = arena.growth_count();
@@ -257,13 +275,19 @@ fn feature_loop(
         if grew > 0 {
             stack.metrics.record_arena_growth(grew);
         }
+        let feature_us = t0.elapsed().as_micros() as u64;
+        if let Some(ctx) = job.trace.as_mut() {
+            ctx.span_ending_now(StageKind::Feature, feature_us);
+            obs::set_current_trace(0);
+        }
         let staged = StagedRequest {
             request_id: job.req.request_id,
             m: job.req.m(),
             arena,
             assembled,
-            feature_us: t0.elapsed().as_micros() as u64,
+            feature_us,
             t0,
+            trace: job.trace,
             reply: job.reply,
         };
         if let Err(staged) = handoff.push_blocking(staged) {
@@ -284,17 +308,30 @@ fn feature_loop(
 /// workers are free to assemble the next requests.
 fn compute_loop(stack: &ServingStack, handoff: &RequestQueue<StagedRequest>, pool: &ArenaPool) {
     while let Some((staged, stage_wait)) = handoff.pop() {
-        let StagedRequest { request_id, m, arena, assembled, feature_us, t0, reply } = staged;
+        let StagedRequest { request_id, m, arena, assembled, feature_us, t0, mut trace, reply } =
+            staged;
         let handoff_us = stage_wait.as_micros() as u64;
         stack.metrics.record_handoff(handoff_us);
+        if let Some(ctx) = trace.as_mut() {
+            ctx.span_ending_now(StageKind::Handoff, handoff_us);
+        }
         let (hist, cands) = assembled.views(&arena);
-        match stack.orchestrator.submit_slice(hist, cands, m) {
+        let trace_id = trace.as_ref().map_or(0, |c| c.trace_id());
+        let compute_begin = trace.as_ref().map_or(0, |c| c.now_us());
+        match stack.orchestrator.submit_traced(hist, cands, m, trace_id) {
             Ok(outcome) => {
                 let overall_us = t0.elapsed().as_micros() as u64;
                 stack.metrics.record_request(overall_us, m);
                 stack.metrics.record_compute(outcome.compute_us);
                 stack.metrics.record_feature(feature_us);
                 stack.metrics.record_queueing(outcome.queue_us);
+                if let Some(mut ctx) = trace.take() {
+                    let end = ctx.now_us();
+                    ctx.span_linked(StageKind::Compute, compute_begin, end, &outcome.launch_ids);
+                    let sla_missed =
+                        ctx.budget_us() > 0 && ctx.elapsed_us() > ctx.budget_us();
+                    stack.metrics.trace_finish(ctx, sla_missed);
+                }
                 let _ = reply.send(Ok(Response {
                     request_id,
                     scores: outcome.scores,
@@ -308,6 +345,11 @@ fn compute_loop(stack: &ServingStack, handoff: &RequestQueue<StagedRequest>, poo
             }
             Err(e) => {
                 stack.metrics.record_dropped();
+                if let Some(ctx) = trace.take() {
+                    let sla_missed =
+                        ctx.budget_us() > 0 && ctx.elapsed_us() > ctx.budget_us();
+                    stack.metrics.trace_finish(ctx, sla_missed);
+                }
                 log::warn!("pipelined request {request_id} failed: {e}");
                 let _ = reply.send(Err(e));
             }

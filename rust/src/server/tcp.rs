@@ -9,6 +9,12 @@
 //!   u32 magic 'FLRS' | u64 request_id | u32 status (0 ok) |
 //!   u32 m | u32 n_tasks | f32*(m*n_tasks) | u64 overall_us
 //! Status 1 = overloaded, 2 = error.
+//!
+//! Stats op (live metrics without interrupting the serve stream):
+//!   request  = u32 magic 'FLST'
+//!   response = u32 magic 'FLST' | string (u32 len + UTF-8) carrying the
+//!              Prometheus-style text exposition of the frontend's
+//!              current [`MetricsSnapshot`](crate::metrics::MetricsSnapshot).
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
@@ -24,7 +30,35 @@ use crate::workload::Request;
 
 pub const REQ_MAGIC: u32 = 0x464C_5251; // "FLRQ"
 pub const RSP_MAGIC: u32 = 0x464C_5253; // "FLRS"
+pub const STATS_MAGIC: u32 = 0x464C_5354; // "FLST"
 const MAX_FRAME: usize = 64 << 20;
+
+/// Encode a stats-request frame payload (magic only).
+pub fn encode_stats_request() -> Vec<u8> {
+    let mut b = Builder::new();
+    b.u32(STATS_MAGIC);
+    b.finish()
+}
+
+/// Encode a stats-response frame payload.
+pub fn encode_stats_response(exposition: &str) -> Vec<u8> {
+    let mut b = Builder::new();
+    b.u32(STATS_MAGIC).string(exposition);
+    b.finish()
+}
+
+/// Decode a stats-response frame payload into the exposition text.
+pub fn decode_stats_response(buf: &[u8]) -> Result<String> {
+    let mut c = Cursor::new(buf);
+    if c.u32()? != STATS_MAGIC {
+        return Err(Error::Protocol("bad stats magic".into()));
+    }
+    let text = c.string()?;
+    if c.remaining() != 0 {
+        return Err(Error::Protocol("trailing bytes in stats response".into()));
+    }
+    Ok(text)
+}
 
 /// Encode a request frame payload.
 pub fn encode_request(r: &Request) -> Vec<u8> {
@@ -164,17 +198,29 @@ impl TcpServer {
                                 Frontend::Stack(stack) => {
                                     let n_tasks = stack.model_cfg.n_tasks;
                                     let mut arena = StagingArena::new(stack.arena_capacity());
+                                    let stats_stack = Arc::clone(&stack);
                                     let _ = handle_conn(
                                         stream,
                                         |req| stack.serve(req, &mut arena),
+                                        move || {
+                                            crate::obs::prom::render(
+                                                &stats_stack.metrics.snapshot(),
+                                            )
+                                        },
                                         Some(n_tasks),
                                         stop3,
                                     );
                                 }
                                 Frontend::Cluster(router) => {
+                                    let stats_router = Arc::clone(&router);
                                     let _ = handle_conn(
                                         stream,
                                         |req| router.submit(req),
+                                        move || {
+                                            crate::obs::prom::render(
+                                                &stats_router.metrics.snapshot(),
+                                            )
+                                        },
                                         None,
                                         stop3,
                                     );
@@ -214,15 +260,18 @@ impl Drop for TcpServer {
 
 /// Per-connection frame loop over any serve function. `n_tasks` fixes
 /// the response header for single-stack fronts; `None` derives it per
-/// response (cluster backends may differ in score width).
-fn handle_conn<F>(
+/// response (cluster backends may differ in score width). `stats`
+/// renders the live metrics exposition for 'FLST' frames.
+fn handle_conn<F, S>(
     mut stream: TcpStream,
     mut serve: F,
+    stats: S,
     n_tasks: Option<usize>,
     stop: Arc<AtomicBool>,
 ) -> Result<()>
 where
     F: FnMut(&Request) -> Result<Response>,
+    S: Fn() -> String,
 {
     stream
         .set_read_timeout(Some(std::time::Duration::from_millis(200)))
@@ -245,6 +294,12 @@ where
             }
             Err(_) => return Ok(()),
         };
+        if frame.len() >= 4 && frame[..4] == STATS_MAGIC.to_le_bytes() {
+            write_frame(&mut stream, &encode_stats_response(&stats()))
+                .map_err(|e| Error::Io("write stats frame".into(), e))?;
+            stream.flush().map_err(|e| Error::Io("flush".into(), e))?;
+            continue;
+        }
         let req = match decode_request(&frame) {
             Ok(r) => r,
             Err(_) => {
@@ -284,6 +339,14 @@ impl TcpClient {
             .map_err(|e| Error::Io("write".into(), e))?;
         let frame = read_frame(&mut self.stream, MAX_FRAME)?;
         decode_response(&frame)
+    }
+
+    /// Fetch the server's live metrics exposition (Prometheus text).
+    pub fn stats(&mut self) -> Result<String> {
+        write_frame(&mut self.stream, &encode_stats_request())
+            .map_err(|e| Error::Io("write".into(), e))?;
+        let frame = read_frame(&mut self.stream, MAX_FRAME)?;
+        decode_stats_response(&frame)
     }
 }
 
@@ -345,5 +408,23 @@ mod tests {
         let mut buf = encode_request(&req());
         buf.push(0);
         assert!(decode_request(&buf).is_err());
+    }
+
+    #[test]
+    fn stats_wire_roundtrip() {
+        let body = "# TYPE flame_requests_total counter\nflame_requests_total 7\n";
+        let frame = encode_stats_response(body);
+        assert_eq!(decode_stats_response(&frame).unwrap(), body);
+        // the stats request is distinguishable from a serve request
+        let sr = encode_stats_request();
+        assert_eq!(sr[..4], STATS_MAGIC.to_le_bytes());
+        assert!(decode_request(&sr).is_err());
+    }
+
+    #[test]
+    fn stats_rejects_wrong_magic() {
+        let mut frame = encode_stats_response("x");
+        frame[0] = 0;
+        assert!(decode_stats_response(&frame).is_err());
     }
 }

@@ -1,0 +1,230 @@
+//! Request-scoped tracing end to end over the artifact-free `SimEngine`
+//! backend: cross-request launch causality (every rider of a coalesced
+//! launch flow-links to the same launch span), SLA-miss attribution
+//! (the exemplar's verdict names the stage a known-injected delay made
+//! dominant), and the Chrome-trace export of a real run.
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use flame::config::{CacheMode, ModelConfig, StackConfig};
+use flame::dso::{ComputeBackend, SimEngine};
+use flame::netsim::{Link, LinkConfig};
+use flame::obs::{export, StageKind, Tracer};
+use flame::pda::StagingArena;
+use flame::server::pipeline::StackBuilder;
+use flame::server::ServingStack;
+use flame::workload::Request;
+
+const SEQ: usize = 16;
+const D: usize = 8;
+const TASKS: usize = 3;
+const PROFILES: [usize; 2] = [4, 8];
+const SEED: u64 = 99;
+
+fn model_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "sim".into(),
+        seq_len: SEQ,
+        n_blocks: 1,
+        layers_per_block: 1,
+        d_model: D,
+        n_heads: 1,
+        n_tasks: TASKS,
+        m_profiles: PROFILES.to_vec(),
+        native_m: PROFILES[PROFILES.len() - 1],
+    }
+}
+
+fn link(rtt: Duration) -> Arc<Link> {
+    Arc::new(Link::new(LinkConfig { rtt, bandwidth_bps: 1e9, jitter: 0.0, fail_rate: 0.0 }))
+}
+
+fn sim_stack(
+    cfgmod: impl FnOnce(&mut StackConfig),
+    delay: Duration,
+    link: Arc<Link>,
+) -> Arc<ServingStack> {
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Sync;
+    cfg.pda.numa_binding = false;
+    cfgmod(&mut cfg);
+    let backends: Vec<Arc<dyn ComputeBackend>> = PROFILES
+        .iter()
+        .map(|&m| {
+            Arc::new(SimEngine::new(m, SEQ, D, TASKS).with_delay(delay))
+                as Arc<dyn ComputeBackend>
+        })
+        .collect();
+    Arc::new(
+        StackBuilder::new("sim", "sim", cfg)
+            .with_link(link)
+            .build_from_backends(model_cfg(), SEED, backends)
+            .expect("sim stack"),
+    )
+}
+
+fn request(id: u64, m: usize, salt: u64) -> Request {
+    Request {
+        request_id: id,
+        user_id: salt % 100,
+        history: vec![salt, salt + 1, salt + 2],
+        candidates: (0..m as u64).map(|i| salt.wrapping_mul(17) ^ (i << 8)).collect(),
+    }
+}
+
+/// Tentpole acceptance: four concurrent 1-candidate requests coalesce
+/// into one profile-4 engine launch; every request's trace must carry a
+/// Compute span linked to the *same* launch span id, and that launch's
+/// shared span must list all four riders.
+#[test]
+fn coalesced_launch_links_every_rider_trace() {
+    let stack = sim_stack(
+        |c| {
+            c.dso.coalesce = true;
+            // long flush bound: only a full batch dispatches, so all
+            // four rows deterministically share one launch
+            c.dso.coalesce_wait_us = 500_000;
+        },
+        Duration::ZERO,
+        link(Duration::from_micros(200)),
+    );
+    let tracer = Arc::new(Tracer::new(1));
+    stack.metrics.set_tracer(Arc::clone(&tracer), 0);
+
+    const N: usize = 4; // == smallest profile: the 4th row closes the batch
+    let barrier = Arc::new(Barrier::new(N));
+    std::thread::scope(|s| {
+        for i in 0..N as u64 {
+            let stack = Arc::clone(&stack);
+            let barrier = Arc::clone(&barrier);
+            s.spawn(move || {
+                let mut arena = StagingArena::new(stack.arena_capacity());
+                let req = request(i, 1, (i + 1) * 1_000);
+                barrier.wait();
+                stack.serve(&req, &mut arena).expect("served");
+            });
+        }
+    });
+
+    let dump = tracer.dump();
+    assert_eq!(dump.traces.len(), N, "sample_n=1 must retain every trace");
+
+    // each trace's Compute span links exactly the launches it rode
+    let mut launch_links: Vec<u64> = Vec::new();
+    for t in &dump.traces {
+        let compute = t
+            .spans
+            .iter()
+            .find(|s| s.kind == StageKind::Compute)
+            .expect("every trace records its compute stage");
+        assert_eq!(
+            compute.links.len(),
+            1,
+            "one coalesced launch per request, got {:?}",
+            compute.links
+        );
+        launch_links.push(compute.links[0]);
+    }
+    let first = launch_links[0];
+    assert!(first != 0);
+    assert!(
+        launch_links.iter().all(|&l| l == first),
+        "all riders must link the same launch span, got {launch_links:?}"
+    );
+
+    // the launch's shared span names every rider, and only those
+    let launch = dump
+        .shared
+        .iter()
+        .find(|s| s.span_id == first)
+        .expect("launch span retained");
+    assert_eq!(launch.kind, StageKind::Launch);
+    let mut members = launch.member_traces.clone();
+    members.sort_unstable();
+    let mut expected: Vec<u64> = dump.traces.iter().map(|t| t.trace_id).collect();
+    expected.sort_unstable();
+    assert_eq!(members, expected, "launch span must list all four riders");
+
+    // and the whole thing exports as valid Chrome trace JSON with the
+    // rider→launch flow arrows intact
+    let json = export::chrome_trace_json(&dump);
+    let check = export::validate_chrome_trace(&json).expect("valid trace JSON");
+    assert!(check.flow_starts >= N, "one flow arrow per rider, got {check:?}");
+    assert_eq!(check.flow_starts, check.flow_ends, "unpaired flow events");
+}
+
+/// SLA attribution, compute-dominant: a 30 ms injected engine delay
+/// against a 1 ms deadline must yield an SLA-miss exemplar whose verdict
+/// is Compute, mirrored into the recorder's per-stage miss counters.
+#[test]
+fn sla_miss_attributes_injected_compute_delay() {
+    let stack = sim_stack(
+        |c| c.server.deadline_ms = 1,
+        Duration::from_millis(30), // the known slow stage
+        link(Duration::from_micros(200)),
+    );
+    let tracer = Arc::new(Tracer::new(1));
+    stack.metrics.set_tracer(Arc::clone(&tracer), 0);
+
+    let mut arena = StagingArena::new(stack.arena_capacity());
+    stack.serve(&request(1, 2, 42), &mut arena).expect("served (late, but served)");
+
+    let dump = tracer.dump();
+    assert_eq!(dump.sla.len(), 1, "the blown deadline must leave an exemplar");
+    let miss = &dump.sla[0];
+    assert!(miss.sla_missed);
+    assert!(miss.total_us > miss.budget_us, "{miss:?}");
+    assert_eq!(
+        miss.verdict,
+        Some(StageKind::Compute),
+        "verdict must name the injected 30 ms stage"
+    );
+    let (q, f, h, c, o) = stack.metrics.sla_miss_attribution();
+    assert_eq!((q, f, h, c, o), (0, 0, 0, 1, 0), "recorder mirror disagrees");
+    let snap = stack.metrics.snapshot();
+    assert_eq!(snap.sla_miss_compute, 1);
+}
+
+/// SLA attribution, feature-dominant: same deadline, zero compute delay,
+/// but a 40 ms feature-store round trip — the verdict must flip.
+#[test]
+fn sla_miss_attributes_slow_feature_store() {
+    let stack = sim_stack(
+        |c| c.server.deadline_ms = 1,
+        Duration::ZERO,
+        link(Duration::from_millis(40)), // sync-mode miss pays this rtt
+    );
+    let tracer = Arc::new(Tracer::new(1));
+    stack.metrics.set_tracer(Arc::clone(&tracer), 0);
+
+    let mut arena = StagingArena::new(stack.arena_capacity());
+    stack.serve(&request(1, 2, 7), &mut arena).expect("served");
+
+    let dump = tracer.dump();
+    assert_eq!(dump.sla.len(), 1);
+    assert_eq!(
+        dump.sla[0].verdict,
+        Some(StageKind::Feature),
+        "verdict must follow the dominant stage, not a fixed one"
+    );
+    let (_, f, _, c, _) = stack.metrics.sla_miss_attribution();
+    assert_eq!((f, c), (1, 0));
+}
+
+/// Deadline-respecting runs leave no SLA exemplars and no attribution
+/// counts — the tail stores only ever hold real misses.
+#[test]
+fn on_budget_requests_leave_no_sla_exemplars() {
+    let stack = sim_stack(|_| {}, Duration::ZERO, link(Duration::from_micros(200)));
+    let tracer = Arc::new(Tracer::new(1));
+    stack.metrics.set_tracer(Arc::clone(&tracer), 0);
+    let mut arena = StagingArena::new(stack.arena_capacity());
+    for i in 0..8 {
+        stack.serve(&request(i, 2, i + 1), &mut arena).expect("served");
+    }
+    let dump = tracer.dump();
+    assert_eq!(dump.traces.len(), 8);
+    assert!(dump.sla.is_empty(), "no deadline was missed: {:?}", dump.sla);
+    assert_eq!(stack.metrics.sla_miss_attribution(), (0, 0, 0, 0, 0));
+}

@@ -1,0 +1,80 @@
+//! Acceptance: tracing must be free when it is off. With
+//! `trace_sample_n = 0` (no tracer attached — exactly what the CLI wires
+//! up) the admission check is one `OnceLock` load; with a tracer
+//! attached but the sampling draw lost, the context carries only Copy
+//! ids and an empty, never-growing span vec. Neither path may touch the
+//! allocator. A counting `#[global_allocator]` proves it; this file
+//! holds a single test so no concurrent test pollutes the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use flame::metrics::Recorder;
+use flame::obs::{StageKind, Tracer};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_and_unsampled_tracing_never_allocate() {
+    // --- tracing off: no tracer attached (trace_sample_n = 0) ---
+    let off = Recorder::new();
+    for i in 0..8u64 {
+        assert!(off.trace_begin(i, 50_000).is_none()); // warmup
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..1_000u64 {
+        assert!(off.trace_begin(i, 50_000).is_none());
+    }
+    assert_eq!(
+        ALLOCS.load(Ordering::Relaxed),
+        before,
+        "trace_begin allocated with tracing disabled"
+    );
+
+    // --- tracer attached, request loses the 1-in-N sampling draw ---
+    let rec = Recorder::new();
+    rec.set_tracer(Arc::new(Tracer::new(1_000_000)), 0);
+    // warmup: admit 0 wins the draw (0 % N == 0) and pays its span vec
+    // here; also faults in thread-locals and lazy lock state
+    for i in 0..8u64 {
+        let mut ctx = rec.trace_begin(i, 50_000).expect("tracer attached");
+        ctx.span_ending_now(StageKind::Compute, 5);
+        rec.trace_finish(ctx, false);
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..1_000u64 {
+        let mut ctx = rec.trace_begin(i, 50_000).expect("tracer attached");
+        assert!(!ctx.sampled(), "admits 8..1008 must all lose a 1-in-1e6 draw");
+        ctx.span_ending_now(StageKind::Compute, 5);
+        ctx.span_linked(StageKind::Feature, 0, 1, &[7]);
+        ctx.link_last(3);
+        rec.trace_finish(ctx, false);
+    }
+    assert_eq!(
+        ALLOCS.load(Ordering::Relaxed),
+        before,
+        "unsampled request paid an allocation on the hot path"
+    );
+}

@@ -75,6 +75,60 @@ fn tcp_multiple_requests_one_connection() {
     server.shutdown();
 }
 
+/// The stats op ('FLST' frames) interleaves with serve traffic on one
+/// connection and returns the live Prometheus exposition. Sim-backed:
+/// runs on a bare checkout, no artifacts or PJRT needed.
+#[test]
+fn tcp_stats_op_serves_live_exposition() {
+    use flame::config::ModelConfig;
+    use flame::dso::{ComputeBackend, SimEngine};
+
+    let (seq, d, tasks) = (16usize, 8usize, 3usize);
+    let profiles = vec![4usize, 8];
+    let model_cfg = ModelConfig {
+        name: "sim".into(),
+        seq_len: seq,
+        n_blocks: 1,
+        layers_per_block: 1,
+        d_model: d,
+        n_heads: 1,
+        n_tasks: tasks,
+        m_profiles: profiles.clone(),
+        native_m: 8,
+    };
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Sync;
+    cfg.pda.numa_binding = false;
+    let backends: Vec<Arc<dyn ComputeBackend>> = profiles
+        .iter()
+        .map(|&m| Arc::new(SimEngine::new(m, seq, d, tasks)) as Arc<dyn ComputeBackend>)
+        .collect();
+    let stack = Arc::new(
+        StackBuilder::new("sim", "sim", cfg)
+            .build_from_backends(model_cfg, 7, backends)
+            .expect("sim stack"),
+    );
+
+    let server = TcpServer::start(Arc::clone(&stack), "127.0.0.1:0").expect("start");
+    let mut client = TcpClient::connect(&server.addr).expect("connect");
+
+    let before = client.stats().expect("stats before traffic");
+    assert!(before.contains("flame_requests_total 0"), "fresh stack: {before}");
+
+    let wire = client.call(&request(1, 4, seq)).expect("call");
+    assert_eq!(wire.status, 0);
+
+    let after = client.stats().expect("stats after traffic");
+    assert!(after.contains("# TYPE flame_requests_total counter"), "{after}");
+    assert!(after.contains("flame_requests_total 1"), "live counter: {after}");
+    assert!(after.contains("flame_sla_miss_total{stage=\"compute\"}"), "{after}");
+
+    // the serve stream survives interleaved stats frames
+    let wire = client.call(&request(2, 8, seq)).expect("call after stats");
+    assert_eq!(wire.status, 0);
+    server.shutdown();
+}
+
 #[test]
 fn tcp_concurrent_clients() {
     let Some(stack) = stack() else { return };
