@@ -142,6 +142,7 @@ impl<V: Clone> LruCache<V> {
     /// The copy-into read path `ShardedCache::with_fresh` builds on this
     /// so a hot-row lookup can write straight into a staging arena slice
     /// with zero allocation.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
     pub fn with_fresh<R>(
         &mut self,
         key: u64,

@@ -43,6 +43,7 @@ impl<V: Clone> ShardedCache<V> {
     }
 
     #[inline]
+    // lint: no_alloc — per-request hot path, must stay allocation-free
     fn shard_of(&self, key: u64) -> usize {
         // multiplicative hash; take the high bits for shard selection
         let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
@@ -70,6 +71,7 @@ impl<V: Clone> ShardedCache<V> {
     /// copy straight into an arena slice with zero allocation. Stats are
     /// accounted exactly as `get` would (fresh → hit, stale → stale hit,
     /// absent → miss).
+    // lint: no_alloc — per-request hot path, must stay allocation-free
     pub fn with_fresh<R>(&self, key: u64, f: impl FnOnce(&V) -> R) -> Option<R> {
         use std::sync::atomic::Ordering::Relaxed;
         let now = Instant::now();

@@ -23,7 +23,7 @@ const VALUE_FLAGS: &[&str] = &[
     "slots", "users", "result-cache-cap", "result-ttl-ms", "dup-rate",
     "coalesce-wait-us", "m-dist", "feature-workers", "fetch-wait-us",
     "handoff-capacity", "backend", "threads", "trace-out", "trace-sample-n",
-    "metrics-addr", "metrics-hold-s",
+    "metrics-addr", "metrics-hold-s", "baseline", "src",
 ];
 
 impl Args {
@@ -100,6 +100,16 @@ COMMANDS:
             metrics (simulated replicas by default; --real uses artifacts)
   trace-check  validate a --trace-out JSON file (schema + flow pairing)
             and print event counts: flame trace-check trace.json
+  lint      self-hosted static analysis of this crate's sources: lock
+            order, condvar discipline, no-alloc hot paths, panic
+            policy, unsafe hygiene (CI gate; see LINT FLAGS)
+
+LINT FLAGS:
+  --src DIR           crate root to scan (default: auto-detect rust/)
+  --baseline FILE     accepted-finding fingerprints (default:
+                      <root>/lint_baseline.txt)
+  --write-baseline    regenerate the baseline from current findings
+  --graph             print the inferred lock-acquisition graph
 
 CLUSTER FLAGS:
   --replicas N        replica count                (default: 3)
@@ -308,6 +318,19 @@ mod tests {
         assert!(h.contains("--trace-out"));
         assert!(h.contains("--metrics-addr"));
         assert!(h.contains("trace-check"));
+    }
+
+    #[test]
+    fn lint_flags_parse() {
+        let a = parse(&["lint", "--baseline", "lint_baseline.txt", "--write-baseline", "--graph"]);
+        assert_eq!(a.subcommand.as_deref(), Some("lint"));
+        assert_eq!(a.get("baseline"), Some("lint_baseline.txt"));
+        assert!(a.has("write-baseline"));
+        assert!(a.has("graph"));
+        let h = help();
+        assert!(h.contains("lint"));
+        assert!(h.contains("--write-baseline"));
+        assert!(h.contains("--graph"));
     }
 
     #[test]

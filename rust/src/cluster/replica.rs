@@ -64,11 +64,11 @@ impl ReplicaBackend for StackReplica {
         let mut arena = self
             .arenas
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .pop()
             .unwrap_or_else(|| StagingArena::new(self.stack.arena_capacity()));
         let result = self.stack.serve(req, &mut arena);
-        self.arenas.lock().unwrap().push(arena);
+        self.arenas.lock().unwrap_or_else(|e| e.into_inner()).push(arena);
         result
     }
 

@@ -102,7 +102,7 @@ impl Flight {
     }
 
     fn fill(&self, outcome: std::result::Result<(Arc<CachedScores>, u64), ()>) {
-        *self.outcome.lock().unwrap() = Some(outcome);
+        *self.outcome.lock().unwrap_or_else(|e| e.into_inner()) = Some(outcome);
         self.done.notify_all();
     }
 
@@ -114,7 +114,7 @@ impl Flight {
         // cap so an effectively-infinite deadline budget cannot overflow
         // Instant arithmetic (and cannot hang a waiter for hours)
         let deadline = Instant::now() + timeout.min(Duration::from_secs(60));
-        let mut slot = self.outcome.lock().unwrap();
+        let mut slot = self.outcome.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(out) = slot.as_ref() {
                 return Some(out.clone());
@@ -123,7 +123,10 @@ impl Flight {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.done.wait_timeout(slot, deadline - now).unwrap();
+            let (guard, _) = self
+                .done
+                .wait_timeout(slot, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
             slot = guard;
         }
     }
@@ -194,7 +197,11 @@ impl FlightGuard<'_> {
         if let Some(flight) = self.flight.take() {
             // deregister first so a new arrival starts a fresh flight
             // instead of waiting on a completed one
-            self.cache.flight_shard(self.key).lock().unwrap().remove(&self.key);
+            self.cache
+                .flight_shard(self.key)
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .remove(&self.key);
             flight.fill(outcome);
         }
     }
@@ -303,7 +310,7 @@ impl ResultCache {
             });
         }
         let flight = {
-            let mut map = self.flight_shard(key).lock().unwrap();
+            let mut map = self.flight_shard(key).lock().unwrap_or_else(|e| e.into_inner());
             if let Some(f) = map.get(&key) {
                 Arc::clone(f)
             } else {

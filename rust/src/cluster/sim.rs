@@ -71,16 +71,16 @@ impl Slots {
 
     fn acquire(&self) {
         self.waiting.fetch_add(1, Ordering::Relaxed);
-        let mut free = self.free.lock().unwrap();
+        let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
         while *free == 0 {
-            free = self.available.wait(free).unwrap();
+            free = self.available.wait(free).unwrap_or_else(|e| e.into_inner());
         }
         *free -= 1;
         self.waiting.fetch_sub(1, Ordering::Relaxed);
     }
 
     fn release(&self) {
-        *self.free.lock().unwrap() += 1;
+        *self.free.lock().unwrap_or_else(|e| e.into_inner()) += 1;
         self.available.notify_one();
     }
 }

@@ -241,6 +241,7 @@ impl Orchestrator {
     }
 
     pub fn max_profile(&self) -> usize {
+        // lint: allow(panic) profiles is validated non-empty at construction
         *self.profiles.last().unwrap()
     }
 
@@ -371,6 +372,7 @@ impl Orchestrator {
         }
 
         // upload the shared history once (any pool's engine: one client)
+        // lint: allow(panic) pools is validated non-empty at construction
         let hist_dev = match self.pools.values().next().unwrap().engine.upload_hist(hist) {
             Ok(h) => Arc::new(h),
             Err(e) => {
@@ -532,7 +534,7 @@ fn executor_loop(ctx: ExecutorCtx) {
     let m = engine.m();
     loop {
         let job = {
-            let guard = rx.lock().unwrap();
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
             match guard.recv() {
                 Ok(j) => j,
                 Err(_) => return, // orchestrator dropped

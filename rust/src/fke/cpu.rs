@@ -581,10 +581,12 @@ impl CpuEngine {
             x[lb * d..].copy_from_slice(cands);
             for lw in &self.model.blocks[b] {
                 match self.variant {
+                    // lint: allow(panic) bias is Some for every Naive launch (checked at plan time)
                     Variant::Naive => self.layer_naive(&mut x, n, lw, bias.as_deref().unwrap()),
                     // plan is Some only for the fused variant, so one
                     // call covers both deliberate graphs
                     Variant::Api | Variant::Fused => {
+                        // lint: allow(panic) scratch is Some for every Fast launch (checked at plan time)
                         self.layer_fast(&mut x, n, lb, lw, sc.as_mut().unwrap(), plan.as_ref())
                     }
                 }
@@ -594,6 +596,7 @@ impl CpuEngine {
 
         match self.variant {
             Variant::Naive => self.head_naive(&outs, mr, out),
+            // lint: allow(panic) scratch is Some for the Api head (checked at plan time)
             Variant::Api => self.head_api(&outs, mr, out, sc.as_mut().unwrap()),
             Variant::Fused => self.head_fused(&outs, mr, out),
         }

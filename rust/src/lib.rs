@@ -171,6 +171,37 @@
 //! `OnceLock::get` returning `None` — zero allocations, asserted by a
 //! regression test.
 //!
+//! ## Concurrency invariants
+//!
+//! The serve path's concurrency is hand-rolled, and its correctness
+//! rests on a small set of invariants that are *statically enforced* by
+//! the self-hosted analyzer in [`lint`] (`flame lint`, run as a CI
+//! gate). The invariants, and the checker that owns each:
+//!
+//! * **Lock order** (`lock-order`): a DSO coalescer per-profile slot
+//!   lock is never held while taking the flusher `signal` mutex, and
+//!   slot locks never nest ([`dso::coalescer`] module docs); likewise
+//!   for the PDA fetch coalescer's per-shard locks vs its `signal`
+//!   ([`pda::fetch_coalescer`]); cache shard locks never nest
+//!   ([`cache`]). The flusher direction — `signal` held while scanning
+//!   slots — is the allowed one. `flame lint --graph` dumps the
+//!   inferred acquisition graph.
+//! * **Condvar discipline** (`condvar`): every `Condvar::wait` /
+//!   `wait_timeout` sits in a `while`/`loop` re-checking its predicate
+//!   (spurious wakeups, racing notifies).
+//! * **No-alloc hot path** (`no-alloc`): functions annotated
+//!   `// lint: no_alloc` — the trace-off serve path that
+//!   `tests/obs_zero_alloc.rs` guards at runtime, plus cache-hit
+//!   paths — must not reach an allocating construct, directly or via
+//!   same-crate callees.
+//! * **Panic policy** (`panic`): `unwrap`/`expect`/`panic!` in
+//!   `server/`, `dso/`, `pda/`, `cluster/`, `fke/` non-test code needs
+//!   a `// lint: allow(panic) <reason>` tag; lock-guard unwraps prefer
+//!   poison-tolerant `unwrap_or_else(|e| e.into_inner())` so one
+//!   panicking worker cannot cascade into a hung flusher.
+//! * **Unsafe hygiene** (`unsafe`): every `unsafe` carries a
+//!   `// SAFETY:` comment stating the invariant it relies on.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -188,6 +219,11 @@
 //! assert_eq!(scores.len(), 8 * 3); // M x n_tasks
 //! ```
 
+// Curated crate-wide clippy allowances (everything else is `-D warnings`
+// in CI): serving-config constructors legitimately take many knobs, and
+// the channel/slot plumbing trades in honest-but-busy types.
+#![allow(clippy::too_many_arguments, clippy::type_complexity)]
+
 pub mod batching;
 pub mod benchkit;
 pub mod cache;
@@ -199,6 +235,7 @@ pub mod embedding;
 pub mod error;
 pub mod featurestore;
 pub mod fke;
+pub mod lint;
 pub mod manifest;
 pub mod metrics;
 pub mod netsim;

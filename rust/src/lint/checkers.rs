@@ -1,0 +1,1403 @@
+//! The five invariant checkers, all running over the [`Model`].
+//!
+//! | checker      | invariant it encodes                                     |
+//! |--------------|----------------------------------------------------------|
+//! | `lock-order` | documented mutex acquisition orders (see [`ORDER_RULES`]) |
+//! | `condvar`    | every condvar wait sits in a `while`/`loop`               |
+//! | `no-alloc`   | `// lint: no_alloc` fns never allocate, even via callees  |
+//! | `panic`      | hot-path dirs panic only with a tagged justification      |
+//! | `unsafe`     | every `unsafe` carries a `// SAFETY:` comment             |
+//!
+//! Soundness stance: the lock walker models guards the way this codebase
+//! writes them — `let g = x.lock().unwrap…();` binds a guard to the
+//! enclosing brace scope, `drop(g)` releases it, anything else is a
+//! statement-scoped temporary — and resolves calls interprocedurally
+//! only when unambiguous (`self.f(…)` in the same file, or a crate-wide
+//! unique free-function name outside [`METHOD_DENY`]). Unresolvable
+//! constructs are skipped, so the checker can miss exotic violations;
+//! it is tuned to never cry wolf on idiomatic code, which is what lets
+//! CI fail hard on any finding.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::Kind;
+use super::source::{FnItem, LockClass, Model, SourceFile};
+
+/// One reported violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub checker: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub function: String,
+    pub detail: String,
+}
+
+impl Finding {
+    /// Stable identity for baselining: deliberately excludes the line
+    /// number so unrelated edits don't churn the baseline file.
+    pub fn fingerprint(&self) -> String {
+        format!("{}|{}|{}|{}", self.checker, self.file, self.function, self.detail)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{} [{}] fn {}: {}",
+            self.file, self.line, self.checker, self.function, self.detail
+        )
+    }
+}
+
+/// One observed (or inferred) lock acquisition edge: `held` was live
+/// while `acquired` was taken, in `function` (through `via` if the
+/// acquisition happened inside a resolved callee).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LockEdge {
+    pub file: String,
+    pub function: String,
+    pub held: LockClass,
+    pub acquired: LockClass,
+    pub via: Option<String>,
+}
+
+impl LockEdge {
+    pub fn render(&self) -> String {
+        let via = self.via.as_deref().map(|v| format!(" (via {v})")).unwrap_or_default();
+        format!(
+            "{} fn {}: {} -> {}{}",
+            self.file,
+            self.function,
+            self.held.label(),
+            self.acquired.label(),
+            via
+        )
+    }
+}
+
+pub struct Analysis {
+    pub findings: Vec<Finding>,
+    pub edges: Vec<LockEdge>,
+}
+
+/// Directories whose non-test code falls under the panic policy.
+const PANIC_POLICY_DIRS: &[&str] = &["server/", "dso/", "pda/", "cluster/", "fke/"];
+
+/// A documented lock-order invariant: within the file matching
+/// `file_suffix`, the `held` class must never be live when the
+/// `acquired` class is taken. Cross-linked from the module docs of the
+/// files they protect.
+struct OrderRule {
+    file_suffix: &'static str,
+    held: &'static str,
+    acquired: &'static str,
+    doc: &'static str,
+}
+
+const ORDER_RULES: &[OrderRule] = &[
+    OrderRule {
+        file_suffix: "dso/coalescer.rs",
+        held: "slots",
+        acquired: "signal",
+        doc: "slot locks are never held while taking the flusher signal mutex \
+              (dso::coalescer module docs, 'Locking')",
+    },
+    OrderRule {
+        file_suffix: "dso/coalescer.rs",
+        held: "slots",
+        acquired: "slots",
+        doc: "per-profile slot locks never nest",
+    },
+    OrderRule {
+        file_suffix: "pda/fetch_coalescer.rs",
+        held: "shards",
+        acquired: "signal",
+        doc: "shard locks are never held while taking the flusher signal mutex \
+              (pda::fetch_coalescer module docs, 'Locking')",
+    },
+    OrderRule {
+        file_suffix: "pda/fetch_coalescer.rs",
+        held: "shards",
+        acquired: "shards",
+        doc: "per-shard slot locks never nest",
+    },
+    OrderRule {
+        file_suffix: "cache/sharded.rs",
+        held: "shards",
+        acquired: "shards",
+        doc: "cache shard locks never nest (cache::sharded per-call single-shard discipline)",
+    },
+];
+
+/// Method names never resolved to crate functions by bare-name
+/// uniqueness: they shadow ubiquitous std/container methods, and
+/// resolving them would fabricate call edges. Everything the order
+/// rules need flows through `self.f(…)` calls, which bypass this list.
+const METHOD_DENY: &[&str] = &[
+    "lock", "try_lock", "read", "write", "wait", "wait_timeout", "notify_all", "notify_one",
+    "unwrap", "expect", "unwrap_or", "unwrap_or_else", "unwrap_or_default", "ok_or_else",
+    "get", "get_mut", "get_or_insert_with", "insert", "remove", "push", "push_back", "pop",
+    "pop_front", "take", "take_if", "drop", "clone", "len", "is_empty", "contains", "entry",
+    "or_default", "iter", "into_iter", "next", "send", "recv", "join", "spawn", "drain",
+    "extend", "map", "and_then", "min", "max", "load", "store", "save", "new", "default",
+    "from", "into", "with_capacity", "to_string", "to_owned", "to_vec", "fill", "resize",
+    "clear", "last", "first", "flush", "run", "open", "close", "set", "begin", "finish",
+    "record", "stats", "flow", "tick", "now", "elapsed", "abs", "wrapping_mul", "parse",
+    "into_inner", "values", "keys", "contains_key", "fetch_add", "fetch_sub", "swap",
+    "collect", "filter", "find", "any", "all", "count", "sum", "zip", "rev", "enumerate",
+    "position", "sort", "sort_by", "retain", "split", "trim", "lines", "chars", "bytes",
+];
+
+/// A resolved call site inside a walked function.
+struct CallSite {
+    callee: (usize, usize),
+    name: String,
+    line: u32,
+    /// Lock classes live at the moment of the call.
+    held: Vec<LockClass>,
+}
+
+/// Everything one guard-tracking pass over a function body produces.
+#[derive(Default)]
+struct FnWalk {
+    /// (held, acquired, line) — direct intra-function nesting.
+    intra_edges: Vec<(LockClass, LockClass, u32)>,
+    /// Every class this function acquires anywhere (guard state aside).
+    acquires: BTreeSet<LockClass>,
+    calls: Vec<CallSite>,
+    /// Banned allocation constructs found directly in the body.
+    alloc_tokens: Vec<(String, u32)>,
+}
+
+struct Guard {
+    name: Option<String>,
+    class: LockClass,
+    depth: usize,
+    /// `drop(g)` inside a deeper block (typically a branch that then
+    /// `return`s or reacquires) suspends the guard until that block
+    /// closes, rather than releasing it outright — the fall-through
+    /// path still holds the lock. Errs toward reporting.
+    suspended_at: Option<usize>,
+}
+
+impl Guard {
+    fn live(&self) -> bool {
+        self.suspended_at.is_none()
+    }
+}
+
+/// Run every checker. `src_only` findings (all but `unsafe`) skip test
+/// code; the unsafe checker covers test code and `tests/` roots too.
+pub fn check(model: &Model) -> Analysis {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut edge_set: BTreeSet<LockEdge> = BTreeSet::new();
+
+    // ---- pass 1: per-fn walks (also emits condvar + panic findings)
+    let mut walks: BTreeMap<(usize, usize), FnWalk> = BTreeMap::new();
+    for (fi, file) in model.files.iter().enumerate() {
+        if file.integration_test {
+            continue;
+        }
+        for (ni, item) in file.fns.iter().enumerate() {
+            if item.is_test {
+                continue;
+            }
+            let w = walk_fn(model, fi, item, &mut findings);
+            walks.insert((fi, ni), w);
+        }
+    }
+
+    // ---- fixpoint: transitive lock + allocation effects
+    let mut lock_eff: BTreeMap<(usize, usize), BTreeSet<LockClass>> =
+        walks.iter().map(|(k, w)| (*k, w.acquires.clone())).collect();
+    let mut alloc_eff: BTreeMap<(usize, usize), Option<String>> = walks
+        .iter()
+        .map(|(k, w)| (*k, w.alloc_tokens.first().map(|(d, _)| d.clone())))
+        .collect();
+    loop {
+        let mut changed = false;
+        for (k, w) in &walks {
+            for call in &w.calls {
+                let callee_locks = lock_eff.get(&call.callee).cloned().unwrap_or_default();
+                let mine = lock_eff.entry(*k).or_default();
+                for c in callee_locks {
+                    changed |= mine.insert(c);
+                }
+                let callee_alloc = alloc_eff.get(&call.callee).cloned().flatten();
+                if let Some(d) = callee_alloc {
+                    let mine = alloc_eff.entry(*k).or_default();
+                    if mine.is_none() {
+                        *mine = Some(format!("{} -> {}", call.name, d));
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // ---- pass 2: edges, order rules, no_alloc
+    let mut order_fps: BTreeSet<String> = BTreeSet::new();
+    for (&(fi, ni), w) in &walks {
+        let file = &model.files[fi];
+        let item = &file.fns[ni];
+        for (held, acq, line) in &w.intra_edges {
+            let edge = LockEdge {
+                file: file.path.clone(),
+                function: item.name.clone(),
+                held: held.clone(),
+                acquired: acq.clone(),
+                via: None,
+            };
+            check_order(&edge, *line, &mut findings, &mut order_fps);
+            edge_set.insert(edge);
+        }
+        for call in &w.calls {
+            let callee_locks = lock_eff.get(&call.callee).cloned().unwrap_or_default();
+            for acq in &callee_locks {
+                for held in &call.held {
+                    let edge = LockEdge {
+                        file: file.path.clone(),
+                        function: item.name.clone(),
+                        held: held.clone(),
+                        acquired: acq.clone(),
+                        via: Some(call.name.clone()),
+                    };
+                    check_order(&edge, call.line, &mut findings, &mut order_fps);
+                    edge_set.insert(edge);
+                }
+            }
+        }
+        if item.no_alloc {
+            for (what, line) in &w.alloc_tokens {
+                findings.push(Finding {
+                    checker: "no-alloc",
+                    file: file.path.clone(),
+                    line: *line,
+                    function: item.name.clone(),
+                    detail: format!("`{what}` inside a `// lint: no_alloc` function"),
+                });
+            }
+            for call in &w.calls {
+                if let Some(d) = alloc_eff.get(&call.callee).cloned().flatten() {
+                    findings.push(Finding {
+                        checker: "no-alloc",
+                        file: file.path.clone(),
+                        line: call.line,
+                        function: item.name.clone(),
+                        detail: format!(
+                            "calls `{}()` which allocates ({d}) inside a \
+                             `// lint: no_alloc` function",
+                            call.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // ---- unsafe hygiene (all files, test code included)
+    for file in &model.files {
+        check_unsafe(file, &mut findings);
+    }
+
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.checker).cmp(&(&b.file, b.line, b.checker))
+    });
+    Analysis { findings, edges: edge_set.into_iter().collect() }
+}
+
+fn check_order(
+    edge: &LockEdge,
+    line: u32,
+    findings: &mut Vec<Finding>,
+    seen: &mut BTreeSet<String>,
+) {
+    for rule in ORDER_RULES {
+        let (
+            LockClass::Field { file: hf, field: held },
+            LockClass::Field { file: af, field: acq },
+        ) = (&edge.held, &edge.acquired)
+        else {
+            continue;
+        };
+        if held == rule.held
+            && acq == rule.acquired
+            && hf.ends_with(rule.file_suffix)
+            && af.ends_with(rule.file_suffix)
+        {
+            let via = edge.via.as_deref().map(|v| format!(" (via `{v}()`)")).unwrap_or_default();
+            let f = Finding {
+                checker: "lock-order",
+                file: edge.file.clone(),
+                line,
+                function: edge.function.clone(),
+                detail: format!(
+                    "acquires `{acq}` while holding `{held}`{via} — {}",
+                    rule.doc
+                ),
+            };
+            if seen.insert(f.fingerprint()) {
+                findings.push(f);
+            }
+        }
+    }
+}
+
+/// Is this file subject to the panic policy?
+fn panic_policy_file(path: &str) -> bool {
+    PANIC_POLICY_DIRS.iter().any(|d| path.contains(&format!("src/{d}")))
+}
+
+/// The single guard-tracking walk over one function body. Emits condvar
+/// and panic findings inline; returns the lock/alloc/call summary.
+fn walk_fn(
+    model: &Model,
+    fi: usize,
+    item: &FnItem,
+    findings: &mut Vec<Finding>,
+) -> FnWalk {
+    let file = &model.files[fi];
+    let toks = &file.toks;
+    let (body_open, body_close) = item.body;
+    let policy = panic_policy_file(&file.path);
+
+    let mut w = FnWalk::default();
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut aliases: Vec<(String, LockClass, usize)> = Vec::new();
+    let mut scope_opens: Vec<usize> = Vec::new();
+    let mut depth = 0usize;
+    let mut at_stmt_start = true;
+    let mut stmt_head: Option<String> = None;
+    let mut alias_pending: Option<(String, LockClass)> = None;
+    let mut stmt_bound_guard = false;
+
+    let mut j = body_open + 1;
+    while j < body_close {
+        let t = &toks[j];
+        if t.kind == Kind::Comment {
+            j += 1;
+            continue;
+        }
+        let was_stmt_start = at_stmt_start;
+        at_stmt_start = false;
+        match t.kind {
+            Kind::Punct if t.text == "{" => {
+                scope_opens.push(j);
+                depth += 1;
+                guards.retain(|g| g.name.is_some());
+                stmt_head = None;
+                alias_pending = None;
+                stmt_bound_guard = false;
+                at_stmt_start = true;
+            }
+            Kind::Punct if t.text == "}" => {
+                scope_opens.pop();
+                depth = depth.saturating_sub(1);
+                guards.retain(|g| g.name.is_some() && g.depth <= depth);
+                for g in guards.iter_mut() {
+                    if g.suspended_at.is_some_and(|d| depth < d) {
+                        g.suspended_at = None;
+                    }
+                }
+                aliases.retain(|(_, _, d)| *d <= depth);
+                stmt_head = None;
+                alias_pending = None;
+                stmt_bound_guard = false;
+                at_stmt_start = true;
+            }
+            Kind::Punct if t.text == ";" => {
+                guards.retain(|g| g.name.is_some());
+                if !stmt_bound_guard {
+                    if let Some((name, class)) = alias_pending.take() {
+                        aliases.push((name, class, depth));
+                    }
+                }
+                stmt_head = None;
+                alias_pending = None;
+                stmt_bound_guard = false;
+                at_stmt_start = true;
+            }
+            Kind::Ident if t.text == "let" => {
+                // `let [mut] NAME =` — anything fancier is not a binding
+                // we track (tuple patterns, typed lets)
+                if let Some(mut k) = file.nc(j + 1) {
+                    if file.is_ident(k, "mut") {
+                        if let Some(k2) = file.nc(k + 1) {
+                            k = k2;
+                        }
+                    }
+                    if toks[k].kind == Kind::Ident {
+                        if let Some(eq) = file.nc(k + 1) {
+                            if file.is_punct(eq, "=") {
+                                stmt_head = Some(toks[k].text.clone());
+                                alias_pending = None;
+                                j = eq + 1;
+                                continue;
+                            }
+                        }
+                    }
+                }
+            }
+            Kind::Ident if t.text == "for" => {
+                // `for PAT in HEADER {` — alias pattern idents to a lock
+                // class referenced by the header (e.g. `for slot in
+                // &self.slots`), scoped to the loop body.
+                let mut pat: Vec<String> = Vec::new();
+                let mut k = j + 1;
+                let mut steps = 0;
+                while k < body_close && steps < 16 && !file.is_ident(k, "in") {
+                    if toks[k].kind == Kind::Ident && toks[k].text != "mut" {
+                        pat.push(toks[k].text.clone());
+                    }
+                    k += 1;
+                    steps += 1;
+                }
+                if k < body_close && file.is_ident(k, "in") {
+                    let mut h = k + 1;
+                    let mut hsteps = 0;
+                    let mut class: Option<LockClass> = None;
+                    let mut pdepth = 0i64;
+                    while h < body_close && hsteps < 64 {
+                        if toks[h].kind == Kind::Punct {
+                            match toks[h].text.as_str() {
+                                "(" | "[" => pdepth += 1,
+                                ")" | "]" => pdepth -= 1,
+                                "{" if pdepth == 0 => break,
+                                _ => {}
+                            }
+                        } else if toks[h].kind == Kind::Ident && class.is_none() {
+                            class = lookup_lock_name(model, file, &aliases, &toks[h].text);
+                        }
+                        h += 1;
+                        hsteps += 1;
+                    }
+                    if let Some(c) = class {
+                        for p in pat {
+                            aliases.push((p, c.clone(), depth + 1));
+                        }
+                    }
+                }
+            }
+            Kind::Ident if t.text == "drop" => {
+                // `drop(name)`: at the guard's own depth this is an
+                // unconditional release; inside a deeper block it only
+                // suspends the guard for the rest of that branch.
+                if let Some(op) = file.nc(j + 1) {
+                    if file.is_punct(op, "(") {
+                        if let Some(arg) = file.nc(op + 1) {
+                            if toks[arg].kind == Kind::Ident {
+                                if let Some(cl) = file.nc(arg + 1) {
+                                    if file.is_punct(cl, ")") {
+                                        let name = &toks[arg].text;
+                                        let mut removed = false;
+                                        guards.retain(|g| {
+                                            let hit = g.name.as_deref() == Some(name.as_str())
+                                                && g.depth == depth;
+                                            removed |= hit;
+                                            !hit
+                                        });
+                                        if !removed {
+                                            for g in guards.iter_mut() {
+                                                if g.name.as_deref() == Some(name.as_str()) {
+                                                    g.suspended_at = Some(depth);
+                                                }
+                                            }
+                                        }
+                                        j = cl + 1;
+                                        continue;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Kind::Ident
+                if (t.text == "lock" || t.text == "read" || t.text == "write")
+                    && prev_is_dot(file, j)
+                    && next_is(file, j, "(") =>
+            {
+                let class = receiver_class(model, file, &aliases, j, body_open);
+                // `.read()`/`.write()` only count when the receiver is a
+                // known lock — they shadow io method names otherwise
+                let counts = t.text == "lock" || matches!(class, LockClass::Field { .. });
+                if counts {
+                    for g in guards.iter().filter(|g| g.live()) {
+                        w.intra_edges.push((g.class.clone(), class.clone(), t.line));
+                    }
+                    w.acquires.insert(class.clone());
+                    let persists = stmt_head.is_some() && guard_persists(file, j, body_close);
+                    if persists {
+                        let name = stmt_head.clone();
+                        guards.retain(|g| g.name != name);
+                        guards.push(Guard { name, class, depth, suspended_at: None });
+                        stmt_bound_guard = true;
+                    } else {
+                        guards.push(Guard { name: None, class, depth, suspended_at: None });
+                    }
+                }
+            }
+            Kind::Ident
+                if (t.text == "wait" || t.text == "wait_timeout") && prev_is_dot(file, j) =>
+            {
+                if next_is(file, j, "(") && wait_has_args(file, j, body_close) {
+                    let recv = nearest_receiver_ident(file, j, body_open);
+                    let is_condvar = recv.as_deref().is_some_and(|r| {
+                        model.condvar_names.contains(r)
+                            || matches!(r, "cv" | "cond" | "condvar")
+                    });
+                    if is_condvar && !wait_is_loop_guarded(file, &scope_opens, body_open) {
+                        findings.push(Finding {
+                            checker: "condvar",
+                            file: file.path.clone(),
+                            line: t.line,
+                            function: item.name.clone(),
+                            detail: format!(
+                                "condvar `{}.{}()` outside a `while`/`loop` — a wait \
+                                 must re-check its predicate (spurious wakeups, racing \
+                                 notifies)",
+                                recv.as_deref().unwrap_or("?"),
+                                t.text
+                            ),
+                        });
+                    }
+                }
+            }
+            Kind::Ident if policy && is_panic_token(file, j) => {
+                let what = panic_label(file, j);
+                if !file.comment_near(t.line, 3, "lint: allow(panic)") {
+                    findings.push(Finding {
+                        checker: "panic",
+                        file: file.path.clone(),
+                        line: t.line,
+                        function: item.name.clone(),
+                        detail: format!(
+                            "untagged `{what}` in hot-path code — tag it \
+                             `// lint: allow(panic) <why>` or handle the failure \
+                             (lock guards: prefer `.unwrap_or_else(|e| e.into_inner())`)"
+                        ),
+                    });
+                }
+            }
+            Kind::Ident if was_stmt_start && assign_target(file, j) => {
+                // `name = …;` at statement start — a reassignment like
+                // `parked = self.signal.lock().unwrap();` rebinds the guard
+                stmt_head = Some(t.text.clone());
+                alias_pending = None;
+            }
+            _ => {}
+        }
+        // allocation constructs (collected for every fn; only reported
+        // for `no_alloc`-annotated ones)
+        if let Some(what) = banned_alloc_at(file, j) {
+            w.alloc_tokens.push((what, t.line));
+        }
+        // call-site resolution
+        if t.kind == Kind::Ident && next_is(file, j, "(") {
+            if let Some(callee) = resolve_call(model, file, fi, j) {
+                let held: Vec<LockClass> =
+                    guards.iter().filter(|g| g.live()).map(|g| g.class.clone()).collect();
+                w.calls.push(CallSite {
+                    callee,
+                    name: t.text.clone(),
+                    line: t.line,
+                    held,
+                });
+            }
+        }
+        // alias candidate: first lock-ish ident in a `let NAME = …` stmt
+        if stmt_head.is_some()
+            && alias_pending.is_none()
+            && !stmt_bound_guard
+            && t.kind == Kind::Ident
+        {
+            if let Some(c) = lookup_lock_name(model, file, &aliases, &t.text) {
+                alias_pending = Some((stmt_head.clone().unwrap_or_default(), c));
+            }
+        }
+        j += 1;
+    }
+    w
+}
+
+/// `name = …` (not `==`, not a match arm's `=>`) at statement start.
+fn assign_target(file: &SourceFile, j: usize) -> bool {
+    let Some(eq) = file.nc(j + 1) else { return false };
+    if !file.is_punct(eq, "=") {
+        return false;
+    }
+    match file.nc(eq + 1) {
+        Some(n) => !file.is_punct(n, "=") && !file.is_punct(n, ">"),
+        None => false,
+    }
+}
+
+/// Does `name` denote a lock (field of this file, or live alias)?
+fn lookup_lock_name(
+    model: &Model,
+    file: &SourceFile,
+    aliases: &[(String, LockClass, usize)],
+    name: &str,
+) -> Option<LockClass> {
+    if let Some((_, c, _)) = aliases.iter().rev().find(|(n, _, _)| n == name) {
+        return Some(c.clone());
+    }
+    if model.lock_fields.contains(&(file.path.clone(), name.to_string())) {
+        return Some(LockClass::Field { file: file.path.clone(), field: name.to_string() });
+    }
+    None
+}
+
+fn prev_is_dot(file: &SourceFile, j: usize) -> bool {
+    j > 0 && file.pc(j - 1).is_some_and(|p| file.is_punct(p, "."))
+}
+
+fn next_is(file: &SourceFile, j: usize, p: &str) -> bool {
+    file.nc(j + 1).is_some_and(|n| file.is_punct(n, p))
+}
+
+/// `.wait(` with at least one argument (excludes `Barrier::wait()`).
+fn wait_has_args(file: &SourceFile, j: usize, hi: usize) -> bool {
+    let Some(op) = file.nc(j + 1) else { return false };
+    match file.nc(op + 1) {
+        Some(a) if a < hi => !file.is_punct(a, ")"),
+        _ => false,
+    }
+}
+
+/// Walk the receiver chain left of the `.` before token `j`; the first
+/// ident that names a lock field/alias decides the class.
+fn receiver_class(
+    model: &Model,
+    file: &SourceFile,
+    aliases: &[(String, LockClass, usize)],
+    j: usize,
+    lo: usize,
+) -> LockClass {
+    let chain = receiver_chain(file, j, lo);
+    for name in &chain {
+        if let Some(c) = lookup_lock_name(model, file, aliases, name) {
+            return c;
+        }
+    }
+    let label = chain
+        .iter()
+        .find(|n| *n != "self")
+        .cloned()
+        .unwrap_or_else(|| "expr".to_string());
+    LockClass::Other { name: label }
+}
+
+fn nearest_receiver_ident(file: &SourceFile, j: usize, lo: usize) -> Option<String> {
+    receiver_chain(file, j, lo).into_iter().next()
+}
+
+/// Idents of the chained receiver expression ending at the `.` before
+/// token `j`, nearest first: `self.slots.get(&p)?.lock()` → `[get,
+/// slots, self]` (balanced groups are skipped, `?` is transparent).
+fn receiver_chain(file: &SourceFile, j: usize, lo: usize) -> Vec<String> {
+    let toks = &file.toks;
+    let mut out = Vec::new();
+    // position of the `.`
+    let Some(mut i) = file.pc(j.saturating_sub(1)) else { return out };
+    if !file.is_punct(i, ".") {
+        return out;
+    }
+    while i > lo && out.len() < 12 {
+        let Some(p) = (i > 0).then(|| file.pc(i - 1)).flatten() else { break };
+        if p < lo {
+            break;
+        }
+        match toks[p].kind {
+            Kind::Ident => {
+                out.push(toks[p].text.clone());
+                let Some(q) = (p > 0).then(|| file.pc(p - 1)).flatten() else { break };
+                if q >= lo && (file.is_punct(q, ".") || file.is_punct(q, ":")) {
+                    i = q;
+                    if file.is_punct(q, ":") {
+                        // `::` — step past both colons
+                        match (q > 0).then(|| file.pc(q - 1)).flatten() {
+                            Some(q2) if q2 >= lo && file.is_punct(q2, ":") => i = q2,
+                            _ => break,
+                        }
+                    }
+                } else {
+                    break;
+                }
+            }
+            Kind::Punct if toks[p].text == ")" || toks[p].text == "]" => {
+                let (close, open) = if toks[p].text == ")" { (")", "(") } else { ("]", "[") };
+                let mut d = 1i64;
+                let mut q = p;
+                while q > lo && d > 0 {
+                    q -= 1;
+                    if toks[q].kind == Kind::Punct {
+                        if toks[q].text == close {
+                            d += 1;
+                        } else if toks[q].text == open {
+                            d -= 1;
+                        }
+                    }
+                }
+                i = q;
+            }
+            Kind::Punct if toks[p].text == "?" => {
+                i = p;
+            }
+            _ => break,
+        }
+    }
+    out
+}
+
+/// After `lock` at `j`: does the statement end right after the unwrap
+/// chain (→ the `let`/assignment target is the guard itself), or does
+/// the chain continue into field/method access (→ the guard is a
+/// statement temporary)?
+fn guard_persists(file: &SourceFile, j: usize, hi: usize) -> bool {
+    let toks = &file.toks;
+    // skip the `()` of lock
+    let Some(op) = file.nc(j + 1) else { return false };
+    let Some(mut k) = skip_balanced(file, op, hi) else { return false };
+    loop {
+        let Some(dot) = file.nc(k) else { return false };
+        if dot >= hi {
+            return false;
+        }
+        if file.is_punct(dot, ";") {
+            return true;
+        }
+        if !file.is_punct(dot, ".") {
+            return false;
+        }
+        let Some(m) = file.nc(dot + 1) else { return false };
+        if toks[m].kind != Kind::Ident
+            || !["unwrap", "expect", "unwrap_or_else"].contains(&toks[m].text.as_str())
+        {
+            return false;
+        }
+        let Some(op2) = file.nc(m + 1) else { return false };
+        if !file.is_punct(op2, "(") {
+            return false;
+        }
+        let Some(k2) = skip_balanced(file, op2, hi) else { return false };
+        k = k2;
+    }
+}
+
+/// Given the index of a `(`, return the index just past its matching
+/// `)` (None if unbalanced before `hi`).
+fn skip_balanced(file: &SourceFile, open: usize, hi: usize) -> Option<usize> {
+    let toks = &file.toks;
+    let mut d = 0i64;
+    let mut k = open;
+    while k < hi {
+        if toks[k].kind == Kind::Punct {
+            match toks[k].text.as_str() {
+                "(" => d += 1,
+                ")" => {
+                    d -= 1;
+                    if d == 0 {
+                        return Some(k + 1);
+                    }
+                }
+                _ => {}
+            }
+        }
+        k += 1;
+    }
+    None
+}
+
+/// How an open brace relates to a condvar wait nested under it.
+enum BraceKind {
+    /// `loop`/`while`/`for` body — the wait is re-checked.
+    Loop,
+    /// Function or closure boundary — an enclosing loop outside it does
+    /// not re-run the wait.
+    Barrier,
+    /// Plain block, `if`/`match` arm, struct literal… keep looking out.
+    Transparent,
+}
+
+fn classify_brace(file: &SourceFile, open: usize, lo: usize) -> BraceKind {
+    let toks = &file.toks;
+    let mut d = 0i64;
+    let mut i = open;
+    let mut steps = 0;
+    while i > lo && steps < 64 {
+        steps += 1;
+        let Some(p) = (i > 0).then(|| file.pc(i - 1)).flatten() else { break };
+        if p < lo {
+            break;
+        }
+        i = p;
+        match toks[p].kind {
+            Kind::Punct => match toks[p].text.as_str() {
+                ")" | "]" => d += 1,
+                "(" | "[" => {
+                    if d == 0 {
+                        return BraceKind::Transparent; // `f({ … })` argument block
+                    }
+                    d -= 1;
+                }
+                "|" if d == 0 => return BraceKind::Barrier,
+                ";" | "{" | "}" | "," if d == 0 => return BraceKind::Transparent,
+                ">" if d == 0 => {
+                    // `=>` match arm?
+                    if let Some(q) = (p > 0).then(|| file.pc(p - 1)).flatten() {
+                        if file.is_punct(q, "=") {
+                            return BraceKind::Transparent;
+                        }
+                    }
+                }
+                _ => {}
+            },
+            Kind::Ident if d == 0 => match toks[p].text.as_str() {
+                "loop" | "while" | "for" => return BraceKind::Loop,
+                "fn" | "move" => return BraceKind::Barrier,
+                "if" | "else" | "match" | "unsafe" => return BraceKind::Transparent,
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+    BraceKind::Transparent
+}
+
+/// From innermost to outermost enclosing brace: a Loop before any
+/// Barrier (or the function root) means the wait is re-checked.
+fn wait_is_loop_guarded(file: &SourceFile, scope_opens: &[usize], body_open: usize) -> bool {
+    for &open in scope_opens.iter().rev() {
+        match classify_brace(file, open, body_open) {
+            BraceKind::Loop => return true,
+            BraceKind::Barrier => return false,
+            BraceKind::Transparent => {}
+        }
+    }
+    false // reached the fn body without a loop
+}
+
+/// `.unwrap(` / `.expect(` / `panic!` / `unreachable!` / `todo!` /
+/// `unimplemented!` at token `j`?
+fn is_panic_token(file: &SourceFile, j: usize) -> bool {
+    let t = &file.toks[j];
+    match t.text.as_str() {
+        "unwrap" | "expect" => prev_is_dot(file, j) && next_is(file, j, "("),
+        "panic" | "unreachable" | "todo" | "unimplemented" => next_is(file, j, "!"),
+        _ => false,
+    }
+}
+
+fn panic_label(file: &SourceFile, j: usize) -> String {
+    let t = &file.toks[j];
+    match t.text.as_str() {
+        "unwrap" | "expect" => format!(".{}()", t.text),
+        other => format!("{other}!"),
+    }
+}
+
+/// Banned allocation construct starting at token `j`, if any.
+fn banned_alloc_at(file: &SourceFile, j: usize) -> Option<String> {
+    let t = &file.toks[j];
+    if t.kind != Kind::Ident {
+        return None;
+    }
+    match t.text.as_str() {
+        "vec" | "format" if next_is(file, j, "!") => Some(format!("{}!", t.text)),
+        "Vec" | "Box" | "String" => {
+            // `Type::{new,with_capacity,from}`
+            let c1 = file.nc(j + 1)?;
+            if !file.is_punct(c1, ":") {
+                return None;
+            }
+            let c2 = file.nc(c1 + 1)?;
+            if !file.is_punct(c2, ":") {
+                return None;
+            }
+            let m = file.nc(c2 + 1)?;
+            if file.toks[m].kind == Kind::Ident
+                && ["new", "with_capacity", "from"].contains(&file.toks[m].text.as_str())
+            {
+                Some(format!("{}::{}", t.text, file.toks[m].text))
+            } else {
+                None
+            }
+        }
+        "to_string" | "to_owned" | "to_vec" if prev_is_dot(file, j) && next_is(file, j, "(") => {
+            Some(format!(".{}()", t.text))
+        }
+        _ => None,
+    }
+}
+
+/// Resolve a call at ident `j` to a crate function, conservatively.
+fn resolve_call(model: &Model, file: &SourceFile, fi: usize, j: usize) -> Option<(usize, usize)> {
+    let name = &file.toks[j].text;
+    if name == "drop" {
+        return None;
+    }
+    let prev = (j > 0).then(|| file.pc(j - 1)).flatten();
+    let is_method = prev.is_some_and(|p| file.is_punct(p, "."));
+    if is_method {
+        let p = prev.unwrap_or(0);
+        let self_direct = (p > 0)
+            .then(|| file.pc(p - 1))
+            .flatten()
+            .is_some_and(|q| file.is_ident(q, "self"));
+        if self_direct {
+            return lookup_in_file(model, fi, name);
+        }
+        if METHOD_DENY.contains(&name.as_str()) {
+            return None;
+        }
+        return lookup_unique(model, fi, name);
+    }
+    // `Path::name(` — only resolve through capitalized (type-like) paths
+    if let Some(p) = prev {
+        if file.is_punct(p, ":") {
+            let q = (p > 0).then(|| file.pc(p - 1)).flatten();
+            let is_path = q.is_some_and(|q2| file.is_punct(q2, ":"));
+            if !is_path {
+                return None;
+            }
+            let seg = q
+                .and_then(|q2| (q2 > 0).then(|| file.pc(q2 - 1)).flatten())
+                .filter(|&s| file.toks[s].kind == Kind::Ident)
+                .map(|s| file.toks[s].text.clone())?;
+            let typeish = seg == "Self" || seg.starts_with(char::is_uppercase);
+            if !typeish || METHOD_DENY.contains(&name.as_str()) {
+                return None;
+            }
+            return lookup_in_file(model, fi, name).or_else(|| lookup_unique(model, fi, name));
+        }
+    }
+    // bare call
+    if METHOD_DENY.contains(&name.as_str()) {
+        return None;
+    }
+    lookup_in_file(model, fi, name).or_else(|| lookup_unique(model, fi, name))
+}
+
+/// The unique function named `name` in file `fi`, if exactly one.
+fn lookup_in_file(model: &Model, fi: usize, name: &str) -> Option<(usize, usize)> {
+    let entries = model.fn_index.get(name)?;
+    let mut in_file = entries.iter().filter(|(f, _)| *f == fi);
+    match (in_file.next(), in_file.next()) {
+        (Some(&e), None) => Some(e),
+        _ => None,
+    }
+}
+
+/// The unique function named `name` crate-wide, if exactly one.
+fn lookup_unique(model: &Model, _fi: usize, name: &str) -> Option<(usize, usize)> {
+    let entries = model.fn_index.get(name)?;
+    if entries.len() == 1 {
+        Some(entries[0])
+    } else {
+        None
+    }
+}
+
+/// Unsafe hygiene: every `unsafe` token needs a `// SAFETY:` comment on
+/// its line or within the 3 lines above. Runs on test code too — test
+/// unsafety (the counting global allocator) needs its invariant stated
+/// just as much.
+fn check_unsafe(file: &SourceFile, findings: &mut Vec<Finding>) {
+    for (j, t) in file.toks.iter().enumerate() {
+        if t.kind != Kind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        if file.comment_near(t.line, 3, "SAFETY:") {
+            continue;
+        }
+        let function = file
+            .fns
+            .iter()
+            .find(|f| f.body.0 <= j && j <= f.body.1)
+            .map(|f| f.name.clone())
+            .unwrap_or_else(|| "<item>".to_string());
+        findings.push(Finding {
+            checker: "unsafe",
+            file: file.path.clone(),
+            line: t.line,
+            function,
+            detail: "`unsafe` without a `// SAFETY:` comment stating the invariant it relies on"
+                .to_string(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::source::build_model;
+
+    fn run(files: &[(&str, &str)]) -> Analysis {
+        let srcs: Vec<(String, String)> =
+            files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect();
+        check(&build_model(&srcs))
+    }
+
+    fn by<'a>(a: &'a Analysis, checker: &str) -> Vec<&'a Finding> {
+        a.findings.iter().filter(|f| f.checker == checker).collect()
+    }
+
+    /// Shared scaffolding mirroring the real coalescer's lock fields.
+    const DSO_PREAMBLE: &str = r#"
+use std::sync::{Condvar, Mutex};
+use std::collections::BTreeMap;
+pub struct Coalescer {
+    slots: BTreeMap<usize, Mutex<Option<u8>>>,
+    signal: Mutex<()>,
+    cv: Condvar,
+}
+"#;
+
+    fn dso(body: &str) -> Analysis {
+        let src = format!("{DSO_PREAMBLE}\nimpl Coalescer {{\n{body}\n}}\n");
+        run(&[("src/dso/coalescer.rs", src.as_str())])
+    }
+
+    // ---- checker 1: lock-order ----
+
+    #[test]
+    fn seeded_inverted_slot_signal_order_is_caught() {
+        let a = dso(r#"
+    fn bad(&self, profile: usize) {
+        let slot = self.slots.get(&profile).unwrap();
+        let mut open = slot.lock().unwrap();
+        let _parked = self.signal.lock().unwrap();
+        open.take();
+    }
+"#);
+        let f = by(&a, "lock-order");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert!(f[0].detail.contains("`signal` while holding `slots`"), "{}", f[0].detail);
+    }
+
+    #[test]
+    fn nested_slot_locks_are_caught() {
+        let a = dso(r#"
+    fn nested(&self) {
+        let a = self.slots.get(&0).unwrap().lock().unwrap();
+        let b = self.slots.get(&1).unwrap().lock().unwrap();
+        let _ = (a, b);
+    }
+"#);
+        let f = by(&a, "lock-order");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert!(f[0].detail.contains("never nest"), "{}", f[0].detail);
+    }
+
+    #[test]
+    fn flusher_direction_signal_then_slots_is_allowed_and_graphed() {
+        let a = dso(r#"
+    fn flusher(&self) {
+        // lint: allow(panic) test scaffold
+        let mut parked = self.signal.lock().unwrap();
+        loop {
+            for (_, slot) in &self.slots {
+                let mut open = slot.lock().unwrap();
+                open.take();
+            }
+            parked = self.cv.wait(parked).unwrap();
+        }
+    }
+"#);
+        assert!(by(&a, "lock-order").is_empty(), "{:?}", a.findings);
+        assert!(by(&a, "condvar").is_empty(), "{:?}", a.findings);
+        assert!(
+            a.edges.iter().any(|e| e.held.label() == "signal" && e.acquired.label() == "slots"),
+            "expected signal -> slots edge in {:?}",
+            a.edges
+        );
+    }
+
+    #[test]
+    fn statement_temporaries_and_drop_release_the_guard() {
+        let a = dso(r#"
+    fn temp(&self) {
+        // lint: allow(panic) test scaffold
+        let leftover = self.slots.get(&0).unwrap().lock().unwrap().take();
+        let _parked = self.signal.lock().unwrap();
+        let _ = leftover;
+    }
+    fn dropped(&self) {
+        // lint: allow(panic) test scaffold
+        let open = self.slots.get(&0).unwrap().lock().unwrap();
+        drop(open);
+        let _parked = self.signal.lock().unwrap();
+    }
+"#);
+        assert!(by(&a, "lock-order").is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn inversion_through_a_callee_is_caught() {
+        let a = dso(r#"
+    fn outer(&self) {
+        // lint: allow(panic) test scaffold
+        let _open = self.slots.get(&0).unwrap().lock().unwrap();
+        self.poke();
+    }
+    fn poke(&self) {
+        // lint: allow(panic) test scaffold
+        let _g = self.signal.lock().unwrap();
+    }
+"#);
+        let f = by(&a, "lock-order");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert!(f[0].detail.contains("via `poke()`"), "{}", f[0].detail);
+    }
+
+    // ---- checker 2: condvar discipline ----
+
+    #[test]
+    fn seeded_if_guarded_wait_is_caught() {
+        let a = run(&[("src/x.rs", r#"
+use std::sync::{Condvar, Mutex};
+struct W { m: Mutex<bool>, cv: Condvar }
+impl W {
+    fn bad(&self) {
+        let mut g = self.m.lock().unwrap();
+        if !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+        let _ = g;
+    }
+}
+"#)]);
+        let f = by(&a, "condvar");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert!(f[0].detail.contains("outside a `while`/`loop`"), "{}", f[0].detail);
+    }
+
+    #[test]
+    fn while_and_loop_guarded_waits_are_accepted() {
+        let a = run(&[("src/x.rs", r#"
+use std::sync::{Condvar, Mutex};
+struct W { m: Mutex<bool>, cv: Condvar }
+impl W {
+    fn good_while(&self) {
+        let mut g = self.m.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+    fn good_loop(&self) {
+        let mut g = self.m.lock().unwrap();
+        loop {
+            match 1 {
+                _ => { g = self.cv.wait(g).unwrap(); }
+            }
+        }
+    }
+}
+"#)]);
+        assert!(by(&a, "condvar").is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn closure_is_a_loop_barrier_and_barrier_wait_is_ignored() {
+        let a = run(&[("src/x.rs", r#"
+use std::sync::{Barrier, Condvar, Mutex};
+struct W { m: Mutex<bool>, cv: Condvar }
+impl W {
+    fn closure_bad(&self) {
+        loop {
+            let f = || {
+                let g = self.m.lock().unwrap();
+                let _g = self.cv.wait(g).unwrap();
+            };
+            f();
+        }
+    }
+    fn barrier_ok(&self, b: &Barrier) {
+        b.wait();
+    }
+}
+"#)]);
+        let f = by(&a, "condvar");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert_eq!(f[0].function, "closure_bad");
+    }
+
+    // ---- checker 3: no-alloc hot path ----
+
+    #[test]
+    fn seeded_allocation_under_no_alloc_is_caught() {
+        let a = run(&[("src/x.rs", r#"
+impl H {
+    // lint: no_alloc
+    fn hot(&self) -> usize {
+        let v: Vec<u8> = Vec::new();
+        v.len()
+    }
+    // lint: no_alloc
+    fn hot_macro(&self) -> usize {
+        vec![1u8].len()
+    }
+}
+"#)]);
+        let f = by(&a, "no-alloc");
+        assert_eq!(f.len(), 2, "{:?}", a.findings);
+        assert!(f[0].detail.contains("Vec::new"), "{}", f[0].detail);
+        assert!(f[1].detail.contains("vec!"), "{}", f[1].detail);
+    }
+
+    #[test]
+    fn allocation_via_same_crate_callee_is_caught() {
+        let a = run(&[("src/x.rs", r#"
+impl H {
+    // lint: no_alloc
+    fn hot(&self) -> String {
+        self.helper()
+    }
+    fn helper(&self) -> String {
+        format!("x")
+    }
+}
+"#)]);
+        let f = by(&a, "no-alloc");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert!(f[0].detail.contains("helper"), "{}", f[0].detail);
+        assert!(f[0].detail.contains("format!"), "{}", f[0].detail);
+    }
+
+    #[test]
+    fn alloc_free_annotated_fn_and_unannotated_allocs_are_accepted() {
+        let a = run(&[("src/x.rs", r#"
+impl H {
+    // lint: no_alloc
+    fn cold(&self, x: u64) -> u64 {
+        x.wrapping_mul(3) + 1
+    }
+    fn free_to_alloc(&self) -> Vec<u8> {
+        vec![1, 2, 3]
+    }
+}
+"#)]);
+        assert!(by(&a, "no-alloc").is_empty(), "{:?}", a.findings);
+    }
+
+    // ---- checker 4: panic policy ----
+
+    #[test]
+    fn seeded_untagged_unwrap_in_dso_is_caught() {
+        let a = run(&[("src/dso/x.rs", r#"
+impl T {
+    fn bad(&self) -> u8 {
+        self.v.lock().unwrap()
+    }
+}
+"#)]);
+        let f = by(&a, "panic");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert!(f[0].detail.contains("into_inner"), "{}", f[0].detail);
+    }
+
+    #[test]
+    fn tagged_poison_tolerant_and_non_policy_panics_are_accepted() {
+        let a = run(&[
+            ("src/dso/x.rs", r#"
+impl T {
+    fn tagged(&self) -> u8 {
+        // lint: allow(panic) startup-only path, poisoning is fatal by design
+        self.v.lock().unwrap()
+    }
+    fn poison_ok(&self) -> u8 {
+        *self.v.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+"#),
+            ("src/util/x.rs", r#"
+fn free_to_unwrap(v: Option<u8>) -> u8 {
+    v.unwrap()
+}
+"#),
+        ]);
+        assert!(by(&a, "panic").is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn panic_macros_require_tags_too() {
+        let a = run(&[("src/server/x.rs", r#"
+fn bad(x: u8) {
+    if x > 3 {
+        unreachable!();
+    }
+}
+fn tagged(x: u8) {
+    if x > 3 {
+        panic!("boom"); // lint: allow(panic) config validated at startup
+    }
+}
+"#)]);
+        let f = by(&a, "panic");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert!(f[0].detail.contains("unreachable!"), "{}", f[0].detail);
+    }
+
+    // ---- checker 5: unsafe hygiene ----
+
+    #[test]
+    fn seeded_uncommented_unsafe_is_caught() {
+        let a = run(&[("src/x.rs", r#"
+fn ok(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p points at a live byte
+    unsafe { *p }
+}
+fn bad(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+"#)]);
+        let f = by(&a, "unsafe");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert_eq!(f[0].function, "bad");
+    }
+
+    #[test]
+    fn unsafe_in_test_code_is_still_checked_but_other_checkers_skip_tests() {
+        let a = run(&[("tests/t.rs", r#"
+use std::sync::{Condvar, Mutex};
+struct W { m: Mutex<bool>, cv: Condvar }
+fn helper(w: &W) {
+    let g = w.m.lock().unwrap();
+    if !*g {
+        let _g = w.cv.wait(g).unwrap();
+    }
+    unsafe { std::hint::unreachable_unchecked() }
+}
+"#)]);
+        assert_eq!(by(&a, "unsafe").len(), 1, "{:?}", a.findings);
+        assert!(by(&a, "condvar").is_empty(), "{:?}", a.findings);
+        assert!(by(&a, "panic").is_empty(), "{:?}", a.findings);
+    }
+
+    // ---- fingerprints ----
+
+    #[test]
+    fn fingerprints_are_line_stable() {
+        let before = run(&[("src/dso/x.rs", r#"
+fn bad(v: &std::sync::Mutex<u8>) -> u8 {
+    *v.lock().unwrap()
+}
+"#)]);
+        let after = run(&[("src/dso/x.rs", r#"
+// a new comment shifting everything down
+// by a couple of lines
+fn bad(v: &std::sync::Mutex<u8>) -> u8 {
+    *v.lock().unwrap()
+}
+"#)]);
+        let fp = |a: &Analysis| -> Vec<String> {
+            a.findings.iter().map(|f| f.fingerprint()).collect()
+        };
+        assert!(!before.findings.is_empty());
+        assert_eq!(fp(&before), fp(&after));
+        assert_ne!(before.findings[0].line, after.findings[0].line);
+    }
+}

@@ -1,0 +1,383 @@
+//! Hand-rolled Rust lexer for the `flame lint` analyzer.
+//!
+//! Dependency-free by design (ROADMAP: no toolchain beyond rustc in the
+//! build container, and no registry access for syn/proc-macro2), so the
+//! checkers work from a flat token stream instead of a real AST. The
+//! lexer's one job is to never desync: string and comment contents must
+//! not leak braces/keywords into the token stream, or every downstream
+//! scope computation is garbage. Hence explicit handling for raw strings
+//! (`r#"..."#`), byte strings, nested block comments, and the `'a`
+//! lifetime vs `'x'` char-literal ambiguity.
+
+/// Token classes. The checkers only ever look at `Ident`, `Punct` and
+/// `Comment`; the rest exist so their *contents* are kept out of those.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Lifetime,
+    Char,
+    Str,
+    Num,
+    Punct,
+    Comment,
+}
+
+/// One token with its (1-based) starting line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// Lex a whole source file. Unterminated constructs consume the rest of
+/// the input rather than erroring: the linter must degrade gracefully on
+/// code rustc itself would reject.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.push(Tok { kind: Kind::Comment, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        // block comment, nesting-aware
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.push(Tok {
+                kind: Kind::Comment,
+                text: b[start..i].iter().collect(),
+                line: start_line,
+            });
+            continue;
+        }
+        // identifier — possibly a raw/byte string prefix (r" r#" b" br" b')
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let word: String = b[start..i].iter().collect();
+            let next = if i < n { b[i] } else { '\0' };
+            let rawish = (word == "r" || word == "br") && (next == '"' || next == '#');
+            let bytestr = word == "b" && next == '"';
+            let bytechar = word == "b" && next == '\'';
+            if rawish && scan_raw_string(&b, &mut i, &mut line) {
+                out.push(Tok { kind: Kind::Str, text: String::new(), line });
+                continue;
+            }
+            if bytestr {
+                scan_string(&b, &mut i, &mut line);
+                out.push(Tok { kind: Kind::Str, text: String::new(), line });
+                continue;
+            }
+            if bytechar {
+                scan_char(&b, &mut i);
+                out.push(Tok { kind: Kind::Char, text: String::new(), line });
+                continue;
+            }
+            out.push(Tok { kind: Kind::Ident, text: word, line });
+            continue;
+        }
+        // plain string
+        if c == '"' {
+            scan_string(&b, &mut i, &mut line);
+            out.push(Tok { kind: Kind::Str, text: String::new(), line });
+            continue;
+        }
+        // lifetime vs char literal
+        if c == '\'' {
+            let p1 = if i + 1 < n { b[i + 1] } else { '\0' };
+            let p2 = if i + 2 < n { b[i + 2] } else { '\0' };
+            let ident_start = p1.is_alphabetic() || p1 == '_';
+            if ident_start && p2 != '\'' {
+                // `'a`, `'static`, `'_` — no closing quote follows
+                i += 1;
+                let start = i;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.push(Tok {
+                    kind: Kind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+            } else {
+                scan_char(&b, &mut i);
+                out.push(Tok { kind: Kind::Char, text: String::new(), line });
+            }
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            // one fractional part, but never eat `..` range syntax
+            if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+            }
+            out.push(Tok { kind: Kind::Num, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        out.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+/// Consume `"...."` starting at the opening quote; handles `\"` escapes.
+fn scan_string(b: &[char], i: &mut usize, line: &mut u32) {
+    debug_assert_eq!(b[*i], '"');
+    *i += 1;
+    while *i < b.len() {
+        match b[*i] {
+            '\\' => *i += 2,
+            '"' => {
+                *i += 1;
+                return;
+            }
+            '\n' => {
+                *line += 1;
+                *i += 1;
+            }
+            _ => *i += 1,
+        }
+    }
+}
+
+/// Consume a raw string body starting at `#` or `"` (the `r`/`br` prefix
+/// is already consumed). Returns false (without moving) if this is not
+/// actually a raw string — e.g. `r#enum` raw identifiers.
+fn scan_raw_string(b: &[char], i: &mut usize, line: &mut u32) -> bool {
+    let mut j = *i;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != '"' {
+        return false; // raw identifier like r#fn — leave `#` for the caller
+    }
+    j += 1;
+    // scan for `"` followed by `hashes` hashes
+    while j < b.len() {
+        if b[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == '"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < b.len() && b[k] == '#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                *i = k;
+                return true;
+            }
+        }
+        j += 1;
+    }
+    *i = j;
+    true
+}
+
+/// Consume `'x'`, `'\n'`, `'\u{7fff}'`, `'}'` starting at the quote.
+fn scan_char(b: &[char], i: &mut usize) {
+    debug_assert_eq!(b[*i], '\'');
+    *i += 1;
+    while *i < b.len() {
+        match b[*i] {
+            '\\' => *i += 2,
+            '\'' => {
+                *i += 1;
+                return;
+            }
+            _ => *i += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Net `{` minus `}` among Punct tokens — the quantity every scope
+    /// computation downstream depends on.
+    fn brace_balance(src: &str) -> i64 {
+        lex(src)
+            .iter()
+            .filter(|t| t.kind == Kind::Punct)
+            .map(|t| match t.text.as_str() {
+                "{" => 1,
+                "}" => -1,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn raw_strings_hide_braces_and_quotes() {
+        let src = r##"fn f() { let s = r#"{"x": "}"}"#; }"##;
+        assert_eq!(brace_balance(src), 0);
+        // nothing inside the raw string becomes an ident
+        assert_eq!(idents(src), vec!["fn", "f", "let", "s", "r"]);
+    }
+
+    #[test]
+    fn raw_string_multi_hash() {
+        let src = "fn f() { let s = r##\"one \"# two {{\"##; }";
+        assert_eq!(brace_balance(src), 0);
+    }
+
+    #[test]
+    fn raw_identifiers_are_not_strings() {
+        // r#fn is a raw identifier, not a raw string opener
+        let src = "fn f() { let r#fn = 1; let x = r#fn; }";
+        assert_eq!(brace_balance(src), 0);
+        assert!(idents(src).iter().any(|w| w == "fn"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "fn f() { /* outer { /* inner } */ still } comment */ let x = 1; }";
+        assert_eq!(brace_balance(src), 0);
+        assert_eq!(idents(src), vec!["fn", "f", "let", "x"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src =
+            "fn f<'a>(x: &'a str) { let c = 'x'; let b = '{'; let nl = '\\n'; let q = '\\''; }";
+        assert_eq!(brace_balance(src), 0);
+        let toks = lex(src);
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Lifetime).count(), 2);
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Char).count(), 4);
+    }
+
+    #[test]
+    fn static_lifetime_and_placeholder() {
+        let src = "fn f(x: &'static str, y: &'_ u8) {}";
+        let toks = lex(src);
+        let lts: Vec<_> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lts, vec!["static", "_"]);
+        assert_eq!(brace_balance(src), 0);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let src = "fn f() { let a = b\"{ not a brace }\"; let b2 = b'{'; let c = br#\"} }\"#; }";
+        assert_eq!(brace_balance(src), 0);
+    }
+
+    #[test]
+    fn macro_bodies_with_braces() {
+        let src =
+            "fn f() { let v = vec![{ 1 }, { 2 }]; assert!(matches!(v.len(), 2), \"{}\", 2); }";
+        assert_eq!(brace_balance(src), 0);
+    }
+
+    #[test]
+    fn format_strings_with_braces() {
+        let src = "fn f(n: usize) { let s = format!(\"{{literal}} {n}\"); }";
+        assert_eq!(brace_balance(src), 0);
+        assert!(idents(src).iter().all(|w| w != "literal"));
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let src = "fn f() { let s = \"a \\\" b { \"; }";
+        assert_eq!(brace_balance(src), 0);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "fn a() {}\n/* c1\n c2 */\nfn b() {}\nlet s = \"x\ny\";\nfn c() {}";
+        let toks = lex(src);
+        let line_of = |name: &str| {
+            toks.iter()
+                .find(|t| t.kind == Kind::Ident && t.text == name)
+                .map(|t| t.line)
+                .unwrap_or(0)
+        };
+        assert_eq!(line_of("a"), 1);
+        assert_eq!(line_of("b"), 4);
+        assert_eq!(line_of("c"), 6);
+    }
+
+    #[test]
+    fn range_syntax_not_eaten_by_numbers() {
+        let src = "fn f() { for i in 0..10 { let _ = i; } }";
+        assert_eq!(brace_balance(src), 0);
+        let nums: Vec<_> = lex(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Num)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(nums, vec!["0", "10"]);
+    }
+
+    #[test]
+    fn floats_lex_as_one_number() {
+        let src = "fn f() { let x = 1.5; let y = 2.0e3; }";
+        let nums: Vec<_> = lex(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Num)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(nums, vec!["1.5", "2.0e3"]);
+    }
+}

@@ -1,0 +1,170 @@
+//! `flame lint` — a self-hosted concurrency-invariant and hot-path
+//! analyzer for this crate's own sources.
+//!
+//! The serving path's throughput rests on hand-rolled concurrency: the
+//! DSO coalescer's slot locks with a documented acquisition order, the
+//! condvar-parked flusher threads, the PDA fetch coalescer's sharded
+//! single-flight tables, and the zero-allocation tracing hot path.
+//! Those invariants used to live only in module doc comments and one
+//! runtime allocator test; this module turns them into machine-checked
+//! facts that run anywhere — it is dependency-free (hand-rolled lexer,
+//! token-level checkers, `std` only) precisely so the check works in
+//! build environments without a full toolchain-adjacent ecosystem.
+//!
+//! Pipeline: [`lexer`] tokenizes each file (raw strings, nested block
+//! comments, char-vs-lifetime disambiguation), [`source`] builds a
+//! per-crate model (functions, test regions, `Mutex`/`Condvar` fields,
+//! annotations), and [`checkers`] runs five invariant checks over it:
+//! lock-order, condvar discipline, `// lint: no_alloc` hot paths, the
+//! panic policy for hot-path directories, and `// SAFETY:` hygiene for
+//! `unsafe`.
+//!
+//! ## Soundness stance
+//!
+//! This is a reviewer that never sleeps, not a verifier. The analysis
+//! is intentionally approximate: guards are tracked by the idioms this
+//! codebase actually uses (`let g = x.lock().unwrap();`, `drop(g)`,
+//! statement-scoped temporaries), and calls resolve only when
+//! unambiguous. Constructs it cannot follow are skipped rather than
+//! guessed at, so a finding is near-certainly real — which is what
+//! lets CI fail hard on any non-baselined finding — while exotic code
+//! could in principle evade it. Keep the invariants enforced here in
+//! sync with the module docs they came from.
+//!
+//! ## Baselines
+//!
+//! Findings are identified by a line-number-free fingerprint
+//! (`checker|file|function|detail`). A committed baseline file lists
+//! fingerprints that are accepted (ideally none — fix findings instead
+//! of grandfathering them); `flame lint --write-baseline` regenerates
+//! it, and `flame lint` exits nonzero when any finding is not
+//! baselined.
+
+pub mod checkers;
+pub mod lexer;
+pub mod source;
+
+pub use checkers::{check, Analysis, Finding, LockEdge};
+pub use source::{build_model, Model};
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Collect `(relative path, contents)` for every `.rs` file under
+/// `root/src` and `root/tests`, deterministically ordered. `vendor/`
+/// and `target/` never participate.
+pub fn scan_root(root: &Path) -> io::Result<Vec<(String, String)>> {
+    let mut files = Vec::new();
+    for sub in ["src", "tests"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut out = Vec::with_capacity(files.len());
+    for p in files {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.push((rel, fs::read_to_string(&p)?));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name != "vendor" && name != "target" {
+                collect_rs(&path, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Parse a baseline file's contents into the set of accepted
+/// fingerprints. `#`-prefixed lines are comments.
+pub fn parse_baseline(text: &str) -> BTreeSet<String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+/// Render findings as baseline file contents (sorted, deduplicated).
+pub fn format_baseline(findings: &[Finding]) -> String {
+    let mut fps: Vec<String> = findings.iter().map(Finding::fingerprint).collect();
+    fps.sort();
+    fps.dedup();
+    let mut out = String::from(
+        "# flame lint baseline — accepted finding fingerprints, one per line.\n\
+         # Regenerate with `flame lint --write-baseline`; prefer fixing findings\n\
+         # over listing them here.\n",
+    );
+    for fp in fps {
+        out.push_str(&fp);
+        out.push('\n');
+    }
+    out
+}
+
+/// Split findings into (baselined, fresh) against an accepted set.
+pub fn apply_baseline(
+    analysis: &Analysis,
+    accepted: &BTreeSet<String>,
+) -> (Vec<Finding>, Vec<Finding>) {
+    analysis
+        .findings
+        .iter()
+        .cloned()
+        .partition(|f| accepted.contains(&f.fingerprint()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_roundtrip() {
+        let f = Finding {
+            checker: "panic",
+            file: "src/dso/x.rs".to_string(),
+            line: 7,
+            function: "bad".to_string(),
+            detail: "untagged `.unwrap()`".to_string(),
+        };
+        let text = format_baseline(std::slice::from_ref(&f));
+        let set = parse_baseline(&text);
+        assert!(set.contains(&f.fingerprint()));
+        assert_eq!(set.len(), 1, "comment lines must not parse as fingerprints");
+    }
+
+    #[test]
+    fn apply_baseline_partitions() {
+        let mk = |func: &str| Finding {
+            checker: "panic",
+            file: "src/dso/x.rs".to_string(),
+            line: 1,
+            function: func.to_string(),
+            detail: "d".to_string(),
+        };
+        let a = Analysis { findings: vec![mk("one"), mk("two")], edges: Vec::new() };
+        let accepted: BTreeSet<String> = [mk("one").fingerprint()].into_iter().collect();
+        let (old, fresh) = apply_baseline(&a, &accepted);
+        assert_eq!(old.len(), 1);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].function, "two");
+    }
+}

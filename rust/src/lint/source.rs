@@ -1,0 +1,605 @@
+//! Token-stream → source model for the lint checkers.
+//!
+//! Extracts, per file: function items (with body spans, test-ness, and
+//! `// lint:` annotations), `Mutex`-typed fields (the lock classes the
+//! lock-order checker reasons about), `Condvar`-typed field names (so
+//! the condvar checker only fires on real condvars, not every method
+//! called `wait`), and `#[cfg(test)]` / `#[test]` regions.
+//!
+//! Everything here is approximate on purpose — see the module docs in
+//! `lint/mod.rs` for the soundness stance.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, Kind, Tok};
+
+/// A named lock class: the `Mutex`-typed field (or static) `field`
+/// declared in `file`. Locks are classified by *declaration site*, so
+/// every element of `slots: BTreeMap<usize, Mutex<..>>` shares one class
+/// — exactly the granularity the documented lock orders use.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LockClass {
+    Field { file: String, field: String },
+    Other { name: String },
+}
+
+impl LockClass {
+    pub fn label(&self) -> String {
+        match self {
+            LockClass::Field { field, .. } => field.clone(),
+            LockClass::Other { name } => format!("?{name}"),
+        }
+    }
+}
+
+/// One `fn` item.
+#[derive(Clone, Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// Token index of the `fn` keyword.
+    pub kw: usize,
+    /// Token indices of the body `{` and its matching `}`.
+    pub body: (usize, usize),
+    pub line: u32,
+    pub is_test: bool,
+    /// Carries a `// lint: no_alloc` annotation.
+    pub no_alloc: bool,
+}
+
+/// One lexed + indexed source file.
+pub struct SourceFile {
+    /// Normalized path with forward slashes, e.g. `src/dso/coalescer.rs`.
+    pub path: String,
+    pub toks: Vec<Tok>,
+    /// For each `{` token index, the index of its matching `}`.
+    pub brace_match: BTreeMap<usize, usize>,
+    /// Token-index ranges covered by `#[cfg(test)]` / `#[test]` items.
+    pub test_ranges: Vec<(usize, usize)>,
+    /// Whole file is test code (lives under a `tests/` root).
+    pub integration_test: bool,
+    pub fns: Vec<FnItem>,
+    /// Lines that carry comments, with the comment text (block comments
+    /// contribute one entry per line they span).
+    pub comment_lines: BTreeMap<u32, String>,
+}
+
+impl SourceFile {
+    /// Next non-comment token index at or after `i`.
+    pub fn nc(&self, mut i: usize) -> Option<usize> {
+        while i < self.toks.len() {
+            if self.toks[i].kind != Kind::Comment {
+                return Some(i);
+            }
+            i += 1;
+        }
+        None
+    }
+
+    /// Previous non-comment token index at or before `i`.
+    pub fn pc(&self, mut i: usize) -> Option<usize> {
+        loop {
+            if self.toks[i].kind != Kind::Comment {
+                return Some(i);
+            }
+            if i == 0 {
+                return None;
+            }
+            i -= 1;
+        }
+    }
+
+    pub fn is_ident(&self, i: usize, word: &str) -> bool {
+        self.toks[i].kind == Kind::Ident && self.toks[i].text == word
+    }
+
+    pub fn is_punct(&self, i: usize, p: &str) -> bool {
+        self.toks[i].kind == Kind::Punct && self.toks[i].text == p
+    }
+
+    pub fn in_test_region(&self, i: usize) -> bool {
+        self.integration_test || self.test_ranges.iter().any(|&(a, b)| a <= i && i <= b)
+    }
+
+    /// True if a comment containing `needle` sits on `line` or up to
+    /// `span` lines above it. This is the tag-attachment rule for
+    /// `// lint: allow(panic)` and `// SAFETY:` comments.
+    pub fn comment_near(&self, line: u32, span: u32, needle: &str) -> bool {
+        let lo = line.saturating_sub(span);
+        self.comment_lines
+            .range(lo..=line)
+            .any(|(_, text)| text.contains(needle))
+    }
+}
+
+/// The whole crate, as far as the checkers care.
+pub struct Model {
+    pub files: Vec<SourceFile>,
+    /// (file path, field name) of every `Mutex`-typed field/static.
+    pub lock_fields: BTreeSet<(String, String)>,
+    /// Names of `Condvar`-typed fields/statics, crate-wide.
+    pub condvar_names: BTreeSet<String>,
+    /// fn name → (file index, fn index), non-test fns only — the
+    /// resolution table for the approximate call graph.
+    pub fn_index: BTreeMap<String, Vec<(usize, usize)>>,
+}
+
+/// Build the model from `(path, source)` pairs.
+pub fn build_model(sources: &[(String, String)]) -> Model {
+    let mut files = Vec::with_capacity(sources.len());
+    let mut lock_fields = BTreeSet::new();
+    let mut condvar_names = BTreeSet::new();
+    for (path, src) in sources {
+        let path = path.replace('\\', "/");
+        let toks = lex(src);
+        let brace_match = match_braces(&toks);
+        let comment_lines = index_comments(&toks);
+        let integration_test = path.contains("tests/");
+        let test_ranges = find_test_ranges(&toks, &brace_match);
+        let mut sf = SourceFile {
+            path: path.clone(),
+            toks,
+            brace_match,
+            test_ranges,
+            integration_test,
+            fns: Vec::new(),
+            comment_lines,
+        };
+        sf.fns = find_fns(&sf);
+        harvest_sync_fields(&sf, &mut lock_fields, &mut condvar_names);
+        files.push(sf);
+    }
+    let mut fn_index: BTreeMap<String, Vec<(usize, usize)>> = BTreeMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (ni, item) in f.fns.iter().enumerate() {
+            if !item.is_test && !f.in_test_region(item.kw) {
+                fn_index.entry(item.name.clone()).or_default().push((fi, ni));
+            }
+        }
+    }
+    Model { files, lock_fields, condvar_names, fn_index }
+}
+
+/// Map each `{` to its matching `}` (a single stack pass — the lexer
+/// guarantees braces inside strings/comments never reach us).
+fn match_braces(toks: &[Tok]) -> BTreeMap<usize, usize> {
+    let mut map = BTreeMap::new();
+    let mut stack = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == Kind::Punct {
+            match t.text.as_str() {
+                "{" => stack.push(i),
+                "}" => {
+                    if let Some(open) = stack.pop() {
+                        map.insert(open, i);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    map
+}
+
+/// Per-line comment text (block comments spread over their line span).
+fn index_comments(toks: &[Tok]) -> BTreeMap<u32, String> {
+    let mut map: BTreeMap<u32, String> = BTreeMap::new();
+    for t in toks {
+        if t.kind != Kind::Comment {
+            continue;
+        }
+        for (off, seg) in t.text.split('\n').enumerate() {
+            let entry = map.entry(t.line + off as u32).or_default();
+            entry.push_str(seg);
+            entry.push(' ');
+        }
+    }
+    map
+}
+
+/// Find `#[cfg(test)]` / `#[test]`-attributed items and return their
+/// token ranges (attribute through closing brace).
+fn find_test_ranges(toks: &[Tok], brace_match: &BTreeMap<usize, usize>) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        let is_attr = toks[i].kind == Kind::Punct
+            && toks[i].text == "#"
+            && toks[i + 1].kind == Kind::Punct
+            && toks[i + 1].text == "[";
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        // scan attribute content to the matching `]`
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut has_test = false;
+        while j < toks.len() && depth > 0 {
+            if toks[j].kind == Kind::Punct {
+                match toks[j].text.as_str() {
+                    "[" => depth += 1,
+                    "]" => depth -= 1,
+                    _ => {}
+                }
+            } else if toks[j].kind == Kind::Ident && toks[j].text == "test" {
+                has_test = true;
+            }
+            j += 1;
+        }
+        if !has_test {
+            i = j;
+            continue;
+        }
+        // item body: first `{` before a top-level `;`
+        let start = i;
+        let mut k = j;
+        let mut pdepth = 0i64;
+        while k < toks.len() {
+            if toks[k].kind == Kind::Punct {
+                match toks[k].text.as_str() {
+                    "(" | "[" => pdepth += 1,
+                    ")" | "]" => pdepth -= 1,
+                    "{" if pdepth == 0 => {
+                        if let Some(&close) = brace_match.get(&k) {
+                            out.push((start, close));
+                            k = close;
+                        }
+                        break;
+                    }
+                    ";" if pdepth == 0 => break, // e.g. `#[cfg(test)] mod t;`
+                    _ => {}
+                }
+            }
+            k += 1;
+        }
+        i = k + 1;
+    }
+    out
+}
+
+/// Find `fn` items and their bodies. Nested fns are reported separately
+/// AND covered by the enclosing fn's span — checkers that walk a body
+/// will attribute inner-fn tokens to both, which only ever errs toward
+/// reporting, never suppressing.
+fn find_fns(sf: &SourceFile) -> Vec<FnItem> {
+    let mut out = Vec::new();
+    let toks = &sf.toks;
+    for kw in 0..toks.len() {
+        if !sf.is_ident(kw, "fn") {
+            continue;
+        }
+        let Some(ni) = sf.nc(kw + 1) else { continue };
+        if toks[ni].kind != Kind::Ident {
+            continue; // `fn()` pointer type, `Fn` bounds never hit this arm
+        }
+        let name = toks[ni].text.clone();
+        // body opens at the first `{` at ()/[] depth 0; a `;` first means
+        // a bodyless decl (trait method, extern fn) — skip those.
+        let mut k = ni + 1;
+        let mut pdepth = 0i64;
+        let mut body = None;
+        while k < toks.len() {
+            if toks[k].kind == Kind::Punct {
+                match toks[k].text.as_str() {
+                    "(" | "[" => pdepth += 1,
+                    ")" | "]" => pdepth -= 1,
+                    "{" if pdepth == 0 => {
+                        if let Some(&close) = sf.brace_match.get(&k) {
+                            body = Some((k, close));
+                        }
+                        break;
+                    }
+                    ";" if pdepth == 0 => break,
+                    _ => {}
+                }
+            }
+            k += 1;
+        }
+        let Some(body) = body else { continue };
+        let (is_test_attr, no_alloc) = fn_annotations(sf, kw);
+        out.push(FnItem {
+            name,
+            kw,
+            body,
+            line: toks[kw].line,
+            is_test: is_test_attr || sf.in_test_region(kw),
+            no_alloc,
+        });
+    }
+    out
+}
+
+/// Walk back from the `fn` keyword over qualifiers, attributes and
+/// comments; collect `#[test]`-ness and `// lint:` annotations.
+fn fn_annotations(sf: &SourceFile, kw: usize) -> (bool, bool) {
+    const QUALIFIERS: &[&str] =
+        &["pub", "crate", "in", "const", "async", "unsafe", "extern", "super", "self", "default"];
+    let toks = &sf.toks;
+    let mut is_test = false;
+    let mut no_alloc = false;
+    let mut i = kw;
+    while i > 0 {
+        i -= 1;
+        let t = &toks[i];
+        match t.kind {
+            Kind::Comment => {
+                if t.text.contains("lint: no_alloc") {
+                    no_alloc = true;
+                }
+            }
+            Kind::Str => {} // extern "C"
+            Kind::Punct if t.text == "]" => {
+                // attribute: walk back to the `#[`
+                let mut depth = 1i64;
+                let mut saw_test = false;
+                while i > 0 && depth > 0 {
+                    i -= 1;
+                    match toks[i].kind {
+                        Kind::Punct if toks[i].text == "]" => depth += 1,
+                        Kind::Punct if toks[i].text == "[" => depth -= 1,
+                        Kind::Ident if toks[i].text == "test" => saw_test = true,
+                        _ => {}
+                    }
+                }
+                if i > 0 && sf.is_punct(i - 1, "#") {
+                    i -= 1;
+                }
+                is_test |= saw_test;
+            }
+            Kind::Punct if t.text == ")" => {
+                // `pub(crate)` — walk back over the parens
+                let mut depth = 1i64;
+                while i > 0 && depth > 0 {
+                    i -= 1;
+                    match toks[i].kind {
+                        Kind::Punct if toks[i].text == ")" => depth += 1,
+                        Kind::Punct if toks[i].text == "(" => depth -= 1,
+                        _ => {}
+                    }
+                }
+            }
+            Kind::Ident if QUALIFIERS.contains(&t.text.as_str()) => {}
+            _ => break,
+        }
+    }
+    (is_test, no_alloc)
+}
+
+/// Harvest `Mutex`- and `Condvar`-typed struct fields and statics.
+fn harvest_sync_fields(
+    sf: &SourceFile,
+    lock_fields: &mut BTreeSet<(String, String)>,
+    condvar_names: &mut BTreeSet<String>,
+) {
+    let toks = &sf.toks;
+    // struct fields
+    for i in 0..toks.len() {
+        if !sf.is_ident(i, "struct") {
+            continue;
+        }
+        let Some(ni) = sf.nc(i + 1) else { continue };
+        if toks[ni].kind != Kind::Ident {
+            continue;
+        }
+        // find the body `{` (skip tuple/unit structs)
+        let mut k = ni + 1;
+        let mut body = None;
+        while k < toks.len() {
+            if toks[k].kind == Kind::Punct {
+                match toks[k].text.as_str() {
+                    "{" => {
+                        body = sf.brace_match.get(&k).map(|&c| (k, c));
+                        break;
+                    }
+                    ";" | "(" => break,
+                    _ => {}
+                }
+            }
+            k += 1;
+        }
+        let Some((open, close)) = body else { continue };
+        harvest_fields_in(sf, open + 1, close, lock_fields, condvar_names);
+    }
+    // statics: `static NAME: <type> =`
+    for i in 0..toks.len() {
+        if !sf.is_ident(i, "static") {
+            continue;
+        }
+        let Some(mut ni) = sf.nc(i + 1) else { continue };
+        if sf.is_ident(ni, "mut") {
+            ni = match sf.nc(ni + 1) {
+                Some(x) => x,
+                None => continue,
+            };
+        }
+        if toks[ni].kind != Kind::Ident {
+            continue;
+        }
+        let name = toks[ni].text.clone();
+        let Some(colon) = sf.nc(ni + 1) else { continue };
+        if !sf.is_punct(colon, ":") {
+            continue;
+        }
+        let mut k = colon + 1;
+        while k < toks.len() && !sf.is_punct(k, "=") && !sf.is_punct(k, ";") {
+            if sf.is_ident(k, "Mutex") {
+                lock_fields.insert((sf.path.clone(), name.clone()));
+            }
+            if sf.is_ident(k, "Condvar") {
+                condvar_names.insert(name.clone());
+            }
+            k += 1;
+        }
+    }
+}
+
+/// Parse `name: Type,` fields between `from..to` (a struct body).
+fn harvest_fields_in(
+    sf: &SourceFile,
+    from: usize,
+    to: usize,
+    lock_fields: &mut BTreeSet<(String, String)>,
+    condvar_names: &mut BTreeSet<String>,
+) {
+    let toks = &sf.toks;
+    let mut i = from;
+    while i < to {
+        // skip comments and attributes
+        if toks[i].kind == Kind::Comment {
+            i += 1;
+            continue;
+        }
+        if sf.is_punct(i, "#") {
+            // skip `#[...]`
+            let mut depth = 0i64;
+            i += 1;
+            while i < to {
+                if sf.is_punct(i, "[") {
+                    depth += 1;
+                } else if sf.is_punct(i, "]") {
+                    depth -= 1;
+                    if depth == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                i += 1;
+            }
+            continue;
+        }
+        if sf.is_ident(i, "pub") {
+            i += 1;
+            if i < to && sf.is_punct(i, "(") {
+                let mut depth = 1i64;
+                i += 1;
+                while i < to && depth > 0 {
+                    if sf.is_punct(i, "(") {
+                        depth += 1;
+                    } else if sf.is_punct(i, ")") {
+                        depth -= 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // expect `name :`
+        if toks[i].kind == Kind::Ident && i + 1 < to && sf.is_punct(i + 1, ":") {
+            let fname = toks[i].text.clone();
+            // consume the type up to a `,` at bracket depth 0
+            let mut k = i + 2;
+            let mut depth = 0i64;
+            let mut angle = 0i64;
+            while k < to {
+                if toks[k].kind == Kind::Punct {
+                    match toks[k].text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" | "}" => depth -= 1,
+                        "<" => angle += 1,
+                        ">" if angle > 0 => angle -= 1,
+                        "," if depth == 0 && angle == 0 => break,
+                        _ => {}
+                    }
+                } else if toks[k].kind == Kind::Ident {
+                    if toks[k].text == "Mutex" || toks[k].text == "RwLock" {
+                        lock_fields.insert((sf.path.clone(), fname.clone()));
+                    } else if toks[k].text == "Condvar" {
+                        condvar_names.insert(fname.clone());
+                    }
+                }
+                k += 1;
+            }
+            i = k + 1;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_of(src: &str) -> Model {
+        build_model(&[("src/x.rs".to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn fn_extraction_with_generics_and_where() {
+        let src = "
+impl Foo {
+    pub fn get<F>(&self, f: F) -> Option<u8> where F: FnMut(&u8) -> bool { None }
+}
+fn free(x: fn() -> u8) -> u8 { x() }
+trait T { fn decl(&self); }
+";
+        let m = model_of(src);
+        let names: Vec<_> = m.files[0].fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["get", "free"]);
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mod() {
+        let src = "
+fn live() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { assert!(true); }
+}
+";
+        let m = model_of(src);
+        let f = &m.files[0];
+        let live = f.fns.iter().find(|x| x.name == "live").unwrap();
+        let t = f.fns.iter().find(|x| x.name == "t").unwrap();
+        assert!(!live.is_test);
+        assert!(t.is_test);
+    }
+
+    #[test]
+    fn no_alloc_annotation_attaches_through_attrs() {
+        let src = "
+// hot path. lint: no_alloc
+#[inline]
+pub fn fast(&self) -> u64 { 0 }
+pub fn slow(&self) -> u64 { 0 }
+";
+        let m = model_of(src);
+        let f = &m.files[0];
+        assert!(f.fns.iter().find(|x| x.name == "fast").unwrap().no_alloc);
+        assert!(!f.fns.iter().find(|x| x.name == "slow").unwrap().no_alloc);
+    }
+
+    #[test]
+    fn sync_field_harvest() {
+        let src = "
+struct S {
+    pub slots: BTreeMap<usize, Mutex<Option<u8>>>,
+    signal: Mutex<()>,
+    cv: Condvar,
+    plain: usize,
+}
+static GLOBAL: Mutex<Vec<u8>> = Mutex::new(Vec::new());
+";
+        let m = model_of(src);
+        let has = |f: &str| m.lock_fields.contains(&("src/x.rs".to_string(), f.to_string()));
+        assert!(has("slots"));
+        assert!(has("signal"));
+        assert!(has("GLOBAL"));
+        assert!(!has("plain"));
+        assert!(!has("cv"));
+        assert!(m.condvar_names.contains("cv"));
+    }
+
+    #[test]
+    fn comment_near_window() {
+        let src = "
+// SAFETY: upheld because reasons
+fn f() {}
+";
+        let m = model_of(src);
+        let f = &m.files[0];
+        assert!(f.comment_near(3, 2, "SAFETY:"));
+        assert!(!f.comment_near(3, 0, "SAFETY:"));
+    }
+}

@@ -42,8 +42,78 @@ fn main() -> Result<()> {
         Some("bind") => cmd_bind(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("trace-check") => cmd_trace_check(&args),
+        Some("lint") => cmd_lint(&args),
         Some(other) => bail!("unknown command '{other}' — try `flame help`"),
     }
+}
+
+/// `flame lint` — run the self-hosted analyzer over this crate's own
+/// sources and fail on any non-baselined finding.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use std::path::{Path, PathBuf};
+
+    let root: PathBuf = match args.get("src") {
+        Some(dir) => PathBuf::from(dir),
+        // auto-detect: repo root (rust/src), crate root (src), or the
+        // build-time manifest dir as a last resort
+        None if Path::new("rust/src").is_dir() => PathBuf::from("rust"),
+        None if Path::new("src").is_dir() => PathBuf::from("."),
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+    };
+    let sources = flame::lint::scan_root(&root)
+        .with_context(|| format!("scanning {}", root.display()))?;
+    if sources.is_empty() {
+        bail!("no .rs sources under {} — pass --src DIR", root.display());
+    }
+    let analysis = flame::lint::check(&flame::lint::build_model(&sources));
+
+    if args.has("graph") {
+        println!("# inferred lock-acquisition graph (held -> acquired)");
+        for e in &analysis.edges {
+            println!("{}", e.render());
+        }
+        println!();
+    }
+
+    let baseline_path = match args.get("baseline") {
+        Some(p) => PathBuf::from(p),
+        None => root.join("lint_baseline.txt"),
+    };
+    if args.has("write-baseline") {
+        std::fs::write(&baseline_path, flame::lint::format_baseline(&analysis.findings))
+            .with_context(|| format!("writing {}", baseline_path.display()))?;
+        println!(
+            "wrote {} fingerprint(s) to {}",
+            analysis.findings.len(),
+            baseline_path.display()
+        );
+        return Ok(());
+    }
+    let accepted = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => flame::lint::parse_baseline(&text),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Default::default(),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", baseline_path.display())),
+    };
+    let (baselined, fresh) = flame::lint::apply_baseline(&analysis, &accepted);
+
+    for f in &fresh {
+        println!("{}", f.render());
+    }
+    println!(
+        "flame lint: {} file(s), {} finding(s) ({} baselined, {} new)",
+        sources.len(),
+        analysis.findings.len(),
+        baselined.len(),
+        fresh.len()
+    );
+    if !fresh.is_empty() {
+        bail!(
+            "{} non-baselined finding(s) — fix them, tag them per the checker's \
+             suggestion, or (rarely) `flame lint --write-baseline`",
+            fresh.len()
+        );
+    }
+    Ok(())
 }
 
 fn stack_config(args: &Args) -> Result<StackConfig> {

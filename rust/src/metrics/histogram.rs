@@ -70,6 +70,7 @@ impl Histogram {
 
     /// Record one value (thread-safe, wait-free).
     #[inline]
+    // lint: no_alloc — per-request hot path, must stay allocation-free
     pub fn record(&self, v: u64) {
         self.counts[Self::index(v)].fetch_add(1, Ordering::Relaxed);
         self.total.fetch_add(1, Ordering::Relaxed);

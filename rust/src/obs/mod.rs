@@ -443,11 +443,13 @@ pub fn thread_names() -> Vec<(u64, String)> {
 /// Mark the trace the calling thread is currently assembling for (0 =
 /// none). Deep shared paths (the fetch coalescer) read this instead of
 /// threading a context parameter through every signature.
+// lint: no_alloc — per-request hot path, must stay allocation-free
 pub fn set_current_trace(trace_id: u64) {
     CURRENT_TRACE.with(|c| c.set(trace_id));
 }
 
 /// Trace id the calling thread is currently working for (0 = none).
+// lint: no_alloc — per-request hot path, must stay allocation-free
 pub fn current_trace() -> u64 {
     CURRENT_TRACE.with(|c| c.get())
 }

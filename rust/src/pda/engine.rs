@@ -103,6 +103,7 @@ impl QueryEngine {
                 let handle = std::thread::Builder::new()
                     .name("pda-fetch-flush".into())
                     .spawn(move || runner.run_flusher())
+                    // lint: allow(panic) flusher spawn at startup is unrecoverable
                     .expect("spawn fetch flusher");
                 (Some(co), Some(handle))
             } else {
@@ -220,6 +221,7 @@ impl QueryEngine {
                 }
             }
         }
+        // lint: allow(panic) every slot was filled by the fetch loop above
         out.into_iter().map(|o| o.unwrap()).collect()
     }
 
@@ -245,12 +247,12 @@ impl QueryEngine {
             None => return,
         };
         {
-            let mut inflight = self.in_refresh.lock().unwrap();
+            let mut inflight = self.in_refresh.lock().unwrap_or_else(|e| e.into_inner());
             if !inflight.insert(id) {
                 return; // refresh already queued
             }
         }
-        self.pending.lock().unwrap().push(id);
+        self.pending.lock().unwrap_or_else(|e| e.into_inner()).push(id);
         self.schedule_drain(pool);
     }
 
@@ -269,14 +271,14 @@ impl QueryEngine {
         let errors = Arc::clone(&self.store_errors);
         pool.execute(move || loop {
             let batch: Vec<u64> = {
-                let mut p = pending.lock().unwrap();
+                let mut p = pending.lock().unwrap_or_else(|e| e.into_inner());
                 let take = p.len().min(REFRESH_BATCH);
                 p.drain(..take).collect()
             };
             if batch.is_empty() {
                 scheduled.store(false, Ordering::Release);
                 // re-check: an id may have landed between drain and store
-                if pending.lock().unwrap().is_empty()
+                if pending.lock().unwrap_or_else(|e| e.into_inner()).is_empty()
                     || scheduled.swap(true, Ordering::AcqRel)
                 {
                     return;
@@ -295,7 +297,7 @@ impl QueryEngine {
                     errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 }
             }
-            let mut g = inflight.lock().unwrap();
+            let mut g = inflight.lock().unwrap_or_else(|e| e.into_inner());
             for id in &batch {
                 g.remove(id);
             }

@@ -64,18 +64,18 @@ impl Ticket {
     }
 
     fn resolve(&self, value: Option<ItemFeatures>, span_id: u64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         *st = Some((value, span_id));
         self.cv.notify_all();
     }
 
     fn wait(&self) -> (Option<ItemFeatures>, u64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(v) = &*st {
                 return v.clone();
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -159,6 +159,7 @@ impl FetchCoalescer {
     }
 
     #[inline]
+    // lint: no_alloc — per-request hot path, must stay allocation-free
     fn shard_of(&self, id: u64) -> usize {
         (id.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 61) as usize & (FETCH_SHARDS - 1)
     }
@@ -177,7 +178,8 @@ impl FetchCoalescer {
         // one multiget deterministically
         let deadline = Instant::now() + self.wait;
         for &id in ids {
-            let mut shard = self.shards[self.shard_of(id)].lock().unwrap();
+            let mut shard =
+                self.shards[self.shard_of(id)].lock().unwrap_or_else(|e| e.into_inner());
             if let Some(t) = shard.inflight.get(&id) {
                 // rider: someone is already fetching this id
                 tickets.push(Arc::clone(t));
@@ -196,6 +198,7 @@ impl FetchCoalescer {
             });
             batch.ids.push(id);
             if batch.ids.len() >= FETCH_BATCH {
+                // lint: allow(panic) guarded: full==true proves open is Some
                 filled.push(shard.open.take().unwrap().ids);
             }
         }
@@ -203,7 +206,7 @@ impl FetchCoalescer {
             // a fresh batch sets a new earliest deadline; notify under
             // the signal mutex (never while a shard lock is held) so the
             // flusher cannot miss it between its scan and its wait
-            let _parked = self.signal.lock().unwrap();
+            let _parked = self.signal.lock().unwrap_or_else(|e| e.into_inner());
             self.cv.notify_all();
         }
         for ids in filled {
@@ -290,7 +293,8 @@ impl FetchCoalescer {
     }
 
     fn resolve(&self, id: u64, value: Option<ItemFeatures>, span_id: u64) {
-        let ticket = self.shards[self.shard_of(id)].lock().unwrap().inflight.remove(&id);
+        let shard = &self.shards[self.shard_of(id)];
+        let ticket = shard.lock().unwrap_or_else(|e| e.into_inner()).inflight.remove(&id);
         if let Some(t) = ticket {
             t.resolve(value, span_id);
         }
@@ -300,7 +304,7 @@ impl FetchCoalescer {
     /// parked on the condvar otherwise. Runs on a dedicated thread until
     /// [`FetchCoalescer::begin_shutdown`].
     pub(crate) fn run_flusher(&self) {
-        let mut parked = self.signal.lock().unwrap();
+        let mut parked = self.signal.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if self.shutdown.load(Ordering::Acquire) {
                 drop(parked);
@@ -322,16 +326,16 @@ impl FetchCoalescer {
                 };
                 drop(parked);
                 self.execute(&expired, merged);
-                parked = self.signal.lock().unwrap();
+                parked = self.signal.lock().unwrap_or_else(|e| e.into_inner());
                 continue;
             }
             let next = self.earliest_deadline();
             parked = match next {
-                None => self.cv.wait(parked).unwrap(),
+                None => self.cv.wait(parked).unwrap_or_else(|e| e.into_inner()),
                 Some(deadline) => {
                     self.cv
                         .wait_timeout(parked, deadline.saturating_duration_since(now))
-                        .unwrap()
+                        .unwrap_or_else(|e| e.into_inner())
                         .0
                 }
             };
@@ -345,8 +349,9 @@ impl FetchCoalescer {
     fn collect_expired(&self, cutoff: Instant) -> Vec<u64> {
         let mut ids = Vec::new();
         for shard in &self.shards {
-            let mut s = shard.lock().unwrap();
+            let mut s = shard.lock().unwrap_or_else(|e| e.into_inner());
             if s.open.as_ref().is_some_and(|b| b.deadline <= cutoff) {
+                // lint: allow(panic) guarded: the is_some_and check proves open is Some
                 ids.extend(s.open.take().unwrap().ids);
             }
         }
@@ -356,7 +361,7 @@ impl FetchCoalescer {
     fn earliest_deadline(&self) -> Option<Instant> {
         let mut next: Option<Instant> = None;
         for shard in &self.shards {
-            let s = shard.lock().unwrap();
+            let s = shard.lock().unwrap_or_else(|e| e.into_inner());
             if let Some(b) = &s.open {
                 next = Some(next.map_or(b.deadline, |n| n.min(b.deadline)));
             }
@@ -366,7 +371,7 @@ impl FetchCoalescer {
 
     /// Stop the flusher (it drains open batches on the way out).
     pub(crate) fn begin_shutdown(&self) {
-        let _parked = self.signal.lock().unwrap();
+        let _parked = self.signal.lock().unwrap_or_else(|e| e.into_inner());
         self.shutdown.store(true, Ordering::Release);
         self.cv.notify_all();
     }

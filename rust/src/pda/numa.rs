@@ -102,7 +102,9 @@ fn bad(part: &str) -> Error {
 
 /// Number of online CPUs.
 pub fn num_cpus() -> usize {
-    // sysconf is the portable answer without external crates
+    // sysconf is the portable answer without external crates.
+    // SAFETY: sysconf with a valid selector constant reads kernel state
+    // only; it has no pointer arguments or preconditions.
     let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
     if n < 1 {
         1
@@ -115,6 +117,11 @@ pub fn num_cpus() -> usize {
 /// if the kernel refuses (e.g. cpuset-restricted container); callers
 /// treat pinning as best-effort.
 pub fn pin_current_thread(cpu: usize) -> Result<()> {
+    // cpu_set_t is a plain #[repr(C)] bitmask, so an all-zeroes value
+    // is valid; sched_setaffinity reads `&set` (a live stack allocation
+    // of exactly `size_of::<cpu_set_t>()` bytes) and pid 0 means
+    // "calling thread" — no aliasing, no retained pointers.
+    // SAFETY: see above — zeroed cpu_set_t is valid, pointer args live.
     unsafe {
         let mut set: libc::cpu_set_t = std::mem::zeroed();
         libc::CPU_ZERO(&mut set);
@@ -132,6 +139,8 @@ pub fn pin_current_thread(cpu: usize) -> Result<()> {
 
 /// The CPU the calling thread is currently on.
 pub fn current_cpu() -> usize {
+    // SAFETY: sched_getcpu takes no arguments and only reads the
+    // calling thread's CPU id from the kernel.
     let c = unsafe { libc::sched_getcpu() };
     if c < 0 {
         0

@@ -118,25 +118,25 @@ impl ArenaPool {
 
     /// Take an arena, blocking until one returns if all are in flight.
     pub fn get(&self) -> StagingArena {
-        let mut g = self.arenas.lock().unwrap();
+        let mut g = self.arenas.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(a) = g.pop() {
                 return a;
             }
-            g = self.available.wait(g).unwrap();
+            g = self.available.wait(g).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     /// Non-blocking take (tests/diagnostics).
     pub fn try_get(&self) -> Option<StagingArena> {
-        self.arenas.lock().unwrap().pop()
+        self.arenas.lock().unwrap_or_else(|e| e.into_inner()).pop()
     }
 
     /// Return an arena after its views have been consumed. The arena is
     /// reset here so the next `get` never observes a stale write offset.
     pub fn put(&self, mut arena: StagingArena) {
         arena.reset();
-        self.arenas.lock().unwrap().push(arena);
+        self.arenas.lock().unwrap_or_else(|e| e.into_inner()).push(arena);
         self.available.notify_one();
     }
 
@@ -147,7 +147,7 @@ impl ArenaPool {
 
     /// Arenas currently checked in (idle).
     pub fn idle(&self) -> usize {
-        self.arenas.lock().unwrap().len()
+        self.arenas.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 }
 

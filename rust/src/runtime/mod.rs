@@ -50,11 +50,13 @@ impl EngineKey {
 /// `Send + Sync` wrapper for xla handle types (see module docs).
 pub(crate) struct SendSync<T>(pub T);
 
-// SAFETY: the PJRT CPU client (tfrt_cpu_pjrt_client) is documented
-// thread-safe for compile/execute/transfer; the raw pointers inside the
-// xla wrappers are only non-Send because bindgen cannot know that. All
-// mutation happens behind PJRT's own synchronization.
+// The PJRT CPU client (tfrt_cpu_pjrt_client) is documented thread-safe
+// for compile/execute/transfer; the raw pointers inside the xla
+// wrappers are only non-Send because bindgen cannot know that.
+// SAFETY: all mutation happens behind PJRT's own synchronization.
 unsafe impl<T> Send for SendSync<T> {}
+// SAFETY: same argument as Send — PJRT synchronizes internally, so
+// shared references across threads are sound.
 unsafe impl<T> Sync for SendSync<T> {}
 
 /// A scenario's device-resident weights (uploaded once, shared by all

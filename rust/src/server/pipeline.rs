@@ -297,6 +297,7 @@ impl ServingStack {
                             }
                         }
                     })
+                    // lint: allow(panic) worker spawn at startup: failing to spawn is unrecoverable
                     .expect("spawn pipeline worker")
             })
             .collect()

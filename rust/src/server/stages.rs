@@ -127,6 +127,7 @@ impl PipelineHandle {
                         }
                         feature_loop(&stack, &intake, &handoff, &pool);
                     })
+                    // lint: allow(panic) stage-worker spawn at startup is unrecoverable
                     .expect("spawn feature-stage worker")
             })
             .collect();
@@ -138,6 +139,7 @@ impl PipelineHandle {
                 std::thread::Builder::new()
                     .name(format!("dso-submit-{i}"))
                     .spawn(move || compute_loop(&stack, &handoff, &pool))
+                    // lint: allow(panic) submitter spawn at startup is unrecoverable
                     .expect("spawn compute-stage submitter")
             })
             .collect();

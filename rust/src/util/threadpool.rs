@@ -64,7 +64,7 @@ impl ThreadPool {
 
     /// Enqueue a job.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
         assert!(!st.shutdown, "execute after shutdown");
         st.jobs.push_back(Box::new(f));
         st.in_flight += 1;
@@ -74,18 +74,18 @@ impl ThreadPool {
 
     /// Number of jobs queued or running.
     pub fn in_flight(&self) -> usize {
-        self.shared.queue.lock().unwrap().in_flight
+        self.shared.queue.lock().unwrap_or_else(|e| e.into_inner()).in_flight
     }
 
     /// Block until every submitted job has completed.
     pub fn wait_idle(&self) {
         let (lock, cond) = &*self.idle;
-        let mut done = lock.lock().unwrap();
+        let mut done = lock.lock().unwrap_or_else(|e| e.into_inner());
         loop {
-            if self.shared.queue.lock().unwrap().in_flight == 0 {
+            if self.shared.queue.lock().unwrap_or_else(|e| e.into_inner()).in_flight == 0 {
                 return;
             }
-            done = cond.wait(done).unwrap();
+            done = cond.wait(done).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -97,7 +97,7 @@ impl ThreadPool {
 fn worker_loop(shared: Arc<Shared>, idle: Arc<(Mutex<usize>, Condvar)>) {
     loop {
         let job = {
-            let mut st = shared.queue.lock().unwrap();
+            let mut st = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
             loop {
                 if let Some(j) = st.jobs.pop_front() {
                     break j;
@@ -105,16 +105,16 @@ fn worker_loop(shared: Arc<Shared>, idle: Arc<(Mutex<usize>, Condvar)>) {
                 if st.shutdown {
                     return;
                 }
-                st = shared.cond.wait(st).unwrap();
+                st = shared.cond.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
         job();
         {
-            let mut st = shared.queue.lock().unwrap();
+            let mut st = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
             st.in_flight -= 1;
         }
         let (lock, cond) = &*idle;
-        let mut done = lock.lock().unwrap();
+        let mut done = lock.lock().unwrap_or_else(|e| e.into_inner());
         *done += 1;
         cond.notify_all();
     }
@@ -123,7 +123,7 @@ fn worker_loop(shared: Arc<Shared>, idle: Arc<(Mutex<usize>, Condvar)>) {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.queue.lock().unwrap();
+            let mut st = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
             st.shutdown = true;
         }
         self.shared.cond.notify_all();

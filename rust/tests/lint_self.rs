@@ -1,0 +1,77 @@
+//! Self-hosting acceptance: `flame lint` over this crate's own sources
+//! must produce no findings beyond the committed baseline (which is
+//! kept empty — fix findings, don't grandfather them), and the inferred
+//! lock-acquisition graph must contain the documented *allowed* edges,
+//! proving the analyzer actually sees the concurrency it guards.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use flame::lint::source::LockClass;
+use flame::lint::{apply_baseline, build_model, check, parse_baseline, scan_root};
+
+fn analyze() -> flame::lint::Analysis {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let sources = scan_root(root).expect("scan crate sources");
+    assert!(
+        sources.iter().any(|(p, _)| p.ends_with("dso/coalescer.rs")),
+        "scan_root must cover src/ (got {} files)",
+        sources.len()
+    );
+    assert!(
+        sources.iter().any(|(p, _)| p.ends_with("tests/lint_self.rs")),
+        "scan_root must cover tests/"
+    );
+    check(&build_model(&sources))
+}
+
+#[test]
+fn crate_is_clean_under_its_own_lint() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let analysis = analyze();
+    let accepted: BTreeSet<String> = std::fs::read_to_string(root.join("lint_baseline.txt"))
+        .map(|t| parse_baseline(&t))
+        .unwrap_or_default();
+    assert!(
+        accepted.is_empty(),
+        "the committed baseline must stay empty — fix findings instead:\n{accepted:?}"
+    );
+    let (_, fresh) = apply_baseline(&analysis, &accepted);
+    let rendered: Vec<String> = fresh.iter().map(|f| f.render()).collect();
+    assert!(
+        fresh.is_empty(),
+        "`flame lint` found non-baselined violations in the crate:\n{}",
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn inferred_graph_contains_the_documented_flusher_edges() {
+    let analysis = analyze();
+    let field = |file: &str, name: &str| {
+        analysis.edges.iter().any(|e| {
+            let held_is_signal = matches!(
+                &e.held,
+                LockClass::Field { file: hf, field } if hf.ends_with(file) && field == "signal"
+            );
+            let acquired_matches = matches!(
+                &e.acquired,
+                LockClass::Field { file: af, field } if af.ends_with(file) && field == name
+            );
+            held_is_signal && acquired_matches
+        })
+    };
+    // the flusher direction (signal held, slot/shard taken briefly) is
+    // the allowed order — if these edges vanish the walker has gone
+    // blind and the lock-order checker is vacuous
+    assert!(
+        field("dso/coalescer.rs", "slots"),
+        "missing signal -> slots edge for the DSO flusher; edges: {:#?}",
+        analysis.edges
+    );
+    assert!(
+        field("pda/fetch_coalescer.rs", "shards"),
+        "missing signal -> shards edge for the fetch flusher; edges: {:#?}",
+        analysis.edges
+    );
+}

@@ -17,16 +17,22 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: every method forwards verbatim to `System`, which upholds the
+// GlobalAlloc contract; the only extra work is a Relaxed counter bump,
+// which never allocates, unwinds, or touches the returned pointers.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: delegates to System.alloc under the caller's layout contract.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: delegates to System.dealloc; ptr/layout come from alloc above.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: delegates to System.realloc under the caller's contract.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)

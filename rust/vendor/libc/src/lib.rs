@@ -1,0 +1,61 @@
+//! Offline vendor stub: the subset of `libc` this repo uses
+//! (`pda/numa.rs` topology detection and thread pinning on Linux).
+//! Declarations bind directly against the platform C library, so the
+//! behavior matches the real crate for these symbols.
+
+#![allow(non_camel_case_types, non_snake_case)]
+
+pub type c_int = i32;
+pub type c_long = i64;
+pub type pid_t = i32;
+
+/// `sysconf` selector for the number of online processors (glibc value).
+pub const _SC_NPROCESSORS_ONLN: c_int = 84;
+
+/// Matches glibc's `cpu_set_t`: a 1024-bit (128-byte) CPU mask.
+#[repr(C)]
+#[derive(Copy, Clone)]
+pub struct cpu_set_t {
+    bits: [u64; 16],
+}
+
+pub fn CPU_ZERO(set: &mut cpu_set_t) {
+    set.bits = [0; 16];
+}
+
+pub fn CPU_SET(cpu: usize, set: &mut cpu_set_t) {
+    if cpu < 1024 {
+        set.bits[cpu / 64] |= 1 << (cpu % 64);
+    }
+}
+
+extern "C" {
+    pub fn sysconf(name: c_int) -> c_long;
+    pub fn sched_getcpu() -> c_int;
+    pub fn sched_setaffinity(pid: pid_t, cpusetsize: usize, mask: *const cpu_set_t) -> c_int;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_set_ops() {
+        // SAFETY-free: CPU_ZERO/CPU_SET are pure bit manipulation here.
+        let mut set = cpu_set_t { bits: [u64::MAX; 16] };
+        CPU_ZERO(&mut set);
+        assert!(set.bits.iter().all(|&b| b == 0));
+        CPU_SET(3, &mut set);
+        CPU_SET(64, &mut set);
+        assert_eq!(set.bits[0], 1 << 3);
+        assert_eq!(set.bits[1], 1);
+        CPU_SET(5000, &mut set); // out of range: ignored, no panic
+    }
+
+    #[test]
+    fn sysconf_reports_cpus() {
+        // SAFETY: sysconf with a valid selector has no preconditions.
+        let n = unsafe { sysconf(_SC_NPROCESSORS_ONLN) };
+        assert!(n >= 1);
+    }
+}
