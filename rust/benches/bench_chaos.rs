@@ -1,0 +1,254 @@
+//! Chaos bench — latency and quality-mix cost of fault storms on the
+//! artifact-free sim stack. Three seeded plans (0 / 5 / 15 % store
+//! fault rate, the 5 and 15 % rows adding proportional compute stalls)
+//! drive the pipelined serve path under concurrent closed-loop clients;
+//! each row reports p50/p99 request latency and the degradation-ladder
+//! quality mix (full / stale / truncated / cached / shed counts). Every
+//! run emits machine-readable `BENCH_chaos.json`.
+//!
+//! The headline contract this measures: a storm costs *latency and
+//! freshness*, never availability — the completed count equals the
+//! offered count at every fault rate. `--smoke` shrinks the request
+//! count to a CI-sized run that still gates on that invariant plus a
+//! non-empty degraded-quality mix at 15 %.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use flame::benchkit::Table;
+use flame::chaos::{FaultPlan, ServeQuality, QUALITY_RUNGS};
+use flame::config::{CacheMode, ModelConfig, StackConfig};
+use flame::dso::{ComputeBackend, SimEngine};
+use flame::netsim::{Link, LinkConfig};
+use flame::server::pipeline::StackBuilder;
+use flame::server::ServingStack;
+use flame::util::json::Json;
+use flame::workload::Request;
+
+const OUT_PATH: &str = "BENCH_chaos.json";
+const SEQ: usize = 16;
+const D: usize = 8;
+const TASKS: usize = 3;
+const PROFILES: [usize; 2] = [8, 16];
+const CLIENTS: usize = 8;
+const SEED: u64 = 42;
+
+/// (label, fault rate in percent). The spec is derived from the rate so
+/// a storm reproduces from `(rate, SEED)` alone.
+const RATES: [(&str, u32); 3] = [("0%", 0), ("5%", 5), ("15%", 15)];
+
+fn spec_for(rate_pct: u32) -> String {
+    if rate_pct == 0 {
+        return String::new();
+    }
+    let p = rate_pct as f64 / 100.0;
+    // store timeouts carry the storm; delays and stalls ride at a third
+    // of the rate each so the plan exercises more than one fault class
+    format!(
+        "store_timeout:p={p},store_delay:p={:.4},us=150,stall:p={:.4},us=200",
+        p / 3.0,
+        p / 3.0
+    )
+}
+
+fn model_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "sim".into(),
+        seq_len: SEQ,
+        n_blocks: 1,
+        layers_per_block: 1,
+        d_model: D,
+        n_heads: 1,
+        n_tasks: TASKS,
+        m_profiles: PROFILES.to_vec(),
+        native_m: PROFILES[PROFILES.len() - 1],
+    }
+}
+
+fn sim_stack() -> Arc<ServingStack> {
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Sync;
+    cfg.pda.numa_binding = false;
+    cfg.server.pipeline = true;
+    cfg.server.feature_workers = 2;
+    cfg.server.pipeline_workers = 2;
+    let link = Arc::new(Link::new(LinkConfig {
+        rtt: Duration::from_micros(200),
+        bandwidth_bps: 1e9,
+        jitter: 0.0,
+        fail_rate: 0.0,
+    }));
+    let backends: Vec<Arc<dyn ComputeBackend>> = PROFILES
+        .iter()
+        .map(|&m| {
+            Arc::new(SimEngine::new(m, SEQ, D, TASKS).with_delay(Duration::from_micros(150)))
+                as Arc<dyn ComputeBackend>
+        })
+        .collect();
+    Arc::new(
+        StackBuilder::new("sim", "sim", cfg)
+            .with_link(link)
+            .build_from_backends(model_cfg(), SEED, backends)
+            .expect("sim stack"),
+    )
+}
+
+fn request(id: u64, m: usize) -> Request {
+    Request {
+        request_id: id,
+        user_id: id % 512,
+        history: (0..8u64).map(|i| id.wrapping_mul(31) ^ i).collect(),
+        // cold candidate ids: every request exercises the remote store,
+        // so the fault rate is felt at full strength
+        candidates: (0..m as u64).map(|i| id.wrapping_mul(1_009) + i).collect(),
+    }
+}
+
+fn percentile(sorted_us: &[u64], p: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted_us.len() as f64 - 1.0) * p).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+struct RateResult {
+    label: &'static str,
+    rate_pct: u32,
+    spec: String,
+    offered: u64,
+    completed: u64,
+    p50_us: u64,
+    p99_us: u64,
+    quality: [u64; QUALITY_RUNGS],
+    injected_total: u64,
+}
+
+fn run_rate(label: &'static str, rate_pct: u32, n_requests: u64) -> RateResult {
+    let stack = sim_stack();
+    let spec = spec_for(rate_pct);
+    let plan = Arc::new(FaultPlan::parse(&spec, SEED).expect("bench plan"));
+    if rate_pct > 0 {
+        stack.arm_chaos(Arc::clone(&plan));
+    }
+    let handle = stack.spawn_pipeline();
+
+    let latencies: Mutex<Vec<u64>> = Mutex::new(Vec::with_capacity(n_requests as usize));
+    let next = std::sync::atomic::AtomicU64::new(0);
+    let completed = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..CLIENTS {
+            let handle = &handle;
+            let latencies = &latencies;
+            let next = &next;
+            let completed = &completed;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n_requests {
+                    return;
+                }
+                let m = [3usize, 6, 11, 16][(i % 4) as usize];
+                let t0 = Instant::now();
+                handle
+                    .serve(&request(i, m))
+                    .expect("a fault storm must cost latency, never availability");
+                let us = t0.elapsed().as_micros() as u64;
+                completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                latencies.lock().unwrap_or_else(|e| e.into_inner()).push(us);
+            });
+        }
+    });
+    handle.shutdown();
+
+    let mut sorted = latencies.into_inner().unwrap_or_else(|e| e.into_inner());
+    sorted.sort_unstable();
+    let inj = plan.injected();
+    RateResult {
+        label,
+        rate_pct,
+        spec,
+        offered: n_requests,
+        completed: completed.load(std::sync::atomic::Ordering::Relaxed),
+        p50_us: percentile(&sorted, 0.50),
+        p99_us: percentile(&sorted, 0.99),
+        quality: stack.metrics.quality_counts(),
+        injected_total: inj.store_delays
+            + inj.store_errors
+            + inj.store_timeouts
+            + inj.compute_stalls,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n_requests: u64 = if smoke { 240 } else { 2_000 };
+    println!(
+        "chaos storm cost: {n_requests} requests x {} fault rates, {CLIENTS} clients, seed {SEED}",
+        RATES.len()
+    );
+
+    let mut table = Table::new(
+        "fault-rate ladder (pipelined sim stack)",
+        &["fault rate", "completed", "p50", "p99", "full", "stale", "trunc", "injected"],
+    );
+    let mut rows: Vec<RateResult> = Vec::new();
+    for (label, rate) in RATES {
+        let r = run_rate(label, rate, n_requests);
+        assert_eq!(
+            r.completed, r.offered,
+            "{label}: the no-lost-request invariant must hold under the storm"
+        );
+        table.row(&[
+            r.label.to_string(),
+            format!("{}/{}", r.completed, r.offered),
+            format!("{:.2} ms", r.p50_us as f64 / 1_000.0),
+            format!("{:.2} ms", r.p99_us as f64 / 1_000.0),
+            r.quality[ServeQuality::Full.index()].to_string(),
+            r.quality[ServeQuality::StaleFeatures.index()].to_string(),
+            r.quality[ServeQuality::TruncatedCandidates.index()].to_string(),
+            r.injected_total.to_string(),
+        ]);
+        rows.push(r);
+    }
+    table.footnote("quality mix counts responses per degradation-ladder rung");
+    table.print();
+
+    // CI gate: the storm actually degraded something at 15%
+    let worst = rows.last().expect("rates ran");
+    assert!(
+        worst.quality[ServeQuality::StaleFeatures.index()] >= 1,
+        "15% storm produced no stale-feature responses — injection plane dead?"
+    );
+
+    let mut rates_json = BTreeMap::new();
+    for r in &rows {
+        let mut o = BTreeMap::new();
+        o.insert("rate_pct".into(), Json::Num(r.rate_pct as f64));
+        o.insert("spec".into(), Json::Str(r.spec.clone()));
+        o.insert("offered".into(), Json::Num(r.offered as f64));
+        o.insert("completed".into(), Json::Num(r.completed as f64));
+        o.insert("p50_us".into(), Json::Num(r.p50_us as f64));
+        o.insert("p99_us".into(), Json::Num(r.p99_us as f64));
+        o.insert("injected_faults".into(), Json::Num(r.injected_total as f64));
+        let mut q = BTreeMap::new();
+        for i in 0..QUALITY_RUNGS {
+            let rung = ServeQuality::from_index(i).expect("rung index");
+            q.insert(rung.as_str().to_string(), Json::Num(r.quality[i] as f64));
+        }
+        o.insert("quality".into(), Json::Obj(q));
+        rates_json.insert(r.label.to_string(), Json::Obj(o));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("chaos".into()));
+    top.insert("backend".into(), Json::Str("sim".into()));
+    top.insert("smoke".into(), Json::Bool(smoke));
+    top.insert("seed".into(), Json::Num(SEED as f64));
+    top.insert("requests_per_rate".into(), Json::Num(n_requests as f64));
+    top.insert("clients".into(), Json::Num(CLIENTS as f64));
+    top.insert("rates".into(), Json::Obj(rates_json));
+    match std::fs::write(OUT_PATH, Json::Obj(top).to_string()) {
+        Ok(()) => eprintln!("  wrote {OUT_PATH}"),
+        Err(e) => eprintln!("  could not write {OUT_PATH}: {e}"),
+    }
+}

@@ -68,7 +68,7 @@ impl<T> RequestQueue<T> {
     pub fn push(&self, item: T) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
-            return Err(Error::Internal("queue closed".into()));
+            return Err(Error::Shutdown("request queue closed".into()));
         }
         if g.queue.len() >= self.capacity {
             return Err(Error::Overloaded(format!("request queue full ({})", self.capacity)));
@@ -263,6 +263,47 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         q.close();
         assert_eq!(pusher.join().unwrap(), Err(7), "closed queue hands the item back");
+    }
+
+    #[test]
+    fn close_wakes_every_blocked_pusher() {
+        // shutdown-while-blocked: several producers parked on a full
+        // queue must ALL wake with their item back (so each caller can
+        // fail its request with a typed shutdown error), not hang on a
+        // condvar nobody will ever signal again
+        let q: Arc<RequestQueue<u32>> = RequestQueue::new(1);
+        q.push(0).unwrap(); // fill
+        let pushers: Vec<_> = (1..=3)
+            .map(|i| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || q.push_blocking(i))
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        let mut returned: Vec<u32> = pushers
+            .into_iter()
+            .map(|h| h.join().unwrap().expect_err("blocked pusher must get its item back"))
+            .collect();
+        returned.sort_unstable();
+        assert_eq!(returned, vec![1, 2, 3], "every blocked producer woke with its item");
+        // the admitted item still drains; new pushes fail typed
+        assert_eq!(q.pop().unwrap().0, 0);
+        assert!(q.pop().is_none());
+        match q.push(9) {
+            Err(Error::Shutdown(_)) => {}
+            other => panic!("expected typed Shutdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn closed_queue_sheds_with_typed_shutdown_error() {
+        let q: Arc<RequestQueue<u32>> = RequestQueue::new(4);
+        q.close();
+        match q.push(1) {
+            Err(Error::Shutdown(_)) => {}
+            other => panic!("expected Shutdown, got {other:?}"),
+        }
     }
 
     #[test]

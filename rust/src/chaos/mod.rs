@@ -1,0 +1,596 @@
+//! Crate-wide fault-injection plane and degradation-ladder vocabulary.
+//!
+//! A [`FaultPlan`] is a seeded, deterministic description of a fault
+//! storm: feature-store delay/error/timeout probabilities, a replica
+//! brownout (latency multiplier) or hard crash window, compute-backend
+//! stalls, and targeted worker-thread panics. Layers consult the plan
+//! through injection points ([`ChaosSlot`] fields armed at
+//! construction); an unarmed slot costs one `OnceLock::get` returning
+//! `None` — the same zero-overhead idiom as the tracing hook.
+//!
+//! Determinism: every probabilistic site draws from
+//! `splitmix64(seed ^ site_salt ^ sequence)` where `sequence` is a
+//! per-site atomic counter. Given the same plan spec, seed, and number
+//! of visits to each site, the *set* of injected faults is identical
+//! across runs — a storm is reproduced from `(spec, seed)` alone (see
+//! EXPERIMENTS.md, "Chaos runbook"). Injected events are counted on
+//! the plan itself ([`FaultPlan::injected`]) so tests can assert the
+//! recorder's degradation counters against what was actually injected.
+//!
+//! ## Spec grammar
+//!
+//! A spec is a comma-separated list of clauses; a clause is
+//! `name:key=value` and bare `key=value` tokens extend the preceding
+//! clause:
+//!
+//! ```text
+//! store_timeout:p=0.05,brownout:replica=2,x=8,panic:worker=feature,n=3
+//! ```
+//!
+//! | clause          | params (defaults)           | effect at the site |
+//! |-----------------|-----------------------------|--------------------|
+//! | `store_delay`   | `p` (1.0), `us` (2000)      | adds `us` of latency to a remote feature batch |
+//! | `store_error`   | `p` (1.0)                   | remote feature batch fails (degrades to stale/default) |
+//! | `store_timeout` | `p` (1.0)                   | remote feature batch times out (3x penalty, then stale/default) |
+//! | `brownout`      | `replica` (0), `x` (4)      | multiplies the replica's service time by `x` |
+//! | `crash`         | `replica` (0), `after` (0), `down` (u64::MAX) | the replica hard-fails attempts `after..after+down` |
+//! | `stall`         | `p` (1.0), `us` (2000)      | a compute launch sleeps `us` before running |
+//! | `panic`         | `worker` (feature), `n` (1), `count` (1) | the worker's `n`-th..`n+count`-th polls panic |
+//!
+//! `worker` targets: `feature` (pipeline feature stage), `compute`
+//! (pipeline compute stage), `executor` (DSO executor). `n` is 1-based.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::error::{Error, Result};
+
+/// Degradation-ladder rung stamped on every response (§ ladder docs in
+/// `lib.rs`). Ordered best-first: later variants are worse; merging two
+/// qualities keeps the maximum (worst) rung.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ServeQuality {
+    /// Fresh features, full candidate set, computed for this request.
+    Full = 0,
+    /// At least one feature row was served stale or zero-defaulted
+    /// because the remote store erred/timed out.
+    StaleFeatures = 1,
+    /// The candidate set was truncated to the top-K that fit the
+    /// remaining deadline budget.
+    TruncatedCandidates = 2,
+    /// Served from the cluster result cache (hit or coalesced ride)
+    /// instead of being computed.
+    CachedResult = 3,
+    /// Rejected by admission control / shed under overload; no scores.
+    Shed = 4,
+}
+
+/// Number of ladder rungs (size of the recorder's quality histogram).
+pub const QUALITY_RUNGS: usize = 5;
+
+impl ServeQuality {
+    /// Stable index into the recorder's quality histogram.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Option<ServeQuality> {
+        match i {
+            0 => Some(ServeQuality::Full),
+            1 => Some(ServeQuality::StaleFeatures),
+            2 => Some(ServeQuality::TruncatedCandidates),
+            3 => Some(ServeQuality::CachedResult),
+            4 => Some(ServeQuality::Shed),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServeQuality::Full => "full",
+            ServeQuality::StaleFeatures => "stale_features",
+            ServeQuality::TruncatedCandidates => "truncated_candidates",
+            ServeQuality::CachedResult => "cached_result",
+            ServeQuality::Shed => "shed",
+        }
+    }
+
+    /// The worse (higher) of two rungs — a response's quality is the
+    /// worst degradation it suffered anywhere on its path.
+    pub fn worst(self, other: ServeQuality) -> ServeQuality {
+        self.max(other)
+    }
+}
+
+/// Supervised worker sites that targeted panics can name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PanicSite {
+    /// Pipeline feature-stage worker (`server::stages`).
+    Feature,
+    /// Pipeline compute-stage submitter (`server::stages`).
+    Compute,
+    /// DSO executor thread (`dso::orchestrator`).
+    Executor,
+}
+
+impl PanicSite {
+    fn idx(self) -> usize {
+        match self {
+            PanicSite::Feature => 0,
+            PanicSite::Compute => 1,
+            PanicSite::Executor => 2,
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "feature" => Ok(PanicSite::Feature),
+            "compute" => Ok(PanicSite::Compute),
+            "executor" => Ok(PanicSite::Executor),
+            o => Err(Error::Config(format!("unknown panic worker '{o}'"))),
+        }
+    }
+}
+
+/// Outcome of one feature-store fault roll (one roll per remote batch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreFault {
+    None,
+    /// Add this many microseconds of latency, then proceed normally.
+    Delay(u64),
+    /// The batch fails outright.
+    Error,
+    /// The batch times out (callers pay the timeout penalty).
+    Timeout,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct PanicSpec {
+    site: PanicSite,
+    /// 1-based poll index at which this spec starts firing.
+    n: u64,
+    /// Consecutive polls that fire.
+    count: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct CrashSpec {
+    replica: usize,
+    /// Serve attempts at the replica before the crash window opens.
+    after: u64,
+    /// Length of the crash window in serve attempts (u64::MAX = forever).
+    down: u64,
+}
+
+/// Counts of faults the plan actually injected, for asserting recorder
+/// counters against ground truth.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Injected {
+    pub store_delays: u64,
+    pub store_errors: u64,
+    pub store_timeouts: u64,
+    pub brownout_hits: u64,
+    pub crash_faults: u64,
+    pub compute_stalls: u64,
+    pub worker_panics: u64,
+}
+
+/// A seeded, deterministic fault storm. Construct with
+/// [`FaultPlan::parse`]; share via `Arc` and arm [`ChaosSlot`]s with it.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    store_delay: Option<(f64, u64)>,
+    store_error_p: f64,
+    store_timeout_p: f64,
+    brownout: Option<(usize, u32)>,
+    crash: Option<CrashSpec>,
+    stall: Option<(f64, u64)>,
+    panics: Vec<PanicSpec>,
+
+    store_seq: AtomicU64,
+    stall_seq: AtomicU64,
+    crash_seq: AtomicU64,
+    panic_seq: [AtomicU64; 3],
+
+    inj_store_delays: AtomicU64,
+    inj_store_errors: AtomicU64,
+    inj_store_timeouts: AtomicU64,
+    inj_brownouts: AtomicU64,
+    inj_crashes: AtomicU64,
+    inj_stalls: AtomicU64,
+    inj_panics: AtomicU64,
+}
+
+/// splitmix64 finalizer — the crate's standard cheap deterministic hash.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to [0, 1).
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    /// The empty plan: no clause ever fires. Useful as a spec default.
+    pub fn none(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            store_delay: None,
+            store_error_p: 0.0,
+            store_timeout_p: 0.0,
+            brownout: None,
+            crash: None,
+            stall: None,
+            panics: Vec::new(),
+            store_seq: AtomicU64::new(0),
+            stall_seq: AtomicU64::new(0),
+            crash_seq: AtomicU64::new(0),
+            panic_seq: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            inj_store_delays: AtomicU64::new(0),
+            inj_store_errors: AtomicU64::new(0),
+            inj_store_timeouts: AtomicU64::new(0),
+            inj_brownouts: AtomicU64::new(0),
+            inj_crashes: AtomicU64::new(0),
+            inj_stalls: AtomicU64::new(0),
+            inj_panics: AtomicU64::new(0),
+        }
+    }
+
+    /// Parse a fault spec (see module docs for the grammar).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::none(seed);
+        let mut clauses: Vec<(String, Vec<(String, String)>)> = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            if let Some((name, first)) = tok.split_once(':') {
+                clauses.push((name.to_string(), vec![kv(first)?]));
+            } else if tok.contains('=') {
+                match clauses.last_mut() {
+                    Some((_, params)) => params.push(kv(tok)?),
+                    None => {
+                        return Err(Error::Config(format!(
+                            "chaos spec param '{tok}' precedes any clause"
+                        )))
+                    }
+                }
+            } else {
+                clauses.push((tok.to_string(), Vec::new()));
+            }
+        }
+        for (name, params) in clauses {
+            let get_f = |k: &str, d: f64| -> Result<f64> { param_f64(&params, k, d) };
+            let get_u = |k: &str, d: u64| -> Result<u64> { param_u64(&params, k, d) };
+            match name.as_str() {
+                "store_delay" => {
+                    plan.store_delay = Some((get_f("p", 1.0)?, get_u("us", 2_000)?));
+                }
+                "store_error" => plan.store_error_p = get_f("p", 1.0)?,
+                "store_timeout" => plan.store_timeout_p = get_f("p", 1.0)?,
+                "brownout" => {
+                    plan.brownout =
+                        Some((get_u("replica", 0)? as usize, get_u("x", 4)? as u32));
+                }
+                "crash" => {
+                    plan.crash = Some(CrashSpec {
+                        replica: get_u("replica", 0)? as usize,
+                        after: get_u("after", 0)?,
+                        down: get_u("down", u64::MAX)?,
+                    });
+                }
+                "stall" | "compute_stall" => {
+                    plan.stall = Some((get_f("p", 1.0)?, get_u("us", 2_000)?));
+                }
+                "panic" => {
+                    let site = match params.iter().find(|(k, _)| k == "worker") {
+                        Some((_, v)) => PanicSite::parse(v)?,
+                        None => PanicSite::Feature,
+                    };
+                    plan.panics.push(PanicSpec {
+                        site,
+                        n: get_u("n", 1)?.max(1),
+                        count: get_u("count", 1)?.max(1),
+                    });
+                }
+                o => return Err(Error::Config(format!("unknown chaos clause '{o}'"))),
+            }
+        }
+        Ok(plan)
+    }
+
+    fn roll(&self, salt: u64, seq: u64, p: f64) -> bool {
+        p > 0.0 && unit(mix(self.seed ^ salt.wrapping_mul(0xA24B_AED4_963E_E407) ^ seq)) < p
+    }
+
+    /// One fault roll for a remote feature-store batch. Rolls timeout,
+    /// then error, then delay — at most one fault per batch.
+    pub fn store_fault(&self) -> StoreFault {
+        let seq = self.store_seq.fetch_add(1, Ordering::Relaxed);
+        if self.roll(0x51, seq, self.store_timeout_p) {
+            self.inj_store_timeouts.fetch_add(1, Ordering::Relaxed);
+            return StoreFault::Timeout;
+        }
+        if self.roll(0x52, seq, self.store_error_p) {
+            self.inj_store_errors.fetch_add(1, Ordering::Relaxed);
+            return StoreFault::Error;
+        }
+        if let Some((p, us)) = self.store_delay {
+            if self.roll(0x53, seq, p) {
+                self.inj_store_delays.fetch_add(1, Ordering::Relaxed);
+                return StoreFault::Delay(us);
+            }
+        }
+        StoreFault::None
+    }
+
+    /// Latency multiplier for a browned-out replica (`None` = healthy).
+    /// Counts a hit each time a service is actually slowed.
+    pub fn brownout_x(&self, replica: usize) -> Option<u32> {
+        match self.brownout {
+            Some((r, x)) if r == replica && x > 1 => {
+                self.inj_brownouts.fetch_add(1, Ordering::Relaxed);
+                Some(x)
+            }
+            _ => None,
+        }
+    }
+
+    /// Whether the replica's spec is a brownout target at all (no count).
+    pub fn is_browned_out(&self, replica: usize) -> bool {
+        matches!(self.brownout, Some((r, x)) if r == replica && x > 1)
+    }
+
+    /// Does this serve attempt at `replica` fall in the crash window?
+    pub fn crashed(&self, replica: usize) -> bool {
+        let Some(c) = self.crash else { return false };
+        if c.replica != replica {
+            return false;
+        }
+        let seq = self.crash_seq.fetch_add(1, Ordering::Relaxed);
+        let hit = seq >= c.after && (c.down == u64::MAX || seq < c.after.saturating_add(c.down));
+        if hit {
+            self.inj_crashes.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Microseconds a compute launch should stall (`None` = run now).
+    pub fn compute_stall_us(&self) -> Option<u64> {
+        let (p, us) = self.stall?;
+        let seq = self.stall_seq.fetch_add(1, Ordering::Relaxed);
+        if self.roll(0x54, seq, p) {
+            self.inj_stalls.fetch_add(1, Ordering::Relaxed);
+            Some(us)
+        } else {
+            None
+        }
+    }
+
+    /// Poll a supervised worker site: `true` means the caller should
+    /// panic now (the supervisor will catch it). Each call advances the
+    /// site's 1-based poll counter.
+    pub fn panic_due(&self, site: PanicSite) -> bool {
+        if self.panics.is_empty() {
+            return false;
+        }
+        let seq = self.panic_seq[site.idx()].fetch_add(1, Ordering::Relaxed) + 1;
+        let due = self
+            .panics
+            .iter()
+            .any(|s| s.site == site && seq >= s.n && seq < s.n.saturating_add(s.count));
+        if due {
+            self.inj_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        due
+    }
+
+    /// Total panics the plan will inject at `site` given enough polls.
+    pub fn planned_panics(&self, site: PanicSite) -> u64 {
+        self.panics.iter().filter(|s| s.site == site).map(|s| s.count).sum()
+    }
+
+    /// Snapshot of everything injected so far.
+    pub fn injected(&self) -> Injected {
+        Injected {
+            store_delays: self.inj_store_delays.load(Ordering::Relaxed),
+            store_errors: self.inj_store_errors.load(Ordering::Relaxed),
+            store_timeouts: self.inj_store_timeouts.load(Ordering::Relaxed),
+            brownout_hits: self.inj_brownouts.load(Ordering::Relaxed),
+            crash_faults: self.inj_crashes.load(Ordering::Relaxed),
+            compute_stalls: self.inj_stalls.load(Ordering::Relaxed),
+            worker_panics: self.inj_panics.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An injection point: a write-once slot a component checks on its hot
+/// path. Unarmed, `get()` is a single `OnceLock::get` returning `None`.
+#[derive(Debug, Default)]
+pub struct ChaosSlot(OnceLock<Arc<FaultPlan>>);
+
+impl ChaosSlot {
+    pub const fn new() -> ChaosSlot {
+        ChaosSlot(OnceLock::new())
+    }
+
+    /// Arm the slot. A second arm is a no-op (write-once by design: a
+    /// storm's plan never changes mid-run).
+    pub fn arm(&self, plan: Arc<FaultPlan>) {
+        let _ = self.0.set(plan);
+    }
+
+    #[inline]
+    pub fn get(&self) -> Option<&FaultPlan> {
+        self.0.get().map(|a| &**a)
+    }
+
+    pub fn armed(&self) -> bool {
+        self.0.get().is_some()
+    }
+
+    /// The armed plan, by `Arc`, for handing to sub-components.
+    pub fn plan(&self) -> Option<Arc<FaultPlan>> {
+        self.0.get().cloned()
+    }
+}
+
+fn kv(tok: &str) -> Result<(String, String)> {
+    match tok.split_once('=') {
+        Some((k, v)) if !k.is_empty() && !v.is_empty() => {
+            Ok((k.trim().to_string(), v.trim().to_string()))
+        }
+        _ => Err(Error::Config(format!("chaos spec token '{tok}' is not key=value"))),
+    }
+}
+
+fn param_f64(params: &[(String, String)], key: &str, default: f64) -> Result<f64> {
+    match params.iter().find(|(k, _)| k == key) {
+        None => Ok(default),
+        Some((_, v)) => v
+            .parse::<f64>()
+            .map_err(|_| Error::Config(format!("chaos param {key}='{v}' is not a number"))),
+    }
+}
+
+fn param_u64(params: &[(String, String)], key: &str, default: u64) -> Result<u64> {
+    match params.iter().find(|(k, _)| k == key) {
+        None => Ok(default),
+        Some((_, v)) => v
+            .parse::<u64>()
+            .map_err(|_| Error::Config(format!("chaos param {key}='{v}' is not an integer"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quality_ladder_orders_and_merges() {
+        use ServeQuality::*;
+        assert!(Full < StaleFeatures);
+        assert!(StaleFeatures < TruncatedCandidates);
+        assert!(TruncatedCandidates < CachedResult);
+        assert!(CachedResult < Shed);
+        assert_eq!(Full.worst(CachedResult), CachedResult);
+        assert_eq!(Shed.worst(Full), Shed);
+        for i in 0..QUALITY_RUNGS {
+            assert_eq!(ServeQuality::from_index(i).unwrap().index(), i);
+        }
+        assert!(ServeQuality::from_index(QUALITY_RUNGS).is_none());
+    }
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let p = FaultPlan::parse(
+            "store_timeout:p=0.05,brownout:replica=2,x=8,crash:replica=1,after=10,down=20,\
+             panic:worker=executor,n=3,count=2,store_delay:p=0.5,us=300,stall:p=0.1,us=400",
+            7,
+        )
+        .unwrap();
+        assert_eq!(p.store_timeout_p, 0.05);
+        assert_eq!(p.brownout, Some((2, 8)));
+        let c = p.crash.unwrap();
+        assert_eq!((c.replica, c.after, c.down), (1, 10, 20));
+        assert_eq!(p.panics.len(), 1);
+        assert_eq!(p.panics[0].site, PanicSite::Executor);
+        assert_eq!((p.panics[0].n, p.panics[0].count), (3, 2));
+        assert_eq!(p.store_delay, Some((0.5, 300)));
+        assert_eq!(p.stall, Some((0.1, 400)));
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(FaultPlan::parse("bogus_clause:p=1", 0).is_err());
+        assert!(FaultPlan::parse("p=0.5", 0).is_err(), "param before any clause");
+        assert!(FaultPlan::parse("store_timeout:p=abc", 0).is_err());
+        assert!(FaultPlan::parse("panic:worker=gpu", 0).is_err());
+        assert!(FaultPlan::parse("store_timeout:p", 0).is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_the_none_plan() {
+        let p = FaultPlan::parse("", 9).unwrap();
+        for _ in 0..100 {
+            assert_eq!(p.store_fault(), StoreFault::None);
+            assert!(!p.crashed(0));
+            assert!(p.compute_stall_us().is_none());
+            assert!(!p.panic_due(PanicSite::Feature));
+        }
+        assert_eq!(p.injected(), Injected::default());
+    }
+
+    #[test]
+    fn store_faults_are_seed_deterministic() {
+        let a = FaultPlan::parse("store_timeout:p=0.3", 42).unwrap();
+        let b = FaultPlan::parse("store_timeout:p=0.3", 42).unwrap();
+        let fa: Vec<StoreFault> = (0..200).map(|_| a.store_fault()).collect();
+        let fb: Vec<StoreFault> = (0..200).map(|_| b.store_fault()).collect();
+        assert_eq!(fa, fb, "same seed, same storm");
+        let hits = fa.iter().filter(|f| **f == StoreFault::Timeout).count();
+        assert!((20..=100).contains(&hits), "p=0.3 over 200 rolls hit {hits}");
+        let c = FaultPlan::parse("store_timeout:p=0.3", 43).unwrap();
+        let fc: Vec<StoreFault> = (0..200).map(|_| c.store_fault()).collect();
+        assert_ne!(fa, fc, "different seed, different storm");
+        assert_eq!(a.injected().store_timeouts, hits as u64);
+    }
+
+    #[test]
+    fn crash_window_opens_and_closes() {
+        let p = FaultPlan::parse("crash:replica=1,after=3,down=4", 0).unwrap();
+        assert!(!p.crashed(0), "other replicas unaffected");
+        let outcomes: Vec<bool> = (0..10).map(|_| p.crashed(1)).collect();
+        assert_eq!(
+            outcomes,
+            vec![false, false, false, true, true, true, true, false, false, false]
+        );
+        assert_eq!(p.injected().crash_faults, 4);
+    }
+
+    #[test]
+    fn brownout_targets_one_replica() {
+        let p = FaultPlan::parse("brownout:replica=2,x=8", 0).unwrap();
+        assert_eq!(p.brownout_x(2), Some(8));
+        assert_eq!(p.brownout_x(0), None);
+        assert!(p.is_browned_out(2));
+        assert!(!p.is_browned_out(1));
+        assert_eq!(p.injected().brownout_hits, 1, "is_browned_out must not count");
+    }
+
+    #[test]
+    fn panic_fires_on_nth_poll_only() {
+        let p = FaultPlan::parse("panic:worker=compute,n=3,count=2", 0).unwrap();
+        let fires: Vec<bool> = (0..6).map(|_| p.panic_due(PanicSite::Compute)).collect();
+        assert_eq!(fires, vec![false, false, true, true, false, false]);
+        assert!(!p.panic_due(PanicSite::Feature), "other sites unaffected");
+        assert_eq!(p.injected().worker_panics, 2);
+        assert_eq!(p.planned_panics(PanicSite::Compute), 2);
+        assert_eq!(p.planned_panics(PanicSite::Executor), 0);
+    }
+
+    #[test]
+    fn chaos_slot_arms_once() {
+        let slot = ChaosSlot::new();
+        assert!(slot.get().is_none());
+        assert!(!slot.armed());
+        slot.arm(Arc::new(FaultPlan::parse("store_error:p=1", 1).unwrap()));
+        slot.arm(Arc::new(FaultPlan::none(2))); // no-op
+        assert!(slot.armed());
+        assert_eq!(slot.get().unwrap().store_fault(), StoreFault::Error);
+        assert!(slot.plan().is_some());
+    }
+
+    #[test]
+    fn store_delay_rolls_independently() {
+        let p = FaultPlan::parse("store_delay:p=1,us=123", 5).unwrap();
+        assert_eq!(p.store_fault(), StoreFault::Delay(123));
+        assert_eq!(p.injected().store_delays, 1);
+    }
+}

@@ -23,7 +23,7 @@ const VALUE_FLAGS: &[&str] = &[
     "slots", "users", "result-cache-cap", "result-ttl-ms", "dup-rate",
     "coalesce-wait-us", "m-dist", "feature-workers", "fetch-wait-us",
     "handoff-capacity", "backend", "threads", "trace-out", "trace-sample-n",
-    "metrics-addr", "metrics-hold-s", "baseline", "src",
+    "metrics-addr", "metrics-hold-s", "baseline", "src", "chaos", "chaos-seed",
 ];
 
 impl Args {
@@ -160,6 +160,18 @@ COMMON FLAGS:
   --no-numa           disable NUMA binding
   --no-staging        disable staging arenas
   --seed N            workload seed
+
+CHAOS FLAGS (serve, cluster):
+  --chaos SPEC        arm the fault-injection plane with a seeded plan,
+                      e.g. store_timeout:p=0.05,brownout:replica=2,x=8
+                      (clauses: store_delay, store_error, store_timeout,
+                      brownout, crash, stall, panic — see EXPERIMENTS.md
+                      \"Chaos runbook\" for the grammar). Arming also
+                      enables the degradation ladder: retries with
+                      backoff, hedged re-dispatch, and (serve) candidate
+                      truncation for over-budget requests.
+  --chaos-seed N      fault-plan RNG seed (default: 0 — same seed, same
+                      storm, reproducible)
 
 OBSERVABILITY FLAGS (serve, cluster):
   --trace-out FILE    write a Chrome trace-event / Perfetto JSON timeline
@@ -331,6 +343,16 @@ mod tests {
         assert!(h.contains("lint"));
         assert!(h.contains("--write-baseline"));
         assert!(h.contains("--graph"));
+    }
+
+    #[test]
+    fn chaos_flags_take_values() {
+        let a = parse(&["cluster", "--chaos", "brownout:replica=1,x=4", "--chaos-seed", "7"]);
+        assert_eq!(a.get("chaos"), Some("brownout:replica=1,x=4"));
+        assert_eq!(a.get_parse::<u64>("chaos-seed").unwrap(), Some(7));
+        let h = help();
+        assert!(h.contains("--chaos"));
+        assert!(h.contains("Chaos runbook"));
     }
 
     #[test]

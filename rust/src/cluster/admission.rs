@@ -120,6 +120,7 @@ mod tests {
                 feature_us: 0,
                 queue_us: 0,
                 handoff_us: 0,
+                quality: crate::chaos::ServeQuality::Full,
             })
         }
     }
@@ -174,6 +175,7 @@ mod tests {
                 feature_us: 0,
                 queue_us: 0,
                 handoff_us: 0,
+                quality: crate::chaos::ServeQuality::Full,
             })
         }
     }

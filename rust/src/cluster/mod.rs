@@ -63,6 +63,17 @@ pub struct ClusterConfig {
     pub eject_cooldown_ms: u64,
     /// Allow deadline/failover re-routes to another replica.
     pub reroute: bool,
+    /// Max failover retries after a replica error (each to the cheapest
+    /// alternative, budget-aware). 1 = the classic single failover.
+    pub max_retries: u32,
+    /// Base retry backoff (µs), doubled per attempt; a retry is skipped
+    /// when its backoff would eat the remaining budget. 0 = no backoff.
+    pub retry_backoff_us: u64,
+    /// Hedged dispatch: when the picked replica has not answered within
+    /// ~2x its estimate (a brownout signature), re-dispatch once to a
+    /// second replica and take whichever answers first. Costs a thread
+    /// per dispatch on this path, so it is opt-in (chaos/degraded runs).
+    pub hedge: bool,
     /// Router-level result cache + single-flight coalescing knobs
     /// (disabled by default: `capacity == 0`).
     pub result_cache: ResultCacheConfig,
@@ -78,6 +89,9 @@ impl Default for ClusterConfig {
             eject_after: 3,
             eject_cooldown_ms: 500,
             reroute: true,
+            max_retries: 1,
+            retry_backoff_us: 0,
+            hedge: false,
             result_cache: ResultCacheConfig::default(),
         }
     }
@@ -96,6 +110,13 @@ pub struct ClusterSnapshot {
     pub result_hits: u64,
     pub result_misses: u64,
     pub result_coalesced: u64,
+    /// Degradation-ladder counters: failover retries, hedged
+    /// re-dispatches (and how many the hedge won), canary probes.
+    pub retries: u64,
+    pub hedges: u64,
+    pub hedge_wins: u64,
+    pub probes_ok: u64,
+    pub probes_failed: u64,
 }
 
 /// The routing tier over N replicas.
@@ -148,6 +169,13 @@ impl ClusterRouter {
     /// The router's result-cache tier, if enabled.
     pub fn result_cache(&self) -> Option<&ResultCache> {
         self.result_cache.as_ref()
+    }
+
+    /// Upstream user-feature update hook: evicts the user's cached
+    /// result rows ahead of their TTL so stale-serve degradation can
+    /// never return pre-update scores. Returns evicted entries.
+    pub fn invalidate_user(&self, user_id: u64) -> usize {
+        self.result_cache.as_ref().map_or(0, |rc| rc.invalidate_user(user_id))
     }
 
     pub fn policy(&self) -> RoutePolicy {
@@ -320,55 +348,155 @@ impl ClusterRouter {
     ) -> Response {
         let elapsed_us = t0.elapsed().as_micros() as u64;
         resp.overall_us = elapsed_us;
+        // a cache-served answer sits on the CachedResult rung of the
+        // degradation ladder (unless the cached row was itself worse)
+        resp.quality = resp.quality.worst(crate::chaos::ServeQuality::CachedResult);
         self.metrics.record_request(elapsed_us, req.m());
+        self.metrics.record_quality(resp.quality);
         self.admission.note_completion(elapsed_us, budget_us);
         self.finish_trace(trace);
         resp
     }
 
     /// Policy pick → deadline admission → replica dispatch — the
-    /// pre-result-cache request path.
+    /// pre-result-cache request path. Degradation machinery lives here:
+    /// half-open canaries re-prove ejected replicas, replica errors get
+    /// budget-aware retry-with-backoff, and (opt-in) a hedged
+    /// re-dispatch races a second replica when the first looks browned
+    /// out.
     fn dispatch(&self, req: &Request, budget_us: u64, t0: Instant) -> Result<Response> {
         // Admission sees the budget *remaining* at this instant: time
         // already burned since t0 (e.g. waiting on a single-flight
         // leader that failed) must not be granted a second time. SLA
         // accounting below still judges against the full budget.
         let remaining_us = budget_us.saturating_sub(t0.elapsed().as_micros() as u64);
-        let primary = self
-            .pick(req)
-            .ok_or_else(|| Error::Overloaded("no healthy replicas".into()))?;
 
-        let target = match self.admission.check(&self.replicas[primary], remaining_us) {
-            Verdict::Admit => primary,
-            Verdict::Overbudget { estimate_us } => match self.cheapest_alternative(primary) {
-                Some((alt, est)) if self.cfg.reroute && est <= remaining_us => {
-                    self.admission.note_reroute();
-                    alt
+        // Half-open canary: a cooled-down ejected replica gets exactly
+        // one request before full traffic returns. A successful canary
+        // is this request's answer; a failed one re-ejects the replica
+        // and the request falls through to normal dispatch.
+        let mut result = None;
+        let mut last_target = usize::MAX;
+        for r in &self.replicas {
+            if r.try_acquire_probe() {
+                let probe = r.probe_serve(req);
+                if probe.is_ok() {
+                    result = Some(probe);
+                } else {
+                    last_target = r.id;
                 }
-                _ => {
-                    self.admission.note_shed();
-                    return Err(Error::Overloaded(format!(
-                        "deadline admission: estimated {estimate_us} µs > remaining budget {remaining_us} µs on replica {primary}"
-                    )));
-                }
-            },
-        };
-
-        let mut result = self.replicas[target].serve_tracked(req);
-        if result.is_err() && self.cfg.reroute {
-            // replica failure (not a shed): one failover retry
-            if let Some((alt, _)) = self.cheapest_alternative(target) {
-                self.admission.note_reroute();
-                result = self.replicas[alt].serve_tracked(req);
+                break;
             }
         }
 
-        if result.is_ok() {
+        let mut result = match result {
+            Some(ok) => ok,
+            None => {
+                let primary = self
+                    .pick(req)
+                    .ok_or_else(|| Error::Overloaded("no healthy replicas".into()))?;
+
+                let target = match self.admission.check(&self.replicas[primary], remaining_us) {
+                    Verdict::Admit => primary,
+                    Verdict::Overbudget { estimate_us } => {
+                        match self.cheapest_alternative(primary) {
+                            Some((alt, est)) if self.cfg.reroute && est <= remaining_us => {
+                                self.admission.note_reroute();
+                                alt
+                            }
+                            _ => {
+                                self.admission.note_shed();
+                                self.metrics.record_quality(crate::chaos::ServeQuality::Shed);
+                                return Err(Error::Overloaded(format!(
+                                    "deadline admission: estimated {estimate_us} µs > remaining budget {remaining_us} µs on replica {primary}"
+                                )));
+                            }
+                        }
+                    }
+                };
+                last_target = target;
+                self.serve_maybe_hedged(target, req, remaining_us)
+            }
+        };
+
+        // Budget-aware retry-with-backoff: each failed attempt re-routes
+        // to the cheapest alternative after an exponential pause, as
+        // long as budget remains and attempts are left.
+        let mut attempt: u32 = 0;
+        while result.is_err() && self.cfg.reroute && attempt < self.cfg.max_retries {
+            let rem = budget_us.saturating_sub(t0.elapsed().as_micros() as u64);
+            if rem == 0 {
+                break;
+            }
+            let backoff = self.cfg.retry_backoff_us.saturating_mul(1 << attempt.min(10));
+            if backoff >= rem {
+                break;
+            }
+            if backoff > 0 {
+                crate::util::timeutil::precise_wait(Duration::from_micros(backoff));
+            }
+            let Some((alt, _)) = self.cheapest_alternative(last_target) else { break };
+            self.admission.note_reroute();
+            self.metrics.record_retry();
+            result = self.replicas[alt].serve_tracked(req);
+            last_target = alt;
+            attempt += 1;
+        }
+
+        if let Ok(resp) = &mut result {
             let elapsed_us = t0.elapsed().as_micros() as u64;
             self.metrics.record_request(elapsed_us, req.m());
+            self.metrics.record_quality(resp.quality);
             self.admission.note_completion(elapsed_us, budget_us);
         }
         result
+    }
+
+    /// Serve on `target`, racing a hedged re-dispatch to the cheapest
+    /// alternative when hedging is on and the primary has not answered
+    /// within ~2x its estimate (the brownout signature). First answer
+    /// wins; the loser's work completes in the background and only its
+    /// replica-side accounting stands.
+    fn serve_maybe_hedged(
+        &self,
+        target: usize,
+        req: &Request,
+        remaining_us: u64,
+    ) -> Result<Response> {
+        if !self.cfg.hedge {
+            return self.replicas[target].serve_tracked(req);
+        }
+        let Some((alt, _)) = self.cheapest_alternative(target) else {
+            return self.replicas[target].serve_tracked(req);
+        };
+        let est = Admission::estimate_us(&self.replicas[target]);
+        // wait 2x the estimate (min 1 ms floor for cold estimators) but
+        // never more than half the remaining budget before hedging
+        let hedge_after_us = est.saturating_mul(2).max(1_000).min(remaining_us / 2).max(100);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let primary = Arc::clone(&self.replicas[target]);
+        let req_owned = req.clone();
+        std::thread::spawn(move || {
+            let _ = tx.send(primary.serve_tracked(&req_owned));
+        });
+        match rx.recv_timeout(Duration::from_micros(hedge_after_us)) {
+            Ok(first) => first,
+            Err(_) => {
+                self.metrics.record_hedge();
+                match self.replicas[alt].serve_tracked(req) {
+                    Ok(resp) => {
+                        self.metrics.record_hedge_win();
+                        Ok(resp)
+                    }
+                    Err(hedge_err) => {
+                        // hedge failed too: give the primary the rest of
+                        // the budget (plus slack) to come through
+                        let grace = Duration::from_micros(remaining_us.max(1_000));
+                        rx.recv_timeout(grace).unwrap_or(Err(hedge_err))
+                    }
+                }
+            }
+        }
     }
 
     /// Exact aggregate feature-cache hit rate across all replicas.
@@ -399,6 +527,11 @@ impl ClusterRouter {
             result_hits,
             result_misses,
             result_coalesced,
+            retries: self.metrics.retries(),
+            hedges: self.metrics.hedges(),
+            hedge_wins: self.metrics.hedge_wins(),
+            probes_ok: self.replicas.iter().map(|r| r.probes_ok_total()).sum(),
+            probes_failed: self.replicas.iter().map(|r| r.probes_failed_total()).sum(),
         }
     }
 }

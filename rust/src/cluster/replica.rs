@@ -3,7 +3,7 @@
 //! depth, a rolling latency histogram (p99 service estimate), and the
 //! consecutive-error health state machine with timed re-admission.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -182,12 +182,21 @@ pub struct Replica {
     consecutive_errors: AtomicU32,
     eject_after: u32,
     cooldown_us: u64,
-    /// Ejection deadline in µs since `epoch`; a replica is healthy once
-    /// the clock passes it (timed re-admission, half-open probing).
+    /// Ejection deadline in µs since `epoch`. Once the clock passes it
+    /// the replica is *half-open*, not healthy: one canary request must
+    /// succeed (`try_acquire_probe` / `probe_serve`) before full traffic
+    /// returns.
     ejected_until_us: AtomicU64,
+    /// Set on ejection, cleared by a successful canary. While set, the
+    /// replica never reports healthy even after the cooldown.
+    probe_pending: AtomicBool,
+    /// At most one canary in flight at a time (CAS-guarded).
+    probe_inflight: AtomicBool,
     epoch: Instant,
     errors_total: AtomicU64,
     ejections_total: AtomicU64,
+    probes_ok_total: AtomicU64,
+    probes_failed_total: AtomicU64,
 }
 
 impl Replica {
@@ -209,9 +218,13 @@ impl Replica {
             eject_after: eject_after.max(1),
             cooldown_us,
             ejected_until_us: AtomicU64::new(0),
+            probe_pending: AtomicBool::new(false),
+            probe_inflight: AtomicBool::new(false),
             epoch: Instant::now(),
             errors_total: AtomicU64::new(0),
             ejections_total: AtomicU64::new(0),
+            probes_ok_total: AtomicU64::new(0),
+            probes_failed_total: AtomicU64::new(0),
         }
     }
 
@@ -255,18 +268,72 @@ impl Replica {
         self.ejections_total.load(Ordering::Relaxed)
     }
 
-    /// Healthy = not inside an ejection cooldown window. When the window
-    /// passes the replica re-admits itself and the next request probes it
-    /// (success resets the error count; failure re-ejects immediately
-    /// because the count restarts at the threshold's doorstep of 0 and
-    /// climbs again).
+    /// Healthy = out of the ejection cooldown *and* re-proven: ejection
+    /// sets `probe_pending`, and only a successful canary
+    /// ([`Replica::probe_serve`]) clears it — half-open re-admission,
+    /// not the blind timed readmit this used to be. An ejected replica's
+    /// path back to traffic is: cooldown passes → `probing()` →
+    /// the router wins `try_acquire_probe` for one request →
+    /// `probe_serve` succeeds → healthy.
     pub fn healthy(&self) -> bool {
         self.now_us() >= self.ejected_until_us.load(Ordering::Relaxed)
+            && !self.probe_pending.load(Ordering::Relaxed)
+    }
+
+    /// Half-open: the cooldown has passed but the replica still owes a
+    /// successful canary.
+    pub fn probing(&self) -> bool {
+        self.probe_pending.load(Ordering::Relaxed)
+            && self.now_us() >= self.ejected_until_us.load(Ordering::Relaxed)
+    }
+
+    /// Claim the single canary slot of a half-open replica. The winner
+    /// must route exactly one request via [`Replica::probe_serve`].
+    pub fn try_acquire_probe(&self) -> bool {
+        self.probing()
+            && self
+                .probe_inflight
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+    }
+
+    /// Serve the canary request claimed by `try_acquire_probe`: success
+    /// fully re-admits the replica, a hard failure re-ejects it for
+    /// another cooldown, and backend pushback (`Overloaded`) is no
+    /// verdict either way — the slot frees for another canary.
+    pub fn probe_serve(&self, req: &Request) -> Result<Response> {
+        let result = self.serve_tracked(req);
+        match &result {
+            Ok(_) => {
+                self.probe_pending.store(false, Ordering::Relaxed);
+                self.probes_ok_total.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(Error::Overloaded(_)) => {}
+            Err(_) => {
+                self.probes_failed_total.fetch_add(1, Ordering::Relaxed);
+                // a failed canary is decisive: back to cooldown (unless
+                // serve_tracked's note_error already re-ejected)
+                if self.now_us() >= self.ejected_until_us.load(Ordering::Relaxed) {
+                    self.eject();
+                }
+            }
+        }
+        self.probe_inflight.store(false, Ordering::Release);
+        result
+    }
+
+    pub fn probes_ok_total(&self) -> u64 {
+        self.probes_ok_total.load(Ordering::Relaxed)
+    }
+
+    pub fn probes_failed_total(&self) -> u64 {
+        self.probes_failed_total.load(Ordering::Relaxed)
     }
 
     /// Force this replica out of rotation for its cooldown period.
     pub fn eject(&self) {
         self.ejected_until_us.store(self.now_us() + self.cooldown_us, Ordering::Relaxed);
+        self.probe_pending.store(true, Ordering::Relaxed);
         self.ejections_total.fetch_add(1, Ordering::Relaxed);
         self.consecutive_errors.store(0, Ordering::Relaxed);
     }
@@ -356,6 +423,7 @@ mod tests {
                 feature_us: 2,
                 queue_us: 0,
                 handoff_us: 0,
+                quality: crate::chaos::ServeQuality::Full,
             })
         }
     }
@@ -369,7 +437,7 @@ mod tests {
     }
 
     #[test]
-    fn consecutive_errors_eject_and_cooldown_readmits() {
+    fn consecutive_errors_eject_and_canary_readmits() {
         let b = flaky(true);
         // eject after 2 consecutive errors, 20 ms cooldown
         let r = Replica::new(0, b.clone(), 1, 2, 20_000);
@@ -379,11 +447,36 @@ mod tests {
         assert!(r.serve_tracked(&req()).is_err());
         assert!(!r.healthy(), "second consecutive error ejects");
         assert_eq!(r.ejections_total(), 1);
+        assert!(!r.try_acquire_probe(), "no canary inside the cooldown");
         std::thread::sleep(std::time::Duration::from_millis(25));
-        assert!(r.healthy(), "cooldown passed: timed re-admission");
-        // now the backend recovers; the probe succeeds and resets state
+        assert!(!r.healthy(), "cooldown alone no longer re-admits: half-open");
+        assert!(r.probing());
+        // the backend recovers; the canary succeeds and re-admits fully
         b.fail.store(false, Ordering::Relaxed);
-        assert!(r.serve_tracked(&req()).is_ok());
+        assert!(r.try_acquire_probe());
+        assert!(!r.try_acquire_probe(), "one canary at a time");
+        assert!(r.probe_serve(&req()).is_ok());
+        assert!(r.healthy(), "successful canary restores full traffic");
+        assert_eq!(r.probes_ok_total(), 1);
+    }
+
+    #[test]
+    fn failed_canary_re_ejects_for_another_cooldown() {
+        let b = flaky(true);
+        let r = Replica::new(0, b.clone(), 1, 2, 15_000);
+        r.eject();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(r.try_acquire_probe());
+        assert!(r.probe_serve(&req()).is_err());
+        assert_eq!(r.probes_failed_total(), 1);
+        assert!(!r.healthy());
+        assert!(!r.probing(), "failed canary restarted the cooldown");
+        assert!(!r.try_acquire_probe());
+        // second cooldown passes, backend is healthy now: canary wins
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        b.fail.store(false, Ordering::Relaxed);
+        assert!(r.try_acquire_probe());
+        assert!(r.probe_serve(&req()).is_ok());
         assert!(r.healthy());
     }
 

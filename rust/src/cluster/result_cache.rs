@@ -24,6 +24,20 @@
 //! Stored results carry the user id, sorted candidates, and a history
 //! hash, which are re-verified on every hit: a 64-bit key collision
 //! degrades to a miss, never to wrong scores.
+//!
+//! Two robustness properties are load-bearing for the chaos plane:
+//!
+//! * **leader failure promotes a waiter** — a leader that errors *or
+//!   unwinds* deregisters its flight before waking the waiters, and a
+//!   woken waiter loops back to the flight table: it either coalesces
+//!   behind a newer leader or registers as the **new leader** itself.
+//!   No waiter is ever wedged behind a dead flight, and a storm of
+//!   duplicates behind a panicking leader degrades to one retry at a
+//!   time instead of a thundering herd.
+//! * **feature-update invalidation** — [`ResultCache::invalidate_user`]
+//!   evicts every cached row scored from a user's features ahead of the
+//!   TTL, so the stale-serve degradation rungs can never return
+//!   pre-update scores from this tier.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -144,9 +158,11 @@ pub enum Begin<'a> {
     /// This request leads the computation: dispatch to a replica, then
     /// [`FlightGuard::complete`] with the outcome.
     Leader(FlightGuard<'a>),
-    /// The in-flight leader failed or timed out: dispatch without
-    /// registering (no re-coalescing — avoids convoys behind a request
-    /// that keeps failing).
+    /// The wait budget ran out against a leader that never resolved:
+    /// dispatch without registering (no re-coalescing — avoids convoys
+    /// behind a request that keeps failing). A leader *failure* is not
+    /// this case: failed leaders deregister, and the woken waiter loops
+    /// back to become the new leader.
     Fallback,
 }
 
@@ -186,6 +202,7 @@ impl FlightGuard<'_> {
                     scores: resp.scores.clone(),
                 });
                 self.cache.cache.insert(self.key, Arc::clone(&cached));
+                self.cache.note_user_key(req.user_id, self.key);
                 let span_id = self.span_id;
                 self.finish(Ok((cached, span_id)));
             }
@@ -220,6 +237,9 @@ pub struct ResultCache {
     /// key → in-flight computation (present only while a leader runs),
     /// sharded by key hash so misses on different keys don't contend.
     inflight: Vec<Mutex<HashMap<u64, Arc<Flight>>>>,
+    /// user_id → cache keys holding results scored from that user's
+    /// features — the invalidation index behind [`Self::invalidate_user`].
+    users: Mutex<HashMap<u64, Vec<u64>>>,
     coalesce: bool,
     salt: u64,
     hits: AtomicU64,
@@ -243,6 +263,7 @@ impl ResultCache {
         Some(ResultCache {
             cache: ShardedCache::new(cfg.capacity, SHARDS, ttl),
             inflight: (0..FLIGHT_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            users: Mutex::new(HashMap::new()),
             coalesce: cfg.coalesce,
             salt: cfg.scenario_salt,
             hits: AtomicU64::new(0),
@@ -266,6 +287,31 @@ impl ResultCache {
     /// low bits index uniformly).
     fn flight_shard(&self, key: u64) -> &Mutex<HashMap<u64, Arc<Flight>>> {
         &self.inflight[(key as usize) & (FLIGHT_SHARDS - 1)]
+    }
+
+    /// Record that `key` holds a result scored from `user_id`'s features
+    /// (called by the leader on publication).
+    fn note_user_key(&self, user_id: u64, key: u64) {
+        let mut map = self.users.lock().unwrap_or_else(|e| e.into_inner());
+        let keys = map.entry(user_id).or_default();
+        if !keys.contains(&key) {
+            keys.push(key);
+        }
+    }
+
+    /// Upstream feature-update hook: a user's features just changed, so
+    /// every cached result scored from the old ones is now wrong in a
+    /// way the TTL cannot see. Evicts them immediately and returns how
+    /// many live entries were removed (already-expired or evicted rows
+    /// don't count).
+    pub fn invalidate_user(&self, user_id: u64) -> usize {
+        let keys = self
+            .users
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(&user_id)
+            .unwrap_or_default();
+        keys.into_iter().filter(|&k| self.cache.remove(k)).count()
     }
 
     /// Canonical cache key: scenario salt + user + history hash + sorted
@@ -309,49 +355,69 @@ impl ResultCache {
                 span_id: 0,
             });
         }
-        let flight = {
-            let mut map = self.flight_shard(key).lock().unwrap_or_else(|e| e.into_inner());
-            if let Some(f) = map.get(&key) {
-                Arc::clone(f)
-            } else {
-                // Double-check the cache while holding the key's shard
-                // lock: a leader we would have waited on may have just
-                // finished — it publishes to the cache *before*
-                // deregistering (from this same shard, since a key maps
-                // to exactly one shard), so a fresh entry here is
-                // authoritative and closes the check-then-act window
-                // that would otherwise let a descheduled thread become
-                // a second leader.
-                if let Lookup::Fresh(cached) = self.cache.get(key) {
-                    if cached.matches(req.user_id, &sorted, history_hash) {
-                        self.hits.fetch_add(1, Ordering::Relaxed);
-                        return Begin::Hit(self.response_from(req, &cached));
+        // Flight-table loop: each pass either registers this request as
+        // the leader, or parks it behind the current one. A leader that
+        // *fails or unwinds* deregisters its flight before waking the
+        // waiters, so a woken waiter loops back here and — finding the
+        // slot empty — becomes the NEW leader (or coalesces behind
+        // whoever beat it to the slot). Only the deadline exhausting
+        // produces `Fallback`; a dead leader never wedges its waiters.
+        let deadline = Instant::now() + wait_budget.min(Duration::from_secs(60));
+        loop {
+            let flight = {
+                let mut map =
+                    self.flight_shard(key).lock().unwrap_or_else(|e| e.into_inner());
+                if let Some(f) = map.get(&key) {
+                    Arc::clone(f)
+                } else {
+                    // Double-check the cache while holding the key's shard
+                    // lock: a leader we would have waited on may have just
+                    // finished — it publishes to the cache *before*
+                    // deregistering (from this same shard, since a key maps
+                    // to exactly one shard), so a fresh entry here is
+                    // authoritative and closes the check-then-act window
+                    // that would otherwise let a descheduled thread become
+                    // a second leader.
+                    if let Lookup::Fresh(cached) = self.cache.get(key) {
+                        if cached.matches(req.user_id, &sorted, history_hash) {
+                            self.hits.fetch_add(1, Ordering::Relaxed);
+                            return Begin::Hit(self.response_from(req, &cached));
+                        }
                     }
+                    let flight = Arc::new(Flight::new());
+                    map.insert(key, Arc::clone(&flight));
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return Begin::Leader(FlightGuard {
+                        cache: self,
+                        key,
+                        sorted,
+                        history_hash,
+                        flight: Some(flight),
+                        span_id: 0,
+                    });
                 }
-                let flight = Arc::new(Flight::new());
-                map.insert(key, Arc::clone(&flight));
+            };
+            let now = Instant::now();
+            if now >= deadline {
                 self.misses.fetch_add(1, Ordering::Relaxed);
-                return Begin::Leader(FlightGuard {
-                    cache: self,
-                    key,
-                    sorted,
-                    history_hash,
-                    flight: Some(flight),
-                    span_id: 0,
-                });
+                return Begin::Fallback;
             }
-        };
-        match flight.wait(wait_budget) {
-            Some(Ok((cached, leader_span)))
-                if cached.matches(req.user_id, &sorted, history_hash) =>
-            {
-                self.coalesced.fetch_add(1, Ordering::Relaxed);
-                Begin::Coalesced(self.response_from(req, &cached), leader_span)
-            }
-            // leader failed, timed out, or (vanishingly) a key collision
-            _ => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                Begin::Fallback
+            match flight.wait(deadline - now) {
+                Some(Ok((cached, leader_span)))
+                    if cached.matches(req.user_id, &sorted, history_hash) =>
+                {
+                    self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    return Begin::Coalesced(self.response_from(req, &cached), leader_span);
+                }
+                // leader failed/unwound (or, vanishingly, published a
+                // colliding key): its flight is gone — loop back and
+                // take the lead ourselves if the slot is still empty
+                Some(_) => continue,
+                // budget exhausted against a live-but-slow leader
+                None => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return Begin::Fallback;
+                }
             }
         }
     }
@@ -388,6 +454,9 @@ impl ResultCache {
             feature_us: 0,
             queue_us: 0,
             handoff_us: 0,
+            // served from the result tier, not a live computation: the
+            // CachedResult rung of the degradation ladder
+            quality: crate::chaos::ServeQuality::CachedResult,
         }
     }
 }
@@ -417,6 +486,7 @@ mod tests {
             feature_us: 10,
             queue_us: 0,
             handoff_us: 0,
+            quality: crate::chaos::ServeQuality::Full,
         }
     }
 
@@ -483,8 +553,13 @@ mod tests {
         assert!(matches!(rc.begin(&r, Duration::from_secs(1)), Begin::Leader(_)));
     }
 
+    /// Regression (single-flight leader panic): an unwinding leader used
+    /// to strand its waiters into `Fallback`; now the woken waiter loops
+    /// back to the (deregistered) flight slot and takes the lead itself.
+    /// If either half of the fix is lost — the drop-time wake or the
+    /// waiter's re-registration loop — this test hangs or fails.
     #[test]
-    fn dropped_guard_wakes_waiters_empty_handed() {
+    fn dropped_guard_promotes_waiter_to_new_leader() {
         let rc = Arc::new(cache(true));
         let r = req(0, 3, vec![1, 2]);
         let guard = match rc.begin(&r, Duration::from_secs(1)) {
@@ -498,7 +573,14 @@ mod tests {
             let rc2 = Arc::clone(&rc);
             let waiter = s.spawn(move || {
                 let w = req(1, 3, vec![1, 2]);
-                matches!(rc2.begin(&w, Duration::from_secs(30)), Begin::Fallback)
+                match rc2.begin(&w, Duration::from_secs(30)) {
+                    Begin::Leader(g) => {
+                        // the promoted waiter can complete and publish
+                        g.complete(&w, &Ok(resp(&w, 2)));
+                        true
+                    }
+                    _ => false,
+                }
             });
             // wait until the waiter is actually parked behind the flight,
             // then unwind the leader without completing
@@ -510,8 +592,99 @@ mod tests {
             }
             assert!(Arc::strong_count(&probe) >= 4, "waiter never enqueued");
             drop(guard);
-            assert!(waiter.join().unwrap(), "waiter must fall back, not hang");
+            assert!(waiter.join().unwrap(), "waiter must become the new leader, not hang");
         });
+        // the promoted leader's publication is live: next arrival hits
+        let again = req(2, 3, vec![1, 2]);
+        assert!(matches!(rc.begin(&again, Duration::from_secs(1)), Begin::Hit(_)));
+    }
+
+    /// Chaos-flavored variant: the leader dies by *panic* (caught by a
+    /// supervisor, as in the pipeline/executor loops) rather than a tidy
+    /// drop. All waiters must wake; one becomes the new leader, the rest
+    /// coalesce behind it once it publishes.
+    #[test]
+    fn leader_panic_wakes_all_waiters_one_becomes_leader() {
+        const WAITERS: usize = 4;
+        let rc = Arc::new(cache(true));
+        let r = req(0, 4, vec![7, 8]);
+        let guard = match rc.begin(&r, Duration::from_secs(1)) {
+            Begin::Leader(g) => g,
+            _ => panic!("must lead"),
+        };
+        let probe = Arc::clone(guard.flight.as_ref().unwrap());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..WAITERS)
+                .map(|i| {
+                    let rc2 = Arc::clone(&rc);
+                    s.spawn(move || {
+                        let w = req(1 + i as u64, 4, vec![7, 8]);
+                        match rc2.begin(&w, Duration::from_secs(30)) {
+                            Begin::Leader(g) => {
+                                g.complete(&w, &Ok(resp(&w, 2)));
+                                "led"
+                            }
+                            Begin::Coalesced(..) | Begin::Hit(_) => "shared",
+                            Begin::Fallback => "fallback",
+                        }
+                    })
+                })
+                .collect();
+            // all waiters parked: map + guard + probe + N waiters
+            for _ in 0..5_000 {
+                if Arc::strong_count(&probe) >= 3 + WAITERS {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            assert!(Arc::strong_count(&probe) >= 3 + WAITERS, "waiters never enqueued");
+            // lint: supervisor — test-local stand-in for the pipeline
+            // supervisor: the panic must unwind the guard, not the test
+            let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                let _doomed = guard;
+                // lint: allow(panic) simulated leader crash, caught above
+                panic!("chaos: leader panic mid-computation");
+            }));
+            assert!(unwound.is_err());
+            let outcomes: Vec<&str> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            assert_eq!(
+                outcomes.iter().filter(|&&o| o == "led").count(),
+                1,
+                "exactly one waiter takes the lead: {outcomes:?}"
+            );
+            assert_eq!(
+                outcomes.iter().filter(|&&o| o == "shared").count(),
+                WAITERS - 1,
+                "the rest share the new leader's result: {outcomes:?}"
+            );
+        });
+    }
+
+    /// Satellite: an upstream user-feature update evicts that user's
+    /// cached results ahead of the TTL — a post-update duplicate misses
+    /// and recomputes instead of serving pre-update scores.
+    #[test]
+    fn user_feature_update_evicts_cached_results() {
+        let rc = cache(true);
+        let r = req(0, 7, vec![10, 20]);
+        let Begin::Leader(guard) = rc.begin(&r, Duration::from_secs(1)) else {
+            panic!("must lead");
+        };
+        guard.complete(&r, &Ok(resp(&r, 2)));
+        assert!(matches!(rc.begin(&req(1, 7, vec![10, 20]), Duration::from_secs(1)), Begin::Hit(_)));
+
+        // invalidating an unrelated user leaves the entry live
+        assert_eq!(rc.invalidate_user(8), 0);
+        assert!(matches!(rc.begin(&req(2, 7, vec![10, 20]), Duration::from_secs(1)), Begin::Hit(_)));
+
+        // the user's own update evicts: next duplicate must recompute
+        assert_eq!(rc.invalidate_user(7), 1);
+        assert!(
+            matches!(rc.begin(&req(3, 7, vec![10, 20]), Duration::from_secs(1)), Begin::Leader(_)),
+            "post-update duplicate must miss and lead a fresh computation"
+        );
+        // idempotent: the index entry was consumed
+        assert_eq!(rc.invalidate_user(7), 0);
     }
 
     #[test]

@@ -14,10 +14,11 @@
 //!   the deadline admission controller has a real signal to act on.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cache::{Lookup, ShardedCache};
+use crate::chaos::{ChaosSlot, FaultPlan};
 use crate::error::{Error, Result};
 use crate::server::pipeline::Response;
 use crate::util::timeutil::precise_wait;
@@ -94,13 +95,33 @@ pub struct SimReplica {
     slots: Slots,
     fail_next: AtomicU32,
     served_total: AtomicU64,
+    /// Fault-injection point: brownout (service-time multiplier) and
+    /// hard-crash windows keyed by this replica's cluster index.
+    chaos: ChaosSlot,
+    chaos_id: AtomicUsize,
 }
 
 impl SimReplica {
     pub fn new(cfg: SimConfig) -> Self {
         let cache = ShardedCache::new(cfg.cache_capacity, 8, Duration::from_secs(3_600));
         let slots = Slots::new(cfg.slots);
-        SimReplica { cfg, cache, slots, fail_next: AtomicU32::new(0), served_total: AtomicU64::new(0) }
+        SimReplica {
+            cfg,
+            cache,
+            slots,
+            fail_next: AtomicU32::new(0),
+            served_total: AtomicU64::new(0),
+            chaos: ChaosSlot::new(),
+            chaos_id: AtomicUsize::new(0),
+        }
+    }
+
+    /// Arm the replica's fault-injection point. `id` is the replica's
+    /// cluster index — what `brownout:replica=N` / `crash:replica=N`
+    /// clauses key on.
+    pub fn arm_chaos(&self, id: usize, plan: Arc<FaultPlan>) {
+        self.chaos_id.store(id, Ordering::Relaxed);
+        self.chaos.arm(plan);
     }
 
     /// Make the next `n` serve calls fail (health/ejection tests).
@@ -129,6 +150,11 @@ impl ReplicaBackend for SimReplica {
         {
             return Err(Error::Internal("sim: injected replica failure".into()));
         }
+        if let Some(plan) = self.chaos.get() {
+            if plan.crashed(self.chaos_id.load(Ordering::Relaxed)) {
+                return Err(Error::Internal("chaos: replica crash".into()));
+            }
+        }
 
         let t0 = Instant::now();
         self.slots.acquire();
@@ -140,7 +166,14 @@ impl ReplicaBackend for SimReplica {
         }
         let compute_us = self.cfg.base_us + self.cfg.per_pair_ns * req.m() as u64 / 1_000;
         let feature_us = if miss { self.cfg.miss_penalty_us } else { 0 };
-        precise_wait(Duration::from_micros(compute_us + feature_us));
+        // a browned-out replica still answers, just `x` times slower —
+        // the router's hedging exists to route around exactly this
+        let brownout_x = self
+            .chaos
+            .get()
+            .and_then(|p| p.brownout_x(self.chaos_id.load(Ordering::Relaxed)))
+            .unwrap_or(1) as u64;
+        precise_wait(Duration::from_micros((compute_us + feature_us) * brownout_x));
         self.slots.release();
 
         self.served_total.fetch_add(1, Ordering::Relaxed);
@@ -153,6 +186,7 @@ impl ReplicaBackend for SimReplica {
             feature_us,
             queue_us,
             handoff_us: 0,
+            quality: crate::chaos::ServeQuality::Full,
         })
     }
 
@@ -215,6 +249,32 @@ mod tests {
         assert!(r.serve(&req(0, 1, 1)).is_err());
         assert!(r.serve(&req(1, 1, 1)).is_err());
         assert!(r.serve(&req(2, 1, 1)).is_ok());
+    }
+
+    #[test]
+    fn chaos_brownout_multiplies_service_time() {
+        let cfg = SimConfig { base_us: 500, per_pair_ns: 0, miss_penalty_us: 0, ..SimConfig::default() };
+        let healthy = SimReplica::new(cfg.clone());
+        let t0 = Instant::now();
+        healthy.serve(&req(0, 1, 1)).unwrap();
+        let base = t0.elapsed();
+
+        let browned = SimReplica::new(cfg);
+        browned.arm_chaos(2, Arc::new(crate::chaos::FaultPlan::parse("brownout:replica=2,x=8", 0).unwrap()));
+        let t1 = Instant::now();
+        browned.serve(&req(1, 1, 1)).unwrap();
+        let slow = t1.elapsed();
+        assert!(slow >= base * 3, "brownout x=8: healthy {base:?} vs browned {slow:?}");
+    }
+
+    #[test]
+    fn chaos_crash_window_fails_then_recovers() {
+        let r = SimReplica::new(fast_cfg());
+        r.arm_chaos(0, Arc::new(crate::chaos::FaultPlan::parse("crash:replica=0,after=1,down=2", 0).unwrap()));
+        assert!(r.serve(&req(0, 1, 1)).is_ok(), "before the window");
+        assert!(r.serve(&req(1, 1, 1)).is_err());
+        assert!(r.serve(&req(2, 1, 1)).is_err());
+        assert!(r.serve(&req(3, 1, 1)).is_ok(), "window closed");
     }
 
     #[test]

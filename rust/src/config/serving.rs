@@ -170,6 +170,12 @@ pub struct ServerConfig {
     /// default — the hot path then allocates nothing for observability).
     /// SLA-miss exemplars are retained regardless of the sampling draw.
     pub trace_sample_n: u64,
+    /// Degradation ladder (decoupled mode): a request whose remaining
+    /// deadline cannot fit its full candidate set is truncated to the
+    /// prefix that fits (`ServeQuality::TruncatedCandidates`) instead of
+    /// missing its SLA with the full set. Off by default — callers that
+    /// prefer late-but-complete answers keep them.
+    pub truncate_over_budget: bool,
 }
 
 impl Default for ServerConfig {
@@ -183,6 +189,7 @@ impl Default for ServerConfig {
             bind_addr: None,
             deadline_ms: 50,
             trace_sample_n: 0,
+            truncate_over_budget: false,
         }
     }
 }
@@ -309,6 +316,9 @@ impl StackConfig {
             if let Some(v) = s.opt("trace_sample_n") {
                 c.server.trace_sample_n = v.as_u64()?;
             }
+            if let Some(v) = s.opt("truncate_over_budget") {
+                c.server.truncate_over_budget = v.as_bool()?;
+            }
         }
         if let Some(w) = j.opt("workload") {
             if let Some(v) = w.opt("catalog_size") {
@@ -365,6 +375,7 @@ mod tests {
         assert!(c.dso.coalesce_wait_us < 50_000, "wait bound within the paper envelope");
         assert!(!c.server.pipeline, "decoupled pipeline is opt-in");
         assert!(!c.server.deadline_first, "deadline-first intake is opt-in");
+        assert!(!c.server.truncate_over_budget, "candidate truncation is opt-in");
         assert!(c.server.feature_workers >= 1);
         assert!(c.server.handoff_capacity >= 1);
         assert_eq!(c.server.deadline_ms, 50); // paper envelope

@@ -21,8 +21,9 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::chaos::{ChaosSlot, FaultPlan, PanicSite};
 use crate::config::{DsoConfig, DsoMode};
 use crate::error::{Error, Result};
 use crate::metrics::Recorder;
@@ -114,6 +115,9 @@ pub struct Orchestrator {
     flusher: Option<std::thread::JoinHandle<()>>,
     pub padded_rows_total: Arc<AtomicU64>,
     pub executed_rows_total: Arc<AtomicU64>,
+    /// Fault-injection point shared with every executor thread:
+    /// compute-backend stalls and executor-panic schedules.
+    chaos: Arc<ChaosSlot>,
 }
 
 impl Orchestrator {
@@ -163,6 +167,7 @@ impl Orchestrator {
         let buffers = Arc::new(BufferPool::new(2 * cfg.executors_per_profile.max(1) + 2));
         let padded_rows_total = Arc::new(AtomicU64::new(0));
         let executed_rows_total = Arc::new(AtomicU64::new(0));
+        let chaos = Arc::new(ChaosSlot::new());
         let mut pools = BTreeMap::new();
         let mut profiles = Vec::new();
         let in_flight = Arc::new(AtomicUsize::new(0));
@@ -180,6 +185,7 @@ impl Orchestrator {
                     executed_rows: Arc::clone(&executed_rows_total),
                     padded_rows: Arc::clone(&padded_rows_total),
                     recorder: recorder.clone(),
+                    chaos: Arc::clone(&chaos),
                 };
                 workers.push(
                     std::thread::Builder::new()
@@ -229,7 +235,14 @@ impl Orchestrator {
             flusher,
             padded_rows_total,
             executed_rows_total,
+            chaos,
         })
+    }
+
+    /// Arm the executors' fault-injection point with a chaos plan
+    /// (compute stalls and executor-panic schedules).
+    pub fn arm_chaos(&self, plan: Arc<FaultPlan>) {
+        self.chaos.arm(plan);
     }
 
     pub fn profiles(&self) -> &[usize] {
@@ -526,10 +539,13 @@ struct ExecutorCtx {
     /// For launch spans: the stack's recorder carries the tracer when
     /// tracing is on (None / no tracer ⇒ zero per-launch overhead).
     recorder: Option<Arc<Recorder>>,
+    /// Fault-injection point: compute stalls and executor panics.
+    chaos: Arc<ChaosSlot>,
 }
 
 fn executor_loop(ctx: ExecutorCtx) {
-    let ExecutorCtx { rx, engine, in_flight, buffers, executed_rows, padded_rows, recorder } = ctx;
+    let ExecutorCtx { rx, engine, in_flight, buffers, executed_rows, padded_rows, recorder, chaos } =
+        ctx;
     let n_tasks = engine.n_tasks();
     let m = engine.m();
     loop {
@@ -540,93 +556,137 @@ fn executor_loop(ctx: ExecutorCtx) {
                 Err(_) => return, // orchestrator dropped
             }
         };
-        let picked = Instant::now();
-        let real_rows: usize = job.segments.iter().map(|s| s.rows).sum();
-        let pad = m - real_rows;
-        // waste accounting lives here, where the backend's real launch
-        // cost is known (a segment-emulating backend replays per hist)
-        let launched = engine.executed_rows_for(job.segments.len());
-        executed_rows.fetch_add(launched as u64, Ordering::Relaxed);
-        padded_rows.fetch_add((launched - real_rows) as u64, Ordering::Relaxed);
-        let last = job.segments.len() - 1;
-        let binds: Vec<SegmentBind<'_>> = job
-            .segments
-            .iter()
-            .enumerate()
-            .map(|(i, s)| SegmentBind {
-                hist: &s.hist,
-                // pad rows repeat the last segment's final row, so they
-                // bind that segment's history
-                rows: s.rows + if i == last { pad } else { 0 },
-            })
-            .collect();
-        // shared launch span: one per packed launch when any rider is
-        // traced. Lists every rider's trace id — including riders head
-        // sampling dropped — so cross-request causality survives
-        // sampling; riders link back through `launch_id`.
-        let tracing = recorder
-            .as_ref()
-            .filter(|_| job.segments.iter().any(|s| s.trace_id != 0))
-            .and_then(|r| r.tracer().map(|t| (Arc::clone(t), r.tracer_pid())));
-        let launch_begin = tracing.as_ref().map_or(0, |(t, _)| t.now_us());
-        // compute_us is measured around the launch alone — queue delay
-        // (including coalesce wait) is reported separately per segment
-        let t0 = Instant::now();
-        let result = engine.run_segmented(&binds, &job.cands);
-        let compute_us = t0.elapsed().as_micros() as u64;
-        let launch_id = match &tracing {
-            Some((t, pid)) => {
-                let id = t.new_span_id();
-                t.emit_shared(SharedSpan {
-                    span_id: id,
-                    kind: StageKind::Launch,
-                    label: format!(
-                        "launch m={m} [{}] ×{}",
-                        engine.label(),
-                        job.segments.len()
-                    ),
-                    begin_us: launch_begin,
-                    end_us: t.now_us(),
-                    pid: *pid,
-                    tid: obs::tid(),
-                    member_traces: job
-                        .segments
-                        .iter()
-                        .map(|s| s.trace_id)
-                        .filter(|&id| id != 0)
-                        .collect(),
-                });
-                id
+        // lint: supervisor — a panic mid-launch (injected or real) must
+        // fail this job's riders with a typed error, release their queue
+        // units, and leave the executor alive for the next job. The job
+        // is only borrowed by the supervised body, so its reply channels
+        // and buffer survive an unwind.
+        let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(&job, &engine, &executed_rows, &padded_rows, &recorder, &chaos, n_tasks, m)
+        }));
+        if ran.is_err() {
+            if let Some(r) = &recorder {
+                r.record_worker_restart();
             }
-            None => 0,
-        };
-        match result {
-            Ok(scores) => {
-                let mut off = 0usize;
-                for seg in &job.segments {
-                    let part = scores[off * n_tasks..(off + seg.rows) * n_tasks].to_vec();
-                    off += seg.rows;
-                    let queue_us =
-                        picked.saturating_duration_since(seg.enqueued).as_micros() as u64;
-                    let _ = seg.reply.send(Ok(ChunkDone {
-                        chunk_index: seg.chunk_index,
-                        scores: part,
-                        queue_us,
-                        compute_us,
-                        launch_id,
-                    }));
-                }
-            }
-            Err(e) => {
-                for seg in &job.segments {
-                    let _ = seg.reply.send(Err(Error::Internal(format!(
-                        "{}: packed launch failed: {e}",
-                        engine.label()
-                    ))));
-                }
+            for seg in &job.segments {
+                let _ = seg.reply.send(Err(Error::WorkerPanic(format!(
+                    "{}: executor panicked mid-launch",
+                    engine.label()
+                ))));
             }
         }
         in_flight.fetch_sub(job.segments.len(), Ordering::AcqRel);
         buffers.put(job.cands);
+    }
+}
+
+/// The supervised per-job body of [`executor_loop`]: accounting, the
+/// engine launch, and per-segment demux. Split out so the unwind
+/// boundary around it stays visually small.
+#[allow(clippy::too_many_arguments)]
+fn run_job(
+    job: &Job,
+    engine: &Arc<dyn ComputeBackend>,
+    executed_rows: &AtomicU64,
+    padded_rows: &AtomicU64,
+    recorder: &Option<Arc<Recorder>>,
+    chaos: &ChaosSlot,
+    n_tasks: usize,
+    m: usize,
+) {
+    if let Some(plan) = chaos.get() {
+        if let Some(us) = plan.compute_stall_us() {
+            crate::util::timeutil::precise_wait(Duration::from_micros(us));
+        }
+        if plan.panic_due(PanicSite::Executor) {
+            // lint: allow(panic) chaos injection, caught by the executor supervisor
+            panic!("chaos: injected executor panic");
+        }
+    }
+    let picked = Instant::now();
+    let real_rows: usize = job.segments.iter().map(|s| s.rows).sum();
+    let pad = m - real_rows;
+    // waste accounting lives here, where the backend's real launch
+    // cost is known (a segment-emulating backend replays per hist)
+    let launched = engine.executed_rows_for(job.segments.len());
+    executed_rows.fetch_add(launched as u64, Ordering::Relaxed);
+    padded_rows.fetch_add((launched - real_rows) as u64, Ordering::Relaxed);
+    let last = job.segments.len() - 1;
+    let binds: Vec<SegmentBind<'_>> = job
+        .segments
+        .iter()
+        .enumerate()
+        .map(|(i, s)| SegmentBind {
+            hist: &s.hist,
+            // pad rows repeat the last segment's final row, so they
+            // bind that segment's history
+            rows: s.rows + if i == last { pad } else { 0 },
+        })
+        .collect();
+    // shared launch span: one per packed launch when any rider is
+    // traced. Lists every rider's trace id — including riders head
+    // sampling dropped — so cross-request causality survives
+    // sampling; riders link back through `launch_id`.
+    let tracing = recorder
+        .as_ref()
+        .filter(|_| job.segments.iter().any(|s| s.trace_id != 0))
+        .and_then(|r| r.tracer().map(|t| (Arc::clone(t), r.tracer_pid())));
+    let launch_begin = tracing.as_ref().map_or(0, |(t, _)| t.now_us());
+    // compute_us is measured around the launch alone — queue delay
+    // (including coalesce wait) is reported separately per segment
+    let t0 = Instant::now();
+    let result = engine.run_segmented(&binds, &job.cands);
+    let compute_us = t0.elapsed().as_micros() as u64;
+    let launch_id = match &tracing {
+        Some((t, pid)) => {
+            let id = t.new_span_id();
+            t.emit_shared(SharedSpan {
+                span_id: id,
+                kind: StageKind::Launch,
+                label: format!(
+                    "launch m={m} [{}] ×{}",
+                    engine.label(),
+                    job.segments.len()
+                ),
+                begin_us: launch_begin,
+                end_us: t.now_us(),
+                pid: *pid,
+                tid: obs::tid(),
+                member_traces: job
+                    .segments
+                    .iter()
+                    .map(|s| s.trace_id)
+                    .filter(|&id| id != 0)
+                    .collect(),
+            });
+            id
+        }
+        None => 0,
+    };
+    match result {
+        Ok(scores) => {
+            let mut off = 0usize;
+            for seg in &job.segments {
+                let part = scores[off * n_tasks..(off + seg.rows) * n_tasks].to_vec();
+                off += seg.rows;
+                let queue_us =
+                    picked.saturating_duration_since(seg.enqueued).as_micros() as u64;
+                let _ = seg.reply.send(Ok(ChunkDone {
+                    chunk_index: seg.chunk_index,
+                    scores: part,
+                    queue_us,
+                    compute_us,
+                    launch_id,
+                }));
+            }
+        }
+        Err(e) => {
+            for seg in &job.segments {
+                let _ = seg.reply.send(Err(Error::Internal(format!(
+                    "{}: packed launch failed: {e}",
+                    engine.label()
+                ))));
+            }
+        }
     }
 }

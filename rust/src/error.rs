@@ -26,6 +26,12 @@ pub enum Error {
     Protocol(String),
     /// Internal invariant broken (worker died, channel closed, ...).
     Internal(String),
+    /// The stack is shutting down: blocked producers and queued work are
+    /// woken and handed this instead of hanging on a closed queue.
+    Shutdown(String),
+    /// A supervised worker panicked while holding this request; the
+    /// supervisor failed the request and restarted the worker.
+    WorkerPanic(String),
 }
 
 impl fmt::Display for Error {
@@ -40,6 +46,8 @@ impl fmt::Display for Error {
             Error::UnknownEngine(m) => write!(f, "unknown engine: {m}"),
             Error::Protocol(m) => write!(f, "protocol error: {m}"),
             Error::Internal(m) => write!(f, "internal error: {m}"),
+            Error::Shutdown(m) => write!(f, "shutting down: {m}"),
+            Error::WorkerPanic(m) => write!(f, "worker panicked: {m}"),
         }
     }
 }

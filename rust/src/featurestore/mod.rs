@@ -12,6 +12,7 @@ pub mod catalog;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::chaos::{ChaosSlot, FaultPlan, StoreFault};
 use crate::netsim::Link;
 use crate::util::rng::Rng;
 
@@ -66,6 +67,9 @@ pub struct RemoteStore {
     /// reads, serialization) — this is what makes cache hits cut *latency*
     /// and not just bytes.
     per_item: Duration,
+    /// Fault-injection point: the armed plan can delay, fail, or time
+    /// out remote batches (`chaos` module docs).
+    chaos: ChaosSlot,
 }
 
 impl RemoteStore {
@@ -77,7 +81,13 @@ impl RemoteStore {
             epoch: std::sync::atomic::AtomicU64::new(0),
             proc_time: Duration::from_micros(50),
             per_item: Duration::from_micros(40),
+            chaos: ChaosSlot::new(),
         }
+    }
+
+    /// Arm the store's fault-injection point with a chaos plan.
+    pub fn arm_chaos(&self, plan: Arc<FaultPlan>) {
+        self.chaos.arm(plan);
     }
 
     /// Override the server-side cost model (tests/benches).
@@ -134,6 +144,23 @@ impl RemoteStore {
         &self,
         item_ids: &[u64],
     ) -> Result<Vec<ItemFeatures>, crate::netsim::TransferTimeout> {
+        if let Some(plan) = self.chaos.get() {
+            match plan.store_fault() {
+                StoreFault::None => {}
+                StoreFault::Delay(us) => {
+                    crate::util::timeutil::precise_wait(Duration::from_micros(us));
+                }
+                StoreFault::Error => return Err(crate::netsim::TransferTimeout),
+                StoreFault::Timeout => {
+                    // like a real link timeout, the caller burns 3x the
+                    // healthy service time before giving up
+                    let healthy =
+                        self.proc_time + self.per_item * item_ids.len() as u32;
+                    crate::util::timeutil::precise_wait(healthy * 3);
+                    return Err(crate::netsim::TransferTimeout);
+                }
+            }
+        }
         let bytes = self.schema.wire_bytes(item_ids.len());
         match self.link.try_transfer(bytes) {
             Ok(_) => {
@@ -201,5 +228,30 @@ mod tests {
     fn dense_dims_respected() {
         let s = store();
         assert_eq!(s.fetch_one(5).dense.len(), s.schema().dense_dims);
+    }
+
+    #[test]
+    fn chaos_plan_fails_fallible_batches_only() {
+        let s = store();
+        s.arm_chaos(Arc::new(crate::chaos::FaultPlan::parse("store_error:p=1", 1).unwrap()));
+        assert!(s.try_fetch_batch(&[1, 2]).is_err());
+        assert!(s.try_fetch_batch(&[3]).is_err());
+        // the infallible path (async refresh workers) is not faulted
+        assert_eq!(s.fetch_batch(&[1]).len(), 1);
+    }
+
+    #[test]
+    fn chaos_timeout_burns_a_penalty() {
+        let s = store();
+        let t0 = std::time::Instant::now();
+        let ok = s.try_fetch_batch(&[1, 2, 3]);
+        let healthy = t0.elapsed();
+        assert!(ok.is_ok());
+        s.arm_chaos(Arc::new(
+            crate::chaos::FaultPlan::parse("store_timeout:p=1", 1).unwrap(),
+        ));
+        let t1 = std::time::Instant::now();
+        assert!(s.try_fetch_batch(&[1, 2, 3]).is_err());
+        assert!(t1.elapsed() > healthy / 2, "injected timeout must not be free");
     }
 }

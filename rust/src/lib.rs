@@ -171,6 +171,42 @@
 //! `OnceLock::get` returning `None` — zero allocations, asserted by a
 //! regression test.
 //!
+//! ## Robustness: chaos plane, degradation ladder, supervised recovery
+//!
+//! The paper's envelope — accurate results in tens of milliseconds over
+//! 1e10..1e12 requests/day — only means something if it holds while
+//! replicas brown out, feature stores stall, and workers die. The
+//! [`chaos`] module is a crate-wide fault-injection plane: a seeded,
+//! deterministic [`chaos::FaultPlan`] (CLI: `--chaos
+//! "store_timeout:p=0.05,brownout:replica=1,x=8"`) that the feature
+//! store, the sim replicas, the DSO executors, and the pipeline stages
+//! consult through cheap armed-`OnceLock` injection points
+//! ([`chaos::ChaosSlot`] — one `OnceLock::get` when unarmed, mirroring
+//! the tracing hook). On top of it sit three behaviours:
+//!
+//! * **Degradation ladder** — every response carries a
+//!   [`chaos::ServeQuality`] (Full → StaleFeatures → TruncatedCandidates
+//!   → CachedResult → Shed): a store timeout serves stale/default
+//!   features instead of erroring (the existing §3.1 stance, now
+//!   surfaced per request), an over-budget request truncates its
+//!   candidate set to the top-K that fit the remaining deadline, and
+//!   the cluster tier adds budget-aware retry-with-backoff plus one
+//!   hedged re-dispatch to a second replica when the picked one is
+//!   browned out. Qualities, retries, and hedges are counted in the
+//!   [`metrics::Recorder`] and stamped into traces.
+//! * **Supervised recovery** — pipeline stage workers and DSO executors
+//!   run each request under a supervisor (`catch_unwind` sites tagged
+//!   `// lint: supervisor`, enforced by `flame lint`): a panic fails
+//!   the in-flight request with a typed [`Error::WorkerPanic`] instead
+//!   of wedging its reply channel, the worker body restarts
+//!   (`worker_restarts` in the recorder), and replica re-admission is a
+//!   half-open probe — one canary must succeed before full traffic.
+//! * **No lost requests** — `tests/chaos.rs` drives the sim-backed
+//!   stack through seeded fault storms (store timeouts + brownout +
+//!   crash + injected worker panics) asserting that every submitted
+//!   request resolves with a response or a typed error before its
+//!   deadline-plus-grace, and that post-storm throughput recovers.
+//!
 //! ## Concurrency invariants
 //!
 //! The serve path's concurrency is hand-rolled, and its correctness
@@ -227,6 +263,7 @@
 pub mod batching;
 pub mod benchkit;
 pub mod cache;
+pub mod chaos;
 pub mod cli;
 pub mod cluster;
 pub mod config;

@@ -565,6 +565,27 @@ fn walk_fn(
                     }
                 }
             }
+            Kind::Ident if policy && t.text == "catch_unwind" => {
+                // a bare catch_unwind hides panics; in hot-path code it is
+                // only legitimate as a *supervisor* — a site that fails the
+                // in-flight request with a typed error and keeps the worker
+                // alive. The tag documents (and CI-enforces) that contract.
+                // Span 5: supervisor tags head multi-line comment blocks
+                // that explain the recovery contract.
+                if !file.comment_near(t.line, 5, "lint: supervisor") {
+                    findings.push(Finding {
+                        checker: "supervisor",
+                        file: file.path.clone(),
+                        line: t.line,
+                        function: item.name.clone(),
+                        detail: "untagged `catch_unwind` in hot-path code — a \
+                                 supervised worker must fail the in-flight request \
+                                 with a typed error and keep draining; tag the site \
+                                 `// lint: supervisor <why>` once it does"
+                            .to_string(),
+                    });
+                }
+            }
             Kind::Ident if policy && is_panic_token(file, j) => {
                 let what = panic_label(file, j);
                 if !file.comment_near(t.line, 3, "lint: allow(panic)") {
@@ -1339,6 +1360,58 @@ fn tagged(x: u8) {
         let f = by(&a, "panic");
         assert_eq!(f.len(), 1, "{:?}", a.findings);
         assert!(f[0].detail.contains("unreachable!"), "{}", f[0].detail);
+    }
+
+    // ---- checker: supervisor (catch_unwind contract) ----
+
+    #[test]
+    fn untagged_catch_unwind_in_policy_dir_is_caught() {
+        let a = run(&[("src/server/x.rs", r#"
+fn worker_body(f: impl FnOnce() + std::panic::UnwindSafe) {
+    let _ = std::panic::catch_unwind(f);
+}
+"#)]);
+        let f = by(&a, "supervisor");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert!(f[0].detail.contains("lint: supervisor"), "{}", f[0].detail);
+        assert_eq!(f[0].function, "worker_body");
+    }
+
+    #[test]
+    fn tagged_supervisor_and_non_policy_catch_unwind_are_accepted() {
+        let a = run(&[
+            ("src/server/x.rs", r#"
+fn supervised(f: impl FnOnce() + std::panic::UnwindSafe) {
+    // lint: supervisor — fails the in-flight request with a typed
+    // error and keeps the worker draining; body only borrows views
+    // that outlive the unwind, so the respawned worker sees clean
+    // state on the next iteration
+    let _ = std::panic::catch_unwind(f);
+}
+"#),
+            ("src/util/x.rs", r#"
+fn free_to_catch(f: impl FnOnce() + std::panic::UnwindSafe) {
+    let _ = std::panic::catch_unwind(f);
+}
+"#),
+        ]);
+        assert!(by(&a, "supervisor").is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn supervisor_tag_too_far_above_does_not_count() {
+        let a = run(&[("src/cluster/x.rs", r#"
+fn drifted(f: impl FnOnce() + std::panic::UnwindSafe) {
+    // lint: supervisor — this tag has drifted six lines away from
+    // the site it is meant to justify, past the 5-line window the
+    // checker accepts; the contract comment must stay attached to
+    // the catch_unwind it documents, or reviewers cannot tell which
+    // unwind boundary is supervised and which is a silent swallow,
+    // so the checker treats this site as untagged
+    let _ = std::panic::catch_unwind(f);
+}
+"#)]);
+        assert_eq!(by(&a, "supervisor").len(), 1, "{:?}", a.findings);
     }
 
     // ---- checker 5: unsafe hygiene ----

@@ -181,7 +181,25 @@ fn stack_config(args: &Args) -> Result<StackConfig> {
     if let Some(c) = args.get_parse::<u64>("catalog")? {
         cfg.workload.catalog_size = c;
     }
+    if args.get("chaos").is_some() {
+        // a chaos run turns the serve-side degradation ladder on:
+        // over-budget requests truncate candidates instead of missing
+        cfg.server.truncate_over_budget = true;
+    }
     Ok(cfg)
+}
+
+/// Parse `--chaos SPEC` (+ `--chaos-seed`) into a shared fault plan.
+fn chaos_plan(args: &Args) -> Result<Option<Arc<flame::chaos::FaultPlan>>> {
+    match args.get("chaos") {
+        Some(spec) => {
+            let seed = args.get_parse::<u64>("chaos-seed")?.unwrap_or(0);
+            let plan = flame::chaos::FaultPlan::parse(spec, seed)?;
+            eprintln!("[flame] chaos armed: {spec} (seed {seed})");
+            Ok(Some(Arc::new(plan)))
+        }
+        None => Ok(None),
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -359,6 +377,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(t) = &tracer {
         stack.metrics.set_tracer(Arc::clone(t), 0);
     }
+    let chaos = chaos_plan(args)?;
+    if let Some(plan) = &chaos {
+        stack.arm_chaos(Arc::clone(plan));
+    }
     let metrics_srv = match args.get("metrics-addr") {
         Some(addr) => {
             let s = Arc::clone(&stack);
@@ -497,6 +519,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("sla attribution: queue {q} feature {f} handoff {h} compute {c} other {o}");
         }
     }
+    if let Some(plan) = &chaos {
+        let q = snap.quality;
+        println!(
+            "serve quality  : full {}  stale {}  truncated {}  cached {}  shed {}  (worker restarts {})",
+            q[0], q[1], q[2], q[3], q[4], snap.worker_restarts
+        );
+        let inj = plan.injected();
+        println!(
+            "chaos injected : store delay/err/timeout {}/{}/{}  brownouts {}  crashes {}  stalls {}  panics {}",
+            inj.store_delays,
+            inj.store_errors,
+            inj.store_timeouts,
+            inj.brownout_hits,
+            inj.crash_faults,
+            inj.compute_stalls,
+            inj.worker_panics
+        );
+    }
     finish_observability(args, tracer, metrics_srv)?;
     Ok(())
 }
@@ -571,6 +611,13 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     if args.has("no-coalesce") {
         c.result_cache.coalesce = false;
     }
+    if args.get("chaos").is_some() {
+        // a chaos run turns the router's degradation ladder on: hedged
+        // re-dispatch against brownouts, deeper budget-aware retries
+        c.hedge = true;
+        c.max_retries = c.max_retries.max(2);
+        c.retry_backoff_us = 50;
+    }
     Ok(c)
 }
 
@@ -617,6 +664,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let n = args.get_parse::<usize>("replicas")?.unwrap_or(3).max(1);
     let ccfg = cluster_config(args)?;
     let scfg = stack_config(args)?;
+    let chaos = chaos_plan(args)?;
     let tracer = trace_tracer(args, scfg.server.trace_sample_n);
     let n_requests = args.get_parse::<usize>("requests")?.unwrap_or(2_000);
     let duration = Duration::from_secs_f64(args.get_parse::<f64>("duration-s")?.unwrap_or(10.0));
@@ -633,6 +681,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         let stacks = build_stacks(args, n)?;
         seq_len = stacks[0].model_cfg.seq_len;
         mix = WorkloadConfig::uniform_mix(stacks[0].orchestrator.profiles());
+        if let Some(plan) = &chaos {
+            // store/stall/panic clauses apply inside each real stack
+            for s in &stacks {
+                s.arm_chaos(Arc::clone(plan));
+            }
+        }
         if let Some(t) = &tracer {
             // pid 0 is the router; replicas render as processes 1..=n
             for (i, s) in stacks.iter().enumerate() {
@@ -646,7 +700,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     } else {
         let sim = SimConfig { slots: ccfg.slots_per_replica, ..SimConfig::default() };
         (0..n)
-            .map(|_| Arc::new(SimReplica::new(sim.clone())) as Arc<dyn ReplicaBackend>)
+            .map(|i| {
+                let r = Arc::new(SimReplica::new(sim.clone()));
+                if let Some(plan) = &chaos {
+                    // brownout/crash clauses key on the replica index
+                    r.arm_chaos(i, Arc::clone(plan));
+                }
+                r as Arc<dyn ReplicaBackend>
+            })
             .collect()
     };
 
@@ -692,6 +753,19 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         }
     };
     print_cluster_report(&router, &report, t0.elapsed().as_secs_f64());
+    if let Some(plan) = &chaos {
+        let inj = plan.injected();
+        println!(
+            "chaos injected : store delay/err/timeout {}/{}/{}  brownouts {}  crashes {}  stalls {}  panics {}",
+            inj.store_delays,
+            inj.store_errors,
+            inj.store_timeouts,
+            inj.brownout_hits,
+            inj.crash_faults,
+            inj.compute_stalls,
+            inj.worker_panics
+        );
+    }
     if tracer.is_some() {
         let (q, f, h, c, o) = router.metrics.sla_miss_attribution();
         if q + f + h + c + o > 0 {
@@ -723,6 +797,19 @@ fn print_cluster_report(
         "admission      : shed {}  sla misses {}  rerouted {}",
         snap.shed, snap.sla_misses, snap.rerouted
     );
+    if snap.retries + snap.hedges + snap.probes_ok + snap.probes_failed > 0 {
+        println!(
+            "degradation    : retries {}  hedges {} (won {})  canary probes {} ok / {} failed",
+            snap.retries, snap.hedges, snap.hedge_wins, snap.probes_ok, snap.probes_failed
+        );
+    }
+    let q = agg.quality;
+    if q.iter().skip(1).any(|&c| c > 0) {
+        println!(
+            "serve quality  : full {}  stale {}  truncated {}  cached {}  shed {}",
+            q[0], q[1], q[2], q[3], q[4]
+        );
+    }
     let result_lookups = snap.result_hits + snap.result_misses + snap.result_coalesced;
     if result_lookups > 0 {
         println!(

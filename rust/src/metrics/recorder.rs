@@ -7,6 +7,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
+use crate::chaos::{ServeQuality, QUALITY_RUNGS};
 use crate::obs::{StageKind, TraceContext, Tracer};
 
 use super::Histogram;
@@ -64,6 +65,22 @@ pub struct Recorder {
     sla_miss_handoff: AtomicU64,
     sla_miss_compute: AtomicU64,
     sla_miss_other: AtomicU64,
+    /// Degradation ladder: responses served at each [`ServeQuality`]
+    /// rung (index = `ServeQuality::index()`). Under a healthy stack the
+    /// whole histogram sits in `Full`; a fault storm shifts mass down
+    /// the ladder instead of producing errors.
+    quality: [AtomicU64; QUALITY_RUNGS],
+    /// Cluster degradation: budget-aware re-dispatches after a replica
+    /// failure (retry-with-backoff, not the hedge).
+    retries: AtomicU64,
+    /// Cluster degradation: hedged re-dispatches fired against a slow
+    /// (browned-out) primary.
+    hedges: AtomicU64,
+    /// Hedges whose secondary answered first (the hedge paid off).
+    hedge_wins: AtomicU64,
+    /// Supervised recovery: worker panics caught by a supervisor that
+    /// failed the in-flight request and respawned/continued the worker.
+    worker_restarts: AtomicU64,
     /// Optional request-scoped tracer (set once at startup; absent on
     /// the default path so tracing costs nothing when off). The u32 is
     /// the pid this recorder's traces carry (replica id; 0 standalone).
@@ -106,6 +123,11 @@ impl Recorder {
             sla_miss_handoff: AtomicU64::new(0),
             sla_miss_compute: AtomicU64::new(0),
             sla_miss_other: AtomicU64::new(0),
+            quality: std::array::from_fn(|_| AtomicU64::new(0)),
+            retries: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
             tracer: OnceLock::new(),
             started: Instant::now(),
         }
@@ -251,6 +273,62 @@ impl Recorder {
         self.result_coalesced.fetch_add(1, Ordering::Relaxed);
     }
 
+    // ---- degradation ladder / supervised recovery ----
+
+    /// One response served (or shed) at `quality` on the degradation
+    /// ladder. Recorded exactly once per finished request.
+    pub fn record_quality(&self, quality: ServeQuality) {
+        self.quality[quality.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One budget-aware re-dispatch after a replica failure.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One hedged re-dispatch fired against a slow primary.
+    pub fn record_hedge(&self) {
+        self.hedges.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A hedge's secondary answered first.
+    pub fn record_hedge_win(&self) {
+        self.hedge_wins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One supervised worker panic: request failed with a typed error,
+    /// worker respawned/continued.
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Quality histogram, indexed by [`ServeQuality::index`].
+    pub fn quality_counts(&self) -> [u64; QUALITY_RUNGS] {
+        std::array::from_fn(|i| self.quality[i].load(Ordering::Relaxed))
+    }
+
+    /// Responses recorded below [`ServeQuality::Full`] (any degraded
+    /// rung, including sheds).
+    pub fn degraded_total(&self) -> u64 {
+        self.quality_counts().iter().skip(1).sum()
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    pub fn hedges(&self) -> u64 {
+        self.hedges.load(Ordering::Relaxed)
+    }
+
+    pub fn hedge_wins(&self) -> u64 {
+        self.hedge_wins.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
+    }
+
     /// One DSO packed batch launched. The coalescer derives both values
     /// once and passes them through (`occupancy_pct` = real rows as a
     /// percentage of the profile; `shared_rows` = real rows iff the
@@ -348,6 +426,13 @@ impl Recorder {
         self.sla_miss_handoff.store(0, Ordering::Relaxed);
         self.sla_miss_compute.store(0, Ordering::Relaxed);
         self.sla_miss_other.store(0, Ordering::Relaxed);
+        for q in &self.quality {
+            q.store(0, Ordering::Relaxed);
+        }
+        self.retries.store(0, Ordering::Relaxed);
+        self.hedges.store(0, Ordering::Relaxed);
+        self.hedge_wins.store(0, Ordering::Relaxed);
+        self.worker_restarts.store(0, Ordering::Relaxed);
         self.started = Instant::now();
     }
 
@@ -403,6 +488,11 @@ impl Recorder {
             sla_miss_handoff: sla_h,
             sla_miss_compute: sla_c,
             sla_miss_other: sla_o,
+            quality: self.quality_counts(),
+            retries: self.retries(),
+            hedges: self.hedges(),
+            hedge_wins: self.hedge_wins(),
+            worker_restarts: self.worker_restarts(),
         }
     }
 
@@ -463,6 +553,19 @@ pub struct MetricsSnapshot {
     pub sla_miss_handoff: u64,
     pub sla_miss_compute: u64,
     pub sla_miss_other: u64,
+    /// Degradation-ladder histogram, indexed by
+    /// [`ServeQuality::index`] (Full → StaleFeatures →
+    /// TruncatedCandidates → CachedResult → Shed). All mass in index 0
+    /// on a healthy stack.
+    pub quality: [u64; QUALITY_RUNGS],
+    /// Cluster degradation: budget-aware retries after replica failures.
+    pub retries: u64,
+    /// Cluster degradation: hedged re-dispatches (and wins).
+    pub hedges: u64,
+    pub hedge_wins: u64,
+    /// Supervised recovery: caught worker panics (request failed typed,
+    /// worker kept alive).
+    pub worker_restarts: u64,
 }
 
 impl MetricsSnapshot {
@@ -528,6 +631,11 @@ mod tests {
         r.record_fke_launch(1_000_000, 10, 5);
         r.record_sla_attribution(StageKind::Compute);
         r.record_sla_attribution(StageKind::Queue);
+        r.record_quality(ServeQuality::StaleFeatures);
+        r.record_retry();
+        r.record_hedge();
+        r.record_hedge_win();
+        r.record_worker_restart();
         r.reset();
         let s = r.snapshot_over(1.0);
         assert_eq!(s.requests, 0);
@@ -541,6 +649,34 @@ mod tests {
         assert_eq!((s.arena_growths, s.fetch_coalesced, s.fetch_batches), (0, 0, 0));
         assert_eq!((s.fke_flops, s.fke_tiles_visited, s.fke_tiles_skipped), (0, 0, 0));
         assert_eq!(r.sla_miss_attribution(), (0, 0, 0, 0, 0));
+        assert_eq!(s.quality, [0; QUALITY_RUNGS]);
+        assert_eq!((s.retries, s.hedges, s.hedge_wins, s.worker_restarts), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn quality_histogram_surfaces_in_snapshot() {
+        let r = Recorder::new();
+        r.record_quality(ServeQuality::Full);
+        r.record_quality(ServeQuality::Full);
+        r.record_quality(ServeQuality::StaleFeatures);
+        r.record_quality(ServeQuality::TruncatedCandidates);
+        r.record_quality(ServeQuality::CachedResult);
+        r.record_quality(ServeQuality::Shed);
+        let s = r.snapshot_over(1.0);
+        assert_eq!(s.quality, [2, 1, 1, 1, 1]);
+        assert_eq!(r.degraded_total(), 4, "everything below Full is degraded");
+    }
+
+    #[test]
+    fn recovery_counters_surface_in_snapshot() {
+        let r = Recorder::new();
+        r.record_retry();
+        r.record_retry();
+        r.record_hedge();
+        r.record_hedge_win();
+        r.record_worker_restart();
+        let s = r.snapshot_over(1.0);
+        assert_eq!((s.retries, s.hedges, s.hedge_wins, s.worker_restarts), (2, 1, 1, 1));
     }
 
     #[test]

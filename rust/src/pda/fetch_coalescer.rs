@@ -28,6 +28,15 @@
 //! time, under `signal`. Ticket resolution happens after the remote
 //! fetch completes, cache-insert first, so a waiter that re-probes the
 //! cache immediately after waking hits.
+//!
+//! **No rider waits forever.** [`Ticket::wait`] has no timeout, so the
+//! executor carries a resolve-on-drop guard: however `execute` exits —
+//! normal return, store error, or a panic unwinding through it (chaos
+//! injection, store bug) — every ticket the batch owns is resolved and
+//! deregistered. A resolved-with-`None` id is free again: the next
+//! miss of it becomes a fresh leader. The flusher additionally runs
+//! each batch under a supervisor, so an unwinding batch cannot kill
+//! the deadline watcher and wedge every future partial batch.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -125,6 +134,10 @@ pub(crate) struct FetchCoalescer {
     batched_ids: AtomicU64,
     merged_flushes: AtomicU64,
     recorder: Option<Arc<Recorder>>,
+    /// Test hook: make the next `execute` panic after registering its
+    /// resolve-on-drop guard — the leader-panic wedge regression.
+    #[cfg(test)]
+    test_panic_next_execute: AtomicBool,
 }
 
 impl FetchCoalescer {
@@ -155,6 +168,8 @@ impl FetchCoalescer {
             batched_ids: AtomicU64::new(0),
             merged_flushes: AtomicU64::new(0),
             recorder,
+            #[cfg(test)]
+            test_panic_next_execute: AtomicBool::new(false),
         }
     }
 
@@ -210,7 +225,7 @@ impl FetchCoalescer {
             self.cv.notify_all();
         }
         for ids in filled {
-            self.execute(&ids, false);
+            self.execute_supervised(&ids, false);
         }
         let results: Vec<(Option<ItemFeatures>, u64)> =
             tickets.iter().map(|t| t.wait()).collect();
@@ -233,12 +248,56 @@ impl FetchCoalescer {
         results.into_iter().map(|(v, _)| v).collect()
     }
 
+    /// Run `execute` under a supervisor. `Ticket::wait` has no timeout,
+    /// so a batch that unwinds mid-flight would otherwise strand its
+    /// riders forever *and* (on the flusher thread) kill the deadline
+    /// watcher. The drop guard inside `execute` resolves the tickets;
+    /// this wrapper absorbs the unwind so the calling thread lives on.
+    fn execute_supervised(&self, ids: &[u64], merged: bool) {
+        // lint: supervisor — tickets resolve via execute's drop guard;
+        // the calling thread (flusher or feature worker) must survive
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.execute(ids, merged)
+        }));
+        if unwound.is_err() {
+            if let Some(rec) = &self.recorder {
+                rec.record_worker_restart();
+            }
+        }
+    }
+
     /// Run one remote multiget for `ids` and resolve their tickets —
     /// cache-insert first, so waiters (and fresh probes) hit immediately.
     /// A store timeout resolves every ticket with `None`; nothing ever
-    /// leaves a waiter parked.
+    /// leaves a waiter parked: a resolve-on-drop guard covers every exit,
+    /// including a panic unwinding out of the store call.
     fn execute(&self, ids: &[u64], merged: bool) {
         debug_assert!(!ids.is_empty());
+        // Resolve-on-drop: on every exit from this scope, any id still
+        // holding an unresolved ticket is resolved with `None` (waiters
+        // degrade to stale/default) and deregistered (the id can lead
+        // again). On the normal path resolve() already emptied the
+        // inflight slots, so this sweep is a no-op.
+        struct ResolveRemaining<'a> {
+            co: &'a FetchCoalescer,
+            ids: &'a [u64],
+        }
+        impl Drop for ResolveRemaining<'_> {
+            fn drop(&mut self) {
+                if std::thread::panicking() {
+                    self.co.store_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                for &id in self.ids {
+                    self.co.resolve(id, None, 0);
+                }
+            }
+        }
+        let _resolve_all = ResolveRemaining { co: self, ids };
+        #[cfg(test)]
+        if self.test_panic_next_execute.swap(false, Ordering::Relaxed) {
+            // lint: allow(panic) test-injected executor crash, absorbed by execute_supervised
+            panic!("test: injected execute panic");
+        }
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_ids.fetch_add(ids.len() as u64, Ordering::Relaxed);
         if merged {
@@ -311,7 +370,7 @@ impl FetchCoalescer {
                 // drain: resolve every open batch so no waiter is left
                 let leftover = self.collect_expired(Instant::now() + self.wait + self.wait);
                 if !leftover.is_empty() {
-                    self.execute(&leftover, false);
+                    self.execute_supervised(&leftover, false);
                 }
                 return;
             }
@@ -325,7 +384,7 @@ impl FetchCoalescer {
                         && expired.iter().any(|&a| self.shard_of(a) != self.shard_of(expired[0]))
                 };
                 drop(parked);
-                self.execute(&expired, merged);
+                self.execute_supervised(&expired, merged);
                 parked = self.signal.lock().unwrap_or_else(|e| e.into_inner());
                 continue;
             }
@@ -515,6 +574,40 @@ mod tests {
         let got = co.fetch(&[1, 2, 3]);
         assert!(got.iter().all(|g| g.is_none()), "failed batch must resolve with None");
         assert!(errors.load(Ordering::Relaxed) >= 1);
+        co.begin_shutdown();
+        flusher.join().unwrap();
+    }
+
+    /// Regression (executor panic wedge): before the resolve-on-drop
+    /// guard, a panic unwinding out of `execute` left its tickets in
+    /// `inflight` unresolved — every rider of those ids waited forever
+    /// on an untimed condvar, the ids were permanently poisoned, and
+    /// (when it fired on the flusher thread) the deadline watcher died
+    /// with it. Now: waiters resolve with `None`, the ids are free to
+    /// lead again, and the flusher survives to drive the retry.
+    #[test]
+    fn executor_panic_resolves_waiters_and_frees_the_ids() {
+        let (store, cache) = parts();
+        let errors = Arc::new(AtomicU64::new(0));
+        let co = Arc::new(FetchCoalescer::new(
+            500,
+            Arc::clone(&store),
+            cache,
+            Arc::clone(&errors),
+            None,
+        ));
+        let flusher = spawn(&co);
+        co.test_panic_next_execute.store(true, Ordering::Relaxed);
+        let got = co.fetch(&[7, 8]);
+        assert!(
+            got.iter().all(|g| g.is_none()),
+            "a panicking executor must resolve its tickets with None, not wedge them"
+        );
+        assert!(errors.load(Ordering::Relaxed) >= 1, "the unwound batch counts as a store error");
+        // the ids are free again: the retry leads a fresh fetch, and the
+        // flusher survived the panic to execute it
+        let retry = co.fetch(&[7, 8]);
+        assert!(retry.iter().all(|g| g.is_some()), "retry must re-lead after the failed flight");
         co.begin_shutdown();
         flusher.join().unwrap();
     }

@@ -17,6 +17,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::batching::RequestQueue;
+use crate::chaos::{ChaosSlot, FaultPlan, ServeQuality};
 use crate::config::{ModelConfig, StackConfig};
 use crate::dso::{ComputeBackend, Orchestrator};
 use crate::embedding::EmbeddingTable;
@@ -49,6 +50,12 @@ pub struct Response {
     /// a nonzero value is the visible cost (and proof) of the two-stage
     /// split; mean/p99 aggregates live in `MetricsSnapshot::handoff_*`.
     pub handoff_us: u64,
+    /// Where this response sits on the degradation ladder
+    /// ([`ServeQuality::Full`] on a healthy stack). A degraded rung is
+    /// an explicit contract with the caller: the scores are usable but
+    /// were produced from stale/default features, a truncated candidate
+    /// set, or a cached result.
+    pub quality: ServeQuality,
 }
 
 /// Builder wiring the whole stack from a manifest + config.
@@ -172,6 +179,8 @@ impl StackBuilder {
             store,
             metrics,
             topology: Topology::detect(),
+            chaos: ChaosSlot::new(),
+            pair_cost_ns: std::sync::atomic::AtomicU64::new(0),
         })
     }
 }
@@ -187,9 +196,42 @@ pub struct ServingStack {
     pub store: Arc<RemoteStore>,
     pub metrics: Arc<Recorder>,
     pub topology: Topology,
+    /// Fault-injection point: worker-panic schedules for the stage
+    /// workers plus compute-backend stalls (`chaos` module docs).
+    pub(crate) chaos: ChaosSlot,
+    /// EWMA of compute cost per user-item pair (ns), fed by finished
+    /// compute outcomes — the estimate deadline-aware candidate
+    /// truncation divides the remaining budget by (0 = no sample yet).
+    pair_cost_ns: std::sync::atomic::AtomicU64,
 }
 
 impl ServingStack {
+    /// Arm the whole stack's fault-injection points with one plan: the
+    /// stage workers (panic schedules), the remote feature store
+    /// (delay/error/timeout), and the DSO orchestrator (executor stalls
+    /// and panics) all consult the same seeded [`FaultPlan`].
+    pub fn arm_chaos(&self, plan: Arc<FaultPlan>) {
+        self.store.arm_chaos(Arc::clone(&plan));
+        self.orchestrator.arm_chaos(Arc::clone(&plan));
+        self.chaos.arm(plan);
+    }
+
+    /// Feed one finished compute outcome into the per-pair cost EWMA.
+    pub(crate) fn note_pair_cost(&self, compute_us: u64, m: usize) {
+        if m == 0 {
+            return;
+        }
+        let sample = compute_us.saturating_mul(1_000) / m as u64;
+        use std::sync::atomic::Ordering;
+        let _ = self.pair_cost_ns.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |old| {
+            Some(if old == 0 { sample } else { (old * 7 + sample) / 8 })
+        });
+    }
+
+    /// Estimated compute cost per user-item pair, ns (0 = no sample yet).
+    pub(crate) fn pair_cost_ns(&self) -> u64 {
+        self.pair_cost_ns.load(std::sync::atomic::Ordering::Relaxed)
+    }
     /// Staging-arena capacity (f32 elements) a serve path needs: the
     /// padded history plus the largest candidate profile. Every caller
     /// that allocates an arena for `serve` must size it with this.
@@ -219,6 +261,13 @@ impl ServingStack {
         if grew > 0 {
             self.metrics.record_arena_growth(grew);
         }
+        // stale/default features are still well-formed input, but the
+        // response must say so — the first rung of the ladder
+        let quality = if assembled.stale + assembled.missing > 0 {
+            ServeQuality::StaleFeatures
+        } else {
+            ServeQuality::Full
+        };
         let (hist, cands) = assembled.views(arena);
         let feature_us = tf.elapsed().as_micros() as u64;
         if let Some(ctx) = trace.as_mut() {
@@ -244,6 +293,7 @@ impl ServingStack {
 
         let overall_us = t0.elapsed().as_micros() as u64;
         self.metrics.record_request(overall_us, req.m());
+        self.metrics.record_quality(quality);
         self.metrics.record_compute(outcome.compute_us);
         self.metrics.record_feature(feature_us);
         // executor-queue delay (Recorder.queueing's definition: delay
@@ -265,6 +315,7 @@ impl ServingStack {
             feature_us,
             queue_us: outcome.queue_us,
             handoff_us: 0,
+            quality,
         })
     }
 
@@ -291,9 +342,34 @@ impl ServingStack {
                         let mut arena = StagingArena::new(stack.arena_capacity());
                         while let Some((req, qdelay)) = queue.pop() {
                             stack.metrics.record_queueing(qdelay.as_micros() as u64);
-                            if let Err(e) = stack.serve(&req, &mut arena) {
-                                stack.metrics.record_dropped();
-                                log::warn!("request {} failed: {e}", req.request_id);
+                            // lint: supervisor — a panicking request must
+                            // not take the worker (and its queue share)
+                            // down with it; fail it and keep draining
+                            let served = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    if let Some(plan) = stack.chaos.get() {
+                                        if plan.panic_due(crate::chaos::PanicSite::Feature) {
+                                            // lint: allow(panic) chaos injection, caught by the supervisor above
+                                            panic!("chaos: injected pipeline-worker panic");
+                                        }
+                                    }
+                                    stack.serve(&req, &mut arena)
+                                }),
+                            );
+                            match served {
+                                Ok(Ok(_)) => {}
+                                Ok(Err(e)) => {
+                                    stack.metrics.record_dropped();
+                                    log::warn!("request {} failed: {e}", req.request_id);
+                                }
+                                Err(_) => {
+                                    stack.metrics.record_worker_restart();
+                                    stack.metrics.record_dropped();
+                                    log::warn!(
+                                        "request {} failed: worker panicked (supervised)",
+                                        req.request_id
+                                    );
+                                }
                             }
                         }
                     })

@@ -35,6 +35,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::batching::RequestQueue;
+use crate::chaos::{PanicSite, ServeQuality};
 use crate::error::{Error, Result};
 use crate::obs::{self, StageKind, TraceContext};
 use crate::pda::{ArenaPool, AssembledInput, StagingArena};
@@ -66,6 +67,8 @@ struct StagedRequest {
     arena: StagingArena,
     assembled: AssembledInput,
     feature_us: u64,
+    /// Ladder rung accumulated so far (stale features, truncation).
+    quality: ServeQuality,
     /// Feature-stage start (overall latency anchor).
     t0: Instant,
     /// Trace carried over from the feature stage.
@@ -170,8 +173,13 @@ impl PipelineHandle {
             .stack
             .metrics
             .trace_begin(req.request_id, budget.as_micros() as u64);
-        self.intake
-            .push(PipelineJob { req, deadline: Instant::now() + budget, trace, reply })?;
+        if let Err(e) =
+            self.intake.push(PipelineJob { req, deadline: Instant::now() + budget, trace, reply })
+        {
+            // shed at the front door: the bottom rung of the ladder
+            self.stack.metrics.record_quality(ServeQuality::Shed);
+            return Err(e);
+        }
         Ok(rx)
     }
 
@@ -187,7 +195,7 @@ impl PipelineHandle {
     pub fn serve(&self, req: &Request) -> Result<Response> {
         let rx = self.submit(req.clone())?;
         rx.recv()
-            .map_err(|_| Error::Internal("pipeline shut down mid-request".into()))?
+            .map_err(|_| Error::Shutdown("pipeline shut down mid-request".into()))?
     }
 
     /// Closed-loop saturation driver over the pipeline (mirror of
@@ -268,38 +276,98 @@ fn feature_loop(
             // from the thread instead of a threaded parameter
             obs::set_current_trace(ctx.trace_id());
         }
-        let t0 = Instant::now();
-        let mut arena = pool.get();
-        let growth0 = arena.growth_count();
-        let assembled =
-            stack.assembler.assemble_request(&job.req.history, l, &job.req.candidates, &mut arena);
-        let grew = arena.growth_count() - growth0;
-        if grew > 0 {
-            stack.metrics.record_arena_growth(grew);
-        }
-        let feature_us = t0.elapsed().as_micros() as u64;
-        if let Some(ctx) = job.trace.as_mut() {
-            ctx.span_ending_now(StageKind::Feature, feature_us);
-            obs::set_current_trace(0);
-        }
-        let staged = StagedRequest {
-            request_id: job.req.request_id,
-            m: job.req.m(),
-            arena,
-            assembled,
-            feature_us,
-            t0,
-            trace: job.trace,
-            reply: job.reply,
-        };
-        if let Err(staged) = handoff.push_blocking(staged) {
-            // shutdown race: the handoff closed under us — fail the
-            // request explicitly and recycle its arena
-            stack.metrics.record_dropped();
-            let _ = staged
-                .reply
-                .send(Err(Error::Internal("pipeline handoff closed".into())));
-            pool.put(staged.arena);
+        let reply = job.reply.clone();
+        let request_id = job.req.request_id;
+        let took_arena = std::cell::Cell::new(false);
+        // lint: supervisor — a panicking request (injected or real) is
+        // failed with a typed error and the stage worker keeps draining;
+        // the reply sender is held out here so the unwind cannot take
+        // the caller's channel down with it
+        let staged = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Some(plan) = stack.chaos.get() {
+                if plan.panic_due(PanicSite::Feature) {
+                    // lint: allow(panic) chaos injection, caught by the stage supervisor
+                    panic!("chaos: injected feature-stage panic");
+                }
+            }
+            let mut quality = ServeQuality::Full;
+            // degradation rung: a request whose remaining deadline
+            // cannot fit its full candidate set serves the prefix that
+            // fits (candidates arrive ranked, so the prefix is top-K)
+            if stack.config.server.truncate_over_budget {
+                let pace = stack.pair_cost_ns();
+                let remaining_us =
+                    job.deadline.saturating_duration_since(Instant::now()).as_micros() as u64;
+                if pace > 0 && !job.req.candidates.is_empty() {
+                    let fit = (remaining_us.saturating_mul(1_000) / pace) as usize;
+                    if fit < job.req.candidates.len() {
+                        job.req.candidates.truncate(fit.max(1));
+                        quality = quality.worst(ServeQuality::TruncatedCandidates);
+                    }
+                }
+            }
+            let t0 = Instant::now();
+            let mut arena = pool.get();
+            took_arena.set(true);
+            let growth0 = arena.growth_count();
+            let assembled = stack.assembler.assemble_request(
+                &job.req.history,
+                l,
+                &job.req.candidates,
+                &mut arena,
+            );
+            let grew = arena.growth_count() - growth0;
+            if grew > 0 {
+                stack.metrics.record_arena_growth(grew);
+            }
+            // stale/default features: still well-formed input, but the
+            // response must say so
+            if assembled.stale + assembled.missing > 0 {
+                quality = quality.worst(ServeQuality::StaleFeatures);
+            }
+            let feature_us = t0.elapsed().as_micros() as u64;
+            if let Some(ctx) = job.trace.as_mut() {
+                ctx.span_ending_now(StageKind::Feature, feature_us);
+                obs::set_current_trace(0);
+            }
+            StagedRequest {
+                request_id: job.req.request_id,
+                m: job.req.m(),
+                arena,
+                assembled,
+                feature_us,
+                quality,
+                t0,
+                trace: job.trace,
+                reply: job.reply,
+            }
+        }));
+        match staged {
+            Ok(staged) => {
+                if let Err(staged) = handoff.push_blocking(staged) {
+                    // shutdown race: the handoff closed under us — fail
+                    // the request explicitly and recycle its arena
+                    stack.metrics.record_dropped();
+                    let _ = staged
+                        .reply
+                        .send(Err(Error::Shutdown("pipeline handoff closed".into())));
+                    pool.put(staged.arena);
+                }
+            }
+            Err(_) => {
+                obs::set_current_trace(0);
+                stack.metrics.record_worker_restart();
+                stack.metrics.record_dropped();
+                let _ = reply.send(Err(Error::WorkerPanic(format!(
+                    "feature stage lost request {request_id}"
+                ))));
+                if took_arena.get() {
+                    // the pooled arena unwound with the stage body;
+                    // restore the pool's population so later requests
+                    // cannot starve on `get`
+                    pool.put(StagingArena::new(stack.arena_capacity()));
+                }
+            }
         }
     }
 }
@@ -310,23 +378,46 @@ fn feature_loop(
 /// workers are free to assemble the next requests.
 fn compute_loop(stack: &ServingStack, handoff: &RequestQueue<StagedRequest>, pool: &ArenaPool) {
     while let Some((staged, stage_wait)) = handoff.pop() {
-        let StagedRequest { request_id, m, arena, assembled, feature_us, t0, mut trace, reply } =
-            staged;
+        let StagedRequest {
+            request_id,
+            m,
+            arena,
+            assembled,
+            feature_us,
+            quality,
+            t0,
+            mut trace,
+            reply,
+        } = staged;
         let handoff_us = stage_wait.as_micros() as u64;
         stack.metrics.record_handoff(handoff_us);
         if let Some(ctx) = trace.as_mut() {
             ctx.span_ending_now(StageKind::Handoff, handoff_us);
         }
-        let (hist, cands) = assembled.views(&arena);
         let trace_id = trace.as_ref().map_or(0, |c| c.trace_id());
         let compute_begin = trace.as_ref().map_or(0, |c| c.now_us());
-        match stack.orchestrator.submit_traced(hist, cands, m, trace_id) {
-            Ok(outcome) => {
+        // lint: supervisor — a panic submitting this request fails it
+        // with a typed error and the submitter survives; the body only
+        // borrows the arena/views, so both outlive an unwind
+        let submitted = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Some(plan) = stack.chaos.get() {
+                if plan.panic_due(PanicSite::Compute) {
+                    // lint: allow(panic) chaos injection, caught by the stage supervisor
+                    panic!("chaos: injected compute-stage panic");
+                }
+            }
+            let (hist, cands) = assembled.views(&arena);
+            stack.orchestrator.submit_traced(hist, cands, m, trace_id)
+        }));
+        match submitted {
+            Ok(Ok(outcome)) => {
                 let overall_us = t0.elapsed().as_micros() as u64;
                 stack.metrics.record_request(overall_us, m);
+                stack.metrics.record_quality(quality);
                 stack.metrics.record_compute(outcome.compute_us);
                 stack.metrics.record_feature(feature_us);
                 stack.metrics.record_queueing(outcome.queue_us);
+                stack.note_pair_cost(outcome.compute_us, m);
                 if let Some(mut ctx) = trace.take() {
                     let end = ctx.now_us();
                     ctx.span_linked(StageKind::Compute, compute_begin, end, &outcome.launch_ids);
@@ -343,9 +434,10 @@ fn compute_loop(stack: &ServingStack, handoff: &RequestQueue<StagedRequest>, poo
                     feature_us,
                     queue_us: outcome.queue_us,
                     handoff_us,
+                    quality,
                 }));
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 stack.metrics.record_dropped();
                 if let Some(ctx) = trace.take() {
                     let sla_missed =
@@ -354,6 +446,19 @@ fn compute_loop(stack: &ServingStack, handoff: &RequestQueue<StagedRequest>, poo
                 }
                 log::warn!("pipelined request {request_id} failed: {e}");
                 let _ = reply.send(Err(e));
+            }
+            Err(_) => {
+                stack.metrics.record_worker_restart();
+                stack.metrics.record_dropped();
+                if let Some(ctx) = trace.take() {
+                    let sla_missed =
+                        ctx.budget_us() > 0 && ctx.elapsed_us() > ctx.budget_us();
+                    stack.metrics.trace_finish(ctx, sla_missed);
+                }
+                log::warn!("pipelined request {request_id} failed: compute stage panicked");
+                let _ = reply.send(Err(Error::WorkerPanic(format!(
+                    "compute stage lost request {request_id}"
+                ))));
             }
         }
         // the orchestrator has copied the views into its own chunk

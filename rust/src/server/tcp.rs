@@ -375,6 +375,7 @@ mod tests {
             feature_us: 100,
             queue_us: 30,
             handoff_us: 0,
+            quality: crate::chaos::ServeQuality::Full,
         };
         let w = decode_response(&encode_response(&resp, 3)).unwrap();
         assert_eq!(w.request_id, 7);

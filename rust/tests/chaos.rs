@@ -1,0 +1,409 @@
+//! Chaos suite: seeded fault storms through the artifact-free sim
+//! backends, proving the crate-wide invariant **no request is ever
+//! lost** — every submission returns a response or a typed error, under
+//! any fault plan — plus the degradation-ladder and recovery contracts:
+//!
+//! * a feature-store outage degrades to stale/default features
+//!   (`ServeQuality::StaleFeatures`), never a failed request;
+//! * an over-budget request serves a truncated candidate prefix
+//!   (`ServeQuality::TruncatedCandidates`), never a rejection;
+//! * a browned-out replica is routed around by a hedged re-dispatch;
+//! * a crash window is absorbed by retry-with-backoff, and post-storm
+//!   throughput returns to within 10% of pre-storm;
+//! * supervised workers survive injected panics (in-flight requests
+//!   fail with `Error::WorkerPanic`, the worker keeps draining), and
+//!   the recorder's counters match what the plan actually injected.
+//!
+//! Everything here runs on a bare checkout — no artifacts, no PJRT.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flame::chaos::{FaultPlan, ServeQuality};
+use flame::cluster::{
+    ClusterConfig, ClusterRouter, ReplicaBackend, RoutePolicy, SimConfig, SimReplica,
+};
+use flame::config::{CacheMode, ModelConfig, StackConfig};
+use flame::dso::{ComputeBackend, SimEngine};
+use flame::error::Error;
+use flame::netsim::{Link, LinkConfig};
+use flame::pda::StagingArena;
+use flame::server::pipeline::StackBuilder;
+use flame::server::ServingStack;
+use flame::workload::Request;
+
+const SEQ: usize = 16;
+const D: usize = 8;
+const TASKS: usize = 3;
+const PROFILES: [usize; 2] = [4, 8];
+const SEED: u64 = 77;
+
+fn model_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "sim".into(),
+        seq_len: SEQ,
+        n_blocks: 1,
+        layers_per_block: 1,
+        d_model: D,
+        n_heads: 1,
+        n_tasks: TASKS,
+        m_profiles: PROFILES.to_vec(),
+        native_m: PROFILES[PROFILES.len() - 1],
+    }
+}
+
+fn fast_link() -> Arc<Link> {
+    Arc::new(Link::new(LinkConfig {
+        rtt: Duration::from_micros(200),
+        bandwidth_bps: 1e9,
+        jitter: 0.0,
+        fail_rate: 0.0,
+    }))
+}
+
+/// Sim-engine serving stack; `cfgmod` tweaks the config, `delay` is the
+/// per-launch compute time.
+fn sim_stack(cfgmod: impl FnOnce(&mut StackConfig), delay: Duration) -> Arc<ServingStack> {
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Sync;
+    cfg.pda.numa_binding = false;
+    cfgmod(&mut cfg);
+    let backends: Vec<Arc<dyn ComputeBackend>> = PROFILES
+        .iter()
+        .map(|&m| {
+            Arc::new(SimEngine::new(m, SEQ, D, TASKS).with_delay(delay))
+                as Arc<dyn ComputeBackend>
+        })
+        .collect();
+    Arc::new(
+        StackBuilder::new("sim", "sim", cfg)
+            .with_link(fast_link())
+            .build_from_backends(model_cfg(), SEED, backends)
+            .expect("sim stack"),
+    )
+}
+
+/// Cluster of sim replicas; returns the sims (for chaos arming by
+/// cluster index) and the router.
+fn sim_cluster(
+    n: usize,
+    sim: SimConfig,
+    cfgmod: impl FnOnce(&mut ClusterConfig),
+) -> (Vec<Arc<SimReplica>>, Arc<ClusterRouter>) {
+    let sims: Vec<Arc<SimReplica>> =
+        (0..n).map(|_| Arc::new(SimReplica::new(sim.clone()))).collect();
+    let backends: Vec<Arc<dyn ReplicaBackend>> =
+        sims.iter().map(|s| Arc::clone(s) as Arc<dyn ReplicaBackend>).collect();
+    let mut cfg = ClusterConfig {
+        policy: RoutePolicy::RoundRobin,
+        slots_per_replica: sim.slots,
+        ..ClusterConfig::default()
+    };
+    cfgmod(&mut cfg);
+    (sims.clone(), Arc::new(ClusterRouter::new(backends, cfg).unwrap()))
+}
+
+fn req(id: u64, user: u64, m: usize) -> Request {
+    Request {
+        request_id: id,
+        user_id: user,
+        history: (0..8u64).map(|i| user.wrapping_mul(31) ^ i).collect(),
+        // unique per (id) so feature fetches stay cold and every
+        // request really exercises the remote store
+        candidates: (0..m as u64).map(|i| id.wrapping_mul(1_009) + i).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ladder rung 1: store outage → stale/default features, full response.
+// ---------------------------------------------------------------------
+
+#[test]
+fn store_outage_degrades_to_stale_features_not_errors() {
+    let stack = sim_stack(|_| {}, Duration::ZERO);
+    let plan = Arc::new(FaultPlan::parse("store_error:p=1", 3).unwrap());
+    stack.arm_chaos(Arc::clone(&plan));
+    let mut arena = StagingArena::new(stack.arena_capacity());
+    for i in 0..8u64 {
+        let r = req(i, i, 6);
+        let resp = stack.serve(&r, &mut arena).expect("outage must not fail requests");
+        assert_eq!(resp.scores.len(), 6 * TASKS, "degraded response keeps full shape");
+        assert_eq!(
+            resp.quality,
+            ServeQuality::StaleFeatures,
+            "cold fetch through a dead store must be stamped stale/default"
+        );
+    }
+    assert!(plan.injected().store_errors >= 1, "the plan actually fired");
+    let q = stack.metrics.quality_counts();
+    assert_eq!(q[ServeQuality::StaleFeatures.index()], 8, "quality histogram: {q:?}");
+    assert_eq!(q[ServeQuality::Full.index()], 0);
+}
+
+// ---------------------------------------------------------------------
+// Ladder rung 2: over-budget request → truncated candidate prefix.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tight_deadline_truncates_candidates_not_reject() {
+    // 1 ms per compute launch; the pace estimator learns ~250 µs/pair
+    // from m=4 warmups, so a 13-candidate request under a 2.5 ms budget
+    // cannot fit and must serve a truncated prefix.
+    let stack = sim_stack(
+        |c| {
+            c.server.pipeline = true;
+            c.server.feature_workers = 1;
+            c.server.pipeline_workers = 1;
+            c.server.truncate_over_budget = true;
+        },
+        Duration::from_millis(1),
+    );
+    let handle = stack.spawn_pipeline();
+    for i in 0..5u64 {
+        let r = req(i, i, 4);
+        handle
+            .submit_with_deadline(r, Duration::from_secs(1))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("warmup");
+    }
+    let r = req(100, 100, 13);
+    let resp = handle
+        .submit_with_deadline(r, Duration::from_micros(2_500))
+        .unwrap()
+        .recv()
+        .unwrap()
+        .expect("over-budget request must degrade, not fail");
+    assert_eq!(resp.quality, ServeQuality::TruncatedCandidates);
+    assert!(
+        resp.scores.len() < 13 * TASKS && !resp.scores.is_empty(),
+        "a truncated prefix was scored, got {} scores",
+        resp.scores.len()
+    );
+    assert_eq!(resp.scores.len() % TASKS, 0);
+    let q = stack.metrics.quality_counts();
+    assert!(q[ServeQuality::TruncatedCandidates.index()] >= 1, "histogram: {q:?}");
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Ladder rung 3 (cluster): brownout → hedged re-dispatch wins.
+// ---------------------------------------------------------------------
+
+#[test]
+fn cluster_brownout_is_routed_around_by_hedging() {
+    let sim =
+        SimConfig { base_us: 400, per_pair_ns: 0, miss_penalty_us: 0, ..SimConfig::default() };
+    let (sims, router) = sim_cluster(3, sim, |c| {
+        c.hedge = true;
+        c.max_retries = 2;
+        c.retry_backoff_us = 50;
+    });
+    // warmup before arming: the hedge trigger compares against each
+    // replica's learned latency estimate
+    for i in 0..60u64 {
+        router.submit(&req(i, i, 2)).unwrap();
+    }
+    let plan = Arc::new(FaultPlan::parse("brownout:replica=2,x=12", 7).unwrap());
+    for (i, s) in sims.iter().enumerate() {
+        s.arm_chaos(i, Arc::clone(&plan));
+    }
+    for i in 0..60u64 {
+        router.submit(&req(1_000 + i, i, 2)).expect("brownout must not fail requests");
+    }
+    assert!(plan.injected().brownout_hits >= 1, "replica 2 was actually slowed");
+    let snap = router.snapshot();
+    assert!(snap.hedges >= 1, "a 12x brownout must trigger at least one hedge");
+    assert!(
+        snap.hedge_wins >= 1,
+        "a healthy alternative answers before a 12x-slowed primary"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Crash window: absorbed by retries, throughput recovers within 10%.
+// ---------------------------------------------------------------------
+
+#[test]
+fn cluster_crash_window_recovers_throughput_within_10_percent() {
+    const PHASE: u64 = 150;
+    let sim =
+        SimConfig { base_us: 300, per_pair_ns: 0, miss_penalty_us: 0, ..SimConfig::default() };
+    let (sims, router) = sim_cluster(3, sim, |c| {
+        // keep the health machinery out of the picture: this test pins
+        // down the retry ladder and the throughput recovery alone
+        c.eject_after = 1_000;
+        c.max_retries = 2;
+        c.retry_backoff_us = 0;
+    });
+    let run_phase = |base: u64| -> Duration {
+        let t0 = Instant::now();
+        for i in 0..PHASE {
+            router.submit(&req(base + i, i, 2)).expect("every request must succeed");
+        }
+        t0.elapsed()
+    };
+
+    let pre = run_phase(0);
+
+    // storm: replica 0 hard-fails its next 30 serve attempts; round-robin
+    // sends it PHASE/3 = 50 picks, so the window fully burns this phase
+    let plan = Arc::new(FaultPlan::parse("crash:replica=0,after=0,down=30", 11).unwrap());
+    for (i, s) in sims.iter().enumerate() {
+        s.arm_chaos(i, Arc::clone(&plan));
+    }
+    run_phase(10_000);
+    assert_eq!(plan.injected().crash_faults, 30, "the whole window was consumed");
+    let snap = router.snapshot();
+    assert_eq!(snap.retries, 30, "every crash fault was absorbed by exactly one retry");
+
+    let post = run_phase(20_000);
+    let ratio = post.as_secs_f64() / pre.as_secs_f64();
+    assert!(
+        ratio < 1.10,
+        "post-storm throughput must be within 10% of pre-storm: pre {pre:?}, post {post:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// The combined storm: store timeouts + brownout + crash + worker panics
+// through one seeded plan, across both planes (the pipelined stack and
+// the cluster router) at once. No request lost, counters match.
+// ---------------------------------------------------------------------
+
+#[test]
+fn combined_storm_loses_no_request_and_counters_match_plan() {
+    const SPEC: &str = "store_timeout:p=0.2,store_delay:p=0.1,us=150,stall:p=0.05,us=200,\
+                        brownout:replica=2,x=8,crash:replica=0,after=20,down=25,\
+                        panic:worker=feature,n=3,panic:worker=compute,n=6,\
+                        panic:worker=executor,n=5";
+    let plan = Arc::new(FaultPlan::parse(SPEC, 42).unwrap());
+
+    // plane 1: the pipelined serving stack (store faults, stage/executor
+    // panics, compute stalls)
+    let stack = sim_stack(
+        |c| {
+            c.server.pipeline = true;
+            c.server.feature_workers = 2;
+            c.server.pipeline_workers = 2;
+        },
+        Duration::ZERO,
+    );
+    stack.arm_chaos(Arc::clone(&plan));
+    let handle = stack.spawn_pipeline();
+
+    // plane 2: the cluster router (brownout, crash window, hedging,
+    // retry ladder) — warmed up before arming so estimates are live
+    let sim =
+        SimConfig { base_us: 300, per_pair_ns: 0, miss_penalty_us: 0, ..SimConfig::default() };
+    let (sims, router) = sim_cluster(3, sim, |c| {
+        c.hedge = true;
+        c.max_retries = 2;
+        c.retry_backoff_us = 50;
+        c.eject_after = 4;
+        c.eject_cooldown_ms = 50;
+    });
+    for i in 0..60u64 {
+        router.submit(&req(i, i, 2)).unwrap();
+    }
+    for (i, s) in sims.iter().enumerate() {
+        s.arm_chaos(i, Arc::clone(&plan));
+    }
+
+    // the storm: concurrent clients on both planes; every submission
+    // must come back as a response or a typed error
+    const CLUSTER_CLIENTS: u64 = 6;
+    const CLUSTER_PER: u64 = 30;
+    const STACK_CLIENTS: u64 = 4;
+    const STACK_PER: u64 = 20;
+    let (cluster_ok, cluster_err, stack_ok, stack_err) = std::thread::scope(|s| {
+        let mut cluster_handles = Vec::new();
+        for t in 0..CLUSTER_CLIENTS {
+            let router = Arc::clone(&router);
+            cluster_handles.push(s.spawn(move || {
+                let (mut ok, mut err) = (0u64, 0u64);
+                for i in 0..CLUSTER_PER {
+                    let id = 1_000 + t * CLUSTER_PER + i;
+                    match router.submit(&req(id, id, 2)) {
+                        Ok(_) => ok += 1,
+                        Err(Error::Overloaded(_)) => err += 1,
+                        Err(e) => panic!("cluster storm: untyped loss: {e}"),
+                    }
+                }
+                (ok, err)
+            }));
+        }
+        let mut stack_handles = Vec::new();
+        for t in 0..STACK_CLIENTS {
+            let handle = &handle;
+            stack_handles.push(s.spawn(move || {
+                let (mut ok, mut err) = (0u64, 0u64);
+                for i in 0..STACK_PER {
+                    let id = 5_000 + t * STACK_PER + i;
+                    match handle.serve(&req(id, id, 6)) {
+                        Ok(resp) => {
+                            assert!(
+                                resp.quality <= ServeQuality::TruncatedCandidates,
+                                "a computed response sits on a compute rung"
+                            );
+                            ok += 1;
+                        }
+                        Err(Error::WorkerPanic(_)) | Err(Error::Overloaded(_)) => err += 1,
+                        Err(e) => panic!("stack storm: untyped loss: {e}"),
+                    }
+                }
+                (ok, err)
+            }));
+        }
+        let (mut cok, mut cerr) = (0u64, 0u64);
+        for h in cluster_handles {
+            let (o, e) = h.join().expect("cluster client must not die");
+            cok += o;
+            cerr += e;
+        }
+        let (mut sok, mut serr) = (0u64, 0u64);
+        for h in stack_handles {
+            let (o, e) = h.join().expect("stack client must not die");
+            sok += o;
+            serr += e;
+        }
+        (cok, cerr, sok, serr)
+    });
+
+    // no request lost: every submission on both planes is accounted for
+    assert_eq!(cluster_ok + cluster_err, CLUSTER_CLIENTS * CLUSTER_PER);
+    assert_eq!(stack_ok + stack_err, STACK_CLIENTS * STACK_PER);
+    assert!(cluster_ok > 0 && stack_ok > 0, "the storm must not shed everything");
+
+    // the plan actually stormed: every fault class fired
+    let inj = plan.injected();
+    assert!(inj.store_timeouts >= 1, "injected: {inj:?}");
+    assert!(inj.brownout_hits >= 1, "injected: {inj:?}");
+    assert!(inj.crash_faults >= 1, "injected: {inj:?}");
+    assert_eq!(inj.worker_panics, 3, "each scheduled panic fired exactly once: {inj:?}");
+
+    // recorder counters match the injected plan
+    assert_eq!(
+        stack.metrics.worker_restarts(),
+        inj.worker_panics,
+        "every caught panic recorded exactly one supervised restart"
+    );
+    let snap = router.snapshot();
+    assert!(snap.retries >= 1, "crash faults were retried: {snap:?}");
+    assert!(snap.hedges >= 1, "the 8x brownout triggered hedging: {snap:?}");
+    let q = stack.metrics.quality_counts();
+    assert!(
+        q[ServeQuality::StaleFeatures.index()] >= 1,
+        "store timeouts degraded at least one response to stale: {q:?}"
+    );
+
+    // post-storm liveness: the panic schedule is exhausted and the crash
+    // window closed; both planes serve cleanly again
+    for i in 0..10u64 {
+        let id = 90_000 + i;
+        handle.serve(&req(id, id, 6)).expect("stage workers survived their panics");
+        router.submit(&req(id, id, 2)).expect("the cluster recovered from the storm");
+    }
+    handle.shutdown();
+}

@@ -127,29 +127,46 @@ fn failing_replica_is_ejected_and_traffic_fails_over() {
 }
 
 #[test]
-fn ejected_replica_readmitted_after_cooldown() {
+fn ejected_replica_readmitted_by_canary_after_cooldown() {
     let (sims, router) = build(2, RoutePolicy::RoundRobin, fast_sim(), |c| {
         c.eject_after = 2;
         c.eject_cooldown_ms = 50;
     });
     // 3 failures: two eject replica 0 during the first phase, one is
-    // left for the post-cooldown probe (which must NOT re-eject, since
-    // eject_after = 2 needs consecutive errors)
+    // left over to burn the first post-cooldown canary
     sims[0].fail_next(3);
     for i in 0..20u64 {
         router.submit(&req(i, i, 2)).unwrap();
     }
     assert!(!router.replicas()[0].healthy(), "replica 0 should be ejected");
     std::thread::sleep(Duration::from_millis(60));
-    assert!(router.replicas()[0].healthy(), "cooldown passed");
+    // half-open: the cooldown alone no longer restores health — the
+    // replica owes one successful canary first
+    assert!(
+        !router.replicas()[0].healthy(),
+        "cooldown passed but no canary succeeded yet: still not healthy"
+    );
+    assert!(router.replicas()[0].probing(), "replica 0 must be probe-eligible");
+    // this submission spends the canary on the leftover injected
+    // failure: the probe fails, replica 0 re-ejects for another
+    // cooldown, and the request itself still succeeds via failover
+    router.submit(&req(50, 0, 2)).unwrap();
+    assert_eq!(router.replicas()[0].probes_failed_total(), 1);
+    assert!(!router.replicas()[0].healthy(), "failed canary re-ejects");
+    std::thread::sleep(Duration::from_millis(60));
+    // second canary hits a recovered backend: full traffic returns
     let before = router.replicas()[0].metrics.requests();
     for i in 0..20u64 {
         router.submit(&req(100 + i, i, 2)).unwrap();
     }
+    assert_eq!(router.replicas()[0].probes_ok_total(), 1, "exactly one canary succeeded");
+    assert!(router.replicas()[0].healthy(), "successful canary restores health");
     assert!(
         router.replicas()[0].metrics.requests() > before,
         "re-admitted replica serves again"
     );
+    let snap = router.snapshot();
+    assert_eq!((snap.probes_ok, snap.probes_failed), (1, 1));
 }
 
 #[test]

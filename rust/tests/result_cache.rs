@@ -62,6 +62,7 @@ impl ReplicaBackend for ScoringBackend {
             feature_us: 0,
             queue_us: 0,
             handoff_us: 0,
+            quality: flame::chaos::ServeQuality::Full,
         })
     }
 }
