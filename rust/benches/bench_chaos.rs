@@ -102,6 +102,7 @@ fn request(id: u64, m: usize) -> Request {
         // cold candidate ids: every request exercises the remote store,
         // so the fault rate is felt at full strength
         candidates: (0..m as u64).map(|i| id.wrapping_mul(1_009) + i).collect(),
+        ..Default::default()
     }
 }
 

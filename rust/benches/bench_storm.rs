@@ -1,0 +1,218 @@
+//! Storm bench — per-tenant cost of a flash crowd on the sim cluster,
+//! with and without the feedback overload controller. One seeded storm
+//! timeline (diurnal swell + tenant-1 flash crowd on a hot candidate
+//! set + feature-invalidation burst) replays against both arms through
+//! the timed driver, so the comparison is storm-for-storm identical.
+//! Each row reports a tenant's p50/p99 latency, shed count, SLA-miss
+//! rate, and quality-ladder mix. Every run emits machine-readable
+//! `BENCH_storm.json`.
+//!
+//! The headline contract: with the controller armed, the flash tenant
+//! absorbs the overload (gate sheds + truncations) while the quiet
+//! tenant's miss rate stays near baseline; with it off, the bystander
+//! pays. `--smoke` shrinks the timeline to a CI-sized run that still
+//! gates on the controller engaging against the flash tenant only.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use flame::benchkit::Table;
+use flame::chaos::{ServeQuality, QUALITY_RUNGS};
+use flame::cluster::{
+    ClusterConfig, ClusterRouter, ReplicaBackend, RoutePolicy, SimConfig, SimReplica, TenantSet,
+};
+use flame::config::WorkloadConfig;
+use flame::metrics::TenantCounts;
+use flame::util::json::Json;
+use flame::workload::storm::StormSpec;
+use flame::workload::trace::TraceEvent;
+use flame::workload::{driver, Generator, MAX_TENANTS};
+
+const OUT_PATH: &str = "BENCH_storm.json";
+const SEED: u64 = 41;
+const REPLICAS: usize = 2;
+const SLOTS: usize = 2;
+const SERVICE_US: u64 = 2_500;
+const DEADLINE_MS: u64 = 20;
+
+struct ArmResult {
+    controller: bool,
+    submitted: u64,
+    completed: u64,
+    rejected: u64,
+    tenants: [TenantCounts; MAX_TENANTS],
+    admission_shed: u64,
+    ticks: u64,
+}
+
+/// Replay the identical timeline against a fresh 2x2-slot sim cluster
+/// (~1600 req/s capacity at 2.5 ms service) with the controller on or
+/// off. Fresh routers per arm: cumulative tenant views are per-arm.
+fn run_arm(controller: bool, events: &[TraceEvent]) -> ArmResult {
+    let sim = SimConfig {
+        base_us: SERVICE_US,
+        per_pair_ns: 0,
+        miss_penalty_us: 0,
+        slots: SLOTS,
+        ..SimConfig::default()
+    };
+    let backends: Vec<Arc<dyn ReplicaBackend>> = (0..REPLICAS)
+        .map(|_| Arc::new(SimReplica::new(sim.clone())) as Arc<dyn ReplicaBackend>)
+        .collect();
+    let cfg = ClusterConfig {
+        policy: RoutePolicy::LeastLoaded,
+        deadline_ms: DEADLINE_MS,
+        slots_per_replica: SLOTS,
+        controller,
+        tenants: TenantSet::parse("t0:w=2,t1:w=1").expect("tenant spec"),
+        ..ClusterConfig::default()
+    };
+    let router = Arc::new(ClusterRouter::new(backends, cfg).expect("router"));
+    let report = driver::open_loop_events(
+        events,
+        1.0,
+        64,
+        |r| router.submit(r).is_ok(),
+        |u| {
+            router.invalidate_user(u);
+        },
+    );
+    ArmResult {
+        controller,
+        submitted: report.submitted,
+        completed: report.completed,
+        rejected: report.rejected,
+        tenants: router.metrics.tenant_counts(),
+        admission_shed: router.admission.shed(),
+        ticks: router.controller().map_or(0, |c| c.ticks()),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (base_rate, duration_s, spec_text) = if smoke {
+        (500.0, 2.5, "flash:tenant=1,at_s=0.8,for_s=1.2,x=9,hot=64,mix:w0=2,w1=1")
+    } else {
+        (
+            600.0,
+            6.0,
+            "diurnal:period_s=6,amp=0.3,flash:tenant=1,at_s=2,for_s=2.5,x=9,hot=64,\
+             invalidate:rate=200,at_s=2,for_s=2.5,mix:w0=2,w1=1",
+        )
+    };
+    let spec = StormSpec::parse(spec_text).expect("storm spec");
+    let wl = WorkloadConfig {
+        catalog_size: 10_000,
+        zipf_theta: 0.99,
+        n_users: 2_000,
+        candidate_mix: vec![(16, 1.0)],
+        arrival_rate: None,
+        seed: SEED,
+    };
+    let events = spec.generate(&mut Generator::new(&wl, 16), base_rate, duration_s, SEED);
+    println!(
+        "storm isolation: {} events over {duration_s:.1}s @ {base_rate:.0}/s base, \
+         {REPLICAS}x{SLOTS}-slot sim cluster ({SERVICE_US} µs service, {DEADLINE_MS} ms SLA), seed {SEED}",
+        events.len()
+    );
+    println!("  spec: {spec_text}");
+
+    let arms = [run_arm(false, &events), run_arm(true, &events)];
+
+    let mut table = Table::new(
+        "per-tenant storm cost (identical timeline, controller off vs on)",
+        &[
+            "arm", "tenant", "requests", "shed", "miss %", "p50 ms", "p99 ms", "full", "trunc",
+            "shed q",
+        ],
+    );
+    for arm in &arms {
+        let label = if arm.controller { "on" } else { "off" };
+        for (i, tc) in arm.tenants.iter().enumerate() {
+            if tc.submitted() == 0 {
+                continue;
+            }
+            table.row(&[
+                label.to_string(),
+                i.to_string(),
+                tc.requests.to_string(),
+                tc.shed.to_string(),
+                format!("{:.1}", tc.miss_rate() * 100.0),
+                format!("{:.2}", tc.overall_p50_us as f64 / 1_000.0),
+                format!("{:.2}", tc.overall_p99_us as f64 / 1_000.0),
+                tc.quality[ServeQuality::Full.index()].to_string(),
+                tc.quality[ServeQuality::TruncatedCandidates.index()].to_string(),
+                tc.quality[ServeQuality::Shed.index()].to_string(),
+            ]);
+        }
+    }
+    table.footnote("quality columns count responses per degradation-ladder rung");
+    table.print();
+
+    // CI gates: the storm overloads the open-loop arm, and the armed
+    // controller engages against the flash tenant (gate sheds and/or
+    // truncations land on tenant 1, the one causing the overload)
+    let (off, on) = (&arms[0], &arms[1]);
+    assert!(
+        off.admission_shed + off.tenants[0].sla_miss + off.tenants[1].sla_miss > 0,
+        "the storm never overloaded the open-loop arm — raise the flash multiplier"
+    );
+    assert!(on.ticks > 0, "controller arm never ticked");
+    let flash_degraded = on.tenants[1].shed
+        + on.tenants[1].quality[ServeQuality::TruncatedCandidates.index()];
+    assert!(
+        flash_degraded > 0,
+        "controller never degraded the flash tenant (shed {} trunc {})",
+        on.tenants[1].shed,
+        on.tenants[1].quality[ServeQuality::TruncatedCandidates.index()]
+    );
+
+    let mut arms_json = BTreeMap::new();
+    for arm in &arms {
+        let mut tenants_json = BTreeMap::new();
+        for (i, tc) in arm.tenants.iter().enumerate() {
+            if tc.submitted() == 0 {
+                continue;
+            }
+            let mut o = BTreeMap::new();
+            o.insert("requests".into(), Json::Num(tc.requests as f64));
+            o.insert("shed".into(), Json::Num(tc.shed as f64));
+            o.insert("sla_miss".into(), Json::Num(tc.sla_miss as f64));
+            o.insert("p50_us".into(), Json::Num(tc.overall_p50_us as f64));
+            o.insert("p99_us".into(), Json::Num(tc.overall_p99_us as f64));
+            let mut q = BTreeMap::new();
+            for r in 0..QUALITY_RUNGS {
+                let rung = ServeQuality::from_index(r).expect("rung index");
+                q.insert(rung.as_str().to_string(), Json::Num(tc.quality[r] as f64));
+            }
+            o.insert("quality".into(), Json::Obj(q));
+            tenants_json.insert(format!("t{i}"), Json::Obj(o));
+        }
+        let mut a = BTreeMap::new();
+        a.insert("submitted".into(), Json::Num(arm.submitted as f64));
+        a.insert("completed".into(), Json::Num(arm.completed as f64));
+        a.insert("rejected".into(), Json::Num(arm.rejected as f64));
+        a.insert("admission_shed".into(), Json::Num(arm.admission_shed as f64));
+        a.insert("controller_ticks".into(), Json::Num(arm.ticks as f64));
+        a.insert("tenants".into(), Json::Obj(tenants_json));
+        arms_json.insert(
+            if arm.controller { "controller_on" } else { "controller_off" }.to_string(),
+            Json::Obj(a),
+        );
+    }
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("storm".into()));
+    top.insert("backend".into(), Json::Str("sim-cluster".into()));
+    top.insert("smoke".into(), Json::Bool(smoke));
+    top.insert("seed".into(), Json::Num(SEED as f64));
+    top.insert("spec".into(), Json::Str(spec_text.to_string()));
+    top.insert("base_rate".into(), Json::Num(base_rate));
+    top.insert("duration_s".into(), Json::Num(duration_s));
+    top.insert("events".into(), Json::Num(events.len() as f64));
+    top.insert("tenant_spec".into(), Json::Str("t0:w=2,t1:w=1".into()));
+    top.insert("arms".into(), Json::Obj(arms_json));
+    match std::fs::write(OUT_PATH, Json::Obj(top).to_string()) {
+        Ok(()) => eprintln!("  wrote {OUT_PATH}"),
+        Err(e) => eprintln!("  could not write {OUT_PATH}: {e}"),
+    }
+}

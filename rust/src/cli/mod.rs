@@ -24,6 +24,7 @@ const VALUE_FLAGS: &[&str] = &[
     "coalesce-wait-us", "m-dist", "feature-workers", "fetch-wait-us",
     "handoff-capacity", "backend", "threads", "trace-out", "trace-sample-n",
     "metrics-addr", "metrics-hold-s", "baseline", "src", "chaos", "chaos-seed",
+    "tenants", "storm",
 ];
 
 impl Args {
@@ -95,6 +96,8 @@ COMMANDS:
   serve     run the serving stack on synthetic traffic and report metrics
   replay    serve a recorded JSONL trace (--trace FILE)
   record    generate and save a trace (--trace FILE --requests N)
+  trace-gen expand a storm scenario into a timed v2 trace
+            (--trace FILE --storm SPEC --rate R --duration-s S)
   bind      start the TCP front (--bind ADDR; --replicas N fronts a cluster)
   cluster   drive the multi-replica cluster router and report per-replica
             metrics (simulated replicas by default; --real uses artifacts)
@@ -123,6 +126,21 @@ CLUSTER FLAGS:
   --dup-rate F        duplicate-burst rate injected into the synthetic
                       workload, 0.0..1.0           (default: 0)
   --real              replicas are real stacks (needs artifacts)
+  --tenants SPEC      per-tenant SLA/weight overrides, e.g.
+                      t1:w=3,sla_ms=20,t2:sla_ms=80 (unlisted tenants
+                      keep weight 1 and the --deadline-ms budget)
+  --controller        arm the per-tenant overload controller: AIMD
+                      admission-blend tightening + weighted-fair shed
+                      under pressure (brownout recovers when clean)
+
+STORM FLAGS (cluster, trace-gen):
+  --storm SPEC        non-stationary scenario clauses, e.g.
+                      diurnal:period_s=10,amp=0.5,flash:tenant=1,at_s=2,
+                      for_s=1,x=8,hot=64,invalidate:rate=500,at_s=2,
+                      for_s=1,mix:w0=3,w1=1 (see EXPERIMENTS.md \"Storm
+                      runbook\"). On `cluster` the timeline replays
+                      through the timed driver; invalidation events call
+                      the router's invalidate_user live.
 
 COMMON FLAGS:
   --artifacts DIR     artifact directory (default: artifacts)
@@ -353,6 +371,26 @@ mod tests {
         let h = help();
         assert!(h.contains("--chaos"));
         assert!(h.contains("Chaos runbook"));
+    }
+
+    #[test]
+    fn tenancy_and_storm_flags() {
+        let a = parse(&[
+            "cluster",
+            "--tenants",
+            "t1:w=3,sla_ms=20",
+            "--controller",
+            "--storm",
+            "flash:tenant=1,at_s=2,for_s=1,x=8",
+        ]);
+        assert_eq!(a.get("tenants"), Some("t1:w=3,sla_ms=20"));
+        assert!(a.has("controller"), "--controller is a bare switch");
+        assert_eq!(a.get("storm"), Some("flash:tenant=1,at_s=2,for_s=1,x=8"));
+        let h = help();
+        assert!(h.contains("--tenants"));
+        assert!(h.contains("--storm"));
+        assert!(h.contains("trace-gen"));
+        assert!(h.contains("Storm runbook"));
     }
 
     #[test]

@@ -53,16 +53,41 @@ impl Admission {
     /// until the histogram warms, which is what lets a freshly
     /// re-admitted replica be probed at all.
     pub fn estimate_us(replica: &Replica) -> u64 {
+        Self::estimate_us_with(replica, 1_000)
+    }
+
+    /// [`Admission::estimate_us`] with an explicit p99-vs-mean blend
+    /// (per-mille). The effective tail is
+    /// `mean + (p99 - mean) * blend / 1000`: 0 trusts the mean, 1000
+    /// reproduces the plain p99 estimate, and values above 1000
+    /// *extrapolate past* the rolling-window p99 — the overload
+    /// controller's lever when observed SLA misses say the histogram is
+    /// lagging a latency regime shift (the window only knows what the
+    /// replica measured; a shift that lands outside it — upstream
+    /// stalls, store faults — never shows up in p99 at all).
+    pub fn estimate_us_with(replica: &Replica, blend_permille: u64) -> u64 {
         let mean = replica.mean_us();
         let p99 = replica.p99_us();
-        let tail = if p99 > 0 { p99 } else { mean };
+        let tail = if p99 > mean {
+            mean + (p99 - mean).saturating_mul(blend_permille) / 1_000
+        } else if p99 > 0 {
+            p99
+        } else {
+            mean
+        };
         let waves = replica.in_flight().div_ceil(replica.slots().max(1)) as u64;
         tail + mean.saturating_mul(waves)
     }
 
     /// Pre-dispatch deadline check for `replica` against `budget_us`.
     pub fn check(&self, replica: &Replica, budget_us: u64) -> Verdict {
-        let estimate_us = Self::estimate_us(replica);
+        self.check_with(replica, budget_us, 1_000)
+    }
+
+    /// [`Admission::check`] under a feedback-adjusted tail blend (see
+    /// [`Admission::estimate_us_with`]).
+    pub fn check_with(&self, replica: &Replica, budget_us: u64, blend_permille: u64) -> Verdict {
+        let estimate_us = Self::estimate_us_with(replica, blend_permille);
         if estimate_us <= budget_us {
             Verdict::Admit
         } else {
@@ -199,6 +224,7 @@ mod tests {
                         user_id: i,
                         history: vec![],
                         candidates: vec![1],
+                        ..Default::default()
                     };
                     r.serve_tracked(&req).unwrap();
                 });
@@ -237,6 +263,58 @@ mod tests {
         r.record_latency(1_000, 1);
         let _ = Admission::estimate_us(&r); // must not divide by zero
         assert!(r.slots() >= 1);
+    }
+
+    /// The long-open over-admission gap, demonstrated: a latency regime
+    /// shift the replica histogram cannot see (misses accrue end-to-end
+    /// while on-replica service times look unchanged) leaves the plain
+    /// estimator admitting into a blown SLA. The feedback blend is the
+    /// fix — extrapolating the tail past the stale p99 flips the verdict
+    /// without waiting for the window to (never) catch up.
+    #[test]
+    fn regime_shift_over_admits_without_feedback() {
+        let r = replica(4);
+        // warm window: mostly 2 ms with a thin 6 ms tail
+        for i in 0..1_000 {
+            r.record_latency(if i % 100 == 0 { 6_000 } else { 2_000 }, 1);
+        }
+        let a = Admission::new();
+        // regime shift: end-to-end completions now blow the 10 ms budget
+        // (upstream stall — invisible to the replica's own histogram)
+        for _ in 0..20 {
+            a.note_completion(30_000, 10_000);
+        }
+        assert_eq!(a.sla_misses(), 20, "the sensor sees the shift immediately");
+        // pre-fix behavior (blend pinned at 1000 ≡ plain p99): still admits
+        assert_eq!(
+            a.check(&r, 10_000),
+            Verdict::Admit,
+            "without feedback the estimator keeps over-admitting"
+        );
+        // with feedback escalating the blend, the same replica is refused
+        match a.check_with(&r, 10_000, 3_000) {
+            Verdict::Overbudget { estimate_us } => {
+                assert!(estimate_us > 10_000, "extrapolated tail {estimate_us}")
+            }
+            v => panic!("expected Overbudget under escalated blend, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn blend_scales_the_tail_both_ways() {
+        let r = replica(4);
+        for i in 0..1_000 {
+            r.record_latency(if i % 100 == 0 { 6_000 } else { 2_000 }, 1);
+        }
+        let plain = Admission::estimate_us(&r);
+        assert_eq!(plain, Admission::estimate_us_with(&r, 1_000), "1000 ≡ plain p99");
+        let trusting = Admission::estimate_us_with(&r, 0);
+        assert_eq!(trusting, r.mean_us(), "0 collapses to the mean");
+        let paranoid = Admission::estimate_us_with(&r, 3_000);
+        assert!(paranoid > plain, "{paranoid} vs {plain}");
+        // a cold replica stays optimistic at every blend
+        let cold = replica(4);
+        assert_eq!(Admission::estimate_us_with(&cold, 4_000), 0);
     }
 
     #[test]

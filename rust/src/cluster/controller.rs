@@ -1,0 +1,396 @@
+//! Per-tenant feedback overload controller (AIMD / brownout).
+//!
+//! Closes the long-open loop between observed outcomes and admission:
+//! each tenant's SLA-miss rate and the cluster's queue depth feed two
+//! actuators, re-evaluated once per [`TICK_US`] tick:
+//!
+//! * **estimator blend** — the p99-vs-mean blend handed to
+//!   `Admission::check_with`. Misses escalate it additively (up to
+//!   [`BLEND_MAX`], extrapolating past a lagging rolling-window p99);
+//!   clean windows decay it multiplicatively back toward
+//!   [`BLEND_BASE`]. Classic AIMD.
+//! * **weighted-fair shed level** — a pre-dispatch degradation
+//!   probability (per-mille) that only ever rises for a tenant whose
+//!   observed load share exceeds 1.25x its configured weight share
+//!   while the cluster is under queue pressure *and* missing SLAs. A
+//!   flash crowd therefore degrades the tenant that caused it — first
+//!   onto the `TruncatedCandidates` rung of the `ServeQuality` ladder,
+//!   then to full sheds — while within-share tenants are never
+//!   controller-shed. Clean (or pressure-free) windows decay the level
+//!   multiplicatively to zero: brownout-style recovery.
+//!
+//! The whole controller is atomics over fixed arrays — the tick and the
+//! per-request `decision`/`note_*` paths take no locks (nothing to
+//! poison; a panicking worker cannot wedge admission) and allocate
+//! nothing. Tick election is a CAS on the tick deadline, so exactly one
+//! in-flight request pays the (cheap) re-evaluation per window.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Instant;
+
+use crate::util::rng::splitmix64;
+use crate::workload::{TenantId, MAX_TENANTS};
+
+use super::tenant::TenantSet;
+
+/// Controller re-evaluation period (µs).
+pub const TICK_US: u64 = 50_000;
+/// Neutral estimator blend (≡ the plain p99 estimate).
+pub const BLEND_BASE: u64 = 1_000;
+/// Blend ceiling: never extrapolate past 4x the p99-mean spread.
+pub const BLEND_MAX: u64 = 4_000;
+/// Additive blend step per missing window.
+pub const BLEND_STEP: u64 = 250;
+/// Shed-level ceiling (per-mille): never starve a tenant completely —
+/// the surviving trickle is also what keeps the sensor window sampled.
+pub const SHED_MAX: u64 = 900;
+/// Additive shed step per overloading window.
+pub const SHED_STEP: u64 = 150;
+/// Shed levels at or below this degrade to candidate truncation; above
+/// it the controller escalates to full front-door sheds.
+pub const TRUNCATE_CEILING: u64 = 400;
+/// Queue depth (per-mille of total slots) that counts as pressure.
+pub const PRESSURE_PERMILLE: u64 = 700;
+/// Window miss rate (per-mille) that triggers escalation.
+pub const MISS_HIGH_PERMILLE: u64 = 50;
+/// Window miss rate (per-mille) under which a window counts as clean.
+pub const MISS_LOW_PERMILLE: u64 = 10;
+
+/// Pre-dispatch verdict for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Admit,
+    /// Serve degraded: truncate the candidate set (the
+    /// `TruncatedCandidates` quality rung).
+    Truncate,
+    /// Refuse at the front door (the `Shed` quality rung).
+    Shed,
+}
+
+/// The controller: per-tenant AIMD state plus one tick window of
+/// outcome counters. See module docs for the control law.
+pub struct OverloadController {
+    start: Instant,
+    seed: u64,
+    weights: [u64; MAX_TENANTS],
+    blend: [AtomicU64; MAX_TENANTS],
+    shed_level: [AtomicU64; MAX_TENANTS],
+    // current-window sensors, swapped to zero at each tick
+    w_ok: [AtomicU64; MAX_TENANTS],
+    w_miss: [AtomicU64; MAX_TENANTS],
+    w_submit: [AtomicU64; MAX_TENANTS],
+    seq: [AtomicU64; MAX_TENANTS],
+    next_tick_us: AtomicU64,
+    ticks: AtomicU64,
+}
+
+impl OverloadController {
+    pub fn new(tenants: &TenantSet, seed: u64) -> Self {
+        let mut weights = [1u64; MAX_TENANTS];
+        for (i, w) in weights.iter_mut().enumerate() {
+            *w = tenants.weight(i).max(1);
+        }
+        OverloadController {
+            start: Instant::now(),
+            seed: seed ^ 0xC0_17_20_11,
+            weights,
+            blend: std::array::from_fn(|_| AtomicU64::new(BLEND_BASE)),
+            shed_level: std::array::from_fn(|_| AtomicU64::new(0)),
+            w_ok: std::array::from_fn(|_| AtomicU64::new(0)),
+            w_miss: std::array::from_fn(|_| AtomicU64::new(0)),
+            w_submit: std::array::from_fn(|_| AtomicU64::new(0)),
+            seq: std::array::from_fn(|_| AtomicU64::new(0)),
+            next_tick_us: AtomicU64::new(TICK_US),
+            ticks: AtomicU64::new(0),
+        }
+    }
+
+    /// Sensor: a request entered the router for `tenant`.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn note_submit(&self, tenant: TenantId) {
+        self.w_submit[tenant.index()].fetch_add(1, Relaxed);
+    }
+
+    /// Sensor: a completion for `tenant`, and whether it blew its budget.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn note_outcome(&self, tenant: TenantId, sla_missed: bool) {
+        let i = tenant.index();
+        if sla_missed {
+            self.w_miss[i].fetch_add(1, Relaxed);
+        } else {
+            self.w_ok[i].fetch_add(1, Relaxed);
+        }
+    }
+
+    /// Current estimator blend (per-mille) for `tenant` — feed to
+    /// `Admission::check_with`.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn blend_permille(&self, tenant: TenantId) -> u64 {
+        self.blend[tenant.index()].load(Relaxed)
+    }
+
+    /// Current shed level (per-mille) for `tenant`.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn shed_permille(&self, tenant: TenantId) -> u64 {
+        self.shed_level[tenant.index()].load(Relaxed)
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Relaxed)
+    }
+
+    /// Pre-dispatch verdict for one `tenant` request. Deterministic in
+    /// `(seed, tenant, per-tenant call ordinal)`: a shed level of L
+    /// per-mille degrades L/1000 of the tenant's stream, truncating
+    /// while L ≤ [`TRUNCATE_CEILING`] and shedding beyond it.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn decision(&self, tenant: TenantId) -> Decision {
+        let i = tenant.index();
+        let level = self.shed_level[i].load(Relaxed);
+        if level == 0 {
+            return Decision::Admit;
+        }
+        let seq = self.seq[i].fetch_add(1, Relaxed);
+        let mut s = self.seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ seq;
+        if splitmix64(&mut s) % 1_000 >= level {
+            return Decision::Admit;
+        }
+        if level <= TRUNCATE_CEILING {
+            Decision::Truncate
+        } else {
+            Decision::Shed
+        }
+    }
+
+    /// Run the control law if a tick is due. CAS-elected: exactly one
+    /// caller per window pays; everyone else returns immediately.
+    /// `queue_permille` is cluster queue depth as per-mille of total
+    /// service slots (the router computes it from replica in-flights).
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn maybe_tick(&self, queue_permille: u64) {
+        let now = self.start.elapsed().as_micros() as u64;
+        let due = self.next_tick_us.load(Relaxed);
+        if now < due {
+            return;
+        }
+        if self
+            .next_tick_us
+            .compare_exchange(due, now + TICK_US, Relaxed, Relaxed)
+            .is_err()
+        {
+            return;
+        }
+        self.tick(queue_permille);
+    }
+
+    /// The control law, applied to one window of sensor readings.
+    /// Public so tests (and the bench) can step the controller
+    /// deterministically without waiting out real tick periods.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn tick(&self, queue_permille: u64) {
+        self.ticks.fetch_add(1, Relaxed);
+        let pressure = queue_permille >= PRESSURE_PERMILLE;
+        // harvest the window first so share math sees one coherent view
+        let mut ok = [0u64; MAX_TENANTS];
+        let mut miss = [0u64; MAX_TENANTS];
+        let mut submit = [0u64; MAX_TENANTS];
+        let mut total_submit = 0u64;
+        let mut active_weight = 0u64;
+        for i in 0..MAX_TENANTS {
+            ok[i] = self.w_ok[i].swap(0, Relaxed);
+            miss[i] = self.w_miss[i].swap(0, Relaxed);
+            submit[i] = self.w_submit[i].swap(0, Relaxed);
+            total_submit += submit[i];
+            if submit[i] > 0 {
+                active_weight += self.weights[i];
+            }
+        }
+        for i in 0..MAX_TENANTS {
+            let completed = ok[i] + miss[i];
+            let miss_pm = if completed == 0 { 0 } else { miss[i] * 1_000 / completed };
+            // load share vs weighted-fair share, over *active* tenants:
+            // submit_i / total > 1.25 * weight_i / active_weight
+            let over_fair = total_submit > 0
+                && submit[i] * active_weight * 4 > self.weights[i] * total_submit * 5;
+            let blend = self.blend[i].load(Relaxed);
+            let shed = self.shed_level[i].load(Relaxed);
+            // additive increase: a missing window escalates the blend;
+            // only an over-share tenant under real pressure is shed
+            if completed >= 10 && miss_pm > MISS_HIGH_PERMILLE {
+                self.blend[i].store((blend + BLEND_STEP).min(BLEND_MAX), Relaxed);
+                if pressure && over_fair {
+                    self.shed_level[i].store((shed + SHED_STEP).min(SHED_MAX), Relaxed);
+                    continue;
+                }
+            }
+            // multiplicative decrease: clean or pressure-free windows
+            // decay both actuators (brownout recovery; zero-snap so the
+            // shed level actually reaches 0, not an asymptote)
+            let clean = miss_pm < MISS_LOW_PERMILLE || completed < 10;
+            if clean {
+                self.blend[i].store(BLEND_BASE + (blend - BLEND_BASE) * 3 / 4, Relaxed);
+            }
+            if clean || !pressure {
+                self.shed_level[i].store(if shed < 50 { 0 } else { shed * 3 / 4 }, Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctrl() -> OverloadController {
+        OverloadController::new(&TenantSet::default(), 42)
+    }
+
+    fn feed(c: &OverloadController, t: TenantId, submits: u64, ok: u64, miss: u64) {
+        for _ in 0..submits {
+            c.note_submit(t);
+        }
+        for _ in 0..ok {
+            c.note_outcome(t, false);
+        }
+        for _ in 0..miss {
+            c.note_outcome(t, true);
+        }
+    }
+
+    #[test]
+    fn quiet_controller_admits_everything() {
+        let c = ctrl();
+        for _ in 0..1_000 {
+            assert_eq!(c.decision(TenantId(0)), Decision::Admit);
+        }
+        assert_eq!(c.blend_permille(TenantId(0)), BLEND_BASE);
+        assert_eq!(c.shed_permille(TenantId(0)), 0);
+    }
+
+    #[test]
+    fn misses_escalate_blend_even_without_pressure() {
+        let c = ctrl();
+        feed(&c, TenantId(0), 100, 50, 50);
+        c.tick(100); // no queue pressure: regime shift, not overload
+        assert_eq!(c.blend_permille(TenantId(0)), BLEND_BASE + BLEND_STEP);
+        assert_eq!(c.shed_permille(TenantId(0)), 0, "no shed without pressure");
+    }
+
+    #[test]
+    fn flash_tenant_sheds_quiet_tenant_does_not() {
+        let c = ctrl();
+        let (a, b) = (TenantId(0), TenantId(1));
+        for _ in 0..6 {
+            // A floods (90% of load, equal weights) and both miss —
+            // collateral damage is exactly what a storm looks like
+            feed(&c, a, 900, 400, 500);
+            feed(&c, b, 100, 60, 40);
+            c.tick(1_000);
+        }
+        assert!(
+            c.shed_permille(a) >= 3 * SHED_STEP,
+            "flash tenant escalates: {}",
+            c.shed_permille(a)
+        );
+        assert_eq!(c.shed_permille(b), 0, "within-share tenant never controller-shed");
+        assert!(c.blend_permille(b) > BLEND_BASE, "but B admits more conservatively");
+        // the decision stream degrades A at roughly its shed level
+        let level = c.shed_permille(a);
+        let degraded = (0..2_000)
+            .filter(|_| c.decision(a) != Decision::Admit)
+            .count();
+        let expect = 2_000 * level as usize / 1_000;
+        assert!(
+            (degraded as i64 - expect as i64).unsigned_abs() < 300,
+            "level {level} → expected ~{expect}, saw {degraded}"
+        );
+    }
+
+    #[test]
+    fn escalation_walks_the_quality_ladder() {
+        let c = ctrl();
+        let a = TenantId(0);
+        feed(&c, a, 900, 400, 500);
+        feed(&c, a.next_other(), 100, 100, 0); // second tenant so A is over-share
+        c.tick(1_000);
+        assert_eq!(c.shed_permille(a), SHED_STEP);
+        assert!(SHED_STEP <= TRUNCATE_CEILING);
+        // low levels truncate...
+        let any_shed = (0..500).any(|_| c.decision(a) == Decision::Shed);
+        let any_trunc = (0..500).any(|_| c.decision(a) == Decision::Truncate);
+        assert!(any_trunc && !any_shed, "low level degrades by truncation only");
+        // ...sustained overload escalates past the ceiling to full sheds
+        for _ in 0..5 {
+            feed(&c, a, 900, 400, 500);
+            feed(&c, a.next_other(), 100, 100, 0);
+            c.tick(1_000);
+        }
+        assert!(c.shed_permille(a) > TRUNCATE_CEILING);
+        assert!((0..500).any(|_| c.decision(a) == Decision::Shed));
+    }
+
+    #[test]
+    fn brownout_recovery_decays_to_zero() {
+        let c = ctrl();
+        let (a, b) = (TenantId(0), TenantId(1));
+        for _ in 0..8 {
+            feed(&c, a, 900, 400, 500);
+            feed(&c, b, 100, 60, 40);
+            c.tick(1_000);
+        }
+        assert!(c.shed_permille(a) > 0 && c.blend_permille(a) > BLEND_BASE);
+        // storm passes: clean windows, no pressure
+        for _ in 0..20 {
+            feed(&c, a, 50, 50, 0);
+            feed(&c, b, 50, 50, 0);
+            c.tick(100);
+        }
+        assert_eq!(c.shed_permille(a), 0, "shed recovers to exactly 0");
+        assert_eq!(c.shed_permille(b), 0);
+        assert!(
+            c.blend_permille(a) <= BLEND_BASE + 50,
+            "blend relaxes to ~base: {}",
+            c.blend_permille(a)
+        );
+        for _ in 0..100 {
+            assert_eq!(c.decision(a), Decision::Admit);
+        }
+    }
+
+    #[test]
+    fn shed_level_is_capped_below_total_starvation() {
+        let c = ctrl();
+        let a = TenantId(0);
+        for _ in 0..50 {
+            feed(&c, a, 900, 100, 800);
+            feed(&c, TenantId(1), 100, 100, 0);
+            c.tick(1_000);
+        }
+        assert_eq!(c.shed_permille(a), SHED_MAX);
+        assert_eq!(c.blend_permille(a), BLEND_MAX);
+        let admitted = (0..2_000).filter(|_| c.decision(a) == Decision::Admit).count();
+        assert!(admitted > 50, "a trickle always survives: {admitted}");
+    }
+
+    #[test]
+    fn maybe_tick_is_elected_once_per_window() {
+        let c = ctrl();
+        // the first window's deadline has not elapsed yet
+        c.maybe_tick(0);
+        assert_eq!(c.ticks(), 0);
+        std::thread::sleep(std::time::Duration::from_micros(TICK_US + 20_000));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| c.maybe_tick(0));
+            }
+        });
+        assert_eq!(c.ticks(), 1, "exactly one caller wins the CAS election");
+    }
+
+    impl TenantId {
+        /// Test helper: some other tenant id.
+        fn next_other(self) -> TenantId {
+            TenantId(self.0 + 1)
+        }
+    }
+}

@@ -25,16 +25,20 @@
 //! `bench_cluster` and the integration tests.
 
 pub mod admission;
+pub mod controller;
 pub mod policy;
 pub mod replica;
 pub mod result_cache;
 pub mod sim;
+pub mod tenant;
 
 pub use admission::{Admission, Verdict};
+pub use controller::{Decision, OverloadController};
 pub use policy::{HashRing, RoutePolicy};
 pub use replica::{Replica, ReplicaBackend, ReplicaSnapshot, StackReplica};
 pub use result_cache::{ResultCache, ResultCacheConfig};
 pub use sim::{SimConfig, SimReplica};
+pub use tenant::{TenantSet, TenantSpec};
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -77,6 +81,12 @@ pub struct ClusterConfig {
     /// Router-level result cache + single-flight coalescing knobs
     /// (disabled by default: `capacity == 0`).
     pub result_cache: ResultCacheConfig,
+    /// Per-tenant weights and SLA budgets (`--tenants`). The default
+    /// registry is neutral: every tenant weight 1, cluster deadline.
+    pub tenants: TenantSet,
+    /// Enable the per-tenant feedback overload controller (`--controller`).
+    /// Off by default: admission behaves exactly as before tenancy.
+    pub controller: bool,
 }
 
 impl Default for ClusterConfig {
@@ -93,6 +103,8 @@ impl Default for ClusterConfig {
             retry_backoff_us: 0,
             hedge: false,
             result_cache: ResultCacheConfig::default(),
+            tenants: TenantSet::default(),
+            controller: false,
         }
     }
 }
@@ -128,6 +140,8 @@ pub struct ClusterRouter {
     rng_state: AtomicU64,
     /// Router-level result cache + single-flight table (None = disabled).
     result_cache: Option<ResultCache>,
+    /// Per-tenant feedback overload controller (None = open loop).
+    controller: Option<OverloadController>,
     pub admission: Admission,
     /// Aggregate cluster-level latency/throughput (what a load balancer
     /// in front of the fleet would observe).
@@ -150,6 +164,9 @@ impl ClusterRouter {
         let ring = HashRing::new(replicas.len(), cfg.vnodes);
         let rng_state = AtomicU64::new(0x5EED_0000 ^ replicas.len() as u64);
         let result_cache = ResultCache::new(&cfg.result_cache);
+        let controller = cfg
+            .controller
+            .then(|| OverloadController::new(&cfg.tenants, 0xF1A3_0009 ^ replicas.len() as u64));
         Ok(ClusterRouter {
             replicas,
             cfg,
@@ -157,6 +174,7 @@ impl ClusterRouter {
             rr_next: AtomicUsize::new(0),
             rng_state,
             result_cache,
+            controller,
             admission: Admission::new(),
             metrics: Recorder::new(),
         })
@@ -180,6 +198,28 @@ impl ClusterRouter {
 
     pub fn policy(&self) -> RoutePolicy {
         self.cfg.policy
+    }
+
+    /// The feedback overload controller, when enabled.
+    pub fn controller(&self) -> Option<&OverloadController> {
+        self.controller.as_ref()
+    }
+
+    /// The tenant registry (weights + per-tenant budgets).
+    pub fn tenants(&self) -> &TenantSet {
+        &self.cfg.tenants
+    }
+
+    /// Cluster queue depth as per-mille of total service slots — the
+    /// controller's pressure sensor (1000 = every slot busy).
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn queue_permille(&self) -> u64 {
+        let (mut in_flight, mut slots) = (0u64, 0u64);
+        for r in &self.replicas {
+            in_flight += r.in_flight() as u64;
+            slots += r.slots() as u64;
+        }
+        in_flight.saturating_mul(1_000) / slots.max(1)
     }
 
     /// Default deadline budget in µs.
@@ -241,16 +281,64 @@ impl ClusterRouter {
             .min_by_key(|&(_, est)| est)
     }
 
-    /// Route and serve one request under the default deadline.
+    /// Route and serve one request under its tenant's deadline (the
+    /// cluster default unless the tenant registry overrides it).
     pub fn submit(&self, req: &Request) -> Result<Response> {
-        self.submit_with_budget(req, self.deadline_us())
+        self.submit_with_budget(req, self.cfg.tenants.budget_us(req.tenant, self.deadline_us()))
     }
 
-    /// Route and serve one request with an explicit deadline budget (µs):
-    /// result-cache lookup (hit/coalesce = serve without touching a
-    /// replica) → policy pick → deadline admission (re-route or shed) →
-    /// dispatch (one failover retry on replica error) → SLA accounting.
+    /// Route and serve one request with an explicit deadline budget
+    /// (µs). When the overload controller is on, the request first
+    /// passes its weighted-fair gate: an over-share tenant under
+    /// pressure has part of its stream degraded — candidates truncated
+    /// (the `TruncatedCandidates` rung) at moderate shed levels, refused
+    /// outright (`Shed`) beyond [`controller::TRUNCATE_CEILING`] — so a
+    /// flash crowd pays its own overload bill before it can queue.
     pub fn submit_with_budget(&self, req: &Request, budget_us: u64) -> Result<Response> {
+        if let Some(ctrl) = &self.controller {
+            ctrl.note_submit(req.tenant);
+            ctrl.maybe_tick(self.queue_permille());
+            match ctrl.decision(req.tenant) {
+                Decision::Admit => {}
+                Decision::Truncate => {
+                    let keep = (req.candidates.len() / 2).max(1);
+                    let mut truncated = req.clone();
+                    truncated.candidates.truncate(keep);
+                    return self.submit_gated(
+                        &truncated,
+                        budget_us,
+                        Some(crate::chaos::ServeQuality::TruncatedCandidates),
+                    );
+                }
+                Decision::Shed => {
+                    self.admission.note_shed();
+                    self.metrics.record_quality(crate::chaos::ServeQuality::Shed);
+                    self.metrics.record_tenant_shed(req.tenant);
+                    self.metrics
+                        .record_tenant_quality(req.tenant, crate::chaos::ServeQuality::Shed);
+                    return Err(Error::Overloaded(format!(
+                        "overload controller shed tenant {} request {} (level {}‰)",
+                        req.tenant.0,
+                        req.request_id,
+                        ctrl.shed_permille(req.tenant)
+                    )));
+                }
+            }
+        }
+        self.submit_gated(req, budget_us, None)
+    }
+
+    /// The post-controller request path: result-cache lookup
+    /// (hit/coalesce = serve without touching a replica) → policy pick →
+    /// deadline admission (re-route or shed) → dispatch (one failover
+    /// retry on replica error) → SLA accounting. `quality_floor` carries
+    /// a controller-imposed degradation rung into the response.
+    fn submit_gated(
+        &self,
+        req: &Request,
+        budget_us: u64,
+        quality_floor: Option<crate::chaos::ServeQuality>,
+    ) -> Result<Response> {
         let t0 = Instant::now();
         // one OnceLock::get returning None when tracing is off
         let mut trace = self.metrics.trace_begin(req.request_id, budget_us);
@@ -266,7 +354,7 @@ impl ClusterRouter {
                         let end = ctx.now_us();
                         ctx.span(StageKind::Cache, cache_begin, end);
                     }
-                    return Ok(self.finish_cached(req, resp, t0, budget_us, trace));
+                    return Ok(self.finish_cached(req, resp, t0, budget_us, quality_floor, trace));
                 }
                 result_cache::Begin::Coalesced(resp, leader_span) => {
                     self.metrics.record_result_coalesced();
@@ -276,7 +364,7 @@ impl ClusterRouter {
                         let end = ctx.now_us();
                         ctx.span_linked(StageKind::Cache, cache_begin, end, &[leader_span]);
                     }
-                    return Ok(self.finish_cached(req, resp, t0, budget_us, trace));
+                    return Ok(self.finish_cached(req, resp, t0, budget_us, quality_floor, trace));
                 }
                 result_cache::Begin::Leader(mut flight) => {
                     self.metrics.record_result_miss();
@@ -286,7 +374,7 @@ impl ClusterRouter {
                     let span_id = tracer.as_ref().map_or(0, |t| t.new_span_id());
                     flight.set_span_id(span_id);
                     let flight_begin = tracer.as_ref().map_or(0, |t| t.now_us());
-                    let result = self.dispatch(req, budget_us, t0);
+                    let result = self.dispatch(req, budget_us, t0, quality_floor);
                     if let Some(t) = &tracer {
                         t.emit_shared(SharedSpan {
                             span_id,
@@ -318,7 +406,7 @@ impl ClusterRouter {
             }
         }
         let compute_begin = trace.as_ref().map_or(0, |c| c.now_us());
-        let result = self.dispatch(req, budget_us, t0);
+        let result = self.dispatch(req, budget_us, t0, quality_floor);
         if let Some(ctx) = trace.as_mut() {
             let end = ctx.now_us();
             ctx.span(StageKind::Compute, compute_begin, end);
@@ -344,16 +432,27 @@ impl ClusterRouter {
         mut resp: Response,
         t0: Instant,
         budget_us: u64,
+        quality_floor: Option<crate::chaos::ServeQuality>,
         trace: Option<TraceContext>,
     ) -> Response {
         let elapsed_us = t0.elapsed().as_micros() as u64;
         resp.overall_us = elapsed_us;
         // a cache-served answer sits on the CachedResult rung of the
-        // degradation ladder (unless the cached row was itself worse)
+        // degradation ladder (unless the cached row — or a controller-
+        // imposed floor — was itself worse)
         resp.quality = resp.quality.worst(crate::chaos::ServeQuality::CachedResult);
+        if let Some(floor) = quality_floor {
+            resp.quality = resp.quality.worst(floor);
+        }
         self.metrics.record_request(elapsed_us, req.m());
         self.metrics.record_quality(resp.quality);
+        let missed = elapsed_us > budget_us;
+        self.metrics.record_tenant_request(req.tenant, elapsed_us, missed);
+        self.metrics.record_tenant_quality(req.tenant, resp.quality);
         self.admission.note_completion(elapsed_us, budget_us);
+        if let Some(ctrl) = &self.controller {
+            ctrl.note_outcome(req.tenant, missed);
+        }
         self.finish_trace(trace);
         resp
     }
@@ -364,7 +463,13 @@ impl ClusterRouter {
     /// budget-aware retry-with-backoff, and (opt-in) a hedged
     /// re-dispatch races a second replica when the first looks browned
     /// out.
-    fn dispatch(&self, req: &Request, budget_us: u64, t0: Instant) -> Result<Response> {
+    fn dispatch(
+        &self,
+        req: &Request,
+        budget_us: u64,
+        t0: Instant,
+        quality_floor: Option<crate::chaos::ServeQuality>,
+    ) -> Result<Response> {
         // Admission sees the budget *remaining* at this instant: time
         // already burned since t0 (e.g. waiting on a single-flight
         // leader that failed) must not be granted a second time. SLA
@@ -396,7 +501,18 @@ impl ClusterRouter {
                     .pick(req)
                     .ok_or_else(|| Error::Overloaded("no healthy replicas".into()))?;
 
-                let target = match self.admission.check(&self.replicas[primary], remaining_us) {
+                // The overload controller widens this tenant's tail blend
+                // when its SLA-miss rate climbs, so admission stops
+                // trusting a lagging rolling-window p99 mid-regime-shift.
+                let blend = self
+                    .controller
+                    .as_ref()
+                    .map_or(1_000, |c| c.blend_permille(req.tenant));
+                let target = match self.admission.check_with(
+                    &self.replicas[primary],
+                    remaining_us,
+                    blend,
+                ) {
                     Verdict::Admit => primary,
                     Verdict::Overbudget { estimate_us } => {
                         match self.cheapest_alternative(primary) {
@@ -407,6 +523,11 @@ impl ClusterRouter {
                             _ => {
                                 self.admission.note_shed();
                                 self.metrics.record_quality(crate::chaos::ServeQuality::Shed);
+                                self.metrics.record_tenant_shed(req.tenant);
+                                self.metrics.record_tenant_quality(
+                                    req.tenant,
+                                    crate::chaos::ServeQuality::Shed,
+                                );
                                 return Err(Error::Overloaded(format!(
                                     "deadline admission: estimated {estimate_us} µs > remaining budget {remaining_us} µs on replica {primary}"
                                 )));
@@ -444,10 +565,19 @@ impl ClusterRouter {
         }
 
         if let Ok(resp) = &mut result {
+            if let Some(floor) = quality_floor {
+                resp.quality = resp.quality.worst(floor);
+            }
             let elapsed_us = t0.elapsed().as_micros() as u64;
             self.metrics.record_request(elapsed_us, req.m());
             self.metrics.record_quality(resp.quality);
+            let missed = elapsed_us > budget_us;
+            self.metrics.record_tenant_request(req.tenant, elapsed_us, missed);
+            self.metrics.record_tenant_quality(req.tenant, resp.quality);
             self.admission.note_completion(elapsed_us, budget_us);
+            if let Some(ctrl) = &self.controller {
+                ctrl.note_outcome(req.tenant, missed);
+            }
         }
         result
     }
@@ -556,7 +686,13 @@ mod tests {
     }
 
     fn req(id: u64, user: u64) -> Request {
-        Request { request_id: id, user_id: user, history: vec![], candidates: vec![1, 2] }
+        Request {
+            request_id: id,
+            user_id: user,
+            history: vec![],
+            candidates: vec![1, 2],
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -660,5 +796,161 @@ mod tests {
         assert_eq!(router.metrics.requests(), 5);
         let m = router.metrics.snapshot();
         assert_eq!((m.result_hits, m.result_misses, m.result_coalesced), (4, 1, 0));
+    }
+
+    fn tenant_req(id: u64, tenant: u8, candidates: Vec<u64>) -> Request {
+        Request {
+            request_id: id,
+            user_id: id,
+            history: vec![],
+            candidates,
+            tenant: crate::workload::TenantId(tenant),
+        }
+    }
+
+    #[test]
+    fn tenant_sla_override_and_per_tenant_accounting() {
+        let backends: Vec<Arc<dyn ReplicaBackend>> = (0..2)
+            .map(|_| {
+                Arc::new(SimReplica::new(SimConfig {
+                    base_us: 5_000,
+                    per_pair_ns: 0,
+                    miss_penalty_us: 0,
+                    ..SimConfig::default()
+                })) as Arc<dyn ReplicaBackend>
+            })
+            .collect();
+        let cfg = ClusterConfig {
+            policy: RoutePolicy::RoundRobin,
+            tenants: TenantSet::parse("t1:sla_ms=1").unwrap(),
+            ..ClusterConfig::default()
+        };
+        let router = ClusterRouter::new(backends, cfg).unwrap();
+        // tenant 1's 1 ms override makes a 5 ms serve an SLA miss — it
+        // goes first, while the cold sojourn estimator still admits it
+        router.submit(&tenant_req(100, 1, vec![1, 2])).unwrap();
+        // tenant 0 rides the 50 ms cluster default: a 5 ms serve is fine
+        for i in 0..4 {
+            router.submit(&tenant_req(i, 0, vec![1, 2])).unwrap();
+        }
+        let counts = router.metrics.tenant_counts();
+        assert_eq!(counts[0].requests, 4);
+        assert_eq!(counts[0].sla_miss, 0, "tenant 0 within its default budget");
+        assert_eq!(counts[1].requests, 1);
+        assert_eq!(counts[1].sla_miss, 1, "tenant 1's tighter SLA judged the same latency");
+        assert_eq!(counts[2].requests, 0, "unused tenants stay silent");
+    }
+
+    #[test]
+    fn controller_gate_truncates_an_over_share_tenant() {
+        let mut cfg = ClusterConfig { policy: RoutePolicy::RoundRobin, ..Default::default() };
+        cfg.controller = true;
+        let backends: Vec<Arc<dyn ReplicaBackend>> = (0..2)
+            .map(|_| {
+                Arc::new(SimReplica::new(SimConfig {
+                    base_us: 0,
+                    per_pair_ns: 0,
+                    miss_penalty_us: 0,
+                    ..SimConfig::default()
+                })) as Arc<dyn ReplicaBackend>
+            })
+            .collect();
+        let router = ClusterRouter::new(backends, cfg).unwrap();
+        let ctrl = router.controller().expect("controller configured on");
+        // one overloading window: tenant 0 floods and misses under
+        // pressure, tenant 1 stays in-share → shed level lands in the
+        // truncate regime (SHED_STEP ≤ TRUNCATE_CEILING)
+        for _ in 0..900 {
+            ctrl.note_submit(crate::workload::TenantId(0));
+        }
+        for _ in 0..100 {
+            ctrl.note_submit(crate::workload::TenantId(1));
+            ctrl.note_outcome(crate::workload::TenantId(1), false);
+        }
+        for i in 0..900 {
+            ctrl.note_outcome(crate::workload::TenantId(0), i < 500);
+        }
+        ctrl.tick(1_000);
+        assert!(ctrl.shed_permille(crate::workload::TenantId(0)) > 0);
+        let (mut full, mut truncated) = (0u64, 0u64);
+        for i in 0..300 {
+            let resp = router.submit(&tenant_req(i, 0, vec![1, 2, 3, 4])).unwrap();
+            match resp.m {
+                4 => full += 1,
+                2 => {
+                    truncated += 1;
+                    assert_eq!(resp.quality, crate::chaos::ServeQuality::TruncatedCandidates);
+                }
+                m => panic!("unexpected candidate count {m}"),
+            }
+        }
+        assert!(truncated > 0, "some of the flash stream must be truncated");
+        assert!(full > 0, "truncation is partial, not a blackout");
+        let counts = router.metrics.tenant_counts();
+        assert_eq!(
+            counts[0].quality[crate::chaos::ServeQuality::TruncatedCandidates.index()],
+            truncated,
+            "tenant quality ladder records every truncation"
+        );
+    }
+
+    #[test]
+    fn controller_shed_surfaces_in_tenant_views_and_recovers() {
+        let mut cfg = ClusterConfig { policy: RoutePolicy::RoundRobin, ..Default::default() };
+        cfg.controller = true;
+        let backends: Vec<Arc<dyn ReplicaBackend>> = (0..2)
+            .map(|_| {
+                Arc::new(SimReplica::new(SimConfig {
+                    base_us: 0,
+                    per_pair_ns: 0,
+                    miss_penalty_us: 0,
+                    ..SimConfig::default()
+                })) as Arc<dyn ReplicaBackend>
+            })
+            .collect();
+        let router = ClusterRouter::new(backends, cfg).unwrap();
+        let ctrl = router.controller().unwrap();
+        let t0 = crate::workload::TenantId(0);
+        let t1 = crate::workload::TenantId(1);
+        // sustained overload escalates past the truncate ceiling
+        for _ in 0..6 {
+            for _ in 0..900 {
+                ctrl.note_submit(t0);
+                ctrl.note_outcome(t0, true);
+            }
+            for _ in 0..100 {
+                ctrl.note_submit(t1);
+                ctrl.note_outcome(t1, false);
+            }
+            ctrl.tick(1_000);
+        }
+        assert!(ctrl.shed_permille(t0) > controller::TRUNCATE_CEILING);
+        let mut shed_errs = 0u64;
+        for i in 0..200 {
+            if router.submit(&tenant_req(i, 0, vec![1, 2])).is_err() {
+                shed_errs += 1;
+            }
+        }
+        assert!(shed_errs > 50, "a 900‰ level sheds most of the stream: {shed_errs}");
+        let counts = router.metrics.tenant_counts();
+        assert_eq!(counts[0].shed, shed_errs, "tenant view counts every controller shed");
+        assert_eq!(
+            counts[0].quality[crate::chaos::ServeQuality::Shed.index()],
+            shed_errs
+        );
+        assert_eq!(counts[1].shed, 0, "quiet tenant untouched");
+        assert!(router.snapshot().shed >= shed_errs, "cluster shed totals include the gate");
+        // storm passes: clean windows decay the level to zero
+        for _ in 0..20 {
+            for _ in 0..50 {
+                ctrl.note_submit(t0);
+                ctrl.note_outcome(t0, false);
+            }
+            ctrl.tick(0);
+        }
+        assert_eq!(ctrl.shed_permille(t0), 0);
+        for i in 200..250 {
+            router.submit(&tenant_req(i, 0, vec![1, 2])).unwrap();
+        }
     }
 }

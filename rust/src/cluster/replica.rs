@@ -429,7 +429,13 @@ mod tests {
     }
 
     fn req() -> Request {
-        Request { request_id: 1, user_id: 9, history: vec![], candidates: vec![1, 2, 3] }
+        Request {
+            request_id: 1,
+            user_id: 9,
+            history: vec![],
+            candidates: vec![1, 2, 3],
+            ..Default::default()
+        }
     }
 
     fn flaky(fail: bool) -> Arc<FlakyBackend> {

@@ -179,6 +179,10 @@ pub struct FlightGuard<'a> {
     /// Shared trace-span id of the leader's computation, published to
     /// waiters with the outcome (0 = tracing off).
     span_id: u64,
+    /// The user's invalidation epoch as of `begin()` — re-checked at
+    /// publication so an `invalidate_user` racing this flight cannot be
+    /// undone by the leader's late insert (see `complete`).
+    user_epoch: u64,
 }
 
 impl FlightGuard<'_> {
@@ -203,6 +207,19 @@ impl FlightGuard<'_> {
                 });
                 self.cache.cache.insert(self.key, Arc::clone(&cached));
                 self.cache.note_user_key(req.user_id, self.key);
+                // Invalidation race check, AFTER publishing: if the
+                // user's features were invalidated while this flight was
+                // computing, the row we just inserted was scored from
+                // pre-update features — take it straight back out. The
+                // epoch bumps before the evictor reads the user index, so
+                // every interleaving is covered: an insert the evictor
+                // cannot see implies we see the bumped epoch here.
+                // In-flight waiters still get the computed response (they
+                // were already committed to this computation); only the
+                // *cache* must forget it.
+                if self.cache.user_epoch(req.user_id).load(Ordering::SeqCst) != self.user_epoch {
+                    self.cache.cache.remove(self.key);
+                }
                 let span_id = self.span_id;
                 self.finish(Ok((cached, span_id)));
             }
@@ -240,6 +257,13 @@ pub struct ResultCache {
     /// user_id → cache keys holding results scored from that user's
     /// features — the invalidation index behind [`Self::invalidate_user`].
     users: Mutex<HashMap<u64, Vec<u64>>>,
+    /// Per-user-slot invalidation epochs (slot = user_id low bits).
+    /// `invalidate_user` bumps the slot before evicting; a single-flight
+    /// leader captures it at `begin` and re-checks at publication, so a
+    /// racing invalidation can never be resurrected by a late insert.
+    /// Slots are shared across users — a false epoch mismatch only
+    /// drops a fresh row (a future miss), never serves a stale one.
+    epochs: [AtomicU64; SHARDS],
     coalesce: bool,
     salt: u64,
     hits: AtomicU64,
@@ -264,6 +288,7 @@ impl ResultCache {
             cache: ShardedCache::new(cfg.capacity, SHARDS, ttl),
             inflight: (0..FLIGHT_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             users: Mutex::new(HashMap::new()),
+            epochs: std::array::from_fn(|_| AtomicU64::new(0)),
             coalesce: cfg.coalesce,
             salt: cfg.scenario_salt,
             hits: AtomicU64::new(0),
@@ -289,6 +314,11 @@ impl ResultCache {
         &self.inflight[(key as usize) & (FLIGHT_SHARDS - 1)]
     }
 
+    /// The invalidation-epoch slot for `user_id`.
+    fn user_epoch(&self, user_id: u64) -> &AtomicU64 {
+        &self.epochs[(user_id as usize) & (SHARDS - 1)]
+    }
+
     /// Record that `key` holds a result scored from `user_id`'s features
     /// (called by the leader on publication).
     fn note_user_key(&self, user_id: u64, key: u64) {
@@ -305,6 +335,11 @@ impl ResultCache {
     /// many live entries were removed (already-expired or evicted rows
     /// don't count).
     pub fn invalidate_user(&self, user_id: u64) -> usize {
+        // bump FIRST: any in-flight leader that publishes after this
+        // point sees the new epoch at completion and evicts its own
+        // insert; any insert we could miss below published (and indexed
+        // itself) before the bump, so the index walk catches it
+        self.user_epoch(user_id).fetch_add(1, Ordering::SeqCst);
         let keys = self
             .users
             .lock()
@@ -338,6 +373,10 @@ impl ResultCache {
     /// the leader (the request's deadline budget).
     pub fn begin(&self, req: &Request, wait_budget: Duration) -> Begin<'_> {
         let (key, sorted, history_hash) = self.key_of(req);
+        // captured BEFORE the computation this flight may lead: an
+        // invalidation landing any time after this load is visible at
+        // publication (see `FlightGuard::complete`)
+        let user_epoch = self.user_epoch(req.user_id).load(Ordering::SeqCst);
         if let Lookup::Fresh(cached) = self.cache.get(key) {
             if cached.matches(req.user_id, &sorted, history_hash) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -353,6 +392,7 @@ impl ResultCache {
                 history_hash,
                 flight: None,
                 span_id: 0,
+                user_epoch,
             });
         }
         // Flight-table loop: each pass either registers this request as
@@ -394,6 +434,7 @@ impl ResultCache {
                         history_hash,
                         flight: Some(flight),
                         span_id: 0,
+                        user_epoch,
                     });
                 }
             };
@@ -466,7 +507,13 @@ mod tests {
     use super::*;
 
     fn req(id: u64, user: u64, candidates: Vec<u64>) -> Request {
-        Request { request_id: id, user_id: user, history: vec![user, user + 1], candidates }
+        Request {
+            request_id: id,
+            user_id: user,
+            history: vec![user, user + 1],
+            candidates,
+            ..Default::default()
+        }
     }
 
     fn resp(req: &Request, per_task: usize) -> Response {
@@ -685,6 +732,36 @@ mod tests {
         );
         // idempotent: the index entry was consumed
         assert_eq!(rc.invalidate_user(7), 0);
+    }
+
+    /// Regression (invalidate vs in-flight leader): `invalidate_user`
+    /// landing while a single-flight leader is mid-computation used to
+    /// be undone by the leader's subsequent insert — the next duplicate
+    /// served scores from pre-update features. The epoch captured at
+    /// `begin` and re-checked at publication closes the window.
+    #[test]
+    fn invalidation_racing_a_leader_is_not_resurrected_by_its_insert() {
+        let rc = cache(true);
+        let r = req(0, 7, vec![10, 20]);
+        let Begin::Leader(guard) = rc.begin(&r, Duration::from_secs(1)) else {
+            panic!("must lead");
+        };
+        // the feature update lands while the leader is still computing
+        assert_eq!(rc.invalidate_user(7), 0, "nothing published yet");
+        // ...and the leader publishes afterwards
+        guard.complete(&r, &Ok(resp(&r, 2)));
+        assert!(
+            matches!(rc.begin(&req(1, 7, vec![10, 20]), Duration::from_secs(1)), Begin::Leader(_)),
+            "stale flight must not resurrect the entry: duplicate must recompute"
+        );
+        // a flight that begins after the invalidation publishes normally
+        let r2 = req(2, 7, vec![10, 20]);
+        let Begin::Leader(g2) = rc.begin(&r2, Duration::from_secs(1)) else {
+            panic!("must lead");
+        };
+        g2.complete(&r2, &Ok(resp(&r2, 2)));
+        let b3 = rc.begin(&req(3, 7, vec![10, 20]), Duration::from_secs(1));
+        assert!(matches!(b3, Begin::Hit(_)));
     }
 
     #[test]

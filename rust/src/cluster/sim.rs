@@ -207,6 +207,7 @@ mod tests {
             user_id: user,
             history: vec![],
             candidates: (0..m as u64).collect(),
+            ..Default::default()
         }
     }
 

@@ -1,0 +1,157 @@
+//! Tenant registry: per-tenant traffic weights and SLA budgets.
+//!
+//! A *tenant* is a scenario / product surface sharing the cluster — the
+//! paper's deployments serve many recommendation surfaces with distinct
+//! latency envelopes off one fleet. The registry is parsed from the
+//! `--tenants` clause grammar (same shape as `--chaos` / `--storm`):
+//!
+//! ```text
+//! t0:w=3,sla_ms=50,t1:w=1,sla_ms=30
+//! ```
+//!
+//! `w` is the tenant's relative traffic weight (the weighted-fair share
+//! the overload controller defends); `sla_ms` overrides the cluster's
+//! default deadline for that tenant's requests. Unlisted tenants keep
+//! weight 1 and the default deadline, so a bare cluster behaves exactly
+//! as before tenancy existed.
+
+use crate::error::{Error, Result};
+use crate::workload::{TenantId, MAX_TENANTS};
+
+/// Per-tenant configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantSpec {
+    /// Relative traffic weight (weighted-fair share).
+    pub weight: u64,
+    /// Per-tenant deadline override (ms); None = cluster default.
+    pub sla_ms: Option<u64>,
+}
+
+impl Default for TenantSpec {
+    fn default() -> Self {
+        TenantSpec { weight: 1, sla_ms: None }
+    }
+}
+
+/// The full registry, one slot per possible tenant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantSet {
+    pub specs: [TenantSpec; MAX_TENANTS],
+}
+
+impl Default for TenantSet {
+    fn default() -> Self {
+        TenantSet { specs: [TenantSpec::default(); MAX_TENANTS] }
+    }
+}
+
+impl TenantSet {
+    /// Parse the clause grammar (see module docs). Clause names are
+    /// `t0`..`t7`; params are `w` (weight ≥ 1) and `sla_ms`.
+    pub fn parse(spec: &str) -> Result<TenantSet> {
+        let mut out = TenantSet::default();
+        let mut current: Option<usize> = None;
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (clause, param) = match tok.split_once(':') {
+                Some((name, first)) => (Some(name), first),
+                None => (None, tok),
+            };
+            if let Some(name) = clause {
+                let idx: usize = name
+                    .strip_prefix('t')
+                    .and_then(|d| d.parse().ok())
+                    .filter(|&i| i < MAX_TENANTS)
+                    .ok_or_else(|| {
+                        Error::Config(format!(
+                            "tenant clause '{name}' is not t0..t{}",
+                            MAX_TENANTS - 1
+                        ))
+                    })?;
+                current = Some(idx);
+            }
+            let Some(idx) = current else {
+                return Err(Error::Config(format!(
+                    "tenant param '{tok}' precedes any t<N> clause"
+                )));
+            };
+            let (k, v) = match param.split_once('=') {
+                Some((k, v)) if !k.is_empty() && !v.is_empty() => (k.trim(), v.trim()),
+                _ => return Err(Error::Config(format!("tenant token '{param}' is not key=value"))),
+            };
+            let n: u64 = v
+                .parse()
+                .map_err(|_| Error::Config(format!("tenant param {k}='{v}' is not an integer")))?;
+            match k {
+                "w" => {
+                    if n == 0 {
+                        return Err(Error::Config("tenant weight must be >= 1".into()));
+                    }
+                    out.specs[idx].weight = n;
+                }
+                "sla_ms" => out.specs[idx].sla_ms = Some(n),
+                o => return Err(Error::Config(format!("unknown tenant param '{o}'"))),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Deadline budget (µs) for `tenant`, falling back to `default_us`.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn budget_us(&self, tenant: TenantId, default_us: u64) -> u64 {
+        match self.specs[tenant.index()].sla_ms {
+            Some(ms) => ms.saturating_mul(1_000),
+            None => default_us,
+        }
+    }
+
+    /// Relative weight for tenant slot `idx`.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn weight(&self, idx: usize) -> u64 {
+        self.specs[idx.min(MAX_TENANTS - 1)].weight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_neutral() {
+        let set = TenantSet::default();
+        for i in 0..MAX_TENANTS {
+            assert_eq!(set.weight(i), 1);
+        }
+        assert_eq!(set.budget_us(TenantId(3), 50_000), 50_000);
+    }
+
+    #[test]
+    fn parse_weights_and_slas() {
+        let set = TenantSet::parse("t0:w=3,sla_ms=50,t1:w=1,sla_ms=30").unwrap();
+        assert_eq!(set.weight(0), 3);
+        assert_eq!(set.weight(1), 1);
+        assert_eq!(set.budget_us(TenantId(0), 10_000), 50_000);
+        assert_eq!(set.budget_us(TenantId(1), 10_000), 30_000);
+        // unlisted tenants keep the defaults
+        assert_eq!(set.weight(2), 1);
+        assert_eq!(set.budget_us(TenantId(2), 10_000), 10_000);
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        assert!(TenantSet::parse("t9:w=1").is_err(), "tenant out of range");
+        assert!(TenantSet::parse("w=1").is_err(), "param before clause");
+        assert!(TenantSet::parse("t0:w=0").is_err(), "zero weight");
+        assert!(TenantSet::parse("t0:budget=5").is_err(), "unknown param");
+        assert!(TenantSet::parse("t0:w").is_err(), "not key=value");
+    }
+
+    #[test]
+    fn out_of_range_lookup_folds() {
+        let set = TenantSet::parse("t7:w=5").unwrap();
+        assert_eq!(set.weight(200), 5, "folds into the last slot");
+    }
+}

@@ -176,6 +176,21 @@ pub struct ServerConfig {
     /// missing its SLA with the full set. Off by default — callers that
     /// prefer late-but-complete answers keep them.
     pub truncate_over_budget: bool,
+    /// Per-tenant deadline overrides (ms), indexed by `TenantId`; a
+    /// tenant beyond the list (or a 0 entry) keeps `deadline_ms`. Empty
+    /// by default: single-tenant behavior is byte-identical.
+    pub tenant_deadline_ms: Vec<u64>,
+}
+
+impl ServerConfig {
+    /// Deadline budget (µs) for `tenant` — the per-tenant override when
+    /// one is configured, the server default otherwise.
+    pub fn tenant_budget_us(&self, tenant: crate::workload::TenantId) -> u64 {
+        match self.tenant_deadline_ms.get(tenant.index()) {
+            Some(&ms) if ms > 0 => ms.saturating_mul(1_000),
+            _ => self.deadline_ms.saturating_mul(1_000),
+        }
+    }
 }
 
 impl Default for ServerConfig {
@@ -190,6 +205,7 @@ impl Default for ServerConfig {
             deadline_ms: 50,
             trace_sample_n: 0,
             truncate_over_budget: false,
+            tenant_deadline_ms: Vec::new(),
         }
     }
 }
@@ -319,6 +335,13 @@ impl StackConfig {
             if let Some(v) = s.opt("truncate_over_budget") {
                 c.server.truncate_over_budget = v.as_bool()?;
             }
+            if let Some(v) = s.opt("tenant_deadline_ms") {
+                let mut out = Vec::new();
+                for e in v.as_arr()? {
+                    out.push(e.as_u64()?);
+                }
+                c.server.tenant_deadline_ms = out;
+            }
         }
         if let Some(w) = j.opt("workload") {
             if let Some(v) = w.opt("catalog_size") {
@@ -380,6 +403,19 @@ mod tests {
         assert!(c.server.handoff_capacity >= 1);
         assert_eq!(c.server.deadline_ms, 50); // paper envelope
         assert_eq!(c.server.trace_sample_n, 0, "tracing is opt-in");
+        assert!(c.server.tenant_deadline_ms.is_empty(), "tenant overrides are opt-in");
+    }
+
+    #[test]
+    fn tenant_budget_overrides_and_falls_back() {
+        use crate::workload::TenantId;
+        let mut c = ServerConfig::default();
+        assert_eq!(c.tenant_budget_us(TenantId(0)), 50_000);
+        c.tenant_deadline_ms = vec![20, 0, 80];
+        assert_eq!(c.tenant_budget_us(TenantId(0)), 20_000);
+        assert_eq!(c.tenant_budget_us(TenantId(1)), 50_000, "0 entry keeps the default");
+        assert_eq!(c.tenant_budget_us(TenantId(2)), 80_000);
+        assert_eq!(c.tenant_budget_us(TenantId(5)), 50_000, "beyond the list = default");
     }
 
     #[test]
@@ -401,7 +437,8 @@ mod tests {
                     "coalesce": true, "coalesce_wait_us": 500},
             "server": {"pipeline_workers": 8, "bind_addr": "127.0.0.1:7070",
                        "pipeline": true, "feature_workers": 3, "handoff_capacity": 16,
-                       "deadline_first": true, "trace_sample_n": 4},
+                       "deadline_first": true, "trace_sample_n": 4,
+                       "tenant_deadline_ms": [20, 0, 80]},
             "workload": {"zipf_theta": 0.8, "candidate_mix": [[128, 1.0], [256, 1.0]]}
         }"#,
         )
@@ -423,6 +460,7 @@ mod tests {
         assert!(c.server.deadline_first);
         assert_eq!(c.server.bind_addr.as_deref(), Some("127.0.0.1:7070"));
         assert_eq!(c.server.trace_sample_n, 4);
+        assert_eq!(c.server.tenant_deadline_ms, vec![20, 0, 80]);
         assert_eq!(c.workload.candidate_mix, vec![(128, 1.0), (256, 1.0)]);
     }
 

@@ -207,6 +207,48 @@
 //!   request resolves with a response or a typed error before its
 //!   deadline-plus-grace, and that post-storm throughput recovers.
 //!
+//! ## Overload control: tenancy, feedback admission, storm scenarios
+//!
+//! The chaos plane breaks the system; the storm plane breaks the
+//! *traffic*. Production recommendation traffic is multi-tenant (app
+//! surfaces, partner integrations, backfill jobs) and its overloads are
+//! correlated — flash crowds on a hot candidate set, feature-update
+//! invalidation storms, diurnal swells. Three pieces make the cluster
+//! tier survive them:
+//!
+//! * **Tenancy** — every [`workload::Request`] carries a
+//!   [`workload::TenantId`]; [`cluster::TenantSet`] (CLI: `--tenants
+//!   "t0:w=2,sla_ms=20,t1:w=1"`) gives each tenant a fair-share weight
+//!   and an SLA override that admission and the pipeline intake apply
+//!   per request. The [`metrics::Recorder`] keeps per-tenant
+//!   requests/sheds/misses/latency/quality views
+//!   ([`metrics::TenantCounts`]), surfaced in the cluster report, the
+//!   serve report, and the Prometheus text endpoint.
+//! * **Feedback-controlled admission** — the static admission estimate
+//!   becomes a closed loop: [`cluster::OverloadController`] (CLI:
+//!   `--controller`) runs a per-tenant AIMD at 50 ms ticks fed by each
+//!   tenant's observed SLA-miss rate and the replica queue depth.
+//!   Misses additively raise that tenant's p99-vs-mean blend in the
+//!   admission estimator (pessimism where it is earned); a tenant over
+//!   its weighted fair share under queue pressure takes gate
+//!   degradation — candidate truncation first, then sheds — while clean
+//!   windows decay both levels multiplicatively back to baseline
+//!   (brownout recovery). The gate fns are `// lint: no_alloc` and a
+//!   registry in the lint keeps them tagged.
+//! * **Storm engine** — [`workload::storm::StormSpec`] (CLI: `--storm
+//!   "flash:tenant=1,at_s=2,for_s=2,x=9,hot=64"`) deterministically
+//!   expands diurnal/flash/invalidation/mix clauses into a timed event
+//!   timeline (arrivals + `invalidate_user` calls) that the open-loop
+//!   driver replays against a live cluster, or that `flame trace-gen`
+//!   records as a versioned v2 trace for byte-identical A/B replay.
+//!   `tests/storm.rs` enforces the isolation invariant on a seeded
+//!   flash crowd: the quiet tenant's miss rate stays near its baseline
+//!   while the flash tenant pays at the gate, the controller-off arm is
+//!   measurably worse for the bystander, and the shed level decays to
+//!   zero post-storm. `benches/bench_storm.rs` tracks the per-tenant
+//!   cost A/B in `BENCH_storm.json`; see `EXPERIMENTS.md` § "Storm
+//!   runbook".
+//!
 //! ## Concurrency invariants
 //!
 //! The serve path's concurrency is hand-rolled, and its correctness

@@ -82,6 +82,24 @@ pub struct Analysis {
 /// Directories whose non-test code falls under the panic policy.
 const PANIC_POLICY_DIRS: &[&str] = &["server/", "dso/", "pda/", "cluster/", "fke/"];
 
+/// Per-request hot-path functions that MUST carry the `// lint:
+/// no_alloc` annotation. The no-alloc checker only verifies functions
+/// that opted in; for the overload-controller surface (consulted on
+/// every cluster submit) a silently dropped tag would silently drop
+/// coverage, so the registry turns a missing tag into a finding.
+const NO_ALLOC_REQUIRED: &[(&str, &str)] = &[
+    ("cluster/controller.rs", "note_submit"),
+    ("cluster/controller.rs", "note_outcome"),
+    ("cluster/controller.rs", "blend_permille"),
+    ("cluster/controller.rs", "shed_permille"),
+    ("cluster/controller.rs", "decision"),
+    ("cluster/controller.rs", "maybe_tick"),
+    ("cluster/controller.rs", "tick"),
+    ("cluster/tenant.rs", "budget_us"),
+    ("cluster/tenant.rs", "weight"),
+    ("cluster/mod.rs", "queue_permille"),
+];
+
 /// A documented lock-order invariant: within the file matching
 /// `file_suffix`, the `held` class must never be live when the
 /// `acquired` class is taken. Cross-linked from the module docs of the
@@ -290,6 +308,32 @@ pub fn check(model: &Model) -> Analysis {
                             "calls `{}()` which allocates ({d}) inside a \
                              `// lint: no_alloc` function",
                             call.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // ---- required no_alloc coverage on the controller hot path
+    for file in &model.files {
+        if file.integration_test {
+            continue;
+        }
+        for &(suffix, fname) in NO_ALLOC_REQUIRED {
+            if !file.path.ends_with(suffix) {
+                continue;
+            }
+            for item in &file.fns {
+                if item.name == fname && !item.is_test && !item.no_alloc {
+                    findings.push(Finding {
+                        checker: "no-alloc",
+                        file: file.path.clone(),
+                        line: item.line,
+                        function: item.name.clone(),
+                        detail: format!(
+                            "hot-path fn `{fname}` must carry `// lint: no_alloc` \
+                             (required registry entry for {suffix})"
                         ),
                     });
                 }
@@ -1299,6 +1343,35 @@ impl H {
     fn free_to_alloc(&self) -> Vec<u8> {
         vec![1, 2, 3]
     }
+}
+"#)]);
+        assert!(by(&a, "no-alloc").is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn untagged_controller_hot_path_fn_is_a_finding() {
+        let a = run(&[("src/cluster/controller.rs", r#"
+impl OverloadController {
+    fn decision(&self, t: u8) -> u8 {
+        t
+    }
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    fn note_submit(&self, t: u8) {
+        let _ = t;
+    }
+}
+"#)]);
+        let f = by(&a, "no-alloc");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert_eq!(f[0].function, "decision");
+        assert!(f[0].detail.contains("required registry"), "{}", f[0].detail);
+    }
+
+    #[test]
+    fn registry_ignores_same_name_fns_in_other_files() {
+        let a = run(&[("src/server/stages.rs", r#"
+fn decision(x: u8) -> u8 {
+    x
 }
 "#)]);
         assert!(by(&a, "no-alloc").is_empty(), "{:?}", a.findings);

@@ -26,6 +26,7 @@ use flame::obs::Tracer;
 use flame::pda::numa::Topology;
 use flame::runtime::Runtime;
 use flame::server::pipeline::{ServingStack, StackBuilder};
+use flame::workload::storm::StormSpec;
 use flame::workload::{driver, trace, Generator, MDist};
 
 fn main() -> Result<()> {
@@ -38,6 +39,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
         Some("record") => cmd_record(&args),
+        Some("trace-gen") => cmd_trace_gen(&args),
         Some("replay") => cmd_serve(&args), // replay is serve --trace
         Some("bind") => cmd_bind(&args),
         Some("cluster") => cmd_cluster(&args),
@@ -385,7 +387,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(addr) => {
             let s = Arc::clone(&stack);
             let srv = MetricsServer::start(addr, move || {
-                flame::obs::prom::render(&s.metrics.snapshot())
+                flame::obs::prom::render_recorder(&s.metrics)
             })?;
             eprintln!("[flame] metrics endpoint: http://{}/", srv.addr);
             Some(srv)
@@ -562,6 +564,59 @@ fn cmd_record(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `flame trace-gen` — expand a storm scenario into a timed v2 trace.
+/// The expansion is deterministic in `(--storm, --seed, workload
+/// config)`, so every arm of an experiment — controller on, controller
+/// off, different policies — replays the byte-identical storm.
+fn cmd_trace_gen(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.first().cloned())
+        .context("trace-gen needs --trace FILE")?;
+    let scenario_name = args.get_or("scenario", "bench");
+    let scenario = Scenario::parse(scenario_name)?;
+    let cfg = stack_config(args)?;
+    let mut wl = cfg.workload;
+    wl.candidate_mix = match args.get("m-dist") {
+        Some(dist) => MDist::parse(dist)?.mix(&scenario.config().m_profiles),
+        None => WorkloadConfig::uniform_mix(&scenario.config().m_profiles),
+    };
+    let spec_text = args.get("storm").unwrap_or("");
+    let spec =
+        if spec_text.is_empty() { StormSpec::quiet() } else { StormSpec::parse(spec_text)? };
+    let rate = args.get_parse::<f64>("rate")?.unwrap_or(1_000.0);
+    let duration_s = args.get_parse::<f64>("duration-s")?.unwrap_or(5.0);
+    let mut g = Generator::new(&wl, scenario.config().seq_len);
+    let events = spec.generate(&mut g, rate, duration_s, wl.seed);
+    let header = trace::TraceHeader {
+        scenario: Some(scenario_name.to_string()),
+        storm: (!spec_text.is_empty()).then(|| spec_text.to_string()),
+        base_rate: Some(rate),
+        ..trace::TraceHeader::v2()
+    };
+    trace::record_events(std::path::Path::new(&path), &header, &events)?;
+    let mut per_tenant = [0u64; flame::workload::MAX_TENANTS];
+    let mut invalidations = 0u64;
+    for e in &events {
+        match e {
+            trace::TraceEvent::Arrival { req, .. } => per_tenant[req.tenant.index()] += 1,
+            trace::TraceEvent::InvalidateUser { .. } => invalidations += 1,
+        }
+    }
+    println!(
+        "wrote {} events to {path}: {} arrivals, {invalidations} invalidations over {duration_s:.1}s @ {rate:.0}/s base",
+        events.len(),
+        per_tenant.iter().sum::<u64>()
+    );
+    for (i, &n) in per_tenant.iter().enumerate() {
+        if n > 0 {
+            println!("  tenant {i}: {n} arrivals");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_bind(args: &Args) -> Result<()> {
     let n = args.get_parse::<usize>("replicas")?.unwrap_or(1);
     let addr = args.get_or("bind", "127.0.0.1:7178");
@@ -610,6 +665,12 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     }
     if args.has("no-coalesce") {
         c.result_cache.coalesce = false;
+    }
+    if let Some(spec) = args.get("tenants") {
+        c.tenants = flame::cluster::TenantSet::parse(spec)?;
+    }
+    if args.has("controller") {
+        c.controller = true;
     }
     if args.get("chaos").is_some() {
         // a chaos run turns the router's degradation ladder on: hedged
@@ -715,8 +776,20 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     wl.candidate_mix = mix;
     wl.n_users = args.get_parse::<u64>("users")?.unwrap_or(2_000);
     let mut g = Generator::new(&wl, seq_len);
-    let requests = g.batch(n_requests);
     let dup_rate = args.get_parse::<f64>("dup-rate")?.unwrap_or(0.0);
+
+    // storm / trace replay: a timed event timeline (arrivals + feature
+    // invalidations) instead of a request batch — with `--storm` the
+    // timeline is expanded here, with `--trace` a recorded one replays
+    let events = match (args.get("storm"), args.get("trace")) {
+        (Some(spec), _) => {
+            let storm = StormSpec::parse(spec)?;
+            let rate = args.get_parse::<f64>("rate")?.unwrap_or(2_000.0);
+            Some(storm.generate(&mut g, rate, duration.as_secs_f64(), wl.seed))
+        }
+        (None, Some(path)) => Some(trace::replay_events(std::path::Path::new(path))?.1),
+        (None, None) => None,
+    };
 
     let router = Arc::new(ClusterRouter::new(backends, ccfg)?);
     if let Some(t) = &tracer {
@@ -726,30 +799,49 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         Some(addr) => {
             let r = Arc::clone(&router);
             let srv = MetricsServer::start(addr, move || {
-                flame::obs::prom::render(&r.metrics.snapshot())
+                flame::obs::prom::render_recorder(&r.metrics)
             })?;
             eprintln!("[flame] metrics endpoint: http://{}/", srv.addr);
             Some(srv)
         }
         None => None,
     };
+    let drive_desc = match &events {
+        Some(ev) => format!("{} storm events", ev.len()),
+        None => format!("{n_requests} requests"),
+    };
     eprintln!(
-        "[flame] cluster: {n} replicas, policy {}, deadline {} ms, dup rate {:.0}% — driving {} requests ...",
+        "[flame] cluster: {n} replicas, policy {}, deadline {} ms, dup rate {:.0}% — driving {drive_desc} ...",
         router.policy().name(),
         router.deadline_us() / 1_000,
         dup_rate * 100.0,
-        requests.len()
     );
 
     let t0 = std::time::Instant::now();
-    let report = match args.get_parse::<f64>("rate")? {
-        Some(rate) => driver::open_loop_cluster(
-            &router, requests, rate, duration, 4_096, wl.seed, dup_rate,
+    let report = match events {
+        Some(events) => driver::open_loop_events(
+            &events,
+            1.0,
+            4_096,
+            |r| router.submit(r).is_ok(),
+            |u| {
+                router.invalidate_user(u);
+            },
         ),
         None => {
-            let mut requests = requests;
-            driver::inject_duplicates(&mut requests, dup_rate, wl.seed);
-            driver::closed_loop(requests, concurrency, duration, |r| router.submit(r).is_ok())
+            let requests = g.batch(n_requests);
+            match args.get_parse::<f64>("rate")? {
+                Some(rate) => driver::open_loop_cluster(
+                    &router, requests, rate, duration, 4_096, wl.seed, dup_rate,
+                ),
+                None => {
+                    let mut requests = requests;
+                    driver::inject_duplicates(&mut requests, dup_rate, wl.seed);
+                    driver::closed_loop(requests, concurrency, duration, |r| {
+                        router.submit(r).is_ok()
+                    })
+                }
+            }
         }
     };
     print_cluster_report(&router, &report, t0.elapsed().as_secs_f64());
@@ -838,4 +930,51 @@ fn print_cluster_report(
         ]);
     }
     t.print();
+    // per-tenant view: only rendered for multi-tenant traffic or when
+    // the overload controller is armed (single-tenant output unchanged)
+    let tenants = router.metrics.tenant_counts();
+    let multi_tenant = tenants.iter().enumerate().any(|(i, t)| i > 0 && t.submitted() > 0);
+    if multi_tenant || router.controller().is_some() {
+        let mut tt = Table::new(
+            "per-tenant",
+            &[
+                "tenant", "requests", "shed", "shed %", "miss %", "p50 ms", "p99 ms", "full",
+                "degraded",
+            ],
+        );
+        for (i, tc) in tenants.iter().enumerate() {
+            if tc.submitted() == 0 {
+                continue;
+            }
+            let degraded: u64 = tc.quality.iter().skip(1).sum();
+            tt.row(&[
+                i.to_string(),
+                tc.requests.to_string(),
+                tc.shed.to_string(),
+                format!("{:.1}", tc.shed_rate() * 100.0),
+                format!("{:.1}", tc.miss_rate() * 100.0),
+                format!("{:.2}", tc.overall_p50_us as f64 / 1_000.0),
+                format!("{:.2}", tc.overall_p99_us as f64 / 1_000.0),
+                tc.quality[0].to_string(),
+                degraded.to_string(),
+            ]);
+        }
+        tt.print();
+    }
+    if let Some(ctrl) = router.controller() {
+        let state: Vec<String> = tenants
+            .iter()
+            .enumerate()
+            .filter(|(_, tc)| tc.submitted() > 0)
+            .map(|(i, _)| {
+                let tid = flame::workload::TenantId(i as u8);
+                format!(
+                    "t{i} blend {}‰ shed {}‰",
+                    ctrl.blend_permille(tid),
+                    ctrl.shed_permille(tid)
+                )
+            })
+            .collect();
+        println!("controller     : {} ticks  {}", ctrl.ticks(), state.join("  "));
+    }
 }

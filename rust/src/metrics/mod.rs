@@ -7,4 +7,4 @@ pub mod histogram;
 pub mod recorder;
 
 pub use histogram::{HistSnapshot, Histogram};
-pub use recorder::{MetricsSnapshot, Recorder};
+pub use recorder::{MetricsSnapshot, Recorder, TenantCounts};

@@ -9,6 +9,7 @@ use std::time::Instant;
 
 use crate::chaos::{ServeQuality, QUALITY_RUNGS};
 use crate::obs::{StageKind, TraceContext, Tracer};
+use crate::workload::{TenantId, MAX_TENANTS};
 
 use super::Histogram;
 
@@ -81,6 +82,15 @@ pub struct Recorder {
     /// Supervised recovery: worker panics caught by a supervisor that
     /// failed the in-flight request and respawned/continued the worker.
     worker_restarts: AtomicU64,
+    /// Per-tenant views (flat arrays indexed by `TenantId::index`):
+    /// completions, SLA misses, front-door sheds, quality ladder, and
+    /// an end-to-end latency histogram per tenant. Single-tenant
+    /// traffic lands entirely in slot 0.
+    tenant_requests: [AtomicU64; MAX_TENANTS],
+    tenant_sla_miss: [AtomicU64; MAX_TENANTS],
+    tenant_shed: [AtomicU64; MAX_TENANTS],
+    tenant_quality: [[AtomicU64; QUALITY_RUNGS]; MAX_TENANTS],
+    tenant_overall: [Histogram; MAX_TENANTS],
     /// Optional request-scoped tracer (set once at startup; absent on
     /// the default path so tracing costs nothing when off). The u32 is
     /// the pid this recorder's traces carry (replica id; 0 standalone).
@@ -128,6 +138,11 @@ impl Recorder {
             hedges: AtomicU64::new(0),
             hedge_wins: AtomicU64::new(0),
             worker_restarts: AtomicU64::new(0),
+            tenant_requests: std::array::from_fn(|_| AtomicU64::new(0)),
+            tenant_sla_miss: std::array::from_fn(|_| AtomicU64::new(0)),
+            tenant_shed: std::array::from_fn(|_| AtomicU64::new(0)),
+            tenant_quality: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
+            tenant_overall: std::array::from_fn(|_| Histogram::new()),
             tracer: OnceLock::new(),
             started: Instant::now(),
         }
@@ -302,6 +317,52 @@ impl Recorder {
         self.worker_restarts.fetch_add(1, Ordering::Relaxed);
     }
 
+    // ---- per-tenant views ----
+
+    /// One completed request for `tenant`: end-to-end micros plus
+    /// whether it blew its (per-tenant) deadline budget.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn record_tenant_request(&self, tenant: TenantId, overall_us: u64, sla_missed: bool) {
+        let i = tenant.index();
+        self.tenant_requests[i].fetch_add(1, Ordering::Relaxed);
+        self.tenant_overall[i].record(overall_us);
+        if sla_missed {
+            self.tenant_sla_miss[i].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One front-door shed (admission or controller) for `tenant`.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn record_tenant_shed(&self, tenant: TenantId) {
+        self.tenant_shed[tenant.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One response at `quality` on `tenant`'s degradation ladder.
+    // lint: no_alloc — per-request hot path, must stay allocation-free
+    pub fn record_tenant_quality(&self, tenant: TenantId, quality: ServeQuality) {
+        self.tenant_quality[tenant.index()][quality.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time per-tenant views, indexed by `TenantId::index`.
+    /// Tenants that saw no traffic report all-zero rows (callers skip
+    /// them when printing).
+    pub fn tenant_counts(&self) -> [TenantCounts; MAX_TENANTS] {
+        std::array::from_fn(|i| {
+            let lat = self.tenant_overall[i].snapshot_counts();
+            TenantCounts {
+                requests: self.tenant_requests[i].load(Ordering::Relaxed),
+                sla_miss: self.tenant_sla_miss[i].load(Ordering::Relaxed),
+                shed: self.tenant_shed[i].load(Ordering::Relaxed),
+                quality: std::array::from_fn(|q| {
+                    self.tenant_quality[i][q].load(Ordering::Relaxed)
+                }),
+                overall_p50_us: lat.p50(),
+                overall_p99_us: lat.p99(),
+                overall_mean_us: lat.mean(),
+            }
+        })
+    }
+
     /// Quality histogram, indexed by [`ServeQuality::index`].
     pub fn quality_counts(&self) -> [u64; QUALITY_RUNGS] {
         std::array::from_fn(|i| self.quality[i].load(Ordering::Relaxed))
@@ -433,6 +494,15 @@ impl Recorder {
         self.hedges.store(0, Ordering::Relaxed);
         self.hedge_wins.store(0, Ordering::Relaxed);
         self.worker_restarts.store(0, Ordering::Relaxed);
+        for i in 0..MAX_TENANTS {
+            self.tenant_requests[i].store(0, Ordering::Relaxed);
+            self.tenant_sla_miss[i].store(0, Ordering::Relaxed);
+            self.tenant_shed[i].store(0, Ordering::Relaxed);
+            for q in &self.tenant_quality[i] {
+                q.store(0, Ordering::Relaxed);
+            }
+            self.tenant_overall[i].reset();
+        }
         self.started = Instant::now();
     }
 
@@ -566,6 +636,45 @@ pub struct MetricsSnapshot {
     /// Supervised recovery: caught worker panics (request failed typed,
     /// worker kept alive).
     pub worker_restarts: u64,
+}
+
+/// Point-in-time view of one tenant's traffic (see
+/// [`Recorder::tenant_counts`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TenantCounts {
+    pub requests: u64,
+    pub sla_miss: u64,
+    pub shed: u64,
+    /// Quality-ladder histogram, indexed by `ServeQuality::index`.
+    pub quality: [u64; QUALITY_RUNGS],
+    pub overall_p50_us: u64,
+    pub overall_p99_us: u64,
+    pub overall_mean_us: f64,
+}
+
+impl TenantCounts {
+    /// Completions + sheds: everything the tenant pushed at the router.
+    pub fn submitted(&self) -> u64 {
+        self.requests + self.shed
+    }
+
+    /// SLA-miss rate over completions (0 when idle).
+    pub fn miss_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.sla_miss as f64 / self.requests as f64
+        }
+    }
+
+    /// Shed rate over everything submitted (0 when idle).
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted() == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.submitted() as f64
+        }
+    }
 }
 
 impl MetricsSnapshot {
@@ -758,6 +867,40 @@ mod tests {
         r.record_result_coalesced();
         let s = r.snapshot_over(1.0);
         assert_eq!((s.result_hits, s.result_misses, s.result_coalesced), (2, 1, 1));
+    }
+
+    #[test]
+    fn tenant_views_track_independently() {
+        let r = Recorder::new();
+        r.record_tenant_request(TenantId(0), 10_000, false);
+        r.record_tenant_request(TenantId(0), 60_000, true);
+        r.record_tenant_request(TenantId(1), 5_000, false);
+        r.record_tenant_shed(TenantId(1));
+        r.record_tenant_quality(TenantId(0), ServeQuality::Full);
+        r.record_tenant_quality(TenantId(1), ServeQuality::Shed);
+        let t = r.tenant_counts();
+        assert_eq!((t[0].requests, t[0].sla_miss, t[0].shed), (2, 1, 0));
+        assert_eq!((t[1].requests, t[1].sla_miss, t[1].shed), (1, 0, 1));
+        assert!((t[0].miss_rate() - 0.5).abs() < 1e-9);
+        assert!((t[1].shed_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(t[0].quality[ServeQuality::Full.index()], 1);
+        assert_eq!(t[1].quality[ServeQuality::Shed.index()], 1);
+        assert!(t[0].overall_p99_us >= 50_000, "{t:?}");
+        assert!(t[1].overall_p50_us >= 4_000, "{t:?}");
+        assert_eq!(t[2], TenantCounts::default(), "idle tenants stay zero");
+        // out-of-range ids fold into the last slot instead of panicking
+        r.record_tenant_shed(TenantId(250));
+        assert_eq!(r.tenant_counts()[MAX_TENANTS - 1].shed, 1);
+    }
+
+    #[test]
+    fn reset_zeroes_tenant_views() {
+        let mut r = Recorder::new();
+        r.record_tenant_request(TenantId(1), 10_000, true);
+        r.record_tenant_shed(TenantId(1));
+        r.record_tenant_quality(TenantId(1), ServeQuality::Shed);
+        r.reset();
+        assert_eq!(r.tenant_counts()[1], TenantCounts::default());
     }
 
     #[test]

@@ -183,6 +183,59 @@ pub fn render(s: &MetricsSnapshot) -> String {
     o
 }
 
+/// Append per-tenant series (`tenant="N"` labels) for every tenant that
+/// has seen traffic. Emits nothing when no tenant view was ever
+/// recorded, so single-tenant expositions are byte-identical to before
+/// tenancy existed.
+pub fn append_tenants(o: &mut String, tenants: &[crate::metrics::TenantCounts]) {
+    if tenants.iter().all(|t| t.submitted() == 0) {
+        return;
+    }
+    let active = || tenants.iter().enumerate().filter(|(_, t)| t.submitted() > 0);
+    for (name, help, get) in [
+        (
+            "flame_tenant_requests_total",
+            "Completed requests by tenant.",
+            (|t| t.requests) as fn(&crate::metrics::TenantCounts) -> u64,
+        ),
+        ("flame_tenant_sla_miss_total", "SLA misses by tenant.", |t| t.sla_miss),
+        ("flame_tenant_shed_total", "Requests shed at the front door by tenant.", |t| t.shed),
+    ] {
+        let _ = writeln!(o, "# HELP {name} {help}");
+        let _ = writeln!(o, "# TYPE {name} counter");
+        for (i, t) in active() {
+            let _ = writeln!(o, "{name}{{tenant=\"{i}\"}} {}", get(t));
+        }
+    }
+    let _ = writeln!(o, "# HELP flame_tenant_overall_p99_ms End-to-end latency p99 by tenant.");
+    let _ = writeln!(o, "# TYPE flame_tenant_overall_p99_ms gauge");
+    for (i, t) in active() {
+        let _ = writeln!(
+            o,
+            "flame_tenant_overall_p99_ms{{tenant=\"{i}\"}} {}",
+            t.overall_p99_us as f64 / 1_000.0
+        );
+    }
+    let _ = writeln!(o, "# HELP flame_tenant_quality_total Served quality rungs by tenant.");
+    let _ = writeln!(o, "# TYPE flame_tenant_quality_total counter");
+    for (i, t) in active() {
+        for (r, &n) in t.quality.iter().enumerate() {
+            let label = crate::chaos::ServeQuality::from_index(r)
+                .map_or("unknown", |q| q.as_str());
+            let _ =
+                writeln!(o, "flame_tenant_quality_total{{tenant=\"{i}\",quality=\"{label}\"}} {n}");
+        }
+    }
+}
+
+/// Render a live recorder: the aggregate exposition plus the per-tenant
+/// series for every tenant that has seen traffic.
+pub fn render_recorder(r: &crate::metrics::Recorder) -> String {
+    let mut o = render(&r.snapshot());
+    append_tenants(&mut o, &r.tenant_counts());
+    o
+}
+
 /// A live scrape endpoint: GET anything → the current exposition.
 pub struct MetricsServer {
     pub addr: std::net::SocketAddr,
@@ -302,6 +355,37 @@ mod tests {
         assert_eq!(
             text.matches("# HELP").count(),
             text.matches("# TYPE").count()
+        );
+    }
+
+    #[test]
+    fn tenant_series_appear_only_when_tenants_saw_traffic() {
+        use crate::workload::TenantId;
+        let r = Recorder::new();
+        r.record_request(1_000, 8);
+        let quiet = render_recorder(&r);
+        assert!(
+            !quiet.contains("flame_tenant_"),
+            "no tenant traffic → exposition unchanged:\n{quiet}"
+        );
+        r.record_tenant_request(TenantId(0), 2_000, false);
+        r.record_tenant_request(TenantId(3), 9_000, true);
+        r.record_tenant_shed(TenantId(3));
+        r.record_tenant_quality(TenantId(3), crate::chaos::ServeQuality::Shed);
+        let text = render_recorder(&r);
+        for needle in [
+            "flame_tenant_requests_total{tenant=\"0\"} 1",
+            "flame_tenant_requests_total{tenant=\"3\"} 1",
+            "flame_tenant_sla_miss_total{tenant=\"3\"} 1",
+            "flame_tenant_shed_total{tenant=\"3\"} 1",
+            "flame_tenant_overall_p99_ms{tenant=\"3\"}",
+            "flame_tenant_quality_total{tenant=\"3\",quality=\"shed\"} 1",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+        assert!(
+            !text.contains("tenant=\"1\""),
+            "idle tenants must not emit series:\n{text}"
         );
     }
 

@@ -152,10 +152,11 @@ impl PipelineHandle {
 
     /// Admit a request (shedding on a full intake queue — the
     /// backpressure front door) and return the response receiver. The
-    /// deadline is the configured per-request budget
-    /// (`ServerConfig::deadline_ms`).
+    /// deadline is the request tenant's budget
+    /// (`ServerConfig::tenant_budget_us`, falling back to
+    /// `ServerConfig::deadline_ms`).
     pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
-        let budget = Duration::from_millis(self.stack.config.server.deadline_ms);
+        let budget = Duration::from_micros(self.stack.config.server.tenant_budget_us(req.tenant));
         self.submit_with_deadline(req, budget)
     }
 
@@ -173,11 +174,14 @@ impl PipelineHandle {
             .stack
             .metrics
             .trace_begin(req.request_id, budget.as_micros() as u64);
+        let tenant = req.tenant;
         if let Err(e) =
             self.intake.push(PipelineJob { req, deadline: Instant::now() + budget, trace, reply })
         {
             // shed at the front door: the bottom rung of the ladder
             self.stack.metrics.record_quality(ServeQuality::Shed);
+            self.stack.metrics.record_tenant_shed(tenant);
+            self.stack.metrics.record_tenant_quality(tenant, ServeQuality::Shed);
             return Err(e);
         }
         Ok(rx)

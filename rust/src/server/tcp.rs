@@ -96,7 +96,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Request> {
     if c.remaining() != 0 {
         return Err(Error::Protocol("trailing bytes in request".into()));
     }
-    Ok(Request { request_id, user_id, history, candidates })
+    Ok(Request { request_id, user_id, history, candidates, ..Default::default() })
 }
 
 /// Encode a response frame payload.
@@ -203,8 +203,8 @@ impl TcpServer {
                                         stream,
                                         |req| stack.serve(req, &mut arena),
                                         move || {
-                                            crate::obs::prom::render(
-                                                &stats_stack.metrics.snapshot(),
+                                            crate::obs::prom::render_recorder(
+                                                &stats_stack.metrics,
                                             )
                                         },
                                         Some(n_tasks),
@@ -217,8 +217,8 @@ impl TcpServer {
                                         stream,
                                         |req| router.submit(req),
                                         move || {
-                                            crate::obs::prom::render(
-                                                &stats_router.metrics.snapshot(),
+                                            crate::obs::prom::render_recorder(
+                                                &stats_router.metrics,
                                             )
                                         },
                                         None,
@@ -355,7 +355,13 @@ mod tests {
     use super::*;
 
     fn req() -> Request {
-        Request { request_id: 7, user_id: 3, history: vec![1, 2, 3], candidates: vec![10, 11] }
+        Request {
+            request_id: 7,
+            user_id: 3,
+            history: vec![1, 2, 3],
+            candidates: vec![10, 11],
+            ..Default::default()
+        }
     }
 
     #[test]

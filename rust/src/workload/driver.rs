@@ -213,6 +213,72 @@ pub fn open_loop_pipeline(
     DriveReport { submitted, completed, rejected, elapsed: start.elapsed() }
 }
 
+/// Timed-replay driver: plays a [`TraceEvent`] timeline (see
+/// `workload::storm`) against `serve`, honoring each event's recorded
+/// arrival offset so a storm's shape — flash-crowd ramps, diurnal
+/// swings, invalidation bursts — survives into the live run. `time_scale`
+/// stretches (>1) or compresses (<1) the recorded clock; arrivals
+/// dispatch on scoped threads under the `max_in_flight` front-door cap
+/// (breach = rejection, as in [`open_loop`]) while invalidation events
+/// call `invalidate` inline on the arrival thread, preserving their
+/// order against subsequent arrivals.
+pub fn open_loop_events<F, G>(
+    events: &[crate::workload::trace::TraceEvent],
+    time_scale: f64,
+    max_in_flight: usize,
+    serve: F,
+    invalidate: G,
+) -> DriveReport
+where
+    F: Fn(&Request) -> bool + Send + Sync,
+    G: Fn(u64) + Send + Sync,
+{
+    use crate::workload::trace::TraceEvent;
+    let serve = &serve;
+    let completed = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let in_flight = Arc::new(AtomicU64::new(0));
+    let start = Instant::now();
+    let mut submitted = 0u64;
+    std::thread::scope(|s| {
+        for e in events {
+            let target = Duration::from_secs_f64(e.at_us() as f64 * 1e-6 * time_scale.max(0.0));
+            let now = start.elapsed();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            match e {
+                TraceEvent::InvalidateUser { user_id, .. } => invalidate(*user_id),
+                TraceEvent::Arrival { req, .. } => {
+                    submitted += 1;
+                    if in_flight.load(Ordering::Relaxed) >= max_in_flight as u64 {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    in_flight.fetch_add(1, Ordering::Relaxed);
+                    let inf = Arc::clone(&in_flight);
+                    let completed = &completed;
+                    let rejected = &rejected;
+                    s.spawn(move || {
+                        if serve(req) {
+                            completed.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        inf.fetch_sub(1, Ordering::Relaxed);
+                    });
+                }
+            }
+        }
+    });
+    DriveReport {
+        submitted,
+        completed: completed.load(Ordering::Relaxed),
+        rejected: rejected.load(Ordering::Relaxed),
+        elapsed: start.elapsed(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,6 +290,7 @@ mod tests {
                 user_id: 0,
                 history: vec![],
                 candidates: vec![1, 2],
+                ..Default::default()
             })
             .collect()
     }
@@ -296,6 +363,7 @@ mod tests {
                 user_id: i as u64,
                 history: vec![i as u64],
                 candidates: vec![i as u64, i as u64 + 1],
+                ..Default::default()
             })
             .collect();
         let originals = reqs.clone();
@@ -354,6 +422,7 @@ mod tests {
                 user_id: i,
                 history: vec![i],
                 candidates: vec![i, i + 1],
+                ..Default::default()
             })
             .collect();
         let r = open_loop_cluster(
@@ -379,6 +448,27 @@ mod tests {
         let before = reqs.clone();
         inject_duplicates(&mut reqs, 0.0, 1);
         assert_eq!(reqs, before);
+    }
+
+    #[test]
+    fn open_loop_events_replays_arrivals_and_invalidations() {
+        use crate::workload::trace::TraceEvent;
+        let rs = reqs(2);
+        let events = vec![
+            TraceEvent::Arrival { at_us: 0, req: rs[0].clone() },
+            TraceEvent::InvalidateUser { at_us: 1_000, user_id: 42 },
+            TraceEvent::Arrival { at_us: 2_000, req: rs[1].clone() },
+        ];
+        let invalidated = std::sync::Mutex::new(Vec::new());
+        let r = open_loop_events(&events, 1.0, 16, |_| true, |u| {
+            invalidated.lock().unwrap().push(u)
+        });
+        assert_eq!(r.submitted, 2);
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.rejected, 0);
+        assert_eq!(invalidated.lock().unwrap().as_slice(), &[42]);
+        // the recorded 2ms span is honored (loosely — scheduling jitter)
+        assert!(r.elapsed >= Duration::from_micros(2_000), "{:?}", r.elapsed);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! upstream), arrival processes, and JSONL trace record/replay.
 
 pub mod driver;
+pub mod storm;
 pub mod trace;
 
 use std::sync::Arc;
@@ -100,8 +101,29 @@ impl MDist {
     }
 }
 
+/// Upper bound on distinct tenants sharing one cluster. Fixed at
+/// compile time so every per-tenant hot-path structure (admission
+/// controller state, recorder views) is a flat array — the controller
+/// tick and the per-request accounting stay allocation-free.
+pub const MAX_TENANTS: usize = 8;
+
+/// Which tenant (scenario / product surface) a request belongs to.
+/// Tenant 0 is the implicit default for single-tenant traffic, so every
+/// pre-tenancy trace, test, and caller keeps its old behavior.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u8);
+
+impl TenantId {
+    /// Flat-array slot for this tenant. Ids at or beyond [`MAX_TENANTS`]
+    /// fold into the last slot instead of panicking — a hostile or
+    /// corrupt tenant id must never take down an accounting path.
+    pub fn index(self) -> usize {
+        (self.0 as usize).min(MAX_TENANTS - 1)
+    }
+}
+
 /// One inference request as it arrives from upstream.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Request {
     pub request_id: u64,
     pub user_id: u64,
@@ -111,6 +133,9 @@ pub struct Request {
     /// Candidate item ids from the upstream retriever (len = this
     /// request's M — *not* necessarily a profile size).
     pub candidates: Vec<u64>,
+    /// Owning tenant; drives per-tenant SLA budgets, admission feedback,
+    /// and recorder views. Defaults to tenant 0.
+    pub tenant: TenantId,
 }
 
 impl Request {
@@ -178,7 +203,7 @@ impl Generator {
         let candidates = self.catalog.sample_candidates(&mut self.rng, m);
         let request_id = self.next_id;
         self.next_id += 1;
-        Request { request_id, user_id, history, candidates }
+        Request { request_id, user_id, history, candidates, tenant: TenantId::default() }
     }
 
     /// Generate a batch of n requests.
@@ -232,6 +257,15 @@ mod tests {
             let c = counts[&m];
             assert!((700..1300).contains(&c), "m={m} count={c}");
         }
+    }
+
+    #[test]
+    fn tenant_index_defaults_and_folds() {
+        assert_eq!(TenantId::default().index(), 0);
+        assert_eq!(TenantId(3).index(), 3);
+        // corrupt/out-of-range ids fold into the last slot, never panic
+        assert_eq!(TenantId(200).index(), MAX_TENANTS - 1);
+        assert_eq!(Request::default().tenant, TenantId(0));
     }
 
     #[test]

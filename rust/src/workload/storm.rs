@@ -1,0 +1,522 @@
+//! Composable non-stationary storm scenarios — the workload engine that
+//! proves the overload control plane. A [`StormSpec`] is parsed from a
+//! clause grammar (same shape as `--chaos`) and expanded by
+//! [`StormSpec::generate`] into a deterministic [`TraceEvent`] timeline:
+//! diurnal load cycles, per-tenant flash crowds concentrated on hot
+//! candidate sets, feature-update invalidation storms (driving
+//! `ClusterRouter::invalidate_user` at replay), and multi-tenant mixes.
+//! The timeline round-trips through the JSONL trace layer, so every arm
+//! of an experiment sees the *identical* storm.
+//!
+//! # Grammar
+//!
+//! Comma-separated clauses; a clause is `name` or `name:key=value` with
+//! further `key=value` tokens attaching to the last clause:
+//!
+//! ```text
+//! diurnal:period_s=10,amp=0.5        sinusoidal rate modulation, factor in [1-amp, 1+amp]
+//! flash:tenant=1,at_s=2,for_s=1,x=8,hot=64
+//!                                    tenant 1's arrival rate ×8 during [2s, 3s),
+//!                                    candidates drawn from the 64 hottest items
+//! invalidate:rate=500,at_s=2,for_s=1 feature-update storm: 500 invalidations/s
+//!                                    over already-seen users during [2s, 3s)
+//! mix:w0=3,w1=1                      tenant share weights (tenants with weight 0
+//!                                    generate no traffic; default: tenant 0 only)
+//! ```
+//!
+//! Arrivals are drawn by thinning a homogeneous Poisson process at each
+//! tenant's peak rate, so the expansion is exact for any composition of
+//! clauses and deterministic given `(spec, seed, workload config)`.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::trace::TraceEvent;
+use super::{Generator, Request, TenantId, MAX_TENANTS};
+
+/// Sinusoidal diurnal load cycle.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Diurnal {
+    pub period_s: f64,
+    /// Modulation depth in [0, 1]: rate factor swings over [1-amp, 1+amp].
+    pub amp: f64,
+}
+
+/// A flash crowd: one tenant's rate multiplied by `x` inside a window,
+/// with candidates concentrated on the `hot` hottest catalog items.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Flash {
+    pub tenant: TenantId,
+    pub at_s: f64,
+    pub for_s: f64,
+    pub x: f64,
+    /// Hot-set size; 0 leaves candidate sampling unchanged.
+    pub hot: usize,
+}
+
+/// A feature-update invalidation storm: `rate` user invalidations per
+/// second inside the window, targeting users already seen in the stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Invalidate {
+    pub rate: f64,
+    pub at_s: f64,
+    pub for_s: f64,
+}
+
+/// Parsed storm scenario. [`StormSpec::generate`] expands it against a
+/// [`Generator`] into a replayable event timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StormSpec {
+    pub diurnal: Option<Diurnal>,
+    pub flashes: Vec<Flash>,
+    pub invalidations: Vec<Invalidate>,
+    /// Per-tenant traffic share weights; all-zero is rejected at parse.
+    pub weights: [f64; MAX_TENANTS],
+}
+
+impl Default for StormSpec {
+    fn default() -> Self {
+        let mut weights = [0.0; MAX_TENANTS];
+        weights[0] = 1.0;
+        StormSpec { diurnal: None, flashes: Vec::new(), invalidations: Vec::new(), weights }
+    }
+}
+
+impl StormSpec {
+    /// Stationary single-tenant traffic (no clauses).
+    pub fn quiet() -> StormSpec {
+        StormSpec::default()
+    }
+
+    /// Parse the clause grammar (see module docs).
+    pub fn parse(spec: &str) -> Result<StormSpec> {
+        let mut out = StormSpec::default();
+        let mut saw_mix = false;
+        let mut clauses: Vec<(String, Vec<(String, String)>)> = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            if let Some((name, first)) = tok.split_once(':') {
+                clauses.push((name.to_string(), vec![kv(first)?]));
+            } else if tok.contains('=') {
+                match clauses.last_mut() {
+                    Some((_, params)) => params.push(kv(tok)?),
+                    None => {
+                        return Err(Error::Config(format!(
+                            "storm spec param '{tok}' precedes any clause"
+                        )))
+                    }
+                }
+            } else {
+                clauses.push((tok.to_string(), Vec::new()));
+            }
+        }
+        for (name, params) in clauses {
+            let get_f = |k: &str, d: f64| -> Result<f64> { param_f64(&params, k, d) };
+            let get_u = |k: &str, d: u64| -> Result<u64> { param_u64(&params, k, d) };
+            match name.as_str() {
+                "diurnal" => {
+                    let period_s = get_f("period_s", 10.0)?;
+                    if period_s <= 0.0 {
+                        return Err(Error::Config("diurnal period_s must be > 0".into()));
+                    }
+                    out.diurnal =
+                        Some(Diurnal { period_s, amp: get_f("amp", 0.5)?.clamp(0.0, 1.0) });
+                }
+                "flash" => {
+                    let tenant = TenantId(get_u("tenant", 0)?.min(u8::MAX as u64) as u8);
+                    out.flashes.push(Flash {
+                        tenant,
+                        at_s: get_f("at_s", 0.0)?,
+                        for_s: get_f("for_s", 1.0)?,
+                        x: get_f("x", 8.0)?.max(1.0),
+                        hot: get_u("hot", 0)? as usize,
+                    });
+                    // a flash on a tenant implies that tenant sends traffic
+                    if out.weights[tenant.index()] == 0.0 {
+                        out.weights[tenant.index()] = 1.0;
+                    }
+                }
+                "invalidate" => out.invalidations.push(Invalidate {
+                    rate: get_f("rate", 100.0)?.max(0.0),
+                    at_s: get_f("at_s", 0.0)?,
+                    for_s: get_f("for_s", 1.0)?,
+                }),
+                "mix" => {
+                    let mut weights = [0.0; MAX_TENANTS];
+                    for (k, v) in &params {
+                        let idx: usize = k
+                            .strip_prefix('w')
+                            .and_then(|d| d.parse().ok())
+                            .filter(|&i| i < MAX_TENANTS)
+                            .ok_or_else(|| {
+                                Error::Config(format!(
+                                    "mix param '{k}' is not w0..w{}",
+                                    MAX_TENANTS - 1
+                                ))
+                            })?;
+                        weights[idx] = v.parse::<f64>().map_err(|_| {
+                            Error::Config(format!("mix weight {k}='{v}' is not a number"))
+                        })?;
+                    }
+                    if weights.iter().all(|&w| w <= 0.0) {
+                        return Err(Error::Config("mix has no positive weight".into()));
+                    }
+                    out.weights = weights;
+                    saw_mix = true;
+                }
+                o => return Err(Error::Config(format!("unknown storm clause '{o}'"))),
+            }
+        }
+        // flashes seen before an explicit mix already defaulted their
+        // tenant's weight; an explicit mix wins, but must cover them
+        if saw_mix {
+            for f in &out.flashes {
+                if out.weights[f.tenant.index()] <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "flash targets tenant {} but mix gives it zero weight",
+                        f.tenant.0
+                    )));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Instantaneous rate multiplier for `tenant` at offset `t_s`,
+    /// relative to the tenant's share of the base rate.
+    pub fn rate_multiplier(&self, tenant: TenantId, t_s: f64) -> f64 {
+        let mut m = match self.diurnal {
+            Some(d) => 1.0 + d.amp * (2.0 * std::f64::consts::PI * t_s / d.period_s).sin(),
+            None => 1.0,
+        };
+        for f in &self.flashes {
+            if f.tenant == tenant && t_s >= f.at_s && t_s < f.at_s + f.for_s {
+                m *= f.x;
+            }
+        }
+        m
+    }
+
+    /// The flash window (if any) covering `tenant` at `t_s` that pins a
+    /// hot candidate set.
+    fn hot_flash(&self, tenant: TenantId, t_s: f64) -> Option<&Flash> {
+        self.flashes.iter().find(|f| {
+            f.tenant == tenant && f.hot > 0 && t_s >= f.at_s && t_s < f.at_s + f.for_s
+        })
+    }
+
+    /// Worst-case rate multiplier for `tenant` over the whole run —
+    /// the thinning envelope.
+    fn peak_multiplier(&self, tenant: TenantId) -> f64 {
+        let diurnal = 1.0 + self.diurnal.map_or(0.0, |d| d.amp);
+        let flash: f64 = self
+            .flashes
+            .iter()
+            .filter(|f| f.tenant == tenant)
+            .map(|f| f.x)
+            .fold(1.0, f64::max);
+        diurnal * flash
+    }
+
+    /// Expand the scenario into a sorted, replayable event timeline.
+    /// `base_rate` is the aggregate arrival rate (req/s) split across
+    /// tenants by weight; the expansion is deterministic given
+    /// `(self, gen's config, base_rate, duration_s, seed)`.
+    pub fn generate(
+        &self,
+        gen: &mut Generator,
+        base_rate: f64,
+        duration_s: f64,
+        seed: u64,
+    ) -> Vec<TraceEvent> {
+        let total_w: f64 = self.weights.iter().sum();
+        let mut rng = Rng::new(seed ^ 0x5702_13AD_57ED_0001);
+        let mut events: Vec<TraceEvent> = Vec::new();
+        for t in 0..MAX_TENANTS {
+            if self.weights[t] <= 0.0 {
+                continue;
+            }
+            let tenant = TenantId(t as u8);
+            let tenant_rate = base_rate * self.weights[t] / total_w;
+            let peak = tenant_rate * self.peak_multiplier(tenant);
+            if peak <= 0.0 {
+                continue;
+            }
+            let mut trng = rng.fork(0x7E00 + t as u64);
+            let mut t_s = 0.0_f64;
+            loop {
+                t_s += trng.exp(peak);
+                if t_s >= duration_s {
+                    break;
+                }
+                // thinning: accept with prob rate(t)/peak
+                let rate = tenant_rate * self.rate_multiplier(tenant, t_s);
+                if trng.next_f64() * peak > rate {
+                    continue;
+                }
+                let mut req = gen.next_request();
+                req.tenant = tenant;
+                if let Some(f) = self.hot_flash(tenant, t_s) {
+                    concentrate(gen, &mut trng, &mut req, f.hot);
+                }
+                events.push(TraceEvent::Arrival { at_us: (t_s * 1e6) as u64, req });
+            }
+        }
+        events.sort_by_key(|e| e.at_us());
+        // invalidation storms target users already seen at that point in
+        // the stream, so replays actually evict warm cache entries
+        let mut irng = rng.fork(0x1BAD);
+        let mut inv: Vec<TraceEvent> = Vec::new();
+        for spec in &self.invalidations {
+            if spec.rate <= 0.0 {
+                continue;
+            }
+            let mut t_s = spec.at_s;
+            loop {
+                t_s += irng.exp(spec.rate);
+                if t_s >= spec.at_s + spec.for_s || t_s >= duration_s {
+                    break;
+                }
+                let at_us = (t_s * 1e6) as u64;
+                let seen = events.partition_point(|e| e.at_us() <= at_us);
+                let user_id = if seen == 0 {
+                    gen.users().sample_user(&mut irng)
+                } else {
+                    match &events[irng.below(seen as u64) as usize] {
+                        TraceEvent::Arrival { req, .. } => req.user_id,
+                        TraceEvent::InvalidateUser { user_id, .. } => *user_id,
+                    }
+                };
+                inv.push(TraceEvent::InvalidateUser { at_us, user_id });
+            }
+        }
+        events.extend(inv);
+        events.sort_by_key(|e| e.at_us());
+        events
+    }
+}
+
+/// Redirect a request's candidates onto the `hot` hottest catalog items
+/// (rank order — the Zipf head), modelling a flash crowd piling onto the
+/// same trending content.
+fn concentrate(gen: &Generator, rng: &mut Rng, req: &mut Request, hot: usize) {
+    let catalog = gen.catalog();
+    let m = req.candidates.len();
+    for c in req.candidates.iter_mut() {
+        *c = catalog.id_of_rank(rng.below(hot.max(1) as u64));
+    }
+    debug_assert_eq!(req.candidates.len(), m);
+}
+
+fn kv(tok: &str) -> Result<(String, String)> {
+    match tok.split_once('=') {
+        Some((k, v)) if !k.is_empty() && !v.is_empty() => {
+            Ok((k.trim().to_string(), v.trim().to_string()))
+        }
+        _ => Err(Error::Config(format!("storm spec token '{tok}' is not key=value"))),
+    }
+}
+
+fn param_f64(params: &[(String, String)], key: &str, default: f64) -> Result<f64> {
+    match params.iter().find(|(k, _)| k == key) {
+        None => Ok(default),
+        Some((_, v)) => v
+            .parse::<f64>()
+            .map_err(|_| Error::Config(format!("storm param {key}='{v}' is not a number"))),
+    }
+}
+
+fn param_u64(params: &[(String, String)], key: &str, default: u64) -> Result<u64> {
+    match params.iter().find(|(k, _)| k == key) {
+        None => Ok(default),
+        Some((_, v)) => v
+            .parse::<u64>()
+            .map_err(|_| Error::Config(format!("storm param {key}='{v}' is not an integer"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    fn wl() -> WorkloadConfig {
+        WorkloadConfig {
+            catalog_size: 10_000,
+            zipf_theta: 0.99,
+            n_users: 1_000,
+            candidate_mix: vec![(16, 1.0)],
+            arrival_rate: None,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let s = StormSpec::parse(
+            "diurnal:period_s=10,amp=0.5,flash:tenant=1,at_s=2,for_s=1,x=8,hot=64,\
+             invalidate:rate=500,at_s=2,for_s=1,mix:w0=3,w1=1",
+        )
+        .unwrap();
+        assert_eq!(s.diurnal, Some(Diurnal { period_s: 10.0, amp: 0.5 }));
+        assert_eq!(s.flashes.len(), 1);
+        let f = s.flashes[0];
+        assert_eq!((f.tenant, f.at_s, f.for_s, f.x, f.hot), (TenantId(1), 2.0, 1.0, 8.0, 64));
+        assert_eq!(s.invalidations.len(), 1);
+        assert_eq!(s.weights[0], 3.0);
+        assert_eq!(s.weights[1], 1.0);
+        assert!(s.weights[2..].iter().all(|&w| w == 0.0));
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        assert!(StormSpec::parse("tsunami:height=3").is_err());
+        assert!(StormSpec::parse("amp=0.5").is_err(), "param before any clause");
+        assert!(StormSpec::parse("mix:w9=1").is_err(), "tenant out of range");
+        assert!(StormSpec::parse("mix:w0=0").is_err(), "all-zero mix");
+        assert!(
+            StormSpec::parse("flash:tenant=2,mix:w0=1").is_err(),
+            "mix must cover flash tenants"
+        );
+        assert!(StormSpec::parse("diurnal:period_s=0").is_err());
+    }
+
+    #[test]
+    fn flash_implies_tenant_weight() {
+        let s = StormSpec::parse("flash:tenant=1,x=4").unwrap();
+        assert!(s.weights[0] > 0.0 && s.weights[1] > 0.0);
+    }
+
+    #[test]
+    fn rate_multiplier_composes() {
+        let s = StormSpec::parse("diurnal:period_s=4,amp=0.5,flash:tenant=1,at_s=0,for_s=4,x=8")
+            .unwrap();
+        // diurnal peak at t=1 (sin = 1): tenant 0 sees 1.5, tenant 1 sees 12
+        assert!((s.rate_multiplier(TenantId(0), 1.0) - 1.5).abs() < 1e-9);
+        assert!((s.rate_multiplier(TenantId(1), 1.0) - 12.0).abs() < 1e-9);
+        // outside the flash window the multiplier falls back to diurnal
+        assert!((s.rate_multiplier(TenantId(1), 5.0) - s.rate_multiplier(TenantId(0), 5.0)).abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let s = StormSpec::parse(
+            "diurnal:period_s=2,amp=0.8,flash:tenant=1,at_s=0.5,for_s=0.5,x=6,hot=32,\
+             invalidate:rate=200,at_s=0.5,for_s=0.5",
+        )
+        .unwrap();
+        let a = s.generate(&mut Generator::new(&wl(), 16), 2_000.0, 2.0, 42);
+        let b = s.generate(&mut Generator::new(&wl(), 16), 2_000.0, 2.0, 42);
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+        let c = s.generate(&mut Generator::new(&wl(), 16), 2_000.0, 2.0, 43);
+        assert_ne!(a, c, "seed changes the timeline");
+        assert!(a.windows(2).all(|w| w[0].at_us() <= w[1].at_us()), "sorted by time");
+    }
+
+    #[test]
+    fn diurnal_shapes_arrivals() {
+        // one full period over the run: first half (sin > 0) must carry
+        // more arrivals than the second half (sin < 0)
+        let s = StormSpec::parse("diurnal:period_s=2,amp=0.9").unwrap();
+        let events = s.generate(&mut Generator::new(&wl(), 16), 3_000.0, 2.0, 1);
+        let half = events.partition_point(|e| e.at_us() < 1_000_000);
+        let (peak, trough) = (half, events.len() - half);
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "diurnal skew: peak={peak} trough={trough}"
+        );
+    }
+
+    #[test]
+    fn flash_concentrates_tenant_and_candidates() {
+        let s = StormSpec::parse("flash:tenant=1,at_s=1,for_s=1,x=10,hot=8,mix:w0=1,w1=1")
+            .unwrap();
+        let events = s.generate(&mut Generator::new(&wl(), 16), 1_000.0, 3.0, 9);
+        let mut in_window = [0usize; 2];
+        let mut outside = [0usize; 2];
+        let mut hot_ids = std::collections::HashSet::new();
+        for e in &events {
+            if let TraceEvent::Arrival { at_us, req } = e {
+                let t = req.tenant.index().min(1);
+                if (1_000_000..2_000_000).contains(at_us) {
+                    in_window[t] += 1;
+                    if req.tenant == TenantId(1) {
+                        hot_ids.extend(req.candidates.iter().copied());
+                    }
+                } else {
+                    outside[t] += 1;
+                }
+            }
+        }
+        // the storm multiplies tenant 1 only: its in-window rate is ~10x
+        // its out-of-window rate (window is 1s of 3s total)
+        assert!(
+            in_window[1] > 2 * outside[1],
+            "flash rate: in={} out={}",
+            in_window[1],
+            outside[1]
+        );
+        // tenant 0 is flat: roughly 1/3 of its arrivals in the window
+        assert!(
+            (in_window[0] as f64) < 0.6 * outside[0] as f64,
+            "quiet tenant unperturbed: in={} out={}",
+            in_window[0],
+            outside[0]
+        );
+        // flash candidates collapse onto the hot set
+        assert!(
+            hot_ids.len() <= 8,
+            "flash draws from 8 hot items, saw {} distinct",
+            hot_ids.len()
+        );
+    }
+
+    #[test]
+    fn invalidations_land_in_window_on_seen_users() {
+        let s = StormSpec::parse("invalidate:rate=400,at_s=1,for_s=1").unwrap();
+        let events = s.generate(&mut Generator::new(&wl(), 16), 1_000.0, 3.0, 5);
+        let mut seen = std::collections::HashSet::new();
+        let mut n_inv = 0usize;
+        for e in &events {
+            match e {
+                TraceEvent::Arrival { req, .. } => {
+                    seen.insert(req.user_id);
+                }
+                TraceEvent::InvalidateUser { at_us, user_id } => {
+                    n_inv += 1;
+                    assert!((1_000_000..2_000_000).contains(at_us), "at_us={at_us}");
+                    assert!(seen.contains(user_id), "invalidation hits an already-seen user");
+                }
+            }
+        }
+        assert!((200..800).contains(&n_inv), "~400 expected, saw {n_inv}");
+    }
+
+    #[test]
+    fn timeline_roundtrips_through_trace_layer() {
+        use super::super::trace;
+        let s = StormSpec::parse(
+            "flash:tenant=1,at_s=0.2,for_s=0.3,x=6,hot=16,\
+             invalidate:rate=100,at_s=0.2,for_s=0.3",
+        )
+        .unwrap();
+        let events = s.generate(&mut Generator::new(&wl(), 16), 2_000.0, 1.0, 11);
+        let path = std::env::temp_dir()
+            .join(format!("flame_storm_rt_{}.jsonl", std::process::id()));
+        let header = trace::TraceHeader {
+            storm: Some("flash:tenant=1".into()),
+            base_rate: Some(2_000.0),
+            ..trace::TraceHeader::v2()
+        };
+        trace::record_events(&path, &header, &events).unwrap();
+        let (h, back) = trace::replay_events(&path).unwrap();
+        assert_eq!(h, header);
+        assert_eq!(back, events, "every arm replays the identical storm");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -2,6 +2,27 @@
 //! replay the exact request stream later (cross-run comparability for the
 //! ablation tables; also the "bypass stream of real online traffic"
 //! stand-in — a recorded trace replays identically against every arm).
+//!
+//! # Format (version 2)
+//!
+//! The first line of a v2 trace is a header object carrying the version
+//! plus optional provenance (`scenario`, the `storm` spec the stream was
+//! generated from, the base arrival rate):
+//!
+//! ```text
+//! {"flame_trace": 2, "storm": "flash:tenant=1,x=8", "base_rate": 2000}
+//! {"id": 0, "user": 17, "history": [..], "candidates": [..], "tenant": 1, "at_us": 512}
+//! {"event": "invalidate_user", "user": 17, "at_us": 90000}
+//! ```
+//!
+//! Request lines gained two optional fields — `tenant` (omitted when 0)
+//! and `at_us` (arrival offset from stream start, omitted when 0) — and
+//! the stream may now interleave *event* lines (feature-update
+//! invalidations driving `ClusterRouter::invalidate_user` at replay
+//! time). **Forward compatibility is a contract both ways**: headerless
+//! v1 traces still replay (every line a request, tenant 0, arrival order
+//! = file order), and unknown event kinds from future versions are
+//! skipped, not fatal — `tests` pin both behaviors.
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
@@ -9,11 +30,55 @@ use std::path::Path;
 use crate::error::{io_err, Result};
 use crate::util::json::{parse, Json};
 
-use super::Request;
+use super::{Request, TenantId};
 
-/// Serialize one request as a JSONL line.
+/// Trace format version written by [`record`] / [`record_events`].
+pub const TRACE_VERSION: u64 = 2;
+
+/// Parsed trace header. Headerless (v1) files get `version: 1` and no
+/// provenance.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceHeader {
+    pub version: u64,
+    /// Scenario the trace was generated for (informational).
+    pub scenario: Option<String>,
+    /// Storm spec (see `workload::storm`) the stream was generated from.
+    pub storm: Option<String>,
+    /// Base arrival rate (req/s) the at_us offsets were generated at.
+    pub base_rate: Option<f64>,
+}
+
+impl TraceHeader {
+    pub fn v2() -> Self {
+        TraceHeader { version: TRACE_VERSION, ..TraceHeader::default() }
+    }
+}
+
+/// One timeline entry of a v2 trace.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A request arriving `at_us` after stream start.
+    Arrival { at_us: u64, req: Request },
+    /// A feature update for `user_id` — replay drives
+    /// `ClusterRouter::invalidate_user` so cached results for the user
+    /// cannot outlive the update.
+    InvalidateUser { at_us: u64, user_id: u64 },
+}
+
+impl TraceEvent {
+    pub fn at_us(&self) -> u64 {
+        match self {
+            TraceEvent::Arrival { at_us, .. } => *at_us,
+            TraceEvent::InvalidateUser { at_us, .. } => *at_us,
+        }
+    }
+}
+
+/// Serialize one request as a JSONL line (no arrival offset — see
+/// [`event_to_line`] for the timed form). `tenant` is emitted only when
+/// nonzero, so single-tenant traces are byte-identical to v1 lines.
 pub fn request_to_line(r: &Request) -> String {
-    let j = Json::obj(vec![
+    let mut fields = vec![
         ("id", Json::num(r.request_id as f64)),
         ("user", Json::num(r.user_id as f64)),
         (
@@ -24,50 +89,167 @@ pub fn request_to_line(r: &Request) -> String {
             "candidates",
             Json::Arr(r.candidates.iter().map(|&i| Json::num(i as f64)).collect()),
         ),
-    ]);
-    j.to_string()
+    ];
+    if r.tenant.0 != 0 {
+        fields.push(("tenant", Json::num(r.tenant.0 as f64)));
+    }
+    Json::obj(fields).to_string()
 }
 
-/// Parse one JSONL line back into a request.
+/// Serialize one timeline entry as a JSONL line.
+pub fn event_to_line(e: &TraceEvent) -> String {
+    match e {
+        TraceEvent::Arrival { at_us, req } => {
+            if *at_us == 0 {
+                return request_to_line(req);
+            }
+            // splice the offset into the request object
+            let line = request_to_line(req);
+            let body = line.strip_suffix('}').unwrap_or(&line);
+            format!("{body},\"at_us\":{at_us}}}")
+        }
+        TraceEvent::InvalidateUser { at_us, user_id } => Json::obj(vec![
+            ("event", Json::Str("invalidate_user".into())),
+            ("user", Json::num(*user_id as f64)),
+            ("at_us", Json::num(*at_us as f64)),
+        ])
+        .to_string(),
+    }
+}
+
+/// Serialize the header line.
+pub fn header_to_line(h: &TraceHeader) -> String {
+    let mut fields = vec![("flame_trace", Json::num(h.version as f64))];
+    if let Some(s) = &h.scenario {
+        fields.push(("scenario", Json::Str(s.clone())));
+    }
+    if let Some(s) = &h.storm {
+        fields.push(("storm", Json::Str(s.clone())));
+    }
+    if let Some(r) = h.base_rate {
+        fields.push(("base_rate", Json::num(r)));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Parse one JSONL line back into a request. `tenant` and `at_us` are
+/// optional (v1 lines lack both).
 pub fn request_from_line(line: &str) -> Result<Request> {
     let j = parse(line)?;
     let ids = |key: &str| -> Result<Vec<u64>> {
         j.get(key)?.as_arr()?.iter().map(|v| v.as_u64()).collect()
+    };
+    let tenant = match j.opt("tenant") {
+        Some(v) => TenantId(v.as_u64()?.min(u8::MAX as u64) as u8),
+        None => TenantId::default(),
     };
     Ok(Request {
         request_id: j.get("id")?.as_u64()?,
         user_id: j.get("user")?.as_u64()?,
         history: ids("history")?,
         candidates: ids("candidates")?,
+        tenant,
     })
 }
 
-/// Write a trace file.
+/// Parse one line as a timeline entry. Returns `Ok(None)` for event
+/// kinds this version does not know (forward compatibility: a newer
+/// trace replays, minus the events we cannot interpret).
+pub fn event_from_line(line: &str) -> Result<Option<TraceEvent>> {
+    let j = parse(line)?;
+    if let Some(ev) = j.opt("event") {
+        return match ev.as_str()? {
+            "invalidate_user" => Ok(Some(TraceEvent::InvalidateUser {
+                at_us: match j.opt("at_us") {
+                    Some(v) => v.as_u64()?,
+                    None => 0,
+                },
+                user_id: j.get("user")?.as_u64()?,
+            })),
+            _ => Ok(None),
+        };
+    }
+    let at_us = match j.opt("at_us") {
+        Some(v) => v.as_u64()?,
+        None => 0,
+    };
+    Ok(Some(TraceEvent::Arrival { at_us, req: request_from_line(line)? }))
+}
+
+/// Write a trace file (v2: header line + one request per line, file
+/// order = arrival order).
 pub fn record(path: &Path, requests: &[Request]) -> Result<()> {
+    let events: Vec<TraceEvent> = requests
+        .iter()
+        .map(|r| TraceEvent::Arrival { at_us: 0, req: r.clone() })
+        .collect();
+    record_events(path, &TraceHeader::v2(), &events)
+}
+
+/// Write a full v2 timeline (header + arrivals + invalidation events).
+pub fn record_events(path: &Path, header: &TraceHeader, events: &[TraceEvent]) -> Result<()> {
     let f = std::fs::File::create(path).map_err(io_err(path.display().to_string()))?;
     let mut w = BufWriter::new(f);
-    for r in requests {
-        writeln!(w, "{}", request_to_line(r)).map_err(io_err(path.display().to_string()))?;
+    let werr = || io_err(path.display().to_string());
+    writeln!(w, "{}", header_to_line(header)).map_err(werr())?;
+    for e in events {
+        writeln!(w, "{}", event_to_line(e)).map_err(werr())?;
     }
-    w.flush().map_err(io_err(path.display().to_string()))?;
+    w.flush().map_err(werr())?;
     Ok(())
 }
 
-/// Read a trace file.
+/// Read a trace file as a plain request stream (events and unknown
+/// lines skipped) — the replay surface every pre-tenancy caller uses.
 pub fn replay(path: &Path) -> Result<Vec<Request>> {
+    let (_, events) = replay_events(path)?;
+    Ok(events
+        .into_iter()
+        .filter_map(|e| match e {
+            TraceEvent::Arrival { req, .. } => Some(req),
+            TraceEvent::InvalidateUser { .. } => None,
+        })
+        .collect())
+}
+
+/// Read a trace file as a full timeline. A v1 (headerless) file parses
+/// as `version: 1` with every line an `at_us: 0` arrival in file order.
+pub fn replay_events(path: &Path) -> Result<(TraceHeader, Vec<TraceEvent>)> {
     let f = std::fs::File::open(path).map_err(io_err(path.display().to_string()))?;
     let reader = std::io::BufReader::new(f);
+    let mut header = TraceHeader { version: 1, ..TraceHeader::default() };
+    let mut saw_line = false;
     let mut out = Vec::new();
     for (i, line) in reader.lines().enumerate() {
         let line = line.map_err(io_err(path.display().to_string()))?;
         if line.trim().is_empty() {
             continue;
         }
-        out.push(request_from_line(&line).map_err(|e| {
+        let at_line = |e: crate::error::Error| {
             crate::error::Error::Json(format!("{}:{}: {e}", path.display(), i + 1))
-        })?);
+        };
+        if !saw_line {
+            saw_line = true;
+            let j = parse(&line).map_err(at_line)?;
+            if let Some(v) = j.opt("flame_trace") {
+                header.version = v.as_u64().map_err(at_line)?;
+                if let Some(s) = j.opt("scenario") {
+                    header.scenario = Some(s.as_str().map_err(at_line)?.to_string());
+                }
+                if let Some(s) = j.opt("storm") {
+                    header.storm = Some(s.as_str().map_err(at_line)?.to_string());
+                }
+                if let Some(r) = j.opt("base_rate") {
+                    header.base_rate = Some(r.as_f64().map_err(at_line)?);
+                }
+                continue;
+            }
+        }
+        if let Some(e) = event_from_line(&line).map_err(at_line)? {
+            out.push(e);
+        }
     }
-    Ok(out)
+    Ok((header, out))
 }
 
 #[cfg(test)]
@@ -76,9 +258,25 @@ mod tests {
 
     fn sample() -> Vec<Request> {
         vec![
-            Request { request_id: 0, user_id: 5, history: vec![1, 2, 3], candidates: vec![9, 8] },
-            Request { request_id: 1, user_id: 6, history: vec![4], candidates: vec![7] },
+            Request {
+                request_id: 0,
+                user_id: 5,
+                history: vec![1, 2, 3],
+                candidates: vec![9, 8],
+                ..Default::default()
+            },
+            Request {
+                request_id: 1,
+                user_id: 6,
+                history: vec![4],
+                candidates: vec![7],
+                tenant: TenantId(2),
+            },
         ]
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("flame_{tag}_{}.jsonl", std::process::id()))
     }
 
     #[test]
@@ -90,18 +288,86 @@ mod tests {
     }
 
     #[test]
+    fn tenant_zero_line_is_v1_shaped() {
+        // single-tenant request lines carry no tenant field at all
+        let line = request_to_line(&sample()[0]);
+        assert!(!line.contains("tenant"), "{line}");
+    }
+
+    #[test]
     fn file_roundtrip() {
-        let path = std::env::temp_dir().join(format!("flame_trace_{}.jsonl", std::process::id()));
+        let path = tmp("trace");
         let reqs = sample();
         record(&path, &reqs).unwrap();
         let back = replay(&path).unwrap();
-        assert_eq!(back, reqs);
+        assert_eq!(back, reqs, "tenant ids survive the round trip");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn v1_headerless_trace_still_replays() {
+        // the forward-compat contract: a pre-header trace (every line a
+        // request, no tenant/at_us fields) parses as version 1, tenant 0
+        let path = tmp("v1");
+        std::fs::write(
+            &path,
+            "{\"id\": 0, \"user\": 1, \"history\": [2], \"candidates\": [3]}\n\
+             {\"id\": 1, \"user\": 4, \"history\": [], \"candidates\": [5, 6]}\n",
+        )
+        .unwrap();
+        let (header, events) = replay_events(&path).unwrap();
+        assert_eq!(header.version, 1);
+        assert_eq!(events.len(), 2);
+        let reqs = replay(&path).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert!(reqs.iter().all(|r| r.tenant == TenantId(0)));
+        assert_eq!(reqs[1].candidates, vec![5, 6]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn event_timeline_roundtrip() {
+        let path = tmp("events");
+        let header = TraceHeader {
+            version: TRACE_VERSION,
+            scenario: Some("sim".into()),
+            storm: Some("flash:tenant=1,x=8".into()),
+            base_rate: Some(2_000.0),
+        };
+        let events = vec![
+            TraceEvent::Arrival { at_us: 0, req: sample()[0].clone() },
+            TraceEvent::InvalidateUser { at_us: 500, user_id: 5 },
+            TraceEvent::Arrival { at_us: 900, req: sample()[1].clone() },
+        ];
+        record_events(&path, &header, &events).unwrap();
+        let (h, back) = replay_events(&path).unwrap();
+        assert_eq!(h, header);
+        assert_eq!(back, events);
+        // the plain-replay surface sees only the arrivals
+        assert_eq!(replay(&path).unwrap(), sample());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn unknown_event_kinds_are_skipped_not_fatal() {
+        let path = tmp("future");
+        std::fs::write(
+            &path,
+            "{\"flame_trace\": 3, \"something_new\": true}\n\
+             {\"event\": \"rebalance_shards\", \"at_us\": 5}\n\
+             {\"id\": 0, \"user\": 1, \"history\": [], \"candidates\": [2], \"tenant\": 1}\n",
+        )
+        .unwrap();
+        let (header, events) = replay_events(&path).unwrap();
+        assert_eq!(header.version, 3);
+        assert_eq!(events.len(), 1, "unknown event skipped: {events:?}");
+        assert_eq!(replay(&path).unwrap()[0].tenant, TenantId(1));
         std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
     fn replay_reports_bad_line_number() {
-        let path = std::env::temp_dir().join(format!("flame_badtrace_{}.jsonl", std::process::id()));
+        let path = tmp("badtrace");
         std::fs::write(&path, "{\"id\": 0, \"user\": 1, \"history\": [], \"candidates\": []}\nnot json\n").unwrap();
         let err = replay(&path).unwrap_err().to_string();
         assert!(err.contains(":2:"), "{err}");
@@ -110,7 +376,7 @@ mod tests {
 
     #[test]
     fn blank_lines_skipped() {
-        let path = std::env::temp_dir().join(format!("flame_blank_{}.jsonl", std::process::id()));
+        let path = tmp("blank");
         std::fs::write(
             &path,
             "\n{\"id\": 3, \"user\": 1, \"history\": [2], \"candidates\": [4]}\n\n",

@@ -111,6 +111,7 @@ fn req(id: u64, user: u64, m: usize) -> Request {
         // unique per (id) so feature fetches stay cold and every
         // request really exercises the remote store
         candidates: (0..m as u64).map(|i| id.wrapping_mul(1_009) + i).collect(),
+        ..Default::default()
     }
 }
 

@@ -32,7 +32,13 @@ fn build(
 }
 
 fn req(id: u64, user: u64, m: usize) -> Request {
-    Request { request_id: id, user_id: user, history: vec![], candidates: (0..m as u64).collect() }
+    Request {
+        request_id: id,
+        user_id: user,
+        history: vec![],
+        candidates: (0..m as u64).collect(),
+        ..Default::default()
+    }
 }
 
 /// 61 users x 8 rounds through both policies: affinity pins each user to

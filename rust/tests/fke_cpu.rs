@@ -299,6 +299,7 @@ fn cpu_stack_serves_and_reports_kernel_stats() {
         user_id: 3,
         history: (0..10).collect(),
         candidates: (100..105).collect(), // m = 5 → split 4 + remainder
+        ..Default::default()
     };
     let mut arena = StagingArena::new(stack.arena_capacity());
     let resp = stack.serve(&req, &mut arena).expect("serve");

@@ -70,6 +70,7 @@ fn request(id: u64, m: usize, salt: u64) -> Request {
         user_id: salt % 100,
         history: vec![salt, salt + 1, salt + 2],
         candidates: (0..m as u64).map(|i| salt.wrapping_mul(17) ^ (i << 8)).collect(),
+        ..Default::default()
     }
 }
 

@@ -105,11 +105,23 @@ fn short_history_padded_long_history_truncated() {
     let mut arena = StagingArena::new(1 << 16);
     let l = stack.model_cfg.seq_len;
     // short history
-    let r1 = Request { request_id: 1, user_id: 0, history: vec![5; l / 2], candidates: vec![1, 2, 3, 4] };
+    let r1 = Request {
+        request_id: 1,
+        user_id: 0,
+        history: vec![5; l / 2],
+        candidates: vec![1, 2, 3, 4],
+        ..Default::default()
+    };
     let resp1 = stack.serve(&r1, &mut arena).expect("short history");
     assert_eq!(resp1.scores.len(), 4 * stack.model_cfg.n_tasks);
     // over-long history
-    let r2 = Request { request_id: 2, user_id: 0, history: vec![5; l * 2], candidates: vec![1, 2, 3, 4] };
+    let r2 = Request {
+        request_id: 2,
+        user_id: 0,
+        history: vec![5; l * 2],
+        candidates: vec![1, 2, 3, 4],
+        ..Default::default()
+    };
     let resp2 = stack.serve(&r2, &mut arena).expect("long history");
     assert_eq!(resp2.scores.len(), 4 * stack.model_cfg.n_tasks);
 }

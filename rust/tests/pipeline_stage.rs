@@ -79,6 +79,7 @@ fn request(id: u64, m: usize, salt: u64) -> Request {
         user_id: salt % 100,
         history: (0..hist_len as u64).map(|i| salt.wrapping_mul(31) ^ i).collect(),
         candidates: (0..m as u64).map(|i| salt.wrapping_mul(17) ^ (i << 8)).collect(),
+        ..Default::default()
     }
 }
 
@@ -333,6 +334,7 @@ fn fetch_coalescer_cuts_remote_queries_for_hot_candidates() {
                             user_id: i,
                             history: vec![1, 2, 3],
                             candidates: vec![500, 501, 502, 503],
+                            ..Default::default()
                         };
                         barrier.wait();
                         handle.serve(&req).unwrap();

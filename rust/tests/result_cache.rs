@@ -117,11 +117,18 @@ fn cache_hits_are_score_identical_to_recomputation() {
             user_id: user,
             history: history.clone(),
             candidates: candidates.clone(),
+            ..Default::default()
         };
         router.submit(&first).unwrap();
         // permute the candidate order: same multiset, different layout
         shuffle(&mut candidates, &mut rng);
-        let dup = Request { request_id: i * 2 + 1, user_id: user, history, candidates };
+        let dup = Request {
+            request_id: i * 2 + 1,
+            user_id: user,
+            history,
+            candidates,
+            ..Default::default()
+        };
         let served = router.submit(&dup).unwrap();
         let recomputed = reference.serve(&dup).unwrap();
         assert_eq!(
@@ -165,6 +172,7 @@ fn concurrent_duplicates_coalesce_to_one_backend_serve() {
                         user_id: 5,
                         history: vec![5, 6],
                         candidates: vec![10, 20, 30],
+                        ..Default::default()
                     };
                     router.submit(&req).unwrap()
                 })
@@ -193,7 +201,13 @@ fn concurrent_duplicates_coalesce_to_one_backend_serve() {
 fn expired_results_recompute() {
     let backend = Arc::new(ScoringBackend::new(Duration::ZERO));
     let router = router_with(vec![Arc::clone(&backend)], true, 20);
-    let req = |id| Request { request_id: id, user_id: 1, history: vec![1], candidates: vec![4, 2] };
+    let req = |id| Request {
+        request_id: id,
+        user_id: 1,
+        history: vec![1],
+        candidates: vec![4, 2],
+        ..Default::default()
+    };
     router.submit(&req(0)).unwrap();
     std::thread::sleep(Duration::from_millis(60));
     router.submit(&req(1)).unwrap();
@@ -201,6 +215,46 @@ fn expired_results_recompute() {
     let snap = router.snapshot();
     assert_eq!(snap.result_hits, 0);
     assert_eq!(snap.result_misses, 2);
+}
+
+/// Regression: `invalidate_user` landing while a single-flight leader
+/// is mid-computation must not be undone by the leader's insert. Before
+/// the publication-time epoch re-check, the evictor found nothing to
+/// evict (nothing published yet), the leader then published, and the
+/// next duplicate *hit* a row scored from pre-update features. Now the
+/// late insert self-evicts and the duplicate recomputes.
+#[test]
+fn invalidation_during_leader_flight_is_not_resurrected() {
+    let backend = Arc::new(ScoringBackend::new(Duration::from_millis(120)));
+    let router = Arc::new(router_with(vec![Arc::clone(&backend)], true, 60_000));
+    let req = |id| Request {
+        request_id: id,
+        user_id: 77,
+        history: vec![77],
+        candidates: vec![10, 20],
+        ..Default::default()
+    };
+    std::thread::scope(|s| {
+        let r2 = Arc::clone(&router);
+        let leader = s.spawn(move || r2.submit(&req(0)).unwrap());
+        // let the leader register its flight and enter the backend...
+        for _ in 0..2_000 {
+            if backend.serves() > 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(backend.serves() > 0, "leader never reached the backend");
+        // ...then the feature update lands mid-flight
+        assert_eq!(router.invalidate_user(77), 0, "nothing published yet to evict");
+        leader.join().unwrap();
+    });
+    // the leader has published since: a duplicate must recompute, not
+    // hit the resurrected pre-update row
+    router.submit(&req(1)).unwrap();
+    assert_eq!(backend.serves(), 2, "post-invalidation duplicate must reach the backend");
+    let snap = router.snapshot();
+    assert_eq!(snap.result_hits, 0, "stale row must not serve a hit");
 }
 
 /// `capacity == 0` disables the tier entirely: every submission reaches
@@ -215,7 +269,13 @@ fn disabled_tier_reaches_backend_every_time() {
     .unwrap();
     assert!(router.result_cache().is_none());
     for i in 0..5 {
-        let req = Request { request_id: i, user_id: 9, history: vec![9], candidates: vec![1, 2] };
+        let req = Request {
+            request_id: i,
+            user_id: 9,
+            history: vec![9],
+            candidates: vec![1, 2],
+            ..Default::default()
+        };
         router.submit(&req).unwrap();
     }
     assert_eq!(backend.serves(), 5);

@@ -36,6 +36,7 @@ fn request(id: u64, m: usize, l: usize) -> Request {
         user_id: id % 10,
         history: (0..l as u64).map(|i| i * 3 + id).collect(),
         candidates: (0..m as u64).map(|i| 1000 + i * 7 + id).collect(),
+        ..Default::default()
     }
 }
 

@@ -163,6 +163,7 @@ fn prop_wire_request_roundtrip() {
             user_id: g.u64_below(1 << 40),
             history: (0..g.usize_in(0, 64)).map(|_| g.u64_below(1 << 48)).collect(),
             candidates: (0..g.usize_in(0, 32)).map(|_| g.u64_below(1 << 48)).collect(),
+            ..Default::default()
         };
         let back = decode_request(&encode_request(&req)).map_err(|e| e.to_string())?;
         prop_ensure!(back == req, "wire roundtrip");
@@ -178,6 +179,8 @@ fn prop_trace_line_roundtrip() {
             user_id: g.u64_below(1 << 30),
             history: (0..g.usize_in(0, 16)).map(|_| g.u64_below(1 << 50)).collect(),
             candidates: (0..g.usize_in(1, 8)).map(|_| g.u64_below(1 << 50)).collect(),
+            // the trace layer carries tenancy; roundtrip all 8 slots
+            tenant: flame::workload::TenantId(g.u64_below(8) as u8),
         };
         let back = request_from_line(&request_to_line(&req)).map_err(|e| e.to_string())?;
         prop_ensure!(back == req, "trace roundtrip");
@@ -204,6 +207,7 @@ fn prop_decode_rejects_truncation() {
             user_id: 2,
             history: (0..g.usize_in(1, 8)).map(|_| g.u64_below(100)).collect(),
             candidates: (0..g.usize_in(1, 8)).map(|_| g.u64_below(100)).collect(),
+            ..Default::default()
         };
         let buf = encode_request(&req);
         let cut = g.usize_in(0, buf.len());
