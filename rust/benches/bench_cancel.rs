@@ -1,0 +1,256 @@
+//! Cancellation bench — goodput recovered by end-to-end deadline
+//! propagation when a flash crowd overruns capacity. One seeded crowd
+//! (tight budgets, ~Nx a single serial compute worker) followed by a
+//! cohort of follow-ups replays against two arms on the artifact-free
+//! `SimEngine` pipeline: cancellation off (every admitted request runs
+//! to completion) and on (doomed work is purged at the earliest stage
+//! boundary). At 1x load the arms must be indistinguishable — the
+//! cancel plane is pure overhead there and must not fire; at 2x the
+//! cancel arm converts burned compute into follow-up goodput.
+//!
+//! Every run emits machine-readable `BENCH_cancel.json`. `--smoke`
+//! shrinks the crowd to a CI-sized run that still gates on the 2x
+//! cancel arm beating no-cancel on goodput with a non-empty ledger.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flame::benchkit::Table;
+use flame::config::{CacheMode, ModelConfig, StackConfig};
+use flame::dso::{ComputeBackend, SimEngine};
+use flame::server::pipeline::StackBuilder;
+use flame::server::ServingStack;
+use flame::util::json::Json;
+use flame::workload::Request;
+
+const OUT_PATH: &str = "BENCH_cancel.json";
+const SEED: u64 = 53;
+const SEQ: usize = 16;
+const D: usize = 8;
+const TASKS: usize = 3;
+const PROFILES: [usize; 2] = [4, 8];
+/// Per-launch compute time on the single serial m=4 executor.
+const COMPUTE: Duration = Duration::from_millis(3);
+
+fn sim_stack(cancel: bool) -> Arc<ServingStack> {
+    let model_cfg = ModelConfig {
+        name: "sim".into(),
+        seq_len: SEQ,
+        n_blocks: 1,
+        layers_per_block: 1,
+        d_model: D,
+        n_heads: 1,
+        n_tasks: TASKS,
+        m_profiles: PROFILES.to_vec(),
+        native_m: PROFILES[PROFILES.len() - 1],
+    };
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Sync;
+    cfg.pda.numa_binding = false;
+    cfg.server.pipeline = true;
+    cfg.server.cancel = cancel;
+    cfg.server.feature_workers = 1;
+    cfg.server.pipeline_workers = 1;
+    cfg.server.handoff_capacity = 4;
+    cfg.dso.queue_capacity = 256; // admit every burst — no shedding noise
+    let backends: Vec<Arc<dyn ComputeBackend>> = PROFILES
+        .iter()
+        .map(|&m| {
+            Arc::new(SimEngine::new(m, SEQ, D, TASKS).with_delay(COMPUTE))
+                as Arc<dyn ComputeBackend>
+        })
+        .collect();
+    Arc::new(
+        StackBuilder::new("sim", "sim", cfg)
+            .build_from_backends(model_cfg, SEED, backends)
+            .expect("sim stack"),
+    )
+}
+
+fn request(id: u64) -> Request {
+    Request {
+        request_id: id,
+        user_id: id % 7,
+        history: (0..8u64).map(|i| id.wrapping_mul(31) ^ i).collect(),
+        candidates: (0..4u64).map(|i| id.wrapping_mul(17) ^ (i << 8)).collect(),
+        ..Default::default()
+    }
+}
+
+struct Load {
+    label: &'static str,
+    crowd: u64,
+    crowd_budget: Duration,
+    follow: u64,
+    follow_budget: Duration,
+}
+
+struct ArmResult {
+    cancel: bool,
+    load: &'static str,
+    submitted: u64,
+    goodput: u64,
+    cancelled: u64,
+    saved_pairs: u64,
+    other_errs: u64,
+    wall_ms: f64,
+}
+
+/// Replay one load shape against a fresh stack: the crowd, then the
+/// follow-ups, all on the pipeline submit path with explicit budgets.
+/// Goodput counts a response that arrived inside its own budget.
+fn run_arm(cancel: bool, load: &Load) -> ArmResult {
+    let stack = sim_stack(cancel);
+    let handle = stack.spawn_pipeline();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..load.crowd {
+        let rx = handle
+            .submit_with_deadline(request(i), load.crowd_budget)
+            .expect("crowd admitted — queue sized for it");
+        pending.push((rx, load.crowd_budget));
+    }
+    for i in 0..load.follow {
+        let rx = handle
+            .submit_with_deadline(request(load.crowd + i), load.follow_budget)
+            .expect("follow-up admitted");
+        pending.push((rx, load.follow_budget));
+    }
+    let (mut goodput, mut other_errs) = (0u64, 0u64);
+    for (rx, budget) in pending {
+        match rx.recv().expect("pipeline alive: every request must resolve") {
+            Ok(resp) => {
+                if Duration::from_micros(resp.overall_us) <= budget {
+                    goodput += 1;
+                }
+            }
+            Err(flame::Error::Cancelled(..)) => {}
+            Err(_) => other_errs += 1,
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1_000.0;
+    let result = ArmResult {
+        cancel,
+        load: load.label,
+        submitted: load.crowd + load.follow,
+        goodput,
+        cancelled: stack.metrics.cancelled_total(),
+        saved_pairs: stack.metrics.cancelled_saved_pairs(),
+        other_errs,
+        wall_ms,
+    };
+    handle.shutdown();
+    result
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let loads = if smoke {
+        [
+            Load {
+                label: "1x",
+                crowd: 8,
+                crowd_budget: Duration::from_millis(400),
+                follow: 8,
+                follow_budget: Duration::from_millis(400),
+            },
+            Load {
+                label: "2x",
+                crowd: 24,
+                crowd_budget: Duration::from_millis(15),
+                follow: 8,
+                follow_budget: Duration::from_millis(60),
+            },
+        ]
+    } else {
+        [
+            Load {
+                label: "1x",
+                crowd: 16,
+                crowd_budget: Duration::from_millis(500),
+                follow: 16,
+                follow_budget: Duration::from_millis(500),
+            },
+            Load {
+                label: "2x",
+                crowd: 48,
+                crowd_budget: Duration::from_millis(20),
+                follow: 16,
+                follow_budget: Duration::from_millis(100),
+            },
+        ]
+    };
+    println!(
+        "cancellation goodput: serial sim pipeline ({} ms/launch), crowd + follow-ups, \
+         cancel off vs on, seed {SEED}{}",
+        COMPUTE.as_millis(),
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut arms = Vec::new();
+    for load in &loads {
+        arms.push(run_arm(false, load));
+        arms.push(run_arm(true, load));
+    }
+
+    let mut table = Table::new(
+        "goodput under a flash crowd (identical load, cancellation off vs on)",
+        &["arm", "load", "submitted", "goodput", "cancelled", "saved pairs", "wall ms"],
+    );
+    for a in &arms {
+        table.row(&[
+            if a.cancel { "on" } else { "off" }.to_string(),
+            a.load.to_string(),
+            a.submitted.to_string(),
+            a.goodput.to_string(),
+            a.cancelled.to_string(),
+            a.saved_pairs.to_string(),
+            format!("{:.1}", a.wall_ms),
+        ]);
+    }
+    table.footnote("goodput = responses inside their own deadline budget");
+    table.print();
+
+    // CI gates. 2x: cancellation must convert doomed work into
+    // follow-up goodput with a non-empty, compute-saving ledger.
+    let off_2x = arms.iter().find(|a| !a.cancel && a.load == "2x").expect("off/2x arm");
+    let on_2x = arms.iter().find(|a| a.cancel && a.load == "2x").expect("on/2x arm");
+    assert!(
+        on_2x.goodput > off_2x.goodput,
+        "cancel arm must beat no-cancel on goodput at 2x: {} vs {}",
+        on_2x.goodput,
+        off_2x.goodput
+    );
+    assert!(on_2x.cancelled > 0, "2x cancel arm never dropped doomed work");
+    assert!(on_2x.saved_pairs > 0, "dropped work must report saved compute");
+    assert_eq!(off_2x.cancelled, 0, "cancel-off arm must never cancel");
+    for a in &arms {
+        assert_eq!(a.other_errs, 0, "non-cancel errors on arm {}/{}", a.cancel, a.load);
+    }
+
+    let mut arms_json = BTreeMap::new();
+    for a in &arms {
+        let mut o = BTreeMap::new();
+        o.insert("submitted".into(), Json::Num(a.submitted as f64));
+        o.insert("goodput".into(), Json::Num(a.goodput as f64));
+        o.insert("cancelled".into(), Json::Num(a.cancelled as f64));
+        o.insert("saved_pairs".into(), Json::Num(a.saved_pairs as f64));
+        o.insert("wall_ms".into(), Json::Num(a.wall_ms));
+        arms_json.insert(
+            format!("{}_{}", if a.cancel { "cancel" } else { "no_cancel" }, a.load),
+            Json::Obj(o),
+        );
+    }
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("cancel".into()));
+    top.insert("backend".into(), Json::Str("sim-pipeline".into()));
+    top.insert("smoke".into(), Json::Bool(smoke));
+    top.insert("seed".into(), Json::Num(SEED as f64));
+    top.insert("compute_us".into(), Json::Num(COMPUTE.as_micros() as f64));
+    top.insert("arms".into(), Json::Obj(arms_json));
+    match std::fs::write(OUT_PATH, Json::Obj(top).to_string()) {
+        Ok(()) => eprintln!("  wrote {OUT_PATH}"),
+        Err(e) => eprintln!("  could not write {OUT_PATH}: {e}"),
+    }
+}

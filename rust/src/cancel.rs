@@ -1,0 +1,328 @@
+//! Request-scoped cooperative cancellation.
+//!
+//! FLAME's envelope only pays for compute that can still make its
+//! deadline: a request that has already expired, whose client hung up,
+//! or that lost its hedge race is pure waste — every FLOP it burns is
+//! capacity stolen from a request that could still make SLA. Admission
+//! control (PR 8/9) gates the front door; this module builds the *leave*
+//! half: a [`CancelToken`] is stamped on every admitted request and
+//! checked at each stage boundary (intake pop, handoff pop, coalescer
+//! slot, pre-launch, fetch-ticket wait, hedge completion), so doomed
+//! work is dropped at the earliest cheap point with a typed
+//! [`crate::Error::Cancelled`] reply — never silently, never leaking
+//! pooled state.
+//!
+//! The token is a shared atomic *cause cell*: zero means live, and the
+//! first cancellation cause to land wins (compare-and-swap), so a
+//! request observed as cancelled always reports one stable cause.
+//! Deadline expiry is *lazy*: nothing fires a timer per request;
+//! instead each stage boundary calls [`CancelToken::poll`], which
+//! stamps [`CancelCause::Expired`] if the token carries a deadline that
+//! has passed. Tokens created without a deadline (`cancel` knob off)
+//! never self-expire — only explicit fires (`ClientGone`, `HedgeLoser`,
+//! `Shutdown`) are honored, which keeps the knob opt-in without a
+//! second code path.
+//!
+//! Every drop site is counted exactly once per token fire through
+//! [`crate::metrics::Recorder::record_cancelled`] under a
+//! `{cause, stage}` label pair plus a saved-work estimate (user-item
+//! pairs that were *not* computed), so the goodput win is measurable.
+//!
+//! Deep shared paths (the PDA fetch coalescer) cannot thread a token
+//! parameter through every signature; like [`crate::obs::current_trace`]
+//! they read a thread-local set by the owning stage worker
+//! ([`set_current`] / [`current`]).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Why a request was cancelled. The first cause to land on a token
+/// wins; later fires are ignored so the reported cause is stable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelCause {
+    /// The request's deadline passed before the work completed.
+    Expired = 1,
+    /// The TCP front observed the client disconnect mid-request.
+    ClientGone = 2,
+    /// The other arm of a hedged dispatch won the race.
+    HedgeLoser = 3,
+    /// The serving process is draining for shutdown.
+    Shutdown = 4,
+}
+
+/// Number of causes (first dimension of the recorder's cancel matrix).
+pub const N_CAUSES: usize = 4;
+
+impl CancelCause {
+    /// Stable 0-based index into the recorder's cancel matrix.
+    pub fn index(self) -> usize {
+        self as usize - 1
+    }
+
+    pub fn from_index(i: usize) -> Option<CancelCause> {
+        CancelCause::from_u8(i as u8 + 1)
+    }
+
+    fn from_u8(v: u8) -> Option<CancelCause> {
+        match v {
+            1 => Some(CancelCause::Expired),
+            2 => Some(CancelCause::ClientGone),
+            3 => Some(CancelCause::HedgeLoser),
+            4 => Some(CancelCause::Shutdown),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CancelCause::Expired => "expired",
+            CancelCause::ClientGone => "client_gone",
+            CancelCause::HedgeLoser => "hedge_loser",
+            CancelCause::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// Stage boundary at which a cancelled request was actually dropped
+/// (the earliest cheap point that observed the fired token).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelStage {
+    /// Purged from the pipeline intake queue before feature work.
+    Intake,
+    /// Purged from the feature->compute handoff queue (arena returned).
+    Handoff,
+    /// Evicted from a still-open DSO pending batch (rows re-packed).
+    Coalescer,
+    /// Dropped immediately before an engine launch.
+    Launch,
+    /// A fetch-coalescer rider abandoned its ticket wait.
+    Fetch,
+    /// A hedge dispatch abandoned after the other arm won.
+    Hedge,
+    /// The TCP front discarded a completed response (client gone).
+    Frontend,
+}
+
+/// Number of stages (second dimension of the recorder's cancel matrix).
+pub const N_STAGES: usize = 7;
+
+impl CancelStage {
+    /// Stable 0-based index into the recorder's cancel matrix.
+    pub fn index(self) -> usize {
+        match self {
+            CancelStage::Intake => 0,
+            CancelStage::Handoff => 1,
+            CancelStage::Coalescer => 2,
+            CancelStage::Launch => 3,
+            CancelStage::Fetch => 4,
+            CancelStage::Hedge => 5,
+            CancelStage::Frontend => 6,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Option<CancelStage> {
+        match i {
+            0 => Some(CancelStage::Intake),
+            1 => Some(CancelStage::Handoff),
+            2 => Some(CancelStage::Coalescer),
+            3 => Some(CancelStage::Launch),
+            4 => Some(CancelStage::Fetch),
+            5 => Some(CancelStage::Hedge),
+            6 => Some(CancelStage::Frontend),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CancelStage::Intake => "intake",
+            CancelStage::Handoff => "handoff",
+            CancelStage::Coalescer => "coalescer",
+            CancelStage::Launch => "launch",
+            CancelStage::Fetch => "fetch",
+            CancelStage::Hedge => "hedge",
+            CancelStage::Frontend => "frontend",
+        }
+    }
+}
+
+struct Inner {
+    /// 0 = live; otherwise the discriminant of the winning cause.
+    cause: AtomicU8,
+    /// Lazy-expiry deadline; `None` means the token never self-expires
+    /// (the `cancel` knob is off, or the caller manages expiry itself).
+    deadline: Option<Instant>,
+}
+
+/// Shared per-request cancellation cell. Cloning shares the cell:
+/// every plane holding a clone observes the same fired cause.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CancelToken").field("cause", &self.cause()).finish()
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> CancelToken {
+        CancelToken::new()
+    }
+}
+
+impl CancelToken {
+    /// A live token that never self-expires (explicit fires only).
+    pub fn new() -> CancelToken {
+        CancelToken { inner: Arc::new(Inner { cause: AtomicU8::new(0), deadline: None }) }
+    }
+
+    /// A live token that [`poll`](Self::poll) lazily expires once
+    /// `deadline` passes.
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken {
+            inner: Arc::new(Inner { cause: AtomicU8::new(0), deadline: Some(deadline) }),
+        }
+    }
+
+    /// Fire `cause` into the cell. Returns `true` iff this call won the
+    /// race (the token was live); the first cause to land is final.
+    // lint: no_alloc — fired from hot stage boundaries
+    pub fn cancel(&self, cause: CancelCause) -> bool {
+        self.inner
+            .cause
+            .compare_exchange(0, cause as u8, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// The winning cause, if the token has fired.
+    // lint: no_alloc — read at every stage boundary
+    pub fn cause(&self) -> Option<CancelCause> {
+        CancelCause::from_u8(self.inner.cause.load(Ordering::Acquire))
+    }
+
+    // lint: no_alloc — read at every stage boundary
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cause.load(Ordering::Acquire) != 0
+    }
+
+    /// Stage-boundary check: lazily stamps [`CancelCause::Expired`] if
+    /// the token carries a deadline that has passed, then returns the
+    /// current cause (`None` = still live, keep working).
+    // lint: no_alloc — the per-stage token check on the serve hot path
+    pub fn poll(&self) -> Option<CancelCause> {
+        if self.inner.cause.load(Ordering::Acquire) == 0 {
+            if let Some(d) = self.inner.deadline {
+                if Instant::now() >= d {
+                    self.cancel(CancelCause::Expired);
+                }
+            }
+        }
+        self.cause()
+    }
+}
+
+// ---- thread-local current token (deep shared paths) ----
+
+thread_local! {
+    static CURRENT: RefCell<Option<CancelToken>> = const { RefCell::new(None) };
+}
+
+/// Mark the token the calling thread is currently working for (`None`
+/// to clear). Stage workers set this around assembly, mirroring
+/// [`crate::obs::set_current_trace`], so the fetch coalescer's rider
+/// wait can observe cancellation without a threaded parameter.
+pub fn set_current(token: Option<CancelToken>) {
+    CURRENT.with(|c| *c.borrow_mut() = token);
+}
+
+/// Clone of the calling thread's current token, if any.
+pub fn current() -> Option<CancelToken> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Whether the calling thread's current token (if any) has fired or
+/// expired. `false` when no token is set.
+pub fn current_cancelled() -> bool {
+    CURRENT.with(|c| c.borrow().as_ref().map_or(false, |t| t.poll().is_some()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn first_cause_wins() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        assert_eq!(t.poll(), None);
+        assert!(t.cancel(CancelCause::ClientGone));
+        assert!(!t.cancel(CancelCause::Shutdown), "second fire must lose");
+        assert_eq!(t.cause(), Some(CancelCause::ClientGone));
+        assert_eq!(t.poll(), Some(CancelCause::ClientGone));
+    }
+
+    #[test]
+    fn clones_share_the_cell() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        assert!(u.cancel(CancelCause::HedgeLoser));
+        assert_eq!(t.cause(), Some(CancelCause::HedgeLoser));
+    }
+
+    #[test]
+    fn poll_lazily_expires_past_deadline() {
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert_eq!(t.poll(), Some(CancelCause::Expired));
+        let live = CancelToken::with_deadline(Instant::now() + Duration::from_secs(60));
+        assert_eq!(live.poll(), None);
+    }
+
+    #[test]
+    fn deadline_free_token_never_self_expires() {
+        let t = CancelToken::new();
+        assert_eq!(t.poll(), None);
+        assert!(!t.is_cancelled());
+    }
+
+    #[test]
+    fn explicit_fire_beats_later_expiry() {
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert!(t.cancel(CancelCause::Shutdown));
+        assert_eq!(t.poll(), Some(CancelCause::Shutdown));
+    }
+
+    #[test]
+    fn cause_and_stage_indices_roundtrip() {
+        for i in 0..N_CAUSES {
+            let c = CancelCause::from_index(i).expect("cause index");
+            assert_eq!(c.index(), i);
+            assert!(!c.as_str().is_empty());
+        }
+        for i in 0..N_STAGES {
+            let s = CancelStage::from_index(i).expect("stage index");
+            assert_eq!(s.index(), i);
+            assert!(!s.as_str().is_empty());
+        }
+    }
+
+    #[test]
+    fn thread_local_current_token() {
+        assert!(current().is_none());
+        assert!(!current_cancelled());
+        let t = CancelToken::new();
+        set_current(Some(t.clone()));
+        assert!(!current_cancelled());
+        t.cancel(CancelCause::ClientGone);
+        assert!(current_cancelled());
+        let other = std::thread::spawn(current_cancelled).join().expect("join");
+        assert!(!other, "current token must be thread-local");
+        set_current(None);
+        assert!(!current_cancelled());
+    }
+}

@@ -98,7 +98,10 @@ COMMANDS:
   record    generate and save a trace (--trace FILE --requests N)
   trace-gen expand a storm scenario into a timed v2 trace
             (--trace FILE --storm SPEC --rate R --duration-s S)
-  bind      start the TCP front (--bind ADDR; --replicas N fronts a cluster)
+  bind      start the TCP front (--bind ADDR; --replicas N fronts a cluster;
+            --pipeline fronts the staged pipeline with client-gone
+            cancellation; --duration-s S serves a bounded window then
+            drains gracefully)
   cluster   drive the multi-replica cluster router and report per-replica
             metrics (simulated replicas by default; --real uses artifacts)
   trace-check  validate a --trace-out JSON file (schema + flow pairing)
@@ -165,6 +168,10 @@ COMMON FLAGS:
   --handoff-capacity N bounded stage-handoff queue depth   (default: 8)
   --deadline-first    pipelined intake pops the nearest-deadline request
                       first instead of FIFO
+  --cancel            cooperative cancellation: stamp each request's token
+                      with its deadline so stage boundaries drop doomed
+                      work early (typed Cancelled replies, counted per
+                      cause x stage)
   --fetch-coalesce    single-flight concurrent feature-cache misses into
                       shared remote multiget batches (sync cache mode)
   --fetch-wait-us T   max µs a partial miss batch waits before flushing

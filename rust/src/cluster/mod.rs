@@ -44,6 +44,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::cancel::{CancelCause, CancelStage, CancelToken};
 use crate::error::{Error, Result};
 use crate::metrics::Recorder;
 use crate::obs::{self, SharedSpan, StageKind, TraceContext};
@@ -585,8 +586,13 @@ impl ClusterRouter {
     /// Serve on `target`, racing a hedged re-dispatch to the cheapest
     /// alternative when hedging is on and the primary has not answered
     /// within ~2x its estimate (the brownout signature). First answer
-    /// wins; the loser's work completes in the background and only its
-    /// replica-side accounting stands.
+    /// wins; the loser's dispatch carries a [`CancelToken`] fired the
+    /// moment the winner lands, so the losing completion keeps its load
+    /// and health accounting but stays out of the latency/SLA feeds —
+    /// the request was already counted once by the winner. The fire is
+    /// counted under `cancelled_total{cause="hedge_loser"}` exactly when
+    /// the CAS wins (best-effort: a primary that finished in the same
+    /// instant the winner landed already recorded itself).
     fn serve_maybe_hedged(
         &self,
         target: usize,
@@ -606,9 +612,21 @@ impl ClusterRouter {
         let (tx, rx) = std::sync::mpsc::channel();
         let primary = Arc::clone(&self.replicas[target]);
         let req_owned = req.clone();
+        let loser = CancelToken::new();
+        let loser_primary = loser.clone();
         std::thread::spawn(move || {
-            let _ = tx.send(primary.serve_tracked(&req_owned));
+            let _ = tx
+                .send(primary.serve_tracked_cancellable(&req_owned, Some(&loser_primary)));
         });
+        let cancel_loser = || {
+            if loser.cancel(CancelCause::HedgeLoser) {
+                self.metrics.record_cancelled(
+                    CancelCause::HedgeLoser,
+                    CancelStage::Hedge,
+                    req.m() as u64,
+                );
+            }
+        };
         match rx.recv_timeout(Duration::from_micros(hedge_after_us)) {
             Ok(first) => first,
             Err(_) => {
@@ -616,13 +634,26 @@ impl ClusterRouter {
                 match self.replicas[alt].serve_tracked(req) {
                     Ok(resp) => {
                         self.metrics.record_hedge_win();
+                        // the winner landed: the still-running primary is
+                        // now a pure loser — cancel it so its completion
+                        // cannot double-count this request
+                        cancel_loser();
                         Ok(resp)
                     }
                     Err(hedge_err) => {
                         // hedge failed too: give the primary the rest of
                         // the budget (plus slack) to come through
                         let grace = Duration::from_micros(remaining_us.max(1_000));
-                        rx.recv_timeout(grace).unwrap_or(Err(hedge_err))
+                        match rx.recv_timeout(grace) {
+                            Ok(primary_result) => primary_result,
+                            Err(_) => {
+                                // abandoned past the grace window: mark
+                                // the primary a loser so its eventual
+                                // completion stays out of the feeds
+                                cancel_loser();
+                                Err(hedge_err)
+                            }
+                        }
                     }
                 }
             }

@@ -351,6 +351,22 @@ impl Replica {
     /// Serve with load/latency/health accounting — the only path the
     /// router uses to reach the backend.
     pub fn serve_tracked(&self, req: &Request) -> Result<Response> {
+        self.serve_tracked_cancellable(req, None)
+    }
+
+    /// Like [`Replica::serve_tracked`], carrying the dispatch's cancel
+    /// token. A completion whose token fired (a lost hedge race, an
+    /// abandoned primary) keeps its load and health accounting — the
+    /// work really ran — but stays OUT of the latency feeds: the winner
+    /// already recorded this request once, and double-feeding the
+    /// loser's elapsed time (which spans the whole race) would inflate
+    /// request counts and poison the rolling sojourn estimator the
+    /// admission gate reads.
+    pub fn serve_tracked_cancellable(
+        &self,
+        req: &Request,
+        cancel: Option<&crate::cancel::CancelToken>,
+    ) -> Result<Response> {
         self.in_flight.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
         let result = self.backend.serve(req);
@@ -358,7 +374,10 @@ impl Replica {
         match &result {
             Ok(_) => {
                 self.consecutive_errors.store(0, Ordering::Relaxed);
-                self.record_latency(t0.elapsed().as_micros() as u64, req.m());
+                let lost_race = cancel.is_some_and(|t| t.is_cancelled());
+                if !lost_race {
+                    self.record_latency(t0.elapsed().as_micros() as u64, req.m());
+                }
             }
             // backend admission pushback is load, not ill health: feeding
             // it into the ejection state machine would let a traffic burst
@@ -533,6 +552,28 @@ mod tests {
         }
         assert!(r.p99_us() >= 2_800, "estimator sees the 3 ms tail");
         assert!(r.mean_us() >= 2_800);
+    }
+
+    /// A completion whose cancel token fired (a lost hedge race, an
+    /// abandoned primary) keeps load/health accounting but stays OUT of
+    /// the latency feeds — the winner already recorded this request,
+    /// and double-feeding the loser's race-spanning elapsed time would
+    /// inflate `requests` and poison the rolling sojourn estimator.
+    #[test]
+    fn lost_hedge_completion_stays_out_of_latency_feeds() {
+        use crate::cancel::{CancelCause, CancelToken};
+        let r = Replica::new(0, flaky(false), 2, 3, 1_000);
+        let live = CancelToken::new();
+        assert!(r.serve_tracked_cancellable(&req(), Some(&live)).is_ok());
+        assert_eq!(r.metrics.requests(), 1, "live completion feeds the estimators");
+
+        let fired = CancelToken::new();
+        fired.cancel(CancelCause::HedgeLoser);
+        assert!(r.serve_tracked_cancellable(&req(), Some(&fired)).is_ok());
+        assert_eq!(r.metrics.requests(), 1, "lost race must not double-count");
+        assert_eq!(r.in_flight(), 0, "load accounting stays balanced");
+        assert_eq!(r.errors_total(), 0, "a lost race is not ill health");
+        assert!(r.healthy());
     }
 
     #[test]

@@ -180,6 +180,12 @@ pub struct ServerConfig {
     /// tenant beyond the list (or a 0 entry) keeps `deadline_ms`. Empty
     /// by default: single-tenant behavior is byte-identical.
     pub tenant_deadline_ms: Vec<u64>,
+    /// Cooperative cancellation: stamp each request's `CancelToken`
+    /// with its deadline so stage boundaries lazily expire and purge
+    /// doomed work (`Error::Cancelled`). Off by default — admitted
+    /// requests then always run to completion; explicit fires
+    /// (client-gone / hedge-loser / shutdown) are honored regardless.
+    pub cancel: bool,
 }
 
 impl ServerConfig {
@@ -206,6 +212,7 @@ impl Default for ServerConfig {
             trace_sample_n: 0,
             truncate_over_budget: false,
             tenant_deadline_ms: Vec::new(),
+            cancel: false,
         }
     }
 }
@@ -342,6 +349,9 @@ impl StackConfig {
                 }
                 c.server.tenant_deadline_ms = out;
             }
+            if let Some(v) = s.opt("cancel") {
+                c.server.cancel = v.as_bool()?;
+            }
         }
         if let Some(w) = j.opt("workload") {
             if let Some(v) = w.opt("catalog_size") {
@@ -404,6 +414,7 @@ mod tests {
         assert_eq!(c.server.deadline_ms, 50); // paper envelope
         assert_eq!(c.server.trace_sample_n, 0, "tracing is opt-in");
         assert!(c.server.tenant_deadline_ms.is_empty(), "tenant overrides are opt-in");
+        assert!(!c.server.cancel, "cooperative cancellation is opt-in");
     }
 
     #[test]
@@ -438,7 +449,7 @@ mod tests {
             "server": {"pipeline_workers": 8, "bind_addr": "127.0.0.1:7070",
                        "pipeline": true, "feature_workers": 3, "handoff_capacity": 16,
                        "deadline_first": true, "trace_sample_n": 4,
-                       "tenant_deadline_ms": [20, 0, 80]},
+                       "tenant_deadline_ms": [20, 0, 80], "cancel": true},
             "workload": {"zipf_theta": 0.8, "candidate_mix": [[128, 1.0], [256, 1.0]]}
         }"#,
         )
@@ -461,6 +472,7 @@ mod tests {
         assert_eq!(c.server.bind_addr.as_deref(), Some("127.0.0.1:7070"));
         assert_eq!(c.server.trace_sample_n, 4);
         assert_eq!(c.server.tenant_deadline_ms, vec![20, 0, 80]);
+        assert!(c.server.cancel);
         assert_eq!(c.workload.candidate_mix, vec![(128, 1.0), (256, 1.0)]);
     }
 

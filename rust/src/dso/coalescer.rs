@@ -33,6 +33,7 @@ use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::cancel::{CancelStage, CancelToken};
 use crate::error::{Error, Result};
 use crate::metrics::{Histogram, Recorder};
 
@@ -135,9 +136,11 @@ pub(crate) struct Coalescer {
     occupancy: Histogram,
     /// The orchestrator's admission counter. Once a segment is accepted
     /// into a batch, its reserved unit is owned by the job lifecycle:
-    /// released by the executor after the launch, or — if the batch can
-    /// never reach an executor — by [`Coalescer::dispatch`]'s failure
-    /// path, so capacity is never leaked.
+    /// released by the executor after the launch, by
+    /// [`Coalescer::evict_cancelled`] when a cancelled rider leaves a
+    /// still-open batch, or — if the batch can never reach an executor
+    /// — by [`Coalescer::dispatch`]'s failure path, so capacity is
+    /// never leaked.
     in_flight: Arc<AtomicUsize>,
     recorder: Option<Arc<Recorder>>,
 }
@@ -172,6 +175,7 @@ impl Coalescer {
     /// Add `take` rows (`rows` = `take * d` f32s) of a request's tail
     /// remainder to `profile`'s open batch, opening one if needed and
     /// dispatching any batch this fills (or displaces for lack of room).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn enqueue(
         &self,
         profile: usize,
@@ -180,6 +184,7 @@ impl Coalescer {
         take: usize,
         chunk_index: usize,
         trace_id: u64,
+        cancel: Option<CancelToken>,
         reply: Sender<Result<super::orchestrator::ChunkDone>>,
     ) -> Result<()> {
         debug_assert!(take > 0 && take <= profile);
@@ -192,6 +197,18 @@ impl Coalescer {
         let mut opened = false;
         {
             let mut open = slot.lock().unwrap_or_else(|e| e.into_inner());
+            // cancelled riders leave the open batch first — that may
+            // free enough room to avoid displacing it
+            if let Some(batch) = open.as_mut() {
+                self.evict_cancelled(batch);
+                if batch.fill == 0 {
+                    // every rider left: recycle the buffer; the slot
+                    // reopens below with a fresh deadline
+                    if let Some(empty) = open.take() {
+                        self.pool.put(empty.buf);
+                    }
+                }
+            }
             // no room left for this remainder: close the open batch out
             let displace = open.as_ref().is_some_and(|b| profile - b.fill < take);
             if displace {
@@ -217,6 +234,7 @@ impl Coalescer {
                     chunk_index,
                     enqueued: Instant::now(),
                     trace_id,
+                    cancel,
                     reply,
                 });
                 batch.fill += take;
@@ -248,8 +266,48 @@ impl Coalescer {
     /// executor (pool closed — the process is shutting down or broken)
     /// releases its segments' admission units and drops the job, whose
     /// broken reply channels surface as errors to the waiting submits.
+    /// Remove every segment whose cancel token has fired from a
+    /// still-open batch: later rows shift down to close the gap (so the
+    /// batch re-pads from its new fill), the rider's reply resolves with
+    /// a typed [`Error::Cancelled`] at the coalescer stage, and its
+    /// admission unit is released here — no executor will ever own it.
+    /// Callers hold the batch exclusively (slot lock, or taken out).
+    fn evict_cancelled(&self, batch: &mut PendingBatch) {
+        let mut off = 0usize;
+        let mut i = 0usize;
+        while i < batch.segments.len() {
+            let rows = batch.segments[i].rows;
+            let fired = batch.segments[i].cancel.as_ref().and_then(|t| t.poll());
+            match fired {
+                Some(cause) => {
+                    let seg = batch.segments.remove(i);
+                    // shift the rows above the evicted span down
+                    let start = off * self.d;
+                    let end = batch.fill * self.d;
+                    batch.buf.copy_within(start + rows * self.d..end, start);
+                    batch.fill -= rows;
+                    let _ = seg
+                        .reply
+                        .send(Err(Error::Cancelled(cause, CancelStage::Coalescer)));
+                    self.in_flight.fetch_sub(1, Ordering::AcqRel);
+                }
+                None => {
+                    off += rows;
+                    i += 1;
+                }
+            }
+        }
+    }
+
     fn dispatch(&self, mut batch: PendingBatch) {
-        debug_assert!(batch.fill > 0, "empty batches are never opened");
+        // last-chance purge: riders cancelled while the batch waited
+        // out its deadline leave now, so the launch only carries rows
+        // somebody still wants — an emptied batch never launches
+        self.evict_cancelled(&mut batch);
+        if batch.fill == 0 {
+            self.pool.put(batch.buf);
+            return;
+        }
         let profile = batch.profile;
         if batch.fill < profile {
             pad_with_last_row(&mut batch.buf, batch.fill, profile, self.d);

@@ -23,6 +23,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::cancel::{CancelStage, CancelToken};
 use crate::chaos::{ChaosSlot, FaultPlan, PanicSite};
 use crate::config::{DsoConfig, DsoMode};
 use crate::error::{Error, Result};
@@ -46,6 +47,10 @@ pub(crate) struct Segment {
     /// Originating request's trace id (0 = untraced). Carried so a
     /// packed launch can name every rider on its shared launch span.
     pub trace_id: u64,
+    /// Originating request's cancel token (`None` = the caller does not
+    /// participate in cooperative cancellation). Checked when a pending
+    /// batch is inspected and immediately before an engine launch.
+    pub cancel: Option<CancelToken>,
     pub reply: Sender<Result<ChunkDone>>,
 }
 
@@ -323,6 +328,25 @@ impl Orchestrator {
         m: usize,
         trace_id: u64,
     ) -> Result<ExecOutcome> {
+        self.submit_cancellable(hist, cands, m, trace_id, None)
+    }
+
+    /// Like [`Orchestrator::submit_traced`], carrying the request's
+    /// [`CancelToken`]: the token is re-checked immediately after
+    /// admission (the last cheap point before device upload and
+    /// dispatch), every dispatched segment carries a clone so the
+    /// coalescer can evict it from a still-open batch, and a packed job
+    /// whose riders *all* cancelled skips its engine launch entirely.
+    /// Drop sites reply [`Error::Cancelled`] with the stage that dropped
+    /// the work; the caller is the single site that counts it.
+    pub fn submit_cancellable(
+        &self,
+        hist: &[f32],
+        cands: &[f32],
+        m: usize,
+        trace_id: u64,
+        cancel: Option<CancelToken>,
+    ) -> Result<ExecOutcome> {
         if m == 0 {
             return Ok(ExecOutcome {
                 scores: Vec::new(),
@@ -366,14 +390,22 @@ impl Orchestrator {
         }
         // From here on every early return must release the units that
         // will never reach an executor. Units reach exactly one owner:
-        // executors release what they run, the coalescer's dispatch
-        // failure path releases what it accepted but cannot deliver,
+        // executors release what they run, the coalescer releases what
+        // it evicts (cancelled riders) or accepted but cannot deliver,
         // and this function releases what was never handed off at all.
         let release = |n: usize| {
             if n > 0 {
                 self.in_flight.fetch_sub(n, Ordering::AcqRel);
             }
         };
+
+        // pre-dispatch token check: the admission wait above may have
+        // outlived the request — this is the last cheap point to bail
+        // before the device upload and executor dispatch
+        if let Some(cause) = cancel.as_ref().and_then(|t| t.poll()) {
+            release(want);
+            return Err(Error::Cancelled(cause, CancelStage::Launch));
+        }
 
         for &chunk in &plan.chunks {
             if !self.pools.contains_key(&chunk) {
@@ -410,10 +442,26 @@ impl Orchestrator {
             let sent = match (&self.coalescer, take < chunk) {
                 // tail remainder + coalescing on: pack with other
                 // requests' remainders instead of padding alone
-                (Some(co), true) => {
-                    co.enqueue(chunk, &hist_dev, rows, take, ci, trace_id, reply_tx.clone())
-                }
-                _ => self.dispatch_direct(chunk, rows, take, ci, trace_id, &hist_dev, &reply_tx),
+                (Some(co), true) => co.enqueue(
+                    chunk,
+                    &hist_dev,
+                    rows,
+                    take,
+                    ci,
+                    trace_id,
+                    cancel.clone(),
+                    reply_tx.clone(),
+                ),
+                _ => self.dispatch_direct(
+                    chunk,
+                    rows,
+                    take,
+                    ci,
+                    trace_id,
+                    cancel.clone(),
+                    &hist_dev,
+                    &reply_tx,
+                ),
             };
             if let Err(e) = sent {
                 release(want - dispatched);
@@ -473,6 +521,7 @@ impl Orchestrator {
         take: usize,
         chunk_index: usize,
         trace_id: u64,
+        cancel: Option<CancelToken>,
         hist: &Arc<HistHandle>,
         reply: &Sender<Result<ChunkDone>>,
     ) -> Result<()> {
@@ -494,6 +543,7 @@ impl Orchestrator {
                     chunk_index,
                     enqueued: Instant::now(),
                     trace_id,
+                    cancel,
                     reply: reply.clone(),
                 }],
             })
@@ -602,6 +652,23 @@ fn run_job(
             // lint: allow(panic) chaos injection, caught by the executor supervisor
             panic!("chaos: injected executor panic");
         }
+    }
+    // pre-launch purge: if *every* rider's token has fired, the launch
+    // serves no one — reply each segment its typed cause and skip the
+    // engine entirely. A mixed job launches untouched: riders packed
+    // next to live rows complete normally (score identity preserved).
+    if !job.segments.is_empty()
+        && job.segments.iter().all(|s| s.cancel.as_ref().and_then(|t| t.poll()).is_some())
+    {
+        for seg in &job.segments {
+            let cause = seg
+                .cancel
+                .as_ref()
+                .and_then(|t| t.cause())
+                .unwrap_or(crate::cancel::CancelCause::Expired);
+            let _ = seg.reply.send(Err(Error::Cancelled(cause, CancelStage::Launch)));
+        }
+        return;
     }
     let picked = Instant::now();
     let real_rows: usize = job.segments.iter().map(|s| s.rows).sum();

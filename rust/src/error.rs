@@ -32,6 +32,10 @@ pub enum Error {
     /// A supervised worker panicked while holding this request; the
     /// supervisor failed the request and restarted the worker.
     WorkerPanic(String),
+    /// The request was cooperatively cancelled (deadline expiry, client
+    /// disconnect, lost hedge race, or shutdown) and dropped at the
+    /// named stage boundary before burning further compute.
+    Cancelled(crate::cancel::CancelCause, crate::cancel::CancelStage),
 }
 
 impl fmt::Display for Error {
@@ -48,6 +52,9 @@ impl fmt::Display for Error {
             Error::Internal(m) => write!(f, "internal error: {m}"),
             Error::Shutdown(m) => write!(f, "shutting down: {m}"),
             Error::WorkerPanic(m) => write!(f, "worker panicked: {m}"),
+            Error::Cancelled(cause, stage) => {
+                write!(f, "cancelled ({}) at {}", cause.as_str(), stage.as_str())
+            }
         }
     }
 }

@@ -249,6 +249,54 @@
 //!   cost A/B in `BENCH_storm.json`; see `EXPERIMENTS.md` § "Storm
 //!   runbook".
 //!
+//! ## Deadline propagation and cooperative cancellation
+//!
+//! Admission control gates the front door, but until this layer a
+//! `PipelineJob` that made it into the intake ran to completion no
+//! matter what — a request whose deadline had already passed, whose
+//! client hung up, or that lost its hedge race kept burning FLOPs that
+//! a live request could have used (the classic goodput collapse under
+//! overload). The [`cancel`] module threads a request-scoped
+//! [`cancel::CancelToken`] — an `Arc`'d atomic cause cell
+//! (`Expired | ClientGone | HedgeLoser | Shutdown`, first fire wins) —
+//! from admission through every plane, checked at each stage boundary
+//! so doomed work is dropped at the earliest cheap point with a typed
+//! [`Error::Cancelled`]`(cause, stage)` reply, never silently:
+//!
+//! * **Intake / handoff** (`server::stages`): pops lazily purge
+//!   expired/cancelled jobs before feature or compute work starts,
+//!   returning staging arenas to the pool with exact accounting.
+//! * **DSO** (`dso::coalescer` / `dso::orchestrator`): a cancelled
+//!   rider's rows are evicted from a still-open pending batch (later
+//!   rows shift down, admission units released one per evicted
+//!   segment), and executors re-check tokens immediately before launch
+//!   (an all-cancelled job skips the engine entirely). Riders already
+//!   inside a flushed launch complete — score identity is untouched.
+//! * **PDA** (`pda::fetch_coalescer`): a cancelled rider abandons its
+//!   ticket wait (degrading to stale/default features) without
+//!   disturbing leader/waiter semantics — tickets still resolve and the
+//!   single-flight table never leaks entries.
+//! * **Cluster** (`cluster`): the hedge loser is cancelled the moment
+//!   the winner lands, so its late completion no longer pollutes the
+//!   rolling sojourn estimator admission reads; remaining budget is
+//!   checked before every retry re-dispatch.
+//! * **TCP front** (`server::tcp`): detects client disconnect
+//!   mid-request (`ClientGone`), rejects oversized frames with a typed
+//!   error, applies a per-connection idle timeout, and drains
+//!   gracefully (listener closed, in-flight requests finish).
+//!
+//! Expiry is *lazy* — no timers; each boundary calls
+//! [`cancel::CancelToken::poll`], which stamps `Expired` once the
+//! token's deadline passes. The knob is opt-in (`ServerConfig::cancel`,
+//! `--cancel`): without it tokens carry no deadline and only explicit
+//! fires are honored. Every drop is counted exactly once under
+//! `cancelled_total{cause, stage}` plus a saved-work estimate
+//! ([`metrics::Recorder::record_cancelled`], Prometheus
+//! `flame_cancelled_total`), and `tests/cancel.rs` proves the headline
+//! invariant: under a seeded flash crowd at ~2x capacity the
+//! cancellation arm beats the no-cancel arm on completed-within-SLA
+//! goodput, with zero leaked arenas or waiter entries.
+//!
 //! ## Concurrency invariants
 //!
 //! The serve path's concurrency is hand-rolled, and its correctness
@@ -305,6 +353,7 @@
 pub mod batching;
 pub mod benchkit;
 pub mod cache;
+pub mod cancel;
 pub mod chaos;
 pub mod cli;
 pub mod cluster;

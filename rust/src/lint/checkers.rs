@@ -98,6 +98,13 @@ const NO_ALLOC_REQUIRED: &[(&str, &str)] = &[
     ("cluster/tenant.rs", "budget_us"),
     ("cluster/tenant.rs", "weight"),
     ("cluster/mod.rs", "queue_permille"),
+    // cooperative-cancellation surface: token checks sit at every stage
+    // boundary and the per-drop accounting runs on the purge path
+    ("src/cancel.rs", "cancel"),
+    ("src/cancel.rs", "poll"),
+    ("src/cancel.rs", "cause"),
+    ("src/cancel.rs", "is_cancelled"),
+    ("metrics/recorder.rs", "record_cancelled"),
 ];
 
 /// A documented lock-order invariant: within the file matching
@@ -184,6 +191,14 @@ struct FnWalk {
     calls: Vec<CallSite>,
     /// Banned allocation constructs found directly in the body.
     alloc_tokens: Vec<(String, u32)>,
+    /// Body contains a tagged (`// lint: supervisor`) `catch_unwind`.
+    supervised: bool,
+    /// Body drops jobs (`record_dropped` accounting call).
+    drops_job: bool,
+    /// Body references a `reply` channel anywhere.
+    mentions_reply: bool,
+    /// Body resolves it (`reply.send(..)`).
+    resolves_reply: bool,
 }
 
 struct Guard {
@@ -220,6 +235,23 @@ pub fn check(model: &Model) -> Analysis {
                 continue;
             }
             let w = walk_fn(model, fi, item, &mut findings);
+            // a supervisor that drops jobs while holding a `reply`
+            // channel must also resolve it — a cleanup path that counts
+            // the drop but never sends leaves the submitter blocked on
+            // a receiver nobody will ever wake
+            if w.supervised && w.drops_job && w.mentions_reply && !w.resolves_reply {
+                findings.push(Finding {
+                    checker: "supervisor",
+                    file: file.path.clone(),
+                    line: item.line,
+                    function: item.name.clone(),
+                    detail: "supervised worker drops jobs (`record_dropped`) and \
+                             handles a `reply` channel but never resolves it — \
+                             send a typed error (`reply.send(Err(..))`) before \
+                             dropping the job"
+                        .to_string(),
+                });
+            }
             walks.insert((fi, ni), w);
         }
     }
@@ -616,7 +648,9 @@ fn walk_fn(
                 // alive. The tag documents (and CI-enforces) that contract.
                 // Span 5: supervisor tags head multi-line comment blocks
                 // that explain the recovery contract.
-                if !file.comment_near(t.line, 5, "lint: supervisor") {
+                if file.comment_near(t.line, 5, "lint: supervisor") {
+                    w.supervised = true;
+                } else {
                     findings.push(Finding {
                         checker: "supervisor",
                         file: file.path.clone(),
@@ -658,6 +692,23 @@ fn walk_fn(
         // for `no_alloc`-annotated ones)
         if let Some(what) = banned_alloc_at(file, j) {
             w.alloc_tokens.push((what, t.line));
+        }
+        // supervisor reply-resolution facts (consumed by check())
+        if t.kind == Kind::Ident {
+            if t.text == "record_dropped" {
+                w.drops_job = true;
+            } else if t.text == "reply" {
+                w.mentions_reply = true;
+                if let Some(d) = file.nc(j + 1) {
+                    if file.is_punct(d, ".") {
+                        if let Some(m) = file.nc(d + 1) {
+                            if file.is_ident(m, "send") {
+                                w.resolves_reply = true;
+                            }
+                        }
+                    }
+                }
+            }
         }
         // call-site resolution
         if t.kind == Kind::Ident && next_is(file, j, "(") {
@@ -1485,6 +1536,41 @@ fn drifted(f: impl FnOnce() + std::panic::UnwindSafe) {
 }
 "#)]);
         assert_eq!(by(&a, "supervisor").len(), 1, "{:?}", a.findings);
+    }
+
+    #[test]
+    fn supervisor_dropping_a_job_without_resolving_reply_is_caught() {
+        let a = run(&[("src/server/x.rs", r#"
+fn worker(job: Job, metrics: &Recorder) {
+    // lint: supervisor — fails the in-flight request with a typed
+    // error and keeps the worker draining
+    let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(&job)));
+    if ran.is_err() {
+        let _orphan = job.reply;
+        metrics.record_dropped();
+    }
+}
+"#)]);
+        let f = by(&a, "supervisor");
+        assert_eq!(f.len(), 1, "{:?}", a.findings);
+        assert!(f[0].detail.contains("reply.send"), "{}", f[0].detail);
+        assert_eq!(f[0].function, "worker");
+    }
+
+    #[test]
+    fn supervisor_that_resolves_reply_before_dropping_is_accepted() {
+        let a = run(&[("src/server/x.rs", r#"
+fn worker(job: Job, metrics: &Recorder) {
+    // lint: supervisor — fails the in-flight request with a typed
+    // error and keeps the worker draining
+    let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(&job)));
+    if ran.is_err() {
+        metrics.record_dropped();
+        let _ = job.reply.send(Err(Error::WorkerPanic("boom".into())));
+    }
+}
+"#)]);
+        assert!(by(&a, "supervisor").is_empty(), "{:?}", a.findings);
     }
 
     // ---- checker 5: unsafe hygiene ----

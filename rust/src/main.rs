@@ -156,6 +156,9 @@ fn stack_config(args: &Args) -> Result<StackConfig> {
     if let Some(d) = args.get_parse::<u64>("deadline-ms")? {
         cfg.server.deadline_ms = d;
     }
+    if args.has("cancel") {
+        cfg.server.cancel = true;
+    }
     if let Some(n) = args.get_parse::<u64>("trace-sample-n")? {
         cfg.server.trace_sample_n = n;
     }
@@ -515,6 +518,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cs.occupancy_p50_pct
         );
     }
+    print_cancelled(&stack.metrics);
     if tracer.is_some() {
         let (q, f, h, c, o) = stack.metrics.sla_miss_attribution();
         if q + f + h + c + o > 0 {
@@ -617,9 +621,30 @@ fn cmd_trace_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One-line cancelled-work ledger, rendered only when something was
+/// actually dropped (quiet runs stay byte-identical).
+fn print_cancelled(metrics: &Recorder) {
+    use flame::cancel::CancelCause;
+    let total = metrics.cancelled_total();
+    if total == 0 {
+        return;
+    }
+    println!(
+        "cancelled      : {} dropped (expired {}  client-gone {}  hedge-loser {}  \
+         shutdown {}), ~{} pairs of compute saved",
+        total,
+        metrics.cancelled_by_cause(CancelCause::Expired),
+        metrics.cancelled_by_cause(CancelCause::ClientGone),
+        metrics.cancelled_by_cause(CancelCause::HedgeLoser),
+        metrics.cancelled_by_cause(CancelCause::Shutdown),
+        metrics.cancelled_saved_pairs()
+    );
+}
+
 fn cmd_bind(args: &Args) -> Result<()> {
     let n = args.get_parse::<usize>("replicas")?.unwrap_or(1);
     let addr = args.get_or("bind", "127.0.0.1:7178");
+    let report_metrics: Arc<Recorder>;
     let server = if n > 1 {
         let stacks = build_stacks(args, n)?;
         let backends: Vec<Arc<dyn ReplicaBackend>> = stacks
@@ -628,12 +653,38 @@ fn cmd_bind(args: &Args) -> Result<()> {
             .collect();
         let router = Arc::new(ClusterRouter::new(backends, cluster_config(args)?)?);
         println!("[flame] cluster front: {n} replicas, policy {}", router.policy().name());
+        report_metrics = Arc::clone(&router.metrics);
         flame::server::tcp::TcpServer::start_cluster(router, addr)?
     } else {
-        let (stack, _) = build_stack(args)?;
-        flame::server::tcp::TcpServer::start(Arc::clone(&stack), addr)?
+        let (stack, cfg) = build_stack(args)?;
+        report_metrics = Arc::clone(&stack.metrics);
+        if cfg.server.pipeline {
+            // staged front: submit + channel replies, so each connection
+            // thread watches its socket and fires ClientGone on hangup
+            let handle = Arc::new(stack.spawn_pipeline());
+            println!(
+                "[flame] pipeline front: {} feature + {} compute workers, cancel {}",
+                cfg.server.feature_workers,
+                cfg.server.pipeline_workers,
+                if cfg.server.cancel { "on" } else { "off" }
+            );
+            flame::server::tcp::TcpServer::start_pipeline(handle, addr)?
+        } else {
+            flame::server::tcp::TcpServer::start(Arc::clone(&stack), addr)?
+        }
     };
     println!("[flame] listening on {}", server.addr);
+    // `--duration-s` serves for a bounded window, then drains gracefully:
+    // the listener closes, in-flight requests finish and flush, and the
+    // cancelled-work ledger (if any) is reported before exit.
+    if let Some(secs) = args.get_parse::<f64>("duration-s")? {
+        println!("[flame] serving for {secs:.0}s, then draining");
+        std::thread::sleep(Duration::from_secs_f64(secs.max(0.0)));
+        server.drain();
+        println!("[flame] drained: listener closed, in-flight requests completed");
+        print_cancelled(&report_metrics);
+        return Ok(());
+    }
     println!("[flame] press ctrl-c to stop");
     loop {
         std::thread::sleep(Duration::from_secs(3600));
@@ -895,6 +946,7 @@ fn print_cluster_report(
             snap.retries, snap.hedges, snap.hedge_wins, snap.probes_ok, snap.probes_failed
         );
     }
+    print_cancelled(&router.metrics);
     let q = agg.quality;
     if q.iter().skip(1).any(|&c| c > 0) {
         println!(

@@ -7,6 +7,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
+use crate::cancel::{CancelCause, CancelStage, N_CAUSES, N_STAGES};
 use crate::chaos::{ServeQuality, QUALITY_RUNGS};
 use crate::obs::{StageKind, TraceContext, Tracer};
 use crate::workload::{TenantId, MAX_TENANTS};
@@ -82,6 +83,16 @@ pub struct Recorder {
     /// Supervised recovery: worker panics caught by a supervisor that
     /// failed the in-flight request and respawned/continued the worker.
     worker_restarts: AtomicU64,
+    /// Cooperative cancellation: drops per `{cause, stage}` pair
+    /// (indices = `CancelCause::index` x `CancelStage::index`). Each
+    /// fired token is recorded exactly once, at the drop site that
+    /// resolved the request's reply — the matrix total therefore equals
+    /// the number of requests that resolved `Error::Cancelled` (plus
+    /// hedge losers, whose *dispatch* was the unit dropped).
+    cancelled: [[AtomicU64; N_STAGES]; N_CAUSES],
+    /// Cooperative cancellation: user-item pairs that were *not*
+    /// computed thanks to the drops above (saved-work estimate).
+    cancelled_saved_pairs: AtomicU64,
     /// Per-tenant views (flat arrays indexed by `TenantId::index`):
     /// completions, SLA misses, front-door sheds, quality ladder, and
     /// an end-to-end latency histogram per tenant. Single-tenant
@@ -138,6 +149,8 @@ impl Recorder {
             hedges: AtomicU64::new(0),
             hedge_wins: AtomicU64::new(0),
             worker_restarts: AtomicU64::new(0),
+            cancelled: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
+            cancelled_saved_pairs: AtomicU64::new(0),
             tenant_requests: std::array::from_fn(|_| AtomicU64::new(0)),
             tenant_sla_miss: std::array::from_fn(|_| AtomicU64::new(0)),
             tenant_shed: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -317,6 +330,42 @@ impl Recorder {
         self.worker_restarts.fetch_add(1, Ordering::Relaxed);
     }
 
+    // ---- cooperative cancellation ----
+
+    /// One cancelled unit of work dropped at `stage` because of
+    /// `cause`, saving `saved_pairs` user-item pairs of compute.
+    /// Call sites record each fired token exactly once — at the drop
+    /// site that resolves the request's reply (or, for a hedge loser,
+    /// where the winning arm abandons the losing dispatch) — so the
+    /// matrix total matches token fires one-for-one.
+    // lint: no_alloc — cancellation fast path at stage boundaries
+    pub fn record_cancelled(&self, cause: CancelCause, stage: CancelStage, saved_pairs: u64) {
+        self.cancelled[cause.index()][stage.index()].fetch_add(1, Ordering::Relaxed);
+        self.cancelled_saved_pairs.fetch_add(saved_pairs, Ordering::Relaxed);
+    }
+
+    /// The full `{cause, stage}` cancellation matrix.
+    pub fn cancelled_matrix(&self) -> [[u64; N_STAGES]; N_CAUSES] {
+        std::array::from_fn(|c| {
+            std::array::from_fn(|s| self.cancelled[c][s].load(Ordering::Relaxed))
+        })
+    }
+
+    /// Total cancelled drops across all causes and stages.
+    pub fn cancelled_total(&self) -> u64 {
+        self.cancelled_matrix().iter().flatten().sum()
+    }
+
+    /// Cancelled drops for one cause, summed over stages.
+    pub fn cancelled_by_cause(&self, cause: CancelCause) -> u64 {
+        self.cancelled[cause.index()].iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
+
+    /// User-item pairs whose compute was saved by cancellation.
+    pub fn cancelled_saved_pairs(&self) -> u64 {
+        self.cancelled_saved_pairs.load(Ordering::Relaxed)
+    }
+
     // ---- per-tenant views ----
 
     /// One completed request for `tenant`: end-to-end micros plus
@@ -494,6 +543,12 @@ impl Recorder {
         self.hedges.store(0, Ordering::Relaxed);
         self.hedge_wins.store(0, Ordering::Relaxed);
         self.worker_restarts.store(0, Ordering::Relaxed);
+        for row in &self.cancelled {
+            for s in row {
+                s.store(0, Ordering::Relaxed);
+            }
+        }
+        self.cancelled_saved_pairs.store(0, Ordering::Relaxed);
         for i in 0..MAX_TENANTS {
             self.tenant_requests[i].store(0, Ordering::Relaxed);
             self.tenant_sla_miss[i].store(0, Ordering::Relaxed);
@@ -563,6 +618,8 @@ impl Recorder {
             hedges: self.hedges(),
             hedge_wins: self.hedge_wins(),
             worker_restarts: self.worker_restarts(),
+            cancelled_total: self.cancelled_total(),
+            cancelled_saved_pairs: self.cancelled_saved_pairs(),
         }
     }
 
@@ -636,6 +693,11 @@ pub struct MetricsSnapshot {
     /// Supervised recovery: caught worker panics (request failed typed,
     /// worker kept alive).
     pub worker_restarts: u64,
+    /// Cooperative cancellation: total drops across all `{cause,
+    /// stage}` pairs (0 unless tokens fired), plus the user-item pairs
+    /// of compute those drops saved.
+    pub cancelled_total: u64,
+    pub cancelled_saved_pairs: u64,
 }
 
 /// Point-in-time view of one tenant's traffic (see
@@ -745,6 +807,7 @@ mod tests {
         r.record_hedge();
         r.record_hedge_win();
         r.record_worker_restart();
+        r.record_cancelled(CancelCause::Expired, CancelStage::Intake, 16);
         r.reset();
         let s = r.snapshot_over(1.0);
         assert_eq!(s.requests, 0);
@@ -760,6 +823,27 @@ mod tests {
         assert_eq!(r.sla_miss_attribution(), (0, 0, 0, 0, 0));
         assert_eq!(s.quality, [0; QUALITY_RUNGS]);
         assert_eq!((s.retries, s.hedges, s.hedge_wins, s.worker_restarts), (0, 0, 0, 0));
+        assert_eq!((s.cancelled_total, s.cancelled_saved_pairs), (0, 0));
+        assert_eq!(r.cancelled_matrix(), [[0; N_STAGES]; N_CAUSES]);
+    }
+
+    #[test]
+    fn cancel_matrix_counts_per_cause_and_stage() {
+        let r = Recorder::new();
+        r.record_cancelled(CancelCause::Expired, CancelStage::Intake, 16);
+        r.record_cancelled(CancelCause::Expired, CancelStage::Handoff, 8);
+        r.record_cancelled(CancelCause::ClientGone, CancelStage::Frontend, 0);
+        r.record_cancelled(CancelCause::HedgeLoser, CancelStage::Hedge, 4);
+        let m = r.cancelled_matrix();
+        assert_eq!(m[CancelCause::Expired.index()][CancelStage::Intake.index()], 1);
+        assert_eq!(m[CancelCause::Expired.index()][CancelStage::Handoff.index()], 1);
+        assert_eq!(m[CancelCause::ClientGone.index()][CancelStage::Frontend.index()], 1);
+        assert_eq!(r.cancelled_by_cause(CancelCause::Expired), 2);
+        assert_eq!(r.cancelled_by_cause(CancelCause::Shutdown), 0);
+        assert_eq!(r.cancelled_total(), 4);
+        let s = r.snapshot_over(1.0);
+        assert_eq!(s.cancelled_total, 4);
+        assert_eq!(s.cancelled_saved_pairs, 28);
     }
 
     #[test]

@@ -228,11 +228,51 @@ pub fn append_tenants(o: &mut String, tenants: &[crate::metrics::TenantCounts]) 
     }
 }
 
+/// Append the cancelled-work ledger (`cause` x `stage` labels) for every
+/// non-zero cell, plus the saved-compute counter. Emits nothing when no
+/// request was ever cancelled, so expositions from runs without
+/// cancellation are byte-identical to before the ledger existed.
+pub fn append_cancelled(o: &mut String, r: &crate::metrics::Recorder) {
+    use crate::cancel::{CancelCause, CancelStage};
+    let matrix = r.cancelled_matrix();
+    if matrix.iter().flatten().all(|&v| v == 0) {
+        return;
+    }
+    let _ = writeln!(
+        o,
+        "# HELP flame_cancelled_total Requests dropped as doomed work, by cause and stage."
+    );
+    let _ = writeln!(o, "# TYPE flame_cancelled_total counter");
+    for (c, row) in matrix.iter().enumerate() {
+        let Some(cause) = CancelCause::from_index(c) else { continue };
+        for (s, &v) in row.iter().enumerate() {
+            let Some(stage) = CancelStage::from_index(s) else { continue };
+            if v > 0 {
+                let _ = writeln!(
+                    o,
+                    "flame_cancelled_total{{cause=\"{}\",stage=\"{}\"}} {v}",
+                    cause.as_str(),
+                    stage.as_str()
+                );
+            }
+        }
+    }
+    metric(
+        o,
+        "flame_cancelled_saved_pairs_total",
+        "User-item pairs of compute skipped thanks to early cancellation.",
+        "counter",
+        r.cancelled_saved_pairs() as f64,
+    );
+}
+
 /// Render a live recorder: the aggregate exposition plus the per-tenant
-/// series for every tenant that has seen traffic.
+/// series for every tenant that has seen traffic and the cancelled-work
+/// ledger when any request was dropped as doomed.
 pub fn render_recorder(r: &crate::metrics::Recorder) -> String {
     let mut o = render(&r.snapshot());
     append_tenants(&mut o, &r.tenant_counts());
+    append_cancelled(&mut o, r);
     o
 }
 
@@ -386,6 +426,33 @@ mod tests {
         assert!(
             !text.contains("tenant=\"1\""),
             "idle tenants must not emit series:\n{text}"
+        );
+    }
+
+    #[test]
+    fn cancelled_series_appear_only_after_a_drop() {
+        use crate::cancel::{CancelCause, CancelStage};
+        let r = Recorder::new();
+        r.record_request(1_000, 8);
+        let quiet = render_recorder(&r);
+        assert!(
+            !quiet.contains("flame_cancelled"),
+            "no drops → exposition unchanged:\n{quiet}"
+        );
+        r.record_cancelled(CancelCause::Expired, CancelStage::Intake, 128);
+        r.record_cancelled(CancelCause::Expired, CancelStage::Intake, 128);
+        r.record_cancelled(CancelCause::ClientGone, CancelStage::Frontend, 0);
+        let text = render_recorder(&r);
+        for needle in [
+            "flame_cancelled_total{cause=\"expired\",stage=\"intake\"} 2",
+            "flame_cancelled_total{cause=\"client_gone\",stage=\"frontend\"} 1",
+            "flame_cancelled_saved_pairs_total 256",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+        assert!(
+            !text.contains("cause=\"hedge_loser\""),
+            "zero cells must not emit series:\n{text}"
         );
     }
 

@@ -241,6 +241,12 @@ impl QueryEngine {
         self.fetch_coalescer.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
+    /// Single-flight entries currently registered in the miss coalescer
+    /// (leak assertions in tests: zero once every fetch resolved).
+    pub fn fetch_inflight(&self) -> usize {
+        self.fetch_coalescer.as_ref().map(|c| c.inflight_len()).unwrap_or(0)
+    }
+
     fn spawn_refresh(&self, id: u64) {
         let pool = match &self.refresh_pool {
             Some(p) => p,

@@ -87,6 +87,34 @@ impl Ticket {
             st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
+
+    /// Like [`Ticket::wait`], but a waiter whose cancel token fires
+    /// abandons the wait and returns `None` — the caller degrades to
+    /// stale/default features, exactly as a failed fetch would. Only
+    /// the *wait* is abandoned: the ticket stays registered and the
+    /// leader's execute path (or its resolve-on-drop guard) still
+    /// resolves it and removes the single-flight entry, so abandoning
+    /// never disturbs leader/rider semantics or leaks inflight state.
+    fn wait_cancellable(
+        &self,
+        cancel: Option<&crate::cancel::CancelToken>,
+    ) -> (Option<ItemFeatures>, u64) {
+        let Some(token) = cancel else { return self.wait() };
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(v) = &*st {
+                return v.clone();
+            }
+            if token.poll().is_some() {
+                return (None, 0);
+            }
+            st = self
+                .cv
+                .wait_timeout(st, Duration::from_millis(1))
+                .unwrap_or_else(|e| e.into_inner())
+                .0;
+        }
+    }
 }
 
 /// An open (not yet executed) pending batch of leader ids.
@@ -227,8 +255,12 @@ impl FetchCoalescer {
         for ids in filled {
             self.execute_supervised(&ids, false);
         }
+        // a cancelled requester abandons its waits (degrading to
+        // stale/default features); the token comes off the thread, set
+        // by the owning stage worker — same channel as the trace id
+        let cancel = crate::cancel::current();
         let results: Vec<(Option<ItemFeatures>, u64)> =
-            tickets.iter().map(|t| t.wait()).collect();
+            tickets.iter().map(|t| t.wait_cancellable(cancel.as_ref())).collect();
         // causality: this request waited on these shared fetch spans.
         // The trace id comes from the thread (set by the feature worker)
         // — riders of another request's fetch report the edge out of
@@ -433,6 +465,15 @@ impl FetchCoalescer {
         let _parked = self.signal.lock().unwrap_or_else(|e| e.into_inner());
         self.shutdown.store(true, Ordering::Release);
         self.cv.notify_all();
+    }
+
+    /// Single-flight entries currently registered across every shard
+    /// (leak assertions: zero once all in-flight fetches resolved).
+    pub(crate) fn inflight_len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).inflight.len())
+            .sum()
     }
 
     pub(crate) fn stats(&self) -> FetchCoalesceStats {

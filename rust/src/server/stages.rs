@@ -35,6 +35,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::batching::RequestQueue;
+use crate::cancel::{self, CancelCause, CancelStage, CancelToken};
 use crate::chaos::{PanicSite, ServeQuality};
 use crate::error::{Error, Result};
 use crate::obs::{self, StageKind, TraceContext};
@@ -54,6 +55,9 @@ struct PipelineJob {
     /// Request-scoped trace, stamped at admission (None = tracing off;
     /// the hot path then carries nothing).
     trace: Option<TraceContext>,
+    /// Request-scoped cancellation cell, checked at every stage
+    /// boundary so doomed work is dropped at the earliest cheap point.
+    cancel: CancelToken,
     reply: Sender<Result<Response>>,
 }
 
@@ -73,6 +77,8 @@ struct StagedRequest {
     t0: Instant,
     /// Trace carried over from the feature stage.
     trace: Option<TraceContext>,
+    /// Cancellation cell carried over from admission.
+    cancel: CancelToken,
     reply: Sender<Result<Response>>,
 }
 
@@ -169,22 +175,46 @@ impl PipelineHandle {
         req: Request,
         budget: Duration,
     ) -> Result<Receiver<Result<Response>>> {
+        self.submit_with_cancel(req, budget).map(|(rx, _)| rx)
+    }
+
+    /// Admit a request and also return its [`CancelToken`], so the
+    /// caller (TCP front, hedging router, tests) can fire an explicit
+    /// cause (`ClientGone`, `Shutdown`, ...). With `ServerConfig::cancel`
+    /// on, the token carries the absolute deadline and every stage
+    /// boundary lazily expires it; with the knob off only explicit
+    /// fires are honored (the token never self-expires).
+    pub fn submit_with_cancel(
+        &self,
+        req: Request,
+        budget: Duration,
+    ) -> Result<(Receiver<Result<Response>>, CancelToken)> {
         let (reply, rx) = channel();
+        let deadline = Instant::now() + budget;
+        let cancel = if self.stack.config.server.cancel {
+            CancelToken::with_deadline(deadline)
+        } else {
+            CancelToken::new()
+        };
         let trace = self
             .stack
             .metrics
             .trace_begin(req.request_id, budget.as_micros() as u64);
         let tenant = req.tenant;
-        if let Err(e) =
-            self.intake.push(PipelineJob { req, deadline: Instant::now() + budget, trace, reply })
-        {
+        if let Err(e) = self.intake.push(PipelineJob {
+            req,
+            deadline,
+            trace,
+            cancel: cancel.clone(),
+            reply,
+        }) {
             // shed at the front door: the bottom rung of the ladder
             self.stack.metrics.record_quality(ServeQuality::Shed);
             self.stack.metrics.record_tenant_shed(tenant);
             self.stack.metrics.record_tenant_quality(tenant, ServeQuality::Shed);
             return Err(e);
         }
-        Ok(rx)
+        Ok((rx, cancel))
     }
 
     /// Admit a request whose response nobody will read (open-loop
@@ -227,6 +257,12 @@ impl PipelineHandle {
     /// Arenas currently idle in the pool (diagnostics/tests).
     pub fn idle_arenas(&self) -> usize {
         self.pool.idle()
+    }
+
+    /// Total arenas owned by the pool. `idle_arenas() == total_arenas()`
+    /// after a drain means no request path leaked an arena.
+    pub fn total_arenas(&self) -> usize {
+        self.pool.total()
     }
 
     /// Requests waiting in the intake queue.
@@ -274,12 +310,27 @@ fn feature_loop(
     while let Some((mut job, qdelay)) = intake.pop() {
         let qdelay_us = qdelay.as_micros() as u64;
         stack.metrics.record_queueing(qdelay_us);
+        // doomed-work purge: a job whose token fired (or whose deadline
+        // expired) while queued is resolved here, before any feature
+        // work or arena checkout — the cheapest possible drop point
+        if let Some(cause) = job.cancel.poll() {
+            stack.metrics.record_cancelled(cause, CancelStage::Intake, job.req.m() as u64);
+            if let Some(mut ctx) = job.trace.take() {
+                ctx.span_ending_now(StageKind::Queue, qdelay_us);
+                stack.metrics.trace_finish(ctx, cause == CancelCause::Expired);
+            }
+            let _ = job.reply.send(Err(Error::Cancelled(cause, CancelStage::Intake)));
+            continue;
+        }
         if let Some(ctx) = job.trace.as_mut() {
             ctx.span_ending_now(StageKind::Queue, qdelay_us);
             // deep shared paths (fetch coalescer) pick the trace id up
             // from the thread instead of a threaded parameter
             obs::set_current_trace(ctx.trace_id());
         }
+        // the fetch coalescer's rider wait observes cancellation through
+        // the thread-local token, mirroring the trace id above
+        cancel::set_current(Some(job.cancel.clone()));
         let reply = job.reply.clone();
         let request_id = job.req.request_id;
         let took_arena = std::cell::Cell::new(false);
@@ -343,9 +394,11 @@ fn feature_loop(
                 quality,
                 t0,
                 trace: job.trace,
+                cancel: job.cancel,
                 reply: job.reply,
             }
         }));
+        cancel::set_current(None);
         match staged {
             Ok(staged) => {
                 if let Err(staged) = handoff.push_blocking(staged) {
@@ -391,12 +444,24 @@ fn compute_loop(stack: &ServingStack, handoff: &RequestQueue<StagedRequest>, poo
             quality,
             t0,
             mut trace,
+            cancel,
             reply,
         } = staged;
         let handoff_us = stage_wait.as_micros() as u64;
         stack.metrics.record_handoff(handoff_us);
         if let Some(ctx) = trace.as_mut() {
             ctx.span_ending_now(StageKind::Handoff, handoff_us);
+        }
+        // doomed-work purge: resolve a fired token before the DSO
+        // submit, returning the staged arena with exact accounting
+        if let Some(cause) = cancel.poll() {
+            stack.metrics.record_cancelled(cause, CancelStage::Handoff, m as u64);
+            if let Some(ctx) = trace.take() {
+                stack.metrics.trace_finish(ctx, cause == CancelCause::Expired);
+            }
+            let _ = reply.send(Err(Error::Cancelled(cause, CancelStage::Handoff)));
+            pool.put(arena);
+            continue;
         }
         let trace_id = trace.as_ref().map_or(0, |c| c.trace_id());
         let compute_begin = trace.as_ref().map_or(0, |c| c.now_us());
@@ -411,7 +476,9 @@ fn compute_loop(stack: &ServingStack, handoff: &RequestQueue<StagedRequest>, poo
                 }
             }
             let (hist, cands) = assembled.views(&arena);
-            stack.orchestrator.submit_traced(hist, cands, m, trace_id)
+            stack
+                .orchestrator
+                .submit_cancellable(hist, cands, m, trace_id, Some(cancel.clone()))
         }));
         match submitted {
             Ok(Ok(outcome)) => {
@@ -440,6 +507,18 @@ fn compute_loop(stack: &ServingStack, handoff: &RequestQueue<StagedRequest>, poo
                     handoff_us,
                     quality,
                 }));
+            }
+            // a DSO-plane drop site (coalescer eviction, pre-launch
+            // check) resolved the request: the error carries the stage
+            // that dropped it, and *this* is the single site that counts
+            // it — the drop site itself never touches the recorder, so
+            // fires and counts stay exactly 1:1
+            Ok(Err(Error::Cancelled(cause, stage))) => {
+                stack.metrics.record_cancelled(cause, stage, m as u64);
+                if let Some(ctx) = trace.take() {
+                    stack.metrics.trace_finish(ctx, cause == CancelCause::Expired);
+                }
+                let _ = reply.send(Err(Error::Cancelled(cause, stage)));
             }
             Ok(Err(e)) => {
                 stack.metrics.record_dropped();

@@ -8,7 +8,8 @@
 //! Response payload:
 //!   u32 magic 'FLRS' | u64 request_id | u32 status (0 ok) |
 //!   u32 m | u32 n_tasks | f32*(m*n_tasks) | u64 overall_us
-//! Status 1 = overloaded, 2 = error.
+//! Status 1 = overloaded, 2 = error, 3 = cancelled (deadline expired /
+//! request dropped as doomed work).
 //!
 //! Stats op (live metrics without interrupting the serve stream):
 //!   request  = u32 magic 'FLST'
@@ -20,11 +21,14 @@ use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use crate::cancel::{CancelCause, CancelStage};
 use crate::cluster::ClusterRouter;
 use crate::error::{Error, Result};
 use crate::pda::StagingArena;
 use crate::server::pipeline::{Response, ServingStack};
+use crate::server::stages::PipelineHandle;
 use crate::util::bytes::{read_frame, write_frame, Builder, Cursor};
 use crate::workload::Request;
 
@@ -32,6 +36,10 @@ pub const REQ_MAGIC: u32 = 0x464C_5251; // "FLRQ"
 pub const RSP_MAGIC: u32 = 0x464C_5253; // "FLRS"
 pub const STATS_MAGIC: u32 = 0x464C_5354; // "FLST"
 const MAX_FRAME: usize = 64 << 20;
+
+/// A connection that stays completely silent this long is closed (it
+/// holds a thread; a hostile or wedged peer must not pin it forever).
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Encode a stats-request frame payload (magic only).
 pub fn encode_stats_request() -> Vec<u8> {
@@ -143,11 +151,15 @@ pub fn decode_response(buf: &[u8]) -> Result<WireResponse> {
     Ok(WireResponse { request_id, status, scores, m, n_tasks, overall_us })
 }
 
-/// What the TCP front serves: a single in-process stack or the cluster
+/// What the TCP front serves: a single in-process stack (synchronous
+/// serve per connection thread), the staged pipeline over a stack
+/// (submit + channel reply, so the connection thread can watch the
+/// socket for a vanished client while the stages work), or the cluster
 /// routing tier over N replicas.
 #[derive(Clone)]
 enum Frontend {
     Stack(Arc<ServingStack>),
+    Pipeline(Arc<PipelineHandle>),
     Cluster(Arc<ClusterRouter>),
 }
 
@@ -163,7 +175,36 @@ pub struct TcpServer {
 impl TcpServer {
     /// Bind and serve `stack` on `addr` (e.g. "127.0.0.1:0").
     pub fn start(stack: Arc<ServingStack>, addr: &str) -> Result<TcpServer> {
-        Self::start_frontend(Frontend::Stack(stack), addr)
+        Self::start_frontend(Frontend::Stack(stack), addr, DEFAULT_IDLE_TIMEOUT)
+    }
+
+    /// [`TcpServer::start`] with a custom per-connection idle timeout
+    /// (tests use tight values; production wants [`DEFAULT_IDLE_TIMEOUT`]).
+    pub fn start_with_idle_timeout(
+        stack: Arc<ServingStack>,
+        addr: &str,
+        idle: Duration,
+    ) -> Result<TcpServer> {
+        Self::start_frontend(Frontend::Stack(stack), addr, idle)
+    }
+
+    /// Bind and serve the staged pipeline on `addr`. Unlike
+    /// [`TcpServer::start`], requests are *submitted* and the reply
+    /// awaited on a channel, which lets the connection thread notice a
+    /// client that hangs up mid-request and fire `ClientGone` on the
+    /// request's cancel token — the stages then drop the doomed work at
+    /// their next boundary instead of computing scores nobody will read.
+    pub fn start_pipeline(handle: Arc<PipelineHandle>, addr: &str) -> Result<TcpServer> {
+        Self::start_frontend(Frontend::Pipeline(handle), addr, DEFAULT_IDLE_TIMEOUT)
+    }
+
+    /// [`TcpServer::start_pipeline`] with a custom idle timeout.
+    pub fn start_pipeline_with_idle_timeout(
+        handle: Arc<PipelineHandle>,
+        addr: &str,
+        idle: Duration,
+    ) -> Result<TcpServer> {
+        Self::start_frontend(Frontend::Pipeline(handle), addr, idle)
     }
 
     /// Bind and serve a [`ClusterRouter`] on `addr` — the same wire
@@ -173,10 +214,10 @@ impl TcpServer {
     /// connection: identical requests from different upstream proxies
     /// hit one cache and coalesce onto one in-flight computation.
     pub fn start_cluster(router: Arc<ClusterRouter>, addr: &str) -> Result<TcpServer> {
-        Self::start_frontend(Frontend::Cluster(router), addr)
+        Self::start_frontend(Frontend::Cluster(router), addr, DEFAULT_IDLE_TIMEOUT)
     }
 
-    fn start_frontend(frontend: Frontend, addr: &str) -> Result<TcpServer> {
+    fn start_frontend(frontend: Frontend, addr: &str, idle: Duration) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::Io(format!("bind {addr}"), e))?;
         let local = listener.local_addr().map_err(|e| Error::Io("local_addr".into(), e))?;
@@ -208,6 +249,21 @@ impl TcpServer {
                                             )
                                         },
                                         Some(n_tasks),
+                                        idle,
+                                        stop3,
+                                    );
+                                }
+                                Frontend::Pipeline(handle) => {
+                                    let stats_handle = Arc::clone(&handle);
+                                    let _ = handle_conn_pipeline(
+                                        stream,
+                                        handle,
+                                        move || {
+                                            crate::obs::prom::render_recorder(
+                                                &stats_handle.stack().metrics,
+                                            )
+                                        },
+                                        idle,
                                         stop3,
                                     );
                                 }
@@ -222,6 +278,7 @@ impl TcpServer {
                                             )
                                         },
                                         None,
+                                        idle,
                                         stop3,
                                     );
                                 }
@@ -247,6 +304,16 @@ impl TcpServer {
             let _ = t.join();
         }
     }
+
+    /// Graceful drain: stop accepting connections, let each connection
+    /// finish the request it is serving (and flush its response), then
+    /// join. Nothing in flight is cancelled — cancellation is for
+    /// *doomed* work, and a draining server's in-flight work is still
+    /// wanted. Stage queues drain afterwards when the owning
+    /// [`PipelineHandle`] / stack is dropped.
+    pub fn drain(self) {
+        self.shutdown();
+    }
 }
 
 impl Drop for TcpServer {
@@ -258,15 +325,50 @@ impl Drop for TcpServer {
     }
 }
 
+/// Outcome of one `read_frame` attempt on a connection with a 200ms
+/// read timeout: a frame, "nothing yet, keep polling", or "close".
+enum FrameRead {
+    Frame(Vec<u8>),
+    Idle,
+    Close,
+}
+
+/// One poll for the next frame. Timeouts surface as protocol errors
+/// wrapping WouldBlock. An oversized length prefix (hostile or broken
+/// peer — `read_frame` rejects it *before* allocating) gets a typed
+/// status-2 reply instead of a silent hangup, so well-meaning clients
+/// with a framing bug can tell the difference from a network drop.
+fn poll_frame(stream: &mut TcpStream) -> FrameRead {
+    match read_frame(stream, MAX_FRAME) {
+        Ok(f) => FrameRead::Frame(f),
+        Err(Error::Protocol(msg)) => {
+            if msg.contains("WouldBlock")
+                || msg.contains("timed out")
+                || msg.contains("Resource temporarily unavailable")
+            {
+                return FrameRead::Idle;
+            }
+            if msg.contains("exceeds cap") {
+                let _ = write_frame(stream, &encode_error(0, 2));
+                let _ = stream.flush();
+            }
+            FrameRead::Close // peer closed / garbage: drop connection
+        }
+        Err(_) => FrameRead::Close,
+    }
+}
+
 /// Per-connection frame loop over any serve function. `n_tasks` fixes
 /// the response header for single-stack fronts; `None` derives it per
 /// response (cluster backends may differ in score width). `stats`
-/// renders the live metrics exposition for 'FLST' frames.
+/// renders the live metrics exposition for 'FLST' frames. A connection
+/// silent for longer than `idle` is closed.
 fn handle_conn<F, S>(
     mut stream: TcpStream,
     mut serve: F,
     stats: S,
     n_tasks: Option<usize>,
+    idle: Duration,
     stop: Arc<AtomicBool>,
 ) -> Result<()>
 where
@@ -274,26 +376,24 @@ where
     S: Fn() -> String,
 {
     stream
-        .set_read_timeout(Some(std::time::Duration::from_millis(200)))
+        .set_read_timeout(Some(Duration::from_millis(200)))
         .map_err(|e| Error::Io("set_read_timeout".into(), e))?;
+    let mut last_activity = Instant::now();
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
-        let frame = match read_frame(&mut stream, MAX_FRAME) {
-            Ok(f) => f,
-            Err(Error::Protocol(msg)) => {
-                // timeouts surface as protocol errors wrapping WouldBlock
-                if msg.contains("WouldBlock")
-                    || msg.contains("timed out")
-                    || msg.contains("Resource temporarily unavailable")
-                {
-                    continue;
+        let frame = match poll_frame(&mut stream) {
+            FrameRead::Frame(f) => f,
+            FrameRead::Idle => {
+                if last_activity.elapsed() >= idle {
+                    return Ok(()); // wedged or abandoned peer: reclaim the thread
                 }
-                return Ok(()); // peer closed / garbage: drop connection
+                continue;
             }
-            Err(_) => return Ok(()),
+            FrameRead::Close => return Ok(()),
         };
+        last_activity = Instant::now();
         if frame.len() >= 4 && frame[..4] == STATS_MAGIC.to_le_bytes() {
             write_frame(&mut stream, &encode_stats_response(&stats()))
                 .map_err(|e| Error::Io("write stats frame".into(), e))?;
@@ -315,7 +415,125 @@ where
                 encode_response(&resp, nt)
             }
             Err(Error::Overloaded(_)) => encode_error(req.request_id, 1),
+            Err(Error::Cancelled(..)) => encode_error(req.request_id, 3),
             Err(_) => encode_error(req.request_id, 2),
+        };
+        write_frame(&mut stream, &payload).map_err(|e| Error::Io("write frame".into(), e))?;
+        stream.flush().map_err(|e| Error::Io("flush".into(), e))?;
+    }
+}
+
+/// Best-effort liveness probe: true iff the peer has closed its end
+/// (EOF on a nonblocking peek). Pending bytes (a pipelined next frame)
+/// and an empty-but-open socket both read as alive; probe failures are
+/// treated as alive — the regular frame loop will notice a real close.
+fn peer_hung_up(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut probe = [0u8; 1];
+    let gone = matches!(stream.peek(&mut probe), Ok(0));
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+/// Per-connection frame loop for the pipelined front. Differs from
+/// [`handle_conn`] in that requests are *submitted* to the staged
+/// pipeline and the reply awaited on a channel, so this thread can
+/// watch the socket while the stages work: a peer that hangs up
+/// mid-request fires `ClientGone` on the request's cancel token and
+/// the stages drop the doomed work at their next boundary. If the
+/// request was already past every stage checkpoint and completes
+/// anyway, the discarded response is counted here (stage=frontend) —
+/// the stage drop sites and this site are mutually exclusive, keeping
+/// the cancelled ledger exactly-once per request.
+fn handle_conn_pipeline<S>(
+    mut stream: TcpStream,
+    handle: Arc<PipelineHandle>,
+    stats: S,
+    idle: Duration,
+    stop: Arc<AtomicBool>,
+) -> Result<()>
+where
+    S: Fn() -> String,
+{
+    let n_tasks = handle.stack().model_cfg.n_tasks;
+    stream
+        .set_read_timeout(Some(Duration::from_millis(200)))
+        .map_err(|e| Error::Io("set_read_timeout".into(), e))?;
+    let mut last_activity = Instant::now();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let frame = match poll_frame(&mut stream) {
+            FrameRead::Frame(f) => f,
+            FrameRead::Idle => {
+                if last_activity.elapsed() >= idle {
+                    return Ok(());
+                }
+                continue;
+            }
+            FrameRead::Close => return Ok(()),
+        };
+        last_activity = Instant::now();
+        if frame.len() >= 4 && frame[..4] == STATS_MAGIC.to_le_bytes() {
+            write_frame(&mut stream, &encode_stats_response(&stats()))
+                .map_err(|e| Error::Io("write stats frame".into(), e))?;
+            stream.flush().map_err(|e| Error::Io("flush".into(), e))?;
+            continue;
+        }
+        let req = match decode_request(&frame) {
+            Ok(r) => r,
+            Err(_) => {
+                let _ = write_frame(&mut stream, &encode_error(0, 2));
+                continue;
+            }
+        };
+        let request_id = req.request_id;
+        let budget =
+            Duration::from_micros(handle.stack().config.server.tenant_budget_us(req.tenant));
+        let payload = match handle.submit_with_cancel(req, budget) {
+            Err(Error::Overloaded(_)) => encode_error(request_id, 1),
+            Err(_) => encode_error(request_id, 2),
+            Ok((rx, token)) => {
+                let mut client_gone = false;
+                let outcome = loop {
+                    match rx.recv_timeout(Duration::from_millis(5)) {
+                        Ok(r) => break Some(r),
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            if !client_gone && peer_hung_up(&stream) {
+                                client_gone = true;
+                                token.cancel(CancelCause::ClientGone);
+                            }
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break None,
+                    }
+                };
+                let Some(outcome) = outcome else {
+                    return Ok(()); // pipeline shut down under us
+                };
+                if client_gone {
+                    // The reply has nowhere to go. A typed Cancelled
+                    // error means a stage already dropped (and counted)
+                    // the request; an Ok means it outran every
+                    // checkpoint, so this discard is its one drop site.
+                    if outcome.is_ok() {
+                        handle.stack().metrics.record_cancelled(
+                            CancelCause::ClientGone,
+                            CancelStage::Frontend,
+                            0,
+                        );
+                    }
+                    return Ok(());
+                }
+                match outcome {
+                    Ok(resp) => encode_response(&resp, n_tasks),
+                    Err(Error::Overloaded(_)) => encode_error(request_id, 1),
+                    Err(Error::Cancelled(..)) => encode_error(request_id, 3),
+                    Err(_) => encode_error(request_id, 2),
+                }
+            }
         };
         write_frame(&mut stream, &payload).map_err(|e| Error::Io("write frame".into(), e))?;
         stream.flush().map_err(|e| Error::Io("flush".into(), e))?;

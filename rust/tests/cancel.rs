@@ -1,0 +1,229 @@
+//! End-to-end deadline propagation and cooperative cancellation
+//! (tentpole acceptance): a seeded flash crowd at ~2x capacity with
+//! tight deadlines, driven through the staged pipeline over the
+//! artifact-free `SimEngine` backend. The cancellation arm must beat
+//! the no-cancel arm on goodput (responses inside their budget), every
+//! cancelled request must resolve with its typed cause, the recorder's
+//! cause ledger must match the observed errors exactly, and nothing —
+//! arenas, single-flight fetch tickets — may leak.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flame::cancel::{CancelCause, N_CAUSES};
+use flame::config::{CacheMode, ModelConfig, StackConfig};
+use flame::dso::{ComputeBackend, SimEngine};
+use flame::netsim::{Link, LinkConfig};
+use flame::server::pipeline::StackBuilder;
+use flame::server::ServingStack;
+use flame::workload::Request;
+
+const SEQ: usize = 16;
+const D: usize = 8;
+const TASKS: usize = 3;
+const PROFILES: [usize; 2] = [4, 8];
+const SEED: u64 = 77;
+
+/// Per-launch compute time: with one executor on the m=4 profile the
+/// backlog from the flash crowd is deterministic and serial.
+const COMPUTE: Duration = Duration::from_millis(4);
+const DOOMED: u64 = 40; // flash crowd, 25 ms budgets — most cannot make it
+const FOLLOW_UPS: u64 = 20; // arrive behind the crowd, 100 ms budgets
+const DOOMED_BUDGET: Duration = Duration::from_millis(25);
+const FOLLOW_UP_BUDGET: Duration = Duration::from_millis(100);
+
+fn model_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "sim".into(),
+        seq_len: SEQ,
+        n_blocks: 1,
+        layers_per_block: 1,
+        d_model: D,
+        n_heads: 1,
+        n_tasks: TASKS,
+        m_profiles: PROFILES.to_vec(),
+        native_m: PROFILES[PROFILES.len() - 1],
+    }
+}
+
+fn sim_stack(cancel: bool) -> Arc<ServingStack> {
+    let mut cfg = StackConfig::default();
+    cfg.pda.cache_mode = CacheMode::Sync;
+    cfg.pda.numa_binding = false;
+    cfg.pda.fetch_coalesce = true; // exercise the rider-abandon path too
+    cfg.server.pipeline = true;
+    cfg.server.cancel = cancel;
+    cfg.server.feature_workers = 1;
+    cfg.server.pipeline_workers = 1;
+    cfg.server.handoff_capacity = 4;
+    cfg.dso.queue_capacity = 128; // admit the whole crowd — no shedding noise
+    let link = Arc::new(Link::new(LinkConfig {
+        rtt: Duration::from_micros(200),
+        bandwidth_bps: 1e9,
+        jitter: 0.0,
+        fail_rate: 0.0,
+    }));
+    let backends: Vec<Arc<dyn ComputeBackend>> = PROFILES
+        .iter()
+        .map(|&m| {
+            Arc::new(SimEngine::new(m, SEQ, D, TASKS).with_delay(COMPUTE))
+                as Arc<dyn ComputeBackend>
+        })
+        .collect();
+    Arc::new(
+        StackBuilder::new("sim", "sim", cfg)
+            .with_link(link)
+            .build_from_backends(model_cfg(), SEED, backends)
+            .expect("sim stack"),
+    )
+}
+
+fn request(id: u64) -> Request {
+    Request {
+        request_id: id,
+        user_id: id % 7,
+        history: (0..8u64).map(|i| id.wrapping_mul(31) ^ i).collect(),
+        candidates: (0..4u64).map(|i| id.wrapping_mul(17) ^ (i << 8)).collect(),
+        ..Default::default()
+    }
+}
+
+struct ArmOutcome {
+    goodput: usize,
+    /// Errors observed on reply channels, bucketed by cause index.
+    cancelled_errs: [u64; N_CAUSES],
+    other_errs: usize,
+}
+
+/// Drive one arm: the flash crowd, then the follow-ups, all on the
+/// pipeline's submit path with explicit budgets. Goodput counts a
+/// response that arrived inside its own budget.
+fn drive_arm(stack: &Arc<ServingStack>) -> ArmOutcome {
+    let handle = stack.spawn_pipeline();
+    let total_arenas = handle.total_arenas();
+    let mut pending: Vec<(std::sync::mpsc::Receiver<_>, Duration)> = Vec::new();
+    for i in 0..DOOMED {
+        let rx = handle
+            .submit_with_deadline(request(i), DOOMED_BUDGET)
+            .expect("crowd admitted — queue sized for it");
+        pending.push((rx, DOOMED_BUDGET));
+    }
+    for i in 0..FOLLOW_UPS {
+        let rx = handle
+            .submit_with_deadline(request(DOOMED + i), FOLLOW_UP_BUDGET)
+            .expect("follow-up admitted");
+        pending.push((rx, FOLLOW_UP_BUDGET));
+    }
+    let mut out =
+        ArmOutcome { goodput: 0, cancelled_errs: [0; N_CAUSES], other_errs: 0 };
+    for (rx, budget) in pending {
+        match rx.recv().expect("pipeline alive: every request must resolve") {
+            Ok(resp) => {
+                if Duration::from_micros(resp.overall_us) <= budget {
+                    out.goodput += 1;
+                }
+            }
+            Err(flame::Error::Cancelled(cause, _stage)) => {
+                out.cancelled_errs[cause.index()] += 1;
+            }
+            Err(_) => out.other_errs += 1,
+        }
+    }
+    // drain: nothing left in flight, every arena home, no fetch ticket
+    // stranded in the single-flight tables
+    let t0 = std::time::Instant::now();
+    while handle.idle_arenas() < total_arenas && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(
+        handle.idle_arenas(),
+        total_arenas,
+        "an arena leaked somewhere on this arm's serve/cancel paths"
+    );
+    assert_eq!(
+        stack.query.fetch_inflight(),
+        0,
+        "a single-flight fetch ticket leaked"
+    );
+    handle.shutdown();
+    out
+}
+
+#[test]
+fn flash_crowd_cancellation_beats_no_cancel_on_goodput() {
+    let no_cancel_stack = sim_stack(false);
+    let no_cancel = drive_arm(&no_cancel_stack);
+    let cancel_stack = sim_stack(true);
+    let cancel = drive_arm(&cancel_stack);
+
+    // --- headline: cancellation turns doomed work into goodput
+    assert!(
+        cancel.goodput > no_cancel.goodput,
+        "cancellation arm must beat no-cancel on goodput: {} vs {}",
+        cancel.goodput,
+        no_cancel.goodput
+    );
+    // the no-cancel arm must not cancel anything (admitted => completed)
+    assert_eq!(
+        no_cancel_stack.metrics.cancelled_total(),
+        0,
+        "no-cancel arm must run every admitted request to completion"
+    );
+    assert_eq!(no_cancel.cancelled_errs, [0; N_CAUSES]);
+    assert_eq!(no_cancel.other_errs, 0, "no-cancel arm saw non-cancel errors");
+    assert_eq!(cancel.other_errs, 0, "cancel arm saw non-cancel errors");
+
+    // --- exact accounting: every typed error is in the ledger, every
+    // ledger entry produced a typed error (fires : counts = 1 : 1)
+    let m = cancel_stack.metrics.cancelled_matrix();
+    for (c, &seen) in cancel.cancelled_errs.iter().enumerate() {
+        let cause = CancelCause::from_index(c).expect("dense cause index");
+        let recorded: u64 = m[c].iter().sum();
+        assert_eq!(
+            recorded,
+            seen,
+            "cause {:?}: recorder says {recorded}, reply channels saw {seen}",
+            cause
+        );
+    }
+    assert_eq!(
+        cancel_stack.metrics.cancelled_total(),
+        cancel.cancelled_errs.iter().sum::<u64>(),
+        "ledger total must equal observed typed errors"
+    );
+    // the flash crowd really was doomed: the cancel arm dropped a
+    // meaningful share of it, and saved compute is accounted
+    assert!(
+        cancel_stack.metrics.cancelled_by_cause(CancelCause::Expired) >= DOOMED / 4,
+        "expected a large expired cohort, ledger: {m:?}"
+    );
+    assert!(
+        cancel_stack.metrics.cancelled_saved_pairs() > 0,
+        "dropped requests must report saved compute"
+    );
+}
+
+/// A client that vanishes mid-request (`ClientGone` fired by its front)
+/// resolves with the typed cause and is counted once — even though the
+/// stack-side deadline never expires.
+#[test]
+fn client_gone_fire_resolves_and_counts_once() {
+    let stack = sim_stack(true);
+    let handle = stack.spawn_pipeline();
+    // blocker pins the single compute submitter
+    let blocker = handle
+        .submit_with_deadline(request(0), Duration::from_secs(10))
+        .expect("admit blocker");
+    let (rx, token) = handle
+        .submit_with_cancel(request(1), Duration::from_secs(10))
+        .expect("admit victim");
+    token.cancel(CancelCause::ClientGone);
+    match rx.recv().expect("reply must arrive") {
+        Err(flame::Error::Cancelled(cause, _)) => assert_eq!(cause, CancelCause::ClientGone),
+        other => panic!("expected typed Cancelled(ClientGone), got {other:?}"),
+    }
+    blocker.recv().expect("pipeline alive").expect("blocker served");
+    assert_eq!(stack.metrics.cancelled_by_cause(CancelCause::ClientGone), 1);
+    assert_eq!(stack.metrics.cancelled_total(), 1, "exactly one drop in the ledger");
+    handle.shutdown();
+}

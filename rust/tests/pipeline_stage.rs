@@ -358,6 +358,107 @@ fn fetch_coalescer_cuts_remote_queries_for_hot_candidates() {
     );
 }
 
+/// Shutdown-while-cancelled race: dropping the `PipelineHandle` while
+/// the intake still holds a mix of live and already-expired jobs must
+/// wake every reply channel with a typed result — served, `Cancelled`,
+/// or `Shutdown` — and return every arena to the pool. A silently
+/// dropped reply would hang the submitter forever.
+#[test]
+fn shutdown_with_cancelled_jobs_queued_wakes_every_reply() {
+    let stack = sim_stack(
+        |c| {
+            c.server.pipeline = true;
+            c.server.cancel = true;
+            c.server.feature_workers = 1;
+            c.server.pipeline_workers = 1;
+            c.server.handoff_capacity = 1;
+            c.dso.queue_capacity = 64;
+        },
+        Duration::from_millis(20),
+        fast_link(),
+    );
+    let handle = stack.spawn_pipeline();
+    // a slack blocker pins the compute stage, then a burst of doomed
+    // jobs queues behind it with deadlines that expire while queued
+    let blocker = handle
+        .submit_with_deadline(request(0, 4, 1), Duration::from_secs(10))
+        .expect("admit blocker");
+    let doomed: Vec<_> = (1..=8u64)
+        .map(|i| {
+            handle
+                .submit_with_deadline(request(i, 4, i + 1), Duration::from_millis(1))
+                .expect("admit doomed")
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(10)); // let the deadlines lapse
+    drop(handle); // shutdown drains both stages
+    blocker.recv().expect("blocker reply must arrive").expect("blocker served");
+    for (i, rx) in doomed.into_iter().enumerate() {
+        let r = rx.recv().unwrap_or_else(|_| {
+            panic!("doomed request {i} left hanging: reply channel dropped unresolved")
+        });
+        match r {
+            Err(flame::Error::Cancelled(cause, _)) => {
+                assert_eq!(cause, flame::cancel::CancelCause::Expired, "request {i}")
+            }
+            Err(flame::Error::Shutdown(_)) | Ok(_) => {} // lost the race to the purge
+            Err(e) => panic!("doomed request {i}: unexpected error {e:?}"),
+        }
+    }
+    assert!(
+        stack.metrics.cancelled_total() >= 1,
+        "expired queued jobs must hit the cancelled ledger"
+    );
+}
+
+/// Explicit fires are honored even with `ServerConfig::cancel` off: the
+/// token never self-expires, but a caller-side `cancel(Shutdown)` on a
+/// queued job still resolves it with the typed cause, counted exactly
+/// once in the recorder.
+#[test]
+fn explicit_fire_with_cancel_knob_off_still_resolves_typed() {
+    let stack = sim_stack(
+        |c| {
+            c.server.pipeline = true; // knob off: c.server.cancel stays false
+            c.server.feature_workers = 1;
+            c.server.pipeline_workers = 1;
+            c.server.handoff_capacity = 1;
+        },
+        Duration::from_millis(30),
+        fast_link(),
+    );
+    let handle = stack.spawn_pipeline();
+    let total = handle.total_arenas();
+    let blocker = handle
+        .submit_with_deadline(request(0, 4, 1), Duration::from_secs(10))
+        .expect("admit blocker");
+    let (rx, token) = handle
+        .submit_with_cancel(request(1, 4, 2), Duration::from_millis(1))
+        .expect("admit victim");
+    // the 1ms "deadline" must NOT fire on its own — the knob is off
+    std::thread::sleep(Duration::from_millis(5));
+    assert!(!token.is_cancelled(), "deadline-free token self-expired");
+    assert!(token.cancel(flame::cancel::CancelCause::Shutdown), "first fire wins");
+    match rx.recv().expect("reply must arrive") {
+        Err(flame::Error::Cancelled(cause, _)) => {
+            assert_eq!(cause, flame::cancel::CancelCause::Shutdown)
+        }
+        other => panic!("expected typed Cancelled, got {other:?}"),
+    }
+    blocker.recv().expect("pipeline alive").expect("blocker served");
+    assert_eq!(
+        stack.metrics.cancelled_by_cause(flame::cancel::CancelCause::Shutdown),
+        1,
+        "explicit fire must be counted exactly once"
+    );
+    let t0 = std::time::Instant::now();
+    while handle.idle_arenas() < total && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(handle.idle_arenas(), total, "an arena leaked on the cancel path");
+    handle.shutdown();
+}
+
 /// Satellite: deadline-closest-first intake. With
 /// `ServerConfig::deadline_first` on, a tight-deadline request submitted
 /// *after* a slack one overtakes it in the intake queue while the single

@@ -1,15 +1,20 @@
 //! TCP front integration: start the server on the tiny stack, drive it
 //! with the binary-protocol client, check scores match in-process serving.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use flame::cancel::CancelCause;
 use flame::config::{CacheMode, StackConfig};
 use flame::manifest::testvec::max_abs_diff;
 use flame::manifest::Manifest;
 use flame::pda::StagingArena;
 use flame::runtime::Runtime;
 use flame::server::pipeline::StackBuilder;
-use flame::server::tcp::{TcpClient, TcpServer};
+use flame::server::tcp::{decode_response, encode_request, TcpClient, TcpServer};
+use flame::util::bytes::{read_frame, write_frame};
 use flame::workload::Request;
 
 fn stack() -> Option<Arc<flame::server::ServingStack>> {
@@ -76,11 +81,12 @@ fn tcp_multiple_requests_one_connection() {
     server.shutdown();
 }
 
-/// The stats op ('FLST' frames) interleaves with serve traffic on one
-/// connection and returns the live Prometheus exposition. Sim-backed:
-/// runs on a bare checkout, no artifacts or PJRT needed.
-#[test]
-fn tcp_stats_op_serves_live_exposition() {
+/// Sim-backed stack for tests that must run on a bare checkout (no
+/// artifacts or PJRT). `delay` is the per-launch compute time.
+fn sim_stack(
+    cfgmod: impl FnOnce(&mut StackConfig),
+    delay: std::time::Duration,
+) -> Arc<flame::server::ServingStack> {
     use flame::config::ModelConfig;
     use flame::dso::{ComputeBackend, SimEngine};
 
@@ -100,15 +106,28 @@ fn tcp_stats_op_serves_live_exposition() {
     let mut cfg = StackConfig::default();
     cfg.pda.cache_mode = CacheMode::Sync;
     cfg.pda.numa_binding = false;
+    cfgmod(&mut cfg);
     let backends: Vec<Arc<dyn ComputeBackend>> = profiles
         .iter()
-        .map(|&m| Arc::new(SimEngine::new(m, seq, d, tasks)) as Arc<dyn ComputeBackend>)
+        .map(|&m| {
+            Arc::new(SimEngine::new(m, seq, d, tasks).with_delay(delay))
+                as Arc<dyn ComputeBackend>
+        })
         .collect();
-    let stack = Arc::new(
+    Arc::new(
         StackBuilder::new("sim", "sim", cfg)
             .build_from_backends(model_cfg, 7, backends)
             .expect("sim stack"),
-    );
+    )
+}
+
+/// The stats op ('FLST' frames) interleaves with serve traffic on one
+/// connection and returns the live Prometheus exposition. Sim-backed:
+/// runs on a bare checkout, no artifacts or PJRT needed.
+#[test]
+fn tcp_stats_op_serves_live_exposition() {
+    let seq = 16usize;
+    let stack = sim_stack(|_| {}, std::time::Duration::ZERO);
 
     let server = TcpServer::start(Arc::clone(&stack), "127.0.0.1:0").expect("start");
     let mut client = TcpClient::connect(&server.addr).expect("connect");
@@ -127,6 +146,132 @@ fn tcp_stats_op_serves_live_exposition() {
     // the serve stream survives interleaved stats frames
     let wire = client.call(&request(2, 8, seq)).expect("call after stats");
     assert_eq!(wire.status, 0);
+    server.shutdown();
+}
+
+/// A hostile (or framing-buggy) client that sends an absurd length
+/// prefix gets a *typed* status-2 error frame — `read_frame` rejects
+/// the prefix before allocating the claimed buffer — and then the
+/// connection is closed. A well-meaning client can tell its own bug
+/// apart from a network drop.
+#[test]
+fn tcp_oversized_frame_gets_typed_error_then_close() {
+    let stack = sim_stack(|_| {}, Duration::ZERO);
+    let server = TcpServer::start(stack, "127.0.0.1:0").expect("start");
+    let mut conn = TcpStream::connect(server.addr).expect("connect");
+    conn.write_all(&u32::MAX.to_le_bytes()).expect("write hostile prefix");
+    conn.flush().expect("flush");
+    conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+
+    let frame = read_frame(&mut conn, 1 << 20).expect("typed error frame before close");
+    let wire = decode_response(&frame).expect("decode error frame");
+    assert_eq!(wire.status, 2, "oversized prefix must yield a typed error");
+
+    let mut b = [0u8; 1];
+    match conn.read(&mut b) {
+        Ok(0) | Err(_) => {} // closed — exactly what we want
+        Ok(_) => panic!("connection must be closed after a hostile frame"),
+    }
+    server.shutdown();
+}
+
+/// A frame that parses as a frame but not as a request (garbage
+/// payload) gets a typed error and the connection *survives* — only
+/// unframeable input forces a close.
+#[test]
+fn tcp_garbage_payload_gets_typed_error_and_conn_survives() {
+    let stack = sim_stack(|_| {}, Duration::ZERO);
+    let server = TcpServer::start(stack, "127.0.0.1:0").expect("start");
+    let mut conn = TcpStream::connect(server.addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+
+    write_frame(&mut conn, &[0u8; 8]).expect("write garbage");
+    let frame = read_frame(&mut conn, 1 << 20).expect("typed error frame");
+    assert_eq!(decode_response(&frame).expect("decode").status, 2);
+
+    // the same connection still serves a well-formed request
+    write_frame(&mut conn, &encode_request(&request(3, 4, 16))).expect("write request");
+    let frame = read_frame(&mut conn, 1 << 20).expect("response frame");
+    let wire = decode_response(&frame).expect("decode");
+    assert_eq!(wire.status, 0);
+    assert_eq!(wire.request_id, 3);
+    server.shutdown();
+}
+
+/// A connection that never sends anything is reclaimed after the idle
+/// timeout — a wedged or abandoned peer must not pin a server thread.
+#[test]
+fn tcp_idle_connection_is_reclaimed() {
+    let stack = sim_stack(|_| {}, Duration::ZERO);
+    let server =
+        TcpServer::start_with_idle_timeout(stack, "127.0.0.1:0", Duration::from_millis(300))
+            .expect("start");
+    let mut conn = TcpStream::connect(server.addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let t0 = Instant::now();
+    let mut b = [0u8; 1];
+    let n = conn.read(&mut b).expect("idle close is a clean EOF, not a reset");
+    assert_eq!(n, 0, "server must close the idle connection");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(250),
+        "closed too eagerly: {:?}",
+        t0.elapsed()
+    );
+    server.shutdown();
+}
+
+/// The pipelined front serves the same wire protocol: a round trip
+/// through submit/reply-channel returns status 0, and the stats op
+/// still interleaves.
+#[test]
+fn tcp_pipeline_front_roundtrip() {
+    let stack = sim_stack(|c| c.server.pipeline = true, Duration::ZERO);
+    let handle = Arc::new(stack.spawn_pipeline());
+    let server = TcpServer::start_pipeline(Arc::clone(&handle), "127.0.0.1:0").expect("start");
+    let mut client = TcpClient::connect(&server.addr).expect("connect");
+
+    let wire = client.call(&request(1, 4, 16)).expect("call");
+    assert_eq!(wire.status, 0);
+    assert_eq!(wire.request_id, 1);
+    assert_eq!(wire.scores.len(), 4 * stack.model_cfg.n_tasks);
+
+    let stats = client.stats().expect("stats op on the pipeline front");
+    assert!(stats.contains("flame_requests_total"), "{stats}");
+    server.shutdown();
+}
+
+/// Tentpole, frontend plane: a client that writes one request and
+/// vanishes fires `ClientGone` — the doomed work is dropped at a stage
+/// boundary (or its finished response discarded at the front) and the
+/// cancel ledger counts it exactly once.
+#[test]
+fn tcp_pipeline_front_counts_vanished_client() {
+    let stack = sim_stack(
+        |c| {
+            c.server.pipeline = true;
+            c.server.cancel = true;
+        },
+        Duration::from_millis(100),
+    );
+    let handle = Arc::new(stack.spawn_pipeline());
+    let server = TcpServer::start_pipeline(Arc::clone(&handle), "127.0.0.1:0").expect("start");
+    {
+        let mut conn = TcpStream::connect(server.addr).expect("connect");
+        write_frame(&mut conn, &encode_request(&request(9, 4, 16))).expect("write request");
+        conn.flush().expect("flush");
+    } // client vanishes while the stack is still computing (100 ms)
+
+    let t0 = Instant::now();
+    while stack.metrics.cancelled_by_cause(CancelCause::ClientGone) == 0
+        && t0.elapsed() < Duration::from_secs(5)
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(
+        stack.metrics.cancelled_by_cause(CancelCause::ClientGone),
+        1,
+        "the vanished client's request must be counted exactly once"
+    );
     server.shutdown();
 }
 
